@@ -1,0 +1,47 @@
+//! Context-length sweep: functional TTFT on the tiny model (measured on
+//! CPU through the PJRT pipeline) side by side with the simulated U280 and
+//! modeled A5000 numbers for the same index sets — showing how the three
+//! views of the system line up.
+//!
+//!     cargo run --release --example context_sweep
+
+use anyhow::Result;
+use fast_prefill::config::{a5000, u280_fast_prefill, TINY};
+use fast_prefill::coordinator::{Engine, EngineConfig};
+use fast_prefill::gpu_model::simulate_gpu_prefill;
+use fast_prefill::metrics::fmt_ctx;
+use fast_prefill::sim::simulate_prefill;
+use fast_prefill::util::table::{fnum, Table};
+use fast_prefill::workload::prompts::{PromptKind, PromptSpec};
+
+fn main() -> Result<()> {
+    let mut cfg = EngineConfig::new(TINY.clone());
+    cfg.native_sau = true; // fast functional path; PJRT SAU in quickstart
+    let mut engine = Engine::new("artifacts", cfg)?;
+    let fpga = u280_fast_prefill();
+    let gpu = a5000();
+
+    let mut t = Table::new(&[
+        "context", "CPU-functional (ms)", "U280-sim (ms)", "A5000-model (ms)",
+        "density %", "hit %",
+    ]);
+    for tokens in [512usize, 1024, 2048, 4096] {
+        let prompt = PromptSpec { kind: PromptKind::Mixed, tokens, seed: 9 };
+        let run = engine.prefill(0, &prompt.generate())?;
+        // drive both performance models with the *same real* index sets
+        let f = simulate_prefill(&fpga, &TINY, tokens, &run.index_sets);
+        let g = simulate_gpu_prefill(&gpu, &TINY, tokens, &run.index_sets);
+        t.row(&[
+            fmt_ctx(tokens),
+            fnum(run.metrics.ttft_us / 1e3),
+            fnum(f.ttft_ms),
+            fnum(g.ttft_ms),
+            fnum(run.metrics.density * 100.0),
+            fnum(run.metrics.cache_hit_rate * 100.0),
+        ]);
+    }
+    t.print();
+    println!("\nNote: the tiny model is linear-layer dominated; paper-scale");
+    println!("figures (Fig. 5/6) come from `cargo bench --bench fig5_ttft`.");
+    Ok(())
+}

@@ -1,0 +1,35 @@
+//! Needle-retrieval accuracy across precision modes — the human-readable
+//! companion to `cargo bench --bench table3_accuracy` (paper Table III).
+//!
+//!     cargo run --release --example needle_accuracy
+
+use fast_prefill::accuracy::{table3_cell, Precision};
+use fast_prefill::config::FlexParams;
+use fast_prefill::metrics::fmt_ctx;
+use fast_prefill::util::table::{fnum, Table};
+
+fn main() {
+    let params = FlexParams::default();
+    // contexts (blocks of 128 tokens) and task difficulty mirror the bench
+    let contexts = [(32usize, "4K"), (64, "8K"), (128, "16K")];
+    let (gain, noise) = (0.85f32, 0.5f32);
+    let n_tasks = 4;
+
+    println!("Needle retrieval through the FlexPrefill + quantized attention stack");
+    println!("(RULER proxy — see DESIGN.md substitutions; higher is better)\n");
+    let mut t = Table::new(&["Method", "4K", "8K", "16K", "Avg"]);
+    for prec in [Precision::Bf16, Precision::Int8Deq, Precision::W8A8] {
+        let mut row = vec![prec.label().to_string()];
+        let mut sum = 0.0;
+        for (nb, _) in contexts {
+            let acc = table3_cell(nb, 64, prec, &params, n_tasks, gain, noise, 99);
+            sum += acc;
+            row.push(fnum(acc));
+        }
+        row.push(fnum(sum / contexts.len() as f64));
+        t.row(&row);
+    }
+    t.print();
+    println!("\ncontexts: {}", contexts.iter().map(|c| fmt_ctx(c.0 * 128)).collect::<Vec<_>>().join(", "));
+    println!("expected shape (paper Table III): BF16 >> INT8 ~= W8A8.");
+}

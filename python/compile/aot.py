@@ -1,0 +1,103 @@
+"""AOT driver: lower every L2 entry point to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the Rust side's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, per functional config C and entry E:
+    artifacts/<C>__<E>.hlo.txt
+plus a machine-readable manifest (artifacts/manifest.txt) that the Rust
+runtime parses to validate parameter/result shapes before compiling:
+
+    artifact <cfg> <entry> <file>
+    in <idx> <dtype> <d0>x<d1>...      (scalar => "scalar")
+    out <idx> <dtype> <dims>
+    cfg <name> d_model=... n_heads=... ...
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import AOT_CONFIGS
+
+_DTYPE_NAMES = {
+    jnp.float32.dtype: "f32",
+    jnp.int8.dtype: "s8",
+    jnp.int32.dtype: "s32",
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _fmt_shape(sds) -> str:
+    dt = _DTYPE_NAMES[jnp.dtype(sds.dtype)]
+    dims = "x".join(str(d) for d in sds.shape) if sds.shape else "scalar"
+    return f"{dt} {dims}"
+
+
+def lower_all(out_dir: str, configs=AOT_CONFIGS, verbose=True):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+    for cfg in configs:
+        manifest.append(
+            f"cfg {cfg.name} d_model={cfg.d_model} n_heads={cfg.n_heads} "
+            f"n_kv_heads={cfg.n_kv_heads} d_head={cfg.d_head} "
+            f"d_ffn={cfg.d_ffn} n_layers={cfg.n_layers} vocab={cfg.vocab} "
+            f"sau_batch={model.SAU_BATCH}")
+        for name, (fn, args) in model.entry_specs(cfg).items():
+            fname = f"{cfg.name}__{name}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            lowered = jax.jit(fn).lower(*args)
+            text = to_hlo_text(lowered)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest.append(f"artifact {cfg.name} {name} {fname}")
+            for i, a in enumerate(args):
+                manifest.append(f"in {i} {_fmt_shape(a)}")
+            outs = lowered.out_info
+            flat, _ = jax.tree_util.tree_flatten(outs)
+            for i, o in enumerate(flat):
+                manifest.append(f"out {i} {_fmt_shape(o)}")
+            if verbose:
+                print(f"  lowered {fname} ({len(text)} chars, "
+                      f"{len(args)} in / {len(flat)} out)")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    if verbose:
+        print(f"wrote {os.path.join(out_dir, 'manifest.txt')}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default="",
+                    help="comma-separated config names (default: all)")
+    args = ap.parse_args()
+    cfgs = AOT_CONFIGS
+    if args.configs:
+        want = set(args.configs.split(","))
+        cfgs = [c for c in AOT_CONFIGS if c.name in want]
+        missing = want - {c.name for c in cfgs}
+        if missing:
+            sys.exit(f"unknown configs: {missing}")
+    lower_all(args.out_dir, cfgs)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Model configurations shared by the L2 model, the AOT driver and tests.
+
+These mirror `rust/src/config/model.rs` — the Rust side re-declares the same
+constants and the AOT manifest records them so any drift is caught at
+artifact-load time.
+
+Only the configs we run *functionally* on the CPU PJRT backend get AOT
+artifacts (tiny + small100m). The paper-scale configs (Llama-3.2-1B/3B,
+Qwen2.5-1B) exist on the Rust side for the cycle-level simulator and the GPU
+cost model, where only shapes matter.
+"""
+
+from dataclasses import dataclass
+
+BLOCK = 128  # token block size B (also the FlexPrefill block granularity)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int      # D
+    n_heads: int      # H (query heads)
+    n_kv_heads: int   # Hk (GQA)
+    d_head: int       # dh
+    d_ffn: int        # F
+    n_layers: int
+    vocab: int        # byte-level tokenizer -> 256 (+ padding to 256)
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-5
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.d_head
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.d_head
+
+    @property
+    def group_size(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    def params(self) -> int:
+        """Approximate parameter count (weights only, no biases)."""
+        attn = self.d_model * (self.q_dim + 2 * self.kv_dim) + self.q_dim * self.d_model
+        ffn = 3 * self.d_model * self.d_ffn
+        per_layer = attn + ffn + 2 * self.d_model  # + rmsnorm gains
+        embed = self.vocab * self.d_model
+        head = self.d_model * self.vocab
+        return self.n_layers * per_layer + embed + head + self.d_model
+
+
+# Functional configs (AOT artifacts are generated for these).
+TINY = ModelConfig("tiny", d_model=256, n_heads=4, n_kv_heads=2, d_head=64,
+                   d_ffn=768, n_layers=2, vocab=256)
+SMALL100M = ModelConfig("small100m", d_model=768, n_heads=12, n_kv_heads=4,
+                        d_head=64, d_ffn=2048, n_layers=16, vocab=256)
+
+AOT_CONFIGS = [TINY, SMALL100M]
+
+# FlexPrefill hyper-parameters (paper / Flex-Prefill defaults).
+TAU = 0.1     # JSD threshold for pattern selection
+GAMMA = 0.9   # cumulative-attention coverage budget

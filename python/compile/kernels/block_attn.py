@@ -1,0 +1,97 @@
+"""L1 Pallas kernel: fused online-softmax sparse-attention block step (SAU).
+
+This is the compute hot-spot of the paper's Sparse Attention Unit: for one
+(query-block, KV-block) job the SAU computes a 128x128 score tile on the
+Hybrid MPU, streams softmax normalization through the SFU, and immediately
+applies the attention weights to the Value tile, accumulating into the keyed
+accumulator — never materializing anything larger than one tile.
+
+Here the same fusion is one Pallas kernel: score matmul (int8->int32),
+running-max/denominator update, probability requantization to int8 (the W8A8
+contract: P is quantized with fixed scale 1/127), P@V (int8->int32), and the
+rescale-and-accumulate into (m, l, acc). The (m, l, acc) triple is the keyed
+accumulator entry — the Rust coordinator owns one per (head, query-block) and
+threads it through successive jobs in KV-block-major order, exactly like the
+paper's banked accumulator memory.
+
+The update is an order-independent merge, which is what makes the paper's
+block-major schedule legal; `python/tests/test_kernels.py` checks permutation
+invariance and `rust/tests/proptests.rs` re-checks it on the Rust side.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .int8_matmul import exact_int8_dot
+
+NEG_INF = -1e30
+
+
+def _attn_step_kernel(q_ref, k_ref, v_ref, scal_ref, m_ref, l_ref, acc_ref,
+                      mo_ref, lo_ref, accu_ref):
+    """q,k,v: [B,dh] int8; scal: [4] f32 = (qs, ks, vs, diag_flag);
+    m,l: [B] f32; acc: [B,dh] f32. Outputs m', l', acc'."""
+    b, dh = q_ref.shape
+    qs = scal_ref[0]
+    ks = scal_ref[1]
+    vs = scal_ref[2]
+    diag = scal_ref[3]
+    inv_sqrt_d = 1.0 / jnp.sqrt(jnp.float32(dh))
+    # Hybrid-MPU score tile: exact int8 matmul (nibble-plane form).
+    s_i32 = exact_int8_dot(q_ref[...], k_ref[...].T)
+    s = s_i32.astype(jnp.float32) * (qs * ks * inv_sqrt_d)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (b, b), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (b, b), 1)
+    s = jnp.where((diag > 0.5) & (cols > rows), NEG_INF, s)
+    m = m_ref[...]
+    l = l_ref[...]
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    corr = jnp.exp(m - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = l * corr + jnp.sum(p, axis=-1)
+    # W8A8: requantize probabilities to int8 (fixed scale 1/127) before P@V.
+    p_i8 = jnp.clip(jnp.round(p * 127.0), -127, 127).astype(jnp.int8)
+    pv = exact_int8_dot(p_i8, v_ref[...])
+    acc_new = acc_ref[...] * corr[:, None] + pv.astype(jnp.float32) * (vs / 127.0)
+    mo_ref[...] = m_new
+    lo_ref[...] = l_new
+    accu_ref[...] = acc_new
+
+
+@jax.jit
+def attn_block_step(q_i8, qs, k_i8, ks, v_i8, vs, m, l, acc, diag_flag):
+    """One SAU job. Shapes: q/k/v [B,dh] i8, m/l [B] f32, acc [B,dh] f32.
+
+    qs/ks/vs: scalar f32 chunk scales; diag_flag: scalar (1.0 => apply the
+    intra-block causal mask, i.e. this KV block IS the query block).
+    Returns (m', l', acc').
+    """
+    b, dh = q_i8.shape
+    scal = jnp.stack([jnp.float32(qs), jnp.float32(ks), jnp.float32(vs),
+                      jnp.float32(diag_flag)])
+    return pl.pallas_call(
+        _attn_step_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b, dh), jnp.float32),
+        ),
+        interpret=True,
+    )(q_i8, k_i8, v_i8, scal, m, l, acc)
+
+
+@jax.jit
+def attn_block_batch(q_i8, qs, k_i8, ks, v_i8, vs, m, l, acc, diag_flags):
+    """Batched SAU jobs: leading dim J (the coordinator pads job groups to a
+    fixed J so the artifact shape stays static). q/k/v: [J,B,dh] i8;
+    scales [J] f32; m/l [J,B]; acc [J,B,dh]; diag_flags [J] f32."""
+    return jax.vmap(attn_block_step)(q_i8, qs, k_i8, ks, v_i8, vs, m, l, acc,
+                                     diag_flags)
+
+
+def attn_finalize(l, acc):
+    """Final normalization once all of a (head, query-block)'s jobs ran."""
+    return acc / jnp.maximum(l, 1e-8)[:, None]

@@ -1,0 +1,99 @@
+"""L1 Pallas kernel: W8A8 tiled matmul — the Hybrid MPU's software contract.
+
+The paper's Hybrid MPU is twelve 32x32 systolic arrays (six DSP-based, six
+LUT/bit-plane based) computing INT8 x INT8 -> INT32. On the TPU-shaped Pallas
+side the same schedule is expressed as MXU-shaped int8 matmuls tiled for VMEM
+with `BlockSpec`s: the (M, N) grid plays the role of the paper's array-level
+parallelism, and the K-resident operand tiles play the role of the URAM-fed
+operand registers.
+
+CPU note: `interpret=True` everywhere — the CPU PJRT plugin cannot execute
+Mosaic custom-calls. On-hardware performance is modeled in `rust/src/sim/mpu.rs`
+(cycle model), not measured here.
+
+Numerics are exact integer arithmetic and must match
+`ref.int8_matmul_ref` bit-for-bit (asserted in python/tests/test_kernels.py)
+and `rust/src/quant` (asserted in rust runtime_integration tests).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes: 128 aligns with the token-block granularity B and keeps each
+# VMEM-resident tile (128 x K int8) within a U280-URAM-like budget for the
+# K ranges we lower (K <= 2304).
+TILE_M = 128
+TILE_N = 128
+
+
+def exact_int8_dot(a_i8, b_i8):
+    """Exact INT8 matmul via the paper's nibble decomposition (Eq. 7-8),
+    evaluated as two f32 GEMMs.
+
+    a = aH*16 + aL with aH in [-8, 7], aL in [0, 15]:
+        C = 16*(aH @ b) + (aL @ b)
+    Each plane's products are <= 1016/1905 in magnitude, so partial sums
+    stay below 2^24 for K <= ~7000 and every f32 accumulation is EXACT —
+    the result equals int32 arithmetic bit-for-bit (asserted in tests)
+    while running on the CPU's fast f32 GEMM path (~5x over the XLA s32
+    dot; see EXPERIMENTS.md §Perf). This is the software realization of
+    the Hybrid MPU's nibble trick.
+    """
+    assert a_i8.shape[-1] <= 7000, "nibble-plane exactness bound"
+    ah = jnp.floor_divide(a_i8.astype(jnp.float32), 16.0)
+    al = a_i8.astype(jnp.float32) - ah * 16.0
+    bf = b_i8.astype(jnp.float32)
+    hi = jnp.dot(ah, bf, preferred_element_type=jnp.float32)
+    lo = jnp.dot(al, bf, preferred_element_type=jnp.float32)
+    # combine in i32: each plane is < 2^24 (exact in f32); the 16x-scaled
+    # sum can exceed 2^25, so the recombination must be integer arithmetic
+    return hi.astype(jnp.int32) * 16 + lo.astype(jnp.int32)
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (TILE_M, TILE_N) output tile; K is kept whole per tile.
+
+    a_ref: [TILE_M, K] int8, b_ref: [K, TILE_N] int8, o_ref: [TILE_M, TILE_N] int32.
+    """
+    o_ref[...] = exact_int8_dot(a_ref[...], b_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=())
+def int8_matmul(a_i8, b_i8):
+    """C_i32[M,N] = A_i8[M,K] @ B_i8[K,N] with int32 accumulation.
+
+    M and N must be multiples of the tile sizes or small enough to be a
+    single tile; K is unconstrained (kept whole, streamed by XLA).
+    """
+    m, k = a_i8.shape
+    k2, n = b_i8.shape
+    assert k == k2, f"inner dims mismatch {k} vs {k2}"
+    def pick_tile(dim, pref):
+        # largest power-of-two tile <= pref that divides dim, else whole dim
+        t = min(pref, dim)
+        while t > 1 and dim % t != 0:
+            t //= 2
+        return t if dim % t == 0 else dim
+
+    tm = pick_tile(m, TILE_M)
+    tn = pick_tile(n, TILE_N)
+    grid = (m // tm, n // tn)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, tn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(a_i8, b_i8)
+
+
+def int8_matmul_deq(a_i8, sa, b_i8, sb):
+    """Dequantized W8A8 matmul: f32 = (A_i8 @ B_i8) * sa * sb."""
+    return int8_matmul(a_i8, b_i8).astype(jnp.float32) * (sa * sb)

@@ -1,0 +1,260 @@
+"""Pure-jnp reference oracles for every Pallas kernel and model entry point.
+
+This file is the numeric CONTRACT between the three layers:
+
+  * the Pallas kernels (`flex_index.py`, `block_attn.py`, `int8_matmul.py`)
+    must match these functions bit-for-bit (integer paths) or to float
+    tolerance (f32 paths) — enforced by `python/tests/test_kernels.py`;
+  * the Rust reference implementation (`rust/src/tensor`, `rust/src/quant`,
+    `rust/src/flexprefill`) re-implements the same definitions — enforced by
+    `rust/tests/runtime_integration.rs`, which runs the AOT artifacts through
+    PJRT and compares with Rust math.
+
+Shared definitions
+------------------
+quantize_sym(x):  s = max(|x|)/127 (>= 1e-8);  q = clip(round(x/s), -127, 127)
+int8 matmul:      C = A_i8 @ B_i8 accumulated in int32; dequant C*(sa*sb)
+RMSNorm:          x * rsqrt(mean(x^2) + eps) * g        (f32)
+RoPE:             llama-style half-rotation, theta=1e4   (f32, pre-quant)
+attention scale:  1/sqrt(d_head)
+online softmax:   (m, l, acc) running state, order-independent merge
+W8A8 attention:   scores int8xint8->int32; P tile requantized to int8
+                  (p_q = round(P*127)); P@V int8xint8->int32, dequant vs/127
+"""
+
+import jax
+import jax.numpy as jnp
+
+SCALE_EPS = 1e-8
+
+
+# ---------------------------------------------------------------------------
+# Quantization
+# ---------------------------------------------------------------------------
+
+def quant_scale(x):
+    """Symmetric per-tensor scale: max|x| / 127, floored at SCALE_EPS."""
+    return jnp.maximum(jnp.max(jnp.abs(x)), SCALE_EPS) / 127.0
+
+
+def quantize(x, scale):
+    return jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+
+
+def quantize_sym(x):
+    s = quant_scale(x)
+    return quantize(x, s), s
+
+
+def int8_matmul_ref(a_i8, b_i8):
+    """int8 x int8 -> int32 exact accumulation (the MPU contract)."""
+    return jnp.dot(a_i8.astype(jnp.int32), b_i8.astype(jnp.int32),
+                   preferred_element_type=jnp.int32)
+
+
+def int8_matmul_deq_ref(a_i8, sa, b_i8, sb):
+    return int8_matmul_ref(a_i8, b_i8).astype(jnp.float32) * (sa * sb)
+
+
+# ---------------------------------------------------------------------------
+# Norm / RoPE
+# ---------------------------------------------------------------------------
+
+def rmsnorm_ref(x, g, eps=1e-5):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * g
+
+
+def rope_ref(x, pos, theta=10000.0):
+    """Apply rotary embedding. x: [..., T, dh]; pos: [T] absolute positions.
+
+    Llama-style: pairs are (x[..., :dh/2], x[..., dh/2:]) (half-rotation).
+    """
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = pos.astype(jnp.float32)[:, None] * freqs[None, :]  # [T, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Online-softmax block attention (SAU contract)
+# ---------------------------------------------------------------------------
+
+def attn_block_step_ref(q_i8, qs, k_i8, ks, v_i8, vs, m, l, acc, diag_mask):
+    """One (query-block, kv-block) online-softmax update, W8A8.
+
+    q_i8 [B,dh], k_i8 [B,dh], v_i8 [B,dh]; m,l [B]; acc [B,dh] f32.
+    diag_mask: 0/1 scalar — apply intra-block causal mask (kv block == q block).
+    Returns (m', l', acc').
+    """
+    B = q_i8.shape[0]
+    inv_sqrt_d = 1.0 / jnp.sqrt(jnp.float32(q_i8.shape[1]))
+    s = int8_matmul_ref(q_i8, k_i8.T).astype(jnp.float32) * (qs * ks * inv_sqrt_d)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (B, B), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (B, B), 1)
+    neg = jnp.float32(-1e30)
+    masked = jnp.where((diag_mask > 0) & (cols > rows), neg, s)
+    m_new = jnp.maximum(m, jnp.max(masked, axis=-1))
+    corr = jnp.exp(m - m_new)
+    p = jnp.exp(masked - m_new[:, None])
+    l_new = l * corr + jnp.sum(p, axis=-1)
+    # W8A8: requantize the probability tile to int8 with fixed scale 1/127.
+    p_i8 = jnp.clip(jnp.round(p * 127.0), -127, 127).astype(jnp.int8)
+    pv = int8_matmul_ref(p_i8, v_i8).astype(jnp.float32) * (vs / 127.0)
+    acc_new = acc * corr[:, None] + pv
+    return m_new, l_new, acc_new
+
+
+def attn_finalize_ref(l, acc):
+    return acc / jnp.maximum(l, SCALE_EPS)[:, None]
+
+
+def dense_attention_w8a8_ref(q_i8, qs, k_i8, ks, v_i8, vs, causal=True):
+    """Oracle: full causal attention with the same W8A8 semantics, computed
+    by folding attn_block_step_ref over kv blocks (order-independence is
+    checked with permuted folds in tests)."""
+    B = 128
+    S = q_i8.shape[0]
+    nb = S // B
+    outs = []
+    for qb in range(nb):
+        q = q_i8[qb * B:(qb + 1) * B]
+        m = jnp.full((B,), -1e30, jnp.float32)
+        l = jnp.zeros((B,), jnp.float32)
+        acc = jnp.zeros((B, q.shape[1]), jnp.float32)
+        for kb in range(qb + 1 if causal else nb):
+            diag = jnp.int32(1 if (causal and kb == qb) else 0)
+            m, l, acc = attn_block_step_ref(
+                q, qs, k_i8[kb * B:(kb + 1) * B], ks,
+                v_i8[kb * B:(kb + 1) * B], vs, m, l, acc, diag)
+        outs.append(attn_finalize_ref(l, acc))
+    return jnp.concatenate(outs, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# FlexPrefill sparse index generation (SIGU contract)
+# ---------------------------------------------------------------------------
+
+def index_phase_a_ref(qhat_i8, qs, kblk_i8, ks, m, l):
+    """Phase A: stream one K block, update per-row online (m, l) softmax
+    state over the full context. No causal mask: qhat is the LAST query
+    block, all key blocks precede it. FlexPrefill scores the last block
+    without the intra-block triangle mask; we follow suit, consistently
+    across ref / kernels / Rust."""
+    inv_sqrt_d = 1.0 / jnp.sqrt(jnp.float32(qhat_i8.shape[1]))
+    s = int8_matmul_ref(qhat_i8, kblk_i8.T).astype(jnp.float32) * (qs * ks * inv_sqrt_d)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    l_new = l * jnp.exp(m - m_new) + jnp.sum(jnp.exp(s - m_new[:, None]), axis=-1)
+    return m_new, l_new
+
+
+def index_phase_b_ref(qhat_i8, qs, kblk_i8, ks, m_final, l_final):
+    """Phase B: with final (M, L), emit this block's aggregate statistics:
+      vsum — total probability mass landing in this key block (vertical)
+      slo  — mass on intra-tile offsets i-j >= 0 (maps to slash group N-1-b)
+      sup  — mass on intra-tile offsets i-j <  0 (maps to slash group N-b)
+    vsum == slo + sup; vsum/B is the block-pooled true attention (a-hat).
+    """
+    B = qhat_i8.shape[0]
+    inv_sqrt_d = 1.0 / jnp.sqrt(jnp.float32(qhat_i8.shape[1]))
+    s = int8_matmul_ref(qhat_i8, kblk_i8.T).astype(jnp.float32) * (qs * ks * inv_sqrt_d)
+    p = jnp.exp(s - m_final[:, None]) / jnp.maximum(l_final, SCALE_EPS)[:, None]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (B, B), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (B, B), 1)
+    lower = jnp.where(rows >= cols, p, 0.0)
+    slo = jnp.sum(lower)
+    vsum = jnp.sum(p)
+    return vsum, slo, vsum - slo
+
+
+def block_pool_ref(x):
+    """Mean-pool token vectors within each 128-block: [S, d] -> [S/128, d]."""
+    S, d = x.shape
+    return jnp.mean(x.reshape(S // 128, 128, d), axis=1)
+
+
+def pooled_attention_ref(qpool, kpool, causal=False):
+    """softmax(pool(Q) pool(K)^T / sqrt(d)) — [Nq, Nk] block-level map."""
+    d = qpool.shape[-1]
+    s = (qpool @ kpool.T) / jnp.sqrt(jnp.float32(d))
+    if causal:
+        nq, nk = s.shape
+        rows = jax.lax.broadcasted_iota(jnp.int32, (nq, nk), 0) + (nk - nq)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (nq, nk), 1)
+        s = jnp.where(cols > rows, -1e30, s)
+    return jax.nn.softmax(s, axis=-1)
+
+
+def jsd_ref(p, q, eps=1e-12):
+    """Jensen-Shannon divergence between two distributions (natural log)."""
+    p = p / jnp.maximum(jnp.sum(p), eps)
+    q = q / jnp.maximum(jnp.sum(q), eps)
+    m = 0.5 * (p + q)
+
+    def kl(a, b):
+        return jnp.sum(jnp.where(a > eps, a * (jnp.log(a + eps) - jnp.log(b + eps)), 0.0))
+
+    return 0.5 * kl(p, m) + 0.5 * kl(q, m)
+
+
+# ---------------------------------------------------------------------------
+# Model blocks (L2 contract)
+# ---------------------------------------------------------------------------
+
+def silu_ref(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def qkv_chunk_ref(x, g, wq_i8, sq, wk_i8, sk, wv_i8, sv, pos0, cfg):
+    """RMSNorm -> W8A8 QKV projection -> RoPE(q,k) -> per-chunk quantization.
+
+    Returns (q_i8[H,B,dh], q_scale, k_i8[Hk,B,dh], k_scale,
+             v_i8[Hk,B,dh], v_scale, qpool[H,dh], kpool[Hk,dh]).
+    """
+    B = x.shape[0]
+    xn = rmsnorm_ref(x, g, cfg.rms_eps)
+    xs = quant_scale(xn)
+    x_i8 = quantize(xn, xs)
+    q = int8_matmul_deq_ref(x_i8, xs, wq_i8, sq)   # [B, H*dh]
+    k = int8_matmul_deq_ref(x_i8, xs, wk_i8, sk)   # [B, Hk*dh]
+    v = int8_matmul_deq_ref(x_i8, xs, wv_i8, sv)   # [B, Hk*dh]
+    pos = pos0 + jnp.arange(B, dtype=jnp.int32)
+    q = q.reshape(B, cfg.n_heads, cfg.d_head).transpose(1, 0, 2)
+    k = k.reshape(B, cfg.n_kv_heads, cfg.d_head).transpose(1, 0, 2)
+    v = v.reshape(B, cfg.n_kv_heads, cfg.d_head).transpose(1, 0, 2)
+    q = rope_ref(q, pos, cfg.rope_theta)
+    k = rope_ref(k, pos, cfg.rope_theta)
+    qpool = jnp.mean(q, axis=1)  # [H, dh]
+    kpool = jnp.mean(k, axis=1)  # [Hk, dh]
+    qsc, ksc, vsc = quant_scale(q), quant_scale(k), quant_scale(v)
+    return (quantize(q, qsc), qsc, quantize(k, ksc), ksc,
+            quantize(v, vsc), vsc, qpool, kpool)
+
+
+def o_proj_chunk_ref(attn, wo_i8, so, resid):
+    """W8A8 output projection + residual add. attn: [B, H*dh]."""
+    s = quant_scale(attn)
+    a_i8 = quantize(attn, s)
+    return resid + int8_matmul_deq_ref(a_i8, s, wo_i8, so)
+
+
+def ffn_chunk_ref(x, g, wg_i8, sg, wu_i8, su, wd_i8, sd, eps=1e-5):
+    """RMSNorm -> W8A8 SwiGLU FFN -> residual add."""
+    xn = rmsnorm_ref(x, g, eps)
+    xs = quant_scale(xn)
+    x_i8 = quantize(xn, xs)
+    gate = silu_ref(int8_matmul_deq_ref(x_i8, xs, wg_i8, sg))
+    up = int8_matmul_deq_ref(x_i8, xs, wu_i8, su)
+    h = gate * up
+    hs = quant_scale(h)
+    h_i8 = quantize(h, hs)
+    return x + int8_matmul_deq_ref(h_i8, hs, wd_i8, sd)
+
+
+def logits_chunk_ref(x, g, wlm_i8, sl, eps=1e-5):
+    xn = rmsnorm_ref(x, g, eps)
+    xs = quant_scale(xn)
+    return int8_matmul_deq_ref(quantize(xn, xs), xs, wlm_i8, sl)

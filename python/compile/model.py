@@ -1,0 +1,170 @@
+"""L2: chunk-level JAX compute graphs for the W8A8 transformer prefill.
+
+Each public function here is one AOT entry point: a fixed-shape, jit-able
+function over one 128-token chunk (or one block-level job), composing the L1
+Pallas kernels with the f32 glue (RMSNorm, RoPE, SiLU, dequantization).
+`aot.py` lowers every entry point for every functional config to HLO text;
+the Rust coordinator (L3) owns all dynamic control flow — chunk loop, SIGU
+pattern decision, coverage top-k, job lists, cache policy.
+
+All matmuls route through the Pallas int8 kernel (the Hybrid MPU); keeping
+them W8A8 end-to-end is the paper's W8A8 claim (Table III row 3).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import block_attn, flex_index
+from .kernels.int8_matmul import int8_matmul, int8_matmul_deq
+from .kernels.ref import (quant_scale, quantize, rmsnorm_ref, rope_ref,
+                          silu_ref)
+
+
+# ---------------------------------------------------------------------------
+# Chunked KV generation
+# ---------------------------------------------------------------------------
+
+def qkv_chunk(cfg: ModelConfig):
+    """Entry factory: RMSNorm -> W8A8 QKV -> RoPE -> quantized chunk tensors.
+
+    Inputs: x[B,D] f32, g[D] f32, wq[D,H*dh] i8, sq f32, wk[D,Hk*dh] i8,
+            sk f32, wv[D,Hk*dh] i8, sv f32, pos0 i32.
+    Outputs: q_i8[H,B,dh], q_scale, k_i8[Hk,B,dh], k_scale,
+             v_i8[Hk,B,dh], v_scale, qpool[H,dh], kpool[Hk,dh].
+    """
+
+    def fn(x, g, wq, sq, wk, sk, wv, sv, pos0):
+        b = x.shape[0]
+        xn = rmsnorm_ref(x, g, cfg.rms_eps)
+        xs = quant_scale(xn)
+        x_i8 = quantize(xn, xs)
+        q = int8_matmul(x_i8, wq).astype(jnp.float32) * (xs * sq)
+        k = int8_matmul(x_i8, wk).astype(jnp.float32) * (xs * sk)
+        v = int8_matmul(x_i8, wv).astype(jnp.float32) * (xs * sv)
+        pos = pos0 + jnp.arange(b, dtype=jnp.int32)
+        q = q.reshape(b, cfg.n_heads, cfg.d_head).transpose(1, 0, 2)
+        k = k.reshape(b, cfg.n_kv_heads, cfg.d_head).transpose(1, 0, 2)
+        v = v.reshape(b, cfg.n_kv_heads, cfg.d_head).transpose(1, 0, 2)
+        q = rope_ref(q, pos, cfg.rope_theta)
+        k = rope_ref(k, pos, cfg.rope_theta)
+        qpool = jnp.mean(q, axis=1)
+        kpool = jnp.mean(k, axis=1)
+        qsc, ksc, vsc = quant_scale(q), quant_scale(k), quant_scale(v)
+        return (quantize(q, qsc), qsc, quantize(k, ksc), ksc,
+                quantize(v, vsc), vsc, qpool, kpool)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# SIGU / SAU / FFN entry points (config-independent shapes except dh, D, F)
+# ---------------------------------------------------------------------------
+
+def index_phase_a_entry(x_qhat, qs, kblk, ks, m, l):
+    return flex_index.index_phase_a(x_qhat, qs, kblk, ks, m, l)
+
+
+def index_phase_b_entry(x_qhat, qs, kblk, ks, m, l):
+    return flex_index.index_phase_b(x_qhat, qs, kblk, ks, m, l)
+
+
+def attn_block_step_entry(q, qs, k, ks, v, vs, m, l, acc, diag):
+    return block_attn.attn_block_step(q, qs, k, ks, v, vs, m, l, acc, diag)
+
+
+def attn_block_batch_entry(q, qs, k, ks, v, vs, m, l, acc, diag):
+    return block_attn.attn_block_batch(q, qs, k, ks, v, vs, m, l, acc, diag)
+
+
+def o_proj_chunk(cfg: ModelConfig):
+    """attn[B,H*dh] f32 x Wo -> + resid[B,D]."""
+
+    def fn(attn, wo, so, resid):
+        s = quant_scale(attn)
+        a_i8 = quantize(attn, s)
+        return resid + int8_matmul_deq(a_i8, s, wo, so)
+
+    return fn
+
+
+def ffn_chunk(cfg: ModelConfig):
+    """x[B,D] -> x + W8A8 SwiGLU FFN(RMSNorm(x))."""
+
+    def fn(x, g, wg, sg, wu, su, wd, sd):
+        xn = rmsnorm_ref(x, g, cfg.rms_eps)
+        xs = quant_scale(xn)
+        x_i8 = quantize(xn, xs)
+        gate = silu_ref(int8_matmul_deq(x_i8, xs, wg, sg))
+        up = int8_matmul_deq(x_i8, xs, wu, su)
+        h = gate * up
+        hs = quant_scale(h)
+        h_i8 = quantize(h, hs)
+        return x + int8_matmul_deq(h_i8, hs, wd, sd)
+
+    return fn
+
+
+def logits_chunk(cfg: ModelConfig):
+    """Final RMSNorm + W8A8 LM head over one chunk: -> logits[B,V]."""
+
+    def fn(x, g, wlm, sl):
+        xn = rmsnorm_ref(x, g, cfg.rms_eps)
+        xs = quant_scale(xn)
+        return int8_matmul_deq(quantize(xn, xs), xs, wlm, sl)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Entry-point registry used by aot.py and tests.
+# Shapes use B=128 token blocks; J is the SAU batch width (padded job groups).
+# ---------------------------------------------------------------------------
+
+B = 128
+SAU_BATCH = 8  # J: jobs per batched SAU call (pad with zero-weight jobs)
+
+
+def entry_specs(cfg: ModelConfig):
+    """Returns {name: (fn, [ShapeDtypeStruct args])} for AOT lowering."""
+    f32, i8, i32 = jnp.float32, jnp.int8, jnp.int32
+    S = jax.ShapeDtypeStruct
+    dh, D, F = cfg.d_head, cfg.d_model, cfg.d_ffn
+    H, Hk, V = cfg.n_heads, cfg.n_kv_heads, cfg.vocab
+    sc = S((), f32)
+    return {
+        "qkv_chunk": (qkv_chunk(cfg), [
+            S((B, D), f32), S((D,), f32),
+            S((D, H * dh), i8), sc, S((D, Hk * dh), i8), sc,
+            S((D, Hk * dh), i8), sc, S((), i32),
+        ]),
+        "index_phase_a": (index_phase_a_entry, [
+            S((B, dh), i8), sc, S((B, dh), i8), sc,
+            S((B,), f32), S((B,), f32),
+        ]),
+        "index_phase_b": (index_phase_b_entry, [
+            S((B, dh), i8), sc, S((B, dh), i8), sc,
+            S((B,), f32), S((B,), f32),
+        ]),
+        "attn_block_step": (attn_block_step_entry, [
+            S((B, dh), i8), sc, S((B, dh), i8), sc, S((B, dh), i8), sc,
+            S((B,), f32), S((B,), f32), S((B, dh), f32), sc,
+        ]),
+        "attn_block_batch": (attn_block_batch_entry, [
+            S((SAU_BATCH, B, dh), i8), S((SAU_BATCH,), f32),
+            S((SAU_BATCH, B, dh), i8), S((SAU_BATCH,), f32),
+            S((SAU_BATCH, B, dh), i8), S((SAU_BATCH,), f32),
+            S((SAU_BATCH, B), f32), S((SAU_BATCH, B), f32),
+            S((SAU_BATCH, B, dh), f32), S((SAU_BATCH,), f32),
+        ]),
+        "o_proj_chunk": (o_proj_chunk(cfg), [
+            S((B, H * dh), f32), S((H * dh, D), i8), sc, S((B, D), f32),
+        ]),
+        "ffn_chunk": (ffn_chunk(cfg), [
+            S((B, D), f32), S((D,), f32),
+            S((D, F), i8), sc, S((D, F), i8), sc, S((F, D), i8), sc,
+        ]),
+        "logits_chunk": (logits_chunk(cfg), [
+            S((B, D), f32), S((D,), f32), S((D, V), i8), sc,
+        ]),
+    }

@@ -1,0 +1,66 @@
+"""AOT artifact generation: HLO text round-trips and the manifest is sound."""
+
+import os
+
+import pytest
+
+from compile import aot, model
+from compile.configs import TINY
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    aot.lower_all(out, configs=[TINY], verbose=False)
+    return out
+
+
+def test_all_entries_lowered(artifacts):
+    files = set(os.listdir(artifacts))
+    for name in model.entry_specs(TINY):
+        assert f"tiny__{name}.hlo.txt" in files, name
+    assert "manifest.txt" in files
+
+
+def test_hlo_text_is_parseable_hlo(artifacts):
+    """Text must be an HloModule (the format xla_extension 0.5.1 parses),
+    not StableHLO/MLIR."""
+    for name in model.entry_specs(TINY):
+        with open(os.path.join(artifacts, f"tiny__{name}.hlo.txt")) as f:
+            text = f.read()
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+        # The lowering must preserve the return_tuple=True convention the
+        # Rust loader relies on (root is a tuple).
+        assert "tuple(" in text or "(f32[" in text or ") tuple" in text, name
+
+
+def test_manifest_schema(artifacts):
+    with open(os.path.join(artifacts, "manifest.txt")) as f:
+        lines = [ln.strip() for ln in f if ln.strip()]
+    kinds = {ln.split()[0] for ln in lines}
+    assert kinds <= {"cfg", "artifact", "in", "out"}
+    arts = [ln for ln in lines if ln.startswith("artifact ")]
+    assert len(arts) == len(model.entry_specs(TINY))
+    # every artifact line is followed by at least one in and one out line
+    for i, ln in enumerate(lines):
+        if ln.startswith("artifact "):
+            rest = lines[i + 1:]
+            assert rest and rest[0].startswith("in "), ln
+
+
+def test_manifest_records_config_dims(artifacts):
+    with open(os.path.join(artifacts, "manifest.txt")) as f:
+        content = f.read()
+    assert f"cfg tiny d_model={TINY.d_model}" in content
+    assert f"n_heads={TINY.n_heads}" in content
+    assert f"sau_batch={model.SAU_BATCH}" in content
+
+
+def test_attn_block_step_artifact_shapes(artifacts):
+    """Spot-check that the lowered HLO's ENTRY signature matches the spec
+    (int8 q/k/v of [128, dh], f32 state)."""
+    with open(os.path.join(artifacts, "tiny__attn_block_step.hlo.txt")) as f:
+        text = f.read()
+    assert f"s8[128,{TINY.d_head}]" in text
+    assert "f32[128]" in text

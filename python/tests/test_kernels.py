@@ -1,0 +1,318 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Integer paths (int8 matmul, score tiles) must be bit-exact; float paths
+(softmax state, accumulators) are checked to tight f32 tolerance. Hypothesis
+sweeps shapes/seeds; interpret-mode pallas is slow, so example counts are
+kept moderate but the sweeps cover the dimensions that matter (dh, tiling,
+scale magnitudes, adversarial score ranges).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import block_attn, flex_index, ref
+from compile.kernels.int8_matmul import int8_matmul
+
+jax.config.update("jax_enable_x64", False)
+
+RNG = np.random.default_rng
+
+
+def rand_i8(rng, shape):
+    return jnp.asarray(rng.integers(-127, 128, size=shape, dtype=np.int64),
+                       dtype=jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# int8 matmul (Hybrid MPU contract)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [
+    (128, 64, 128), (128, 256, 128), (128, 256, 256),
+    (128, 768, 2048), (64, 64, 64), (128, 2048, 768),
+])
+def test_int8_matmul_exact(m, k, n):
+    rng = RNG(m * 7 + k * 13 + n)
+    a, b = rand_i8(rng, (m, k)), rand_i8(rng, (k, n))
+    got = int8_matmul(a, b)
+    want = ref.int8_matmul_ref(a, b)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_int8_matmul_extremes():
+    """Saturated operands: max-magnitude accumulation must not overflow i32
+    for our K ranges (127*127*2304 < 2^31)."""
+    k = 2304
+    a = jnp.full((128, k), 127, jnp.int8)
+    b = jnp.full((k, 128), 127, jnp.int8)
+    got = int8_matmul(a, b)
+    assert int(got[0, 0]) == 127 * 127 * k
+    b2 = jnp.full((k, 128), -127, jnp.int8)
+    got2 = int8_matmul(a, b2)
+    assert int(got2[0, 0]) == -127 * 127 * k
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([64, 128, 192]),
+       st.sampled_from([128, 256]))
+def test_int8_matmul_hypothesis(seed, k, n):
+    rng = RNG(seed)
+    a, b = rand_i8(rng, (128, k)), rand_i8(rng, (k, n))
+    np.testing.assert_array_equal(
+        np.asarray(int8_matmul(a, b)), np.asarray(ref.int8_matmul_ref(a, b)))
+
+
+# ---------------------------------------------------------------------------
+# Quantization contract
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(1e-3, 1e3))
+def test_quantize_roundtrip_bound(seed, mag):
+    rng = RNG(seed)
+    x = jnp.asarray(rng.normal(0, mag, size=(64, 32)), jnp.float32)
+    q, s = ref.quantize_sym(x)
+    err = np.abs(np.asarray(q, np.float32) * float(s) - np.asarray(x))
+    assert err.max() <= float(s) * 0.5 + 1e-6
+    assert np.abs(np.asarray(q)).max() <= 127
+
+
+def test_quantize_zero_input():
+    q, s = ref.quantize_sym(jnp.zeros((4, 4), jnp.float32))
+    assert float(s) > 0 and np.all(np.asarray(q) == 0)
+
+
+# ---------------------------------------------------------------------------
+# SAU block step
+# ---------------------------------------------------------------------------
+
+def _rand_attn_inputs(seed, dh=64, b=128):
+    rng = RNG(seed)
+    q, k, v = (rand_i8(rng, (b, dh)) for _ in range(3))
+    qs, ks, vs = (float(rng.uniform(1e-3, 0.1)) for _ in range(3))
+    m = jnp.full((b,), -1e30, jnp.float32)
+    l = jnp.zeros((b,), jnp.float32)
+    acc = jnp.zeros((b, dh), jnp.float32)
+    return q, qs, k, ks, v, vs, m, l, acc
+
+
+@pytest.mark.parametrize("dh", [64, 128])
+@pytest.mark.parametrize("diag", [0.0, 1.0])
+def test_attn_block_step_matches_ref(dh, diag):
+    q, qs, k, ks, v, vs, m, l, acc = _rand_attn_inputs(42, dh)
+    got = block_attn.attn_block_step(q, qs, k, ks, v, vs, m, l, acc, diag)
+    want = ref.attn_block_step_ref(q, qs, k, ks, v, vs, m, l, acc,
+                                   jnp.int32(int(diag)))
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_attn_block_step_chained_state():
+    """State threading across three kv blocks equals the ref fold."""
+    q, qs, _, _, _, _, m, l, acc = _rand_attn_inputs(7)
+    mr, lr, accr = m, l, acc
+    for seed in (1, 2, 3):
+        rng = RNG(seed)
+        k, v = rand_i8(rng, (128, 64)), rand_i8(rng, (128, 64))
+        ks, vs = 0.03, 0.05
+        m, l, acc = block_attn.attn_block_step(q, qs, k, ks, v, vs, m, l, acc, 0.0)
+        mr, lr, accr = ref.attn_block_step_ref(q, qs, k, ks, v, vs, mr, lr,
+                                               accr, jnp.int32(0))
+    np.testing.assert_allclose(np.asarray(acc), np.asarray(accr), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(l), np.asarray(lr), rtol=1e-5)
+
+
+def test_attn_merge_order_independence():
+    """The online-softmax merge is order-independent in exact arithmetic —
+    the paper's block-major (out of query order) schedule relies on this.
+    Under W8A8 the P-tile is requantized against the *running* max, so
+    permuted folds differ by bounded quantization noise (<= ~0.5/127 per
+    element before accumulation); the coordinator always uses ascending
+    block order, making results deterministic in practice. We assert
+    agreement within the quantization-noise bound."""
+    q, qs, _, _, _, _, m0, l0, acc0 = _rand_attn_inputs(11)
+    blocks = []
+    for seed in range(4):
+        rng = RNG(100 + seed)
+        blocks.append((rand_i8(rng, (128, 64)), 0.02 + 0.01 * seed,
+                       rand_i8(rng, (128, 64)), 0.04))
+
+    def fold(order):
+        m, l, acc = m0, l0, acc0
+        for i in order:
+            k, ks, v, vs = blocks[i]
+            m, l, acc = block_attn.attn_block_step(q, qs, k, ks, v, vs, m, l,
+                                                   acc, 0.0)
+        return block_attn.attn_finalize(l, acc)
+
+    a = fold([0, 1, 2, 3])
+    b = fold([3, 1, 0, 2])
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=0.05,
+                               atol=0.1)
+
+
+def test_attn_block_batch_matches_loop():
+    js = 8
+    qs_l, ks_l, vs_l = [], [], []
+    q_l, k_l, v_l, m_l, l_l, a_l, d_l = [], [], [], [], [], [], []
+    for j in range(js):
+        q, qs, k, ks, v, vs, m, l, acc = _rand_attn_inputs(200 + j)
+        q_l.append(q); k_l.append(k); v_l.append(v)
+        qs_l.append(qs); ks_l.append(ks); vs_l.append(vs)
+        m_l.append(m); l_l.append(l); a_l.append(acc)
+        d_l.append(float(j % 2))
+    batched = block_attn.attn_block_batch(
+        jnp.stack(q_l), jnp.asarray(qs_l, jnp.float32),
+        jnp.stack(k_l), jnp.asarray(ks_l, jnp.float32),
+        jnp.stack(v_l), jnp.asarray(vs_l, jnp.float32),
+        jnp.stack(m_l), jnp.stack(l_l), jnp.stack(a_l),
+        jnp.asarray(d_l, jnp.float32))
+    for j in range(js):
+        single = block_attn.attn_block_step(
+            q_l[j], qs_l[j], k_l[j], ks_l[j], v_l[j], vs_l[j],
+            m_l[j], l_l[j], a_l[j], d_l[j])
+        for g, w in zip((batched[0][j], batched[1][j], batched[2][j]), single):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       rtol=1e-5, atol=1e-5)
+
+
+def test_diag_mask_blocks_future():
+    """With the diagonal mask on, future columns contribute nothing."""
+    q, qs, k, ks, v, vs, m, l, acc = _rand_attn_inputs(5)
+    m1, l1, _ = block_attn.attn_block_step(q, qs, k, ks, v, vs, m, l, acc, 1.0)
+    # row 0 sees only column 0 -> l == exp(0) == 1 exactly (m == s00).
+    np.testing.assert_allclose(float(l1[0]), 1.0, rtol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_attn_block_step_hypothesis(seed):
+    q, qs, k, ks, v, vs, m, l, acc = _rand_attn_inputs(seed)
+    got = block_attn.attn_block_step(q, qs, k, ks, v, vs, m, l, acc, 0.0)
+    want = ref.attn_block_step_ref(q, qs, k, ks, v, vs, m, l, acc, jnp.int32(0))
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-4,
+                                   atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# SIGU phases
+# ---------------------------------------------------------------------------
+
+def _rand_index_inputs(seed, nblocks=4, dh=64):
+    rng = RNG(seed)
+    qhat = rand_i8(rng, (128, dh))
+    kblks = [rand_i8(rng, (128, dh)) for _ in range(nblocks)]
+    return qhat, float(rng.uniform(0.01, 0.05)), kblks, \
+        float(rng.uniform(0.01, 0.05))
+
+
+def test_index_phase_a_matches_ref():
+    qhat, qs, kblks, ks = _rand_index_inputs(3)
+    m = jnp.full((128,), -1e30, jnp.float32)
+    l = jnp.zeros((128,), jnp.float32)
+    mr, lr = m, l
+    for kb in kblks:
+        m, l = flex_index.index_phase_a(qhat, qs, kb, ks, m, l)
+        mr, lr = ref.index_phase_a_ref(qhat, qs, kb, ks, mr, lr)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(mr), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(l), np.asarray(lr), rtol=1e-5)
+
+
+def test_index_phase_b_matches_ref():
+    qhat, qs, kblks, ks = _rand_index_inputs(9)
+    m = jnp.full((128,), -1e30, jnp.float32)
+    l = jnp.zeros((128,), jnp.float32)
+    for kb in kblks:
+        m, l = ref.index_phase_a_ref(qhat, qs, kb, ks, m, l)
+    for kb in kblks:
+        stats = flex_index.index_phase_b(qhat, qs, kb, ks, m, l)
+        vw, sw, uw = ref.index_phase_b_ref(qhat, qs, kb, ks, m, l)
+        np.testing.assert_allclose(float(stats[0]), float(vw), rtol=1e-5)
+        np.testing.assert_allclose(float(stats[1]), float(sw), rtol=1e-5)
+        np.testing.assert_allclose(float(stats[2]), float(uw), rtol=1e-4,
+                                   atol=1e-6)
+
+
+def test_index_vsum_is_probability_mass():
+    """Sum of vsum over all key blocks == number of query rows (each row's
+    softmax sums to 1)."""
+    qhat, qs, kblks, ks = _rand_index_inputs(21, nblocks=6)
+    m = jnp.full((128,), -1e30, jnp.float32)
+    l = jnp.zeros((128,), jnp.float32)
+    for kb in kblks:
+        m, l = ref.index_phase_a_ref(qhat, qs, kb, ks, m, l)
+    total = 0.0
+    for kb in kblks:
+        v, _, _ = ref.index_phase_b_ref(qhat, qs, kb, ks, m, l)
+        total += float(v)
+    np.testing.assert_allclose(total, 128.0, rtol=1e-4)
+
+
+def test_fused_index_scores_matches_phases():
+    """The single-pallas_call grid-streamed SIGU == phase A then phase B."""
+    qhat, qs, kblks, ks = _rand_index_inputs(33, nblocks=4)
+    kfull = jnp.concatenate(kblks, axis=0)
+    v_f, slo_f, sup_f = flex_index.fused_index_scores(qhat, qs, kfull, ks)
+    m = jnp.full((128,), -1e30, jnp.float32)
+    l = jnp.zeros((128,), jnp.float32)
+    for kb in kblks:
+        m, l = ref.index_phase_a_ref(qhat, qs, kb, ks, m, l)
+    for i, kb in enumerate(kblks):
+        v, slo, sup = ref.index_phase_b_ref(qhat, qs, kb, ks, m, l)
+        np.testing.assert_allclose(float(v_f[i]), float(v), rtol=1e-4)
+        np.testing.assert_allclose(float(slo_f[i]), float(slo), rtol=1e-4)
+        np.testing.assert_allclose(float(sup_f[i]), float(sup), rtol=1e-3,
+                                   atol=1e-6)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([2, 3, 5]))
+def test_fused_index_scores_hypothesis(seed, nblocks):
+    qhat, qs, kblks, ks = _rand_index_inputs(seed, nblocks=nblocks)
+    kfull = jnp.concatenate(kblks, axis=0)
+    v_f, slo_f, sup_f = flex_index.fused_index_scores(qhat, qs, kfull, ks)
+    np.testing.assert_allclose(float(jnp.sum(v_f)), 128.0, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(v_f),
+                               np.asarray(slo_f) + np.asarray(sup_f),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# JSD / pooling oracles (consumed by Rust; sanity-check their math here)
+# ---------------------------------------------------------------------------
+
+def test_jsd_properties():
+    p = jnp.asarray([0.25, 0.25, 0.25, 0.25])
+    q = jnp.asarray([0.25, 0.25, 0.25, 0.25])
+    assert float(ref.jsd_ref(p, q)) < 1e-9
+    r = jnp.asarray([1.0, 0.0, 0.0, 0.0])
+    s = jnp.asarray([0.0, 1.0, 0.0, 0.0])
+    # JSD is bounded by ln 2 and symmetric.
+    np.testing.assert_allclose(float(ref.jsd_ref(r, s)), float(np.log(2)),
+                               rtol=1e-5)
+    np.testing.assert_allclose(float(ref.jsd_ref(r, s)),
+                               float(ref.jsd_ref(s, r)), rtol=1e-6)
+
+
+def test_block_pool():
+    x = jnp.arange(256 * 4, dtype=jnp.float32).reshape(256, 4)
+    p = ref.block_pool_ref(x)
+    assert p.shape == (2, 4)
+    np.testing.assert_allclose(np.asarray(p[0]),
+                               np.asarray(jnp.mean(x[:128], axis=0)))
+
+
+def test_pooled_attention_causal_mask():
+    rng = RNG(1)
+    qp = jnp.asarray(rng.normal(size=(4, 64)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(4, 64)), jnp.float32)
+    a = ref.pooled_attention_ref(qp, kp, causal=True)
+    # row 0 can only attend to block 0.
+    np.testing.assert_allclose(float(a[0, 0]), 1.0, rtol=1e-6)
+    assert float(jnp.sum(a[0, 1:])) < 1e-6

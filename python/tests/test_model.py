@@ -1,0 +1,144 @@
+"""L2 model entry points vs ref oracles + shape checks for every artifact."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.configs import TINY, SMALL100M
+from compile.kernels import ref
+
+RNG = np.random.default_rng
+
+
+def rand_i8(rng, shape):
+    return jnp.asarray(rng.integers(-127, 128, size=shape, dtype=np.int64),
+                       dtype=jnp.int8)
+
+
+def _qkv_inputs(cfg, seed=0):
+    rng = RNG(seed)
+    x = jnp.asarray(rng.normal(0, 1, (model.B, cfg.d_model)), jnp.float32)
+    g = jnp.asarray(rng.uniform(0.5, 1.5, (cfg.d_model,)), jnp.float32)
+    wq = rand_i8(rng, (cfg.d_model, cfg.q_dim))
+    wk = rand_i8(rng, (cfg.d_model, cfg.kv_dim))
+    wv = rand_i8(rng, (cfg.d_model, cfg.kv_dim))
+    sq, sk, sv = 0.01, 0.012, 0.009
+    return x, g, wq, sq, wk, sk, wv, sv, jnp.int32(256)
+
+
+@pytest.mark.parametrize("cfg", [TINY], ids=lambda c: c.name)
+def test_qkv_chunk_matches_ref(cfg):
+    args = _qkv_inputs(cfg)
+    got = model.qkv_chunk(cfg)(*args)
+    want = ref.qkv_chunk_ref(args[0], args[1], args[2], args[3], args[4],
+                             args[5], args[6], args[7], args[8], cfg)
+    names = ["q_i8", "qs", "k_i8", "ks", "v_i8", "vs", "qpool", "kpool"]
+    for n, g, w in zip(names, got, want):
+        if g.dtype == jnp.int8:
+            # rounding at the int8 boundary can differ by 1 ulp of scale when
+            # the f32 matmul order differs; require 99.9% exact, rest +/-1.
+            diff = np.abs(np.asarray(g, np.int32) - np.asarray(w, np.int32))
+            assert diff.max() <= 1, n
+            assert (diff == 0).mean() > 0.995, n
+        else:
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       rtol=2e-4, atol=2e-4, err_msg=n)
+
+
+@pytest.mark.parametrize("cfg", [TINY], ids=lambda c: c.name)
+def test_qkv_chunk_shapes(cfg):
+    got = model.qkv_chunk(cfg)(*_qkv_inputs(cfg))
+    assert got[0].shape == (cfg.n_heads, model.B, cfg.d_head)
+    assert got[2].shape == (cfg.n_kv_heads, model.B, cfg.d_head)
+    assert got[4].shape == (cfg.n_kv_heads, model.B, cfg.d_head)
+    assert got[6].shape == (cfg.n_heads, cfg.d_head)
+    assert got[7].shape == (cfg.n_kv_heads, cfg.d_head)
+
+
+def test_rope_positions_differ():
+    """RoPE must inject absolute positions: same x at different pos0 gives
+    different q/k."""
+    cfg = TINY
+    args = list(_qkv_inputs(cfg))
+    out0 = model.qkv_chunk(cfg)(*args)
+    args[8] = jnp.int32(4096)
+    out1 = model.qkv_chunk(cfg)(*args)
+    assert not np.array_equal(np.asarray(out0[0]), np.asarray(out1[0]))
+
+
+def test_ffn_chunk_matches_ref():
+    cfg = TINY
+    rng = RNG(4)
+    x = jnp.asarray(rng.normal(0, 1, (model.B, cfg.d_model)), jnp.float32)
+    g = jnp.asarray(rng.uniform(0.5, 1.5, (cfg.d_model,)), jnp.float32)
+    wg = rand_i8(rng, (cfg.d_model, cfg.d_ffn))
+    wu = rand_i8(rng, (cfg.d_model, cfg.d_ffn))
+    wd = rand_i8(rng, (cfg.d_ffn, cfg.d_model))
+    got = model.ffn_chunk(cfg)(x, g, wg, 0.01, wu, 0.01, wd, 0.01)
+    want = ref.ffn_chunk_ref(x, g, wg, 0.01, wu, 0.01, wd, 0.01, cfg.rms_eps)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3,
+                               atol=1e-3)
+
+
+def test_o_proj_chunk_matches_ref():
+    cfg = TINY
+    rng = RNG(5)
+    attn = jnp.asarray(rng.normal(0, 1, (model.B, cfg.q_dim)), jnp.float32)
+    wo = rand_i8(rng, (cfg.q_dim, cfg.d_model))
+    resid = jnp.asarray(rng.normal(0, 1, (model.B, cfg.d_model)), jnp.float32)
+    got = model.o_proj_chunk(cfg)(attn, wo, 0.01, resid)
+    want = ref.o_proj_chunk_ref(attn, wo, 0.01, resid)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_logits_chunk_matches_ref():
+    cfg = TINY
+    rng = RNG(6)
+    x = jnp.asarray(rng.normal(0, 1, (model.B, cfg.d_model)), jnp.float32)
+    g = jnp.ones((cfg.d_model,), jnp.float32)
+    wlm = rand_i8(rng, (cfg.d_model, cfg.vocab))
+    got = model.logits_chunk(cfg)(x, g, wlm, 0.02)
+    want = ref.logits_chunk_ref(x, g, wlm, 0.02, cfg.rms_eps)
+    assert got.shape == (model.B, cfg.vocab)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_entry_specs_cover_both_configs():
+    for cfg in (TINY, SMALL100M):
+        specs = model.entry_specs(cfg)
+        assert set(specs) == {
+            "qkv_chunk", "index_phase_a", "index_phase_b", "attn_block_step",
+            "attn_block_batch", "o_proj_chunk", "ffn_chunk", "logits_chunk"}
+        for name, (fn, args) in specs.items():
+            # every arg spec must be concrete (no None dims)
+            for a in args:
+                assert all(isinstance(d, int) and d > 0 for d in a.shape), name
+
+
+def test_dense_attention_w8a8_composition():
+    """Full 2-block causal dense attention out of block steps equals a direct
+    (non-streamed) W8A8 computation."""
+    rng = RNG(7)
+    S, dh = 256, 64
+    q = rand_i8(rng, (S, dh))
+    k = rand_i8(rng, (S, dh))
+    v = rand_i8(rng, (S, dh))
+    qs, ks, vs = 0.02, 0.02, 0.03
+    got = ref.dense_attention_w8a8_ref(q, qs, k, ks, v, vs)
+    # direct: full masked softmax, P requantized per 128-col tile like the
+    # streamed version (scale 1/127 is global so tiling does not matter).
+    s = np.asarray(ref.int8_matmul_ref(q, k.T), np.float32) * (qs * ks / np.sqrt(dh))
+    mask = np.triu(np.ones((S, S), bool), 1)
+    s[mask] = -1e30
+    p = np.exp(s - s.max(-1, keepdims=True))
+    li = p.sum(-1, keepdims=True)
+    p_i8 = np.clip(np.round(p * 127.0), -127, 127)
+    out = (p_i8 @ np.asarray(v, np.float32)) * (vs / 127.0) / li
+    # The streamed path requantizes each P tile against the *running* max,
+    # the direct path against the final max — bounded quantization noise
+    # (same effect as in test_attn_merge_order_independence).
+    np.testing.assert_allclose(np.asarray(got), out, rtol=0.05, atol=0.15)

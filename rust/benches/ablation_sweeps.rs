@@ -1,0 +1,78 @@
+//! Design-choice ablation sweeps (DESIGN.md §Perf): cache capacity,
+//! hot-tier fraction, prefetch-relevant wave size, MPU array count and the
+//! FlexPrefill coverage budget gamma — the sensitivity studies behind the
+//! paper's chosen design point.
+
+use fast_prefill::config::{u280_fast_prefill, FlexParams, LLAMA32_3B};
+use fast_prefill::metrics::fmt_ctx;
+use fast_prefill::sim::{simulate_prefill, synth_model_indices, HeadMix};
+use fast_prefill::util::table::{fnum, Table};
+
+fn main() {
+    let cfg = &LLAMA32_3B;
+    let ctx = 32768;
+    let mix = HeadMix::default();
+    let params = FlexParams::default();
+    let idx = synth_model_indices(cfg.n_heads, 2, ctx / 128, 32, &mix, &params, 11);
+    println!("== design-choice ablations (Llama-3.2-3B @ {}) ==\n", fmt_ctx(ctx));
+
+    // ---- cache capacity sweep ----
+    println!("-- KV cache capacity --");
+    let mut t = Table::new(&["cache (MB)", "TTFT (ms)", "SAU (ms)", "hit %", "HBM read (GB)"]);
+    for mb in [0usize, 2, 4, 8, 16, 32, 64] {
+        let mut f = u280_fast_prefill();
+        f.kv_cache_bytes = mb << 20;
+        let r = simulate_prefill(&f, cfg, ctx, &idx);
+        t.row(&[
+            mb.to_string(),
+            fnum(r.ttft_ms),
+            fnum(r.t_sau_ms),
+            fnum(r.cache_hit_rate * 100.0),
+            fnum(r.traffic.hbm_read_bytes / 1e9),
+        ]);
+    }
+    t.print();
+    println!("(paper design point: 16 MB)\n");
+
+    // ---- hot-tier fraction sweep ----
+    println!("-- hot-tier fraction --");
+    let mut t = Table::new(&["hot frac", "TTFT (ms)", "hit %"]);
+    for frac in [0.0, 0.25, 0.5, 0.75, 1.0] {
+        let mut f = u280_fast_prefill();
+        f.hot_fraction = frac;
+        let r = simulate_prefill(&f, cfg, ctx, &idx);
+        t.row(&[format!("{frac:.2}"), fnum(r.ttft_ms), fnum(r.cache_hit_rate * 100.0)]);
+    }
+    t.print();
+    println!("(paper design point: 0.5)\n");
+
+    // ---- MPU array count sweep ----
+    println!("-- MPU LUT-array count (DSP arrays fixed at 6) --");
+    let mut t = Table::new(&["LUT arrays", "TTFT (ms)", "peak TOPS"]);
+    for luts in [0usize, 2, 4, 6, 8, 10] {
+        let mut f = u280_fast_prefill();
+        f.mpu_lut_arrays = luts;
+        let r = simulate_prefill(&f, cfg, ctx, &idx);
+        t.row(&[luts.to_string(), fnum(r.ttft_ms), fnum(f.peak_tops())]);
+    }
+    t.print();
+    println!("(paper design point: 6 — LUT budget bound, see Table II)\n");
+
+    // ---- gamma (coverage budget) sweep: sparsity/quality knob ----
+    println!("-- FlexPrefill gamma (coverage budget) --");
+    let mut t = Table::new(&["gamma", "density %", "jobs/layer", "TTFT (ms)"]);
+    for gamma in [0.7f32, 0.8, 0.9, 0.95, 0.99] {
+        let p = FlexParams { gamma, ..Default::default() };
+        let idx_g = synth_model_indices(cfg.n_heads, 2, ctx / 128, 32, &mix, &p, 11);
+        let f = u280_fast_prefill();
+        let r = simulate_prefill(&f, cfg, ctx, &idx_g);
+        t.row(&[
+            format!("{gamma:.2}"),
+            fnum(r.avg_density * 100.0),
+            (r.total_jobs / cfg.n_layers).to_string(),
+            fnum(r.ttft_ms),
+        ]);
+    }
+    t.print();
+    println!("(paper/FlexPrefill default: 0.9)");
+}

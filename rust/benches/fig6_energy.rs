@@ -1,0 +1,42 @@
+//! Figure 6: energy efficiency (Token/Joule, token count 1) of FAST-Prefill
+//! vs the GPU baseline over the paper's context sweep.
+
+use fast_prefill::config::{a5000, paper_context_lengths, paper_models, u280_fast_prefill, FlexParams};
+use fast_prefill::gpu_model::simulate_gpu_prefill;
+use fast_prefill::metrics::fmt_ctx;
+use fast_prefill::sim::{simulate_prefill, synth_model_indices, HeadMix};
+use fast_prefill::util::table::{fnum, Table};
+
+fn main() {
+    println!("== Figure 6: energy efficiency (Token/Joule), batch 1 ==\n");
+    let fpga = u280_fast_prefill();
+    let gpu = a5000();
+    let params = FlexParams::default();
+    let mix = HeadMix::default();
+
+    for cfg in paper_models() {
+        let mut t = Table::new(&[
+            "context", "FPGA (tok/J)", "GPU (tok/J)", "ratio", "FPGA (J)", "GPU (J)",
+        ]);
+        let mut ratios = Vec::new();
+        for ctx in paper_context_lengths() {
+            let idx = synth_model_indices(cfg.n_heads, 2, ctx / 128, 32, &mix, &params, 42);
+            let f = simulate_prefill(&fpga, cfg, ctx, &idx);
+            let g = simulate_gpu_prefill(&gpu, cfg, ctx, &idx);
+            let ratio = f.tokens_per_joule() / g.tokens_per_joule();
+            ratios.push(ratio);
+            t.row(&[
+                fmt_ctx(ctx),
+                format!("{:.5}", f.tokens_per_joule()),
+                format!("{:.5}", g.tokens_per_joule()),
+                format!("{ratio:.2}x"),
+                fnum(f.energy_j),
+                fnum(g.energy_j),
+            ]);
+        }
+        println!("-- {} --", cfg.name);
+        t.print();
+        let max = ratios.iter().cloned().fold(0.0, f64::max);
+        println!("best energy-efficiency ratio {max:.2}x (paper: up to 4.5x)\n");
+    }
+}

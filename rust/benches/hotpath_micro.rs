@@ -1,0 +1,104 @@
+//! Hot-path microbenchmarks (EXPERIMENTS.md §Perf): the L3 kernels the
+//! coordinator spends its time in, timed with the local harness. Run via
+//! `cargo bench --bench hotpath_micro`.
+
+use fast_prefill::config::{FlexParams, BLOCK};
+use fast_prefill::coordinator::joblist::build_schedule;
+use fast_prefill::flexprefill::{coverage, scores};
+use fast_prefill::kvcache::{Access, LivenessCache};
+use fast_prefill::model::forward::attn_step_w8a8;
+use fast_prefill::quant::{int8_matmul_bt, quant_scale, quantize_with};
+use fast_prefill::sim::{simulate_prefill, synth_model_indices, HeadMix};
+use fast_prefill::tensor::{MatF32, MatI8};
+use fast_prefill::util::bench::{bench_for, black_box};
+use fast_prefill::util::prng::Prng;
+
+fn rand_mat(rng: &mut Prng, r: usize, c: usize) -> MatI8 {
+    MatI8 { rows: r, cols: c, data: (0..r * c).map(|_| rng.i8_sym()).collect() }
+}
+
+fn main() {
+    let mut rng = Prng::new(0xBE7C);
+    println!("== hot-path microbenchmarks ==\n");
+
+    // --- int8 score tile (the SAU/SIGU inner matmul) ---
+    let q = rand_mat(&mut rng, BLOCK, 64);
+    let k = rand_mat(&mut rng, BLOCK, 64);
+    let r = bench_for("int8_matmul_bt 128x64x128 (score tile)", 300, 20, || {
+        black_box(int8_matmul_bt(&q, &k));
+    });
+    println!("{r}");
+    let macs = (BLOCK * BLOCK * 64) as f64;
+    println!("    -> {:.2} GMAC/s", macs / r.mean_ns);
+
+    // --- full W8A8 SAU job (score + softmax + PV + accumulate) ---
+    let v = rand_mat(&mut rng, BLOCK, 64);
+    let mut m = vec![-1e30f32; BLOCK];
+    let mut l = vec![0.0f32; BLOCK];
+    let mut acc = MatF32::zeros(BLOCK, 64);
+    let r = bench_for("attn_step_w8a8 (one SAU job)", 300, 20, || {
+        attn_step_w8a8(&q, 0.02, &k, 0.02, &v, 0.02, &mut m, &mut l, &mut acc, false);
+        black_box(&acc);
+    });
+    println!("{r}");
+
+    // --- SIGU streaming scores over 64 blocks ---
+    let kblocks: Vec<(MatI8, f32)> = (0..64).map(|_| (rand_mat(&mut rng, BLOCK, 64), 0.02)).collect();
+    let r = bench_for("stream_head_scores (64 K blocks)", 500, 5, || {
+        black_box(scores::stream_head_scores(&q, 0.02, &kblocks));
+    });
+    println!("{r}");
+
+    // --- coverage selection at 128K scale (1024 blocks) ---
+    let scores_v: Vec<f32> = (0..1024).map(|_| rng.f32()).collect();
+    let r = bench_for("coverage_select (1024 blocks)", 200, 50, || {
+        black_box(coverage::coverage_select(&scores_v, 0.9));
+    });
+    println!("{r}");
+
+    // --- job-list bucketization at 128K scale ---
+    let idx = synth_model_indices(24, 1, 1024, 32, &HeadMix::default(), &FlexParams::default(), 3);
+    let r = bench_for("build_schedule (24 heads x 1024 blocks)", 1000, 3, || {
+        black_box(build_schedule(&idx[0], 3, 16));
+    });
+    println!("{r}");
+
+    // --- cache operations ---
+    let sched = build_schedule(&idx[0], 3, 16);
+    let r = bench_for("liveness cache full schedule walk", 500, 5, || {
+        let mut cache = LivenessCache::new(512, 0.5, 256);
+        cache.init_uses(sched.uses.iter().copied());
+        for wave in &sched.waves {
+            for bj in &wave.blocks {
+                let key = fast_prefill::coordinator::cache_key(bj.kv_head, bj.block);
+                if matches!(cache.lookup(key), Access::Miss) {
+                    cache.admit(key);
+                }
+                for _ in 0..bj.jobs.len() {
+                    cache.consume(key);
+                }
+            }
+        }
+        black_box(cache.stats());
+    });
+    println!("{r}");
+
+    // --- full simulator run at 128K (the bench-suite inner loop) ---
+    let cfg = fast_prefill::config::LLAMA32_3B.clone();
+    let big_idx = synth_model_indices(cfg.n_heads, 2, 1024, 32, &HeadMix::default(), &FlexParams::default(), 9);
+    let fpga = fast_prefill::config::u280_fast_prefill();
+    let r = bench_for("simulate_prefill llama3.2-3b @128K", 2000, 2, || {
+        black_box(simulate_prefill(&fpga, &cfg, 131072, &big_idx));
+    });
+    println!("{r}");
+
+    // --- quantization of one chunk ---
+    let x: Vec<f32> = (0..BLOCK * 768).map(|_| rng.normal()).collect();
+    let mut out = vec![0i8; x.len()];
+    let r = bench_for("quantize chunk 128x768", 200, 20, || {
+        let s = quant_scale(&x);
+        quantize_with(&x, s, &mut out);
+        black_box(&out);
+    });
+    println!("{r}");
+}

@@ -1,0 +1,36 @@
+//! Table I: hardware parameters of the GPU and FPGA platforms (as encoded
+//! in the configuration the simulator and cost model consume).
+
+use fast_prefill::config::{a5000, u280_fast_prefill};
+use fast_prefill::util::table::Table;
+
+fn main() {
+    println!("== Table I: hardware parameters ==\n");
+    let g = a5000();
+    let f = u280_fast_prefill();
+    let mut t = Table::new(&["Platform", "NVIDIA A5000 GPU", "AMD U280 FPGA"]);
+    t.row_strs(&["Compute units", "8,192 CUDA cores", "9,024 DSP48s"]);
+    t.row(&[
+        "Frequency (MHz)".into(),
+        format!("{:.0}", g.freq_mhz),
+        format!("{:.0} (achieved)", f.freq_mhz),
+    ]);
+    t.row(&[
+        "TOPS".into(),
+        format!("{:.0} (INT8 dense)", g.int8_tops),
+        format!("{:.1} (hybrid MPU + SFU)", f.peak_tops() + 1.1),
+    ]);
+    t.row(&[
+        "Memory (GB)".into(),
+        format!("{:.0}", g.mem_gb),
+        format!("{:.0} (HBM) & {:.0} (DDR)", f.hbm_gb, f.ddr_gb),
+    ]);
+    t.row(&[
+        "BW (GB/s)".into(),
+        format!("{:.0}", g.mem_bw_gbs),
+        format!("{:.0} (DDR) & {:.0} (HBM)", f.ddr_bw_gbs, f.hbm_bw_gbs),
+    ]);
+    t.print();
+    println!("\n(The FPGA TOPS line adds the SFU/auxiliary DSP MACs to the MPU peak");
+    println!("of {:.1} TOPS, matching the paper's 5.4 TOPS accounting.)", f.peak_tops());
+}

@@ -1,0 +1,50 @@
+//! Table II: FPGA resource utilization of the FAST-Prefill design point,
+//! derived from the architecture configuration (component breakdown plus
+//! the paper's Used/Available/Utilization rows).
+
+use fast_prefill::config::u280_fast_prefill;
+use fast_prefill::sim::resource_report;
+use fast_prefill::util::table::{fnum, Table};
+
+fn main() {
+    println!("== Table II: FPGA resource utilization ==\n");
+    let rep = resource_report(&u280_fast_prefill());
+    let mut t = Table::new(&["Module", "LUT (k)", "FF (k)", "BRAM", "URAM", "DSP"]);
+    for (name, r) in &rep.components {
+        t.row(&[
+            name.to_string(),
+            fnum(r.lut_k),
+            fnum(r.ff_k),
+            fnum(r.bram),
+            fnum(r.uram),
+            fnum(r.dsp),
+        ]);
+    }
+    t.row(&[
+        "Used".into(),
+        fnum(rep.total.lut_k),
+        fnum(rep.total.ff_k),
+        fnum(rep.total.bram),
+        fnum(rep.total.uram),
+        fnum(rep.total.dsp),
+    ]);
+    t.row(&[
+        "Available".into(),
+        fnum(rep.available.lut_k),
+        fnum(rep.available.ff_k),
+        fnum(rep.available.bram),
+        fnum(rep.available.uram),
+        fnum(rep.available.dsp),
+    ]);
+    let u = rep.utilization();
+    t.row(&[
+        "Utilization (%)".into(),
+        fnum(u[0].3),
+        fnum(u[1].3),
+        fnum(u[2].3),
+        fnum(u[3].3),
+        fnum(u[4].3),
+    ]);
+    t.print();
+    println!("\npaper: 64.3 / 47.3 / 55.8 / 95 / 71.6 (%)");
+}

@@ -1,0 +1,54 @@
+//! Table III: accuracy comparison across precision modes on the
+//! needle-retrieval proxy (RULER cannot be run offline — see DESIGN.md
+//! substitutions). Rows mirror the paper: FlexPrefill BF-16, FlexPrefill
+//! INT-8 (dequantized matmuls), FAST-Prefill W8A8. Two model-shaped
+//! difficulty settings stand in for LLaMA-1B and LLaMA-3B.
+
+use fast_prefill::accuracy::{table3_cell_spec, Precision};
+use fast_prefill::config::FlexParams;
+use fast_prefill::util::table::{fnum, Table};
+use fast_prefill::workload::needle::TaskSpec;
+
+fn main() {
+    println!("== Table III: retrieval accuracy proxy (RULER substitute), % ==\n");
+    let params = FlexParams::default();
+    // context lengths in 128-token blocks: 4k, 8k, 16k, 32k, 64k
+    let contexts: [(usize, &str); 5] =
+        [(32, "4k"), (64, "8k"), (128, "16k"), (256, "32k"), (512, "64k")];
+    // (label, gain, noise, d_head, outlier dims, outlier magnitude):
+    // outlier channels model the large-magnitude activation features that
+    // make per-tensor int8 lossy on real LLMs (see workload::needle);
+    // the 3B-shaped setting has a cleaner signal (larger d_head), like the
+    // paper's higher 3B scores.
+    // (label, gain, noise, d_head, outlier dims, outlier mag, distractors, rho)
+    let settings = [
+        ("LLaMA-1B-shaped", 1.05f32, 0.45f32, 64usize, 4usize, 170.0f32, 3usize, 0.95f32),
+        ("LLaMA-3B-shaped", 0.85, 0.35, 128, 4, 110.0, 3, 0.93),
+    ];
+    let n_tasks = 3;
+
+    for (label, gain, noise, dh, odims, omag, ndis, rho) in settings {
+        println!(
+            "-- {label} (d_head {dh}, {odims} outlier channels x{omag}, {ndis} hard negatives rho={rho}) --"
+        );
+        let mut t = Table::new(&["Method", "4k", "8k", "16k", "32k", "64k", "Avg"]);
+        for prec in [Precision::Bf16, Precision::Int8Deq, Precision::W8A8] {
+            let mut row = vec![prec.label().to_string()];
+            let mut sum = 0.0;
+            for (nb, _) in contexts {
+                let spec = TaskSpec::new(nb, dh, gain, noise)
+                    .with_outliers(odims, omag)
+                    .with_distractors(ndis, rho);
+                let acc = table3_cell_spec(&spec, prec, &params, n_tasks, 1234);
+                sum += acc;
+                row.push(fnum(acc));
+            }
+            row.push(fnum(sum / contexts.len() as f64));
+            t.row(&row);
+        }
+        t.print();
+        println!();
+    }
+    println!("expected shape (paper Table III): BF16 well above both int8 modes;");
+    println!("FAST-Prefill W8A8 within ~2 points of FlexPrefill INT-8.");
+}

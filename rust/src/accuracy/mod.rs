@@ -1,0 +1,229 @@
+//! Table III accuracy proxy: retrieval through the real sparse-attention
+//! stack under the paper's three precision modes.
+//!
+//! The paper's rows are all FlexPrefill variants: BF16 reference, INT8
+//! (weights+activations quantized, matmuls dequantized to >=16 bit), and
+//! FAST-Prefill's W8A8 (everything int8, int32 accumulate). We reproduce
+//! exactly that contrast on the needle-retrieval proxy (see
+//! `workload::needle` and DESIGN.md's substitution table): the sparse index
+//! generation AND the attention arithmetic both run in the mode under test,
+//! so both error sources of the real system are present.
+
+use crate::config::{FlexParams, BLOCK};
+use crate::flexprefill::{coverage, scores};
+use crate::model::forward::{attn_finalize, attn_step_w8a8};
+use crate::quant::{quant_scale, quantize_with};
+use crate::tensor::ops::{matmul, matmul_bt, softmax_rows};
+use crate::tensor::{MatF32, MatI8};
+use crate::workload::needle::{NeedleTask, RetrievalOutcome};
+
+/// Precision mode of Table III.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    /// "FlexPrefill (BF-16)": full-precision scores and attention (f32 here;
+    /// bf16's 8-bit mantissa sits between f32 and int8 — f32 is the
+    /// conservative stand-in and is labeled as such in reports).
+    Bf16,
+    /// "FlexPrefill (INT-8)": Q/K/V quantized to int8 but matmuls computed
+    /// on dequantized values (the "requires dequantization to 16 bits" row).
+    Int8Deq,
+    /// "FAST-Prefill" W8A8: int8 x int8 -> int32 end to end, P requantized.
+    W8A8,
+}
+
+impl Precision {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Precision::Bf16 => "FlexPrefill (BF-16)",
+            Precision::Int8Deq => "FlexPrefill (INT-8)",
+            Precision::W8A8 => "FAST-Prefill (W8A8)",
+        }
+    }
+}
+
+fn quantize_m(m: &MatF32) -> (MatI8, f32) {
+    let s = quant_scale(&m.data);
+    let mut q = MatI8::zeros(m.rows, m.cols);
+    quantize_with(&m.data, s, &mut q.data);
+    (q, s)
+}
+
+/// Select KV blocks for the last query block of a needle task using the
+/// vertical-score coverage path (qhat is the last block, so only the
+/// vertical selection is meaningful for retrieval; slash/diagonal adds the
+/// trailing blocks). Returns ascending block ids.
+fn select_blocks(task: &NeedleTask, prec: Precision, params: &FlexParams) -> Vec<u32> {
+    let (vertical, slash, _a_hat) = match prec {
+        Precision::Bf16 => scores::stream_head_scores_f32(&task.qhat, &task.kblocks),
+        Precision::Int8Deq | Precision::W8A8 => {
+            // both quantize Q/K before scoring; Int8Deq dequantizes inside
+            // the matmul which is numerically identical to the int8 product
+            // times scales — the score *tile* differs from Bf16 only by the
+            // quantization of Q/K, which is exactly what we model.
+            let (q, qs) = quantize_m(&task.qhat);
+            let kq: Vec<(MatI8, f32)> = task.kblocks.iter().map(quantize_m).collect();
+            scores::stream_head_scores(&q, qs, &kq)
+        }
+    };
+    let mut sel = coverage::coverage_select(&vertical, params.gamma);
+    // slash selection maps to blocks behind the last query block
+    let n = task.n_blocks;
+    for g in coverage::coverage_select(&slash, params.gamma) {
+        let b = n as i64 - 1 - g as i64;
+        if b >= 0 {
+            sel.push(b as u32);
+        }
+    }
+    if params.force_diagonal {
+        sel.push(n as u32 - 1);
+    }
+    if params.force_sink {
+        sel.push(0);
+    }
+    sel.sort_unstable();
+    sel.dedup();
+    sel
+}
+
+/// Run sparse attention over the selected blocks in the given precision and
+/// score retrieval accuracy.
+pub fn evaluate(task: &NeedleTask, prec: Precision, params: &FlexParams) -> RetrievalOutcome {
+    let sel = select_blocks(task, prec, params);
+    let d = task.d;
+    let out = match prec {
+        Precision::Bf16 => {
+            // gather selected K/V, exact softmax attention
+            let mut k = MatF32::zeros(sel.len() * BLOCK, d);
+            let mut v = MatF32::zeros(sel.len() * BLOCK, d);
+            for (i, &b) in sel.iter().enumerate() {
+                k.data[i * BLOCK * d..(i + 1) * BLOCK * d]
+                    .copy_from_slice(&task.kblocks[b as usize].data);
+                v.data[i * BLOCK * d..(i + 1) * BLOCK * d]
+                    .copy_from_slice(&task.vblocks[b as usize].data);
+            }
+            let mut s = matmul_bt(&task.qhat, &k);
+            let inv = 1.0 / (d as f32).sqrt();
+            for x in s.data.iter_mut() {
+                *x *= inv;
+            }
+            softmax_rows(&mut s);
+            matmul(&s, &v)
+        }
+        Precision::Int8Deq => {
+            // quantize Q/K/V, dequantize, f32 attention (the INT-8 row)
+            let (q, qs) = quantize_m(&task.qhat);
+            let qd = q.dequant(qs);
+            let mut k = MatF32::zeros(sel.len() * BLOCK, d);
+            let mut v = MatF32::zeros(sel.len() * BLOCK, d);
+            for (i, &b) in sel.iter().enumerate() {
+                let (kq, ks) = quantize_m(&task.kblocks[b as usize]);
+                let (vq, vs) = quantize_m(&task.vblocks[b as usize]);
+                k.data[i * BLOCK * d..(i + 1) * BLOCK * d].copy_from_slice(&kq.dequant(ks).data);
+                v.data[i * BLOCK * d..(i + 1) * BLOCK * d].copy_from_slice(&vq.dequant(vs).data);
+            }
+            let mut s = matmul_bt(&qd, &k);
+            let inv = 1.0 / (d as f32).sqrt();
+            for x in s.data.iter_mut() {
+                *x *= inv;
+            }
+            softmax_rows(&mut s);
+            matmul(&s, &v)
+        }
+        Precision::W8A8 => {
+            // the exact SAU pipeline: per-block W8A8 online-softmax steps
+            let (q, qs) = quantize_m(&task.qhat);
+            let mut m = vec![-1e30f32; BLOCK];
+            let mut l = vec![0.0f32; BLOCK];
+            let mut acc = MatF32::zeros(BLOCK, d);
+            for &b in &sel {
+                let (kq, ks) = quantize_m(&task.kblocks[b as usize]);
+                let (vq, vs) = quantize_m(&task.vblocks[b as usize]);
+                attn_step_w8a8(&q, qs, &kq, ks, &vq, vs, &mut m, &mut l, &mut acc, false);
+            }
+            attn_finalize(&l, &acc)
+        }
+    };
+    task.score(&out)
+}
+
+/// Sweep a (context-length, precision) grid — one Table III cell per call.
+/// Returns accuracy in percent averaged over `n_tasks` seeded tasks.
+pub fn table3_cell_spec(
+    spec: &crate::workload::needle::TaskSpec,
+    prec: Precision,
+    params: &FlexParams,
+    n_tasks: usize,
+    seed: u64,
+) -> f64 {
+    let mut acc = 0.0f64;
+    for t in 0..n_tasks {
+        let task = NeedleTask::from_spec(spec, seed + t as u64);
+        acc += evaluate(&task, prec, params).accuracy();
+    }
+    acc / n_tasks as f64
+}
+
+/// Back-compat convenience without outlier channels.
+#[allow(clippy::too_many_arguments)]
+pub fn table3_cell(
+    n_blocks: usize,
+    d: usize,
+    prec: Precision,
+    params: &FlexParams,
+    n_tasks: usize,
+    match_gain: f32,
+    noise: f32,
+    seed: u64,
+) -> f64 {
+    let spec = crate::workload::needle::TaskSpec::new(n_blocks, d, match_gain, noise);
+    table3_cell_spec(&spec, prec, params, n_tasks, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> FlexParams {
+        FlexParams::default()
+    }
+
+    #[test]
+    fn bf16_retrieves_well_at_small_context() {
+        let task = NeedleTask::generate(4, 64, 1.2, 0.2, 10);
+        let r = evaluate(&task, Precision::Bf16, &params());
+        assert!(r.accuracy() > 85.0, "bf16 accuracy {}", r.accuracy());
+    }
+
+    #[test]
+    fn precision_ordering_holds_on_average() {
+        // BF16 >= W8A8-ish ordering with harder noise settings, averaged
+        let p = params();
+        let bf = table3_cell(8, 64, Precision::Bf16, &p, 3, 0.8, 0.55, 42);
+        let w8 = table3_cell(8, 64, Precision::W8A8, &p, 3, 0.8, 0.55, 42);
+        assert!(bf >= w8 - 5.0, "bf {bf} vs w8a8 {w8}");
+    }
+
+    #[test]
+    fn w8a8_close_to_int8deq() {
+        // the paper's headline: W8A8 ~= INT8 dequant accuracy
+        let p = params();
+        let i8d = table3_cell(8, 64, Precision::Int8Deq, &p, 4, 0.9, 0.5, 7);
+        let w8 = table3_cell(8, 64, Precision::W8A8, &p, 4, 0.9, 0.5, 7);
+        assert!((i8d - w8).abs() < 15.0, "int8 {i8d} vs w8a8 {w8}");
+    }
+
+    #[test]
+    fn selection_includes_forced_blocks() {
+        let task = NeedleTask::generate(6, 64, 1.0, 0.3, 3);
+        let sel = select_blocks(&task, Precision::Bf16, &params());
+        assert!(sel.contains(&0));
+        assert!(sel.contains(&5));
+        assert!(sel.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn labels_are_paper_rows() {
+        assert!(Precision::Bf16.label().contains("BF-16"));
+        assert!(Precision::W8A8.label().contains("FAST-Prefill"));
+    }
+}

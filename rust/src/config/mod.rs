@@ -1,0 +1,51 @@
+//! Configuration: model architectures, accelerator platforms, FlexPrefill
+//! hyper-parameters, and run settings parsed from the CLI.
+
+pub mod accel;
+pub mod model;
+
+pub use accel::{a5000, u280_cacheless, u280_dsp_only, u280_fast_prefill, FpgaConfig, GpuConfig};
+pub use model::{by_name, paper_models, ModelConfig, BLOCK, LLAMA32_1B, LLAMA32_3B, QWEN25_1B, SMALL100M, TINY};
+
+/// FlexPrefill hyper-parameters (paper: tau = 0.1, gamma = 0.9).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FlexParams {
+    /// JSD threshold selecting query-aware vs vertical-slash.
+    pub tau: f32,
+    /// Cumulative-attention coverage budget.
+    pub gamma: f32,
+    /// Force-include the diagonal (self) block for every query block so the
+    /// softmax denominator is never empty. FlexPrefill's implementation does
+    /// the same via its local window.
+    pub force_diagonal: bool,
+    /// Force-include block 0 (attention-sink behaviour).
+    pub force_sink: bool,
+}
+
+impl Default for FlexParams {
+    fn default() -> Self {
+        FlexParams { tau: 0.1, gamma: 0.9, force_diagonal: true, force_sink: true }
+    }
+}
+
+/// Context lengths evaluated in the paper's figures (tokens).
+pub fn paper_context_lengths() -> Vec<usize> {
+    vec![4 * 1024, 8 * 1024, 16 * 1024, 32 * 1024, 128 * 1024]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let p = FlexParams::default();
+        assert_eq!(p.tau, 0.1);
+        assert_eq!(p.gamma, 0.9);
+    }
+
+    #[test]
+    fn paper_sweep_has_128k() {
+        assert!(paper_context_lengths().contains(&(128 * 1024)));
+    }
+}

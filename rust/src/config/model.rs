@@ -1,0 +1,176 @@
+//! Model configurations — mirrors `python/compile/configs.py`.
+//!
+//! The functional configs (`tiny`, `small100m`) have AOT artifacts and run
+//! end-to-end on the CPU PJRT backend. The paper-scale configs
+//! (Llama-3.2-1B/3B, Qwen2.5-1B) drive the FPGA simulator and the GPU cost
+//! model, where only shapes matter. The AOT manifest re-states the
+//! functional configs' dimensions; `runtime::artifacts` cross-checks them at
+//! load time so the two languages cannot silently drift.
+
+/// Token block size B — both the chunked-prefill granularity and the
+/// FlexPrefill block granularity (the paper sets both to 128).
+pub const BLOCK: usize = 128;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub d_ffn: usize,
+    pub n_layers: usize,
+    pub vocab: usize,
+    pub rope_theta: f32,
+    pub rms_eps: f32,
+}
+
+impl ModelConfig {
+    pub const fn q_dim(&self) -> usize {
+        self.n_heads * self.d_head
+    }
+    pub const fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.d_head
+    }
+    /// GQA group size (query heads per KV head).
+    pub const fn group_size(&self) -> usize {
+        self.n_heads / self.n_kv_heads
+    }
+    /// Approximate weight parameter count.
+    pub fn params(&self) -> usize {
+        let attn = self.d_model * (self.q_dim() + 2 * self.kv_dim())
+            + self.q_dim() * self.d_model;
+        let ffn = 3 * self.d_model * self.d_ffn;
+        let per_layer = attn + ffn + 2 * self.d_model;
+        self.n_layers * per_layer + 2 * self.vocab * self.d_model + self.d_model
+    }
+    /// KV cache bytes for a context of `s` tokens (int8 K + V).
+    pub fn kv_bytes(&self, s: usize) -> usize {
+        2 * self.n_layers * self.kv_dim() * s
+    }
+}
+
+/// Functional config with AOT artifacts: 2-layer toy for tests.
+pub const TINY: ModelConfig = ModelConfig {
+    name: "tiny",
+    d_model: 256,
+    n_heads: 4,
+    n_kv_heads: 2,
+    d_head: 64,
+    d_ffn: 768,
+    n_layers: 2,
+    vocab: 256,
+    rope_theta: 10000.0,
+    rms_eps: 1e-5,
+};
+
+/// Functional config with AOT artifacts: ~100M-param e2e driver model.
+pub const SMALL100M: ModelConfig = ModelConfig {
+    name: "small100m",
+    d_model: 768,
+    n_heads: 12,
+    n_kv_heads: 4,
+    d_head: 64,
+    d_ffn: 2048,
+    n_layers: 16,
+    vocab: 256,
+    rope_theta: 10000.0,
+    rms_eps: 1e-5,
+};
+
+/// Paper model: Llama-3.2-1B-Instruct (architecture dims; weights are
+/// seeded-random offline — see DESIGN.md substitutions).
+pub const LLAMA32_1B: ModelConfig = ModelConfig {
+    name: "llama3.2-1b",
+    d_model: 2048,
+    n_heads: 32,
+    n_kv_heads: 8,
+    d_head: 64,
+    d_ffn: 8192,
+    n_layers: 16,
+    vocab: 128256,
+    rope_theta: 500000.0,
+    rms_eps: 1e-5,
+};
+
+/// Paper model: Llama-3.2-3B-Instruct.
+pub const LLAMA32_3B: ModelConfig = ModelConfig {
+    name: "llama3.2-3b",
+    d_model: 3072,
+    n_heads: 24,
+    n_kv_heads: 8,
+    d_head: 128,
+    d_ffn: 8192,
+    n_layers: 28,
+    vocab: 128256,
+    rope_theta: 500000.0,
+    rms_eps: 1e-5,
+};
+
+/// Paper model: Qwen2.5-1.5B-Instruct (the paper's "Qwen2.5-1B").
+pub const QWEN25_1B: ModelConfig = ModelConfig {
+    name: "qwen2.5-1b",
+    d_model: 1536,
+    n_heads: 12,
+    n_kv_heads: 2,
+    d_head: 128,
+    d_ffn: 8960,
+    n_layers: 28,
+    vocab: 151936,
+    rope_theta: 1000000.0,
+    rms_eps: 1e-6,
+};
+
+pub fn by_name(name: &str) -> Option<&'static ModelConfig> {
+    match name {
+        "tiny" => Some(&TINY),
+        "small100m" => Some(&SMALL100M),
+        "llama3.2-1b" => Some(&LLAMA32_1B),
+        "llama3.2-3b" => Some(&LLAMA32_3B),
+        "qwen2.5-1b" => Some(&QWEN25_1B),
+        _ => None,
+    }
+}
+
+/// Configs evaluated in the paper's figures.
+pub fn paper_models() -> Vec<&'static ModelConfig> {
+    vec![&LLAMA32_1B, &LLAMA32_3B, &QWEN25_1B]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gqa_divides() {
+        for cfg in [&TINY, &SMALL100M, &LLAMA32_1B, &LLAMA32_3B, &QWEN25_1B] {
+            assert_eq!(cfg.n_heads % cfg.n_kv_heads, 0, "{}", cfg.name);
+        }
+    }
+
+    #[test]
+    fn small100m_is_about_100m() {
+        let p = SMALL100M.params();
+        assert!(p > 80_000_000 && p < 130_000_000, "params {p}");
+    }
+
+    #[test]
+    fn llama1b_params_order() {
+        let p = LLAMA32_1B.params();
+        // embedding-heavy, like the real model (~1.24B)
+        assert!(p > 800_000_000 && p < 1_800_000_000, "params {p}");
+    }
+
+    #[test]
+    fn kv_bytes_128k_is_gb_scale() {
+        // paper: "large size of the KV cache (~3-4 GB)"
+        let b = LLAMA32_3B.kv_bytes(128 * 1024);
+        assert!(b > 2 << 30, "kv {b}");
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        assert_eq!(by_name("tiny"), Some(&TINY));
+        assert!(by_name("nope").is_none());
+    }
+}

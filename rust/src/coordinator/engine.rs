@@ -1,0 +1,544 @@
+//! The prefill engine: chunked, artifact-backed execution of the full
+//! pipeline (paper Fig. 2) — KV generation -> SIGU -> block-major SAU with
+//! the liveness cache -> FFN -> first token.
+//!
+//! Every matmul-heavy stage runs through the AOT artifacts on the PJRT CPU
+//! client (the "MPU"); decision logic, coverage selection, job-list
+//! bucketization and cache policy run natively in Rust (the paper's
+//! FSM/SFU/comparator logic). Two backend switches exist for SIGU and SAU:
+//! `native_*` replaces the artifact calls with the bit-compatible Rust
+//! mirror (used for cross-validation and fast experimentation; both paths
+//! are asserted equivalent in integration tests).
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::{FlexParams, ModelConfig, BLOCK};
+use crate::coordinator::joblist::{build_schedule, cache_key, Schedule};
+use crate::flexprefill::{generate_head_index, scores, HeadIndex, HeadPattern, HeadStats};
+use crate::kvcache::{Access, LivenessCache};
+use crate::metrics::PrefillMetrics;
+use crate::model::forward::{attn_finalize, attn_step_w8a8};
+use crate::model::ModelWeights;
+use crate::runtime::{literal_f32, literal_i8, Arg, Runtime};
+use crate::tensor::{MatF32, MatI8};
+
+/// Engine configuration.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub model: ModelConfig,
+    /// None => dense causal attention (baseline).
+    pub flex: Option<FlexParams>,
+    pub weight_seed: u64,
+    /// Live query blocks per SAU wave (0 = all — unbounded accumulator).
+    pub wave_qblocks: usize,
+    /// KV cache capacity in blocks (0 = cacheless ablation).
+    pub cache_blocks: usize,
+    pub hot_fraction: f64,
+    /// t_hot as a fraction of per-key maximum consumers.
+    pub t_hot_frac: f64,
+    /// Compute SIGU statistics natively instead of via artifacts.
+    pub native_sigu: bool,
+    /// Compute SAU attention natively instead of via artifacts.
+    pub native_sau: bool,
+}
+
+impl EngineConfig {
+    pub fn new(model: ModelConfig) -> Self {
+        EngineConfig {
+            model,
+            flex: Some(FlexParams::default()),
+            weight_seed: 0xFA57,
+            wave_qblocks: 8,
+            cache_blocks: 1024,
+            hot_fraction: 0.5,
+            t_hot_frac: 0.5,
+            native_sigu: true,
+            native_sau: false,
+        }
+    }
+}
+
+/// Per-chunk quantized attention inputs for one layer.
+struct ChunkState {
+    q: Vec<i8>, // [H, B, dh]
+    qs: f32,
+    k: Vec<i8>, // [Hk, B, dh]
+    ks: f32,
+    v: Vec<i8>, // [Hk, B, dh]
+    vs: f32,
+    qpool: Vec<f32>, // [H, dh]
+    kpool: Vec<f32>, // [Hk, dh]
+}
+
+/// Result of one prefill run.
+#[derive(Clone, Debug)]
+pub struct PrefillRun {
+    pub first_token: u8,
+    pub logits_last: Vec<f32>,
+    pub metrics: PrefillMetrics,
+    pub patterns: Vec<Vec<HeadPattern>>,
+    /// Per-layer per-head index sets (feed the simulator / GPU model).
+    pub index_sets: Vec<Vec<HeadIndex>>,
+    /// Final-layer hidden state of the last chunk (validation hook).
+    pub hidden_last_chunk: Vec<f32>,
+}
+
+/// The prefill engine (one PJRT runtime + one model instance).
+pub struct Engine {
+    pub rt: Runtime,
+    pub cfg: EngineConfig,
+    pub weights: ModelWeights,
+}
+
+impl Engine {
+    /// Load artifacts, validate config compatibility, compile entry points,
+    /// generate weights.
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>, cfg: EngineConfig) -> Result<Engine> {
+        let mut rt = Runtime::load(artifact_dir)?;
+        rt.manifest.validate_config(&cfg.model).context("manifest/config check")?;
+        rt.warmup(cfg.model.name)?;
+        let weights = ModelWeights::generate(&cfg.model, cfg.weight_seed);
+        Ok(Engine { rt, cfg, weights })
+    }
+
+    fn sau_batch(&self) -> usize {
+        self.rt.manifest.configs[self.cfg.model.name].sau_batch.max(1)
+    }
+
+    /// Run the full prefill for a byte-token context. Context length must be
+    /// a multiple of BLOCK.
+    pub fn prefill(&mut self, request_id: u64, tokens: &[u8]) -> Result<PrefillRun> {
+        let cfg = self.cfg.model.clone();
+        let s = tokens.len();
+        anyhow::ensure!(s > 0 && s % BLOCK == 0, "context must be a positive multiple of {BLOCK}");
+        let n = s / BLOCK;
+        let (d, dh, hq, _hk) = (cfg.d_model, cfg.d_head, cfg.n_heads, cfg.n_kv_heads);
+        let t_start = Instant::now();
+        let mut metrics = PrefillMetrics {
+            request_id,
+            context_tokens: s,
+            ..Default::default()
+        };
+
+        let mut hidden = self.weights.embed_tokens(tokens);
+        let mut patterns = Vec::new();
+        let mut index_sets: Vec<Vec<HeadIndex>> = Vec::new();
+        let mut density_sum = 0.0;
+        let mut density_cnt = 0usize;
+        let mut qa_heads = 0usize;
+        let mut cache_hits = 0u64;
+        let mut cache_lookups = 0u64;
+
+        for li in 0..cfg.n_layers {
+            // ---------------- phase 1: chunked KV generation ----------------
+            let t0 = Instant::now();
+            let chunks = self.run_qkv_layer(li, &hidden, n)?;
+            metrics.t_qkv_us += t0.elapsed().as_micros() as f64;
+
+            // ---------------- phase 2: SIGU ----------------
+            let t0 = Instant::now();
+            let indices = self.run_sigu_layer(&chunks, n)?;
+            metrics.t_sigu_us += t0.elapsed().as_micros() as f64;
+            for idx in &indices {
+                density_sum += idx.density();
+                density_cnt += 1;
+                if idx.pattern == HeadPattern::QueryAware {
+                    qa_heads += 1;
+                }
+            }
+            patterns.push(indices.iter().map(|i| i.pattern).collect());
+
+            // ---------------- phase 3: SAU (block-major, cached) ------------
+            let t0 = Instant::now();
+            let schedule = build_schedule(&indices, cfg.group_size(), self.cfg.wave_qblocks);
+            metrics.jobs += schedule.total_jobs;
+            let t_hot = (self.cfg.t_hot_frac * (n * cfg.group_size()) as f64) as u32;
+            let mut cache = if self.cfg.cache_blocks > 0 {
+                LivenessCache::new(self.cfg.cache_blocks, self.cfg.hot_fraction, t_hot)
+            } else {
+                LivenessCache::disabled()
+            };
+            cache.init_uses(schedule.uses.iter().copied());
+            let attn = self.run_sau_layer(&chunks, &schedule, &mut cache, n)?;
+            let cs = cache.stats();
+            cache_hits += cs.hits();
+            cache_lookups += cs.lookups;
+            metrics.t_sau_us += t0.elapsed().as_micros() as f64;
+            index_sets.push(indices);
+
+            // ---------------- phase 4: o_proj + FFN ----------------
+            let t0 = Instant::now();
+            for ci in 0..n {
+                let resid: Vec<f32> = hidden.data[ci * BLOCK * d..(ci + 1) * BLOCK * d].to_vec();
+                let lw = &self.weights.layers[li];
+                let exe = self.rt.get(cfg.name, "o_proj_chunk")?;
+                let out = exe.run(&[
+                    Arg::F32(&attn[ci], &[BLOCK, hq * dh]),
+                    Arg::I8(&lw.wo.q.data, &[hq * dh, d]),
+                    Arg::ScalarF32(lw.wo.scale),
+                    Arg::F32(&resid, &[BLOCK, d]),
+                ])?;
+                let x = literal_f32(&out[0])?;
+                let exe = self.rt.get(cfg.name, "ffn_chunk")?;
+                let out = exe.run(&[
+                    Arg::F32(&x, &[BLOCK, d]),
+                    Arg::F32(&lw.g_ffn, &[d]),
+                    Arg::I8(&lw.wg.q.data, &[d, cfg.d_ffn]),
+                    Arg::ScalarF32(lw.wg.scale),
+                    Arg::I8(&lw.wu.q.data, &[d, cfg.d_ffn]),
+                    Arg::ScalarF32(lw.wu.scale),
+                    Arg::I8(&lw.wd.q.data, &[cfg.d_ffn, d]),
+                    Arg::ScalarF32(lw.wd.scale),
+                ])?;
+                let x = literal_f32(&out[0])?;
+                hidden.data[ci * BLOCK * d..(ci + 1) * BLOCK * d].copy_from_slice(&x);
+            }
+            metrics.t_ffn_us += t0.elapsed().as_micros() as f64;
+        }
+
+        // ---------------- first token ----------------
+        let last: Vec<f32> = hidden.data[(s - BLOCK) * d..].to_vec();
+        let exe = self.rt.get(cfg.name, "logits_chunk")?;
+        let out = exe.run(&[
+            Arg::F32(&last, &[BLOCK, d]),
+            Arg::F32(&self.weights.g_final, &[d]),
+            Arg::I8(&self.weights.lm_head.q.data, &[d, cfg.vocab]),
+            Arg::ScalarF32(self.weights.lm_head.scale),
+        ])?;
+        let logits = literal_f32(&out[0])?;
+        let last_row = &logits[(BLOCK - 1) * cfg.vocab..];
+        let first_token = last_row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as u8)
+            .unwrap_or(0);
+
+        metrics.ttft_us = t_start.elapsed().as_micros() as f64;
+        metrics.density = if density_cnt > 0 { density_sum / density_cnt as f64 } else { 1.0 };
+        metrics.query_aware_frac =
+            if density_cnt > 0 { qa_heads as f64 / density_cnt as f64 } else { 0.0 };
+        metrics.cache_hit_rate =
+            if cache_lookups > 0 { cache_hits as f64 / cache_lookups as f64 } else { 0.0 };
+
+        Ok(PrefillRun {
+            first_token,
+            logits_last: last_row.to_vec(),
+            metrics,
+            patterns,
+            index_sets,
+            hidden_last_chunk: last,
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // phase implementations
+    // ------------------------------------------------------------------
+
+    fn run_qkv_layer(&mut self, li: usize, hidden: &MatF32, n: usize) -> Result<Vec<ChunkState>> {
+        let cfg = &self.cfg.model;
+        let (d, dh, hq, hk) = (cfg.d_model, cfg.d_head, cfg.n_heads, cfg.n_kv_heads);
+        let mut chunks = Vec::with_capacity(n);
+        for ci in 0..n {
+            let x = &hidden.data[ci * BLOCK * d..(ci + 1) * BLOCK * d];
+            let lw = &self.weights.layers[li];
+            let exe = self.rt.get(cfg.name, "qkv_chunk")?;
+            let out = exe.run(&[
+                Arg::F32(x, &[BLOCK, d]),
+                Arg::F32(&lw.g_attn, &[d]),
+                Arg::I8(&lw.wq.q.data, &[d, hq * dh]),
+                Arg::ScalarF32(lw.wq.scale),
+                Arg::I8(&lw.wk.q.data, &[d, hk * dh]),
+                Arg::ScalarF32(lw.wk.scale),
+                Arg::I8(&lw.wv.q.data, &[d, hk * dh]),
+                Arg::ScalarF32(lw.wv.scale),
+                Arg::ScalarI32((ci * BLOCK) as i32),
+            ])?;
+            chunks.push(ChunkState {
+                q: literal_i8(&out[0])?,
+                qs: out[1].get_first_element::<f32>()?,
+                k: literal_i8(&out[2])?,
+                ks: out[3].get_first_element::<f32>()?,
+                v: literal_i8(&out[4])?,
+                vs: out[5].get_first_element::<f32>()?,
+                qpool: literal_f32(&out[6])?,
+                kpool: literal_f32(&out[7])?,
+            });
+        }
+        Ok(chunks)
+    }
+
+    /// head h's [B, dh] int8 query slice of chunk `ci`.
+    fn q_slice<'a>(chunks: &'a [ChunkState], ci: usize, h: usize, dh: usize) -> &'a [i8] {
+        &chunks[ci].q[h * BLOCK * dh..(h + 1) * BLOCK * dh]
+    }
+    fn k_slice<'a>(chunks: &'a [ChunkState], ci: usize, g: usize, dh: usize) -> &'a [i8] {
+        &chunks[ci].k[g * BLOCK * dh..(g + 1) * BLOCK * dh]
+    }
+    fn v_slice<'a>(chunks: &'a [ChunkState], ci: usize, g: usize, dh: usize) -> &'a [i8] {
+        &chunks[ci].v[g * BLOCK * dh..(g + 1) * BLOCK * dh]
+    }
+
+    fn run_sigu_layer(&mut self, chunks: &[ChunkState], n: usize) -> Result<Vec<HeadIndex>> {
+        let cfg = self.cfg.model.clone();
+        let dh = cfg.d_head;
+        let params = match &self.cfg.flex {
+            Some(p) => *p,
+            None => {
+                // dense causal indices
+                return Ok((0..cfg.n_heads)
+                    .map(|_| HeadIndex {
+                        pattern: HeadPattern::VerticalSlash,
+                        d_js: 0.0,
+                        blocks: (0..n).map(|q| (0..=q as u32).collect()).collect(),
+                    })
+                    .collect());
+            }
+        };
+        let mut out = Vec::with_capacity(cfg.n_heads);
+        for h in 0..cfg.n_heads {
+            let g = h / cfg.group_size();
+            let qs = chunks[n - 1].qs;
+            let (vertical, slash, a_hat) = if self.cfg.native_sigu {
+                let qhat = MatI8::from_vec(BLOCK, dh, Self::q_slice(chunks, n - 1, h, dh).to_vec());
+                let kblocks: Vec<(MatI8, f32)> = (0..n)
+                    .map(|b| {
+                        (MatI8::from_vec(BLOCK, dh, Self::k_slice(chunks, b, g, dh).to_vec()),
+                         chunks[b].ks)
+                    })
+                    .collect();
+                scores::stream_head_scores(&qhat, qs, &kblocks)
+            } else {
+                self.sigu_via_artifacts(chunks, h, g, n)?
+            };
+            // pooled estimate + decision inputs
+            let kpool = MatF32::from_fn(n, dh, |b, c| chunks[b].kpool[g * dh + c]);
+            let qpool_all = MatF32::from_fn(n, dh, |b, c| chunks[b].qpool[h * dh + c]);
+            let qpool_hat: Vec<f32> = qpool_all.row(n - 1).to_vec();
+            let a_bar = scores::pooled_estimate(&qpool_hat, &kpool);
+            let stats = HeadStats { vertical, slash, a_bar, a_hat, qpool_all, kpool };
+            out.push(generate_head_index(&stats, &params));
+        }
+        Ok(out)
+    }
+
+    fn sigu_via_artifacts(
+        &mut self,
+        chunks: &[ChunkState],
+        h: usize,
+        g: usize,
+        n: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let cfg = self.cfg.model.clone();
+        let dh = cfg.d_head;
+        let qs = chunks[n - 1].qs;
+        let qhat = Self::q_slice(chunks, n - 1, h, dh).to_vec();
+        let mut m = vec![-1e30f32; BLOCK];
+        let mut l = vec![0.0f32; BLOCK];
+        for b in 0..n {
+            let exe = self.rt.get(cfg.name, "index_phase_a")?;
+            let out = exe.run(&[
+                Arg::I8(&qhat, &[BLOCK, dh]),
+                Arg::ScalarF32(qs),
+                Arg::I8(Self::k_slice(chunks, b, g, dh), &[BLOCK, dh]),
+                Arg::ScalarF32(chunks[b].ks),
+                Arg::F32(&m, &[BLOCK]),
+                Arg::F32(&l, &[BLOCK]),
+            ])?;
+            m = literal_f32(&out[0])?;
+            l = literal_f32(&out[1])?;
+        }
+        let mut vertical = vec![0.0f32; n];
+        let mut slash = vec![0.0f32; n];
+        for b in 0..n {
+            let exe = self.rt.get(cfg.name, "index_phase_b")?;
+            let out = exe.run(&[
+                Arg::I8(&qhat, &[BLOCK, dh]),
+                Arg::ScalarF32(qs),
+                Arg::I8(Self::k_slice(chunks, b, g, dh), &[BLOCK, dh]),
+                Arg::ScalarF32(chunks[b].ks),
+                Arg::F32(&m, &[BLOCK]),
+                Arg::F32(&l, &[BLOCK]),
+            ])?;
+            let stats = literal_f32(&out[0])?;
+            vertical[b] = stats[0];
+            slash[n - 1 - b] += stats[1];
+            if b + 2 <= n {
+                slash[n - 2 - b] += stats[2];
+            }
+        }
+        let a_hat: Vec<f32> = vertical.iter().map(|v| v / BLOCK as f32).collect();
+        Ok((vertical, slash, a_hat))
+    }
+
+    /// Block-major SAU over the wave schedule; returns per-chunk attention
+    /// outputs [n][B * H*dh].
+    fn run_sau_layer(
+        &mut self,
+        chunks: &[ChunkState],
+        schedule: &Schedule,
+        cache: &mut LivenessCache,
+        n: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let cfg = self.cfg.model.clone();
+        let (dh, hq) = (cfg.d_head, cfg.n_heads);
+        let j_max = self.sau_batch();
+        let mut attn: Vec<Vec<f32>> = (0..n).map(|_| vec![0.0f32; BLOCK * hq * dh]).collect();
+
+        for wave in &schedule.waves {
+            let wq = (wave.q_end - wave.q_start) as usize;
+            // keyed accumulator banks for this wave: (h, q_local)
+            let nstates = hq * wq;
+            let mut m = vec![-1e30f32; nstates * BLOCK];
+            let mut l = vec![0.0f32; nstates * BLOCK];
+            let mut acc = vec![0.0f32; nstates * BLOCK * dh];
+
+            for bj in &wave.blocks {
+                let key = cache_key(bj.kv_head, bj.block);
+                // fetch-or-hit; the functional path always has the data in
+                // host memory — the cache records the *traffic* outcome.
+                if matches!(cache.lookup(key), Access::Miss) {
+                    cache.admit(key);
+                }
+                let g = bj.kv_head as usize;
+                let b = bj.block as usize;
+                let kblk = Self::k_slice(chunks, b, g, dh);
+                let vblk = Self::v_slice(chunks, b, g, dh);
+
+                if self.cfg.native_sau {
+                    let kmat = MatI8::from_vec(BLOCK, dh, kblk.to_vec());
+                    let vmat = MatI8::from_vec(BLOCK, dh, vblk.to_vec());
+                    for job in &bj.jobs {
+                        let st = job.head as usize * wq + (job.qblock - wave.q_start) as usize;
+                        let qmat = MatI8::from_vec(
+                            BLOCK,
+                            dh,
+                            Self::q_slice(chunks, job.qblock as usize, job.head as usize, dh)
+                                .to_vec(),
+                        );
+                        let mut accm = MatF32::from_vec(
+                            BLOCK,
+                            dh,
+                            acc[st * BLOCK * dh..(st + 1) * BLOCK * dh].to_vec(),
+                        );
+                        attn_step_w8a8(
+                            &qmat,
+                            chunks[job.qblock as usize].qs,
+                            &kmat,
+                            chunks[b].ks,
+                            &vmat,
+                            chunks[b].vs,
+                            &mut m[st * BLOCK..(st + 1) * BLOCK],
+                            &mut l[st * BLOCK..(st + 1) * BLOCK],
+                            &mut accm,
+                            b == job.qblock as usize,
+                        );
+                        acc[st * BLOCK * dh..(st + 1) * BLOCK * dh].copy_from_slice(&accm.data);
+                        cache.consume(key);
+                    }
+                } else {
+                    // batched artifact calls, padded to the manifest J
+                    for group in bj.jobs.chunks(j_max) {
+                        self.sau_batch_call(chunks, wave.q_start, wq, group, b, g, kblk, vblk,
+                                            &mut m, &mut l, &mut acc, j_max)?;
+                        for _ in group {
+                            cache.consume(key);
+                        }
+                    }
+                }
+            }
+
+            // finalize wave states into the attention output buffer
+            for h in 0..hq {
+                for ql in 0..wq {
+                    let st = h * wq + ql;
+                    let qb = wave.q_start as usize + ql;
+                    let accm = MatF32::from_vec(
+                        BLOCK,
+                        dh,
+                        acc[st * BLOCK * dh..(st + 1) * BLOCK * dh].to_vec(),
+                    );
+                    let out = attn_finalize(&l[st * BLOCK..(st + 1) * BLOCK], &accm);
+                    for r in 0..BLOCK {
+                        attn[qb][r * hq * dh + h * dh..r * hq * dh + (h + 1) * dh]
+                            .copy_from_slice(out.row(r));
+                    }
+                }
+            }
+        }
+        Ok(attn)
+    }
+
+    /// One padded `attn_block_batch` artifact call over <= J jobs.
+    #[allow(clippy::too_many_arguments)]
+    fn sau_batch_call(
+        &mut self,
+        chunks: &[ChunkState],
+        q_start: u32,
+        wq: usize,
+        group: &[crate::coordinator::joblist::Job],
+        b: usize,
+        _g: usize,
+        kblk: &[i8],
+        vblk: &[i8],
+        m: &mut [f32],
+        l: &mut [f32],
+        acc: &mut [f32],
+        j_max: usize,
+    ) -> Result<()> {
+        let cfg = self.cfg.model.clone();
+        let dh = cfg.d_head;
+        let jn = group.len();
+        let mut qb_buf = vec![0i8; j_max * BLOCK * dh];
+        let mut kb_buf = vec![0i8; j_max * BLOCK * dh];
+        let mut vb_buf = vec![0i8; j_max * BLOCK * dh];
+        let mut qs_buf = vec![0f32; j_max];
+        let mut ks_buf = vec![0f32; j_max];
+        let mut vs_buf = vec![0f32; j_max];
+        let mut m_buf = vec![-1e30f32; j_max * BLOCK];
+        let mut l_buf = vec![0f32; j_max * BLOCK];
+        let mut acc_buf = vec![0f32; j_max * BLOCK * dh];
+        let mut diag_buf = vec![0f32; j_max];
+        for (j, job) in group.iter().enumerate() {
+            let st = job.head as usize * wq + (job.qblock - q_start) as usize;
+            qb_buf[j * BLOCK * dh..(j + 1) * BLOCK * dh]
+                .copy_from_slice(Self::q_slice(chunks, job.qblock as usize, job.head as usize, dh));
+            kb_buf[j * BLOCK * dh..(j + 1) * BLOCK * dh].copy_from_slice(kblk);
+            vb_buf[j * BLOCK * dh..(j + 1) * BLOCK * dh].copy_from_slice(vblk);
+            qs_buf[j] = chunks[job.qblock as usize].qs;
+            ks_buf[j] = chunks[b].ks;
+            vs_buf[j] = chunks[b].vs;
+            m_buf[j * BLOCK..(j + 1) * BLOCK].copy_from_slice(&m[st * BLOCK..(st + 1) * BLOCK]);
+            l_buf[j * BLOCK..(j + 1) * BLOCK].copy_from_slice(&l[st * BLOCK..(st + 1) * BLOCK]);
+            acc_buf[j * BLOCK * dh..(j + 1) * BLOCK * dh]
+                .copy_from_slice(&acc[st * BLOCK * dh..(st + 1) * BLOCK * dh]);
+            diag_buf[j] = if b == job.qblock as usize { 1.0 } else { 0.0 };
+        }
+        let exe = self.rt.get(cfg.name, "attn_block_batch")?;
+        let out = exe.run(&[
+            Arg::I8(&qb_buf, &[j_max, BLOCK, dh]),
+            Arg::F32(&qs_buf, &[j_max]),
+            Arg::I8(&kb_buf, &[j_max, BLOCK, dh]),
+            Arg::F32(&ks_buf, &[j_max]),
+            Arg::I8(&vb_buf, &[j_max, BLOCK, dh]),
+            Arg::F32(&vs_buf, &[j_max]),
+            Arg::F32(&m_buf, &[j_max, BLOCK]),
+            Arg::F32(&l_buf, &[j_max, BLOCK]),
+            Arg::F32(&acc_buf, &[j_max, BLOCK, dh]),
+            Arg::F32(&diag_buf, &[j_max]),
+        ])?;
+        let m_out = literal_f32(&out[0])?;
+        let l_out = literal_f32(&out[1])?;
+        let acc_out = literal_f32(&out[2])?;
+        for (j, job) in group.iter().enumerate().take(jn) {
+            let st = job.head as usize * wq + (job.qblock - q_start) as usize;
+            m[st * BLOCK..(st + 1) * BLOCK].copy_from_slice(&m_out[j * BLOCK..(j + 1) * BLOCK]);
+            l[st * BLOCK..(st + 1) * BLOCK].copy_from_slice(&l_out[j * BLOCK..(j + 1) * BLOCK]);
+            acc[st * BLOCK * dh..(st + 1) * BLOCK * dh]
+                .copy_from_slice(&acc_out[j * BLOCK * dh..(j + 1) * BLOCK * dh]);
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,214 @@
+//! Job-list bucketization — the paper's block-major SAU schedule (§IV-C).
+//!
+//! The sparse index set (per head, per query block) is transformed in
+//! linear time into a per-KV-block consumer list: each KV block (kv_head,
+//! block) carries the jobs (head, q_block) that need it. Execution then
+//! iterates KV blocks in ascending index order ("block-major"), which turns
+//! head-dependent gathers into sequential HBM bursts.
+//!
+//! Because the banked accumulator memory is bounded, query blocks are
+//! partitioned into *waves*: only `wave_qblocks` query blocks' (m, l, acc)
+//! states are live at once, and each wave streams the KV blocks it needs.
+//! Cross-wave KV reuse is what the liveness cache exploits (Fig. 7); the
+//! block-use counters span the whole schedule, so evict-on-nil only fires
+//! when a block is truly dead.
+
+use crate::flexprefill::HeadIndex;
+
+/// One SAU job: (query head, query block) consuming some KV block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Job {
+    pub head: u16,
+    pub qblock: u32,
+}
+
+/// All consumers of one KV block within one wave.
+#[derive(Clone, Debug)]
+pub struct BlockJobs {
+    pub kv_head: u16,
+    pub block: u32,
+    pub jobs: Vec<Job>,
+}
+
+/// A wave: a contiguous query-block range plus its block-major job lists.
+#[derive(Clone, Debug)]
+pub struct Wave {
+    /// Query blocks [start, end) whose accumulators are live in this wave.
+    pub q_start: u32,
+    pub q_end: u32,
+    /// KV blocks in ascending (kv_head, block) order.
+    pub blocks: Vec<BlockJobs>,
+}
+
+/// The full SAU schedule for one layer.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub waves: Vec<Wave>,
+    /// Exact remaining-use counters per cache key, over the whole schedule.
+    pub uses: Vec<(u64, u32)>,
+    pub total_jobs: usize,
+    pub n_blocks: usize,
+    pub n_kv_heads: usize,
+}
+
+/// Cache key for a KV block: (kv_head, block) packed.
+#[inline]
+pub fn cache_key(kv_head: u16, block: u32) -> u64 {
+    ((kv_head as u64) << 32) | block as u64
+}
+
+/// Build the block-major wave schedule from per-head sparse indices.
+///
+/// `indices[h].blocks[q]` lists KV blocks for query head h / query block q;
+/// `group_size` maps query head -> kv head (GQA); `wave_qblocks` bounds the
+/// live accumulator set (0 => single wave over everything).
+pub fn build_schedule(indices: &[HeadIndex], group_size: usize, wave_qblocks: usize) -> Schedule {
+    assert!(!indices.is_empty());
+    let n_blocks = indices[0].blocks.len();
+    let n_heads = indices.len();
+    let n_kv_heads = n_heads.div_ceil(group_size);
+    let wave_q = if wave_qblocks == 0 { n_blocks.max(1) } else { wave_qblocks };
+    let mut uses: std::collections::HashMap<u64, u32> = std::collections::HashMap::new();
+    let mut total_jobs = 0usize;
+    let mut waves = Vec::new();
+
+    let mut q_start = 0usize;
+    while q_start < n_blocks {
+        let q_end = (q_start + wave_q).min(n_blocks);
+        // bucketize: (kv_head, block) -> jobs, via counting into a dense map
+        let mut buckets: Vec<Vec<Job>> = vec![Vec::new(); n_kv_heads * n_blocks];
+        for (h, idx) in indices.iter().enumerate() {
+            let g = h / group_size;
+            for q in q_start..q_end {
+                for &b in &idx.blocks[q] {
+                    buckets[g * n_blocks + b as usize]
+                        .push(Job { head: h as u16, qblock: q as u32 });
+                }
+            }
+        }
+        let mut blocks = Vec::new();
+        for g in 0..n_kv_heads {
+            for b in 0..n_blocks {
+                let jobs = std::mem::take(&mut buckets[g * n_blocks + b]);
+                if jobs.is_empty() {
+                    continue;
+                }
+                total_jobs += jobs.len();
+                *uses.entry(cache_key(g as u16, b as u32)).or_insert(0) += jobs.len() as u32;
+                blocks.push(BlockJobs { kv_head: g as u16, block: b as u32, jobs });
+            }
+        }
+        waves.push(Wave { q_start: q_start as u32, q_end: q_end as u32, blocks });
+        q_start = q_end;
+    }
+
+    let mut uses: Vec<(u64, u32)> = uses.into_iter().collect();
+    uses.sort_unstable();
+    Schedule { waves, uses, total_jobs, n_blocks, n_kv_heads }
+}
+
+impl Schedule {
+    /// Invariants used by property tests: ascending block order per wave,
+    /// job conservation, use counters match job references.
+    pub fn check_invariants(&self, indices: &[HeadIndex], group_size: usize) -> Result<(), String> {
+        let mut seen = 0usize;
+        for w in &self.waves {
+            let mut prev: Option<(u16, u32)> = None;
+            for bj in &w.blocks {
+                let cur = (bj.kv_head, bj.block);
+                if let Some(p) = prev {
+                    if cur <= p {
+                        return Err(format!("blocks not ascending: {p:?} -> {cur:?}"));
+                    }
+                }
+                prev = Some(cur);
+                for j in &bj.jobs {
+                    if !(w.q_start..w.q_end).contains(&j.qblock) {
+                        return Err(format!("job {j:?} outside wave [{}, {})", w.q_start, w.q_end));
+                    }
+                    let g = j.head as usize / group_size;
+                    if g != bj.kv_head as usize {
+                        return Err(format!("job {j:?} in wrong kv-head bucket {}", bj.kv_head));
+                    }
+                    if !indices[j.head as usize].blocks[j.qblock as usize].contains(&bj.block) {
+                        return Err(format!("phantom job {j:?} for block {}", bj.block));
+                    }
+                }
+                seen += bj.jobs.len();
+            }
+        }
+        let expected: usize = indices.iter().map(|i| i.job_count()).sum();
+        if seen != expected {
+            return Err(format!("job conservation: scheduled {seen} != indexed {expected}"));
+        }
+        let use_total: u32 = self.uses.iter().map(|(_, u)| *u).sum();
+        if use_total as usize != expected {
+            return Err(format!("use counters {use_total} != jobs {expected}"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flexprefill::HeadPattern;
+
+    fn idx(blocks: Vec<Vec<u32>>) -> HeadIndex {
+        HeadIndex { pattern: HeadPattern::VerticalSlash, d_js: 0.0, blocks }
+    }
+
+    #[test]
+    fn single_wave_bucketization() {
+        // 2 heads, group_size 2 (1 kv head), 3 blocks
+        let indices = vec![
+            idx(vec![vec![0], vec![0, 1], vec![2]]),
+            idx(vec![vec![0], vec![1], vec![0, 2]]),
+        ];
+        let s = build_schedule(&indices, 2, 0);
+        assert_eq!(s.waves.len(), 1);
+        assert_eq!(s.total_jobs, 8);
+        s.check_invariants(&indices, 2).unwrap();
+        // block 0 consumed by: h0q0, h0q1, h1q0, h1q2 => 4 uses
+        let key0 = cache_key(0, 0);
+        let u0 = s.uses.iter().find(|(k, _)| *k == key0).unwrap().1;
+        assert_eq!(u0, 4);
+    }
+
+    #[test]
+    fn waves_partition_query_blocks() {
+        let indices = vec![idx(vec![vec![0], vec![0, 1], vec![0, 2], vec![3]])];
+        let s = build_schedule(&indices, 1, 2);
+        assert_eq!(s.waves.len(), 2);
+        assert_eq!((s.waves[0].q_start, s.waves[0].q_end), (0, 2));
+        assert_eq!((s.waves[1].q_start, s.waves[1].q_end), (2, 4));
+        s.check_invariants(&indices, 1).unwrap();
+        // block 0 used in both waves: remaining-use spans the schedule
+        let u0 = s.uses.iter().find(|(k, _)| *k == cache_key(0, 0)).unwrap().1;
+        assert_eq!(u0, 3);
+    }
+
+    #[test]
+    fn gqa_buckets_by_kv_head() {
+        // 4 heads, group_size 2 => 2 kv heads
+        let indices = vec![
+            idx(vec![vec![0]]),
+            idx(vec![vec![0]]),
+            idx(vec![vec![0]]),
+            idx(vec![vec![0]]),
+        ];
+        let s = build_schedule(&indices, 2, 0);
+        assert_eq!(s.waves[0].blocks.len(), 2); // one bucket per kv head
+        assert_eq!(s.waves[0].blocks[0].jobs.len(), 2);
+        assert_eq!(s.uses.len(), 2);
+        s.check_invariants(&indices, 2).unwrap();
+    }
+
+    #[test]
+    fn empty_selections_produce_no_buckets() {
+        let indices = vec![idx(vec![vec![], vec![]])];
+        let s = build_schedule(&indices, 1, 0);
+        assert_eq!(s.total_jobs, 0);
+        assert!(s.waves[0].blocks.is_empty());
+    }
+}

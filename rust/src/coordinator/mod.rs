@@ -1,0 +1,15 @@
+//! L3 coordinator: the paper's system pipeline in Rust.
+//!
+//!  * [`joblist`] — block-major SAU scheduling (bucketization, waves,
+//!    remaining-use counters) — paper §IV-C.
+//!  * [`engine`]  — chunked prefill over the AOT artifacts: KV generation,
+//!    SIGU, cached SAU, FFN, first token — paper Fig. 2.
+//!  * [`server`]  — request router + multi-worker serving loop.
+
+pub mod engine;
+pub mod joblist;
+pub mod server;
+
+pub use engine::{Engine, EngineConfig, PrefillRun};
+pub use joblist::{build_schedule, cache_key, BlockJobs, Job, Schedule, Wave};
+pub use server::{Completion, Policy, Server};

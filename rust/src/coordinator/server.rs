@@ -1,0 +1,188 @@
+//! Request router + serving loop (std threads; tokio is unavailable
+//! offline).
+//!
+//! The paper serves batch-size-1 prefill; the router's job is admission,
+//! ordering and dispatch across worker engines. Policies: FCFS and
+//! shortest-job-first (by context length — prefill cost is superlinear in
+//! context, so SJF cuts mean TTFT under contention; the serving example
+//! reports both).
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::engine::{Engine, EngineConfig, PrefillRun};
+use crate::workload::prompts::TraceRequest;
+
+/// Queueing policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    Fcfs,
+    /// Shortest (context) job first.
+    Sjf,
+}
+
+/// A completed request with serving-side timing.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub request_id: u64,
+    pub run: PrefillRun,
+    /// Queue wait (us) before an engine picked the request up.
+    pub queue_us: f64,
+    /// End-to-end latency including queueing (us).
+    pub e2e_us: f64,
+}
+
+/// The admission queue shared between router and workers.
+struct Shared {
+    queue: VecDeque<(TraceRequest, Instant)>,
+    closed: bool,
+    policy: Policy,
+}
+
+/// Multi-worker prefill server. Each worker owns an [`Engine`] (PJRT
+/// clients are not shared across threads).
+pub struct Server {
+    shared: Arc<Mutex<Shared>>,
+    workers: Vec<std::thread::JoinHandle<Result<()>>>,
+    results_rx: Receiver<Completion>,
+}
+
+impl Server {
+    /// Spawn `n_workers` engines over the same artifacts/config.
+    pub fn start(
+        artifact_dir: std::path::PathBuf,
+        cfg: EngineConfig,
+        n_workers: usize,
+        policy: Policy,
+    ) -> Result<Server> {
+        let shared = Arc::new(Mutex::new(Shared { queue: VecDeque::new(), closed: false, policy }));
+        let (tx, rx): (Sender<Completion>, Receiver<Completion>) = channel();
+        let mut workers = Vec::new();
+        for _ in 0..n_workers.max(1) {
+            let shared = Arc::clone(&shared);
+            let tx = tx.clone();
+            let dir = artifact_dir.clone();
+            let cfg = cfg.clone();
+            workers.push(std::thread::spawn(move || -> Result<()> {
+                let mut engine = Engine::new(&dir, cfg)?;
+                loop {
+                    let item = {
+                        let mut s = shared.lock().unwrap();
+                        match next_item(&mut s) {
+                            Some(it) => it,
+                            None if s.closed => return Ok(()),
+                            None => {
+                                drop(s);
+                                std::thread::sleep(std::time::Duration::from_micros(200));
+                                continue;
+                            }
+                        }
+                    };
+                    let (req, enqueued_at) = item;
+                    let queue_us = enqueued_at.elapsed().as_micros() as f64;
+                    let tokens = req.spec.generate();
+                    let run = engine.prefill(req.id, &tokens)?;
+                    let e2e_us = queue_us + run.metrics.ttft_us;
+                    let _ = tx.send(Completion { request_id: req.id, run, queue_us, e2e_us });
+                }
+            }));
+        }
+        drop(tx);
+        Ok(Server { shared, workers, results_rx: rx })
+    }
+
+    /// Enqueue a request (non-blocking).
+    pub fn submit(&self, req: TraceRequest) {
+        let mut s = self.shared.lock().unwrap();
+        s.queue.push_back((req, Instant::now()));
+    }
+
+    /// Close the queue and collect all completions.
+    pub fn drain(self) -> Result<Vec<Completion>> {
+        {
+            let mut s = self.shared.lock().unwrap();
+            s.closed = true;
+        }
+        let mut out = Vec::new();
+        for c in self.results_rx.iter() {
+            out.push(c);
+        }
+        for w in self.workers {
+            w.join().expect("worker panicked")?;
+        }
+        out.sort_by_key(|c| c.request_id);
+        Ok(out)
+    }
+}
+
+fn next_item(s: &mut Shared) -> Option<(TraceRequest, Instant)> {
+    if s.queue.is_empty() {
+        return None;
+    }
+    let idx = match s.policy {
+        Policy::Fcfs => 0,
+        Policy::Sjf => s
+            .queue
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, (r, _))| r.spec.tokens)
+            .map(|(i, _)| i)
+            .unwrap_or(0),
+    };
+    s.queue.remove(idx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::prompts::{PromptKind, PromptSpec};
+
+    fn req(id: u64, tokens: usize) -> TraceRequest {
+        TraceRequest {
+            id,
+            spec: PromptSpec { kind: PromptKind::Random, tokens, seed: id },
+            arrival_us: 0,
+        }
+    }
+
+    #[test]
+    fn sjf_picks_shortest() {
+        let mut s = Shared {
+            queue: VecDeque::new(),
+            closed: false,
+            policy: Policy::Sjf,
+        };
+        s.queue.push_back((req(1, 4096), Instant::now()));
+        s.queue.push_back((req(2, 1024), Instant::now()));
+        s.queue.push_back((req(3, 2048), Instant::now()));
+        let (r, _) = next_item(&mut s).unwrap();
+        assert_eq!(r.id, 2);
+    }
+
+    #[test]
+    fn fcfs_preserves_order() {
+        let mut s = Shared {
+            queue: VecDeque::new(),
+            closed: false,
+            policy: Policy::Fcfs,
+        };
+        s.queue.push_back((req(1, 4096), Instant::now()));
+        s.queue.push_back((req(2, 1024), Instant::now()));
+        let (r, _) = next_item(&mut s).unwrap();
+        assert_eq!(r.id, 1);
+    }
+
+    #[test]
+    fn empty_queue_returns_none() {
+        let mut s = Shared {
+            queue: VecDeque::new(),
+            closed: false,
+            policy: Policy::Fcfs,
+        };
+        assert!(next_item(&mut s).is_none());
+    }
+}

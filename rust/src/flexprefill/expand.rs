@@ -1,0 +1,177 @@
+//! Expansion of selected score indices into per-query-block KV block lists.
+//!
+//! Vertical-slash (Algorithm 1 lines 10-20): a selected *vertical* block v
+//! is attended by every query block q >= v; a selected *slash* group g
+//! (block-diagonal distance g from the diagonal) maps query block q to KV
+//! block q - g. Query-aware (lines 21-27): coverage selection over the
+//! flattened causal pooled attention map picks (q, k) pairs directly.
+
+use crate::config::FlexParams;
+use crate::tensor::ops::softmax;
+use crate::tensor::MatF32;
+
+/// Expand vertical block ids + slash group ids into per-query-block lists.
+/// `nq` = number of query blocks, `n` = number of KV blocks (nq == n for
+/// full prefill; nq < n never occurs here but is kept general).
+pub fn vertical_slash(vertical: &[u32], slash: &[u32], nq: usize, n: usize) -> Vec<Vec<u32>> {
+    let mut out: Vec<Vec<u32>> = vec![Vec::new(); nq];
+    let q_off = n - nq; // global block index of query block 0
+    for (qi, row) in out.iter_mut().enumerate() {
+        let q_abs = qi + q_off;
+        for &v in vertical {
+            if (v as usize) <= q_abs {
+                row.push(v);
+            }
+        }
+        for &g in slash {
+            let k = q_abs as i64 - g as i64;
+            if k >= 0 {
+                row.push(k as u32);
+            }
+        }
+        row.sort_unstable();
+        row.dedup();
+    }
+    out
+}
+
+/// Causal block-pooled attention map (Algorithm 1 line 22, with the causal
+/// mask the full map requires): softmax(pool(Q) pool(K)^T / sqrt d).
+pub fn pooled_attention_causal(qpool: &MatF32, kpool: &MatF32) -> MatF32 {
+    let d = qpool.cols;
+    assert_eq!(kpool.cols, d);
+    let (nq, n) = (qpool.rows, kpool.rows);
+    let q_off = n - nq;
+    let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+    let mut out = MatF32::zeros(nq, n);
+    for qi in 0..nq {
+        let qrow = qpool.row(qi);
+        let limit = qi + q_off; // causal: key block <= query block
+        let mut scores = vec![f32::NEG_INFINITY; n];
+        for (b, s) in scores.iter_mut().enumerate().take(limit + 1) {
+            let krow = kpool.row(b);
+            let mut acc = 0.0f32;
+            for (x, y) in qrow.iter().zip(krow) {
+                acc += x * y;
+            }
+            *s = acc * inv_sqrt_d;
+        }
+        let sm = softmax(&scores[..limit + 1]);
+        out.row_mut(qi)[..limit + 1].copy_from_slice(&sm);
+    }
+    out
+}
+
+/// Query-aware selection (Algorithm 1 lines 23-26): flatten the causal map,
+/// normalize, coverage-select (q, k) pairs.
+pub fn query_aware(a: &MatF32, gamma: f32) -> Vec<Vec<u32>> {
+    let (nq, n) = (a.rows, a.cols);
+    let sel = super::coverage::coverage_select(&a.data, gamma);
+    let mut out: Vec<Vec<u32>> = vec![Vec::new(); nq];
+    for &flat in &sel {
+        let q = flat as usize / n;
+        let k = (flat as usize % n) as u32;
+        out[q].push(k);
+    }
+    for row in out.iter_mut() {
+        row.sort_unstable();
+        row.dedup();
+    }
+    out
+}
+
+/// Force-include the diagonal (self) block and block 0 (attention sink),
+/// per `FlexParams` — guarantees a non-empty softmax for every query block.
+pub fn apply_forced_blocks(blocks: &mut [Vec<u32>], params: &FlexParams) {
+    let n = blocks.len();
+    for (qi, row) in blocks.iter_mut().enumerate() {
+        let q_abs = qi; // nq == n in prefill
+        if params.force_diagonal && !row.contains(&(q_abs as u32)) {
+            row.push(q_abs as u32);
+        }
+        if params.force_sink && n > 0 && !row.contains(&0) {
+            row.push(0);
+        }
+        row.sort_unstable();
+        row.dedup();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn vertical_applies_to_all_later_queries() {
+        let out = vertical_slash(&[1], &[], 4, 4);
+        assert!(out[0].is_empty());
+        assert_eq!(out[1], vec![1]);
+        assert_eq!(out[2], vec![1]);
+        assert_eq!(out[3], vec![1]);
+    }
+
+    #[test]
+    fn slash_follows_diagonal() {
+        let out = vertical_slash(&[], &[0, 2], 4, 4);
+        assert_eq!(out[0], vec![0]); // g=0 -> self; g=2 acausal for q=0,1
+        assert_eq!(out[1], vec![1]);
+        assert_eq!(out[2], vec![0, 2]);
+        assert_eq!(out[3], vec![1, 3]);
+    }
+
+    #[test]
+    fn union_dedups() {
+        let out = vertical_slash(&[2], &[0], 4, 4);
+        assert_eq!(out[2], vec![2]); // vertical 2 == slash g=0 at q=2
+    }
+
+    #[test]
+    fn pooled_attention_rows_are_distributions() {
+        let mut rng = Prng::new(1);
+        let qp = MatF32::from_fn(4, 16, |_, _| rng.normal());
+        let kp = MatF32::from_fn(4, 16, |_, _| rng.normal());
+        let a = pooled_attention_causal(&qp, &kp);
+        for q in 0..4 {
+            let s: f32 = a.row(q).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "row {q} sums {s}");
+            for k in q + 1..4 {
+                assert_eq!(a.at(q, k), 0.0, "acausal mass at ({q},{k})");
+            }
+        }
+    }
+
+    #[test]
+    fn query_aware_respects_causality() {
+        let mut rng = Prng::new(2);
+        let qp = MatF32::from_fn(6, 8, |_, _| rng.normal());
+        let kp = MatF32::from_fn(6, 8, |_, _| rng.normal());
+        let a = pooled_attention_causal(&qp, &kp);
+        let sel = query_aware(&a, 0.9);
+        assert_eq!(sel.len(), 6);
+        for (q, row) in sel.iter().enumerate() {
+            for &k in row {
+                assert!(k as usize <= q, "future block selected");
+            }
+        }
+        // gamma=0.9 must select a nonempty set overall
+        assert!(sel.iter().any(|r| !r.is_empty()));
+    }
+
+    #[test]
+    fn forced_blocks_added() {
+        let mut blocks = vec![vec![], vec![], vec![1u32]];
+        apply_forced_blocks(&mut blocks, &FlexParams::default());
+        assert_eq!(blocks[0], vec![0]);
+        assert_eq!(blocks[1], vec![0, 1]);
+        assert_eq!(blocks[2], vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn forced_blocks_respect_flags() {
+        let mut blocks = vec![vec![], vec![]];
+        let p = FlexParams { force_diagonal: false, force_sink: false, ..Default::default() };
+        apply_forced_blocks(&mut blocks, &p);
+        assert!(blocks[0].is_empty() && blocks[1].is_empty());
+    }
+}

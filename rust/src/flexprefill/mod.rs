@@ -1,0 +1,156 @@
+//! FlexPrefill (Algorithm 1) — dynamic sparse-attention index generation.
+//!
+//! This is the pure-Rust reference implementation of the algorithm the
+//! paper's SIGU executes in hardware. It is used three ways:
+//!
+//!  1. as the *functional oracle* for the PJRT-backed pipeline (the
+//!     coordinator can compute head statistics either through the AOT
+//!     `index_phase_a/b` artifacts or through [`scores`] — they agree to
+//!     f32 tolerance, asserted in integration tests);
+//!  2. as the *input generator* for the FPGA simulator and GPU cost model —
+//!     both consume the real [`SparseIndexSet`] produced here, so the
+//!     performance numbers reflect genuine dynamic sparsity;
+//!  3. as the algorithm under test for the accuracy proxy (Table III).
+//!
+//! Decomposition mirrors the SIGU datapath (paper §IV-B):
+//!   [`scores`]    — streaming score statistics (vertical / slash / pooled)
+//!   [`pattern`]   — JSD divergence evaluation + pattern decision
+//!   [`coverage`]  — streaming coverage-constrained top-k selection
+//!   [`expand`]    — block-set expansion into per-query-block index lists
+
+pub mod coverage;
+pub mod expand;
+pub mod pattern;
+pub mod scores;
+
+use crate::config::FlexParams;
+use crate::tensor::MatF32;
+
+/// Which sparsity pattern a head follows (Algorithm 1 lines 5-9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HeadPattern {
+    QueryAware,
+    VerticalSlash,
+}
+
+/// Sparse index set for one attention head: for each query block, the
+/// ascending list of KV block indices that participate in attention.
+#[derive(Clone, Debug)]
+pub struct HeadIndex {
+    pub pattern: HeadPattern,
+    /// sqrt(JSD) divergence that drove the decision.
+    pub d_js: f32,
+    /// `blocks[q]` = sorted, deduplicated KV block ids for query block q.
+    pub blocks: Vec<Vec<u32>>,
+}
+
+impl HeadIndex {
+    /// Total number of (query-block, kv-block) jobs.
+    pub fn job_count(&self) -> usize {
+        self.blocks.iter().map(|b| b.len()).sum()
+    }
+
+    /// Fraction of the causal attention matrix that is computed.
+    pub fn density(&self) -> f64 {
+        let n = self.blocks.len();
+        let causal_total: usize = n * (n + 1) / 2;
+        if causal_total == 0 {
+            return 0.0;
+        }
+        self.job_count() as f64 / causal_total as f64
+    }
+
+    /// Invariant check: every selected block is causal-legal and sorted.
+    pub fn validate(&self) -> Result<(), String> {
+        for (q, blocks) in self.blocks.iter().enumerate() {
+            let mut prev: Option<u32> = None;
+            for &b in blocks {
+                if b as usize > q {
+                    return Err(format!("q-block {q} selects future kv-block {b}"));
+                }
+                if let Some(p) = prev {
+                    if b <= p {
+                        return Err(format!("q-block {q} unsorted/dup at {b}"));
+                    }
+                }
+                prev = Some(b);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-head statistics produced by the streaming SIGU score pipeline —
+/// everything Algorithm 1 needs after the Key stream has been consumed.
+#[derive(Clone, Debug)]
+pub struct HeadStats {
+    /// vertical[b]: probability mass of key block b under the last query
+    /// block (length N).
+    pub vertical: Vec<f32>,
+    /// slash[g]: probability mass of block-diagonal group g (g = 0 is the
+    /// diagonal; length N).
+    pub slash: Vec<f32>,
+    /// Block-pooled *estimated* attention: softmax(pool(Qhat) pool(K)^T/sqrt d)
+    pub a_bar: Vec<f32>,
+    /// Block-pooled *true* attention: vertical / BLOCK_ROWS.
+    pub a_hat: Vec<f32>,
+    /// Pooled query vectors for ALL query blocks [Nq, d] (query-aware path).
+    pub qpool_all: MatF32,
+    /// Pooled key vectors [N, d].
+    pub kpool: MatF32,
+}
+
+/// Run Algorithm 1 for one head given its streaming statistics.
+pub fn generate_head_index(stats: &HeadStats, params: &FlexParams) -> HeadIndex {
+    let n = stats.vertical.len();
+    let nq = stats.qpool_all.rows;
+    let d_js = pattern::divergence(&stats.a_bar, &stats.a_hat);
+    let pattern = pattern::decide(d_js, params.tau);
+    let mut blocks = match pattern {
+        HeadPattern::VerticalSlash => {
+            let sv = coverage::coverage_select(&stats.vertical, params.gamma);
+            let ss = coverage::coverage_select(&stats.slash, params.gamma);
+            expand::vertical_slash(&sv, &ss, nq, n)
+        }
+        HeadPattern::QueryAware => {
+            let a = expand::pooled_attention_causal(&stats.qpool_all, &stats.kpool);
+            expand::query_aware(&a, params.gamma)
+        }
+    };
+    expand::apply_forced_blocks(&mut blocks, params);
+    HeadIndex { pattern, d_js, blocks }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_index(blocks: Vec<Vec<u32>>) -> HeadIndex {
+        HeadIndex { pattern: HeadPattern::VerticalSlash, d_js: 0.0, blocks }
+    }
+
+    #[test]
+    fn density_full_causal_is_one() {
+        let idx = mk_index(vec![vec![0], vec![0, 1], vec![0, 1, 2]]);
+        assert!((idx.density() - 1.0).abs() < 1e-12);
+        assert_eq!(idx.job_count(), 6);
+    }
+
+    #[test]
+    fn validate_rejects_future_blocks() {
+        let idx = mk_index(vec![vec![1]]);
+        assert!(idx.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_unsorted() {
+        let idx = mk_index(vec![vec![0], vec![1, 0]]);
+        assert!(idx.validate().is_err());
+    }
+
+    #[test]
+    fn validate_accepts_legal() {
+        let idx = mk_index(vec![vec![0], vec![0, 1], vec![0, 2]]);
+        assert!(idx.validate().is_ok());
+    }
+}

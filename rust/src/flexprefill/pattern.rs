@@ -1,0 +1,60 @@
+//! Pattern decision (Algorithm 1 lines 2-9): JSD between the estimated and
+//! true block-pooled attention distributions, thresholded at tau.
+//!
+//! In hardware this is the SIGU's Divergence Evaluation module (LUT
+//! arithmetic + comparators); here it is exact f32 math matching
+//! `ref.jsd_ref`.
+
+use super::HeadPattern;
+use crate::tensor::ops::jsd;
+
+/// d_JS = sqrt(JSD(a_bar || a_hat)) (Algorithm 1 line 4).
+pub fn divergence(a_bar: &[f32], a_hat: &[f32]) -> f32 {
+    jsd(a_bar, a_hat).max(0.0).sqrt()
+}
+
+/// Line 5-9: low divergence => the cheap pooled estimate is faithful =>
+/// query-aware pattern; high divergence => conservative vertical-slash.
+pub fn decide(d_js: f32, tau: f32) -> HeadPattern {
+    if d_js < tau {
+        HeadPattern::QueryAware
+    } else {
+        HeadPattern::VerticalSlash
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_distributions_are_query_aware() {
+        let p = vec![0.25f32; 4];
+        let d = divergence(&p, &p);
+        assert!(d < 1e-3);
+        assert_eq!(decide(d, 0.1), HeadPattern::QueryAware);
+    }
+
+    #[test]
+    fn disjoint_distributions_are_vertical_slash() {
+        let p = [1.0, 0.0, 0.0, 0.0];
+        let q = [0.0, 0.0, 0.0, 1.0];
+        let d = divergence(&p, &q);
+        assert!(d > 0.5);
+        assert_eq!(decide(d, 0.1), HeadPattern::VerticalSlash);
+    }
+
+    #[test]
+    fn divergence_bounded_by_sqrt_ln2() {
+        let p = [1.0, 0.0];
+        let q = [0.0, 1.0];
+        let d = divergence(&p, &q);
+        assert!(d <= (std::f32::consts::LN_2).sqrt() + 1e-5);
+    }
+
+    #[test]
+    fn threshold_boundary() {
+        assert_eq!(decide(0.0999, 0.1), HeadPattern::QueryAware);
+        assert_eq!(decide(0.1, 0.1), HeadPattern::VerticalSlash);
+    }
+}

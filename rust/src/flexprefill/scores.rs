@@ -1,0 +1,273 @@
+//! Streaming score statistics — the Rust mirror of the SIGU pipeline and of
+//! the `index_phase_a` / `index_phase_b` Pallas kernels.
+//!
+//! Phase A streams K blocks in ascending order keeping only per-row online
+//! softmax state (m, l); phase B re-streams them and emits three scalars per
+//! block (vsum / slo / sup). The simulator models the single-fetch hardware
+//! realization (deferred-rescale buffers); numerically the two are
+//! identical — see DESIGN.md.
+
+
+use crate::quant::int8_matmul_bt;
+use crate::tensor::{MatF32, MatI8};
+
+/// Per-row online softmax state for the last query block.
+#[derive(Clone, Debug)]
+pub struct StreamState {
+    pub m: Vec<f32>,
+    pub l: Vec<f32>,
+}
+
+impl StreamState {
+    pub fn new(rows: usize) -> Self {
+        StreamState { m: vec![-1e30; rows], l: vec![0.0; rows] }
+    }
+}
+
+/// Compute the dequantized score tile s = (Qhat @ Kblk^T) * qs * ks / sqrt(d).
+/// Qhat: [B, d] i8; kblk: [B, d] i8 (rows are key tokens).
+fn score_tile(qhat: &MatI8, qs: f32, kblk: &MatI8, ks: f32) -> MatF32 {
+    let acc = int8_matmul_bt(qhat, kblk);
+    let scale = qs * ks / (qhat.cols as f32).sqrt();
+    MatF32 {
+        rows: qhat.rows,
+        cols: kblk.rows,
+        data: acc.iter().map(|&v| v as f32 * scale).collect(),
+    }
+}
+
+/// Phase A: fold one K block into the online (m, l) state.
+/// Matches `ref.index_phase_a_ref` / the `index_phase_a` artifact.
+pub fn phase_a(qhat: &MatI8, qs: f32, kblk: &MatI8, ks: f32, st: &mut StreamState) {
+    let s = score_tile(qhat, qs, kblk, ks);
+    for r in 0..s.rows {
+        let row = s.row(r);
+        let rmax = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let m_new = st.m[r].max(rmax);
+        let mut sum = 0.0f32;
+        for &v in row {
+            sum += (v - m_new).exp();
+        }
+        st.l[r] = st.l[r] * (st.m[r] - m_new).exp() + sum;
+        st.m[r] = m_new;
+    }
+}
+
+/// Phase B output for one block.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BlockStats {
+    /// Total probability mass in this key block (vertical contribution).
+    pub vsum: f32,
+    /// Mass with intra-tile offset i-j >= 0 (slash group N-1-b).
+    pub slo: f32,
+    /// Mass with intra-tile offset i-j < 0 (slash group N-2-b).
+    pub sup: f32,
+}
+
+/// Phase B: normalized per-block statistics given the final (M, L).
+/// Matches `ref.index_phase_b_ref` / the `index_phase_b` artifact.
+pub fn phase_b(qhat: &MatI8, qs: f32, kblk: &MatI8, ks: f32, st: &StreamState) -> BlockStats {
+    let s = score_tile(qhat, qs, kblk, ks);
+    let mut vsum = 0.0f32;
+    let mut slo = 0.0f32;
+    for r in 0..s.rows {
+        let inv_l = 1.0 / st.l[r].max(1e-8);
+        let m = st.m[r];
+        for (c, &v) in s.row(r).iter().enumerate() {
+            let p = (v - m).exp() * inv_l;
+            vsum += p;
+            if r >= c {
+                slo += p;
+            }
+        }
+    }
+    BlockStats { vsum, slo, sup: vsum - slo }
+}
+
+/// Generic streaming statistics over any score-tile provider: two passes,
+/// identical math to phase A + phase B. `tile(b)` must return the
+/// dequantized score tile for key block b ([rows, BLOCK] f32).
+///
+/// Slash mapping (see flex_index.py): block b's lower-triangle mass lands
+/// in diagonal group N-1-b and its upper-triangle mass in group N-2-b
+/// (dropped for b = N-1, where those offsets are acausal).
+pub fn stream_scores_generic(
+    n: usize,
+    rows: usize,
+    mut tile: impl FnMut(usize) -> MatF32,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut st = StreamState::new(rows);
+    for b in 0..n {
+        let s = tile(b);
+        for r in 0..s.rows {
+            let row = s.row(r);
+            let rmax = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let m_new = st.m[r].max(rmax);
+            let mut sum = 0.0f32;
+            for &v in row {
+                sum += (v - m_new).exp();
+            }
+            st.l[r] = st.l[r] * (st.m[r] - m_new).exp() + sum;
+            st.m[r] = m_new;
+        }
+    }
+    let mut vertical = vec![0.0f32; n];
+    let mut slash = vec![0.0f32; n];
+    for b in 0..n {
+        let s = tile(b);
+        let mut vsum = 0.0f32;
+        let mut slo = 0.0f32;
+        for r in 0..s.rows {
+            let inv_l = 1.0 / st.l[r].max(1e-8);
+            let m = st.m[r];
+            for (c, &v) in s.row(r).iter().enumerate() {
+                let p = (v - m).exp() * inv_l;
+                vsum += p;
+                if r >= c {
+                    slo += p;
+                }
+            }
+        }
+        vertical[b] = vsum;
+        slash[n - 1 - b] += slo;
+        if b + 2 <= n {
+            slash[n - 2 - b] += vsum - slo;
+        }
+    }
+    let a_hat: Vec<f32> = vertical.iter().map(|v| v / rows as f32).collect();
+    (vertical, slash, a_hat)
+}
+
+/// Full streaming statistics for one head (W8A8 tiles): vertical[N],
+/// slash[N], a_hat[N]. `kblocks` are (quantized K block, scale) in
+/// ascending block order — exactly the stream the paper's Key Block Fetch
+/// Unit produces. Matches phase_a + phase_b composition (unit-tested).
+pub fn stream_head_scores(
+    qhat: &MatI8,
+    qs: f32,
+    kblocks: &[(MatI8, f32)],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    stream_scores_generic(kblocks.len(), qhat.rows, |b| {
+        score_tile(qhat, qs, &kblocks[b].0, kblocks[b].1)
+    })
+}
+
+/// f32 (BF16-like) variant for the accuracy harness: tiles computed in
+/// full precision from unquantized Q-hat and K blocks.
+pub fn stream_head_scores_f32(qhat: &MatF32, kblocks: &[MatF32]) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let inv_sqrt_d = 1.0 / (qhat.cols as f32).sqrt();
+    stream_scores_generic(kblocks.len(), qhat.rows, |b| {
+        let kb = &kblocks[b];
+        let mut t = crate::tensor::ops::matmul_bt(qhat, kb);
+        for v in t.data.iter_mut() {
+            *v *= inv_sqrt_d;
+        }
+        t
+    })
+}
+
+/// Estimated block-pooled attention a_bar = softmax(pool(Qhat).pool(K)^T/sqrt d)
+/// (Algorithm 1 line 2). `qpool_hat` is the pooled last query block [d];
+/// `kpool` is [N, d].
+pub fn pooled_estimate(qpool_hat: &[f32], kpool: &MatF32) -> Vec<f32> {
+    let d = qpool_hat.len();
+    assert_eq!(kpool.cols, d);
+    let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+    let scores: Vec<f32> = (0..kpool.rows)
+        .map(|b| {
+            let row = kpool.row(b);
+            let mut s = 0.0f32;
+            for (x, y) in qpool_hat.iter().zip(row) {
+                s += x * y;
+            }
+            s * inv_sqrt_d
+        })
+        .collect();
+    crate::tensor::ops::softmax(&scores)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::BLOCK;
+    use crate::util::prng::Prng;
+
+    fn rand_blk(rng: &mut Prng, rows: usize, d: usize) -> MatI8 {
+        MatI8 { rows, cols: d, data: (0..rows * d).map(|_| rng.i8_sym()).collect() }
+    }
+
+    fn setup(n: usize, seed: u64) -> (MatI8, f32, Vec<(MatI8, f32)>) {
+        let mut rng = Prng::new(seed);
+        let qhat = rand_blk(&mut rng, BLOCK, 64);
+        let kblocks: Vec<(MatI8, f32)> =
+            (0..n).map(|_| (rand_blk(&mut rng, BLOCK, 64), 0.02)).collect();
+        (qhat, 0.02, kblocks)
+    }
+
+    #[test]
+    fn vertical_mass_sums_to_rows() {
+        let (qhat, qs, kblocks) = setup(4, 1);
+        let (vertical, _, a_hat) = stream_head_scores(&qhat, qs, &kblocks);
+        let total: f32 = vertical.iter().sum();
+        assert!((total - BLOCK as f32).abs() < 1e-2, "total {total}");
+        let ah: f32 = a_hat.iter().sum();
+        assert!((ah - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn slash_mass_conserved_minus_dropped_group() {
+        let (qhat, qs, kblocks) = setup(3, 2);
+        let n = kblocks.len();
+        let (_, slash, _) = stream_head_scores(&qhat, qs, &kblocks);
+        // all mass except the acausal sup of block N-1 is distributed
+        let mut st = StreamState::new(BLOCK);
+        for (kb, ks) in &kblocks {
+            phase_a(&qhat, qs, kb, *ks, &mut st);
+        }
+        let dropped = phase_b(&qhat, qs, &kblocks[n - 1].0, kblocks[n - 1].1, &st).sup;
+        let slash_total: f32 = slash.iter().sum();
+        assert!(((slash_total + dropped) - BLOCK as f32).abs() < 1e-2);
+    }
+
+    #[test]
+    fn phase_b_consistency_vsum_decomposes() {
+        let (qhat, qs, kblocks) = setup(2, 3);
+        let mut st = StreamState::new(BLOCK);
+        for (kb, ks) in &kblocks {
+            phase_a(&qhat, qs, kb, *ks, &mut st);
+        }
+        for (kb, ks) in &kblocks {
+            let s = phase_b(&qhat, qs, kb, *ks, &st);
+            assert!((s.vsum - (s.slo + s.sup)).abs() < 1e-4);
+            assert!(s.vsum >= 0.0 && s.slo >= 0.0);
+        }
+    }
+
+    #[test]
+    fn online_state_matches_two_block_direct() {
+        // direct softmax over concatenated blocks == streamed (m, l)
+        let (qhat, qs, kblocks) = setup(2, 4);
+        let mut st = StreamState::new(BLOCK);
+        for (kb, ks) in &kblocks {
+            phase_a(&qhat, qs, kb, *ks, &mut st);
+        }
+        // direct: row 0 denominator
+        let t0 = score_tile(&qhat, qs, &kblocks[0].0, kblocks[0].1);
+        let t1 = score_tile(&qhat, qs, &kblocks[1].0, kblocks[1].1);
+        let row: Vec<f32> = t0.row(0).iter().chain(t1.row(0)).cloned().collect();
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let l: f32 = row.iter().map(|v| (v - mx).exp()).sum();
+        assert!((st.m[0] - mx).abs() < 1e-6);
+        assert!((st.l[0] - l).abs() / l < 1e-5);
+    }
+
+    #[test]
+    fn pooled_estimate_is_distribution() {
+        let mut rng = Prng::new(5);
+        let qp: Vec<f32> = (0..64).map(|_| rng.normal()).collect();
+        let kp = MatF32::from_fn(6, 64, |_, _| rng.normal());
+        let a = pooled_estimate(&qp, &kp);
+        let s: f32 = a.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+    }
+}

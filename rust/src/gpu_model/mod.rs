@@ -1,0 +1,200 @@
+//! A5000 GPU cost model for the Flex-Prefill baseline (Figures 5-6).
+//!
+//! Models the INT8 Flex-Prefill implementation the paper measures against:
+//! dense GEMMs on tensor cores (dequantized to 16-bit per the paper), index
+//! generation with its large intermediate tensors and the CPU-offloaded
+//! selection step the paper describes, gather-bound sparse attention, and
+//! per-layer framework overhead at batch size 1.
+//!
+//! Derating constants are calibrated so the model reproduces the paper's
+//! *measured ratios* (TTFT speedup 1.2-2.5x growing with context, 4.5x
+//! Token/Joule) — the paper reports no absolute baselines to pin against,
+//! and its Table-I peak numbers alone would not produce its Figure-5 claim
+//! (see EXPERIMENTS.md "Fidelity notes"); the factors encode the paper's
+//! own qualitative explanation (memory-bound index generation, irregular
+//! KV gathers, CPU offload) as explicit, auditable parameters.
+
+use crate::config::{GpuConfig, ModelConfig, BLOCK};
+use crate::flexprefill::{HeadIndex, HeadPattern};
+use crate::sim::hbm::Traffic;
+
+/// Tensor-core efficiency of the dense GEMM path at batch 1 with the
+/// dequantize-to-16-bit INT8 flow (extra dequant kernels, no persistent
+/// weights, PyTorch dispatch). CALIBRATION NOTE: reproducing the paper's
+/// measured 1.2-2.5x TTFT ratios against its own Table-I peak numbers
+/// (222 GPU TOPS vs 5.4 FPGA TOPS) requires the baseline to operate at a
+/// few percent of peak, degrading further with context (the paper's
+/// "memory-bound" + 24 GB memory-pressure argument). We encode that as an
+/// explicit base efficiency with a memory-pressure knee — see
+/// EXPERIMENTS.md "Fidelity notes" for the full discussion.
+pub const DENSE_EFF_BASE: f64 = 0.034;
+/// Context length (tokens) at which memory pressure halves the dense
+/// efficiency (activation working set vs 24 GB board memory).
+pub const MEM_PRESSURE_KNEE_TOKENS: f64 = 49152.0;
+
+/// Context-dependent dense efficiency.
+pub fn dense_eff(s: usize) -> f64 {
+    DENSE_EFF_BASE / (1.0 + s as f64 / MEM_PRESSURE_KNEE_TOKENS)
+}
+/// CPU selection throughput (sorted keys/s) for the offloaded index
+/// selection (argsort + prefix scan on one core, per the paper's
+/// description of Flex-Prefill's implementation).
+pub const CPU_SORT_KEYS_PER_S: f64 = 2.5e7;
+/// Per-kernel launch + sync overhead (us) for the many small sparse
+/// attention / scoring kernels at batch 1.
+pub const LAUNCH_US: f64 = 8.0;
+/// Per-layer framework overhead (us): dispatch, dynamic control flow,
+/// D2H/H2D sync points of the dynamic sparsity path.
+pub const FRAMEWORK_LAYER_US: f64 = 1800.0;
+/// Jobs per fused sparse-attention kernel launch.
+pub const JOBS_PER_LAUNCH: f64 = 64.0;
+
+/// GPU-side phase breakdown (ms).
+#[derive(Clone, Debug, Default)]
+pub struct GpuReport {
+    pub ttft_ms: f64,
+    pub energy_j: f64,
+    pub t_linear_ms: f64,
+    pub t_index_gpu_ms: f64,
+    pub t_index_cpu_ms: f64,
+    pub t_attn_ms: f64,
+    pub t_framework_ms: f64,
+    pub traffic: Traffic,
+}
+
+impl GpuReport {
+    pub fn tokens_per_joule(&self) -> f64 {
+        if self.energy_j <= 0.0 {
+            return 0.0;
+        }
+        1.0 / self.energy_j
+    }
+}
+
+/// Dense GEMM time (ms) on tensor cores with the derated efficiency.
+fn gemm_ms(g: &GpuConfig, s_ctx: usize, m: usize, k: usize, n: usize) -> f64 {
+    let flops = 2.0 * m as f64 * k as f64 * n as f64;
+    flops / (g.fp16_tflops * 1e12 * dense_eff(s_ctx)) * 1e3
+}
+
+/// Cost the Flex-Prefill baseline for one prefill over real index sets.
+pub fn simulate_gpu_prefill(
+    g: &GpuConfig,
+    cfg: &ModelConfig,
+    s: usize,
+    index_sets: &[Vec<HeadIndex>],
+) -> GpuReport {
+    assert!(s % BLOCK == 0 && !index_sets.is_empty());
+    let n = s / BLOCK;
+    let d = cfg.d_model;
+    let mut rep = GpuReport::default();
+    let bw = g.mem_bw_gbs * 1e9; // bytes/s
+
+    for li in 0..cfg.n_layers {
+        let indices = &index_sets[li % index_sets.len()];
+
+        // ---- dense linear path: QKV, o_proj, FFN (fp16 after dequant) ----
+        let lin = gemm_ms(g, s, s, d, cfg.q_dim() + 2 * cfg.kv_dim())
+            + gemm_ms(g, s, s, cfg.q_dim(), d)
+            + gemm_ms(g, s, s, d, 2 * cfg.d_ffn)
+            + gemm_ms(g, s, s, cfg.d_ffn, d);
+        rep.t_linear_ms += lin;
+
+        // ---- index generation, GPU part: score tensors + pooled maps ----
+        // the naive implementation materializes Qhat K^T [128, S] fp16 per
+        // head plus pooled maps; traffic = K read + intermediate write+read
+        let per_head_bytes = (s * cfg.d_head * 2          // K (fp16)
+            + 3 * BLOCK * s * 2) as f64; //  scores write + read + softmax
+        let idx_gpu_s = cfg.n_heads as f64 * per_head_bytes / (bw * 0.7);
+        rep.t_index_gpu_ms += idx_gpu_s * 1e3;
+        rep.traffic.hbm_read_bytes += cfg.n_heads as f64 * per_head_bytes;
+
+        // ---- index selection, CPU offload ----
+        // vertical-slash: 2 sorts of S keys; query-aware: sort of N*N keys;
+        // plus PCIe transfer of the score tensors
+        let mut cpu_keys = 0.0;
+        let mut pcie_bytes = 0.0;
+        for idx in indices {
+            match idx.pattern {
+                HeadPattern::VerticalSlash => {
+                    cpu_keys += 2.0 * s as f64;
+                    pcie_bytes += 2.0 * s as f64 * 4.0;
+                }
+                HeadPattern::QueryAware => {
+                    cpu_keys += (n * n) as f64;
+                    pcie_bytes += (n * n) as f64 * 4.0;
+                }
+            }
+        }
+        rep.t_index_cpu_ms +=
+            (cpu_keys / CPU_SORT_KEYS_PER_S + pcie_bytes / (g.pcie_gbs * 1e9)) * 1e3;
+
+        // ---- sparse attention: gather-bound KV access + small kernels ----
+        let jobs: f64 = indices.iter().map(|i| i.job_count() as f64).sum();
+        // KV blocks are fp16 on the GPU (dequantized): 2 * 128 * dh * 2 B;
+        // GQA reuse is imperfect (the paper's challenge 2c): each q head
+        // gathers independently.
+        let gather_bytes = jobs * (2 * BLOCK * cfg.d_head * 2) as f64;
+        let t_gather = gather_bytes / (bw * g.gather_bw_eff);
+        let flops = jobs * (4.0 * (BLOCK * BLOCK * cfg.d_head) as f64);
+        let t_compute = flops / (g.fp16_tflops * 1e12 * g.sparse_eff);
+        let t_launch = (jobs / JOBS_PER_LAUNCH).ceil() * LAUNCH_US * 1e-6;
+        rep.t_attn_ms += (t_gather.max(t_compute) + t_launch) * 1e3;
+        rep.traffic.hbm_read_bytes += gather_bytes;
+
+        rep.t_framework_ms += FRAMEWORK_LAYER_US / 1e3;
+    }
+
+    rep.ttft_ms = rep.t_linear_ms
+        + rep.t_index_gpu_ms
+        + rep.t_index_cpu_ms
+        + rep.t_attn_ms
+        + rep.t_framework_ms;
+
+    // energy: nvidia-smi board power — compute phases near TDP, memory
+    // phases lower, CPU-offload phases at GPU idle
+    let e = (rep.t_linear_ms + rep.t_attn_ms) * 1e-3 * (0.55 * g.tdp_w)
+        + rep.t_index_gpu_ms * 1e-3 * (0.45 * g.tdp_w)
+        + (rep.t_index_cpu_ms + rep.t_framework_ms) * 1e-3 * g.idle_power_w * 1.5;
+    rep.energy_j = e;
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{a5000, FlexParams, LLAMA32_3B};
+    use crate::sim::synth::{synth_model_indices, HeadMix};
+
+    fn idx(n: usize, heads: usize, seed: u64) -> Vec<Vec<HeadIndex>> {
+        synth_model_indices(heads, 2, n, 32, &HeadMix::default(), &FlexParams::default(), seed)
+    }
+
+    #[test]
+    fn ttft_grows_superlinearly_with_context() {
+        let g = a5000();
+        let cfg = &LLAMA32_3B;
+        let a = simulate_gpu_prefill(&g, cfg, 4096, &idx(32, cfg.n_heads, 1));
+        let b = simulate_gpu_prefill(&g, cfg, 32768, &idx(256, cfg.n_heads, 1));
+        assert!(b.ttft_ms > 8.0 * a.ttft_ms, "{} vs {}", a.ttft_ms, b.ttft_ms);
+    }
+
+    #[test]
+    fn cpu_offload_contributes() {
+        let g = a5000();
+        let cfg = &LLAMA32_3B;
+        let r = simulate_gpu_prefill(&g, cfg, 16384, &idx(128, cfg.n_heads, 2));
+        assert!(r.t_index_cpu_ms > 0.0);
+        assert!(r.energy_j > 0.0);
+    }
+
+    #[test]
+    fn phases_sum_to_ttft() {
+        let g = a5000();
+        let cfg = &LLAMA32_3B;
+        let r = simulate_gpu_prefill(&g, cfg, 8192, &idx(64, cfg.n_heads, 3));
+        let sum = r.t_linear_ms + r.t_index_gpu_ms + r.t_index_cpu_ms + r.t_attn_ms
+            + r.t_framework_ms;
+        assert!((sum - r.ttft_ms).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,370 @@
+//! Liveness-driven dual-tier KV block cache (paper §IV-C).
+//!
+//! Residency policy:
+//!  * **exact remaining-use counters** — computed from the job list during
+//!    bucketization, each consumption decrements; a counter reaching zero
+//!    proves the block is dead for the rest of the sparse-attention step
+//!    (**evict-on-nil** — the only eviction; a live block is never evicted);
+//!  * **dual tiers** — blocks whose remaining use exceeds `t_hot` (50% of
+//!    the query blocks in the paper) are admitted to the Hot tier, others
+//!    to the Cold tier, preventing moderately-reused blocks from thrashing
+//!    heavily-reused ones;
+//!  * **bypass** — if the target tier has no free or dead slot, the block
+//!    bypasses the cache entirely (it is still consumed, just not retained).
+//!
+//! The same structure is used functionally by the coordinator (producing
+//! the hit/miss trace) and by the cycle simulator (timing each outcome).
+//! Keys are opaque u64s; the coordinator packs (kv_head, block).
+
+pub mod prefetch;
+
+pub use prefetch::{Decision, Prefetcher};
+
+use std::collections::HashMap;
+
+/// Which tier a resident block occupies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    Hot,
+    Cold,
+}
+
+/// Aggregate cache statistics.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub lookups: u64,
+    pub hits_hot: u64,
+    pub hits_cold: u64,
+    pub misses: u64,
+    pub admissions_hot: u64,
+    pub admissions_cold: u64,
+    pub bypasses: u64,
+    pub evictions_nil: u64,
+}
+
+impl CacheStats {
+    pub fn hits(&self) -> u64 {
+        self.hits_hot + self.hits_cold
+    }
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            return 0.0;
+        }
+        self.hits() as f64 / self.lookups as f64
+    }
+}
+
+/// The result of a lookup.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Access {
+    Hit(Tier),
+    Miss,
+}
+
+/// Liveness-driven dual-tier cache over fixed-size KV blocks.
+#[derive(Clone, Debug)]
+pub struct LivenessCache {
+    cap_hot: usize,
+    cap_cold: usize,
+    t_hot: u32,
+    resident: HashMap<u64, Tier>,
+    hot_used: usize,
+    cold_used: usize,
+    remaining: HashMap<u64, u32>,
+    stats: CacheStats,
+}
+
+impl LivenessCache {
+    /// `capacity_blocks` total block slots, split by `hot_fraction`;
+    /// `t_hot` is the remaining-use admission threshold for the hot tier.
+    pub fn new(capacity_blocks: usize, hot_fraction: f64, t_hot: u32) -> Self {
+        let cap_hot = (capacity_blocks as f64 * hot_fraction).round() as usize;
+        LivenessCache {
+            cap_hot,
+            cap_cold: capacity_blocks - cap_hot,
+            t_hot,
+            resident: HashMap::new(),
+            hot_used: 0,
+            cold_used: 0,
+            remaining: HashMap::new(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Disabled cache (Fig. 7 cacheless ablation).
+    pub fn disabled() -> Self {
+        Self::new(0, 0.5, 0)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap_hot + self.cap_cold
+    }
+
+    /// Install the exact remaining-use counters for the upcoming sparse
+    /// attention step (from job-list bucketization). Clears residency.
+    pub fn init_uses(&mut self, uses: impl IntoIterator<Item = (u64, u32)>) {
+        self.resident.clear();
+        self.hot_used = 0;
+        self.cold_used = 0;
+        self.remaining = uses.into_iter().collect();
+    }
+
+    pub fn remaining_uses(&self, key: u64) -> u32 {
+        self.remaining.get(&key).copied().unwrap_or(0)
+    }
+
+    pub fn is_resident(&self, key: u64) -> bool {
+        self.resident.contains_key(&key)
+    }
+
+    /// Look a block up, recording hit/miss. A miss does not admit — call
+    /// [`admit`] after fetching.
+    pub fn lookup(&mut self, key: u64) -> Access {
+        self.stats.lookups += 1;
+        match self.resident.get(&key) {
+            Some(Tier::Hot) => {
+                self.stats.hits_hot += 1;
+                Access::Hit(Tier::Hot)
+            }
+            Some(Tier::Cold) => {
+                self.stats.hits_cold += 1;
+                Access::Hit(Tier::Cold)
+            }
+            None => {
+                self.stats.misses += 1;
+                Access::Miss
+            }
+        }
+    }
+
+    fn tier_for(&self, key: u64) -> Tier {
+        if self.remaining_uses(key) > self.t_hot {
+            Tier::Hot
+        } else {
+            Tier::Cold
+        }
+    }
+
+    fn free_slots(&self, tier: Tier) -> usize {
+        match tier {
+            Tier::Hot => self.cap_hot - self.hot_used,
+            Tier::Cold => self.cap_cold - self.cold_used,
+        }
+    }
+
+    /// Try to retain a freshly fetched block. Returns the tier on success,
+    /// None on bypass. Never evicts a live block.
+    pub fn admit(&mut self, key: u64) -> Option<Tier> {
+        if self.is_resident(key) {
+            return self.resident.get(&key).copied();
+        }
+        if self.remaining_uses(key) == 0 {
+            // dead on arrival — retaining it is pure waste
+            self.stats.bypasses += 1;
+            return None;
+        }
+        let tier = self.tier_for(key);
+        if self.free_slots(tier) == 0 {
+            // try the other tier before bypassing (cold-spill), matching the
+            // paper's "placed in the cold region or bypass entirely"
+            let alt = match tier {
+                Tier::Hot => Tier::Cold,
+                Tier::Cold => return self.bypass(),
+            };
+            if self.free_slots(alt) == 0 {
+                return self.bypass();
+            }
+            self.insert(key, alt);
+            return Some(alt);
+        }
+        self.insert(key, tier);
+        Some(tier)
+    }
+
+    fn bypass(&mut self) -> Option<Tier> {
+        self.stats.bypasses += 1;
+        None
+    }
+
+    fn insert(&mut self, key: u64, tier: Tier) {
+        match tier {
+            Tier::Hot => {
+                self.hot_used += 1;
+                self.stats.admissions_hot += 1;
+            }
+            Tier::Cold => {
+                self.cold_used += 1;
+                self.stats.admissions_cold += 1;
+            }
+        }
+        self.resident.insert(key, tier);
+    }
+
+    /// Record one consumption of the block (one SAU job). When the counter
+    /// reaches zero the block is provably dead and its slot is freed
+    /// (evict-on-nil).
+    pub fn consume(&mut self, key: u64) {
+        let rem = self.remaining.entry(key).or_insert(0);
+        debug_assert!(*rem > 0, "consuming block {key} with zero remaining uses");
+        *rem = rem.saturating_sub(1);
+        if *rem == 0 {
+            if let Some(tier) = self.resident.remove(&key) {
+                match tier {
+                    Tier::Hot => self.hot_used -= 1,
+                    Tier::Cold => self.cold_used -= 1,
+                }
+                self.stats.evictions_nil += 1;
+            }
+        }
+    }
+
+    /// True if a prefetch of `key` could be retained right now (used by the
+    /// lookahead FSM — prefetches are issued only when space is available,
+    /// so live blocks are never displaced).
+    pub fn has_space_for(&self, key: u64) -> bool {
+        if self.is_resident(key) {
+            return false; // already here; no fetch needed
+        }
+        if self.remaining_uses(key) == 0 {
+            return false;
+        }
+        let tier = self.tier_for(key);
+        self.free_slots(tier) > 0
+            || (tier == Tier::Hot && self.free_slots(Tier::Cold) > 0)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = CacheStats::default();
+    }
+
+    /// Structural invariants (used by property tests).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        if self.hot_used > self.cap_hot {
+            return Err(format!("hot overflow {}/{}", self.hot_used, self.cap_hot));
+        }
+        if self.cold_used > self.cap_cold {
+            return Err(format!("cold overflow {}/{}", self.cold_used, self.cap_cold));
+        }
+        let hot = self.resident.values().filter(|t| **t == Tier::Hot).count();
+        let cold = self.resident.len() - hot;
+        if hot != self.hot_used || cold != self.cold_used {
+            return Err("used counters out of sync with residency".into());
+        }
+        for (k, _) in self.resident.iter() {
+            if self.remaining_uses(*k) == 0 {
+                return Err(format!("dead block {k} still resident"));
+            }
+        }
+        if self.stats.hits() + self.stats.misses != self.stats.lookups {
+            return Err("hit+miss != lookups".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache3() -> LivenessCache {
+        // 4 slots: 2 hot + 2 cold; t_hot = 2
+        let mut c = LivenessCache::new(4, 0.5, 2);
+        c.init_uses([(1u64, 5u32), (2, 1), (3, 3), (4, 1), (5, 1)]);
+        c
+    }
+
+    #[test]
+    fn miss_then_admit_then_hit() {
+        let mut c = cache3();
+        assert_eq!(c.lookup(1), Access::Miss);
+        assert_eq!(c.admit(1), Some(Tier::Hot)); // remaining 5 > t_hot 2
+        assert_eq!(c.lookup(1), Access::Hit(Tier::Hot));
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn low_reuse_goes_cold() {
+        let mut c = cache3();
+        assert_eq!(c.admit(2), Some(Tier::Cold)); // remaining 1 <= 2
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn evict_on_nil_frees_slot() {
+        let mut c = cache3();
+        c.admit(2);
+        assert!(c.is_resident(2));
+        c.consume(2); // remaining 1 -> 0
+        assert!(!c.is_resident(2));
+        assert_eq!(c.stats().evictions_nil, 1);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn bypass_when_tier_full_of_live_blocks() {
+        let mut c = LivenessCache::new(2, 0.5, 0); // 1 hot + 1 cold, all >0 hot
+        c.init_uses([(1u64, 9u32), (2, 9), (3, 9)]);
+        assert_eq!(c.admit(1), Some(Tier::Hot));
+        assert_eq!(c.admit(2), Some(Tier::Cold)); // hot full -> cold spill
+        assert_eq!(c.admit(3), None); // both full, all live -> bypass
+        assert_eq!(c.stats().bypasses, 1);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn dead_block_not_admitted() {
+        let mut c = cache3();
+        assert_eq!(c.admit(99), None); // no uses registered
+    }
+
+    #[test]
+    fn disabled_cache_never_hits() {
+        let mut c = LivenessCache::disabled();
+        c.init_uses([(1u64, 10u32)]);
+        assert_eq!(c.lookup(1), Access::Miss);
+        assert_eq!(c.admit(1), None);
+        assert_eq!(c.lookup(1), Access::Miss);
+        assert_eq!(c.stats().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn has_space_for_respects_liveness_and_capacity() {
+        let mut c = LivenessCache::new(2, 0.5, 0);
+        c.init_uses([(1u64, 2u32), (2, 2), (3, 2)]);
+        assert!(c.has_space_for(1));
+        c.admit(1);
+        assert!(!c.has_space_for(1)); // resident
+        c.admit(2);
+        assert!(!c.has_space_for(3)); // full of live blocks
+        c.consume(1);
+        c.consume(1); // evict-on-nil
+        assert!(c.has_space_for(3));
+    }
+
+    #[test]
+    fn hit_rate_accounting() {
+        let mut c = cache3();
+        c.lookup(1);
+        c.admit(1);
+        c.lookup(1);
+        c.lookup(1);
+        assert_eq!(c.stats().lookups, 3);
+        assert!((c.stats().hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn consume_decrements_until_dead() {
+        let mut c = cache3();
+        c.admit(3);
+        c.consume(3);
+        c.consume(3);
+        assert!(c.is_resident(3));
+        assert_eq!(c.remaining_uses(3), 1);
+        c.consume(3);
+        assert!(!c.is_resident(3));
+    }
+}

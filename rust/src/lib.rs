@@ -1,0 +1,30 @@
+//! FAST-Prefill — full-system reproduction of "FAST-Prefill: FPGA
+//! Accelerated Sparse Attention for Long Context LLM Prefill".
+//!
+//! Three-layer architecture (see DESIGN.md):
+//!  * L3 (this crate): coordinator, FlexPrefill algorithm, liveness-driven
+//!    KV cache, cycle-approximate U280 simulator, A5000 cost model.
+//!  * L2/L1 (python/compile): JAX chunk graphs + Pallas kernels, AOT-lowered
+//!    to HLO text, executed through [`runtime`] on the PJRT CPU client.
+//!
+//! Public API tour:
+//!  * [`coordinator::Engine`] — end-to-end chunked prefill over artifacts.
+//!  * [`flexprefill`] — Algorithm 1 (dynamic sparse index generation).
+//!  * [`sim`] — FPGA performance/energy model (Figures 5-8, Tables I/II).
+//!  * [`gpu_model`] — the A5000 baseline cost model.
+//!  * [`accuracy`] — Table III retrieval-accuracy proxy.
+
+pub mod accuracy;
+pub mod config;
+pub mod coordinator;
+pub mod flexprefill;
+pub mod gpu_model;
+pub mod kvcache;
+pub mod metrics;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod util;
+pub mod workload;

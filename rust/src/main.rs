@@ -1,0 +1,268 @@
+//! `fastp` — FAST-Prefill CLI (leader entrypoint).
+//!
+//! Subcommands (no clap offline; hand-rolled parsing):
+//!   prefill   run one functional prefill through the PJRT pipeline
+//!   serve     serve a synthetic request trace (multi-worker)
+//!   sim       FPGA + GPU model for a (model, context) point
+//!   table2    FPGA resource utilization report
+//!   ttft      Fig.5-style sweep for one model
+//!   help
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+use fast_prefill::config::{self, by_name, FlexParams};
+use fast_prefill::coordinator::{Engine, EngineConfig, Policy, Server};
+use fast_prefill::gpu_model::simulate_gpu_prefill;
+use fast_prefill::metrics::fmt_ctx;
+use fast_prefill::sim::{resource_report, simulate_prefill, synth_model_indices, HeadMix};
+use fast_prefill::util::table::{fnum, Table};
+use fast_prefill::workload::prompts::{PromptKind, PromptSpec, RequestTrace};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("fastp: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+/// Parse `--key value` flags into a map; returns (positional, flags).
+fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut flags = HashMap::new();
+    let mut it = args.iter().peekable();
+    while let Some(a) = it.next() {
+        if let Some(key) = a.strip_prefix("--") {
+            let val = it.next().cloned().unwrap_or_else(|| "true".into());
+            flags.insert(key.to_string(), val);
+        } else {
+            pos.push(a.clone());
+        }
+    }
+    (pos, flags)
+}
+
+fn flag<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str, default: T) -> Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    match flags.get(key) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{key} {v}: {e}")),
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_help();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "prefill" => cmd_prefill(rest),
+        "serve" => cmd_serve(rest),
+        "sim" => cmd_sim(rest),
+        "table2" => cmd_table2(rest),
+        "ttft" => cmd_ttft(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command {other} (try `fastp help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "fastp — FAST-Prefill reproduction CLI
+
+USAGE: fastp <command> [--flags]
+
+COMMANDS
+  prefill  --model tiny|small100m --tokens 1024 [--seed N] [--dense true]
+           [--artifacts DIR] [--native-sau true]
+           one functional prefill through the PJRT artifact pipeline
+  serve    --model tiny --requests 8 --tokens 1024 [--workers 2]
+           [--policy fcfs|sjf]   serve a synthetic trace, report latencies
+  sim      --model llama3.2-3b --tokens 131072 [--seed N]
+           FPGA simulator + GPU cost model for one point
+  table2   FPGA resource utilization (paper Table II)
+  ttft     --model llama3.2-3b    TTFT sweep across paper context lengths
+  help     this text"
+    );
+}
+
+fn engine_config(flags: &HashMap<String, String>) -> Result<EngineConfig> {
+    let model_name: String = flag(flags, "model", "tiny".to_string())?;
+    let model = by_name(&model_name)
+        .with_context(|| format!("unknown model {model_name}"))?
+        .clone();
+    let mut cfg = EngineConfig::new(model);
+    if flag(flags, "dense", false)? {
+        cfg.flex = None;
+    }
+    cfg.weight_seed = flag(flags, "seed", cfg.weight_seed)?;
+    cfg.native_sau = flag(flags, "native-sau", cfg.native_sau)?;
+    cfg.native_sigu = flag(flags, "native-sigu", cfg.native_sigu)?;
+    cfg.wave_qblocks = flag(flags, "wave", cfg.wave_qblocks)?;
+    cfg.cache_blocks = flag(flags, "cache-blocks", cfg.cache_blocks)?;
+    Ok(cfg)
+}
+
+fn cmd_prefill(args: &[String]) -> Result<()> {
+    let (_, flags) = parse_flags(args);
+    let dir: String = flag(&flags, "artifacts", "artifacts".to_string())?;
+    let tokens: usize = flag(&flags, "tokens", 1024)?;
+    let cfg = engine_config(&flags)?;
+    let spec = PromptSpec { kind: PromptKind::Mixed, tokens, seed: flag(&flags, "seed", 1u64)? };
+    println!("loading artifacts from {dir} (model {})...", cfg.model.name);
+    let mut engine = Engine::new(&dir, cfg)?;
+    let toks = spec.generate();
+    let run = engine.prefill(0, &toks)?;
+    let m = &run.metrics;
+    println!("first token        : {}", run.first_token);
+    println!("TTFT               : {:.1} ms", m.ttft_us / 1e3);
+    println!("  qkv / sigu / sau / ffn: {:.1} / {:.1} / {:.1} / {:.1} ms",
+        m.t_qkv_us / 1e3, m.t_sigu_us / 1e3, m.t_sau_us / 1e3, m.t_ffn_us / 1e3);
+    println!("attention density  : {:.1}%", m.density * 100.0);
+    println!("query-aware heads  : {:.1}%", m.query_aware_frac * 100.0);
+    println!("SAU jobs           : {}", m.jobs);
+    println!("KV cache hit rate  : {:.1}%", m.cache_hit_rate * 100.0);
+    if flag(&flags, "stats", false)? {
+        println!("\nper-executable time (top 8):");
+        for (name, calls, ms) in engine.rt.exec_stats().into_iter().take(8) {
+            println!("  {name:<32} {calls:>6} calls  {ms:>10.1} ms total  {:>8.2} ms/call",
+                ms / calls.max(1) as f64);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let (_, flags) = parse_flags(args);
+    let dir: String = flag(&flags, "artifacts", "artifacts".to_string())?;
+    let tokens: usize = flag(&flags, "tokens", 1024)?;
+    let n_req: usize = flag(&flags, "requests", 8)?;
+    let workers: usize = flag(&flags, "workers", 2)?;
+    let policy = match flag(&flags, "policy", "fcfs".to_string())?.as_str() {
+        "fcfs" => Policy::Fcfs,
+        "sjf" => Policy::Sjf,
+        p => bail!("unknown policy {p}"),
+    };
+    let cfg = engine_config(&flags)?;
+    let trace = RequestTrace::generate(n_req, tokens, 1000, flag(&flags, "seed", 7u64)?);
+    println!("serving {n_req} requests x {tokens} tokens on {workers} workers ({policy:?})...");
+    let t0 = std::time::Instant::now();
+    let server = Server::start(dir.into(), cfg, workers, policy)?;
+    for r in trace.requests {
+        server.submit(r);
+    }
+    let completions = server.drain()?;
+    let wall = t0.elapsed().as_secs_f64();
+    let mut t = Table::new(&["req", "TTFT (ms)", "queue (ms)", "e2e (ms)", "density %", "hit %"]);
+    let mut e2e: Vec<f64> = Vec::new();
+    for c in &completions {
+        e2e.push(c.e2e_us / 1e3);
+        t.row(&[
+            c.request_id.to_string(),
+            fnum(c.run.metrics.ttft_us / 1e3),
+            fnum(c.queue_us / 1e3),
+            fnum(c.e2e_us / 1e3),
+            fnum(c.run.metrics.density * 100.0),
+            fnum(c.run.metrics.cache_hit_rate * 100.0),
+        ]);
+    }
+    t.print();
+    let total_tokens = (n_req * tokens) as f64;
+    println!("wall {:.2}s  throughput {:.0} tok/s  mean e2e {:.0} ms  p95 {:.0} ms",
+        wall,
+        total_tokens / wall,
+        fast_prefill::util::stats::mean(&e2e),
+        fast_prefill::util::stats::percentile(&e2e, 95.0));
+    Ok(())
+}
+
+fn sim_point(model: &str, tokens: usize, seed: u64) -> Result<()> {
+    let cfg = by_name(model).with_context(|| format!("unknown model {model}"))?;
+    let n = tokens / config::BLOCK;
+    let sim_layers = 2.min(cfg.n_layers);
+    let idx = synth_model_indices(
+        cfg.n_heads,
+        sim_layers,
+        n,
+        32,
+        &HeadMix::default(),
+        &FlexParams::default(),
+        seed,
+    );
+    let fpga = config::u280_fast_prefill();
+    let frep = simulate_prefill(&fpga, cfg, tokens, &idx);
+    let grep = simulate_gpu_prefill(&config::a5000(), cfg, tokens, &idx);
+    println!("model {model}  context {}", fmt_ctx(tokens));
+    println!("  density {:.1}%  jobs/layer {}", frep.avg_density * 100.0,
+        frep.total_jobs / cfg.n_layers);
+    println!("  FPGA  TTFT {:>9.1} ms  (qkv {:.0} sigu {:.0} sau {:.0} ffn {:.0})  E {:.2} J  hit {:.0}%",
+        frep.ttft_ms, frep.t_qkv_ms, frep.t_sigu_ms, frep.t_sau_ms, frep.t_ffn_ms,
+        frep.energy_j, frep.cache_hit_rate * 100.0);
+    println!("  GPU   TTFT {:>9.1} ms  (lin {:.0} idxG {:.0} idxC {:.0} attn {:.0} fw {:.0})  E {:.2} J",
+        grep.ttft_ms, grep.t_linear_ms, grep.t_index_gpu_ms, grep.t_index_cpu_ms,
+        grep.t_attn_ms, grep.t_framework_ms, grep.energy_j);
+    println!("  speedup {:.2}x   energy-eff ratio {:.2}x",
+        grep.ttft_ms / frep.ttft_ms,
+        frep.tokens_per_joule() / grep.tokens_per_joule());
+    Ok(())
+}
+
+fn cmd_sim(args: &[String]) -> Result<()> {
+    let (_, flags) = parse_flags(args);
+    let model: String = flag(&flags, "model", "llama3.2-3b".to_string())?;
+    let tokens: usize = flag(&flags, "tokens", 131072)?;
+    sim_point(&model, tokens, flag(&flags, "seed", 1u64)?)
+}
+
+fn cmd_ttft(args: &[String]) -> Result<()> {
+    let (_, flags) = parse_flags(args);
+    let model: String = flag(&flags, "model", "llama3.2-3b".to_string())?;
+    for ctx in config::paper_context_lengths() {
+        sim_point(&model, ctx, flag(&flags, "seed", 1u64)?)?;
+    }
+    Ok(())
+}
+
+fn cmd_table2(_args: &[String]) -> Result<()> {
+    let rep = resource_report(&config::u280_fast_prefill());
+    let mut t = Table::new(&["Module", "LUT (k)", "FF (k)", "BRAM", "URAM", "DSP"]);
+    for (name, r) in &rep.components {
+        t.row(&[
+            name.to_string(),
+            fnum(r.lut_k),
+            fnum(r.ff_k),
+            fnum(r.bram),
+            fnum(r.uram),
+            fnum(r.dsp),
+        ]);
+    }
+    t.row(&[
+        "Used".into(),
+        fnum(rep.total.lut_k),
+        fnum(rep.total.ff_k),
+        fnum(rep.total.bram),
+        fnum(rep.total.uram),
+        fnum(rep.total.dsp),
+    ]);
+    t.row(&[
+        "Available".into(),
+        fnum(rep.available.lut_k),
+        fnum(rep.available.ff_k),
+        fnum(rep.available.bram),
+        fnum(rep.available.uram),
+        fnum(rep.available.dsp),
+    ]);
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,126 @@
+//! Metrics & reporting: TTFT, energy efficiency, sparsity and cache
+//! statistics, with paper-style table/series emitters.
+
+use crate::util::table::{fnum, Table};
+
+/// Per-request prefill metrics collected by the coordinator.
+#[derive(Clone, Debug, Default)]
+pub struct PrefillMetrics {
+    pub request_id: u64,
+    pub context_tokens: usize,
+    /// Wall-clock time-to-first-token of the functional pipeline (us).
+    pub ttft_us: f64,
+    /// Mean computed fraction of the causal attention matrix.
+    pub density: f64,
+    /// Fraction of heads that chose the query-aware pattern.
+    pub query_aware_frac: f64,
+    /// KV cache statistics of the SAU schedule.
+    pub cache_hit_rate: f64,
+    /// Total SAU jobs executed.
+    pub jobs: usize,
+    /// Time breakdown (us).
+    pub t_qkv_us: f64,
+    pub t_sigu_us: f64,
+    pub t_sau_us: f64,
+    pub t_ffn_us: f64,
+}
+
+impl PrefillMetrics {
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.ttft_us <= 0.0 {
+            return 0.0;
+        }
+        self.context_tokens as f64 / (self.ttft_us / 1e6)
+    }
+}
+
+/// A simulated/estimated platform result for one (model, context) point.
+#[derive(Clone, Debug)]
+pub struct PlatformPoint {
+    pub platform: String,
+    pub model: String,
+    pub context: usize,
+    pub ttft_ms: f64,
+    pub energy_j: f64,
+}
+
+impl PlatformPoint {
+    /// Paper metric: Token/Joule with token count 1 (prefill emits 1 token).
+    pub fn tokens_per_joule(&self) -> f64 {
+        if self.energy_j <= 0.0 {
+            return 0.0;
+        }
+        1.0 / self.energy_j
+    }
+}
+
+/// Render a Fig.5/6-style series: rows = context lengths, cols = platforms.
+pub fn render_series(
+    title: &str,
+    contexts: &[usize],
+    platforms: &[&str],
+    value: impl Fn(usize, &str) -> f64,
+    unit: &str,
+) -> String {
+    let mut headers: Vec<String> = vec![format!("context")];
+    headers.extend(platforms.iter().map(|p| format!("{p} ({unit})")));
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr_refs);
+    for &ctx in contexts {
+        let mut row = vec![fmt_ctx(ctx)];
+        for p in platforms {
+            row.push(fnum(value(ctx, p)));
+        }
+        t.row(&row);
+    }
+    format!("== {title} ==\n{}", t.render())
+}
+
+/// "4K", "128K" formatting for context lengths.
+pub fn fmt_ctx(tokens: usize) -> String {
+    if tokens % 1024 == 0 {
+        format!("{}K", tokens / 1024)
+    } else {
+        format!("{tokens}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_per_joule_inverse_energy() {
+        let p = PlatformPoint {
+            platform: "x".into(),
+            model: "m".into(),
+            context: 4096,
+            ttft_ms: 10.0,
+            energy_j: 0.5,
+        };
+        assert!((p.tokens_per_joule() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fmt_ctx_k() {
+        assert_eq!(fmt_ctx(4096), "4K");
+        assert_eq!(fmt_ctx(131072), "128K");
+        assert_eq!(fmt_ctx(100), "100");
+    }
+
+    #[test]
+    fn render_series_shape() {
+        let s = render_series("t", &[4096, 8192], &["FPGA", "GPU"], |c, p| {
+            (c / 1024) as f64 * if p == "GPU" { 2.0 } else { 1.0 }
+        }, "ms");
+        assert!(s.contains("4K"));
+        assert!(s.contains("FPGA (ms)"));
+        assert!(s.lines().count() == 5);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let m = PrefillMetrics { context_tokens: 4096, ttft_us: 1e6, ..Default::default() };
+        assert!((m.tokens_per_s() - 4096.0).abs() < 1e-9);
+    }
+}

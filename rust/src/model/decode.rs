@@ -1,0 +1,344 @@
+//! Decode stage (paper §II-A): after prefill emits the first token, tokens
+//! are generated auto-regressively — the prefill's matrix-matrix work
+//! becomes matrix-vector work over the stored KV cache.
+//!
+//! The paper scopes its contribution to prefill ("optimizations of ...
+//! efficient token generation in the decode stage are orthogonal"); this
+//! module provides the orthogonal piece so the system is usable end to end:
+//! dense W8A8 decode attention over the quantized KV built during prefill,
+//! one token per step. Sparsity is intentionally not applied (FlexPrefill
+//! is a prefill-time algorithm).
+
+use crate::config::BLOCK;
+use crate::quant::{quant_scale, quantize_one, quantize_with};
+use crate::tensor::ops::{rmsnorm, rope, silu};
+use crate::tensor::{MatF32, MatI8};
+
+use super::weights::ModelWeights;
+
+/// Per-layer quantized KV cache for decode: token-major rows.
+#[derive(Clone, Debug)]
+pub struct DecodeKv {
+    /// [n_kv_heads][tokens x d_head] int8, one scale per appended token.
+    pub k: Vec<MatI8>,
+    pub v: Vec<MatI8>,
+    /// Per-token scales (shared across kv heads, one per appended token
+    /// group; prefill chunks contribute BLOCK tokens per scale).
+    pub k_scales: Vec<f32>,
+    pub v_scales: Vec<f32>,
+    /// scale index per token row.
+    pub scale_of: Vec<u32>,
+}
+
+impl DecodeKv {
+    pub fn new(n_kv_heads: usize, d_head: usize) -> Self {
+        DecodeKv {
+            k: (0..n_kv_heads).map(|_| MatI8::zeros(0, d_head)).collect(),
+            v: (0..n_kv_heads).map(|_| MatI8::zeros(0, d_head)).collect(),
+            k_scales: vec![],
+            v_scales: vec![],
+            scale_of: vec![],
+        }
+    }
+
+    pub fn tokens(&self) -> usize {
+        self.scale_of.len()
+    }
+
+    /// Append one token's K/V rows (already quantized with the given
+    /// scales) for every kv head.
+    pub fn append(&mut self, k_rows: &[Vec<i8>], v_rows: &[Vec<i8>], ks: f32, vs: f32) {
+        let sidx = self.k_scales.len() as u32;
+        self.k_scales.push(ks);
+        self.v_scales.push(vs);
+        self.scale_of.push(sidx);
+        for (g, row) in k_rows.iter().enumerate() {
+            self.k[g].rows += 1;
+            self.k[g].data.extend_from_slice(row);
+        }
+        for (g, row) in v_rows.iter().enumerate() {
+            self.v[g].rows += 1;
+            self.v[g].data.extend_from_slice(row);
+        }
+    }
+}
+
+/// Decoder state: hidden residual for the current token + KV per layer.
+pub struct Decoder<'w> {
+    pub w: &'w ModelWeights,
+    pub kv: Vec<DecodeKv>,
+    pub pos: usize,
+}
+
+impl<'w> Decoder<'w> {
+    /// Build a decoder from a completed prefill's hidden states by
+    /// re-deriving the KV cache layer by layer (token-exact with prefill's
+    /// per-chunk quantization when `hidden_per_layer` comes from
+    /// `prefill_reference`; for the engine path use its stored chunks).
+    /// For simplicity and testability this constructor re-runs the KV
+    /// projection over the provided per-layer inputs.
+    pub fn from_prefill_inputs(w: &'w ModelWeights, layer_inputs: &[MatF32]) -> Self {
+        assert_eq!(layer_inputs.len(), w.cfg.n_layers);
+        let cfg = &w.cfg;
+        let s = layer_inputs[0].rows;
+        let mut kv = Vec::with_capacity(cfg.n_layers);
+        for (li, x) in layer_inputs.iter().enumerate() {
+            let mut cache = DecodeKv::new(cfg.n_kv_heads, cfg.d_head);
+            // per chunk, mirror forward::qkv_chunk quantization granularity
+            for c0 in (0..s).step_by(BLOCK) {
+                let chunk = x.slice_rows(c0, (c0 + BLOCK).min(s));
+                let (krows, vrows, ks, vs) = project_kv(w, li, &chunk, c0 as i32);
+                for t in 0..chunk.rows {
+                    let kr: Vec<Vec<i8>> = krows.iter().map(|m| m.row(t).to_vec()).collect();
+                    let vr: Vec<Vec<i8>> = vrows.iter().map(|m| m.row(t).to_vec()).collect();
+                    cache.append(&kr, &vr, ks, vs);
+                }
+            }
+            kv.push(cache);
+        }
+        Decoder { w, kv, pos: s }
+    }
+
+    /// One decode step: consume `token`, return the next token.
+    pub fn step(&mut self, token: u8) -> u8 {
+        let cfg = &self.w.cfg;
+        let d = cfg.d_model;
+        let mut x = MatF32::from_vec(1, d, self.w.embed.row(token as usize % cfg.vocab).to_vec());
+        for li in 0..cfg.n_layers {
+            let lw = &self.w.layers[li];
+            // --- attention (dense decode over cached KV) ---
+            let (q_heads, qs) = project_q(self.w, li, &x, self.pos as i32);
+            // append this token's KV first (self-attention includes itself)
+            let xn = rm(&x, &lw.g_attn, cfg.rms_eps);
+            let (krows, vrows, ks, vs) = project_kv_at(self.w, li, &xn, self.pos as i32);
+            let kr: Vec<Vec<i8>> = krows.iter().map(|m| m.row(0).to_vec()).collect();
+            let vr: Vec<Vec<i8>> = vrows.iter().map(|m| m.row(0).to_vec()).collect();
+            self.kv[li].append(&kr, &vr, ks, vs);
+
+            let mut attn_out = vec![0.0f32; cfg.q_dim()];
+            let cache = &self.kv[li];
+            for h in 0..cfg.n_heads {
+                let g = h / cfg.group_size();
+                let q = &q_heads[h];
+                let kmat = &cache.k[g];
+                // scores over all cached tokens
+                let n = kmat.rows;
+                let mut scores = vec![0.0f32; n];
+                let inv = 1.0 / (cfg.d_head as f32).sqrt();
+                for t in 0..n {
+                    let mut acc = 0i32;
+                    for (qv, kv8) in q.iter().zip(kmat.row(t)) {
+                        acc += *qv as i32 * *kv8 as i32;
+                    }
+                    let ks_t = cache.k_scales[cache.scale_of[t] as usize];
+                    scores[t] = acc as f32 * qs * ks_t * inv;
+                }
+                let p = crate::tensor::ops::softmax(&scores);
+                let vmat = &cache.v[g];
+                let out = &mut attn_out[h * cfg.d_head..(h + 1) * cfg.d_head];
+                for t in 0..n {
+                    // W8A8: quantize p with fixed 1/127 scale, like the SAU
+                    let pq = quantize_one(p[t] * 127.0, 1.0) as f32;
+                    if pq == 0.0 {
+                        continue;
+                    }
+                    let vs_t = cache.v_scales[cache.scale_of[t] as usize];
+                    for (o, vv) in out.iter_mut().zip(vmat.row(t)) {
+                        *o += pq * *vv as f32 * (vs_t / 127.0);
+                    }
+                }
+            }
+            // o_proj + residual
+            let s_a = quant_scale(&attn_out);
+            let mut a_i8 = MatI8::zeros(1, cfg.q_dim());
+            quantize_with(&attn_out, s_a, &mut a_i8.data);
+            let proj = crate::quant::int8_matmul_deq(&a_i8, s_a, &lw.wo.q, lw.wo.scale);
+            for (xv, pv) in x.data.iter_mut().zip(&proj.data) {
+                *xv += pv;
+            }
+            // FFN + residual
+            let xn = rm(&x, &lw.g_ffn, cfg.rms_eps);
+            let xs = quant_scale(&xn.data);
+            let mut x_i8 = MatI8::zeros(1, d);
+            quantize_with(&xn.data, xs, &mut x_i8.data);
+            let mut gate = crate::quant::int8_matmul_deq(&x_i8, xs, &lw.wg.q, lw.wg.scale);
+            silu(&mut gate);
+            let up = crate::quant::int8_matmul_deq(&x_i8, xs, &lw.wu.q, lw.wu.scale);
+            for (gv, uv) in gate.data.iter_mut().zip(&up.data) {
+                *gv *= uv;
+            }
+            let hs = quant_scale(&gate.data);
+            let mut h_i8 = MatI8::zeros(1, cfg.d_ffn);
+            quantize_with(&gate.data, hs, &mut h_i8.data);
+            let down = crate::quant::int8_matmul_deq(&h_i8, hs, &lw.wd.q, lw.wd.scale);
+            for (xv, dv) in x.data.iter_mut().zip(&down.data) {
+                *xv += dv;
+            }
+        }
+        self.pos += 1;
+        // final norm + lm head
+        let xn = rm(&x, &self.w.g_final, cfg.rms_eps);
+        let xs = quant_scale(&xn.data);
+        let mut x_i8 = MatI8::zeros(1, d);
+        quantize_with(&xn.data, xs, &mut x_i8.data);
+        let logits = crate::quant::int8_matmul_deq(&x_i8, xs, &self.w.lm_head.q, self.w.lm_head.scale);
+        logits
+            .data
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as u8)
+            .unwrap_or(0)
+    }
+
+    /// Generate `n` tokens starting from `first`.
+    pub fn generate(&mut self, first: u8, n: usize) -> Vec<u8> {
+        let mut out = Vec::with_capacity(n);
+        let mut tok = first;
+        for _ in 0..n {
+            tok = self.step(tok);
+            out.push(tok);
+        }
+        out
+    }
+}
+
+fn rm(x: &MatF32, g: &[f32], eps: f32) -> MatF32 {
+    rmsnorm(x, g, eps)
+}
+
+/// Project (already-normalized input) to quantized K/V rows per kv head.
+fn project_kv_at(
+    w: &ModelWeights,
+    li: usize,
+    xn: &MatF32,
+    pos0: i32,
+) -> (Vec<MatI8>, Vec<MatI8>, f32, f32) {
+    let cfg = &w.cfg;
+    let lw = &w.layers[li];
+    let xs = quant_scale(&xn.data);
+    let mut x_i8 = MatI8::zeros(xn.rows, cfg.d_model);
+    quantize_with(&xn.data, xs, &mut x_i8.data);
+    let k = crate::quant::int8_matmul_deq(&x_i8, xs, &lw.wk.q, lw.wk.scale);
+    let v = crate::quant::int8_matmul_deq(&x_i8, xs, &lw.wv.q, lw.wv.scale);
+    let pos: Vec<i32> = (0..xn.rows as i32).map(|i| pos0 + i).collect();
+    let mut kh: Vec<MatF32> = (0..cfg.n_kv_heads)
+        .map(|g| MatF32::from_fn(xn.rows, cfg.d_head, |r, c| k.at(r, g * cfg.d_head + c)))
+        .collect();
+    let vh: Vec<MatF32> = (0..cfg.n_kv_heads)
+        .map(|g| MatF32::from_fn(xn.rows, cfg.d_head, |r, c| v.at(r, g * cfg.d_head + c)))
+        .collect();
+    for m in kh.iter_mut() {
+        rope(m, &pos, cfg.rope_theta);
+    }
+    let scale_all = |hs: &[MatF32]| {
+        let mut mx = 0.0f32;
+        for m in hs {
+            for &val in &m.data {
+                mx = mx.max(val.abs());
+            }
+        }
+        mx.max(crate::quant::SCALE_EPS) / 127.0
+    };
+    let (ks, vs) = (scale_all(&kh), scale_all(&vh));
+    let qz = |hs: &[MatF32], s: f32| -> Vec<MatI8> {
+        hs.iter()
+            .map(|m| {
+                let mut q = MatI8::zeros(m.rows, m.cols);
+                quantize_with(&m.data, s, &mut q.data);
+                q
+            })
+            .collect()
+    };
+    (qz(&kh, ks), qz(&vh, vs), ks, vs)
+}
+
+fn project_kv(w: &ModelWeights, li: usize, xn: &MatF32, pos0: i32) -> (Vec<MatI8>, Vec<MatI8>, f32, f32) {
+    project_kv_at(w, li, xn, pos0)
+}
+
+/// Project to quantized per-head query rows for one token.
+fn project_q(w: &ModelWeights, li: usize, x: &MatF32, pos: i32) -> (Vec<Vec<i8>>, f32) {
+    let cfg = &w.cfg;
+    let lw = &w.layers[li];
+    let xn = rm(x, &lw.g_attn, cfg.rms_eps);
+    let xs = quant_scale(&xn.data);
+    let mut x_i8 = MatI8::zeros(1, cfg.d_model);
+    quantize_with(&xn.data, xs, &mut x_i8.data);
+    let q = crate::quant::int8_matmul_deq(&x_i8, xs, &lw.wq.q, lw.wq.scale);
+    let mut heads: Vec<MatF32> = (0..cfg.n_heads)
+        .map(|h| MatF32::from_fn(1, cfg.d_head, |_, c| q.at(0, h * cfg.d_head + c)))
+        .collect();
+    for m in heads.iter_mut() {
+        rope(m, &[pos], cfg.rope_theta);
+    }
+    let mut mx = 0.0f32;
+    for m in &heads {
+        for &v in &m.data {
+            mx = mx.max(v.abs());
+        }
+    }
+    let qs = mx.max(crate::quant::SCALE_EPS) / 127.0;
+    let out: Vec<Vec<i8>> = heads
+        .iter()
+        .map(|m| {
+            let mut q8 = vec![0i8; cfg.d_head];
+            quantize_with(&m.data, qs, &mut q8);
+            q8
+        })
+        .collect();
+    (out, qs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TINY;
+    use crate::util::prng::Prng;
+
+    fn inputs(w: &ModelWeights, s: usize, seed: u64) -> Vec<MatF32> {
+        // stand-in layer inputs: embedding stream repeated per layer (the
+        // decode tests exercise mechanics, not cross-layer numerics)
+        let mut rng = Prng::new(seed);
+        let toks: Vec<u8> = (0..s).map(|_| rng.below(256) as u8).collect();
+        (0..w.cfg.n_layers).map(|_| w.embed_tokens(&toks)).collect()
+    }
+
+    #[test]
+    fn decoder_appends_kv_and_advances() {
+        let w = ModelWeights::generate(&TINY, 21);
+        let mut dec = Decoder::from_prefill_inputs(&w, &inputs(&w, 128, 1));
+        assert_eq!(dec.pos, 128);
+        assert_eq!(dec.kv[0].tokens(), 128);
+        let t = dec.step(42);
+        assert_eq!(dec.pos, 129);
+        assert_eq!(dec.kv[0].tokens(), 129);
+        let _ = t;
+    }
+
+    #[test]
+    fn decode_is_deterministic() {
+        let w = ModelWeights::generate(&TINY, 22);
+        let mut a = Decoder::from_prefill_inputs(&w, &inputs(&w, 128, 2));
+        let mut b = Decoder::from_prefill_inputs(&w, &inputs(&w, 128, 2));
+        assert_eq!(a.generate(7, 6), b.generate(7, 6));
+    }
+
+    #[test]
+    fn generation_produces_n_tokens() {
+        let w = ModelWeights::generate(&TINY, 23);
+        let mut dec = Decoder::from_prefill_inputs(&w, &inputs(&w, 128, 3));
+        let out = dec.generate(0, 10);
+        assert_eq!(out.len(), 10);
+        assert_eq!(dec.kv[0].tokens(), 138);
+    }
+
+    #[test]
+    fn different_contexts_generate_differently() {
+        let w = ModelWeights::generate(&TINY, 24);
+        let mut a = Decoder::from_prefill_inputs(&w, &inputs(&w, 128, 4));
+        let mut b = Decoder::from_prefill_inputs(&w, &inputs(&w, 128, 5));
+        // different KV caches should (overwhelmingly) diverge
+        assert_ne!(a.generate(7, 8), b.generate(7, 8));
+    }
+}

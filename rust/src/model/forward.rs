@@ -1,0 +1,425 @@
+//! Pure-Rust W8A8 chunked prefill — the functional oracle.
+//!
+//! Mirrors the PJRT pipeline operation-for-operation (same quantization
+//! points, same online-softmax state, same FlexPrefill semantics) so the
+//! coordinator's artifact-backed execution can be validated against it.
+//! Follows the paper's per-layer phasing (§IV-A): KV generation for all
+//! chunks -> SIGU -> SAU (block-major) -> FFN.
+
+use crate::config::{FlexParams, BLOCK};
+use crate::flexprefill::{generate_head_index, scores, HeadIndex, HeadPattern, HeadStats};
+use crate::quant::{int8_matmul_bt, int8_matmul_deq, quant_scale, quantize_with};
+use crate::tensor::ops::{block_pool, rmsnorm, rope, silu};
+use crate::tensor::{MatF32, MatI8};
+
+use super::weights::ModelWeights;
+
+/// Result of a reference prefill.
+#[derive(Clone, Debug)]
+pub struct PrefillOutput {
+    /// argmax of the last position's logits — the first generated token.
+    pub first_token: u8,
+    pub logits_last: Vec<f32>,
+    /// Hidden states after the final layer (pre final-norm), [S, D].
+    pub hidden: MatF32,
+    /// Pattern decision per [layer][head].
+    pub patterns: Vec<Vec<HeadPattern>>,
+    /// Mean computed fraction of the causal attention matrix.
+    pub avg_density: f64,
+    /// Sparse index sets per [layer][head] (empty when dense).
+    pub index_sets: Vec<Vec<HeadIndex>>,
+}
+
+/// Quantized per-chunk activations for one layer's attention.
+struct ChunkQkv {
+    q: Vec<MatI8>, // per head: [B, dh]
+    qs: f32,
+    k: Vec<MatI8>, // per kv head
+    ks: f32,
+    v: Vec<MatI8>, // per kv head
+    vs: f32,
+    qpool: MatF32, // [H, dh]
+    kpool: MatF32, // [Hk, dh]
+}
+
+/// One W8A8 online-softmax attention step (the Rust mirror of
+/// `ref.attn_block_step_ref` / the `attn_block_step` artifact).
+/// `diag` applies the intra-block causal mask.
+#[allow(clippy::too_many_arguments)]
+pub fn attn_step_w8a8(
+    q: &MatI8,
+    qs: f32,
+    k: &MatI8,
+    ks: f32,
+    v: &MatI8,
+    vs: f32,
+    m: &mut [f32],
+    l: &mut [f32],
+    acc: &mut MatF32,
+    diag: bool,
+) {
+    let b = q.rows;
+    let dh = q.cols;
+    let acc_i32 = int8_matmul_bt(q, k);
+    let scale = qs * ks / (dh as f32).sqrt();
+    let mut p_i8 = vec![0i8; k.rows];
+    for r in 0..b {
+        let srow = &acc_i32[r * k.rows..(r + 1) * k.rows];
+        let ncols = if diag { r + 1 } else { k.rows };
+        let mut rmax = f32::NEG_INFINITY;
+        for &sv in &srow[..ncols] {
+            rmax = rmax.max(sv as f32 * scale);
+        }
+        let m_new = m[r].max(rmax);
+        let corr = (m[r] - m_new).exp();
+        let mut lsum = 0.0f32;
+        for (c, &sv) in srow[..ncols].iter().enumerate() {
+            let p = ((sv as f32 * scale) - m_new).exp();
+            lsum += p;
+            // W8A8: requantize P with fixed scale 1/127 (ties-to-even like jnp)
+            p_i8[c] = (p * 127.0).round_ties_even().clamp(-127.0, 127.0) as i8;
+        }
+        for c in ncols..k.rows {
+            p_i8[c] = 0;
+        }
+        l[r] = l[r] * corr + lsum;
+        m[r] = m_new;
+        // acc = acc*corr + (P_i8 @ V_i8) * vs/127
+        let arow = acc.row_mut(r);
+        let pv_scale = vs / 127.0;
+        for av in arow.iter_mut() {
+            *av *= corr;
+        }
+        for (c, &pq) in p_i8.iter().enumerate().take(k.rows) {
+            if pq == 0 {
+                continue;
+            }
+            let vrow = v.row(c);
+            let pf = pq as i32;
+            for (av, &vv) in arow.iter_mut().zip(vrow) {
+                *av += (pf * vv as i32) as f32 * pv_scale;
+            }
+        }
+    }
+}
+
+/// Finalize: out = acc / l.
+pub fn attn_finalize(l: &[f32], acc: &MatF32) -> MatF32 {
+    let mut out = acc.clone();
+    for r in 0..out.rows {
+        let inv = 1.0 / l[r].max(1e-8);
+        for v in out.row_mut(r) {
+            *v *= inv;
+        }
+    }
+    out
+}
+
+fn qkv_chunk(w: &ModelWeights, li: usize, x: &MatF32, pos0: i32) -> ChunkQkv {
+    let cfg = &w.cfg;
+    let lw = &w.layers[li];
+    let b = x.rows;
+    let xn = rmsnorm(x, &lw.g_attn, cfg.rms_eps);
+    let xs = quant_scale(&xn.data);
+    let mut x_i8 = MatI8::zeros(b, cfg.d_model);
+    quantize_with(&xn.data, xs, &mut x_i8.data);
+    let q = int8_matmul_deq(&x_i8, xs, &lw.wq.q, lw.wq.scale); // [B, H*dh]
+    let k = int8_matmul_deq(&x_i8, xs, &lw.wk.q, lw.wk.scale);
+    let v = int8_matmul_deq(&x_i8, xs, &lw.wv.q, lw.wv.scale);
+    let pos: Vec<i32> = (0..b as i32).map(|i| pos0 + i).collect();
+
+    // split per head, rope q/k, pool, then quantize per chunk (per-tensor
+    // scale across all heads — matching python's quant_scale(q))
+    let split = |m: &MatF32, heads: usize| -> Vec<MatF32> {
+        (0..heads)
+            .map(|h| {
+                MatF32::from_fn(b, cfg.d_head, |r, c| m.at(r, h * cfg.d_head + c))
+            })
+            .collect()
+    };
+    let mut qh = split(&q, cfg.n_heads);
+    let mut kh = split(&k, cfg.n_kv_heads);
+    let vh = split(&v, cfg.n_kv_heads);
+    for hq in qh.iter_mut() {
+        rope(hq, &pos, cfg.rope_theta);
+    }
+    for hk in kh.iter_mut() {
+        rope(hk, &pos, cfg.rope_theta);
+    }
+    let qpool = MatF32::from_fn(cfg.n_heads, cfg.d_head, |h, c| {
+        qh[h].data.iter().skip(c).step_by(cfg.d_head).sum::<f32>() / b as f32
+    });
+    let kpool = MatF32::from_fn(cfg.n_kv_heads, cfg.d_head, |h, c| {
+        kh[h].data.iter().skip(c).step_by(cfg.d_head).sum::<f32>() / b as f32
+    });
+    let scale_of = |hs: &[MatF32]| -> f32 {
+        let mut mx = 0.0f32;
+        for m in hs {
+            for &v in &m.data {
+                mx = mx.max(v.abs());
+            }
+        }
+        mx.max(crate::quant::SCALE_EPS) / 127.0
+    };
+    let (qs, ks, vs) = (scale_of(&qh), scale_of(&kh), scale_of(&vh));
+    let quant_all = |hs: &[MatF32], s: f32| -> Vec<MatI8> {
+        hs.iter()
+            .map(|m| {
+                let mut q = MatI8::zeros(m.rows, m.cols);
+                quantize_with(&m.data, s, &mut q.data);
+                q
+            })
+            .collect()
+    };
+    ChunkQkv {
+        q: quant_all(&qh, qs),
+        qs,
+        k: quant_all(&kh, ks),
+        ks,
+        v: quant_all(&vh, vs),
+        vs,
+        qpool,
+        kpool,
+    }
+}
+
+fn ffn_chunk(w: &ModelWeights, li: usize, x: &MatF32) -> MatF32 {
+    let cfg = &w.cfg;
+    let lw = &w.layers[li];
+    let xn = rmsnorm(x, &lw.g_ffn, cfg.rms_eps);
+    let xs = quant_scale(&xn.data);
+    let mut x_i8 = MatI8::zeros(x.rows, cfg.d_model);
+    quantize_with(&xn.data, xs, &mut x_i8.data);
+    let mut gate = int8_matmul_deq(&x_i8, xs, &lw.wg.q, lw.wg.scale);
+    silu(&mut gate);
+    let up = int8_matmul_deq(&x_i8, xs, &lw.wu.q, lw.wu.scale);
+    let mut h = gate;
+    for (hv, uv) in h.data.iter_mut().zip(&up.data) {
+        *hv *= uv;
+    }
+    let hs = quant_scale(&h.data);
+    let mut h_i8 = MatI8::zeros(h.rows, h.cols);
+    quantize_with(&h.data, hs, &mut h_i8.data);
+    let down = int8_matmul_deq(&h_i8, hs, &lw.wd.q, lw.wd.scale);
+    let mut out = x.clone();
+    for (o, d) in out.data.iter_mut().zip(&down.data) {
+        *o += d;
+    }
+    out
+}
+
+/// Reference chunked prefill. `flex: None` => dense causal attention.
+pub fn prefill_reference(
+    w: &ModelWeights,
+    tokens: &[u8],
+    flex: Option<&FlexParams>,
+) -> PrefillOutput {
+    let cfg = &w.cfg;
+    let s = tokens.len();
+    assert!(s % BLOCK == 0 && s > 0, "context must be a multiple of {BLOCK}");
+    let n = s / BLOCK;
+    let mut hidden = w.embed_tokens(tokens);
+    let mut patterns = Vec::new();
+    let mut index_sets = Vec::new();
+    let mut density_sum = 0.0f64;
+    let mut density_cnt = 0usize;
+
+    for li in 0..cfg.n_layers {
+        // ---- phase 1: KV generation over all chunks ----
+        let chunks: Vec<ChunkQkv> = (0..n)
+            .map(|ci| {
+                let x = hidden.slice_rows(ci * BLOCK, (ci + 1) * BLOCK);
+                qkv_chunk(w, li, &x, (ci * BLOCK) as i32)
+            })
+            .collect();
+
+        // ---- phase 2: SIGU per head ----
+        let indices: Vec<HeadIndex> = (0..cfg.n_heads)
+            .map(|h| {
+                if let Some(params) = flex {
+                    let g = h / cfg.group_size();
+                    let qhat = &chunks[n - 1].q[h];
+                    let kblocks: Vec<(MatI8, f32)> =
+                        chunks.iter().map(|c| (c.k[g].clone(), c.ks)).collect();
+                    let (vertical, slash, a_hat) =
+                        scores::stream_head_scores(qhat, chunks[n - 1].qs, &kblocks);
+                    let kpool =
+                        MatF32::from_fn(n, cfg.d_head, |b, c| chunks[b].kpool.at(g, c));
+                    let qpool_all =
+                        MatF32::from_fn(n, cfg.d_head, |b, c| chunks[b].qpool.at(h, c));
+                    let qpool_hat: Vec<f32> = qpool_all.row(n - 1).to_vec();
+                    let a_bar = scores::pooled_estimate(&qpool_hat, &kpool);
+                    let stats = HeadStats { vertical, slash, a_bar, a_hat, qpool_all, kpool };
+                    generate_head_index(&stats, params)
+                } else {
+                    // dense causal: q block attends to all blocks <= q
+                    HeadIndex {
+                        pattern: HeadPattern::VerticalSlash,
+                        d_js: 0.0,
+                        blocks: (0..n).map(|q| (0..=q as u32).collect()).collect(),
+                    }
+                }
+            })
+            .collect();
+        for idx in &indices {
+            density_sum += idx.density();
+            density_cnt += 1;
+        }
+        patterns.push(indices.iter().map(|i| i.pattern).collect());
+
+        // ---- phase 3: SAU (per (head, q-block), kv blocks ascending) ----
+        let mut attn_chunks: Vec<MatF32> =
+            (0..n).map(|_| MatF32::zeros(BLOCK, cfg.q_dim())).collect();
+        for (h, idx) in indices.iter().enumerate() {
+            let g = h / cfg.group_size();
+            for (qb, sel) in idx.blocks.iter().enumerate() {
+                let mut m = vec![-1e30f32; BLOCK];
+                let mut l = vec![0.0f32; BLOCK];
+                let mut acc = MatF32::zeros(BLOCK, cfg.d_head);
+                for &kb in sel {
+                    let kb = kb as usize;
+                    attn_step_w8a8(
+                        &chunks[qb].q[h],
+                        chunks[qb].qs,
+                        &chunks[kb].k[g],
+                        chunks[kb].ks,
+                        &chunks[kb].v[g],
+                        chunks[kb].vs,
+                        &mut m,
+                        &mut l,
+                        &mut acc,
+                        kb == qb,
+                    );
+                }
+                let out = attn_finalize(&l, &acc);
+                for r in 0..BLOCK {
+                    attn_chunks[qb].row_mut(r)[h * cfg.d_head..(h + 1) * cfg.d_head]
+                        .copy_from_slice(out.row(r));
+                }
+            }
+        }
+        index_sets.push(indices);
+
+        // ---- phase 4: o_proj + residual, FFN + residual, per chunk ----
+        let lw = &w.layers[li];
+        for ci in 0..n {
+            let attn = &attn_chunks[ci];
+            let s_a = quant_scale(&attn.data);
+            let mut a_i8 = MatI8::zeros(BLOCK, cfg.q_dim());
+            quantize_with(&attn.data, s_a, &mut a_i8.data);
+            let proj = int8_matmul_deq(&a_i8, s_a, &lw.wo.q, lw.wo.scale);
+            let mut x = hidden.slice_rows(ci * BLOCK, (ci + 1) * BLOCK);
+            for (xv, pv) in x.data.iter_mut().zip(&proj.data) {
+                *xv += pv;
+            }
+            let x = ffn_chunk(w, li, &x);
+            hidden.data[ci * BLOCK * cfg.d_model..(ci + 1) * BLOCK * cfg.d_model]
+                .copy_from_slice(&x.data);
+        }
+    }
+
+    // ---- final norm + LM head on the last chunk ----
+    let last = hidden.slice_rows(s - BLOCK, s);
+    let xn = rmsnorm(&last, &w.g_final, cfg.rms_eps);
+    let xs = quant_scale(&xn.data);
+    let mut x_i8 = MatI8::zeros(BLOCK, cfg.d_model);
+    quantize_with(&xn.data, xs, &mut x_i8.data);
+    let logits = int8_matmul_deq(&x_i8, xs, &w.lm_head.q, w.lm_head.scale);
+    let last_row = logits.row(BLOCK - 1);
+    let first_token = last_row
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i as u8)
+        .unwrap_or(0);
+
+    PrefillOutput {
+        first_token,
+        logits_last: last_row.to_vec(),
+        hidden,
+        patterns,
+        avg_density: if density_cnt > 0 { density_sum / density_cnt as f64 } else { 1.0 },
+        index_sets,
+    }
+}
+
+/// Convenience: `block_pool` re-export used by accuracy tooling.
+pub fn pool_blocks(x: &MatF32) -> MatF32 {
+    block_pool(x, BLOCK)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{FlexParams, TINY};
+    use crate::util::prng::Prng;
+
+    fn tokens(n: usize, seed: u64) -> Vec<u8> {
+        let mut rng = Prng::new(seed);
+        (0..n).map(|_| rng.below(256) as u8).collect()
+    }
+
+    #[test]
+    fn dense_prefill_runs_and_is_deterministic() {
+        let w = ModelWeights::generate(&TINY, 11);
+        let t = tokens(256, 1);
+        let a = prefill_reference(&w, &t, None);
+        let b = prefill_reference(&w, &t, None);
+        assert_eq!(a.first_token, b.first_token);
+        assert_eq!(a.logits_last, b.logits_last);
+        assert!((a.avg_density - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn flex_prefill_is_sparser_than_dense() {
+        let w = ModelWeights::generate(&TINY, 12);
+        let t = tokens(512, 2);
+        let flex = FlexParams { gamma: 0.7, ..Default::default() };
+        let out = prefill_reference(&w, &t, Some(&flex));
+        assert!(out.avg_density <= 1.0);
+        for layer in &out.index_sets {
+            for idx in layer {
+                idx.validate().expect("legal index set");
+            }
+        }
+    }
+
+    #[test]
+    fn flex_with_gamma_one_close_to_dense_output() {
+        // gamma=1.0 selects every block with mass => nearly dense
+        let w = ModelWeights::generate(&TINY, 13);
+        let t = tokens(256, 3);
+        let dense = prefill_reference(&w, &t, None);
+        let flex = FlexParams { gamma: 1.0, ..Default::default() };
+        let sparse = prefill_reference(&w, &t, Some(&flex));
+        // with 2 blocks and full coverage the outputs should agree closely
+        let rel = crate::util::stats::rel_l2(&sparse.hidden.data, &dense.hidden.data);
+        assert!(rel < 0.05, "rel {rel}");
+    }
+
+    #[test]
+    fn attn_step_diag_masks_future() {
+        let mut rng = Prng::new(4);
+        let mut mk = |r: usize, c: usize| MatI8 {
+            rows: r,
+            cols: c,
+            data: (0..r * c).map(|_| rng.i8_sym()).collect(),
+        };
+        let q = mk(8, 16);
+        let k = mk(8, 16);
+        let v = mk(8, 16);
+        let mut m = vec![-1e30f32; 8];
+        let mut l = vec![0.0f32; 8];
+        let mut acc = MatF32::zeros(8, 16);
+        attn_step_w8a8(&q, 0.02, &k, 0.02, &v, 0.02, &mut m, &mut l, &mut acc, true);
+        // row 0 sees only col 0 => l[0] == 1 (exp(s - m) with m == s)
+        assert!((l[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn logits_have_vocab_len() {
+        let w = ModelWeights::generate(&TINY, 15);
+        let out = prefill_reference(&w, &tokens(128, 5), None);
+        assert_eq!(out.logits_last.len(), TINY.vocab);
+    }
+}

@@ -1,0 +1,10 @@
+//! Model substrate: seeded-random quantized weights, byte-level embedding,
+//! and the pure-Rust W8A8 prefill forward used as the oracle for the
+//! PJRT-backed coordinator pipeline.
+
+pub mod decode;
+pub mod forward;
+pub mod weights;
+
+pub use forward::{prefill_reference, PrefillOutput};
+pub use weights::{LayerWeights, ModelWeights};

@@ -1,0 +1,132 @@
+//! Seeded-random quantized model weights.
+//!
+//! No checkpoints can be downloaded in this environment (see DESIGN.md
+//! substitution table), so weights are generated from a seed with
+//! Xavier-style scaling — TTFT and sparsity behaviour depend on shapes, not
+//! on trained values. Weight tensors are stored exactly as the AOT
+//! artifacts consume them: int8 + per-tensor f32 scale, layout [in, out].
+
+use crate::config::ModelConfig;
+use crate::quant::quantize_mat;
+use crate::tensor::{MatF32, QTensor};
+use crate::util::prng::Prng;
+
+/// One transformer layer's quantized weights.
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    pub wq: QTensor, // [D, H*dh]
+    pub wk: QTensor, // [D, Hk*dh]
+    pub wv: QTensor, // [D, Hk*dh]
+    pub wo: QTensor, // [H*dh, D]
+    pub wg: QTensor, // [D, F]
+    pub wu: QTensor, // [D, F]
+    pub wd: QTensor, // [F, D]
+    pub g_attn: Vec<f32>, // RMSNorm gain (pre-attention)
+    pub g_ffn: Vec<f32>,  // RMSNorm gain (pre-FFN)
+}
+
+/// Full model: embedding (f32), layers, final norm, LM head.
+#[derive(Clone, Debug)]
+pub struct ModelWeights {
+    pub cfg: ModelConfig,
+    pub embed: MatF32, // [V, D]
+    pub layers: Vec<LayerWeights>,
+    pub g_final: Vec<f32>,
+    pub lm_head: QTensor, // [D, V]
+}
+
+fn rand_mat(rng: &mut Prng, rows: usize, cols: usize, std: f32) -> MatF32 {
+    MatF32::from_fn(rows, cols, |_, _| rng.normal() * std)
+}
+
+fn rand_q(rng: &mut Prng, rows: usize, cols: usize) -> QTensor {
+    // Xavier-ish: std = 1/sqrt(fan_in)
+    let std = 1.0 / (rows as f32).sqrt();
+    quantize_mat(&rand_mat(rng, rows, cols, std))
+}
+
+impl ModelWeights {
+    /// Generate a model deterministically from `seed`.
+    pub fn generate(cfg: &ModelConfig, seed: u64) -> Self {
+        let mut root = Prng::new(seed);
+        let d = cfg.d_model;
+        let embed = rand_mat(&mut root.fork(0xE), cfg.vocab, d, 1.0);
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for li in 0..cfg.n_layers {
+            let mut r = root.fork(li as u64 + 1);
+            layers.push(LayerWeights {
+                wq: rand_q(&mut r, d, cfg.q_dim()),
+                wk: rand_q(&mut r, d, cfg.kv_dim()),
+                wv: rand_q(&mut r, d, cfg.kv_dim()),
+                wo: rand_q(&mut r, cfg.q_dim(), d),
+                wg: rand_q(&mut r, d, cfg.d_ffn),
+                wu: rand_q(&mut r, d, cfg.d_ffn),
+                wd: rand_q(&mut r, cfg.d_ffn, d),
+                g_attn: (0..d).map(|_| 1.0 + 0.1 * r.normal()).collect(),
+                g_ffn: (0..d).map(|_| 1.0 + 0.1 * r.normal()).collect(),
+            });
+        }
+        let g_final = vec![1.0; d];
+        let lm_head = rand_q(&mut root.fork(0x1F), d, cfg.vocab);
+        ModelWeights { cfg: cfg.clone(), embed, layers, g_final, lm_head }
+    }
+
+    /// Embed a byte-token sequence: [S, D].
+    pub fn embed_tokens(&self, tokens: &[u8]) -> MatF32 {
+        let d = self.cfg.d_model;
+        let mut out = MatF32::zeros(tokens.len(), d);
+        for (r, &t) in tokens.iter().enumerate() {
+            out.row_mut(r).copy_from_slice(self.embed.row(t as usize % self.cfg.vocab));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TINY;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = ModelWeights::generate(&TINY, 7);
+        let b = ModelWeights::generate(&TINY, 7);
+        assert_eq!(a.layers[0].wq.q.data, b.layers[0].wq.q.data);
+        assert_eq!(a.layers[1].wd.scale, b.layers[1].wd.scale);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = ModelWeights::generate(&TINY, 1);
+        let b = ModelWeights::generate(&TINY, 2);
+        assert_ne!(a.layers[0].wq.q.data, b.layers[0].wq.q.data);
+    }
+
+    #[test]
+    fn shapes_match_config() {
+        let m = ModelWeights::generate(&TINY, 3);
+        assert_eq!(m.layers.len(), TINY.n_layers);
+        let l = &m.layers[0];
+        assert_eq!((l.wq.q.rows, l.wq.q.cols), (TINY.d_model, TINY.q_dim()));
+        assert_eq!((l.wk.q.rows, l.wk.q.cols), (TINY.d_model, TINY.kv_dim()));
+        assert_eq!((l.wd.q.rows, l.wd.q.cols), (TINY.d_ffn, TINY.d_model));
+        assert_eq!(m.embed.rows, TINY.vocab);
+    }
+
+    #[test]
+    fn embed_tokens_lookup() {
+        let m = ModelWeights::generate(&TINY, 4);
+        let e = m.embed_tokens(&[0, 5, 0]);
+        assert_eq!(e.rows, 3);
+        assert_eq!(e.row(0), e.row(2));
+        assert_ne!(e.row(0), e.row(1));
+    }
+
+    #[test]
+    fn weight_scales_reasonable() {
+        let m = ModelWeights::generate(&TINY, 5);
+        for l in &m.layers {
+            assert!(l.wq.scale > 0.0 && l.wq.scale < 1.0);
+        }
+    }
+}

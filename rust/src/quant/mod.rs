@@ -1,0 +1,193 @@
+//! W8A8 quantization + the Hybrid MPU's arithmetic decompositions (§IV-D).
+//!
+//! `quantize_sym` / `int8_matmul` implement the repo-wide W8A8 contract
+//! (identical to `ref.py`). `bitplane` and `nibble` implement the paper's
+//! LUT-based multiplier decompositions — Eq. (5)-(8) — and are proven
+//! exactly equal to direct int8 multiplication by unit + property tests.
+//! The simulator's MPU model uses their cost characteristics; the functional
+//! path uses the direct form (same numbers by the equivalence proof).
+
+pub mod bitplane;
+pub mod nibble;
+
+use crate::tensor::{MatF32, MatI8, QTensor};
+
+/// Scale floor, matching `ref.SCALE_EPS`.
+pub const SCALE_EPS: f32 = 1e-8;
+
+/// Symmetric per-tensor scale: max|x| / 127, floored.
+pub fn quant_scale(data: &[f32]) -> f32 {
+    let mx = data.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+    mx.max(SCALE_EPS) / 127.0
+}
+
+/// Quantize to int8 with a given scale (round-half-away like jnp.round?
+/// jnp.round is round-half-even; we match it exactly).
+#[inline]
+pub fn quantize_one(x: f32, scale: f32) -> i8 {
+    let v = x / scale;
+    // f32::round_ties_even matches jnp.round (banker's rounding).
+    let r = v.round_ties_even();
+    r.clamp(-127.0, 127.0) as i8
+}
+
+/// Quantize a matrix symmetrically (per-tensor scale).
+pub fn quantize_mat(x: &MatF32) -> QTensor {
+    let scale = quant_scale(&x.data);
+    let q = MatI8 {
+        rows: x.rows,
+        cols: x.cols,
+        data: x.data.iter().map(|&v| quantize_one(v, scale)).collect(),
+    };
+    QTensor { q, scale }
+}
+
+/// Quantize a slice with an externally chosen scale.
+pub fn quantize_with(x: &[f32], scale: f32, out: &mut [i8]) {
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = quantize_one(v, scale);
+    }
+}
+
+/// Exact W8A8 matmul: C_i32[M,N] = A_i8[M,K] @ B_i8[K,N].
+pub fn int8_matmul(a: &MatI8, b: &MatI8) -> Vec<i32> {
+    assert_eq!(a.cols, b.rows, "int8_matmul dims");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut out = vec![0i32; m * n];
+    for i in 0..m {
+        let arow = a.row(i);
+        let orow = &mut out[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let av = arow[kk] as i32;
+            if av == 0 {
+                continue;
+            }
+            let brow = b.row(kk);
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv as i32;
+            }
+        }
+    }
+    out
+}
+
+/// W8A8 matmul where B is given transposed (B^T is [N,K] row-major) — the
+/// score-tile shape (Q @ K^T). Much better locality than `int8_matmul`.
+pub fn int8_matmul_bt(a: &MatI8, bt: &MatI8) -> Vec<i32> {
+    assert_eq!(a.cols, bt.cols, "int8_matmul_bt dims");
+    let (m, n) = (a.rows, bt.rows);
+    let mut out = vec![0i32; m * n];
+    for i in 0..m {
+        let arow = a.row(i);
+        for j in 0..n {
+            let brow = bt.row(j);
+            let mut s = 0i32;
+            for (&x, &y) in arow.iter().zip(brow) {
+                s += x as i32 * y as i32;
+            }
+            out[i * n + j] = s;
+        }
+    }
+    out
+}
+
+/// Dequantized W8A8 matmul: f32 = (A @ B) * sa * sb.
+pub fn int8_matmul_deq(a: &MatI8, sa: f32, b: &MatI8, sb: f32) -> MatF32 {
+    let acc = int8_matmul(a, b);
+    let s = sa * sb;
+    MatF32 {
+        rows: a.rows,
+        cols: b.cols,
+        data: acc.iter().map(|&v| v as f32 * s).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+    use crate::util::prop::forall_ck;
+
+    fn rand_i8_mat(rng: &mut Prng, r: usize, c: usize) -> MatI8 {
+        MatI8 { rows: r, cols: c, data: (0..r * c).map(|_| rng.i8_sym()).collect() }
+    }
+
+    #[test]
+    fn quant_scale_floor() {
+        assert!(quant_scale(&[0.0, 0.0]) > 0.0);
+    }
+
+    #[test]
+    fn quantize_saturates() {
+        assert_eq!(quantize_one(1e9, 1.0), 127);
+        assert_eq!(quantize_one(-1e9, 1.0), -127);
+    }
+
+    #[test]
+    fn quantize_round_ties_even() {
+        // 0.5/1.0 rounds to 0 (ties-to-even), 1.5 rounds to 2 — jnp.round.
+        assert_eq!(quantize_one(0.5, 1.0), 0);
+        assert_eq!(quantize_one(1.5, 1.0), 2);
+        assert_eq!(quantize_one(-0.5, 1.0), 0);
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_scale() {
+        let mut rng = Prng::new(5);
+        let x = MatF32::from_fn(16, 16, |_, _| rng.normal() * 3.0);
+        let qt = quantize_mat(&x);
+        let back = qt.dequant();
+        for (a, b) in x.data.iter().zip(&back.data) {
+            // values beyond +/-127*scale saturate; inside, error <= scale/2
+            if a.abs() <= 127.0 * qt.scale {
+                assert!((a - b).abs() <= qt.scale * 0.5 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn int8_matmul_small_known() {
+        let a = MatI8::from_vec(2, 2, vec![1, 2, 3, 4]);
+        let b = MatI8::from_vec(2, 2, vec![5, 6, 7, 8]);
+        assert_eq!(int8_matmul(&a, &b), vec![19, 22, 43, 50]);
+    }
+
+    #[test]
+    fn int8_matmul_bt_matches_plain() {
+        let mut rng = Prng::new(6);
+        let a = rand_i8_mat(&mut rng, 8, 16);
+        let b = rand_i8_mat(&mut rng, 16, 12);
+        let plain = int8_matmul(&a, &b);
+        let bt = int8_matmul_bt(&a, &b.transpose());
+        assert_eq!(plain, bt);
+    }
+
+    #[test]
+    fn int8_matmul_no_overflow_at_k2304() {
+        // max-magnitude accumulation fits i32 for our K ranges
+        let a = MatI8 { rows: 1, cols: 2304, data: vec![127; 2304] };
+        let b = MatI8 { rows: 2304, cols: 1, data: vec![127; 2304] };
+        assert_eq!(int8_matmul(&a, &b)[0], 127 * 127 * 2304);
+    }
+
+    #[test]
+    fn prop_matmul_bt_equivalence() {
+        forall_ck(
+            7,
+            30,
+            |rng, size| {
+                let m = 1 + size % 8;
+                let k = 1 + size % 32;
+                let n = 1 + size % 8;
+                (rand_i8_mat(rng, m, k), rand_i8_mat(rng, k, n))
+            },
+            |(a, b)| {
+                if int8_matmul(a, b) == int8_matmul_bt(a, &b.transpose()) {
+                    Ok(())
+                } else {
+                    Err("bt mismatch".into())
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,95 @@
+//! Nibble (4-bit) partitioned int8 multiplication — paper Eq. (7)-(8).
+//!
+//! a.b = aL*bL + (aH*bL + aL*bH) << 4 + (aH*bH) << 8
+//!
+//! Each term is an INT4xINT4 product implementable as a small LUT ROM
+//! (256-entry). The paper uses this to cut the bit-plane PE's latency and
+//! LUT count; we prove exact equivalence with direct multiplication and
+//! export the LUT-cost constants for the resource model.
+
+/// Split a signed i8 into (high, low) nibbles such that
+/// `v == high * 16 + low` with `low` in [0, 15] (unsigned) and `high` in
+/// [-8, 7] (signed) — the usual radix-16 signed-digit split.
+#[inline]
+pub fn split_nibbles(v: i8) -> (i32, i32) {
+    let low = (v as i32) & 0xF;
+    let high = (v as i32) >> 4; // arithmetic shift keeps the sign
+    (high, low)
+}
+
+/// Exact int8 multiply via nibble partitioning (Eq. 8).
+pub fn mul_nibble(a: i8, b: i8) -> i32 {
+    let (ah, al) = split_nibbles(a);
+    let (bh, bl) = split_nibbles(b);
+    // each term is a product of values in [-8,15] — an INT4xINT4-class LUT
+    al * bl + ((ah * bl + al * bh) << 4) + ((ah * bh) << 8)
+}
+
+/// Dot product via nibble PEs.
+pub fn dot_nibble(a: &[i8], b: &[i8]) -> i32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| mul_nibble(x, y)).sum()
+}
+
+/// LUT cost of one nibble-partitioned PE: four INT4 products (LUT6-based,
+/// ~11 LUTs each) + shift-add tree (~12 LUTs of carry chain) ≈ 56 LUTs —
+/// the paper's motivation for preferring nibbles over raw bit-planes.
+pub const LUTS_PER_NIBBLE_PE: usize = 56;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn split_reassembles() {
+        for v in i8::MIN..=i8::MAX {
+            let (h, l) = split_nibbles(v);
+            assert_eq!(h * 16 + l, v as i32, "v={v}");
+            assert!((0..16).contains(&l));
+            assert!((-8..8).contains(&h));
+        }
+    }
+
+    #[test]
+    fn matches_direct_full_exhaustive() {
+        for a in i8::MIN..=i8::MAX {
+            for b in i8::MIN..=i8::MAX {
+                assert_eq!(mul_nibble(a, b), a as i32 * b as i32, "{a}*{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn nibble_equals_bitplane() {
+        // the two decompositions are interchangeable in the MPU
+        for a in (-127i8..=127).step_by(7) {
+            for b in (-127i8..=127).step_by(11) {
+                assert_eq!(mul_nibble(a, b), super::super::bitplane::mul_bitplane(a, b));
+            }
+        }
+    }
+
+    #[test]
+    fn prop_dot_matches_direct() {
+        forall(
+            13,
+            50,
+            |rng, size| {
+                let n = 1 + size * 2;
+                let a: Vec<i8> = (0..n).map(|_| rng.i8_sym()).collect();
+                let b: Vec<i8> = (0..n).map(|_| rng.i8_sym()).collect();
+                (a, b)
+            },
+            |(a, b)| {
+                let direct: i32 = a.iter().zip(b.iter()).map(|(&x, &y)| x as i32 * y as i32).sum();
+                dot_nibble(a, b) == direct
+            },
+        );
+    }
+
+    #[test]
+    fn nibble_pe_cheaper_than_bitplane_pe() {
+        assert!(LUTS_PER_NIBBLE_PE < super::super::bitplane::LUTS_PER_BITPLANE_PE);
+    }
+}

@@ -1,0 +1,248 @@
+//! AOT artifact manifest: parsing + shape validation.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.txt` describing every
+//! lowered entry point (dtype + dims of each parameter and result) and the
+//! model configs it lowered for. The runtime parses this before compiling
+//! anything so Rust/Python config drift fails loudly at load time, not as a
+//! shape error deep inside PJRT.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Element dtype of an artifact parameter/result.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    S8,
+    S32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "s8" => Ok(Dtype::S8),
+            "s32" => Ok(Dtype::S32),
+            other => bail!("unknown dtype {other}"),
+        }
+    }
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::S32 => 4,
+            Dtype::S8 => 1,
+        }
+    }
+}
+
+/// Shape of one parameter or result ("scalar" == rank 0).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShapeDecl {
+    pub dtype: Dtype,
+    pub dims: Vec<usize>,
+}
+
+impl ShapeDecl {
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// One lowered entry point.
+#[derive(Clone, Debug)]
+pub struct ArtifactDecl {
+    pub cfg: String,
+    pub entry: String,
+    pub file: PathBuf,
+    pub inputs: Vec<ShapeDecl>,
+    pub outputs: Vec<ShapeDecl>,
+}
+
+/// Model dims recorded by the AOT driver for cross-language validation.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CfgDims {
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub d_ffn: usize,
+    pub n_layers: usize,
+    pub vocab: usize,
+    pub sau_batch: usize,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub configs: HashMap<String, CfgDims>,
+    pub artifacts: Vec<ArtifactDecl>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let mut m = Manifest { dir: dir.clone(), ..Default::default() };
+        let mut cur: Option<ArtifactDecl> = None;
+        for (lno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let kind = parts.next().unwrap();
+            let rest: Vec<&str> = parts.collect();
+            match kind {
+                "cfg" => {
+                    let name = rest.first().ok_or_else(|| anyhow!("cfg line {lno}"))?;
+                    let mut dims = CfgDims::default();
+                    for kv in &rest[1..] {
+                        let (k, v) = kv
+                            .split_once('=')
+                            .ok_or_else(|| anyhow!("bad cfg kv {kv} at line {lno}"))?;
+                        let v: usize = v.parse().context("cfg value")?;
+                        match k {
+                            "d_model" => dims.d_model = v,
+                            "n_heads" => dims.n_heads = v,
+                            "n_kv_heads" => dims.n_kv_heads = v,
+                            "d_head" => dims.d_head = v,
+                            "d_ffn" => dims.d_ffn = v,
+                            "n_layers" => dims.n_layers = v,
+                            "vocab" => dims.vocab = v,
+                            "sau_batch" => dims.sau_batch = v,
+                            _ => bail!("unknown cfg key {k} at line {lno}"),
+                        }
+                    }
+                    m.configs.insert(name.to_string(), dims);
+                }
+                "artifact" => {
+                    if let Some(a) = cur.take() {
+                        m.artifacts.push(a);
+                    }
+                    let [cfg, entry, file] = rest[..] else {
+                        bail!("bad artifact line {lno}");
+                    };
+                    cur = Some(ArtifactDecl {
+                        cfg: cfg.to_string(),
+                        entry: entry.to_string(),
+                        file: dir.join(file),
+                        inputs: vec![],
+                        outputs: vec![],
+                    });
+                }
+                "in" | "out" => {
+                    let a = cur.as_mut().ok_or_else(|| anyhow!("{kind} before artifact"))?;
+                    let [_idx, dt, dims] = rest[..] else {
+                        bail!("bad {kind} line {lno}");
+                    };
+                    let dtype = Dtype::parse(dt)?;
+                    let dims: Vec<usize> = if dims == "scalar" {
+                        vec![]
+                    } else {
+                        dims.split('x')
+                            .map(|d| d.parse().context("dim"))
+                            .collect::<Result<_>>()?
+                    };
+                    let decl = ShapeDecl { dtype, dims };
+                    if kind == "in" {
+                        a.inputs.push(decl);
+                    } else {
+                        a.outputs.push(decl);
+                    }
+                }
+                other => bail!("unknown manifest line kind {other} at {lno}"),
+            }
+        }
+        if let Some(a) = cur.take() {
+            m.artifacts.push(a);
+        }
+        Ok(m)
+    }
+
+    pub fn find(&self, cfg: &str, entry: &str) -> Option<&ArtifactDecl> {
+        self.artifacts.iter().find(|a| a.cfg == cfg && a.entry == entry)
+    }
+
+    /// Check the manifest's recorded dims against the Rust config.
+    pub fn validate_config(&self, cfg: &crate::config::ModelConfig) -> Result<()> {
+        let dims = self
+            .configs
+            .get(cfg.name)
+            .ok_or_else(|| anyhow!("config {} not in manifest", cfg.name))?;
+        let pairs = [
+            ("d_model", dims.d_model, cfg.d_model),
+            ("n_heads", dims.n_heads, cfg.n_heads),
+            ("n_kv_heads", dims.n_kv_heads, cfg.n_kv_heads),
+            ("d_head", dims.d_head, cfg.d_head),
+            ("d_ffn", dims.d_ffn, cfg.d_ffn),
+            ("n_layers", dims.n_layers, cfg.n_layers),
+            ("vocab", dims.vocab, cfg.vocab),
+        ];
+        for (name, py, rs) in pairs {
+            if py != rs {
+                bail!("config drift on {}: python={} rust={} — re-run make artifacts", name, py, rs);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+cfg tiny d_model=256 n_heads=4 n_kv_heads=2 d_head=64 d_ffn=768 n_layers=2 vocab=256 sau_batch=8
+artifact tiny qkv_chunk tiny__qkv_chunk.hlo.txt
+in 0 f32 128x256
+in 1 s8 256x256
+in 2 f32 scalar
+out 0 s8 4x128x64
+out 1 f32 scalar
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = &m.artifacts[0];
+        assert_eq!(a.entry, "qkv_chunk");
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[0], ShapeDecl { dtype: Dtype::F32, dims: vec![128, 256] });
+        assert_eq!(a.inputs[2].dims.len(), 0);
+        assert_eq!(a.outputs[0].dtype, Dtype::S8);
+        assert_eq!(m.configs["tiny"].d_ffn, 768);
+    }
+
+    #[test]
+    fn validate_config_catches_drift() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        let mut cfg = crate::config::TINY.clone();
+        assert!(m.validate_config(&cfg).is_ok());
+        cfg.d_ffn = 1024;
+        assert!(m.validate_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("bogus line", PathBuf::from("/tmp")).is_err());
+        assert!(Manifest::parse("in 0 f32 2x2", PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn elements_product() {
+        let s = ShapeDecl { dtype: Dtype::F32, dims: vec![2, 3, 4] };
+        assert_eq!(s.elements(), 24);
+        let sc = ShapeDecl { dtype: Dtype::F32, dims: vec![] };
+        assert_eq!(sc.elements(), 1);
+    }
+}

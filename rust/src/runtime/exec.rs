@@ -1,0 +1,140 @@
+//! Typed argument/result marshalling between Rust slices and XLA literals.
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal};
+
+use super::artifacts::{Dtype, ShapeDecl};
+
+/// A typed argument for an artifact call. Borrowed slices avoid copies on
+/// the caller side; the literal construction is the single copy point.
+#[derive(Clone, Debug)]
+pub enum Arg<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I8(&'a [i8], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+    ScalarF32(f32),
+    ScalarI32(i32),
+}
+
+impl<'a> Arg<'a> {
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Arg::F32(..) | Arg::ScalarF32(_) => Dtype::F32,
+            Arg::I8(..) => Dtype::S8,
+            Arg::I32(..) | Arg::ScalarI32(_) => Dtype::S32,
+        }
+    }
+
+    pub fn dims(&self) -> Vec<usize> {
+        match self {
+            Arg::F32(_, d) | Arg::I8(_, d) | Arg::I32(_, d) => d.to_vec(),
+            Arg::ScalarF32(_) | Arg::ScalarI32(_) => vec![],
+        }
+    }
+
+    /// Validate against a manifest shape declaration.
+    pub fn check(&self, decl: &ShapeDecl, pos: usize) -> Result<()> {
+        if self.dtype() != decl.dtype {
+            bail!("arg {pos}: dtype {:?} != manifest {:?}", self.dtype(), decl.dtype);
+        }
+        let dims = self.dims();
+        if dims != decl.dims {
+            bail!("arg {pos}: dims {:?} != manifest {:?}", dims, decl.dims);
+        }
+        let len = match self {
+            Arg::F32(v, _) => v.len(),
+            Arg::I8(v, _) => v.len(),
+            Arg::I32(v, _) => v.len(),
+            _ => 1,
+        };
+        if len != decl.elements() {
+            bail!("arg {pos}: {len} elements for dims {:?}", decl.dims);
+        }
+        Ok(())
+    }
+
+    /// Build the XLA literal (one host copy).
+    pub fn to_literal(&self) -> Result<Literal> {
+        fn bytes_of<T>(v: &[T]) -> &[u8] {
+            unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v))
+            }
+        }
+        let lit = match self {
+            Arg::F32(v, d) => {
+                Literal::create_from_shape_and_untyped_data(ElementType::F32, d, bytes_of(v))
+                    .context("f32 literal")?
+            }
+            Arg::I8(v, d) => {
+                Literal::create_from_shape_and_untyped_data(ElementType::S8, d, bytes_of(v))
+                    .context("i8 literal")?
+            }
+            Arg::I32(v, d) => {
+                Literal::create_from_shape_and_untyped_data(ElementType::S32, d, bytes_of(v))
+                    .context("i32 literal")?
+            }
+            Arg::ScalarF32(v) => Literal::scalar(*v),
+            Arg::ScalarI32(v) => Literal::scalar(*v),
+        };
+        Ok(lit)
+    }
+}
+
+/// Typed result extraction.
+pub fn literal_f32(lit: &Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().context("f32 result")
+}
+
+pub fn literal_i8(lit: &Literal) -> Result<Vec<i8>> {
+    lit.to_vec::<i8>().context("i8 result")
+}
+
+pub fn literal_scalar_f32(lit: &Literal) -> Result<f32> {
+    Ok(literal_f32(lit)?[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arg_dims_and_dtype() {
+        let v = [1.0f32, 2.0];
+        let a = Arg::F32(&v, &[2]);
+        assert_eq!(a.dtype(), Dtype::F32);
+        assert_eq!(a.dims(), vec![2]);
+        assert_eq!(Arg::ScalarI32(3).dims(), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn check_validates() {
+        let v = [1i8, 2, 3, 4];
+        let a = Arg::I8(&v, &[2, 2]);
+        let ok = ShapeDecl { dtype: Dtype::S8, dims: vec![2, 2] };
+        let bad_dims = ShapeDecl { dtype: Dtype::S8, dims: vec![4] };
+        let bad_ty = ShapeDecl { dtype: Dtype::F32, dims: vec![2, 2] };
+        assert!(a.check(&ok, 0).is_ok());
+        assert!(a.check(&bad_dims, 0).is_err());
+        assert!(a.check(&bad_ty, 0).is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let v = [1.5f32, -2.5, 3.5, 0.0];
+        let lit = Arg::F32(&v, &[2, 2]).to_literal().unwrap();
+        assert_eq!(literal_f32(&lit).unwrap(), v.to_vec());
+    }
+
+    #[test]
+    fn literal_roundtrip_i8() {
+        let v = [-127i8, 0, 127, 5];
+        let lit = Arg::I8(&v, &[4]).to_literal().unwrap();
+        assert_eq!(literal_i8(&lit).unwrap(), v.to_vec());
+    }
+
+    #[test]
+    fn scalar_literal() {
+        let lit = Arg::ScalarF32(2.5).to_literal().unwrap();
+        assert_eq!(lit.get_first_element::<f32>().unwrap(), 2.5);
+    }
+}

@@ -1,0 +1,147 @@
+//! PJRT runtime: loads HLO-text artifacts and executes them on the CPU
+//! client from the L3 hot path (adapted from /opt/xla-example/load_hlo).
+//!
+//! Interchange is HLO *text* — jax >= 0.5 emits 64-bit instruction ids in
+//! serialized protos which xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids. Every entry point is compiled once and cached; arguments
+//! are validated against the AOT manifest before each call (debug) or at
+//! registration (release).
+
+pub mod artifacts;
+pub mod exec;
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Context, Result};
+
+pub use artifacts::{ArtifactDecl, Dtype, Manifest, ShapeDecl};
+pub use exec::{literal_f32, literal_i8, literal_scalar_f32, Arg};
+
+/// A compiled entry point plus its manifest declaration.
+pub struct Executable {
+    pub decl: ArtifactDecl,
+    exe: xla::PjRtLoadedExecutable,
+    /// cumulative wall time spent in execute (ns) + call count (perf).
+    pub exec_ns: std::cell::Cell<u64>,
+    pub calls: std::cell::Cell<u64>,
+}
+
+impl Executable {
+    /// Execute with typed args; returns the decomposed result tuple.
+    pub fn run(&self, args: &[Arg<'_>]) -> Result<Vec<xla::Literal>> {
+        if args.len() != self.decl.inputs.len() {
+            return Err(anyhow!(
+                "{}: {} args given, {} expected",
+                self.decl.entry,
+                args.len(),
+                self.decl.inputs.len()
+            ));
+        }
+        if cfg!(debug_assertions) {
+            for (i, (a, d)) in args.iter().zip(&self.decl.inputs).enumerate() {
+                a.check(d, i)?;
+            }
+        }
+        let lits: Vec<xla::Literal> =
+            args.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
+        let t0 = std::time::Instant::now();
+        let out = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .with_context(|| format!("executing {}", self.decl.entry))?;
+        let result = out[0][0].to_literal_sync().context("fetch result")?;
+        self.exec_ns.set(self.exec_ns.get() + t0.elapsed().as_nanos() as u64);
+        self.calls.set(self.calls.get() + 1);
+        // aot.py lowers with return_tuple=True: root is always a tuple.
+        let mut result = result;
+        let parts = result.decompose_tuple().context("decompose tuple")?;
+        if parts.len() != self.decl.outputs.len() {
+            return Err(anyhow!(
+                "{}: {} results, manifest says {}",
+                self.decl.entry,
+                parts.len(),
+                self.decl.outputs.len()
+            ));
+        }
+        Ok(parts)
+    }
+}
+
+/// The PJRT runtime: client + compiled-executable registry.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    exes: HashMap<String, Executable>,
+}
+
+impl Runtime {
+    /// Create a CPU-client runtime over an artifact directory.
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        Ok(Runtime { manifest, client, exes: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn key(cfg: &str, entry: &str) -> String {
+        format!("{cfg}::{entry}")
+    }
+
+    /// Compile (or fetch cached) an entry point for a config.
+    pub fn get(&mut self, cfg: &str, entry: &str) -> Result<&Executable> {
+        let key = Self::key(cfg, entry);
+        if !self.exes.contains_key(&key) {
+            let decl = self
+                .manifest
+                .find(cfg, entry)
+                .ok_or_else(|| anyhow!("artifact {cfg}::{entry} not in manifest"))?
+                .clone();
+            let proto = xla::HloModuleProto::from_text_file(&decl.file)
+                .with_context(|| format!("parsing {:?}", decl.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).with_context(|| format!("compiling {key}"))?;
+            self.exes.insert(
+                key.clone(),
+                Executable {
+                    decl,
+                    exe,
+                    exec_ns: std::cell::Cell::new(0),
+                    calls: std::cell::Cell::new(0),
+                },
+            );
+        }
+        Ok(&self.exes[&key])
+    }
+
+    /// Eager-compile every entry point of a config (avoids first-call jitter).
+    pub fn warmup(&mut self, cfg: &str) -> Result<()> {
+        let entries: Vec<String> = self
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.cfg == cfg)
+            .map(|a| a.entry.clone())
+            .collect();
+        if entries.is_empty() {
+            return Err(anyhow!("no artifacts for config {cfg}"));
+        }
+        for e in entries {
+            self.get(cfg, &e)?;
+        }
+        Ok(())
+    }
+
+    /// Perf counters: (entry, calls, total_ms) for every compiled executable.
+    pub fn exec_stats(&self) -> Vec<(String, u64, f64)> {
+        let mut v: Vec<(String, u64, f64)> = self
+            .exes
+            .iter()
+            .map(|(k, e)| (k.clone(), e.calls.get(), e.exec_ns.get() as f64 / 1e6))
+            .collect();
+        v.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+        v
+    }
+}

@@ -1,0 +1,102 @@
+//! Off-chip memory timing model (HBM2 + DDR4 on U280).
+//!
+//! Burst-efficiency model: a transfer of `bytes` issued as bursts of
+//! `burst_bytes` achieves `peak * burst/(burst + OVERHEAD)` of the peak
+//! bandwidth — short head-dependent reads (the paper's challenge 2) are
+//! penalized, long sequential streams approach peak. Channel parallelism is
+//! folded into the peak figure; a transfer additionally pays a fixed
+//! per-request latency.
+
+/// Per-burst protocol/row-activation overhead (equivalent bytes at peak bw).
+pub const BURST_OVERHEAD_BYTES: f64 = 64.0;
+
+/// Fixed request latency (ns) — HBM2 closed-page random access.
+pub const HBM_REQ_LATENCY_NS: f64 = 120.0;
+pub const DDR_REQ_LATENCY_NS: f64 = 90.0;
+
+/// One off-chip memory channel group.
+#[derive(Clone, Copy, Debug)]
+pub struct MemModel {
+    pub peak_gbs: f64,
+    pub req_latency_ns: f64,
+}
+
+impl MemModel {
+    pub fn hbm(peak_gbs: f64) -> Self {
+        MemModel { peak_gbs, req_latency_ns: HBM_REQ_LATENCY_NS }
+    }
+    pub fn ddr(peak_gbs: f64) -> Self {
+        MemModel { peak_gbs, req_latency_ns: DDR_REQ_LATENCY_NS }
+    }
+
+    /// Effective bandwidth (GB/s) at a given burst size.
+    pub fn eff_gbs(&self, burst_bytes: f64) -> f64 {
+        self.peak_gbs * burst_bytes / (burst_bytes + BURST_OVERHEAD_BYTES)
+    }
+
+    /// Time (us) to move `bytes` using bursts of `burst_bytes`.
+    pub fn transfer_us(&self, bytes: f64, burst_bytes: f64) -> f64 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        let bursts = (bytes / burst_bytes).ceil().max(1.0);
+        let bw = self.eff_gbs(burst_bytes); // GB/s == bytes/ns
+        bytes / bw * 1e-3 + bursts * self.req_latency_ns * 1e-3 / 16.0
+        // /16: request pipelining across the 16+ in-flight transactions the
+        // HBM AXI adapters sustain — latency is mostly hidden, not per-burst.
+    }
+}
+
+/// Traffic accounting per memory kind.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Traffic {
+    pub hbm_read_bytes: f64,
+    pub hbm_write_bytes: f64,
+    pub ddr_read_bytes: f64,
+}
+
+impl Traffic {
+    pub fn total_gb(&self) -> f64 {
+        (self.hbm_read_bytes + self.hbm_write_bytes + self.ddr_read_bytes) / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn long_bursts_approach_peak() {
+        let m = MemModel::hbm(460.0);
+        assert!(m.eff_gbs(16384.0) > 0.99 * 460.0);
+        assert!(m.eff_gbs(128.0) < 0.70 * 460.0);
+    }
+
+    #[test]
+    fn transfer_monotone_in_bytes() {
+        let m = MemModel::hbm(460.0);
+        let a = m.transfer_us(1e6, 4096.0);
+        let b = m.transfer_us(2e6, 4096.0);
+        assert!(b > a);
+    }
+
+    #[test]
+    fn small_bursts_cost_more() {
+        let m = MemModel::hbm(460.0);
+        let seq = m.transfer_us(1e6, 16384.0);
+        let rnd = m.transfer_us(1e6, 128.0);
+        assert!(rnd > 1.3 * seq, "rnd {rnd} seq {seq}");
+    }
+
+    #[test]
+    fn ddr_slower_than_hbm() {
+        let hbm = MemModel::hbm(460.0);
+        let ddr = MemModel::ddr(38.0);
+        assert!(ddr.transfer_us(1e6, 4096.0) > hbm.transfer_us(1e6, 4096.0));
+    }
+
+    #[test]
+    fn zero_bytes_zero_time() {
+        assert_eq!(MemModel::hbm(460.0).transfer_us(0.0, 4096.0), 0.0);
+    }
+}

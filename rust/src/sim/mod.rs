@@ -1,0 +1,22 @@
+//! Cycle-approximate FPGA (Alveo U280) performance & energy model.
+//!
+//! The paper's bitstream is not reproducible offline; this simulator models
+//! the architecture's first-order behaviour (§IV): hybrid-MPU systolic
+//! throughput, HBM burst efficiency, the liveness-driven dual-tier cache
+//! with lookahead prefetch, SFU pipelines, FSM phase transitions, and a
+//! utilization-scaled power model. It consumes *real* sparse index sets —
+//! from the functional pipeline at small scale or from the calibrated
+//! synthetic score generator at paper scale — so the performance numbers
+//! reflect genuine dynamic sparsity (DESIGN.md, substitution table).
+
+pub mod hbm;
+pub mod mpu;
+pub mod power;
+pub mod prefill;
+pub mod resources;
+pub mod sfu;
+pub mod synth;
+
+pub use prefill::{sau_wave_qblocks, simulate_prefill, SimReport};
+pub use resources::{resource_report, ResourceReport, Resources};
+pub use synth::{synth_model_indices, HeadKind, HeadMix};

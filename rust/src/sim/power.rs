@@ -1,0 +1,68 @@
+//! FPGA power/energy model.
+//!
+//! Component dynamic power scales with resource counts and per-phase
+//! activity factors; board static power is constant. Constants are
+//! calibrated so the paper's design point draws ~50 W under full load
+//! (typical for a U280 accelerator of this utilization; the paper's 4.5x
+//! Token/Joule claim against a 230 W A5000 pins the same band).
+
+use super::resources::{resource_report, Resources};
+use crate::config::FpgaConfig;
+
+/// Dynamic power coefficients at 175 MHz, full activity.
+pub const W_PER_KLUT: f64 = 0.014;
+pub const W_PER_KFF: f64 = 0.004;
+pub const W_PER_BRAM: f64 = 0.004;
+pub const W_PER_URAM: f64 = 0.006;
+pub const W_PER_DSP: f64 = 0.0012;
+/// HBM interface at full bandwidth.
+pub const W_HBM_FULL: f64 = 6.5;
+
+/// Dynamic power (W) of a resource vector at given activity in [0, 1].
+pub fn dynamic_w(r: &Resources, activity: f64) -> f64 {
+    activity
+        * (r.lut_k * W_PER_KLUT
+            + r.ff_k * W_PER_KFF
+            + r.bram * W_PER_BRAM
+            + r.uram * W_PER_URAM
+            + r.dsp * W_PER_DSP)
+}
+
+/// Average board power (W) given compute activity and HBM bandwidth
+/// utilization over an interval.
+pub fn board_power_w(f: &FpgaConfig, compute_activity: f64, hbm_util: f64) -> f64 {
+    let rep = resource_report(f);
+    f.idle_power_w + dynamic_w(&rep.total, compute_activity) + W_HBM_FULL * hbm_util
+}
+
+/// Energy (J) over `us` microseconds.
+pub fn energy_j(f: &FpgaConfig, compute_activity: f64, hbm_util: f64, us: f64) -> f64 {
+    board_power_w(f, compute_activity, hbm_util) * us * 1e-6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::u280_fast_prefill;
+
+    #[test]
+    fn full_load_power_in_band() {
+        let f = u280_fast_prefill();
+        let p = board_power_w(&f, 0.85, 0.6);
+        assert!(p > 35.0 && p < f.max_power_w + 10.0, "power {p}");
+    }
+
+    #[test]
+    fn idle_power_is_floor() {
+        let f = u280_fast_prefill();
+        assert!((board_power_w(&f, 0.0, 0.0) - f.idle_power_w).abs() < 1e-9);
+    }
+
+    #[test]
+    fn energy_scales_with_time() {
+        let f = u280_fast_prefill();
+        let a = energy_j(&f, 0.5, 0.5, 1e6);
+        let b = energy_j(&f, 0.5, 0.5, 2e6);
+        assert!((b / a - 2.0).abs() < 1e-9);
+    }
+}

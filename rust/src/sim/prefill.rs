@@ -1,0 +1,299 @@
+//! Whole-prefill FPGA performance model: composes the MPU/SFU/HBM/cache
+//! models over the real block-major schedules to produce TTFT and energy
+//! for a (model, context) point — the generator behind Figures 5-8.
+//!
+//! Phase structure per layer (paper Fig. 2): chunked QKV generation ->
+//! SIGU -> SAU (block-major waves, liveness cache, lookahead prefetch) ->
+//! FFN. Weight and activation streams overlap compute (dataflow design);
+//! each phase costs max(compute, memory) plus FSM transition overhead.
+
+use crate::config::{FpgaConfig, ModelConfig, BLOCK};
+use crate::coordinator::joblist::{build_schedule, cache_key, Schedule};
+use crate::flexprefill::HeadIndex;
+use crate::kvcache::{Access, LivenessCache};
+
+use super::hbm::{MemModel, Traffic};
+use super::{mpu, power, sfu};
+
+/// FSM phase-transition overhead (cycles).
+pub const FSM_PHASE_CYCLES: f64 = 256.0;
+
+/// Simulated outcome for one prefill.
+#[derive(Clone, Debug, Default)]
+pub struct SimReport {
+    pub ttft_ms: f64,
+    pub energy_j: f64,
+    pub t_qkv_ms: f64,
+    pub t_sigu_ms: f64,
+    pub t_sau_ms: f64,
+    pub t_ffn_ms: f64,
+    pub traffic: Traffic,
+    pub cache_hit_rate: f64,
+    pub avg_density: f64,
+    pub total_jobs: usize,
+    /// Mean MPU utilization during compute phases.
+    pub mpu_utilization: f64,
+}
+
+impl SimReport {
+    pub fn tokens_per_joule(&self) -> f64 {
+        if self.energy_j <= 0.0 {
+            return 0.0;
+        }
+        1.0 / self.energy_j
+    }
+}
+
+/// KV block bytes (int8 K + V for one kv head).
+fn kv_block_bytes(cfg: &ModelConfig) -> f64 {
+    (2 * BLOCK * cfg.d_head) as f64
+}
+
+/// Simulate the SAU over one layer's schedule, updating the cache and
+/// traffic; returns (time_us, compute_us_portion).
+fn sau_layer_us(
+    f: &FpgaConfig,
+    cfg: &ModelConfig,
+    schedule: &Schedule,
+    cache: &mut LivenessCache,
+    traffic: &mut Traffic,
+) -> (f64, f64) {
+    let hbm = MemModel::hbm(f.hbm_bw_gbs);
+    let blk_bytes = kv_block_bytes(cfg);
+    // per-job compute: score 128xdhx128 + PV 128x128xdh on the MPU + SFU
+    // softmax, fused/pipelined -> max of the two engines
+    let score_us = mpu::matmul_us(f, BLOCK, cfg.d_head, BLOCK);
+    let pv_us = mpu::matmul_us(f, BLOCK, BLOCK, cfg.d_head);
+    let sm_us = sfu::softmax_us(f, BLOCK as f64, BLOCK as f64);
+    let job_us = (score_us + pv_us).max(sm_us);
+    // coordinated burst fetch of one KV block (prefetched design)
+    let fetch_us = hbm.transfer_us(blk_bytes, blk_bytes);
+    // on-demand gather (cacheless design): the block arrives as many short
+    // beats with bounded memory-level parallelism and no prefetch overlap —
+    // the paper's challenge 2(b) "many small off-chip memory reads ...
+    // under-utilized bandwidth and pipeline stalls". Exposed latency:
+    // beats * t_req / MLP.
+    let demand_beats = (blk_bytes / 128.0).ceil();
+    let demand_fetch_us = demand_beats * hbm.req_latency_ns * 1e-3 / 5.0
+        + hbm.transfer_us(blk_bytes, 128.0);
+
+    let mut total_us = 0.0;
+    let mut compute_us_total = 0.0;
+    for wave in &schedule.waves {
+        let mut prev_compute_us = 0.0f64;
+        for bj in &wave.blocks {
+            let key = cache_key(bj.kv_head, bj.block);
+            let jobs = bj.jobs.len() as f64;
+            let compute_us = jobs * job_us;
+            if cache.capacity() == 0 {
+                // cacheless: demand-fetch per job group (no residency even
+                // within the wave beyond the current tile), serialized with
+                // compute (no lookahead prefetcher without the cache's
+                // space accounting)
+                cache.lookup(key); // records the miss
+                traffic.hbm_read_bytes += blk_bytes * jobs;
+                total_us += compute_us + jobs * demand_fetch_us;
+                compute_us_total += compute_us;
+                for _ in 0..bj.jobs.len() {
+                    cache.consume(key);
+                }
+                continue;
+            }
+            let mem_us = match cache.lookup(key) {
+                Access::Hit(_) => 0.0,
+                Access::Miss => {
+                    cache.admit(key);
+                    traffic.hbm_read_bytes += blk_bytes;
+                    fetch_us
+                }
+            };
+            // lookahead prefetch: a block's fetch overlaps the previous
+            // block's compute; only the remainder stalls the pipe
+            let stall = (mem_us - prev_compute_us).max(0.0);
+            total_us += compute_us + stall;
+            compute_us_total += compute_us;
+            prev_compute_us = compute_us;
+            for _ in 0..bj.jobs.len() {
+                cache.consume(key);
+            }
+        }
+    }
+    (total_us, compute_us_total)
+}
+
+/// SIGU timing for one layer: stream all key blocks once per kv head
+/// (single-fetch hardware realization — DESIGN.md), score against Q-hat on
+/// the MPU per *query* head, plus the streaming selection pass.
+fn sigu_layer_us(f: &FpgaConfig, cfg: &ModelConfig, n: usize, traffic: &mut Traffic) -> f64 {
+    let hbm = MemModel::hbm(f.hbm_bw_gbs);
+    let kblk_bytes = (BLOCK * cfg.d_head) as f64;
+    // sequential burst stream of K, once per kv head
+    let stream_us =
+        hbm.transfer_us(kblk_bytes * n as f64, 16384.0) * cfg.n_kv_heads as f64;
+    traffic.hbm_read_bytes += kblk_bytes * n as f64 * cfg.n_kv_heads as f64;
+    // score compute: per query head, per block: 128 x dh x 128
+    let score_us =
+        mpu::matmul_us(f, BLOCK, cfg.d_head, BLOCK) * (n * cfg.n_heads) as f64;
+    // selection: streaming coverage scan, ~4 passes over N-length buffers
+    // per head + pooled map for query-aware heads (N x N / lanes)
+    let select_us = cfg.n_heads as f64
+        * (sfu::elementwise_us(f, 4.0 * n as f64) + sfu::elementwise_us(f, (n * n) as f64 * 0.25));
+    stream_us.max(score_us) + select_us
+}
+
+/// Linear layers (QKV + o_proj + FFN) for one layer over all chunks:
+/// weight-stationary tiles, activation streaming overlapped.
+fn linear_layer_us(f: &FpgaConfig, cfg: &ModelConfig, s: usize, traffic: &mut Traffic) -> (f64, f64, f64) {
+    let hbm = MemModel::hbm(f.hbm_bw_gbs);
+    let d = cfg.d_model;
+    let qkv_macs_cols = cfg.q_dim() + 2 * cfg.kv_dim();
+    let qkv_us = mpu::matmul_us(f, s, d, qkv_macs_cols);
+    let oproj_us = mpu::matmul_us(f, s, cfg.q_dim(), d);
+    let ffn_us = mpu::matmul_us(f, s, d, 2 * cfg.d_ffn) + mpu::matmul_us(f, s, cfg.d_ffn, d)
+        + sfu::silu_us(f, (s * cfg.d_ffn) as f64);
+    // weights streamed once per layer (int8, resident in HBM), activations
+    // read+written once per stage
+    let w_bytes = (d * qkv_macs_cols + cfg.q_dim() * d + 3 * d * cfg.d_ffn) as f64;
+    let act_bytes = (s * d) as f64 * 6.0;
+    traffic.hbm_read_bytes += w_bytes + act_bytes * 0.5;
+    traffic.hbm_write_bytes += act_bytes * 0.5;
+    let mem_us = hbm.transfer_us(w_bytes + act_bytes, 16384.0);
+    let compute = qkv_us + oproj_us + ffn_us;
+    (compute.max(mem_us), qkv_us + oproj_us, ffn_us)
+}
+
+/// Full prefill simulation over real index sets.
+///
+/// `index_sets[layer][head]` — from the functional pipeline (small scale)
+/// or `synth::synth_model_indices` (paper scale). If fewer layers of
+/// indices than `cfg.n_layers` are provided they are cycled (layers are
+/// statistically identical).
+pub fn simulate_prefill(
+    f: &FpgaConfig,
+    cfg: &ModelConfig,
+    s: usize,
+    index_sets: &[Vec<HeadIndex>],
+) -> SimReport {
+    assert!(s % BLOCK == 0 && !index_sets.is_empty());
+    let n = s / BLOCK;
+    let mut rep = SimReport::default();
+    let mut traffic = Traffic::default();
+    let cache_blocks = if f.kv_cache_bytes == 0 {
+        0
+    } else {
+        (f.kv_cache_bytes as f64 / kv_block_bytes(cfg)) as usize
+    };
+    let wave_q = sau_wave_qblocks(f, cfg);
+    let mut hits = 0u64;
+    let mut lookups = 0u64;
+    let mut density_sum = 0.0;
+    let fsm_us = FSM_PHASE_CYCLES / f.freq_mhz;
+
+    let mut compute_us_sum = 0.0;
+    for li in 0..cfg.n_layers {
+        let indices = &index_sets[li % index_sets.len()];
+        let (lin_us, qkv_us, ffn_us) = linear_layer_us(f, cfg, s, &mut traffic);
+        rep.t_qkv_ms += (qkv_us / (qkv_us + ffn_us).max(1e-9)) * lin_us / 1000.0;
+        rep.t_ffn_ms += (ffn_us / (qkv_us + ffn_us).max(1e-9)) * lin_us / 1000.0;
+        compute_us_sum += lin_us;
+
+        rep.t_sigu_ms += (sigu_layer_us(f, cfg, n, &mut traffic) + fsm_us) / 1000.0;
+
+        let schedule: Schedule = build_schedule(indices, cfg.group_size(), wave_q);
+        rep.total_jobs += schedule.total_jobs;
+        for idx in indices {
+            density_sum += idx.density();
+        }
+        let t_hot = (f.t_hot_frac * (n * cfg.group_size()) as f64) as u32;
+        let mut cache = if cache_blocks > 0 {
+            LivenessCache::new(cache_blocks, f.hot_fraction, t_hot)
+        } else {
+            LivenessCache::disabled()
+        };
+        cache.init_uses(schedule.uses.iter().copied());
+        let (sau_us, sau_compute_us) = sau_layer_us(f, cfg, &schedule, &mut cache, &mut traffic);
+        compute_us_sum += sau_compute_us;
+        rep.t_sau_ms += (sau_us + fsm_us) / 1000.0;
+        hits += cache.stats().hits();
+        lookups += cache.stats().lookups;
+    }
+
+    rep.ttft_ms = rep.t_qkv_ms + rep.t_sigu_ms + rep.t_sau_ms + rep.t_ffn_ms;
+    rep.cache_hit_rate = if lookups > 0 { hits as f64 / lookups as f64 } else { 0.0 };
+    rep.avg_density = density_sum / (cfg.n_layers * cfg.n_heads) as f64;
+    rep.traffic = traffic;
+    // activity: fraction of TTFT the MPU is busy; HBM util from traffic
+    let busy = (compute_us_sum / 1000.0 / rep.ttft_ms).clamp(0.0, 1.0);
+    let hbm_util = (traffic.total_gb() / (f.hbm_bw_gbs * rep.ttft_ms / 1000.0)).clamp(0.0, 1.0);
+    rep.mpu_utilization = busy;
+    rep.energy_j = power::energy_j(f, 0.3 + 0.6 * busy, hbm_util, rep.ttft_ms * 1000.0);
+    rep
+}
+
+/// Wave size from the banked-accumulator URAM budget: states are
+/// (m, l, acc) per (head, q-block) = BLOCK*(dh+2)*4 bytes.
+pub fn sau_wave_qblocks(_f: &FpgaConfig, cfg: &ModelConfig) -> usize {
+    let state_bytes = BLOCK * (cfg.d_head + 2) * 4;
+    let budget = 4 << 20; // 4 MB of URAM reserved for accumulator banks
+    let states = budget / state_bytes;
+    (states / cfg.n_heads).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{u280_cacheless, u280_dsp_only, u280_fast_prefill, FlexParams, LLAMA32_3B};
+    use crate::sim::synth::{synth_model_indices, HeadMix};
+
+    fn indices(n: usize, heads: usize, layers: usize, seed: u64) -> Vec<Vec<HeadIndex>> {
+        synth_model_indices(heads, layers, n, 32, &HeadMix::default(), &FlexParams::default(), seed)
+    }
+
+    #[test]
+    fn ttft_grows_with_context() {
+        let f = u280_fast_prefill();
+        let cfg = &LLAMA32_3B;
+        let a = simulate_prefill(&f, cfg, 4096, &indices(32, cfg.n_heads, 2, 1));
+        let b = simulate_prefill(&f, cfg, 16384, &indices(128, cfg.n_heads, 2, 1));
+        assert!(b.ttft_ms > 2.0 * a.ttft_ms, "{} vs {}", a.ttft_ms, b.ttft_ms);
+    }
+
+    #[test]
+    fn cache_improves_ttft() {
+        let cfg = &LLAMA32_3B;
+        let idx = indices(128, cfg.n_heads, 2, 2);
+        let with = simulate_prefill(&u280_fast_prefill(), cfg, 16384, &idx);
+        let without = simulate_prefill(&u280_cacheless(), cfg, 16384, &idx);
+        assert!(without.ttft_ms > with.ttft_ms, "{} !> {}", without.ttft_ms, with.ttft_ms);
+        assert!(with.cache_hit_rate > 0.2, "hit rate {}", with.cache_hit_rate);
+        assert_eq!(without.cache_hit_rate, 0.0);
+    }
+
+    #[test]
+    fn hybrid_mpu_beats_dsp_only() {
+        let cfg = &LLAMA32_3B;
+        let idx = indices(64, cfg.n_heads, 2, 3);
+        let hybrid = simulate_prefill(&u280_fast_prefill(), cfg, 8192, &idx);
+        let dsp = simulate_prefill(&u280_dsp_only(), cfg, 8192, &idx);
+        let ratio = dsp.ttft_ms / hybrid.ttft_ms;
+        assert!(ratio > 1.3 && ratio < 2.2, "ratio {ratio}");
+    }
+
+    #[test]
+    fn energy_positive_and_scales() {
+        let cfg = &LLAMA32_3B;
+        let f = u280_fast_prefill();
+        let a = simulate_prefill(&f, cfg, 4096, &indices(32, cfg.n_heads, 1, 4));
+        assert!(a.energy_j > 0.0);
+        assert!(a.tokens_per_joule() > 0.0);
+    }
+
+    #[test]
+    fn traffic_accounted() {
+        let cfg = &LLAMA32_3B;
+        let f = u280_fast_prefill();
+        let r = simulate_prefill(&f, cfg, 4096, &indices(32, cfg.n_heads, 1, 5));
+        assert!(r.traffic.hbm_read_bytes > 0.0);
+        assert!(r.mpu_utilization > 0.0 && r.mpu_utilization <= 1.0);
+    }
+}

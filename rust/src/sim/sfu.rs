@@ -1,0 +1,54 @@
+//! Special Function Unit timing (softmax, SiLU, normalization) — §IV-E.
+//!
+//! The SFU is a 128-lane elementwise pipeline shared across compute units
+//! and arbitrated by the global FSM; a reduction (softmax denominator,
+//! RMS) costs one extra pass. LUT-based exp approximation retires one
+//! element per lane per cycle.
+
+use crate::config::FpgaConfig;
+
+pub const SFU_LANES: f64 = 128.0;
+pub const SFU_PIPE_FILL: f64 = 32.0;
+
+/// Time (us) for an elementwise pass over `elems` elements.
+pub fn elementwise_us(f: &FpgaConfig, elems: f64) -> f64 {
+    ((elems / SFU_LANES) + SFU_PIPE_FILL) / f.freq_mhz
+}
+
+/// Time (us) for a softmax over `rows` rows of `cols` (max + exp-sum +
+/// normalize ~ 3 passes, pipelined to ~2.2).
+pub fn softmax_us(f: &FpgaConfig, rows: f64, cols: f64) -> f64 {
+    elementwise_us(f, rows * cols) * 2.2
+}
+
+/// SiLU / gating over `elems`.
+pub fn silu_us(f: &FpgaConfig, elems: f64) -> f64 {
+    elementwise_us(f, elems) * 1.2
+}
+
+/// RMSNorm over `rows` x `cols` (square+reduce+scale ~ 2 passes).
+pub fn rmsnorm_us(f: &FpgaConfig, rows: f64, cols: f64) -> f64 {
+    elementwise_us(f, rows * cols) * 2.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::u280_fast_prefill;
+
+    #[test]
+    fn softmax_tile_latency_reasonable() {
+        let f = u280_fast_prefill();
+        // 128x128 tile: ~128 cycles + fill, x2.2 -> < 3us
+        let t = softmax_us(&f, 128.0, 128.0);
+        assert!(t > 0.2 && t < 5.0, "{t}");
+    }
+
+    #[test]
+    fn scales_linearly() {
+        let f = u280_fast_prefill();
+        let a = elementwise_us(&f, 1e6);
+        let b = elementwise_us(&f, 2e6);
+        assert!((b / a - 2.0).abs() < 0.05);
+    }
+}

@@ -1,0 +1,191 @@
+//! Minimal dense tensor substrate (row-major f32 / i8 matrices).
+//!
+//! This is the pure-Rust oracle used by the accuracy harness (Table III),
+//! the integration tests that validate the PJRT artifacts, and the
+//! FlexPrefill reference implementation. It is deliberately simple and
+//! allocation-transparent; the performance-critical paths (SAU hot loop)
+//! operate on raw slices, not on these types.
+
+pub mod ops;
+
+/// Row-major f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatF32 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl MatF32 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        MatF32 { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(rows * cols, data.len());
+        MatF32 { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        MatF32 { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Copy rows [r0, r1) into a new matrix.
+    pub fn slice_rows(&self, r0: usize, r1: usize) -> MatF32 {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        MatF32 {
+            rows: r1 - r0,
+            cols: self.cols,
+            data: self.data[r0 * self.cols..r1 * self.cols].to_vec(),
+        }
+    }
+
+    pub fn transpose(&self) -> MatF32 {
+        let mut out = MatF32::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.at(r, c);
+            }
+        }
+        out
+    }
+}
+
+/// Row-major i8 matrix (quantized tensors; always paired with an f32 scale).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatI8 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i8>,
+}
+
+impl MatI8 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        MatI8 { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<i8>) -> Self {
+        assert_eq!(rows * cols, data.len());
+        MatI8 { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> i8 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[i8] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn slice_rows(&self, r0: usize, r1: usize) -> MatI8 {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        MatI8 {
+            rows: r1 - r0,
+            cols: self.cols,
+            data: self.data[r0 * self.cols..r1 * self.cols].to_vec(),
+        }
+    }
+
+    pub fn transpose(&self) -> MatI8 {
+        let mut out = MatI8::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.at(r, c);
+            }
+        }
+        out
+    }
+
+    /// Dequantize with a symmetric scale.
+    pub fn dequant(&self, scale: f32) -> MatF32 {
+        MatF32 {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&q| q as f32 * scale).collect(),
+        }
+    }
+}
+
+/// A quantized tensor: int8 payload + per-tensor symmetric scale.
+#[derive(Clone, Debug)]
+pub struct QTensor {
+    pub q: MatI8,
+    pub scale: f32,
+}
+
+impl QTensor {
+    pub fn dequant(&self) -> MatF32 {
+        self.q.dequant(self.scale)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn at_and_row_consistent() {
+        let m = MatF32::from_fn(3, 4, |r, c| (r * 10 + c) as f32);
+        assert_eq!(m.at(1, 2), 12.0);
+        assert_eq!(m.row(2), &[20.0, 21.0, 22.0, 23.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = MatF32::from_fn(3, 5, |r, c| (r * 5 + c) as f32);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn slice_rows_block() {
+        let m = MatF32::from_fn(4, 2, |r, _| r as f32);
+        let s = m.slice_rows(1, 3);
+        assert_eq!(s.rows, 2);
+        assert_eq!(s.at(0, 0), 1.0);
+        assert_eq!(s.at(1, 1), 2.0);
+    }
+
+    #[test]
+    fn dequant_scales() {
+        let q = MatI8::from_vec(1, 3, vec![-127, 0, 127]);
+        let f = q.dequant(0.5);
+        assert_eq!(f.data, vec![-63.5, 0.0, 63.5]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_len_checked() {
+        MatF32::from_vec(2, 2, vec![0.0; 3]);
+    }
+}

@@ -1,0 +1,263 @@
+//! Dense reference math: matmul, softmax, RMSNorm, RoPE, SiLU.
+//!
+//! These mirror `python/compile/kernels/ref.py` definition-for-definition;
+//! runtime_integration tests assert that running the AOT artifacts through
+//! PJRT reproduces these (so Rust, JAX and the Pallas kernels agree).
+
+use super::MatF32;
+
+/// C[M,N] = A[M,K] @ B[K,N] (f32).
+pub fn matmul(a: &MatF32, b: &MatF32) -> MatF32 {
+    assert_eq!(a.cols, b.rows, "matmul dims");
+    let mut out = MatF32::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let orow = out.row_mut(i);
+        for (k, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = b.row(k);
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// C[M,N] = A[M,K] @ B^T where B is [N,K] (row-major dot of rows).
+pub fn matmul_bt(a: &MatF32, b: &MatF32) -> MatF32 {
+    assert_eq!(a.cols, b.cols, "matmul_bt dims");
+    let mut out = MatF32::zeros(a.rows, b.rows);
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        for j in 0..b.rows {
+            let brow = b.row(j);
+            let mut s = 0.0f32;
+            for (x, y) in arow.iter().zip(brow) {
+                s += x * y;
+            }
+            *out.at_mut(i, j) = s;
+        }
+    }
+    out
+}
+
+/// In-place row-wise softmax.
+pub fn softmax_rows(m: &mut MatF32) {
+    for r in 0..m.rows {
+        let row = m.row_mut(r);
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum.max(1e-30);
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Softmax of a vector (out-of-place).
+pub fn softmax(v: &[f32]) -> Vec<f32> {
+    let mx = v.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = v.iter().map(|x| (x - mx).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    exps.iter().map(|e| e / sum.max(1e-30)).collect()
+}
+
+/// RMSNorm: x * rsqrt(mean(x^2) + eps) * g, row-wise.
+pub fn rmsnorm(x: &MatF32, g: &[f32], eps: f32) -> MatF32 {
+    assert_eq!(x.cols, g.len());
+    let mut out = MatF32::zeros(x.rows, x.cols);
+    for r in 0..x.rows {
+        let row = x.row(r);
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / x.cols as f32;
+        let inv = 1.0 / (ms + eps).sqrt();
+        for (o, (&v, &gv)) in out.row_mut(r).iter_mut().zip(row.iter().zip(g)) {
+            *o = v * inv * gv;
+        }
+    }
+    out
+}
+
+/// Llama-style RoPE (half-rotation pairing), matching `ref.rope_ref`.
+/// x: [T, dh] for one head; pos[t] = absolute position of row t.
+pub fn rope(x: &mut MatF32, pos: &[i32], theta: f32) {
+    let dh = x.cols;
+    let half = dh / 2;
+    assert_eq!(pos.len(), x.rows);
+    for t in 0..x.rows {
+        let p = pos[t] as f32;
+        let row = x.row_mut(t);
+        for i in 0..half {
+            let freq = 1.0 / theta.powf(i as f32 / half as f32);
+            let ang = p * freq;
+            let (sin, cos) = ang.sin_cos();
+            let x1 = row[i];
+            let x2 = row[half + i];
+            row[i] = x1 * cos - x2 * sin;
+            row[half + i] = x1 * sin + x2 * cos;
+        }
+    }
+}
+
+/// SiLU (x * sigmoid(x)) elementwise.
+pub fn silu(x: &mut MatF32) {
+    for v in x.data.iter_mut() {
+        *v = *v / (1.0 + (-*v).exp()) * 1.0 + 0.0; // x*sigmoid(x)
+    }
+}
+
+/// Mean-pool rows within fixed-size blocks: [S, d] -> [S/bs, d].
+pub fn block_pool(x: &MatF32, bs: usize) -> MatF32 {
+    assert_eq!(x.rows % bs, 0, "block_pool rows {} % {}", x.rows, bs);
+    let nb = x.rows / bs;
+    let mut out = MatF32::zeros(nb, x.cols);
+    for b in 0..nb {
+        for r in 0..bs {
+            let row = x.row(b * bs + r);
+            for (o, &v) in out.row_mut(b).iter_mut().zip(row) {
+                *o += v;
+            }
+        }
+        let inv = 1.0 / bs as f32;
+        for o in out.row_mut(b) {
+            *o *= inv;
+        }
+    }
+    out
+}
+
+/// Jensen-Shannon divergence (natural log), matching `ref.jsd_ref`.
+pub fn jsd(p: &[f32], q: &[f32]) -> f32 {
+    assert_eq!(p.len(), q.len());
+    const EPS: f32 = 1e-12;
+    let ps: f32 = p.iter().sum::<f32>().max(EPS);
+    let qs: f32 = q.iter().sum::<f32>().max(EPS);
+    let mut acc = 0.0f64;
+    for (&pi, &qi) in p.iter().zip(q) {
+        let a = pi / ps;
+        let b = qi / qs;
+        let m = 0.5 * (a + b);
+        if a > EPS {
+            acc += 0.5 * (a as f64) * (((a + EPS) / (m + EPS)) as f64).ln();
+        }
+        if b > EPS {
+            acc += 0.5 * (b as f64) * (((b + EPS) / (m + EPS)) as f64).ln();
+        }
+    }
+    acc as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    fn randm(rng: &mut Prng, r: usize, c: usize) -> MatF32 {
+        MatF32::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = MatF32::from_fn(3, 3, |r, c| if r == c { 1.0 } else { 0.0 });
+        let b = MatF32::from_fn(3, 2, |r, c| (r * 2 + c) as f32);
+        assert_eq!(matmul(&a, &b), b);
+    }
+
+    #[test]
+    fn matmul_bt_equals_matmul_of_transpose() {
+        let mut rng = Prng::new(1);
+        let a = randm(&mut rng, 4, 6);
+        let b = randm(&mut rng, 5, 6);
+        let direct = matmul_bt(&a, &b);
+        let via_t = matmul(&a, &b.transpose());
+        for (x, y) in direct.data.iter().zip(&via_t.data) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut rng = Prng::new(2);
+        let mut m = randm(&mut rng, 5, 7);
+        softmax_rows(&mut m);
+        for r in 0..5 {
+            let s: f32 = m.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(m.row(r).iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn softmax_invariant_to_shift() {
+        let a = softmax(&[1.0, 2.0, 3.0]);
+        let b = softmax(&[101.0, 102.0, 103.0]);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rmsnorm_unit_gain_norm() {
+        let x = MatF32::from_vec(1, 4, vec![2.0, 2.0, 2.0, 2.0]);
+        let g = vec![1.0; 4];
+        let out = rmsnorm(&x, &g, 0.0);
+        for v in &out.data {
+            assert!((v - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rope_preserves_norm() {
+        let mut rng = Prng::new(3);
+        let mut x = randm(&mut rng, 4, 64);
+        let orig: Vec<f32> = x.data.iter().map(|v| v * v).collect();
+        let norm0: f32 = orig.iter().sum();
+        rope(&mut x, &[0, 100, 2000, 50000], 10000.0);
+        let norm1: f32 = x.data.iter().map(|v| v * v).sum();
+        assert!((norm0 - norm1).abs() / norm0 < 1e-4);
+    }
+
+    #[test]
+    fn rope_position_zero_is_identity() {
+        let mut rng = Prng::new(4);
+        let x0 = randm(&mut rng, 1, 8);
+        let mut x = x0.clone();
+        rope(&mut x, &[0], 10000.0);
+        for (a, b) in x.data.iter().zip(&x0.data) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn silu_known_values() {
+        let mut x = MatF32::from_vec(1, 2, vec![0.0, 10.0]);
+        silu(&mut x);
+        assert!(x.data[0].abs() < 1e-6);
+        assert!((x.data[1] - 10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn block_pool_means() {
+        let x = MatF32::from_fn(4, 2, |r, _| r as f32);
+        let p = block_pool(&x, 2);
+        assert_eq!(p.rows, 2);
+        assert_eq!(p.at(0, 0), 0.5);
+        assert_eq!(p.at(1, 0), 2.5);
+    }
+
+    #[test]
+    fn jsd_bounds_and_symmetry() {
+        let p = [1.0, 0.0, 0.0];
+        let q = [0.0, 1.0, 0.0];
+        let d = jsd(&p, &q);
+        assert!((d - std::f32::consts::LN_2).abs() < 1e-4);
+        assert!((jsd(&p, &q) - jsd(&q, &p)).abs() < 1e-6);
+        assert!(jsd(&p, &p) < 1e-7);
+    }
+}

@@ -1,0 +1,110 @@
+//! Minimal benchmarking harness (criterion is unavailable offline).
+//!
+//! Every `rust/benches/*.rs` binary uses this: warmup, timed iterations,
+//! mean/p50/p95 reporting, and a black-box to defeat the optimizer. Output
+//! formatting matches the row/series layout of the paper tables so that
+//! `cargo bench | tee bench_output.txt` regenerates them directly.
+
+use std::time::Instant;
+
+/// Re-export of `std::hint::black_box` for bench binaries.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Timing result for a benchmarked closure.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 { self.mean_ns / 1e6 }
+    pub fn mean_us(&self) -> f64 { self.mean_ns / 1e3 }
+}
+
+/// Run `f` for `iters` timed iterations after `warmup` untimed ones.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    let mean = crate::util::stats::mean(&samples);
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        p50_ns: crate::util::stats::percentile(&samples, 50.0),
+        p95_ns: crate::util::stats::percentile(&samples, 95.0),
+    }
+}
+
+/// Adaptive: time-boxed benchmark — at least `min_iters`, stop after
+/// `budget_ms` of measurement.
+pub fn bench_for<F: FnMut()>(name: &str, budget_ms: u64, min_iters: usize, mut f: F) -> BenchResult {
+    f(); // warmup
+    let start = Instant::now();
+    let mut samples = Vec::new();
+    while samples.len() < min_iters || start.elapsed().as_millis() < budget_ms as u128 {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+        if samples.len() > 1_000_000 {
+            break;
+        }
+    }
+    let mean = crate::util::stats::mean(&samples);
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_ns: mean,
+        p50_ns: crate::util::stats::percentile(&samples, 50.0),
+        p95_ns: crate::util::stats::percentile(&samples, 95.0),
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<42} {:>10.3} ms/iter  (p50 {:>9.3}, p95 {:>9.3}, n={})",
+            self.name,
+            self.mean_ns / 1e6,
+            self.p50_ns / 1e6,
+            self.p95_ns / 1e6,
+            self.iters
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut n = 0u64;
+        let r = bench("t", 2, 10, || {
+            n += 1;
+        });
+        assert_eq!(r.iters, 10);
+        assert_eq!(n, 12); // warmup + timed
+        assert!(r.mean_ns >= 0.0);
+    }
+
+    #[test]
+    fn bench_for_respects_min_iters() {
+        let r = bench_for("t", 0, 5, || {});
+        assert!(r.iters >= 5);
+    }
+}

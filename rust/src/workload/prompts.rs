@@ -1,0 +1,169 @@
+//! Synthetic prompt/token-stream generation with controllable structure,
+//! plus request traces for the serving examples and benches.
+
+use crate::util::prng::Prng;
+
+/// The attention structure a synthetic prompt should induce.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PromptKind {
+    /// Uniform random bytes — diffuse attention.
+    Random,
+    /// A few globally repeated motifs — vertical-column structure.
+    Anchored,
+    /// Strong local repetition — slash/diagonal structure.
+    Local,
+    /// Anchored + local mixture (document-like).
+    Mixed,
+}
+
+/// Specification for one synthetic prompt.
+#[derive(Clone, Copy, Debug)]
+pub struct PromptSpec {
+    pub kind: PromptKind,
+    pub tokens: usize,
+    pub seed: u64,
+}
+
+impl PromptSpec {
+    /// Materialize the byte-token stream.
+    pub fn generate(&self) -> Vec<u8> {
+        let mut rng = Prng::new(self.seed);
+        let n = self.tokens;
+        match self.kind {
+            PromptKind::Random => (0..n).map(|_| rng.below(256) as u8).collect(),
+            PromptKind::Anchored => {
+                // ~3% of positions repeat one of 4 motifs of 8 bytes
+                let motifs: Vec<Vec<u8>> = (0..4)
+                    .map(|_| (0..8).map(|_| rng.below(256) as u8).collect())
+                    .collect();
+                let mut out: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+                let inserts = (n / 256).max(1);
+                for _ in 0..inserts {
+                    let m = &motifs[rng.below(4)];
+                    let at = rng.below(n.saturating_sub(m.len()).max(1));
+                    for (i, &b) in m.iter().enumerate() {
+                        if at + i < n {
+                            out[at + i] = b;
+                        }
+                    }
+                }
+                out
+            }
+            PromptKind::Local => {
+                // runs of 16-64 repeated bytes — local self-similarity
+                let mut out = Vec::with_capacity(n);
+                while out.len() < n {
+                    let b = rng.below(256) as u8;
+                    let run = 16 + rng.below(49);
+                    for _ in 0..run.min(n - out.len()) {
+                        out.push(b);
+                    }
+                }
+                out
+            }
+            PromptKind::Mixed => {
+                let half = PromptSpec { kind: PromptKind::Anchored, tokens: n, seed: self.seed }
+                    .generate();
+                let local =
+                    PromptSpec { kind: PromptKind::Local, tokens: n, seed: self.seed ^ 0xA5 }
+                        .generate();
+                half.iter()
+                    .zip(&local)
+                    .enumerate()
+                    .map(|(i, (&a, &l))| if (i / 64) % 2 == 0 { a } else { l })
+                    .collect()
+            }
+        }
+    }
+}
+
+/// A single serving request in a trace.
+#[derive(Clone, Debug)]
+pub struct TraceRequest {
+    pub id: u64,
+    pub spec: PromptSpec,
+    /// Offset from trace start (us) at which the request arrives.
+    pub arrival_us: u64,
+}
+
+/// A batch-of-requests trace for the serving example / benches.
+#[derive(Clone, Debug)]
+pub struct RequestTrace {
+    pub requests: Vec<TraceRequest>,
+}
+
+impl RequestTrace {
+    /// Poisson-ish arrivals with mean inter-arrival `mean_gap_us`.
+    pub fn generate(
+        n_requests: usize,
+        tokens: usize,
+        mean_gap_us: u64,
+        seed: u64,
+    ) -> RequestTrace {
+        let mut rng = Prng::new(seed);
+        let kinds = [PromptKind::Random, PromptKind::Anchored, PromptKind::Local, PromptKind::Mixed];
+        let mut t = 0u64;
+        let requests = (0..n_requests)
+            .map(|i| {
+                // exponential inter-arrival via inverse CDF
+                let u = rng.f32().max(1e-6) as f64;
+                t += (-(u.ln()) * mean_gap_us as f64) as u64;
+                TraceRequest {
+                    id: i as u64,
+                    spec: PromptSpec {
+                        kind: kinds[rng.below(kinds.len())],
+                        tokens,
+                        seed: seed.wrapping_mul(31).wrapping_add(i as u64),
+                    },
+                    arrival_us: t,
+                }
+            })
+            .collect();
+        RequestTrace { requests }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_right_length_all_kinds() {
+        for kind in [PromptKind::Random, PromptKind::Anchored, PromptKind::Local, PromptKind::Mixed]
+        {
+            let p = PromptSpec { kind, tokens: 1024, seed: 3 }.generate();
+            assert_eq!(p.len(), 1024, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let s = PromptSpec { kind: PromptKind::Mixed, tokens: 512, seed: 9 };
+        assert_eq!(s.generate(), s.generate());
+    }
+
+    #[test]
+    fn local_has_long_runs() {
+        let p = PromptSpec { kind: PromptKind::Local, tokens: 4096, seed: 1 }.generate();
+        let mut max_run = 1;
+        let mut run = 1;
+        for i in 1..p.len() {
+            if p[i] == p[i - 1] {
+                run += 1;
+                max_run = max_run.max(run);
+            } else {
+                run = 1;
+            }
+        }
+        assert!(max_run >= 16, "max run {max_run}");
+    }
+
+    #[test]
+    fn trace_arrivals_monotone() {
+        let t = RequestTrace::generate(20, 4096, 1000, 5);
+        assert_eq!(t.requests.len(), 20);
+        for w in t.requests.windows(2) {
+            assert!(w[0].arrival_us <= w[1].arrival_us);
+        }
+    }
+}

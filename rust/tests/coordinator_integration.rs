@@ -1,0 +1,89 @@
+//! Coordinator integration: the multi-worker server over real artifacts.
+//! Requires `make artifacts` (skips otherwise).
+
+use fast_prefill::config::TINY;
+use fast_prefill::coordinator::{EngineConfig, Policy, Server};
+use fast_prefill::workload::prompts::{PromptKind, PromptSpec, TraceRequest};
+
+fn cfg() -> EngineConfig {
+    let mut c = EngineConfig::new(TINY.clone());
+    c.native_sau = true; // keep the test fast; PJRT SAU covered elsewhere
+    c
+}
+
+fn artifacts_present() -> bool {
+    if std::path::Path::new("artifacts/manifest.txt").exists() {
+        true
+    } else {
+        eprintln!("SKIP (run `make artifacts`)");
+        false
+    }
+}
+
+fn req(id: u64, tokens: usize) -> TraceRequest {
+    TraceRequest {
+        id,
+        spec: PromptSpec { kind: PromptKind::Mixed, tokens, seed: 100 + id },
+        arrival_us: 0,
+    }
+}
+
+#[test]
+fn server_completes_all_requests() {
+    if !artifacts_present() {
+        return;
+    }
+    let server = Server::start("artifacts".into(), cfg(), 2, Policy::Fcfs).unwrap();
+    for i in 0..4 {
+        server.submit(req(i, 256));
+    }
+    let done = server.drain().unwrap();
+    assert_eq!(done.len(), 4);
+    let ids: Vec<u64> = done.iter().map(|c| c.request_id).collect();
+    assert_eq!(ids, vec![0, 1, 2, 3]);
+    for c in &done {
+        assert!(c.run.metrics.ttft_us > 0.0);
+        assert!(c.e2e_us >= c.run.metrics.ttft_us);
+        assert_eq!(c.run.metrics.context_tokens, 256);
+    }
+}
+
+#[test]
+fn identical_requests_get_identical_results_across_workers() {
+    if !artifacts_present() {
+        return;
+    }
+    let server = Server::start("artifacts".into(), cfg(), 2, Policy::Fcfs).unwrap();
+    for i in 0..4 {
+        // same seed => same prompt => same first token, whichever worker
+        server.submit(TraceRequest {
+            id: i,
+            spec: PromptSpec { kind: PromptKind::Mixed, tokens: 256, seed: 777 },
+            arrival_us: 0,
+        });
+    }
+    let done = server.drain().unwrap();
+    let t0 = done[0].run.first_token;
+    assert!(done.iter().all(|c| c.run.first_token == t0));
+}
+
+#[test]
+fn sjf_prefers_short_contexts_under_backlog() {
+    if !artifacts_present() {
+        return;
+    }
+    // single worker, pre-filled queue: SJF must run the short ones first
+    let server = Server::start("artifacts".into(), cfg(), 1, Policy::Sjf).unwrap();
+    server.submit(req(0, 512));
+    server.submit(req(1, 128));
+    server.submit(req(2, 384));
+    server.submit(req(3, 128));
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    let done = server.drain().unwrap();
+    assert_eq!(done.len(), 4);
+    // the long request should have waited at least as long as the shorts
+    let long = done.iter().find(|c| c.request_id == 0).unwrap();
+    let short = done.iter().find(|c| c.request_id == 1).unwrap();
+    assert!(long.queue_us >= short.queue_us,
+        "SJF: long queued {} < short {}", long.queue_us, short.queue_us);
+}

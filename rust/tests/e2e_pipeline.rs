@@ -1,0 +1,140 @@
+//! End-to-end: the artifact-backed Engine must agree with the pure-Rust
+//! reference prefill, and both SAU backends (PJRT batched vs native) must
+//! agree with each other. Requires `make artifacts`.
+
+use fast_prefill::config::{FlexParams, TINY};
+use fast_prefill::coordinator::{Engine, EngineConfig};
+use fast_prefill::model::{prefill_reference, ModelWeights};
+use fast_prefill::util::stats::rel_l2;
+use fast_prefill::workload::prompts::{PromptKind, PromptSpec};
+
+fn engine(cfg: EngineConfig) -> Option<Engine> {
+    match Engine::new("artifacts", cfg) {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+fn base_cfg() -> EngineConfig {
+    let mut cfg = EngineConfig::new(TINY.clone());
+    cfg.weight_seed = 1234;
+    cfg
+}
+
+fn tokens(n: usize) -> Vec<u8> {
+    PromptSpec { kind: PromptKind::Mixed, tokens: n, seed: 5 }.generate()
+}
+
+#[test]
+fn engine_dense_matches_reference_forward() {
+    let mut cfg = base_cfg();
+    cfg.flex = None;
+    let Some(mut eng) = engine(cfg) else { return };
+    let toks = tokens(256);
+    let run = eng.prefill(0, &toks).unwrap();
+
+    let w = ModelWeights::generate(&TINY, 1234);
+    let reference = prefill_reference(&w, &toks, None);
+    let ref_last = &reference.hidden.data[(toks.len() - 128) * TINY.d_model..];
+
+    let rel = rel_l2(&run.hidden_last_chunk, ref_last);
+    assert!(rel < 2e-2, "hidden rel err {rel}");
+    // logits should agree closely enough that argmax matches
+    assert_eq!(run.first_token, reference.first_token, "first token differs");
+}
+
+#[test]
+fn engine_flex_matches_reference_forward() {
+    let mut cfg = base_cfg();
+    cfg.flex = Some(FlexParams::default());
+    let Some(mut eng) = engine(cfg) else { return };
+    let toks = tokens(512);
+    let run = eng.prefill(0, &toks).unwrap();
+
+    let w = ModelWeights::generate(&TINY, 1234);
+    let reference = prefill_reference(&w, &toks, Some(&FlexParams::default()));
+    let ref_last = &reference.hidden.data[(toks.len() - 128) * TINY.d_model..];
+
+    // f32 accumulation order differs between XLA and Rust; tiny rounding
+    // shifts can flip borderline int8 quantization and block selections, so
+    // the comparison is statistical, not bitwise.
+    let rel = rel_l2(&run.hidden_last_chunk, ref_last);
+    assert!(rel < 0.05, "hidden rel err {rel}");
+    assert!((run.metrics.density - reference.avg_density).abs() < 0.1);
+}
+
+#[test]
+fn native_and_pjrt_sau_agree() {
+    let toks = tokens(384);
+    let mut cfg_native = base_cfg();
+    cfg_native.native_sau = true;
+    let Some(mut eng_native) = engine(cfg_native) else { return };
+    let run_native = eng_native.prefill(0, &toks).unwrap();
+
+    let mut cfg_pjrt = base_cfg();
+    cfg_pjrt.native_sau = false;
+    let mut eng_pjrt = Engine::new("artifacts", cfg_pjrt).unwrap();
+    let run_pjrt = eng_pjrt.prefill(0, &toks).unwrap();
+
+    // XLA's exp/rounding differs from Rust's in the last ulp; P-requant
+    // boundaries amplify this across layers — agreement is statistical.
+    let rel = rel_l2(&run_pjrt.hidden_last_chunk, &run_native.hidden_last_chunk);
+    assert!(rel < 0.05, "SAU backends diverge: rel {rel}");
+    assert_eq!(run_pjrt.first_token, run_native.first_token);
+    assert_eq!(run_pjrt.metrics.jobs, run_native.metrics.jobs);
+}
+
+#[test]
+fn wave_partitioning_does_not_change_results() {
+    let toks = tokens(512);
+    let mut cfg_one = base_cfg();
+    cfg_one.wave_qblocks = 0; // single wave
+    cfg_one.native_sau = true;
+    let Some(mut eng_one) = engine(cfg_one) else { return };
+    let run_one = eng_one.prefill(0, &toks).unwrap();
+
+    let mut cfg_waved = base_cfg();
+    cfg_waved.wave_qblocks = 1; // maximal wave splitting
+    cfg_waved.native_sau = true;
+    let mut eng_waved = Engine::new("artifacts", cfg_waved).unwrap();
+    let run_waved = eng_waved.prefill(0, &toks).unwrap();
+
+    let rel = rel_l2(&run_waved.hidden_last_chunk, &run_one.hidden_last_chunk);
+    assert!(rel < 1e-4, "wave partitioning changed numerics: {rel}");
+    assert_eq!(run_waved.first_token, run_one.first_token);
+}
+
+#[test]
+fn cacheless_engine_same_numerics_different_stats() {
+    let toks = tokens(512);
+    let mut with_cache = base_cfg();
+    with_cache.native_sau = true;
+    with_cache.wave_qblocks = 2;
+    let Some(mut eng_a) = engine(with_cache) else { return };
+    let a = eng_a.prefill(0, &toks).unwrap();
+
+    let mut no_cache = base_cfg();
+    no_cache.native_sau = true;
+    no_cache.wave_qblocks = 2;
+    no_cache.cache_blocks = 0;
+    let mut eng_b = Engine::new("artifacts", no_cache).unwrap();
+    let b = eng_b.prefill(0, &toks).unwrap();
+
+    assert_eq!(a.first_token, b.first_token, "cache must not affect numerics");
+    assert!(a.metrics.cache_hit_rate > 0.0, "waved run should have reuse hits");
+    assert_eq!(b.metrics.cache_hit_rate, 0.0);
+}
+
+#[test]
+fn engine_determinism() {
+    let toks = tokens(256);
+    let Some(mut eng) = engine(base_cfg()) else { return };
+    let a = eng.prefill(0, &toks).unwrap();
+    let b = eng.prefill(1, &toks).unwrap();
+    assert_eq!(a.first_token, b.first_token);
+    assert_eq!(a.logits_last, b.logits_last);
+    assert_eq!(a.metrics.jobs, b.metrics.jobs);
+}

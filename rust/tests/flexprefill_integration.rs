@@ -1,0 +1,149 @@
+//! FlexPrefill algorithm integration: crafted f32 attention structures must
+//! drive the expected pattern decisions and selections through the full
+//! Algorithm-1 path (scores -> JSD -> coverage -> expansion).
+
+use fast_prefill::config::{FlexParams, BLOCK};
+use fast_prefill::flexprefill::{
+    generate_head_index, scores, HeadPattern, HeadStats,
+};
+use fast_prefill::tensor::MatF32;
+use fast_prefill::util::prng::Prng;
+
+/// Build a K matrix of `n` blocks where `anchor_blocks` contain rows highly
+/// similar to the query rows (vertical structure).
+fn anchored_case(n: usize, anchor_blocks: &[usize], seed: u64) -> (MatF32, Vec<MatF32>) {
+    let d = 64;
+    let mut rng = Prng::new(seed);
+    let qhat = MatF32::from_fn(BLOCK, d, |_, _| rng.normal());
+    let kblocks: Vec<MatF32> = (0..n)
+        .map(|b| {
+            if anchor_blocks.contains(&b) {
+                // keys aligned with queries -> strong scores
+                MatF32::from_fn(BLOCK, d, |r, c| qhat.at(r % BLOCK, c) + 0.2 * rng.normal())
+            } else {
+                MatF32::from_fn(BLOCK, d, |_, _| rng.normal())
+            }
+        })
+        .collect();
+    (qhat, kblocks)
+}
+
+fn stats_from_f32(qhat: &MatF32, kblocks: &[MatF32]) -> HeadStats {
+    let n = kblocks.len();
+    let d = qhat.cols;
+    let (vertical, slash, a_hat) = scores::stream_head_scores_f32(qhat, kblocks);
+    let mut rng = Prng::new(1);
+    let kpool = MatF32::from_fn(n, d, |b, c| {
+        kblocks[b].data.iter().skip(c).step_by(d).sum::<f32>() / BLOCK as f32
+    });
+    let qpool_hat: Vec<f32> = (0..d)
+        .map(|c| qhat.data.iter().skip(c).step_by(d).sum::<f32>() / BLOCK as f32)
+        .collect();
+    let a_bar = scores::pooled_estimate(&qpool_hat, &kpool);
+    let qpool_all = MatF32::from_fn(n, d, |b, c| {
+        if b == n - 1 {
+            qpool_hat[c]
+        } else {
+            rng.normal()
+        }
+    });
+    HeadStats { vertical, slash, a_bar, a_hat, qpool_all, kpool }
+}
+
+#[test]
+fn anchored_structure_selects_anchor_blocks() {
+    let anchors = [2usize, 5];
+    let (qhat, kblocks) = anchored_case(8, &anchors, 3);
+    let stats = stats_from_f32(&qhat, &kblocks);
+    // the anchor blocks must dominate the vertical scores
+    let mean: f32 = stats.vertical.iter().sum::<f32>() / 8.0;
+    for &a in &anchors {
+        assert!(stats.vertical[a] > 2.0 * mean, "anchor {a} not dominant");
+    }
+    let idx = generate_head_index(&stats, &FlexParams::default());
+    idx.validate().unwrap();
+    // last query block must attend to both anchors
+    let last = idx.blocks.last().unwrap();
+    for &a in &anchors {
+        assert!(last.contains(&(a as u32)), "anchor {a} not selected: {last:?}");
+    }
+}
+
+#[test]
+fn pattern_decision_follows_pooled_agreement() {
+    // When the pooled estimate disagrees with the true distribution
+    // (anchored: pooling destroys the per-row alignment), the head must
+    // fall back to vertical-slash (d_js >= tau).
+    let (qhat, kblocks) = anchored_case(8, &[3], 7);
+    let stats = stats_from_f32(&qhat, &kblocks);
+    let idx = generate_head_index(&stats, &FlexParams::default());
+    // either pattern is legal, but the divergence must be computed
+    assert!(idx.d_js >= 0.0 && idx.d_js.is_finite());
+    // and with a tau of 1.0 everything becomes query-aware
+    let lax = FlexParams { tau: 1.0, ..Default::default() };
+    assert_eq!(generate_head_index(&stats, &lax).pattern, HeadPattern::QueryAware);
+    // with tau of 0 everything becomes vertical-slash
+    let strict = FlexParams { tau: 0.0, ..Default::default() };
+    assert_eq!(generate_head_index(&stats, &strict).pattern, HeadPattern::VerticalSlash);
+}
+
+#[test]
+fn gamma_controls_density_monotonically() {
+    let (qhat, kblocks) = anchored_case(12, &[1, 4, 9], 11);
+    let stats = stats_from_f32(&qhat, &kblocks);
+    let mut last_jobs = 0usize;
+    for gamma in [0.3f32, 0.6, 0.9, 0.99] {
+        let p = FlexParams { gamma, force_diagonal: false, force_sink: false, ..Default::default() };
+        let idx = generate_head_index(&stats, &p);
+        let jobs = idx.job_count();
+        assert!(jobs >= last_jobs, "gamma {gamma}: jobs {jobs} < {last_jobs}");
+        last_jobs = jobs;
+    }
+}
+
+#[test]
+fn i8_and_f32_scoring_agree_on_structure() {
+    // quantized scoring must find the same dominant blocks as f32 scoring
+    use fast_prefill::quant::{quant_scale, quantize_with};
+    use fast_prefill::tensor::MatI8;
+    let (qhat, kblocks) = anchored_case(6, &[2], 13);
+    let (v_f32, _, _) = scores::stream_head_scores_f32(&qhat, &kblocks);
+
+    let qs = quant_scale(&qhat.data);
+    let mut q_i8 = MatI8::zeros(BLOCK, qhat.cols);
+    quantize_with(&qhat.data, qs, &mut q_i8.data);
+    let kq: Vec<(MatI8, f32)> = kblocks
+        .iter()
+        .map(|kb| {
+            let ks = quant_scale(&kb.data);
+            let mut k_i8 = MatI8::zeros(BLOCK, kb.cols);
+            quantize_with(&kb.data, ks, &mut k_i8.data);
+            (k_i8, ks)
+        })
+        .collect();
+    let (v_i8, _, _) = scores::stream_head_scores(&q_i8, qs, &kq);
+
+    let argmax = |v: &[f32]| v.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+    assert_eq!(argmax(&v_f32), argmax(&v_i8));
+    assert_eq!(argmax(&v_f32), 2);
+}
+
+#[test]
+fn local_structure_produces_slash_mass_near_diagonal() {
+    // K blocks similar to Q only in the most recent blocks => slash scores
+    // concentrated at small diagonal distances
+    let d = 64;
+    let n = 8;
+    let mut rng = Prng::new(17);
+    let qhat = MatF32::from_fn(BLOCK, d, |_, _| rng.normal());
+    let kblocks: Vec<MatF32> = (0..n)
+        .map(|b| {
+            let sim = if b >= n - 2 { 1.0 } else { 0.0 };
+            MatF32::from_fn(BLOCK, d, |r, c| sim * qhat.at(r, c) + 0.3 * rng.normal())
+        })
+        .collect();
+    let (_, slash, _) = scores::stream_head_scores_f32(&qhat, &kblocks);
+    let near: f32 = slash[..2].iter().sum();
+    let far: f32 = slash[2..].iter().sum();
+    assert!(near > far, "slash mass not local: near {near} far {far}");
+}

@@ -1,0 +1,296 @@
+//! Property-based tests over coordinator/cache/selection invariants
+//! (own mini-framework in `util::prop`; proptest is unavailable offline).
+
+use fast_prefill::config::FlexParams;
+use fast_prefill::coordinator::joblist::build_schedule;
+use fast_prefill::flexprefill::{coverage, expand, HeadIndex, HeadPattern};
+use fast_prefill::kvcache::{Access, LivenessCache};
+use fast_prefill::quant::{bitplane, nibble};
+use fast_prefill::util::prng::Prng;
+use fast_prefill::util::prop::{forall, forall_ck};
+
+fn random_indices(rng: &mut Prng, heads: usize, n: usize) -> Vec<HeadIndex> {
+    (0..heads)
+        .map(|_| {
+            let blocks: Vec<Vec<u32>> = (0..n)
+                .map(|q| {
+                    let mut sel: Vec<u32> = (0..=q as u32)
+                        .filter(|_| rng.f32() < 0.4)
+                        .collect();
+                    if sel.is_empty() {
+                        sel.push(q as u32);
+                    }
+                    sel
+                })
+                .collect();
+            HeadIndex { pattern: HeadPattern::VerticalSlash, d_js: 0.5, blocks }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_schedule_invariants_hold() {
+    forall_ck(
+        0xA11CE,
+        40,
+        |rng, size| {
+            let heads = 1 + rng.below(8);
+            let group = [1, 2, 4][rng.below(3)].min(heads);
+            let heads = (heads / group).max(1) * group;
+            let n = 1 + size % 24;
+            let wave = rng.below(n + 2);
+            (random_indices(rng, heads, n), group, wave)
+        },
+        |(indices, group, wave)| {
+            let s = build_schedule(indices, *group, *wave);
+            s.check_invariants(indices, *group)
+        },
+    );
+}
+
+#[test]
+fn prop_cache_never_holds_dead_blocks_and_conserves_stats() {
+    forall_ck(
+        0xCAC4E,
+        60,
+        |rng, size| {
+            let n_keys = 2 + size % 32;
+            let uses: Vec<(u64, u32)> =
+                (0..n_keys).map(|k| (k as u64, 1 + rng.below(6) as u32)).collect();
+            let capacity = rng.below(n_keys + 2);
+            let t_hot = rng.below(6) as u32;
+            // random access pattern respecting remaining uses
+            let mut ops: Vec<u64> = Vec::new();
+            for (k, u) in &uses {
+                for _ in 0..*u {
+                    ops.push(*k);
+                }
+            }
+            rng.shuffle(&mut ops);
+            (uses, ops, capacity, t_hot)
+        },
+        |(uses, ops, capacity, t_hot)| {
+            let mut c = LivenessCache::new(*capacity, 0.5, *t_hot);
+            c.init_uses(uses.iter().copied());
+            for &key in ops {
+                if matches!(c.lookup(key), Access::Miss) {
+                    c.admit(key);
+                }
+                c.consume(key);
+                c.check_invariants()?;
+            }
+            // after all uses consumed, the cache must be empty
+            let s = c.stats();
+            if s.hits() + s.misses != s.lookups {
+                return Err("stat conservation".into());
+            }
+            for (k, _) in uses {
+                if c.is_resident(*k) {
+                    return Err(format!("block {k} survived its last use"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cache_hit_rate_monotone_in_capacity() {
+    // a bigger cache never hits less on the same deterministic trace
+    forall_ck(
+        0xB16,
+        25,
+        |rng, size| {
+            let n_keys = 4 + size % 24;
+            let uses: Vec<(u64, u32)> =
+                (0..n_keys).map(|k| (k as u64, 1 + rng.below(5) as u32)).collect();
+            let mut ops: Vec<u64> = Vec::new();
+            for (k, u) in &uses {
+                for _ in 0..*u {
+                    ops.push(*k);
+                }
+            }
+            rng.shuffle(&mut ops);
+            (uses, ops)
+        },
+        |(uses, ops)| {
+            let run = |cap: usize| {
+                let mut c = LivenessCache::new(cap, 0.5, 2);
+                c.init_uses(uses.iter().copied());
+                for &key in ops {
+                    if matches!(c.lookup(key), Access::Miss) {
+                        c.admit(key);
+                    }
+                    c.consume(key);
+                }
+                c.stats().hit_rate()
+            };
+            let small = run(2);
+            let big = run(uses.len() + 4);
+            if big + 1e-12 < small {
+                return Err(format!("hit rate fell with capacity: {small} -> {big}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_coverage_selection_sound_minimal_and_streaming_equal() {
+    forall_ck(
+        0xC0FE,
+        60,
+        |rng, size| {
+            let n = 1 + size * 3;
+            let scores: Vec<f32> = (0..n)
+                .map(|_| if rng.f32() < 0.2 { 0.0 } else { rng.f32() * 5.0 })
+                .collect();
+            let gamma = rng.range_f32(0.05, 0.99);
+            let window = 1 + rng.below(16);
+            (scores, gamma, window)
+        },
+        |(scores, gamma, window)| {
+            let sel = coverage::coverage_select(scores, *gamma);
+            let streaming = coverage::coverage_select_streaming(scores, *gamma, *window);
+            if sel != streaming {
+                return Err("streaming != reference".into());
+            }
+            let total: f32 = scores.iter().sum();
+            if total > 0.0 {
+                let cum: f32 = sel.iter().map(|&i| scores[i as usize]).sum();
+                if cum < gamma * total - 1e-4 {
+                    return Err("coverage unmet".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_vertical_slash_expansion_causal_and_complete() {
+    forall_ck(
+        0x5A5,
+        50,
+        |rng, size| {
+            let n = 2 + size % 32;
+            let nv = rng.below(n);
+            let ns = rng.below(n);
+            let vertical: Vec<u32> = rng.sample_indices(n, nv).into_iter().map(|v| v as u32).collect();
+            let slash: Vec<u32> = rng.sample_indices(n, ns).into_iter().map(|v| v as u32).collect();
+            (vertical, slash, n)
+        },
+        |(vertical, slash, n)| {
+            let out = expand::vertical_slash(vertical, slash, *n, *n);
+            for (q, row) in out.iter().enumerate() {
+                for w in row.windows(2) {
+                    if w[0] >= w[1] {
+                        return Err("unsorted/dup".into());
+                    }
+                }
+                for &b in row {
+                    if b as usize > q {
+                        return Err("acausal".into());
+                    }
+                }
+                // completeness: every causal vertical and slash target present
+                for &v in vertical {
+                    if (v as usize) <= q && !row.contains(&v) {
+                        return Err(format!("vertical {v} missing at q={q}"));
+                    }
+                }
+                for &g in slash {
+                    let k = q as i64 - g as i64;
+                    if k >= 0 && !row.contains(&(k as u32)) {
+                        return Err(format!("slash {g} missing at q={q}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_forced_blocks_always_present() {
+    forall(
+        0xF0,
+        40,
+        |rng, size| {
+            let n = 1 + size % 16;
+            let mut blocks: Vec<Vec<u32>> = vec![Vec::new(); n];
+            for (q, row) in blocks.iter_mut().enumerate() {
+                for b in 0..=q {
+                    if rng.f32() < 0.3 {
+                        row.push(b as u32);
+                    }
+                }
+            }
+            blocks
+        },
+        |blocks| {
+            let mut b = blocks.clone();
+            expand::apply_forced_blocks(&mut b, &FlexParams::default());
+            b.iter().enumerate().all(|(q, row)| row.contains(&0) && row.contains(&(q as u32)))
+        },
+    );
+}
+
+#[test]
+fn prop_bitplane_and_nibble_equal_direct_mul() {
+    forall(
+        0xB17,
+        80,
+        |rng, _| (rng.i8_sym(), rng.i8_sym()),
+        |(a, b)| {
+            let want = *a as i32 * *b as i32;
+            bitplane::mul_bitplane(*a, *b) == want && nibble::mul_nibble(*a, *b) == want
+        },
+    );
+}
+
+#[test]
+fn prop_online_softmax_merge_order_independent_f32() {
+    // the exact-arithmetic property the block-major schedule relies on
+    // (checked here in f32 without P-requantization)
+    forall_ck(
+        0x50F7,
+        30,
+        |rng, size| {
+            let blocks = 2 + size % 5;
+            let vals: Vec<Vec<f32>> = (0..blocks)
+                .map(|_| (0..8).map(|_| rng.normal() * 3.0).collect())
+                .collect();
+            let mut order: Vec<usize> = (0..blocks).collect();
+            rng.shuffle(&mut order);
+            (vals, order)
+        },
+        |(vals, order)| {
+            let fold = |idxs: &[usize]| -> (f32, f32) {
+                let mut m = f32::NEG_INFINITY;
+                let mut l = 0.0f32;
+                for &i in idxs {
+                    let rmax = vals[i].iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    let m_new = m.max(rmax);
+                    let mut s = 0.0f32;
+                    for &v in &vals[i] {
+                        s += (v - m_new).exp();
+                    }
+                    l = l * (m - m_new).exp() + s;
+                    m = m_new;
+                }
+                (m, l)
+            };
+            let fwd: Vec<usize> = (0..vals.len()).collect();
+            let (m1, l1) = fold(&fwd);
+            let (m2, l2) = fold(order);
+            if (m1 - m2).abs() > 1e-6 {
+                return Err(format!("m {m1} vs {m2}"));
+            }
+            if (l1 - l2).abs() / l1.max(1e-9) > 1e-5 {
+                return Err(format!("l {l1} vs {l2}"));
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,263 @@
+//! Runtime integration: the AOT artifacts, executed through PJRT, must
+//! reproduce the pure-Rust reference math — this pins all three layers
+//! (Pallas kernel, JAX graph, Rust mirror) to one numeric contract.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise).
+
+use fast_prefill::config::{BLOCK, TINY};
+use fast_prefill::model::forward::attn_step_w8a8;
+use fast_prefill::model::ModelWeights;
+use fast_prefill::quant::{quant_scale, quantize_with};
+use fast_prefill::runtime::{literal_f32, literal_i8, Arg, Runtime};
+use fast_prefill::tensor::{MatF32, MatI8};
+use fast_prefill::util::prng::Prng;
+use fast_prefill::util::stats::{max_abs_diff, rel_l2};
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::load("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+fn rand_i8(rng: &mut Prng, n: usize) -> Vec<i8> {
+    (0..n).map(|_| rng.i8_sym()).collect()
+}
+
+#[test]
+fn manifest_covers_all_entries_for_both_configs() {
+    let Some(rt) = runtime() else { return };
+    for cfg in ["tiny", "small100m"] {
+        for entry in [
+            "qkv_chunk", "index_phase_a", "index_phase_b", "attn_block_step",
+            "attn_block_batch", "o_proj_chunk", "ffn_chunk", "logits_chunk",
+        ] {
+            assert!(rt.manifest.find(cfg, entry).is_some(), "{cfg}::{entry}");
+        }
+    }
+    rt.manifest.validate_config(&TINY).unwrap();
+}
+
+#[test]
+fn attn_block_step_artifact_matches_rust_mirror() {
+    let Some(mut rt) = runtime() else { return };
+    let mut rng = Prng::new(42);
+    let dh = TINY.d_head;
+    let q = rand_i8(&mut rng, BLOCK * dh);
+    let k = rand_i8(&mut rng, BLOCK * dh);
+    let v = rand_i8(&mut rng, BLOCK * dh);
+    let (qs, ks, vs) = (0.021f32, 0.033f32, 0.027f32);
+    let m0 = vec![-1e30f32; BLOCK];
+    let l0 = vec![0.0f32; BLOCK];
+    let acc0 = vec![0.0f32; BLOCK * dh];
+    for diag in [0.0f32, 1.0] {
+        let exe = rt.get("tiny", "attn_block_step").unwrap();
+        let out = exe
+            .run(&[
+                Arg::I8(&q, &[BLOCK, dh]),
+                Arg::ScalarF32(qs),
+                Arg::I8(&k, &[BLOCK, dh]),
+                Arg::ScalarF32(ks),
+                Arg::I8(&v, &[BLOCK, dh]),
+                Arg::ScalarF32(vs),
+                Arg::F32(&m0, &[BLOCK]),
+                Arg::F32(&l0, &[BLOCK]),
+                Arg::F32(&acc0, &[BLOCK, dh]),
+                Arg::ScalarF32(diag),
+            ])
+            .unwrap();
+        let (m_a, l_a, acc_a) = (
+            literal_f32(&out[0]).unwrap(),
+            literal_f32(&out[1]).unwrap(),
+            literal_f32(&out[2]).unwrap(),
+        );
+
+        let qm = MatI8::from_vec(BLOCK, dh, q.clone());
+        let km = MatI8::from_vec(BLOCK, dh, k.clone());
+        let vm = MatI8::from_vec(BLOCK, dh, v.clone());
+        let mut m_r = m0.clone();
+        let mut l_r = l0.clone();
+        let mut acc_r = MatF32::zeros(BLOCK, dh);
+        attn_step_w8a8(&qm, qs, &km, ks, &vm, vs, &mut m_r, &mut l_r, &mut acc_r, diag > 0.5);
+
+        assert!(max_abs_diff(&m_a, &m_r) < 1e-4, "m diverges (diag={diag})");
+        assert!(rel_l2(&l_a, &l_r) < 1e-5, "l diverges (diag={diag})");
+        assert!(rel_l2(&acc_a, &acc_r.data) < 1e-4, "acc diverges (diag={diag})");
+    }
+}
+
+#[test]
+fn index_phases_artifacts_match_rust_scores() {
+    let Some(mut rt) = runtime() else { return };
+    let mut rng = Prng::new(7);
+    let dh = TINY.d_head;
+    let qhat = rand_i8(&mut rng, BLOCK * dh);
+    let kblks: Vec<Vec<i8>> = (0..3).map(|_| rand_i8(&mut rng, BLOCK * dh)).collect();
+    let (qs, ks) = (0.02f32, 0.03f32);
+
+    // artifact path
+    let mut m = vec![-1e30f32; BLOCK];
+    let mut l = vec![0.0f32; BLOCK];
+    for kb in &kblks {
+        let exe = rt.get("tiny", "index_phase_a").unwrap();
+        let out = exe
+            .run(&[
+                Arg::I8(&qhat, &[BLOCK, dh]),
+                Arg::ScalarF32(qs),
+                Arg::I8(kb, &[BLOCK, dh]),
+                Arg::ScalarF32(ks),
+                Arg::F32(&m, &[BLOCK]),
+                Arg::F32(&l, &[BLOCK]),
+            ])
+            .unwrap();
+        m = literal_f32(&out[0]).unwrap();
+        l = literal_f32(&out[1]).unwrap();
+    }
+    // rust mirror
+    use fast_prefill::flexprefill::scores::{phase_a, phase_b, StreamState};
+    let qm = MatI8::from_vec(BLOCK, dh, qhat.clone());
+    let mut st = StreamState::new(BLOCK);
+    for kb in &kblks {
+        phase_a(&qm, qs, &MatI8::from_vec(BLOCK, dh, kb.clone()), ks, &mut st);
+    }
+    assert!(max_abs_diff(&m, &st.m) < 1e-4, "phase A m");
+    assert!(rel_l2(&l, &st.l) < 1e-5, "phase A l");
+
+    for kb in &kblks {
+        let exe = rt.get("tiny", "index_phase_b").unwrap();
+        let out = exe
+            .run(&[
+                Arg::I8(&qhat, &[BLOCK, dh]),
+                Arg::ScalarF32(qs),
+                Arg::I8(kb, &[BLOCK, dh]),
+                Arg::ScalarF32(ks),
+                Arg::F32(&m, &[BLOCK]),
+                Arg::F32(&l, &[BLOCK]),
+            ])
+            .unwrap();
+        let stats = literal_f32(&out[0]).unwrap();
+        let want = phase_b(&qm, qs, &MatI8::from_vec(BLOCK, dh, kb.clone()), ks, &st);
+        assert!((stats[0] - want.vsum).abs() < 2e-3, "vsum {} vs {}", stats[0], want.vsum);
+        assert!((stats[1] - want.slo).abs() < 2e-3, "slo");
+        assert!((stats[2] - want.sup).abs() < 2e-3, "sup");
+    }
+}
+
+#[test]
+fn qkv_chunk_artifact_matches_reference_shapes_and_quant() {
+    let Some(mut rt) = runtime() else { return };
+    let w = ModelWeights::generate(&TINY, 99);
+    let mut rng = Prng::new(3);
+    let x: Vec<f32> = (0..BLOCK * TINY.d_model).map(|_| rng.normal()).collect();
+    let lw = &w.layers[0];
+    let exe = rt.get("tiny", "qkv_chunk").unwrap();
+    let out = exe
+        .run(&[
+            Arg::F32(&x, &[BLOCK, TINY.d_model]),
+            Arg::F32(&lw.g_attn, &[TINY.d_model]),
+            Arg::I8(&lw.wq.q.data, &[TINY.d_model, TINY.q_dim()]),
+            Arg::ScalarF32(lw.wq.scale),
+            Arg::I8(&lw.wk.q.data, &[TINY.d_model, TINY.kv_dim()]),
+            Arg::ScalarF32(lw.wk.scale),
+            Arg::I8(&lw.wv.q.data, &[TINY.d_model, TINY.kv_dim()]),
+            Arg::ScalarF32(lw.wv.scale),
+            Arg::ScalarI32(256),
+        ])
+        .unwrap();
+    let q = literal_i8(&out[0]).unwrap();
+    assert_eq!(q.len(), TINY.n_heads * BLOCK * TINY.d_head);
+    let qs = out[1].get_first_element::<f32>().unwrap();
+    assert!(qs > 0.0 && qs < 10.0, "q scale {qs}");
+    // quantized payloads must use the full int8 range somewhere
+    assert!(q.iter().any(|&v| v.abs() > 100), "q underutilizes int8 range");
+    let qpool = literal_f32(&out[6]).unwrap();
+    assert_eq!(qpool.len(), TINY.n_heads * TINY.d_head);
+}
+
+#[test]
+fn ffn_chunk_artifact_matches_rust_reference() {
+    let Some(mut rt) = runtime() else { return };
+    let w = ModelWeights::generate(&TINY, 11);
+    let mut rng = Prng::new(5);
+    let x: Vec<f32> = (0..BLOCK * TINY.d_model).map(|_| rng.normal()).collect();
+    let lw = &w.layers[0];
+    let exe = rt.get("tiny", "ffn_chunk").unwrap();
+    let out = exe
+        .run(&[
+            Arg::F32(&x, &[BLOCK, TINY.d_model]),
+            Arg::F32(&lw.g_ffn, &[TINY.d_model]),
+            Arg::I8(&lw.wg.q.data, &[TINY.d_model, TINY.d_ffn]),
+            Arg::ScalarF32(lw.wg.scale),
+            Arg::I8(&lw.wu.q.data, &[TINY.d_model, TINY.d_ffn]),
+            Arg::ScalarF32(lw.wu.scale),
+            Arg::I8(&lw.wd.q.data, &[TINY.d_ffn, TINY.d_model]),
+            Arg::ScalarF32(lw.wd.scale),
+        ])
+        .unwrap();
+    let got = literal_f32(&out[0]).unwrap();
+
+    // rust mirror (same definitions as model::forward's FFN)
+    use fast_prefill::quant::int8_matmul_deq;
+    use fast_prefill::tensor::ops::{rmsnorm, silu};
+    let xm = MatF32::from_vec(BLOCK, TINY.d_model, x.clone());
+    let xn = rmsnorm(&xm, &lw.g_ffn, TINY.rms_eps);
+    let xs = quant_scale(&xn.data);
+    let mut xq = MatI8::zeros(BLOCK, TINY.d_model);
+    quantize_with(&xn.data, xs, &mut xq.data);
+    let mut gate = int8_matmul_deq(&xq, xs, &lw.wg.q, lw.wg.scale);
+    silu(&mut gate);
+    let up = int8_matmul_deq(&xq, xs, &lw.wu.q, lw.wu.scale);
+    for (g, u) in gate.data.iter_mut().zip(&up.data) {
+        *g *= u;
+    }
+    let hs = quant_scale(&gate.data);
+    let mut hq = MatI8::zeros(BLOCK, TINY.d_ffn);
+    quantize_with(&gate.data, hs, &mut hq.data);
+    let down = int8_matmul_deq(&hq, hs, &lw.wd.q, lw.wd.scale);
+    let want: Vec<f32> = xm.data.iter().zip(&down.data).map(|(a, b)| a + b).collect();
+
+    // activation quantization can differ by 1 ulp at the rounding boundary
+    // between XLA and Rust f32 orders; tolerate small relative error
+    assert!(rel_l2(&got, &want) < 5e-3, "ffn rel err {}", rel_l2(&got, &want));
+}
+
+#[test]
+fn exec_stats_track_calls() {
+    let Some(mut rt) = runtime() else { return };
+    let qhat = vec![1i8; BLOCK * TINY.d_head];
+    let m = vec![-1e30f32; BLOCK];
+    let l = vec![0.0f32; BLOCK];
+    let exe = rt.get("tiny", "index_phase_a").unwrap();
+    exe.run(&[
+        Arg::I8(&qhat, &[BLOCK, TINY.d_head]),
+        Arg::ScalarF32(0.01),
+        Arg::I8(&qhat, &[BLOCK, TINY.d_head]),
+        Arg::ScalarF32(0.01),
+        Arg::F32(&m, &[BLOCK]),
+        Arg::F32(&l, &[BLOCK]),
+    ])
+    .unwrap();
+    let stats = rt.exec_stats();
+    let row = stats.iter().find(|(k, _, _)| k == "tiny::index_phase_a").unwrap();
+    assert_eq!(row.1, 1);
+}
+
+#[test]
+fn arg_shape_validation_rejects_wrong_dims() {
+    let Some(mut rt) = runtime() else { return };
+    let exe = rt.get("tiny", "index_phase_a").unwrap();
+    let bad = vec![0i8; 4];
+    let m = vec![0f32; BLOCK];
+    let r = exe.run(&[
+        Arg::I8(&bad, &[2, 2]),
+        Arg::ScalarF32(0.01),
+        Arg::I8(&bad, &[2, 2]),
+        Arg::ScalarF32(0.01),
+        Arg::F32(&m, &[BLOCK]),
+        Arg::F32(&m, &[BLOCK]),
+    ]);
+    assert!(r.is_err(), "wrong dims must be rejected");
+}
