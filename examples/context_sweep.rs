@@ -17,7 +17,13 @@ use fast_prefill::workload::prompts::{PromptKind, PromptSpec};
 fn main() -> Result<()> {
     let mut cfg = EngineConfig::new(TINY.clone());
     cfg.native_sau = true; // fast functional path; PJRT SAU in quickstart
-    let mut engine = Engine::new("artifacts", cfg)?;
+    let mut engine = match Engine::new("artifacts", cfg) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("artifacts unavailable ({e}); using native tiled kernels");
+            Engine::new_native(EngineConfig::new(TINY.clone()))?
+        }
+    };
     let fpga = u280_fast_prefill();
     let gpu = a5000();
 

@@ -1,7 +1,12 @@
-//! Quickstart: load the AOT artifacts, run one sparse prefill on the tiny
-//! model, print the first token and pipeline statistics.
+//! Quickstart: run one sparse prefill on the tiny model and print the
+//! first token and pipeline statistics.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//! Prefers the AOT artifacts on the PJRT CPU client when they exist
+//! (`make artifacts` + the `pjrt` feature); otherwise falls back to the
+//! native tiled parallel kernels, which need nothing but this crate:
+//!
+//!     cargo run --release --example quickstart
+//!     FASTP_THREADS=4 cargo run --release --example quickstart
 
 use anyhow::Result;
 use fast_prefill::config::TINY;
@@ -13,9 +18,16 @@ fn main() -> Result<()> {
     //    (tau=0.1, gamma=0.9), dual-tier KV cache.
     let cfg = EngineConfig::new(TINY.clone());
 
-    // 2. load artifacts + compile every entry point on the PJRT CPU client.
-    let mut engine = Engine::new("artifacts", cfg)?;
-    println!("runtime platform: {}", engine.rt.platform());
+    // 2. load artifacts + compile every entry point on the PJRT CPU
+    //    client — or fall back to the artifact-free native engine.
+    let mut engine = match Engine::new("artifacts", cfg) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("artifacts unavailable ({e}); using native tiled kernels");
+            Engine::new_native(EngineConfig::new(TINY.clone()))?
+        }
+    };
+    println!("backend: {}", engine.platform());
 
     // 3. synthesize a 1K-token prompt with mixed attention structure.
     let prompt = PromptSpec { kind: PromptKind::Mixed, tokens: 1024, seed: 42 };

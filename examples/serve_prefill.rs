@@ -31,6 +31,15 @@ fn main() -> Result<()> {
     let mut cfg = EngineConfig::new(SMALL100M.clone());
     cfg.native_sau = true; // PJRT SAU is exercised by quickstart/tests;
                            // native keeps the 100M E2E run in minutes
+    // cheap availability probe: manifest present AND executable (the
+    // Runtime::load attempt is only paid when artifacts exist on disk)
+    let artifacts_usable = std::path::Path::new("artifacts/manifest.txt").exists()
+        && fast_prefill::runtime::Runtime::load("artifacts").is_ok();
+    if !artifacts_usable {
+        eprintln!("artifacts unavailable; serving on the native tiled kernels");
+        cfg.native_sigu = true;
+        cfg.native_linear = true;
+    }
     println!(
         "== E2E: {} ({}M params, {} layers) | {} req x {} tokens | {} workers ==",
         SMALL100M.name,

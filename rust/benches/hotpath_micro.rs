@@ -2,16 +2,20 @@
 //! coordinator spends its time in, timed with the local harness. Run via
 //! `cargo bench --bench hotpath_micro`.
 
-use fast_prefill::config::{FlexParams, BLOCK};
+use fast_prefill::config::{FlexParams, BLOCK, TINY};
 use fast_prefill::coordinator::joblist::build_schedule;
 use fast_prefill::flexprefill::{coverage, scores};
 use fast_prefill::kvcache::{Access, LivenessCache};
-use fast_prefill::model::forward::attn_step_w8a8;
+use fast_prefill::model::forward::{attn_step_w8a8, prefill_reference_ctx};
+use fast_prefill::model::ModelWeights;
 use fast_prefill::quant::{int8_matmul_bt, quant_scale, quantize_with};
 use fast_prefill::sim::{simulate_prefill, synth_model_indices, HeadMix};
+use fast_prefill::tensor::tile::{self, KernelCtx};
 use fast_prefill::tensor::{MatF32, MatI8};
 use fast_prefill::util::bench::{bench_for, black_box};
+use fast_prefill::util::pool::WorkerPool;
 use fast_prefill::util::prng::Prng;
+use fast_prefill::workload::prompts::{PromptKind, PromptSpec};
 
 fn rand_mat(rng: &mut Prng, r: usize, c: usize) -> MatI8 {
     MatI8 { rows: r, cols: c, data: (0..r * c).map(|_| rng.i8_sym()).collect() }
@@ -30,6 +34,19 @@ fn main() {
     println!("{r}");
     let macs = (BLOCK * BLOCK * 64) as f64;
     println!("    -> {:.2} GMAC/s", macs / r.mean_ns);
+
+    // --- tiled vs scalar kernels on a linear-layer-shaped matmul ---
+    let xa = rand_mat(&mut rng, BLOCK, 768);
+    let xb = rand_mat(&mut rng, 768, 768);
+    let r_scalar = bench_for("int8_matmul 128x768x768 (scalar oracle)", 300, 5, || {
+        black_box(fast_prefill::quant::int8_matmul(&xa, &xb));
+    });
+    println!("{r_scalar}");
+    let r_tiled = bench_for("int8_matmul 128x768x768 (tiled)", 300, 5, || {
+        black_box(tile::int8_matmul(&xa, &xb));
+    });
+    println!("{r_tiled}");
+    println!("    -> tiling speedup {:.2}x", r_scalar.mean_ns / r_tiled.mean_ns);
 
     // --- full W8A8 SAU job (score + softmax + PV + accumulate) ---
     let v = rand_mat(&mut rng, BLOCK, 64);
@@ -91,6 +108,35 @@ fn main() {
         black_box(simulate_prefill(&fpga, &cfg, 131072, &big_idx));
     });
     println!("{r}");
+
+    // --- 4K-context native-SAU prefill: scalar vs tiled parallel core ---
+    // (the acceptance benchmark of the block-major kernel layer: the
+    // tiled parallel path with FASTP_THREADS=4 must beat the scalar
+    // single-threaded path by >= 2x, with bit-identical outputs)
+    let w = ModelWeights::generate(&TINY, 0xBEEF);
+    let toks = PromptSpec { kind: PromptKind::Mixed, tokens: 4096, seed: 3 }.generate();
+    let flex = FlexParams::default();
+    // tile = usize::MAX degenerates the blocked loops to the scalar
+    // oracle's order — the pre-refactor hot path
+    let scalar_ctx = KernelCtx { pool: WorkerPool::single_threaded(), tile: usize::MAX };
+    let par_ctx = KernelCtx::with_threads(4);
+    let r_scalar = bench_for("prefill 4K native-SAU (scalar, 1 thread)", 2000, 2, || {
+        black_box(prefill_reference_ctx(&w, &toks, Some(&flex), &scalar_ctx));
+    });
+    println!("{r_scalar}");
+    let r_par = bench_for("prefill 4K native-SAU (tiled, 4 threads)", 2000, 2, || {
+        black_box(prefill_reference_ctx(&w, &toks, Some(&flex), &par_ctx));
+    });
+    println!("{r_par}");
+    println!(
+        "    -> parallel kernel core speedup {:.2}x (target >= 2x)",
+        r_scalar.mean_ns / r_par.mean_ns
+    );
+    let a = prefill_reference_ctx(&w, &toks, Some(&flex), &KernelCtx::with_threads(1));
+    let b = prefill_reference_ctx(&w, &toks, Some(&flex), &par_ctx);
+    assert_eq!(a.logits_last, b.logits_last, "thread count changed logits");
+    assert_eq!(a.first_token, b.first_token);
+    println!("    -> FASTP_THREADS=1 vs 4: first-token logits bit-identical");
 
     // --- quantization of one chunk ---
     let x: Vec<f32> = (0..BLOCK * 768).map(|_| rng.normal()).collect();

@@ -13,8 +13,9 @@ use crate::config::{FlexParams, BLOCK};
 use crate::flexprefill::{coverage, scores};
 use crate::model::forward::{attn_finalize, attn_step_w8a8};
 use crate::quant::{quant_scale, quantize_with};
-use crate::tensor::ops::{matmul, matmul_bt, softmax_rows};
+use crate::tensor::tile;
 use crate::tensor::{MatF32, MatI8};
+use crate::util::pool::WorkerPool;
 use crate::workload::needle::{NeedleTask, RetrievalOutcome};
 
 /// Precision mode of Table III.
@@ -85,6 +86,26 @@ fn select_blocks(task: &NeedleTask, prec: Precision, params: &FlexParams) -> Vec
     sel
 }
 
+/// Stream f32 attention over selected blocks with the fused tiled
+/// softmax-accumulate kernel — the same block-major SAU structure the
+/// W8A8 path uses, in full precision.
+fn stream_f32_attention(qhat: &MatF32, sel: &[u32], mut kv: impl FnMut(usize) -> (MatF32, MatF32)) -> MatF32 {
+    let d = qhat.cols;
+    let inv = 1.0 / (d as f32).sqrt();
+    let mut m = vec![-1e30f32; qhat.rows];
+    let mut l = vec![0.0f32; qhat.rows];
+    let mut acc = MatF32::zeros(qhat.rows, d);
+    for &b in sel {
+        let (kb, vb) = kv(b as usize);
+        let mut s = tile::matmul_bt(qhat, &kb);
+        for x in s.data.iter_mut() {
+            *x *= inv;
+        }
+        tile::fused_softmax_acc(&s, &vb, &mut m, &mut l, &mut acc);
+    }
+    attn_finalize(&l, &acc)
+}
+
 /// Run sparse attention over the selected blocks in the given precision and
 /// score retrieval accuracy.
 pub fn evaluate(task: &NeedleTask, prec: Precision, params: &FlexParams) -> RetrievalOutcome {
@@ -92,42 +113,20 @@ pub fn evaluate(task: &NeedleTask, prec: Precision, params: &FlexParams) -> Retr
     let d = task.d;
     let out = match prec {
         Precision::Bf16 => {
-            // gather selected K/V, exact softmax attention
-            let mut k = MatF32::zeros(sel.len() * BLOCK, d);
-            let mut v = MatF32::zeros(sel.len() * BLOCK, d);
-            for (i, &b) in sel.iter().enumerate() {
-                k.data[i * BLOCK * d..(i + 1) * BLOCK * d]
-                    .copy_from_slice(&task.kblocks[b as usize].data);
-                v.data[i * BLOCK * d..(i + 1) * BLOCK * d]
-                    .copy_from_slice(&task.vblocks[b as usize].data);
-            }
-            let mut s = matmul_bt(&task.qhat, &k);
-            let inv = 1.0 / (d as f32).sqrt();
-            for x in s.data.iter_mut() {
-                *x *= inv;
-            }
-            softmax_rows(&mut s);
-            matmul(&s, &v)
+            // exact-arithmetic attention, streamed block-major
+            stream_f32_attention(&task.qhat, &sel, |b| {
+                (task.kblocks[b].clone(), task.vblocks[b].clone())
+            })
         }
         Precision::Int8Deq => {
             // quantize Q/K/V, dequantize, f32 attention (the INT-8 row)
             let (q, qs) = quantize_m(&task.qhat);
             let qd = q.dequant(qs);
-            let mut k = MatF32::zeros(sel.len() * BLOCK, d);
-            let mut v = MatF32::zeros(sel.len() * BLOCK, d);
-            for (i, &b) in sel.iter().enumerate() {
-                let (kq, ks) = quantize_m(&task.kblocks[b as usize]);
-                let (vq, vs) = quantize_m(&task.vblocks[b as usize]);
-                k.data[i * BLOCK * d..(i + 1) * BLOCK * d].copy_from_slice(&kq.dequant(ks).data);
-                v.data[i * BLOCK * d..(i + 1) * BLOCK * d].copy_from_slice(&vq.dequant(vs).data);
-            }
-            let mut s = matmul_bt(&qd, &k);
-            let inv = 1.0 / (d as f32).sqrt();
-            for x in s.data.iter_mut() {
-                *x *= inv;
-            }
-            softmax_rows(&mut s);
-            matmul(&s, &v)
+            stream_f32_attention(&qd, &sel, |b| {
+                let (kq, ks) = quantize_m(&task.kblocks[b]);
+                let (vq, vs) = quantize_m(&task.vblocks[b]);
+                (kq.dequant(ks), vq.dequant(vs))
+            })
         }
         Precision::W8A8 => {
             // the exact SAU pipeline: per-block W8A8 online-softmax steps
@@ -148,6 +147,9 @@ pub fn evaluate(task: &NeedleTask, prec: Precision, params: &FlexParams) -> Retr
 
 /// Sweep a (context-length, precision) grid — one Table III cell per call.
 /// Returns accuracy in percent averaged over `n_tasks` seeded tasks.
+/// Tasks are independent (per-task seeds), so they fan out over the
+/// worker pool; the mean is accumulated in task order, keeping the cell
+/// value identical for every thread count.
 pub fn table3_cell_spec(
     spec: &crate::workload::needle::TaskSpec,
     prec: Precision,
@@ -155,12 +157,12 @@ pub fn table3_cell_spec(
     n_tasks: usize,
     seed: u64,
 ) -> f64 {
-    let mut acc = 0.0f64;
-    for t in 0..n_tasks {
+    let pool = WorkerPool::from_env();
+    let accs = pool.map(n_tasks, |t| {
         let task = NeedleTask::from_spec(spec, seed + t as u64);
-        acc += evaluate(&task, prec, params).accuracy();
-    }
-    acc / n_tasks as f64
+        evaluate(&task, prec, params).accuracy()
+    });
+    accs.iter().sum::<f64>() / n_tasks as f64
 }
 
 /// Back-compat convenience without outlier channels.

@@ -1,27 +1,38 @@
-//! The prefill engine: chunked, artifact-backed execution of the full
-//! pipeline (paper Fig. 2) — KV generation -> SIGU -> block-major SAU with
-//! the liveness cache -> FFN -> first token.
+//! The prefill engine: chunked execution of the full pipeline (paper
+//! Fig. 2) — KV generation -> SIGU -> block-major SAU with the liveness
+//! cache -> FFN -> first token.
 //!
-//! Every matmul-heavy stage runs through the AOT artifacts on the PJRT CPU
-//! client (the "MPU"); decision logic, coverage selection, job-list
-//! bucketization and cache policy run natively in Rust (the paper's
-//! FSM/SFU/comparator logic). Two backend switches exist for SIGU and SAU:
-//! `native_*` replaces the artifact calls with the bit-compatible Rust
-//! mirror (used for cross-validation and fast experimentation; both paths
-//! are asserted equivalent in integration tests).
+//! Two backends exist for every matmul-heavy stage:
+//!
+//!  * **PJRT artifacts** (`pjrt` feature + `make artifacts`): the AOT
+//!    HLO entry points execute on the CPU client (the "MPU").
+//!  * **native tiled kernels**: the bit-compatible Rust mirror built on
+//!    `tensor::tile` + the shared worker pool. Per-phase switches
+//!    (`native_sigu`, `native_sau`, `native_linear`) choose per stage;
+//!    with all three on, the engine needs no artifacts at all
+//!    ([`Engine::new_native`]) and fans its work over a [`KernelCtx`]:
+//!    chunks (QKV/FFN), heads (SIGU), and the wave's (head, query-block)
+//!    accumulator states (SAU) run as independent pool jobs, so results
+//!    are bit-identical for every `FASTP_THREADS` value.
+//!
+//! Decision logic, coverage selection, job-list bucketization and cache
+//! policy always run natively (the paper's FSM/SFU/comparator logic); the
+//! cache-traffic walk stays sequential in schedule order so cache
+//! statistics are deterministic and backend-independent.
 
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::config::{FlexParams, ModelConfig, BLOCK};
-use crate::coordinator::joblist::{build_schedule, cache_key, Schedule};
+use crate::coordinator::joblist::{build_schedule, cache_key, Schedule, DEFAULT_WAVE_QBLOCKS};
 use crate::flexprefill::{generate_head_index, scores, HeadIndex, HeadPattern, HeadStats};
 use crate::kvcache::{Access, LivenessCache};
 use crate::metrics::PrefillMetrics;
-use crate::model::forward::{attn_finalize, attn_step_w8a8};
+use crate::model::forward::{self as fwd, attn_finalize, ChunkQkv};
 use crate::model::ModelWeights;
 use crate::runtime::{literal_f32, literal_i8, Arg, Runtime};
+use crate::tensor::tile::KernelCtx;
 use crate::tensor::{MatF32, MatI8};
 
 /// Engine configuration.
@@ -42,6 +53,13 @@ pub struct EngineConfig {
     pub native_sigu: bool,
     /// Compute SAU attention natively instead of via artifacts.
     pub native_sau: bool,
+    /// Compute QKV, o_proj+FFN and logits natively (tiled kernels)
+    /// instead of via artifacts. With `native_sigu` and `native_sau` this
+    /// makes the engine artifact-free.
+    pub native_linear: bool,
+    /// Worker threads for the kernel context (0 = `FASTP_THREADS` env,
+    /// default available parallelism).
+    pub threads: usize,
 }
 
 impl EngineConfig {
@@ -50,26 +68,39 @@ impl EngineConfig {
             model,
             flex: Some(FlexParams::default()),
             weight_seed: 0xFA57,
-            wave_qblocks: 8,
+            wave_qblocks: DEFAULT_WAVE_QBLOCKS,
             cache_blocks: 1024,
             hot_fraction: 0.5,
             t_hot_frac: 0.5,
             native_sigu: true,
             native_sau: false,
+            native_linear: false,
+            threads: 0,
         }
     }
-}
 
-/// Per-chunk quantized attention inputs for one layer.
-struct ChunkState {
-    q: Vec<i8>, // [H, B, dh]
-    qs: f32,
-    k: Vec<i8>, // [Hk, B, dh]
-    ks: f32,
-    v: Vec<i8>, // [Hk, B, dh]
-    vs: f32,
-    qpool: Vec<f32>, // [H, dh]
-    kpool: Vec<f32>, // [Hk, dh]
+    /// Fully-native config: every stage through the tiled kernel layer,
+    /// no artifacts required.
+    pub fn new_native(model: ModelConfig) -> Self {
+        let mut cfg = Self::new(model);
+        cfg.native_sigu = true;
+        cfg.native_sau = true;
+        cfg.native_linear = true;
+        cfg
+    }
+
+    /// True when no stage needs the PJRT artifacts.
+    pub fn fully_native(&self) -> bool {
+        self.native_sigu && self.native_sau && self.native_linear
+    }
+
+    fn kernel_ctx(&self) -> KernelCtx {
+        if self.threads > 0 {
+            KernelCtx::with_threads(self.threads)
+        } else {
+            KernelCtx::from_env()
+        }
+    }
 }
 
 /// Result of one prefill run.
@@ -85,26 +116,68 @@ pub struct PrefillRun {
     pub hidden_last_chunk: Vec<f32>,
 }
 
-/// The prefill engine (one PJRT runtime + one model instance).
+/// The prefill engine (one optional PJRT runtime + one model instance +
+/// one kernel context).
 pub struct Engine {
-    pub rt: Runtime,
+    rt: Option<Runtime>,
+    pub ctx: KernelCtx,
     pub cfg: EngineConfig,
     pub weights: ModelWeights,
 }
 
 impl Engine {
-    /// Load artifacts, validate config compatibility, compile entry points,
-    /// generate weights.
+    /// Build an engine. Fully-native configs skip the artifacts entirely;
+    /// anything else loads + compiles the artifact entry points (which
+    /// fails without the `pjrt` feature or without `make artifacts`).
     pub fn new(artifact_dir: impl AsRef<std::path::Path>, cfg: EngineConfig) -> Result<Engine> {
-        let mut rt = Runtime::load(artifact_dir)?;
-        rt.manifest.validate_config(&cfg.model).context("manifest/config check")?;
-        rt.warmup(cfg.model.name)?;
+        let rt = if cfg.fully_native() {
+            None
+        } else {
+            let mut rt = Runtime::load(artifact_dir)?;
+            rt.manifest.validate_config(&cfg.model).context("manifest/config check")?;
+            rt.warmup(cfg.model.name)?;
+            Some(rt)
+        };
         let weights = ModelWeights::generate(&cfg.model, cfg.weight_seed);
-        Ok(Engine { rt, cfg, weights })
+        let ctx = cfg.kernel_ctx();
+        Ok(Engine { rt, ctx, cfg, weights })
+    }
+
+    /// Build an artifact-free engine on the tiled native kernels.
+    pub fn new_native(model_cfg: EngineConfig) -> Result<Engine> {
+        let mut cfg = model_cfg;
+        cfg.native_sigu = true;
+        cfg.native_sau = true;
+        cfg.native_linear = true;
+        let weights = ModelWeights::generate(&cfg.model, cfg.weight_seed);
+        let ctx = cfg.kernel_ctx();
+        Ok(Engine { rt: None, ctx, cfg, weights })
+    }
+
+    /// Backend description (for banners / examples).
+    pub fn platform(&self) -> String {
+        match &self.rt {
+            Some(rt) => rt.platform(),
+            None => format!("native tiled kernels ({} threads)", self.ctx.threads()),
+        }
+    }
+
+    /// Per-executable perf counters (empty in native mode).
+    pub fn exec_stats(&self) -> Vec<(String, u64, f64)> {
+        self.rt.as_ref().map(|rt| rt.exec_stats()).unwrap_or_default()
+    }
+
+    fn runtime(&mut self) -> Result<&mut Runtime> {
+        self.rt.as_mut().ok_or_else(|| {
+            anyhow!("artifact backend requested but the engine was built native-only")
+        })
     }
 
     fn sau_batch(&self) -> usize {
-        self.rt.manifest.configs[self.cfg.model.name].sau_batch.max(1)
+        self.rt
+            .as_ref()
+            .map(|rt| rt.manifest.configs[self.cfg.model.name].sau_batch.max(1))
+            .unwrap_or(1)
     }
 
     /// Run the full prefill for a byte-token context. Context length must be
@@ -114,7 +187,7 @@ impl Engine {
         let s = tokens.len();
         anyhow::ensure!(s > 0 && s % BLOCK == 0, "context must be a positive multiple of {BLOCK}");
         let n = s / BLOCK;
-        let (d, dh, hq, _hk) = (cfg.d_model, cfg.d_head, cfg.n_heads, cfg.n_kv_heads);
+        let d = cfg.d_model;
         let t_start = Instant::now();
         let mut metrics = PrefillMetrics {
             request_id,
@@ -170,51 +243,15 @@ impl Engine {
 
             // ---------------- phase 4: o_proj + FFN ----------------
             let t0 = Instant::now();
-            for ci in 0..n {
-                let resid: Vec<f32> = hidden.data[ci * BLOCK * d..(ci + 1) * BLOCK * d].to_vec();
-                let lw = &self.weights.layers[li];
-                let exe = self.rt.get(cfg.name, "o_proj_chunk")?;
-                let out = exe.run(&[
-                    Arg::F32(&attn[ci], &[BLOCK, hq * dh]),
-                    Arg::I8(&lw.wo.q.data, &[hq * dh, d]),
-                    Arg::ScalarF32(lw.wo.scale),
-                    Arg::F32(&resid, &[BLOCK, d]),
-                ])?;
-                let x = literal_f32(&out[0])?;
-                let exe = self.rt.get(cfg.name, "ffn_chunk")?;
-                let out = exe.run(&[
-                    Arg::F32(&x, &[BLOCK, d]),
-                    Arg::F32(&lw.g_ffn, &[d]),
-                    Arg::I8(&lw.wg.q.data, &[d, cfg.d_ffn]),
-                    Arg::ScalarF32(lw.wg.scale),
-                    Arg::I8(&lw.wu.q.data, &[d, cfg.d_ffn]),
-                    Arg::ScalarF32(lw.wu.scale),
-                    Arg::I8(&lw.wd.q.data, &[cfg.d_ffn, d]),
-                    Arg::ScalarF32(lw.wd.scale),
-                ])?;
-                let x = literal_f32(&out[0])?;
-                hidden.data[ci * BLOCK * d..(ci + 1) * BLOCK * d].copy_from_slice(&x);
-            }
+            self.run_tail_layer(li, &mut hidden, &attn, n)?;
             metrics.t_ffn_us += t0.elapsed().as_micros() as f64;
         }
 
         // ---------------- first token ----------------
         let last: Vec<f32> = hidden.data[(s - BLOCK) * d..].to_vec();
-        let exe = self.rt.get(cfg.name, "logits_chunk")?;
-        let out = exe.run(&[
-            Arg::F32(&last, &[BLOCK, d]),
-            Arg::F32(&self.weights.g_final, &[d]),
-            Arg::I8(&self.weights.lm_head.q.data, &[d, cfg.vocab]),
-            Arg::ScalarF32(self.weights.lm_head.scale),
-        ])?;
-        let logits = literal_f32(&out[0])?;
+        let logits = self.run_logits(&last)?;
         let last_row = &logits[(BLOCK - 1) * cfg.vocab..];
-        let first_token = last_row
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i as u8)
-            .unwrap_or(0);
+        let first_token = fwd::argmax_token(last_row);
 
         metrics.ttft_us = t_start.elapsed().as_micros() as f64;
         metrics.density = if density_cnt > 0 { density_sum / density_cnt as f64 } else { 1.0 };
@@ -237,14 +274,30 @@ impl Engine {
     // phase implementations
     // ------------------------------------------------------------------
 
-    fn run_qkv_layer(&mut self, li: usize, hidden: &MatF32, n: usize) -> Result<Vec<ChunkState>> {
-        let cfg = &self.cfg.model;
+    fn run_qkv_layer(&mut self, li: usize, hidden: &MatF32, n: usize) -> Result<Vec<ChunkQkv>> {
+        if self.cfg.native_linear {
+            let weights = &self.weights;
+            let ctx = &self.ctx;
+            return Ok(ctx.pool.map(n, |ci| {
+                let x = hidden.slice_rows(ci * BLOCK, (ci + 1) * BLOCK);
+                fwd::qkv_chunk(ctx, weights, li, &x, (ci * BLOCK) as i32)
+            }));
+        }
+        let cfg = self.cfg.model.clone();
         let (d, dh, hq, hk) = (cfg.d_model, cfg.d_head, cfg.n_heads, cfg.n_kv_heads);
+        // artifact outputs are head-major [heads, B, dh]; split per head
+        let split = |flat: Vec<i8>| -> Vec<MatI8> {
+            flat.chunks(BLOCK * dh).map(|c| MatI8::from_vec(BLOCK, dh, c.to_vec())).collect()
+        };
         let mut chunks = Vec::with_capacity(n);
         for ci in 0..n {
             let x = &hidden.data[ci * BLOCK * d..(ci + 1) * BLOCK * d];
             let lw = &self.weights.layers[li];
-            let exe = self.rt.get(cfg.name, "qkv_chunk")?;
+            let exe = self
+                .rt
+                .as_mut()
+                .ok_or_else(|| anyhow!("artifact backend requested but the engine is native-only"))?
+                .get(cfg.name, "qkv_chunk")?;
             let out = exe.run(&[
                 Arg::F32(x, &[BLOCK, d]),
                 Arg::F32(&lw.g_attn, &[d]),
@@ -256,66 +309,38 @@ impl Engine {
                 Arg::ScalarF32(lw.wv.scale),
                 Arg::ScalarI32((ci * BLOCK) as i32),
             ])?;
-            chunks.push(ChunkState {
-                q: literal_i8(&out[0])?,
+            chunks.push(ChunkQkv {
+                q: split(literal_i8(&out[0])?),
                 qs: out[1].get_first_element::<f32>()?,
-                k: literal_i8(&out[2])?,
+                k: split(literal_i8(&out[2])?),
                 ks: out[3].get_first_element::<f32>()?,
-                v: literal_i8(&out[4])?,
+                v: split(literal_i8(&out[4])?),
                 vs: out[5].get_first_element::<f32>()?,
-                qpool: literal_f32(&out[6])?,
-                kpool: literal_f32(&out[7])?,
+                qpool: MatF32::from_vec(hq, dh, literal_f32(&out[6])?),
+                kpool: MatF32::from_vec(hk, dh, literal_f32(&out[7])?),
             });
         }
         Ok(chunks)
     }
 
-    /// head h's [B, dh] int8 query slice of chunk `ci`.
-    fn q_slice<'a>(chunks: &'a [ChunkState], ci: usize, h: usize, dh: usize) -> &'a [i8] {
-        &chunks[ci].q[h * BLOCK * dh..(h + 1) * BLOCK * dh]
-    }
-    fn k_slice<'a>(chunks: &'a [ChunkState], ci: usize, g: usize, dh: usize) -> &'a [i8] {
-        &chunks[ci].k[g * BLOCK * dh..(g + 1) * BLOCK * dh]
-    }
-    fn v_slice<'a>(chunks: &'a [ChunkState], ci: usize, g: usize, dh: usize) -> &'a [i8] {
-        &chunks[ci].v[g * BLOCK * dh..(g + 1) * BLOCK * dh]
-    }
-
-    fn run_sigu_layer(&mut self, chunks: &[ChunkState], n: usize) -> Result<Vec<HeadIndex>> {
+    fn run_sigu_layer(&mut self, chunks: &[ChunkQkv], n: usize) -> Result<Vec<HeadIndex>> {
         let cfg = self.cfg.model.clone();
         let dh = cfg.d_head;
         let params = match &self.cfg.flex {
             Some(p) => *p,
-            None => {
-                // dense causal indices
-                return Ok((0..cfg.n_heads)
-                    .map(|_| HeadIndex {
-                        pattern: HeadPattern::VerticalSlash,
-                        d_js: 0.0,
-                        blocks: (0..n).map(|q| (0..=q as u32).collect()).collect(),
-                    })
-                    .collect());
-            }
+            None => return Ok(fwd::dense_indices(cfg.n_heads, n)),
         };
+        if self.cfg.native_sigu {
+            // the reference's parallel per-head jobs, over the same chunks
+            return Ok(fwd::sigu_indices(&self.ctx, &cfg, chunks, n, &params));
+        }
         let mut out = Vec::with_capacity(cfg.n_heads);
         for h in 0..cfg.n_heads {
             let g = h / cfg.group_size();
-            let qs = chunks[n - 1].qs;
-            let (vertical, slash, a_hat) = if self.cfg.native_sigu {
-                let qhat = MatI8::from_vec(BLOCK, dh, Self::q_slice(chunks, n - 1, h, dh).to_vec());
-                let kblocks: Vec<(MatI8, f32)> = (0..n)
-                    .map(|b| {
-                        (MatI8::from_vec(BLOCK, dh, Self::k_slice(chunks, b, g, dh).to_vec()),
-                         chunks[b].ks)
-                    })
-                    .collect();
-                scores::stream_head_scores(&qhat, qs, &kblocks)
-            } else {
-                self.sigu_via_artifacts(chunks, h, g, n)?
-            };
+            let (vertical, slash, a_hat) = self.sigu_via_artifacts(chunks, h, g, n)?;
             // pooled estimate + decision inputs
-            let kpool = MatF32::from_fn(n, dh, |b, c| chunks[b].kpool[g * dh + c]);
-            let qpool_all = MatF32::from_fn(n, dh, |b, c| chunks[b].qpool[h * dh + c]);
+            let kpool = MatF32::from_fn(n, dh, |b, c| chunks[b].kpool.at(g, c));
+            let qpool_all = MatF32::from_fn(n, dh, |b, c| chunks[b].qpool.at(h, c));
             let qpool_hat: Vec<f32> = qpool_all.row(n - 1).to_vec();
             let a_bar = scores::pooled_estimate(&qpool_hat, &kpool);
             let stats = HeadStats { vertical, slash, a_bar, a_hat, qpool_all, kpool };
@@ -326,7 +351,7 @@ impl Engine {
 
     fn sigu_via_artifacts(
         &mut self,
-        chunks: &[ChunkState],
+        chunks: &[ChunkQkv],
         h: usize,
         g: usize,
         n: usize,
@@ -334,15 +359,15 @@ impl Engine {
         let cfg = self.cfg.model.clone();
         let dh = cfg.d_head;
         let qs = chunks[n - 1].qs;
-        let qhat = Self::q_slice(chunks, n - 1, h, dh).to_vec();
+        let qhat = chunks[n - 1].q[h].data.clone();
         let mut m = vec![-1e30f32; BLOCK];
         let mut l = vec![0.0f32; BLOCK];
         for b in 0..n {
-            let exe = self.rt.get(cfg.name, "index_phase_a")?;
+            let exe = self.runtime()?.get(cfg.name, "index_phase_a")?;
             let out = exe.run(&[
                 Arg::I8(&qhat, &[BLOCK, dh]),
                 Arg::ScalarF32(qs),
-                Arg::I8(Self::k_slice(chunks, b, g, dh), &[BLOCK, dh]),
+                Arg::I8(&chunks[b].k[g].data, &[BLOCK, dh]),
                 Arg::ScalarF32(chunks[b].ks),
                 Arg::F32(&m, &[BLOCK]),
                 Arg::F32(&l, &[BLOCK]),
@@ -353,11 +378,11 @@ impl Engine {
         let mut vertical = vec![0.0f32; n];
         let mut slash = vec![0.0f32; n];
         for b in 0..n {
-            let exe = self.rt.get(cfg.name, "index_phase_b")?;
+            let exe = self.runtime()?.get(cfg.name, "index_phase_b")?;
             let out = exe.run(&[
                 Arg::I8(&qhat, &[BLOCK, dh]),
                 Arg::ScalarF32(qs),
-                Arg::I8(Self::k_slice(chunks, b, g, dh), &[BLOCK, dh]),
+                Arg::I8(&chunks[b].k[g].data, &[BLOCK, dh]),
                 Arg::ScalarF32(chunks[b].ks),
                 Arg::F32(&m, &[BLOCK]),
                 Arg::F32(&l, &[BLOCK]),
@@ -375,11 +400,45 @@ impl Engine {
 
     /// Block-major SAU over the wave schedule; returns per-chunk attention
     /// outputs [n][B * H*dh].
+    ///
+    /// The cache-traffic walk always runs sequentially in schedule order
+    /// (deterministic stats, identical for both backends); the arithmetic
+    /// then runs natively in parallel or through batched artifact calls.
     fn run_sau_layer(
         &mut self,
-        chunks: &[ChunkState],
+        chunks: &[ChunkQkv],
         schedule: &Schedule,
         cache: &mut LivenessCache,
+        n: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        // fetch-or-hit; the functional path always has the data in host
+        // memory — the cache records the *traffic* outcome.
+        for wave in &schedule.waves {
+            for bj in &wave.blocks {
+                let key = cache_key(bj.kv_head, bj.block);
+                if matches!(cache.lookup(key), Access::Miss) {
+                    cache.admit(key);
+                }
+                for _ in &bj.jobs {
+                    cache.consume(key);
+                }
+            }
+        }
+        if self.cfg.native_sau {
+            // the reference's parallel wave execution over this engine's
+            // schedule (waves sized by cfg.wave_qblocks)
+            let attn = fwd::sau_layer(&self.ctx, &self.cfg.model, chunks, schedule, n);
+            Ok(attn.into_iter().map(|m| m.data).collect())
+        } else {
+            self.sau_pjrt(chunks, schedule, n)
+        }
+    }
+
+    /// PJRT SAU: batched artifact calls over the block-major job lists.
+    fn sau_pjrt(
+        &mut self,
+        chunks: &[ChunkQkv],
+        schedule: &Schedule,
         n: usize,
     ) -> Result<Vec<Vec<f32>>> {
         let cfg = self.cfg.model.clone();
@@ -396,57 +455,13 @@ impl Engine {
             let mut acc = vec![0.0f32; nstates * BLOCK * dh];
 
             for bj in &wave.blocks {
-                let key = cache_key(bj.kv_head, bj.block);
-                // fetch-or-hit; the functional path always has the data in
-                // host memory — the cache records the *traffic* outcome.
-                if matches!(cache.lookup(key), Access::Miss) {
-                    cache.admit(key);
-                }
                 let g = bj.kv_head as usize;
                 let b = bj.block as usize;
-                let kblk = Self::k_slice(chunks, b, g, dh);
-                let vblk = Self::v_slice(chunks, b, g, dh);
-
-                if self.cfg.native_sau {
-                    let kmat = MatI8::from_vec(BLOCK, dh, kblk.to_vec());
-                    let vmat = MatI8::from_vec(BLOCK, dh, vblk.to_vec());
-                    for job in &bj.jobs {
-                        let st = job.head as usize * wq + (job.qblock - wave.q_start) as usize;
-                        let qmat = MatI8::from_vec(
-                            BLOCK,
-                            dh,
-                            Self::q_slice(chunks, job.qblock as usize, job.head as usize, dh)
-                                .to_vec(),
-                        );
-                        let mut accm = MatF32::from_vec(
-                            BLOCK,
-                            dh,
-                            acc[st * BLOCK * dh..(st + 1) * BLOCK * dh].to_vec(),
-                        );
-                        attn_step_w8a8(
-                            &qmat,
-                            chunks[job.qblock as usize].qs,
-                            &kmat,
-                            chunks[b].ks,
-                            &vmat,
-                            chunks[b].vs,
-                            &mut m[st * BLOCK..(st + 1) * BLOCK],
-                            &mut l[st * BLOCK..(st + 1) * BLOCK],
-                            &mut accm,
-                            b == job.qblock as usize,
-                        );
-                        acc[st * BLOCK * dh..(st + 1) * BLOCK * dh].copy_from_slice(&accm.data);
-                        cache.consume(key);
-                    }
-                } else {
-                    // batched artifact calls, padded to the manifest J
-                    for group in bj.jobs.chunks(j_max) {
-                        self.sau_batch_call(chunks, wave.q_start, wq, group, b, g, kblk, vblk,
-                                            &mut m, &mut l, &mut acc, j_max)?;
-                        for _ in group {
-                            cache.consume(key);
-                        }
-                    }
+                let kblk: &[i8] = &chunks[b].k[g].data;
+                let vblk: &[i8] = &chunks[b].v[g].data;
+                for group in bj.jobs.chunks(j_max) {
+                    self.sau_batch_call(chunks, wave.q_start, wq, group, b, kblk, vblk,
+                                        &mut m, &mut l, &mut acc, j_max)?;
                 }
             }
 
@@ -475,12 +490,11 @@ impl Engine {
     #[allow(clippy::too_many_arguments)]
     fn sau_batch_call(
         &mut self,
-        chunks: &[ChunkState],
+        chunks: &[ChunkQkv],
         q_start: u32,
         wq: usize,
         group: &[crate::coordinator::joblist::Job],
         b: usize,
-        _g: usize,
         kblk: &[i8],
         vblk: &[i8],
         m: &mut [f32],
@@ -504,7 +518,7 @@ impl Engine {
         for (j, job) in group.iter().enumerate() {
             let st = job.head as usize * wq + (job.qblock - q_start) as usize;
             qb_buf[j * BLOCK * dh..(j + 1) * BLOCK * dh]
-                .copy_from_slice(Self::q_slice(chunks, job.qblock as usize, job.head as usize, dh));
+                .copy_from_slice(&chunks[job.qblock as usize].q[job.head as usize].data);
             kb_buf[j * BLOCK * dh..(j + 1) * BLOCK * dh].copy_from_slice(kblk);
             vb_buf[j * BLOCK * dh..(j + 1) * BLOCK * dh].copy_from_slice(vblk);
             qs_buf[j] = chunks[job.qblock as usize].qs;
@@ -516,7 +530,7 @@ impl Engine {
                 .copy_from_slice(&acc[st * BLOCK * dh..(st + 1) * BLOCK * dh]);
             diag_buf[j] = if b == job.qblock as usize { 1.0 } else { 0.0 };
         }
-        let exe = self.rt.get(cfg.name, "attn_block_batch")?;
+        let exe = self.runtime()?.get(cfg.name, "attn_block_batch")?;
         let out = exe.run(&[
             Arg::I8(&qb_buf, &[j_max, BLOCK, dh]),
             Arg::F32(&qs_buf, &[j_max]),
@@ -540,5 +554,92 @@ impl Engine {
                 .copy_from_slice(&acc_out[j * BLOCK * dh..(j + 1) * BLOCK * dh]);
         }
         Ok(())
+    }
+
+    /// Phase 4 (o_proj + residual + FFN + residual) for every chunk.
+    fn run_tail_layer(
+        &mut self,
+        li: usize,
+        hidden: &mut MatF32,
+        attn: &[Vec<f32>],
+        n: usize,
+    ) -> Result<()> {
+        let cfg = self.cfg.model.clone();
+        let (d, dh, hq) = (cfg.d_model, cfg.d_head, cfg.n_heads);
+        if self.cfg.native_linear {
+            let weights = &self.weights;
+            let ctx = &self.ctx;
+            let hidden_ref = &*hidden;
+            let new_chunks: Vec<MatF32> = ctx.pool.map(n, |ci| {
+                let a = MatF32 {
+                    rows: BLOCK,
+                    cols: hq * dh,
+                    data: attn[ci].clone(),
+                };
+                let x = hidden_ref.slice_rows(ci * BLOCK, (ci + 1) * BLOCK);
+                fwd::oproj_ffn_chunk(ctx, weights, li, &a, &x)
+            });
+            for (ci, x) in new_chunks.into_iter().enumerate() {
+                hidden.data[ci * BLOCK * d..(ci + 1) * BLOCK * d].copy_from_slice(&x.data);
+            }
+            return Ok(());
+        }
+        for ci in 0..n {
+            let resid: Vec<f32> = hidden.data[ci * BLOCK * d..(ci + 1) * BLOCK * d].to_vec();
+            let lw = &self.weights.layers[li];
+            let exe = self
+                .rt
+                .as_mut()
+                .ok_or_else(|| anyhow!("artifact backend requested but the engine is native-only"))?
+                .get(cfg.name, "o_proj_chunk")?;
+            let out = exe.run(&[
+                Arg::F32(&attn[ci], &[BLOCK, hq * dh]),
+                Arg::I8(&lw.wo.q.data, &[hq * dh, d]),
+                Arg::ScalarF32(lw.wo.scale),
+                Arg::F32(&resid, &[BLOCK, d]),
+            ])?;
+            let x = literal_f32(&out[0])?;
+            let exe = self
+                .rt
+                .as_mut()
+                .ok_or_else(|| anyhow!("artifact backend requested but the engine is native-only"))?
+                .get(cfg.name, "ffn_chunk")?;
+            let out = exe.run(&[
+                Arg::F32(&x, &[BLOCK, d]),
+                Arg::F32(&lw.g_ffn, &[d]),
+                Arg::I8(&lw.wg.q.data, &[d, cfg.d_ffn]),
+                Arg::ScalarF32(lw.wg.scale),
+                Arg::I8(&lw.wu.q.data, &[d, cfg.d_ffn]),
+                Arg::ScalarF32(lw.wu.scale),
+                Arg::I8(&lw.wd.q.data, &[cfg.d_ffn, d]),
+                Arg::ScalarF32(lw.wd.scale),
+            ])?;
+            let x = literal_f32(&out[0])?;
+            hidden.data[ci * BLOCK * d..(ci + 1) * BLOCK * d].copy_from_slice(&x);
+        }
+        Ok(())
+    }
+
+    /// Final norm + LM head over the last chunk.
+    fn run_logits(&mut self, last: &[f32]) -> Result<Vec<f32>> {
+        let cfg = self.cfg.model.clone();
+        let d = cfg.d_model;
+        if self.cfg.native_linear {
+            let last_m = MatF32 { rows: BLOCK, cols: d, data: last.to_vec() };
+            return Ok(fwd::logits_last_chunk(&self.ctx, &self.weights, &last_m).data);
+        }
+        let weights = &self.weights;
+        let exe = self
+            .rt
+            .as_mut()
+            .ok_or_else(|| anyhow!("artifact backend requested but the engine is native-only"))?
+            .get(cfg.name, "logits_chunk")?;
+        let out = exe.run(&[
+            Arg::F32(last, &[BLOCK, d]),
+            Arg::F32(&weights.g_final, &[d]),
+            Arg::I8(&weights.lm_head.q.data, &[d, cfg.vocab]),
+            Arg::ScalarF32(weights.lm_head.scale),
+        ])?;
+        literal_f32(&out[0])
     }
 }

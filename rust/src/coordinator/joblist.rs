@@ -15,6 +15,11 @@
 
 use crate::flexprefill::HeadIndex;
 
+/// Default number of live query blocks per SAU wave — the paper's banked
+/// accumulator budget. Shared by the engine config and the reference
+/// prefill (wave size never changes numerics, only memory/locality).
+pub const DEFAULT_WAVE_QBLOCKS: usize = 8;
+
 /// One SAU job: (query head, query block) consuming some KV block.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Job {

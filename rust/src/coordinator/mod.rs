@@ -11,5 +11,5 @@ pub mod joblist;
 pub mod server;
 
 pub use engine::{Engine, EngineConfig, PrefillRun};
-pub use joblist::{build_schedule, cache_key, BlockJobs, Job, Schedule, Wave};
+pub use joblist::{build_schedule, cache_key, BlockJobs, Job, Schedule, Wave, DEFAULT_WAVE_QBLOCKS};
 pub use server::{Completion, Policy, Server};

@@ -8,8 +8,8 @@
 //! identical — see DESIGN.md.
 
 
-use crate::quant::int8_matmul_bt;
-use crate::tensor::{MatF32, MatI8};
+use crate::tensor::{tile, MatF32, MatI8};
+use crate::util::pool::WorkerPool;
 
 /// Per-row online softmax state for the last query block.
 #[derive(Clone, Debug)]
@@ -25,9 +25,11 @@ impl StreamState {
 }
 
 /// Compute the dequantized score tile s = (Qhat @ Kblk^T) * qs * ks / sqrt(d).
-/// Qhat: [B, d] i8; kblk: [B, d] i8 (rows are key tokens).
+/// Qhat: [B, d] i8; kblk: [B, d] i8 (rows are key tokens). The exact W8A8
+/// product runs through the tiled kernel layer (identical integers to the
+/// scalar `quant::int8_matmul_bt` oracle).
 fn score_tile(qhat: &MatI8, qs: f32, kblk: &MatI8, ks: f32) -> MatF32 {
-    let acc = int8_matmul_bt(qhat, kblk);
+    let acc = tile::int8_matmul_bt(qhat, kblk);
     let scale = qs * ks / (qhat.cols as f32).sqrt();
     MatF32 {
         rows: qhat.rows,
@@ -138,6 +140,38 @@ pub fn stream_scores_generic(
     (vertical, slash, a_hat)
 }
 
+/// One head's SIGU scoring job for the parallel path: everything borrowed
+/// from the caller's chunk state (no K-block copies).
+pub struct HeadJob<'a> {
+    /// Last query block, quantized [B, d].
+    pub qhat: &'a MatI8,
+    pub qs: f32,
+    /// (K block, scale) in ascending block order.
+    pub kblocks: Vec<(&'a MatI8, f32)>,
+}
+
+impl HeadJob<'_> {
+    /// Run the sequential two-pass streaming math for this head
+    /// ([`stream_scores_generic`] over the borrowed K blocks).
+    pub fn stream(&self) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        stream_scores_generic(self.kblocks.len(), self.qhat.rows, |b| {
+            let (kb, ks) = self.kblocks[b];
+            score_tile(self.qhat, self.qs, kb, ks)
+        })
+    }
+}
+
+/// Stream every head's statistics across the worker pool — the SIGU's
+/// per-head lanes as independent jobs. Each job runs the sequential
+/// two-pass math of [`HeadJob::stream`], so the results are bit-identical
+/// for every thread count (property-tested).
+pub fn stream_heads_parallel(
+    pool: &WorkerPool,
+    jobs: &[HeadJob<'_>],
+) -> Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+    pool.map(jobs.len(), |h| jobs[h].stream())
+}
+
 /// Full streaming statistics for one head (W8A8 tiles): vertical[N],
 /// slash[N], a_hat[N]. `kblocks` are (quantized K block, scale) in
 /// ascending block order — exactly the stream the paper's Key Block Fetch
@@ -158,7 +192,7 @@ pub fn stream_head_scores_f32(qhat: &MatF32, kblocks: &[MatF32]) -> (Vec<f32>, V
     let inv_sqrt_d = 1.0 / (qhat.cols as f32).sqrt();
     stream_scores_generic(kblocks.len(), qhat.rows, |b| {
         let kb = &kblocks[b];
-        let mut t = crate::tensor::ops::matmul_bt(qhat, kb);
+        let mut t = tile::matmul_bt(qhat, kb);
         for v in t.data.iter_mut() {
             *v *= inv_sqrt_d;
         }
@@ -259,6 +293,33 @@ mod tests {
         let l: f32 = row.iter().map(|v| (v - mx).exp()).sum();
         assert!((st.m[0] - mx).abs() < 1e-6);
         assert!((st.l[0] - l).abs() / l < 1e-5);
+    }
+
+    #[test]
+    fn parallel_heads_match_sequential_bitwise() {
+        let n = 5;
+        let heads: Vec<(MatI8, f32, Vec<(MatI8, f32)>)> = (0..6)
+            .map(|h| {
+                let (qhat, qs, kblocks) = setup(n, 100 + h);
+                (qhat, qs, kblocks)
+            })
+            .collect();
+        let jobs: Vec<HeadJob<'_>> = heads
+            .iter()
+            .map(|(qhat, qs, kblocks)| HeadJob {
+                qhat,
+                qs: *qs,
+                kblocks: kblocks.iter().map(|(kb, ks)| (kb, *ks)).collect(),
+            })
+            .collect();
+        let seq: Vec<_> = heads
+            .iter()
+            .map(|(qhat, qs, kblocks)| stream_head_scores(qhat, *qs, kblocks))
+            .collect();
+        for threads in [1usize, 2, 8] {
+            let par = stream_heads_parallel(&WorkerPool::with_threads(threads), &jobs);
+            assert_eq!(par, seq, "threads={threads}");
+        }
     }
 
     #[test]

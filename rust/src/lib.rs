@@ -8,7 +8,11 @@
 //!    to HLO text, executed through [`runtime`] on the PJRT CPU client.
 //!
 //! Public API tour:
-//!  * [`coordinator::Engine`] — end-to-end chunked prefill over artifacts.
+//!  * [`coordinator::Engine`] — end-to-end chunked prefill, over the AOT
+//!    artifacts (`pjrt` feature) or artifact-free on the native kernels.
+//!  * [`tensor::tile`] + [`util::pool`] — the block-major kernel layer:
+//!    cache-blocked W8A8/f32 kernels and the shared worker pool
+//!    (`FASTP_THREADS`); results are bit-identical for any thread count.
 //!  * [`flexprefill`] — Algorithm 1 (dynamic sparse index generation).
 //!  * [`sim`] — FPGA performance/energy model (Figures 5-8, Tables I/II).
 //!  * [`gpu_model`] — the A5000 baseline cost model.

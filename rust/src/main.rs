@@ -85,8 +85,11 @@ USAGE: fastp <command> [--flags]
 
 COMMANDS
   prefill  --model tiny|small100m --tokens 1024 [--seed N] [--dense true]
-           [--artifacts DIR] [--native-sau true]
-           one functional prefill through the PJRT artifact pipeline
+           [--artifacts DIR] [--native-sau true] [--native true]
+           [--threads N]
+           one functional prefill; --native runs every stage on the
+           tiled parallel kernels (no artifacts needed; threads default
+           to FASTP_THREADS or available parallelism)
   serve    --model tiny --requests 8 --tokens 1024 [--workers 2]
            [--policy fcfs|sjf]   serve a synthetic trace, report latencies
   sim      --model llama3.2-3b --tokens 131072 [--seed N]
@@ -109,6 +112,13 @@ fn engine_config(flags: &HashMap<String, String>) -> Result<EngineConfig> {
     cfg.weight_seed = flag(flags, "seed", cfg.weight_seed)?;
     cfg.native_sau = flag(flags, "native-sau", cfg.native_sau)?;
     cfg.native_sigu = flag(flags, "native-sigu", cfg.native_sigu)?;
+    cfg.native_linear = flag(flags, "native-linear", cfg.native_linear)?;
+    if flag(flags, "native", false)? {
+        cfg.native_sigu = true;
+        cfg.native_sau = true;
+        cfg.native_linear = true;
+    }
+    cfg.threads = flag(flags, "threads", cfg.threads)?;
     cfg.wave_qblocks = flag(flags, "wave", cfg.wave_qblocks)?;
     cfg.cache_blocks = flag(flags, "cache-blocks", cfg.cache_blocks)?;
     Ok(cfg)
@@ -120,8 +130,13 @@ fn cmd_prefill(args: &[String]) -> Result<()> {
     let tokens: usize = flag(&flags, "tokens", 1024)?;
     let cfg = engine_config(&flags)?;
     let spec = PromptSpec { kind: PromptKind::Mixed, tokens, seed: flag(&flags, "seed", 1u64)? };
-    println!("loading artifacts from {dir} (model {})...", cfg.model.name);
+    if cfg.fully_native() {
+        println!("native tiled-kernel backend (model {})...", cfg.model.name);
+    } else {
+        println!("loading artifacts from {dir} (model {})...", cfg.model.name);
+    }
     let mut engine = Engine::new(&dir, cfg)?;
+    println!("backend: {}", engine.platform());
     let toks = spec.generate();
     let run = engine.prefill(0, &toks)?;
     let m = &run.metrics;
@@ -135,7 +150,7 @@ fn cmd_prefill(args: &[String]) -> Result<()> {
     println!("KV cache hit rate  : {:.1}%", m.cache_hit_rate * 100.0);
     if flag(&flags, "stats", false)? {
         println!("\nper-executable time (top 8):");
-        for (name, calls, ms) in engine.rt.exec_stats().into_iter().take(8) {
+        for (name, calls, ms) in engine.exec_stats().into_iter().take(8) {
             println!("  {name:<32} {calls:>6} calls  {ms:>10.1} ms total  {:>8.2} ms/call",
                 ms / calls.max(1) as f64);
         }

@@ -5,11 +5,20 @@
 //! coordinator's artifact-backed execution can be validated against it.
 //! Follows the paper's per-layer phasing (§IV-A): KV generation for all
 //! chunks -> SIGU -> SAU (block-major) -> FFN.
+//!
+//! Execution is block-major and parallel: every phase fans independent
+//! jobs (per-chunk QKV/FFN, per-head SIGU, per-(head, query-block) SAU
+//! states inside each wave of the `coordinator::joblist` schedule) over
+//! the shared worker pool, with the tiled kernels of `tensor::tile` doing
+//! the arithmetic. Each job's math is sequential and self-contained, so
+//! the output is **bit-identical for every thread count** (tested).
 
 use crate::config::{FlexParams, BLOCK};
+use crate::coordinator::joblist::{build_schedule, DEFAULT_WAVE_QBLOCKS};
 use crate::flexprefill::{generate_head_index, scores, HeadIndex, HeadPattern, HeadStats};
-use crate::quant::{int8_matmul_bt, int8_matmul_deq, quant_scale, quantize_with};
+use crate::quant::{quant_scale, quantize_with};
 use crate::tensor::ops::{block_pool, rmsnorm, rope, silu};
+use crate::tensor::tile::{self, KernelCtx};
 use crate::tensor::{MatF32, MatI8};
 
 use super::weights::ModelWeights;
@@ -30,21 +39,23 @@ pub struct PrefillOutput {
     pub index_sets: Vec<Vec<HeadIndex>>,
 }
 
-/// Quantized per-chunk activations for one layer's attention.
-struct ChunkQkv {
-    q: Vec<MatI8>, // per head: [B, dh]
-    qs: f32,
-    k: Vec<MatI8>, // per kv head
-    ks: f32,
-    v: Vec<MatI8>, // per kv head
-    vs: f32,
-    qpool: MatF32, // [H, dh]
-    kpool: MatF32, // [Hk, dh]
+/// Quantized per-chunk activations for one layer's attention. Shared with
+/// the coordinator's native (artifact-free) execution path.
+pub struct ChunkQkv {
+    pub q: Vec<MatI8>, // per head: [B, dh]
+    pub qs: f32,
+    pub k: Vec<MatI8>, // per kv head
+    pub ks: f32,
+    pub v: Vec<MatI8>, // per kv head
+    pub vs: f32,
+    pub qpool: MatF32, // [H, dh]
+    pub kpool: MatF32, // [Hk, dh]
 }
 
 /// One W8A8 online-softmax attention step (the Rust mirror of
 /// `ref.attn_block_step_ref` / the `attn_block_step` artifact).
-/// `diag` applies the intra-block causal mask.
+/// `diag` applies the intra-block causal mask. The score matmul runs
+/// through the tiled kernel layer (exact integers, same as the oracle).
 #[allow(clippy::too_many_arguments)]
 pub fn attn_step_w8a8(
     q: &MatI8,
@@ -60,7 +71,7 @@ pub fn attn_step_w8a8(
 ) {
     let b = q.rows;
     let dh = q.cols;
-    let acc_i32 = int8_matmul_bt(q, k);
+    let acc_i32 = tile::int8_matmul_bt(q, k);
     let scale = qs * ks / (dh as f32).sqrt();
     let mut p_i8 = vec![0i8; k.rows];
     for r in 0..b {
@@ -115,7 +126,11 @@ pub fn attn_finalize(l: &[f32], acc: &MatF32) -> MatF32 {
     out
 }
 
-fn qkv_chunk(w: &ModelWeights, li: usize, x: &MatF32, pos0: i32) -> ChunkQkv {
+/// QKV generation for one chunk: rmsnorm, quantize, project, rope, pool,
+/// requantize. Public so the coordinator's native path executes the exact
+/// same math as the reference (bit-identical chunks). The projections run
+/// through the kernel context's tiled W8A8 matmul.
+pub fn qkv_chunk(ctx: &KernelCtx, w: &ModelWeights, li: usize, x: &MatF32, pos0: i32) -> ChunkQkv {
     let cfg = &w.cfg;
     let lw = &w.layers[li];
     let b = x.rows;
@@ -123,9 +138,9 @@ fn qkv_chunk(w: &ModelWeights, li: usize, x: &MatF32, pos0: i32) -> ChunkQkv {
     let xs = quant_scale(&xn.data);
     let mut x_i8 = MatI8::zeros(b, cfg.d_model);
     quantize_with(&xn.data, xs, &mut x_i8.data);
-    let q = int8_matmul_deq(&x_i8, xs, &lw.wq.q, lw.wq.scale); // [B, H*dh]
-    let k = int8_matmul_deq(&x_i8, xs, &lw.wk.q, lw.wk.scale);
-    let v = int8_matmul_deq(&x_i8, xs, &lw.wv.q, lw.wv.scale);
+    let q = ctx.int8_matmul_deq(&x_i8, xs, &lw.wq.q, lw.wq.scale); // [B, H*dh]
+    let k = ctx.int8_matmul_deq(&x_i8, xs, &lw.wk.q, lw.wk.scale);
+    let v = ctx.int8_matmul_deq(&x_i8, xs, &lw.wv.q, lw.wv.scale);
     let pos: Vec<i32> = (0..b as i32).map(|i| pos0 + i).collect();
 
     // split per head, rope q/k, pool, then quantize per chunk (per-tensor
@@ -183,16 +198,18 @@ fn qkv_chunk(w: &ModelWeights, li: usize, x: &MatF32, pos0: i32) -> ChunkQkv {
     }
 }
 
-fn ffn_chunk(w: &ModelWeights, li: usize, x: &MatF32) -> MatF32 {
+/// FFN for one chunk (rmsnorm, gate/up, SiLU, down, residual). Public for
+/// the coordinator's native path.
+pub fn ffn_chunk(ctx: &KernelCtx, w: &ModelWeights, li: usize, x: &MatF32) -> MatF32 {
     let cfg = &w.cfg;
     let lw = &w.layers[li];
     let xn = rmsnorm(x, &lw.g_ffn, cfg.rms_eps);
     let xs = quant_scale(&xn.data);
     let mut x_i8 = MatI8::zeros(x.rows, cfg.d_model);
     quantize_with(&xn.data, xs, &mut x_i8.data);
-    let mut gate = int8_matmul_deq(&x_i8, xs, &lw.wg.q, lw.wg.scale);
+    let mut gate = ctx.int8_matmul_deq(&x_i8, xs, &lw.wg.q, lw.wg.scale);
     silu(&mut gate);
-    let up = int8_matmul_deq(&x_i8, xs, &lw.wu.q, lw.wu.scale);
+    let up = ctx.int8_matmul_deq(&x_i8, xs, &lw.wu.q, lw.wu.scale);
     let mut h = gate;
     for (hv, uv) in h.data.iter_mut().zip(&up.data) {
         *hv *= uv;
@@ -200,7 +217,7 @@ fn ffn_chunk(w: &ModelWeights, li: usize, x: &MatF32) -> MatF32 {
     let hs = quant_scale(&h.data);
     let mut h_i8 = MatI8::zeros(h.rows, h.cols);
     quantize_with(&h.data, hs, &mut h_i8.data);
-    let down = int8_matmul_deq(&h_i8, hs, &lw.wd.q, lw.wd.scale);
+    let down = ctx.int8_matmul_deq(&h_i8, hs, &lw.wd.q, lw.wd.scale);
     let mut out = x.clone();
     for (o, d) in out.data.iter_mut().zip(&down.data) {
         *o += d;
@@ -208,11 +225,167 @@ fn ffn_chunk(w: &ModelWeights, li: usize, x: &MatF32) -> MatF32 {
     out
 }
 
-/// Reference chunked prefill. `flex: None` => dense causal attention.
+/// o_proj + residual followed by FFN + residual for one chunk: the whole
+/// post-attention tail of a layer. Public for the coordinator's native
+/// path (bit-identical to the reference).
+pub fn oproj_ffn_chunk(
+    ctx: &KernelCtx,
+    w: &ModelWeights,
+    li: usize,
+    attn: &MatF32,
+    x: &MatF32,
+) -> MatF32 {
+    let lw = &w.layers[li];
+    let s_a = quant_scale(&attn.data);
+    let mut a_i8 = MatI8::zeros(attn.rows, attn.cols);
+    quantize_with(&attn.data, s_a, &mut a_i8.data);
+    let proj = ctx.int8_matmul_deq(&a_i8, s_a, &lw.wo.q, lw.wo.scale);
+    let mut x = x.clone();
+    for (xv, pv) in x.data.iter_mut().zip(&proj.data) {
+        *xv += pv;
+    }
+    ffn_chunk(ctx, w, li, &x)
+}
+
+/// Final norm + LM head over the last chunk. Public for the coordinator's
+/// native path.
+pub fn logits_last_chunk(ctx: &KernelCtx, w: &ModelWeights, last: &MatF32) -> MatF32 {
+    let cfg = &w.cfg;
+    let xn = rmsnorm(last, &w.g_final, cfg.rms_eps);
+    let xs = quant_scale(&xn.data);
+    let mut x_i8 = MatI8::zeros(last.rows, cfg.d_model);
+    quantize_with(&xn.data, xs, &mut x_i8.data);
+    ctx.int8_matmul_deq(&x_i8, xs, &w.lm_head.q, w.lm_head.scale)
+}
+
+/// argmax of a logits row (first generated token).
+pub fn argmax_token(row: &[f32]) -> u8 {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i as u8)
+        .unwrap_or(0)
+}
+
+/// SIGU statistics + Algorithm 1 for every head, fanned over the pool.
+/// Each head job borrows the chunk state (no K copies) and is sequential
+/// inside, so results do not depend on the thread count. Shared with the
+/// coordinator's native path.
+pub fn sigu_indices(
+    ctx: &KernelCtx,
+    cfg: &crate::config::ModelConfig,
+    chunks: &[ChunkQkv],
+    n: usize,
+    params: &FlexParams,
+) -> Vec<HeadIndex> {
+    ctx.pool.map(cfg.n_heads, |h| {
+        let g = h / cfg.group_size();
+        let job = scores::HeadJob {
+            qhat: &chunks[n - 1].q[h],
+            qs: chunks[n - 1].qs,
+            kblocks: chunks.iter().map(|c| (&c.k[g], c.ks)).collect(),
+        };
+        let (vertical, slash, a_hat) = job.stream();
+        let kpool = MatF32::from_fn(n, cfg.d_head, |b, c| chunks[b].kpool.at(g, c));
+        let qpool_all = MatF32::from_fn(n, cfg.d_head, |b, c| chunks[b].qpool.at(h, c));
+        let qpool_hat: Vec<f32> = qpool_all.row(n - 1).to_vec();
+        let a_bar = scores::pooled_estimate(&qpool_hat, &kpool);
+        let stats = HeadStats { vertical, slash, a_bar, a_hat, qpool_all, kpool };
+        generate_head_index(&stats, params)
+    })
+}
+
+/// Dense causal index set (every query block attends to all blocks <= it).
+pub fn dense_indices(n_heads: usize, n: usize) -> Vec<HeadIndex> {
+    (0..n_heads)
+        .map(|_| HeadIndex {
+            pattern: HeadPattern::VerticalSlash,
+            d_js: 0.0,
+            blocks: (0..n).map(|q| (0..=q as u32).collect()).collect(),
+        })
+        .collect()
+}
+
+/// Execute one layer's SAU over the given block-major wave schedule,
+/// fanning the per-(head, query-block) accumulator states of each wave
+/// over the pool. Per state, KV blocks fold in ascending order (the
+/// schedule's block-major order restricted to that state), matching the
+/// scalar reference exactly. Shared with the coordinator's native path
+/// (which builds its schedule from `EngineConfig::wave_qblocks`).
+pub fn sau_layer(
+    ctx: &KernelCtx,
+    cfg: &crate::config::ModelConfig,
+    chunks: &[ChunkQkv],
+    schedule: &crate::coordinator::joblist::Schedule,
+    n: usize,
+) -> Vec<MatF32> {
+    let hq = cfg.n_heads;
+    let mut attn_chunks: Vec<MatF32> = (0..n).map(|_| MatF32::zeros(BLOCK, cfg.q_dim())).collect();
+    for wave in &schedule.waves {
+        let wq = (wave.q_end - wave.q_start) as usize;
+        // Invert the wave's block-major job lists into per-state ascending
+        // KV lists (states = live (head, q-block) accumulators).
+        let mut state_kvs: Vec<Vec<u32>> = vec![Vec::new(); hq * wq];
+        for bj in &wave.blocks {
+            for job in &bj.jobs {
+                state_kvs[job.head as usize * wq + (job.qblock - wave.q_start) as usize]
+                    .push(bj.block);
+            }
+        }
+        let states: Vec<(usize, usize)> = (0..hq * wq)
+            .filter(|&st| !state_kvs[st].is_empty())
+            .map(|st| (st / wq, wave.q_start as usize + st % wq))
+            .collect();
+        let outs: Vec<MatF32> = ctx.pool.map(states.len(), |si| {
+            let (h, qb) = states[si];
+            let g = h / cfg.group_size();
+            let mut m = vec![-1e30f32; BLOCK];
+            let mut l = vec![0.0f32; BLOCK];
+            let mut acc = MatF32::zeros(BLOCK, cfg.d_head);
+            for &kb in &state_kvs[h * wq + (qb - wave.q_start as usize)] {
+                let kb = kb as usize;
+                attn_step_w8a8(
+                    &chunks[qb].q[h],
+                    chunks[qb].qs,
+                    &chunks[kb].k[g],
+                    chunks[kb].ks,
+                    &chunks[kb].v[g],
+                    chunks[kb].vs,
+                    &mut m,
+                    &mut l,
+                    &mut acc,
+                    kb == qb,
+                );
+            }
+            attn_finalize(&l, &acc)
+        });
+        for ((h, qb), out) in states.into_iter().zip(outs) {
+            for r in 0..BLOCK {
+                attn_chunks[qb].row_mut(r)[h * cfg.d_head..(h + 1) * cfg.d_head]
+                    .copy_from_slice(out.row(r));
+            }
+        }
+    }
+    attn_chunks
+}
+
+/// Reference chunked prefill with the default kernel context
+/// (`FASTP_THREADS` workers). `flex: None` => dense causal attention.
 pub fn prefill_reference(
     w: &ModelWeights,
     tokens: &[u8],
     flex: Option<&FlexParams>,
+) -> PrefillOutput {
+    prefill_reference_ctx(w, tokens, flex, &KernelCtx::from_env())
+}
+
+/// Reference chunked prefill over an explicit kernel context. Output is
+/// bit-identical for every pool size (each job is sequential inside).
+pub fn prefill_reference_ctx(
+    w: &ModelWeights,
+    tokens: &[u8],
+    flex: Option<&FlexParams>,
+    ctx: &KernelCtx,
 ) -> PrefillOutput {
     let cfg = &w.cfg;
     let s = tokens.len();
@@ -225,94 +398,34 @@ pub fn prefill_reference(
     let mut density_cnt = 0usize;
 
     for li in 0..cfg.n_layers {
-        // ---- phase 1: KV generation over all chunks ----
-        let chunks: Vec<ChunkQkv> = (0..n)
-            .map(|ci| {
-                let x = hidden.slice_rows(ci * BLOCK, (ci + 1) * BLOCK);
-                qkv_chunk(w, li, &x, (ci * BLOCK) as i32)
-            })
-            .collect();
+        // ---- phase 1: KV generation, one job per chunk ----
+        let chunks: Vec<ChunkQkv> = ctx.pool.map(n, |ci| {
+            let x = hidden.slice_rows(ci * BLOCK, (ci + 1) * BLOCK);
+            qkv_chunk(ctx, w, li, &x, (ci * BLOCK) as i32)
+        });
 
-        // ---- phase 2: SIGU per head ----
-        let indices: Vec<HeadIndex> = (0..cfg.n_heads)
-            .map(|h| {
-                if let Some(params) = flex {
-                    let g = h / cfg.group_size();
-                    let qhat = &chunks[n - 1].q[h];
-                    let kblocks: Vec<(MatI8, f32)> =
-                        chunks.iter().map(|c| (c.k[g].clone(), c.ks)).collect();
-                    let (vertical, slash, a_hat) =
-                        scores::stream_head_scores(qhat, chunks[n - 1].qs, &kblocks);
-                    let kpool =
-                        MatF32::from_fn(n, cfg.d_head, |b, c| chunks[b].kpool.at(g, c));
-                    let qpool_all =
-                        MatF32::from_fn(n, cfg.d_head, |b, c| chunks[b].qpool.at(h, c));
-                    let qpool_hat: Vec<f32> = qpool_all.row(n - 1).to_vec();
-                    let a_bar = scores::pooled_estimate(&qpool_hat, &kpool);
-                    let stats = HeadStats { vertical, slash, a_bar, a_hat, qpool_all, kpool };
-                    generate_head_index(&stats, params)
-                } else {
-                    // dense causal: q block attends to all blocks <= q
-                    HeadIndex {
-                        pattern: HeadPattern::VerticalSlash,
-                        d_js: 0.0,
-                        blocks: (0..n).map(|q| (0..=q as u32).collect()).collect(),
-                    }
-                }
-            })
-            .collect();
+        // ---- phase 2: SIGU, one job per head ----
+        let indices: Vec<HeadIndex> = match flex {
+            Some(params) => sigu_indices(ctx, cfg, &chunks, n, params),
+            None => dense_indices(cfg.n_heads, n),
+        };
         for idx in &indices {
             density_sum += idx.density();
             density_cnt += 1;
         }
         patterns.push(indices.iter().map(|i| i.pattern).collect());
 
-        // ---- phase 3: SAU (per (head, q-block), kv blocks ascending) ----
-        let mut attn_chunks: Vec<MatF32> =
-            (0..n).map(|_| MatF32::zeros(BLOCK, cfg.q_dim())).collect();
-        for (h, idx) in indices.iter().enumerate() {
-            let g = h / cfg.group_size();
-            for (qb, sel) in idx.blocks.iter().enumerate() {
-                let mut m = vec![-1e30f32; BLOCK];
-                let mut l = vec![0.0f32; BLOCK];
-                let mut acc = MatF32::zeros(BLOCK, cfg.d_head);
-                for &kb in sel {
-                    let kb = kb as usize;
-                    attn_step_w8a8(
-                        &chunks[qb].q[h],
-                        chunks[qb].qs,
-                        &chunks[kb].k[g],
-                        chunks[kb].ks,
-                        &chunks[kb].v[g],
-                        chunks[kb].vs,
-                        &mut m,
-                        &mut l,
-                        &mut acc,
-                        kb == qb,
-                    );
-                }
-                let out = attn_finalize(&l, &acc);
-                for r in 0..BLOCK {
-                    attn_chunks[qb].row_mut(r)[h * cfg.d_head..(h + 1) * cfg.d_head]
-                        .copy_from_slice(out.row(r));
-                }
-            }
-        }
+        // ---- phase 3: SAU waves, one job per (head, q-block) state ----
+        let schedule = build_schedule(&indices, cfg.group_size(), DEFAULT_WAVE_QBLOCKS);
+        let attn_chunks = sau_layer(ctx, cfg, &chunks, &schedule, n);
         index_sets.push(indices);
 
         // ---- phase 4: o_proj + residual, FFN + residual, per chunk ----
-        let lw = &w.layers[li];
-        for ci in 0..n {
-            let attn = &attn_chunks[ci];
-            let s_a = quant_scale(&attn.data);
-            let mut a_i8 = MatI8::zeros(BLOCK, cfg.q_dim());
-            quantize_with(&attn.data, s_a, &mut a_i8.data);
-            let proj = int8_matmul_deq(&a_i8, s_a, &lw.wo.q, lw.wo.scale);
-            let mut x = hidden.slice_rows(ci * BLOCK, (ci + 1) * BLOCK);
-            for (xv, pv) in x.data.iter_mut().zip(&proj.data) {
-                *xv += pv;
-            }
-            let x = ffn_chunk(w, li, &x);
+        let new_chunks: Vec<MatF32> = ctx.pool.map(n, |ci| {
+            let x = hidden.slice_rows(ci * BLOCK, (ci + 1) * BLOCK);
+            oproj_ffn_chunk(ctx, w, li, &attn_chunks[ci], &x)
+        });
+        for (ci, x) in new_chunks.into_iter().enumerate() {
             hidden.data[ci * BLOCK * cfg.d_model..(ci + 1) * BLOCK * cfg.d_model]
                 .copy_from_slice(&x.data);
         }
@@ -320,18 +433,9 @@ pub fn prefill_reference(
 
     // ---- final norm + LM head on the last chunk ----
     let last = hidden.slice_rows(s - BLOCK, s);
-    let xn = rmsnorm(&last, &w.g_final, cfg.rms_eps);
-    let xs = quant_scale(&xn.data);
-    let mut x_i8 = MatI8::zeros(BLOCK, cfg.d_model);
-    quantize_with(&xn.data, xs, &mut x_i8.data);
-    let logits = int8_matmul_deq(&x_i8, xs, &w.lm_head.q, w.lm_head.scale);
+    let logits = logits_last_chunk(ctx, w, &last);
     let last_row = logits.row(BLOCK - 1);
-    let first_token = last_row
-        .iter()
-        .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .map(|(i, _)| i as u8)
-        .unwrap_or(0);
+    let first_token = argmax_token(last_row);
 
     PrefillOutput {
         first_token,
@@ -395,6 +499,27 @@ mod tests {
         // with 2 blocks and full coverage the outputs should agree closely
         let rel = crate::util::stats::rel_l2(&sparse.hidden.data, &dense.hidden.data);
         assert!(rel < 0.05, "rel {rel}");
+    }
+
+    #[test]
+    fn prefill_bit_identical_across_thread_counts() {
+        // the acceptance property of the parallel kernel core
+        let w = ModelWeights::generate(&TINY, 21);
+        let t = tokens(384, 9);
+        let flex = FlexParams::default();
+        let one = prefill_reference_ctx(&w, &t, Some(&flex), &KernelCtx::with_threads(1));
+        for threads in [2usize, 8] {
+            let par = prefill_reference_ctx(&w, &t, Some(&flex), &KernelCtx::with_threads(threads));
+            assert_eq!(one.first_token, par.first_token, "threads={threads}");
+            assert_eq!(one.logits_last, par.logits_last, "threads={threads}");
+            assert_eq!(one.hidden.data, par.hidden.data, "threads={threads}");
+            for (la, lb) in one.index_sets.iter().zip(&par.index_sets) {
+                for (ia, ib) in la.iter().zip(lb) {
+                    assert_eq!(ia.pattern, ib.pattern);
+                    assert_eq!(ia.blocks, ib.blocks);
+                }
+            }
+        }
     }
 
     #[test]

@@ -6,5 +6,5 @@ pub mod decode;
 pub mod forward;
 pub mod weights;
 
-pub use forward::{prefill_reference, PrefillOutput};
+pub use forward::{prefill_reference, prefill_reference_ctx, PrefillOutput};
 pub use weights::{LayerWeights, ModelWeights};

@@ -1,9 +1,36 @@
 //! Typed argument/result marshalling between Rust slices and XLA literals.
+//!
+//! [`Arg`] and its manifest-shape validation are always available; the
+//! literal conversions exist only with the `pjrt` feature. The stub
+//! [`Literal`] (no `pjrt`) can never be produced at runtime — stub
+//! executables fail before constructing one — so its accessors only need to
+//! keep the call sites typechecking.
 
 use anyhow::{bail, Context, Result};
-use xla::{ElementType, Literal};
+#[cfg(feature = "pjrt")]
+use xla::ElementType;
+#[cfg(feature = "pjrt")]
+pub use xla::Literal;
 
 use super::artifacts::{Dtype, ShapeDecl};
+
+/// Stub literal for builds without the `pjrt` feature.
+#[cfg(not(feature = "pjrt"))]
+#[derive(Debug)]
+pub struct Literal {
+    _unconstructible: (),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Literal {
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        bail!("literal access: built without the `pjrt` feature")
+    }
+
+    pub fn get_first_element<T>(&self) -> Result<T> {
+        bail!("literal access: built without the `pjrt` feature")
+    }
+}
 
 /// A typed argument for an artifact call. Borrowed slices avoid copies on
 /// the caller side; the literal construction is the single copy point.
@@ -54,6 +81,7 @@ impl<'a> Arg<'a> {
     }
 
     /// Build the XLA literal (one host copy).
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<Literal> {
         fn bytes_of<T>(v: &[T]) -> &[u8] {
             unsafe {
@@ -118,6 +146,7 @@ mod tests {
         assert!(a.check(&bad_ty, 0).is_err());
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_roundtrip_f32() {
         let v = [1.5f32, -2.5, 3.5, 0.0];
@@ -125,6 +154,7 @@ mod tests {
         assert_eq!(literal_f32(&lit).unwrap(), v.to_vec());
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_roundtrip_i8() {
         let v = [-127i8, 0, 127, 5];
@@ -132,6 +162,7 @@ mod tests {
         assert_eq!(literal_i8(&lit).unwrap(), v.to_vec());
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn scalar_literal() {
         let lit = Arg::ScalarF32(2.5).to_literal().unwrap();

@@ -19,4 +19,4 @@ pub mod synth;
 
 pub use prefill::{sau_wave_qblocks, simulate_prefill, SimReport};
 pub use resources::{resource_report, ResourceReport, Resources};
-pub use synth::{synth_model_indices, HeadKind, HeadMix};
+pub use synth::{synth_model_indices, synth_model_indices_pool, HeadKind, HeadMix};

@@ -104,6 +104,11 @@ pub fn synth_head_stats(kind: HeadKind, n: usize, d: usize, rng: &mut Prng) -> H
 
 /// Generate full-model index sets at paper scale: `heads` per layer,
 /// `layers` simulated layers (statistically iid), `n` blocks.
+///
+/// Head generation fans out over the shared worker pool: a cheap
+/// sequential pass draws each head's archetype and forks an independent
+/// PRNG stream for it, then the stats + Algorithm-1 jobs run in parallel.
+/// Forked streams make the result deterministic for every thread count.
 pub fn synth_model_indices(
     heads: usize,
     layers: usize,
@@ -113,25 +118,56 @@ pub fn synth_model_indices(
     params: &FlexParams,
     seed: u64,
 ) -> Vec<Vec<HeadIndex>> {
+    synth_model_indices_pool(
+        heads,
+        layers,
+        n,
+        d,
+        mix,
+        params,
+        seed,
+        &crate::util::pool::WorkerPool::from_env(),
+    )
+}
+
+/// [`synth_model_indices`] over an explicit worker pool.
+#[allow(clippy::too_many_arguments)]
+pub fn synth_model_indices_pool(
+    heads: usize,
+    layers: usize,
+    n: usize,
+    d: usize,
+    mix: &HeadMix,
+    params: &FlexParams,
+    seed: u64,
+    pool: &crate::util::pool::WorkerPool,
+) -> Vec<Vec<HeadIndex>> {
     let mut rng = Prng::new(seed);
-    (0..layers)
-        .map(|_| {
-            (0..heads)
-                .map(|_| {
-                    let r = rng.f32() as f64;
-                    let kind = if r < mix.sink {
-                        HeadKind::Sink
-                    } else if r < mix.sink + mix.local {
-                        HeadKind::Local
-                    } else {
-                        HeadKind::Diffuse
-                    };
-                    let stats = synth_head_stats(kind, n, d, &mut rng);
-                    generate_head_index(&stats, params)
-                })
-                .collect()
+    let jobs: Vec<(HeadKind, Prng)> = (0..layers * heads)
+        .map(|i| {
+            let r = rng.f32() as f64;
+            let kind = if r < mix.sink {
+                HeadKind::Sink
+            } else if r < mix.sink + mix.local {
+                HeadKind::Local
+            } else {
+                HeadKind::Diffuse
+            };
+            (kind, rng.fork(i as u64))
         })
-        .collect()
+        .collect();
+    let indices = pool.map(jobs.len(), |i| {
+        let (kind, child) = &jobs[i];
+        let mut rng = child.clone();
+        let stats = synth_head_stats(*kind, n, d, &mut rng);
+        generate_head_index(&stats, params)
+    });
+    let mut out: Vec<Vec<HeadIndex>> = Vec::with_capacity(layers);
+    let mut it = indices.into_iter();
+    for _ in 0..layers {
+        out.push(it.by_ref().take(heads).collect());
+    }
+    out
 }
 
 #[cfg(test)]
@@ -175,6 +211,24 @@ mod tests {
         let d32 = mean_density(&synth_model_indices(8, 2, 32, 32, &mix, &params, 3));
         let d256 = mean_density(&synth_model_indices(8, 2, 256, 32, &mix, &params, 3));
         assert!(d256 < d32, "density {d256} !< {d32}");
+    }
+
+    #[test]
+    fn synth_indices_deterministic_across_thread_counts() {
+        let params = FlexParams::default();
+        let mix = HeadMix::default();
+        let run = |threads: usize| {
+            let pool = crate::util::pool::WorkerPool::with_threads(threads);
+            synth_model_indices_pool(6, 2, 48, 16, &mix, &params, 11, &pool)
+        };
+        let a = run(1);
+        let b = run(8);
+        for (la, lb) in a.iter().zip(&b) {
+            for (ia, ib) in la.iter().zip(lb) {
+                assert_eq!(ia.pattern, ib.pattern);
+                assert_eq!(ia.blocks, ib.blocks);
+            }
+        }
     }
 
     #[test]

@@ -3,10 +3,12 @@
 //! This is the pure-Rust oracle used by the accuracy harness (Table III),
 //! the integration tests that validate the PJRT artifacts, and the
 //! FlexPrefill reference implementation. It is deliberately simple and
-//! allocation-transparent; the performance-critical paths (SAU hot loop)
-//! operate on raw slices, not on these types.
+//! allocation-transparent. The scalar kernels in [`ops`] are the bit-level
+//! oracle; the performance path is the cache-blocked kernel layer in
+//! [`tile`], driven by the shared worker pool (`util::pool`).
 
 pub mod ops;
+pub mod tile;
 
 /// Row-major f32 matrix.
 #[derive(Clone, Debug, PartialEq)]

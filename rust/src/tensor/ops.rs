@@ -44,11 +44,16 @@ pub fn matmul_bt(a: &MatF32, b: &MatF32) -> MatF32 {
     out
 }
 
-/// In-place row-wise softmax.
+/// In-place row-wise softmax. A fully masked row (all `-inf`, as produced
+/// by an empty sparse index list) yields a zero row rather than NaN.
 pub fn softmax_rows(m: &mut MatF32) {
     for r in 0..m.rows {
         let row = m.row_mut(r);
         let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        if mx == f32::NEG_INFINITY {
+            row.fill(0.0);
+            continue;
+        }
         let mut sum = 0.0f32;
         for v in row.iter_mut() {
             *v = (*v - mx).exp();
@@ -61,9 +66,13 @@ pub fn softmax_rows(m: &mut MatF32) {
     }
 }
 
-/// Softmax of a vector (out-of-place).
+/// Softmax of a vector (out-of-place). Fully masked input (all `-inf`)
+/// yields all zeros rather than NaN.
 pub fn softmax(v: &[f32]) -> Vec<f32> {
     let mx = v.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if mx == f32::NEG_INFINITY {
+        return vec![0.0; v.len()];
+    }
     let exps: Vec<f32> = v.iter().map(|x| (x - mx).exp()).collect();
     let sum: f32 = exps.iter().sum();
     exps.iter().map(|e| e / sum.max(1e-30)).collect()
@@ -200,6 +209,20 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             assert!((x - y).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn softmax_fully_masked_rows_are_zero_not_nan() {
+        let neg = f32::NEG_INFINITY;
+        let mut m = MatF32::from_vec(2, 3, vec![neg, neg, neg, 1.0, 2.0, neg]);
+        softmax_rows(&mut m);
+        assert_eq!(m.row(0), &[0.0, 0.0, 0.0]);
+        let s1: f32 = m.row(1).iter().sum();
+        assert!((s1 - 1.0).abs() < 1e-6);
+        assert!(m.data.iter().all(|v| v.is_finite()));
+
+        let v = softmax(&[neg, neg]);
+        assert_eq!(v, vec![0.0, 0.0]);
     }
 
     #[test]

@@ -1,0 +1,394 @@
+//! Block-major tiled kernels — the CPU mirror of the paper's tiled MPU.
+//!
+//! Cache-blocked `matmul` / `matmul_bt` (f32 and W8A8) plus the fused
+//! online-softmax accumulate that the SAU applies per score tile. The
+//! scalar implementations in [`crate::tensor::ops`] and
+//! [`crate::quant`] remain the bit-level oracles; every kernel here is
+//! asserted against them by unit and property tests.
+//!
+//! Numerics contract:
+//!  * integer kernels are exact (identical accumulator values in any
+//!    loop order);
+//!  * f32 kernels accumulate each output element left-to-right in
+//!    ascending-k order — the *same* addition sequence as the scalar
+//!    oracle — so tiling does not perturb results;
+//!  * nothing here depends on the worker-thread count: parallel callers
+//!    split work at job granularity (see [`crate::util::pool`]) and each
+//!    job runs these kernels sequentially.
+
+use crate::tensor::{MatF32, MatI8};
+use crate::util::pool::WorkerPool;
+
+/// Default cache tile edge. 64x64 i8 tiles are 4 KiB (two tiles per
+/// operand stay L1-resident); BLOCK-sized (128) operands split into four.
+pub const TILE: usize = 64;
+
+/// Kernel-layer context threaded through the engine phases: the shared
+/// worker pool plus the tile configuration.
+#[derive(Clone, Debug)]
+pub struct KernelCtx {
+    pub pool: WorkerPool,
+    /// Cache tile edge used by the blocked kernels.
+    pub tile: usize,
+}
+
+impl KernelCtx {
+    /// Pool sized by `FASTP_THREADS` (default: available parallelism),
+    /// default tile size.
+    pub fn from_env() -> KernelCtx {
+        KernelCtx { pool: WorkerPool::from_env(), tile: TILE }
+    }
+
+    /// Explicit worker count, default tile size.
+    pub fn with_threads(n: usize) -> KernelCtx {
+        KernelCtx { pool: WorkerPool::with_threads(n), tile: TILE }
+    }
+
+    /// Everything inline on the caller thread.
+    pub fn single_threaded() -> KernelCtx {
+        KernelCtx { pool: WorkerPool::single_threaded(), tile: TILE }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Tiled f32 matmul (C = A @ B).
+    pub fn matmul(&self, a: &MatF32, b: &MatF32) -> MatF32 {
+        matmul_with(a, b, self.tile)
+    }
+
+    /// Tiled f32 matmul against a transposed B (C = A @ B^T).
+    pub fn matmul_bt(&self, a: &MatF32, b: &MatF32) -> MatF32 {
+        matmul_bt_with(a, b, self.tile)
+    }
+
+    /// Tiled W8A8 matmul, dequantized (C_f32 = (A_i8 @ B_i8) * sa * sb).
+    pub fn int8_matmul_deq(&self, a: &MatI8, sa: f32, b: &MatI8, sb: f32) -> MatF32 {
+        let acc = int8_matmul_with(a, b, self.tile);
+        let s = sa * sb;
+        MatF32 {
+            rows: a.rows,
+            cols: b.cols,
+            data: acc.iter().map(|&v| v as f32 * s).collect(),
+        }
+    }
+
+    /// Tiled exact W8A8 score matmul (C_i32 = A_i8 @ B_i8^T).
+    pub fn int8_matmul_bt(&self, a: &MatI8, bt: &MatI8) -> Vec<i32> {
+        int8_matmul_bt_with(a, bt, self.tile)
+    }
+}
+
+impl Default for KernelCtx {
+    fn default() -> Self {
+        KernelCtx::from_env()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f32 kernels
+// ---------------------------------------------------------------------------
+
+/// Tiled C[M,N] = A[M,K] @ B[K,N] with the default tile size.
+pub fn matmul(a: &MatF32, b: &MatF32) -> MatF32 {
+    matmul_with(a, b, TILE)
+}
+
+/// Tiled f32 matmul with an explicit tile edge. Accumulation per output
+/// element is ascending-k left-to-right — the scalar oracle's order.
+pub fn matmul_with(a: &MatF32, b: &MatF32, tile: usize) -> MatF32 {
+    assert_eq!(a.cols, b.rows, "tile::matmul dims");
+    let tile = tile.max(1);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut out = MatF32::zeros(m, n);
+    for i0 in (0..m).step_by(tile) {
+        let i1 = (i0 + tile).min(m);
+        for k0 in (0..k).step_by(tile) {
+            let k1 = (k0 + tile).min(k);
+            for j0 in (0..n).step_by(tile) {
+                let j1 = (j0 + tile).min(n);
+                for i in i0..i1 {
+                    let arow = a.row(i);
+                    let orow = &mut out.row_mut(i)[j0..j1];
+                    for kk in k0..k1 {
+                        let av = arow[kk];
+                        if av == 0.0 {
+                            continue; // same skip as the scalar oracle
+                        }
+                        let brow = &b.row(kk)[j0..j1];
+                        for (o, &bv) in orow.iter_mut().zip(brow) {
+                            *o += av * bv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Tiled C[M,N] = A[M,K] @ B^T with B given as [N,K] (score-tile shape).
+pub fn matmul_bt(a: &MatF32, b: &MatF32) -> MatF32 {
+    matmul_bt_with(a, b, TILE)
+}
+
+/// Tiled f32 `matmul_bt` with an explicit tile edge; the running sum per
+/// output element crosses k-tiles left-to-right (oracle order).
+pub fn matmul_bt_with(a: &MatF32, b: &MatF32, tile: usize) -> MatF32 {
+    assert_eq!(a.cols, b.cols, "tile::matmul_bt dims");
+    let tile = tile.max(1);
+    let (m, n, k) = (a.rows, b.rows, a.cols);
+    let mut out = MatF32::zeros(m, n);
+    for i0 in (0..m).step_by(tile) {
+        let i1 = (i0 + tile).min(m);
+        for j0 in (0..n).step_by(tile) {
+            let j1 = (j0 + tile).min(n);
+            for k0 in (0..k).step_by(tile) {
+                let k1 = (k0 + tile).min(k);
+                for i in i0..i1 {
+                    let arow = &a.row(i)[k0..k1];
+                    for j in j0..j1 {
+                        let brow = &b.row(j)[k0..k1];
+                        let mut s = out.at(i, j);
+                        for (x, y) in arow.iter().zip(brow) {
+                            s += x * y;
+                        }
+                        *out.at_mut(i, j) = s;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// W8A8 kernels (exact integer arithmetic — loop order free)
+// ---------------------------------------------------------------------------
+
+/// Tiled exact C_i32[M,N] = A_i8[M,K] @ B_i8[K,N].
+pub fn int8_matmul(a: &MatI8, b: &MatI8) -> Vec<i32> {
+    int8_matmul_with(a, b, TILE)
+}
+
+/// Tiled exact W8A8 matmul with an explicit tile edge.
+pub fn int8_matmul_with(a: &MatI8, b: &MatI8, tile: usize) -> Vec<i32> {
+    assert_eq!(a.cols, b.rows, "tile::int8_matmul dims");
+    let tile = tile.max(1);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut out = vec![0i32; m * n];
+    for i0 in (0..m).step_by(tile) {
+        let i1 = (i0 + tile).min(m);
+        for k0 in (0..k).step_by(tile) {
+            let k1 = (k0 + tile).min(k);
+            for j0 in (0..n).step_by(tile) {
+                let j1 = (j0 + tile).min(n);
+                for i in i0..i1 {
+                    let arow = a.row(i);
+                    let orow = &mut out[i * n + j0..i * n + j1];
+                    for kk in k0..k1 {
+                        let av = arow[kk] as i32;
+                        if av == 0 {
+                            continue;
+                        }
+                        let brow = &b.row(kk)[j0..j1];
+                        for (o, &bv) in orow.iter_mut().zip(brow) {
+                            *o += av * bv as i32;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Tiled exact C_i32[M,N] = A_i8[M,K] @ B_i8^T with B given as [N,K] —
+/// the SIGU/SAU score-tile kernel.
+pub fn int8_matmul_bt(a: &MatI8, bt: &MatI8) -> Vec<i32> {
+    int8_matmul_bt_with(a, bt, TILE)
+}
+
+/// Tiled `int8_matmul_bt` with an explicit tile edge.
+pub fn int8_matmul_bt_with(a: &MatI8, bt: &MatI8, tile: usize) -> Vec<i32> {
+    assert_eq!(a.cols, bt.cols, "tile::int8_matmul_bt dims");
+    let mut out = vec![0i32; a.rows * bt.rows];
+    int8_dot_bt(&a.data, &bt.data, a.rows, bt.rows, a.cols, tile, &mut out);
+    out
+}
+
+/// Slice-level core of the score-tile kernel: C[m,n] += A[m,k] @ B[n,k]^T,
+/// both operands row-major over k. Lets the engine score raw chunk slices
+/// without materializing `MatI8` views.
+pub fn int8_dot_bt(a: &[i8], bt: &[i8], m: usize, n: usize, k: usize, tile: usize, out: &mut [i32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(bt.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    let tile = tile.max(1);
+    for i0 in (0..m).step_by(tile) {
+        let i1 = (i0 + tile).min(m);
+        for j0 in (0..n).step_by(tile) {
+            let j1 = (j0 + tile).min(n);
+            for k0 in (0..k).step_by(tile) {
+                let k1 = (k0 + tile).min(k);
+                for i in i0..i1 {
+                    let arow = &a[i * k + k0..i * k + k1];
+                    for j in j0..j1 {
+                        let brow = &bt[j * k + k0..j * k + k1];
+                        let mut s = 0i32;
+                        for (&x, &y) in arow.iter().zip(brow) {
+                            s += x as i32 * y as i32;
+                        }
+                        out[i * n + j] += s;
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fused softmax-accumulate
+// ---------------------------------------------------------------------------
+
+/// Fold one f32 score tile into online-softmax state with fused P@V
+/// accumulation: the f32 sibling of `model::forward::attn_step_w8a8`
+/// (no P requantization).
+///
+/// `s` is [B, Bk] (already scaled), `v` is [Bk, d]; `m`/`l` are per-row
+/// online state and `acc` is [B, d]. After folding every tile, divide by
+/// `l` (see [`crate::model::forward::attn_finalize`]).
+pub fn fused_softmax_acc(s: &MatF32, v: &MatF32, m: &mut [f32], l: &mut [f32], acc: &mut MatF32) {
+    assert_eq!(s.cols, v.rows, "fused_softmax_acc dims");
+    assert_eq!(acc.cols, v.cols, "fused_softmax_acc acc dims");
+    assert_eq!(s.rows, acc.rows, "fused_softmax_acc rows");
+    for r in 0..s.rows {
+        let row = s.row(r);
+        let rmax = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let m_new = m[r].max(rmax);
+        let corr = (m[r] - m_new).exp();
+        let arow = acc.row_mut(r);
+        for av in arow.iter_mut() {
+            *av *= corr;
+        }
+        let mut lsum = 0.0f32;
+        for (j, &sv) in row.iter().enumerate() {
+            let p = (sv - m_new).exp();
+            lsum += p;
+            let vrow = v.row(j);
+            for (av, &vv) in arow.iter_mut().zip(vrow) {
+                *av += p * vv;
+            }
+        }
+        l[r] = l[r] * corr + lsum;
+        m[r] = m_new;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops;
+    use crate::util::prng::Prng;
+
+    fn randf(rng: &mut Prng, r: usize, c: usize) -> MatF32 {
+        MatF32::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    fn randi(rng: &mut Prng, r: usize, c: usize) -> MatI8 {
+        MatI8 { rows: r, cols: c, data: (0..r * c).map(|_| rng.i8_sym()).collect() }
+    }
+
+    #[test]
+    fn f32_matmul_matches_oracle_bitwise() {
+        let mut rng = Prng::new(0x71);
+        let a = randf(&mut rng, 70, 130);
+        let b = randf(&mut rng, 130, 67);
+        assert_eq!(matmul_with(&a, &b, 32), ops::matmul(&a, &b));
+    }
+
+    #[test]
+    fn f32_matmul_bt_matches_oracle_bitwise() {
+        let mut rng = Prng::new(2);
+        let a = randf(&mut rng, 33, 100);
+        let b = randf(&mut rng, 65, 100);
+        assert_eq!(matmul_bt_with(&a, &b, 16), ops::matmul_bt(&a, &b));
+    }
+
+    #[test]
+    fn int8_kernels_match_quant_oracle() {
+        let mut rng = Prng::new(3);
+        let a = randi(&mut rng, 37, 129);
+        let b = randi(&mut rng, 129, 41);
+        assert_eq!(int8_matmul_with(&a, &b, 32), crate::quant::int8_matmul(&a, &b));
+        let bt = b.transpose();
+        assert_eq!(int8_matmul_bt_with(&a, &bt, 32), crate::quant::int8_matmul_bt(&a, &bt));
+    }
+
+    #[test]
+    fn tile_size_does_not_change_results() {
+        let mut rng = Prng::new(4);
+        let a = randi(&mut rng, 50, 70);
+        let bt = randi(&mut rng, 31, 70);
+        let base = int8_matmul_bt_with(&a, &bt, 1);
+        for t in [3, 16, 64, 1024] {
+            assert_eq!(int8_matmul_bt_with(&a, &bt, t), base, "tile {t}");
+        }
+    }
+
+    #[test]
+    fn fused_softmax_acc_matches_softmax_then_matmul() {
+        // folding tiles online == exact softmax over the concatenation
+        let mut rng = Prng::new(5);
+        let b = 8;
+        let tiles = 3;
+        let d = 16;
+        let s_all = randf(&mut rng, b, tiles * 12);
+        let v_all = randf(&mut rng, tiles * 12, d);
+        let mut m = vec![-1e30f32; b];
+        let mut l = vec![0.0f32; b];
+        let mut acc = MatF32::zeros(b, d);
+        for t in 0..tiles {
+            let s_tile = MatF32::from_fn(b, 12, |r, c| s_all.at(r, t * 12 + c));
+            let v_tile = v_all.slice_rows(t * 12, (t + 1) * 12);
+            fused_softmax_acc(&s_tile, &v_tile, &mut m, &mut l, &mut acc);
+        }
+        for r in 0..b {
+            let inv = 1.0 / l[r].max(1e-30);
+            for x in acc.row_mut(r) {
+                *x *= inv;
+            }
+        }
+        let mut s_ref = s_all.clone();
+        ops::softmax_rows(&mut s_ref);
+        let direct = ops::matmul(&s_ref, &v_all);
+        for (x, y) in acc.data.iter().zip(&direct.data) {
+            assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn int8_dot_bt_slices_match_mat_form() {
+        let mut rng = Prng::new(6);
+        let a = randi(&mut rng, 12, 40);
+        let bt = randi(&mut rng, 9, 40);
+        let mut out = vec![0i32; 12 * 9];
+        int8_dot_bt(&a.data, &bt.data, 12, 9, 40, 8, &mut out);
+        assert_eq!(out, int8_matmul_bt(&a, &bt));
+    }
+
+    #[test]
+    fn ctx_kernels_delegate() {
+        let ctx = KernelCtx::single_threaded();
+        let mut rng = Prng::new(7);
+        let a = randf(&mut rng, 5, 9);
+        let b = randf(&mut rng, 9, 4);
+        assert_eq!(ctx.matmul(&a, &b), ops::matmul(&a, &b));
+        let qa = randi(&mut rng, 6, 20);
+        let qb = randi(&mut rng, 20, 5);
+        let deq = ctx.int8_matmul_deq(&qa, 0.5, &qb, 0.25);
+        let oracle = crate::quant::int8_matmul_deq(&qa, 0.5, &qb, 0.25);
+        assert_eq!(deq, oracle);
+    }
+}

@@ -1,7 +1,8 @@
 //! Shared utilities: deterministic PRNG, statistics, bench harness,
-//! property-testing, table formatting.
+//! property-testing, table formatting, and the kernel worker pool.
 
 pub mod bench;
+pub mod pool;
 pub mod prng;
 pub mod prop;
 pub mod stats;

@@ -1,0 +1,172 @@
+//! Shared worker pool for the block-major kernel layer (std threads only;
+//! rayon is unavailable offline).
+//!
+//! The pool executes *independent jobs* — per-head SIGU scoring, per-state
+//! SAU accumulator folds, per-chunk QKV/FFN — with dynamic work stealing
+//! over a shared atomic counter. Each job's arithmetic is entirely local to
+//! the worker that claims it and results are re-assembled in job order, so
+//! the output is **bit-identical for every thread count** (asserted by
+//! property tests and by the engine's FASTP_THREADS=1 vs N test).
+//!
+//! Sizing: `FASTP_THREADS` env var; default = available parallelism.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Environment variable that bounds the worker count.
+pub const THREADS_ENV: &str = "FASTP_THREADS";
+
+/// A fixed-width pool of scoped worker threads.
+///
+/// The pool is a *sizing policy*, not a set of live threads: workers are
+/// spawned per [`WorkerPool::map`] call with `std::thread::scope`, which
+/// lets jobs borrow caller state (chunks, weights, schedules) without any
+/// `'static` or `Arc` ceremony.
+#[derive(Clone, Debug)]
+pub struct WorkerPool {
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// Pool sized by `FASTP_THREADS`, defaulting to available parallelism.
+    pub fn from_env() -> WorkerPool {
+        let threads = std::env::var(THREADS_ENV)
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            });
+        WorkerPool { threads }
+    }
+
+    /// Pool with an explicit worker count (clamped to >= 1).
+    pub fn with_threads(n: usize) -> WorkerPool {
+        WorkerPool { threads: n.max(1) }
+    }
+
+    /// Single-threaded pool (jobs run inline on the caller).
+    pub fn single_threaded() -> WorkerPool {
+        WorkerPool { threads: 1 }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(0..n_jobs)` across the pool and return the results in job
+    /// order. Jobs are claimed dynamically (atomic counter) so skewed job
+    /// costs balance; because each job is computed independently and
+    /// results are slotted by index, the output does not depend on the
+    /// thread count or claim interleaving.
+    pub fn map<T, F>(&self, n_jobs: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let workers = self.threads.min(n_jobs);
+        if workers <= 1 {
+            return (0..n_jobs).map(f).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let parts: Vec<Vec<(usize, T)>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    s.spawn(|| {
+                        let mut local = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= n_jobs {
+                                break;
+                            }
+                            local.push((i, f(i)));
+                        }
+                        local
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("pool worker panicked")).collect()
+        });
+        let mut slots: Vec<Option<T>> = (0..n_jobs).map(|_| None).collect();
+        for part in parts {
+            for (i, v) in part {
+                slots[i] = Some(v);
+            }
+        }
+        slots.into_iter().map(|o| o.expect("pool job not executed")).collect()
+    }
+
+    /// Run a side-effect-free-per-index job for its effects only.
+    pub fn for_each<F>(&self, n_jobs: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        let _ = self.map(n_jobs, |i| {
+            f(i);
+        });
+    }
+}
+
+impl Default for WorkerPool {
+    fn default() -> Self {
+        WorkerPool::from_env()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_job_order() {
+        for threads in [1, 2, 8] {
+            let pool = WorkerPool::with_threads(threads);
+            let out = pool.map(37, |i| i * i);
+            assert_eq!(out, (0..37).map(|i| i * i).collect::<Vec<_>>(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn map_handles_empty_and_single() {
+        let pool = WorkerPool::with_threads(4);
+        assert_eq!(pool.map(0, |i| i), Vec::<usize>::new());
+        assert_eq!(pool.map(1, |i| i + 10), vec![10]);
+    }
+
+    #[test]
+    fn results_identical_across_thread_counts() {
+        // heavier, uneven jobs: claim order varies, results must not
+        let work = |i: usize| -> u64 {
+            let mut acc = 0u64;
+            for k in 0..(i % 7) * 1000 + 10 {
+                acc = acc.wrapping_mul(31).wrapping_add(k as u64 ^ i as u64);
+            }
+            acc
+        };
+        let seq = WorkerPool::single_threaded().map(64, work);
+        for threads in [2, 3, 8] {
+            assert_eq!(WorkerPool::with_threads(threads).map(64, work), seq);
+        }
+    }
+
+    #[test]
+    fn jobs_can_borrow_caller_state() {
+        let data: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let pool = WorkerPool::with_threads(4);
+        let sums = pool.map(10, |i| data[i * 10..(i + 1) * 10].iter().sum::<f32>());
+        assert_eq!(sums.iter().sum::<f32>(), data.iter().sum::<f32>());
+    }
+
+    #[test]
+    fn with_threads_clamps_to_one() {
+        assert_eq!(WorkerPool::with_threads(0).threads(), 1);
+    }
+
+    #[test]
+    fn for_each_runs_all_jobs() {
+        let hits = AtomicUsize::new(0);
+        WorkerPool::with_threads(3).for_each(25, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 25);
+    }
+}

@@ -1,0 +1,143 @@
+//! Native-engine end-to-end: the artifact-free engine (tiled parallel
+//! kernels for every stage) must agree **bit-for-bit** with the pure-Rust
+//! reference prefill, and its output must be independent of the worker
+//! thread count — the acceptance property of the parallel kernel core.
+//! Unlike the artifact-backed e2e suite, nothing here skips: it runs in
+//! every tier-1 environment.
+
+use fast_prefill::config::{FlexParams, BLOCK, TINY};
+use fast_prefill::coordinator::{Engine, EngineConfig, Policy, Server};
+use fast_prefill::model::{prefill_reference, ModelWeights};
+use fast_prefill::workload::prompts::{PromptKind, PromptSpec, TraceRequest};
+
+fn tokens(n: usize, seed: u64) -> Vec<u8> {
+    PromptSpec { kind: PromptKind::Mixed, tokens: n, seed }.generate()
+}
+
+fn native_cfg() -> EngineConfig {
+    let mut cfg = EngineConfig::new_native(TINY.clone());
+    cfg.weight_seed = 1234;
+    cfg
+}
+
+#[test]
+fn native_engine_matches_reference_bitwise() {
+    let toks = tokens(384, 5);
+    let mut eng = Engine::new_native(native_cfg()).unwrap();
+    let run = eng.prefill(0, &toks).unwrap();
+
+    let w = ModelWeights::generate(&TINY, 1234);
+    let reference = prefill_reference(&w, &toks, Some(&FlexParams::default()));
+
+    assert_eq!(run.first_token, reference.first_token);
+    assert_eq!(run.logits_last, reference.logits_last);
+    let ref_last = &reference.hidden.data[(toks.len() - BLOCK) * TINY.d_model..];
+    assert_eq!(run.hidden_last_chunk, ref_last);
+    assert_eq!(run.index_sets.len(), reference.index_sets.len());
+    for (le, lr) in run.index_sets.iter().zip(&reference.index_sets) {
+        for (ie, ir) in le.iter().zip(lr) {
+            assert_eq!(ie.pattern, ir.pattern);
+            assert_eq!(ie.blocks, ir.blocks);
+        }
+    }
+    assert!((run.metrics.density - reference.avg_density).abs() < 1e-12);
+}
+
+#[test]
+fn native_engine_dense_matches_reference() {
+    let toks = tokens(256, 6);
+    let mut cfg = native_cfg();
+    cfg.flex = None;
+    let mut eng = Engine::new_native(cfg).unwrap();
+    let run = eng.prefill(0, &toks).unwrap();
+
+    let w = ModelWeights::generate(&TINY, 1234);
+    let reference = prefill_reference(&w, &toks, None);
+    assert_eq!(run.first_token, reference.first_token);
+    assert_eq!(run.logits_last, reference.logits_last);
+}
+
+#[test]
+fn engine_output_bit_identical_across_thread_counts() {
+    // FASTP_THREADS=1 vs N must not change first-token logits or indices
+    let toks = tokens(384, 7);
+    let mut one_cfg = native_cfg();
+    one_cfg.threads = 1;
+    let mut eng_one = Engine::new_native(one_cfg).unwrap();
+    let one = eng_one.prefill(0, &toks).unwrap();
+
+    for threads in [2usize, 4, 8] {
+        let mut cfg = native_cfg();
+        cfg.threads = threads;
+        let mut eng = Engine::new_native(cfg).unwrap();
+        let par = eng.prefill(0, &toks).unwrap();
+        assert_eq!(one.first_token, par.first_token, "threads={threads}");
+        assert_eq!(one.logits_last, par.logits_last, "threads={threads}");
+        assert_eq!(one.hidden_last_chunk, par.hidden_last_chunk, "threads={threads}");
+        assert_eq!(one.metrics.jobs, par.metrics.jobs, "threads={threads}");
+        for (la, lb) in one.index_sets.iter().zip(&par.index_sets) {
+            for (ia, ib) in la.iter().zip(lb) {
+                assert_eq!(ia.pattern, ib.pattern);
+                assert_eq!(ia.blocks, ib.blocks);
+            }
+        }
+    }
+}
+
+#[test]
+fn wave_partitioning_does_not_change_native_results() {
+    let toks = tokens(384, 8);
+    let mut cfg_one = native_cfg();
+    cfg_one.wave_qblocks = 0; // single wave
+    let mut eng_one = Engine::new_native(cfg_one).unwrap();
+    let run_one = eng_one.prefill(0, &toks).unwrap();
+
+    let mut cfg_waved = native_cfg();
+    cfg_waved.wave_qblocks = 1; // maximal wave splitting
+    let mut eng_waved = Engine::new_native(cfg_waved).unwrap();
+    let run_waved = eng_waved.prefill(0, &toks).unwrap();
+
+    assert_eq!(run_one.first_token, run_waved.first_token);
+    assert_eq!(run_one.logits_last, run_waved.logits_last);
+    assert_eq!(run_one.metrics.jobs, run_waved.metrics.jobs);
+}
+
+#[test]
+fn cacheless_native_engine_same_numerics_different_stats() {
+    let toks = tokens(512, 9);
+    let mut with_cache = native_cfg();
+    with_cache.wave_qblocks = 2;
+    let mut eng_a = Engine::new_native(with_cache).unwrap();
+    let a = eng_a.prefill(0, &toks).unwrap();
+
+    let mut no_cache = native_cfg();
+    no_cache.wave_qblocks = 2;
+    no_cache.cache_blocks = 0;
+    let mut eng_b = Engine::new_native(no_cache).unwrap();
+    let b = eng_b.prefill(0, &toks).unwrap();
+
+    assert_eq!(a.first_token, b.first_token, "cache must not affect numerics");
+    assert_eq!(a.logits_last, b.logits_last);
+    assert!(a.metrics.cache_hit_rate > 0.0, "waved run should have reuse hits");
+    assert_eq!(b.metrics.cache_hit_rate, 0.0);
+}
+
+#[test]
+fn native_server_serves_requests_without_artifacts() {
+    // multi-worker serving over the fully-native engine: no artifacts,
+    // no pjrt feature, just the tiled parallel kernel core
+    let server = Server::start("artifacts".into(), native_cfg(), 2, Policy::Fcfs).unwrap();
+    for id in 0..3u64 {
+        server.submit(TraceRequest {
+            id,
+            spec: PromptSpec { kind: PromptKind::Mixed, tokens: 256, seed: id },
+            arrival_us: 0,
+        });
+    }
+    let completions = server.drain().unwrap();
+    assert_eq!(completions.len(), 3);
+    for (i, c) in completions.iter().enumerate() {
+        assert_eq!(c.request_id, i as u64);
+        assert_eq!(c.run.metrics.context_tokens, 256);
+    }
+}

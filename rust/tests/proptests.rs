@@ -1,11 +1,14 @@
-//! Property-based tests over coordinator/cache/selection invariants
+//! Property-based tests over coordinator/cache/selection invariants and
+//! the tiled parallel kernel core
 //! (own mini-framework in `util::prop`; proptest is unavailable offline).
 
 use fast_prefill::config::FlexParams;
 use fast_prefill::coordinator::joblist::build_schedule;
-use fast_prefill::flexprefill::{coverage, expand, HeadIndex, HeadPattern};
+use fast_prefill::flexprefill::{coverage, expand, scores, HeadIndex, HeadPattern};
 use fast_prefill::kvcache::{Access, LivenessCache};
-use fast_prefill::quant::{bitplane, nibble};
+use fast_prefill::quant::{self, bitplane, nibble};
+use fast_prefill::tensor::{tile, MatF32, MatI8};
+use fast_prefill::util::pool::WorkerPool;
 use fast_prefill::util::prng::Prng;
 use fast_prefill::util::prop::{forall, forall_ck};
 
@@ -232,6 +235,148 @@ fn prop_forced_blocks_always_present() {
             let mut b = blocks.clone();
             expand::apply_forced_blocks(&mut b, &FlexParams::default());
             b.iter().enumerate().all(|(q, row)| row.contains(&0) && row.contains(&(q as u32)))
+        },
+    );
+}
+
+fn rand_f32_mat(rng: &mut Prng, r: usize, c: usize) -> MatF32 {
+    MatF32::from_fn(r, c, |_, _| rng.normal())
+}
+
+fn rand_i8_mat(rng: &mut Prng, r: usize, c: usize) -> MatI8 {
+    MatI8 { rows: r, cols: c, data: (0..r * c).map(|_| rng.i8_sym()).collect() }
+}
+
+#[test]
+fn prop_tiled_f32_kernels_agree_with_scalar_oracle() {
+    // randomized shapes, including non-multiples of the tile edge, and
+    // randomized tile sizes — tiled f32 kernels keep the oracle's exact
+    // accumulation order, so agreement is bitwise
+    forall_ck(
+        0x711E5,
+        40,
+        |rng, size| {
+            let m = 1 + rng.below(size + 4);
+            let k = 1 + rng.below(2 * size + 9);
+            let n = 1 + rng.below(size + 4);
+            let tile = [1, 3, 16, 64, 100][rng.below(5)];
+            (rand_f32_mat(rng, m, k), rand_f32_mat(rng, k, n), tile)
+        },
+        |(a, b, tile)| {
+            let want = fast_prefill::tensor::ops::matmul(a, b);
+            if tile::matmul_with(a, b, *tile) != want {
+                return Err("tiled matmul != scalar oracle".into());
+            }
+            let bt = b.transpose();
+            let want_bt = fast_prefill::tensor::ops::matmul_bt(a, &bt);
+            if tile::matmul_bt_with(a, &bt, *tile) != want_bt {
+                return Err("tiled matmul_bt != scalar oracle".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_tiled_int8_kernels_agree_with_quant_oracle() {
+    forall_ck(
+        0x71178,
+        40,
+        |rng, size| {
+            let m = 1 + rng.below(size + 4);
+            let k = 1 + rng.below(2 * size + 9);
+            let n = 1 + rng.below(size + 4);
+            let tile = [1, 5, 32, 64, 200][rng.below(5)];
+            (rand_i8_mat(rng, m, k), rand_i8_mat(rng, k, n), tile)
+        },
+        |(a, b, tile)| {
+            if tile::int8_matmul_with(a, b, *tile) != quant::int8_matmul(a, b) {
+                return Err("tiled int8_matmul != oracle".into());
+            }
+            let bt = b.transpose();
+            if tile::int8_matmul_bt_with(a, &bt, *tile) != quant::int8_matmul_bt(a, &bt) {
+                return Err("tiled int8_matmul_bt != oracle".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pool_map_bit_identical_for_pool_sizes_1_2_8() {
+    // the tiled kernels under the pool: same job set, any worker count,
+    // identical output bytes
+    forall_ck(
+        0x9001,
+        15,
+        |rng, size| {
+            let jobs = 1 + rng.below(10);
+            let m = 1 + rng.below(size % 20 + 6);
+            let k = 1 + rng.below(30);
+            let pairs: Vec<(MatI8, MatI8)> = (0..jobs)
+                .map(|_| (rand_i8_mat(rng, m, k), rand_i8_mat(rng, m, k)))
+                .collect();
+            pairs
+        },
+        |pairs| {
+            let run = |threads: usize| -> Vec<Vec<i32>> {
+                WorkerPool::with_threads(threads)
+                    .map(pairs.len(), |i| tile::int8_matmul_bt(&pairs[i].0, &pairs[i].1))
+            };
+            let one = run(1);
+            for threads in [2usize, 8] {
+                if run(threads) != one {
+                    return Err(format!("pool size {threads} changed kernel results"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_parallel_head_scoring_deterministic_across_thread_counts() {
+    forall_ck(
+        0x51D0,
+        12,
+        |rng, size| {
+            let heads = 1 + rng.below(6);
+            let blocks = 1 + rng.below(size % 8 + 3);
+            let d = 8 + rng.below(3) * 8;
+            let per_head: Vec<(MatI8, f32, Vec<(MatI8, f32)>)> = (0..heads)
+                .map(|_| {
+                    let qhat = rand_i8_mat(rng, 16, d);
+                    let kbs: Vec<(MatI8, f32)> = (0..blocks)
+                        .map(|_| (rand_i8_mat(rng, 16, d), 0.01 + rng.f32() * 0.05))
+                        .collect();
+                    (qhat, 0.01 + rng.f32() * 0.05, kbs)
+                })
+                .collect();
+            per_head
+        },
+        |per_head| {
+            let jobs: Vec<scores::HeadJob<'_>> = per_head
+                .iter()
+                .map(|(qhat, qs, kbs)| scores::HeadJob {
+                    qhat,
+                    qs: *qs,
+                    kblocks: kbs.iter().map(|(kb, ks)| (kb, *ks)).collect(),
+                })
+                .collect();
+            let one = scores::stream_heads_parallel(&WorkerPool::with_threads(1), &jobs);
+            for threads in [2usize, 8] {
+                let par = scores::stream_heads_parallel(&WorkerPool::with_threads(threads), &jobs);
+                if par != one {
+                    return Err(format!("thread count {threads} changed head scores"));
+                }
+            }
+            // and each head agrees with the sequential owned-data API
+            for (job_out, (qhat, qs, kbs)) in one.iter().zip(per_head) {
+                if *job_out != scores::stream_head_scores(qhat, *qs, kbs) {
+                    return Err("parallel head != sequential stream_head_scores".into());
+                }
+            }
+            Ok(())
         },
     );
 }
