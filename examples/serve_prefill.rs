@@ -1,23 +1,51 @@
 //! END-TO-END DRIVER (EXPERIMENTS.md §E2E): serve batched long-context
-//! prefill requests on the ~100M-parameter model through the full system —
-//! AOT artifacts on the PJRT runtime, chunked KV generation, SIGU sparse
-//! index generation, block-major SAU with the liveness cache, FFN, first
-//! token — reporting per-request TTFT, throughput, sparsity and cache
-//! statistics, plus the U280/A5000 model estimates for the same trace.
+//! prefill requests through the full system — chunked KV generation, SIGU
+//! sparse index generation, block-major SAU with the liveness cache, FFN,
+//! first token — and measure the **phase-pipelined** server against the
+//! serial baseline at the same total kernel-thread budget. Per-request
+//! outputs are bit-identical between the two; only the scheduling differs.
+//! Also reports the U280/A5000 model estimates for the same trace.
 //!
-//!     make artifacts && cargo run --release --example serve_prefill
+//!     cargo run --release --example serve_prefill
 //!
 //! Flags (positional): [n_requests] [tokens] [workers]
-//! Defaults: 6 requests x 2048 tokens on 2 workers (a few minutes on CPU).
+//! Defaults: 6 requests on 2 workers with mixed context lengths
+//! {tokens/2, tokens, 2*tokens} around tokens=2048 (minutes on CPU).
+//! Env: FASTP_SERVE_MODEL picks the model config (default `small100m`;
+//! CI smoke uses `tiny`), FASTP_THREADS bounds the shared budget.
+
+use std::sync::Arc;
 
 use anyhow::Result;
-use fast_prefill::config::{a5000, u280_fast_prefill, SMALL100M};
-use fast_prefill::coordinator::{EngineConfig, Policy, Server};
+use fast_prefill::config::{a5000, by_name, u280_fast_prefill, SMALL100M};
+use fast_prefill::coordinator::{Completion, EngineConfig, Policy, Server, ServerOptions};
 use fast_prefill::gpu_model::simulate_gpu_prefill;
+use fast_prefill::metrics::{ServeSample, ServeSummary};
+use fast_prefill::model::ModelWeights;
 use fast_prefill::sim::simulate_prefill;
-use fast_prefill::util::stats::{mean, percentile};
 use fast_prefill::util::table::{fnum, Table};
 use fast_prefill::workload::prompts::RequestTrace;
+
+fn serve(
+    cfg: &EngineConfig,
+    weights: &Arc<ModelWeights>,
+    trace: &RequestTrace,
+    opts: ServerOptions,
+) -> Result<(Vec<Completion>, f64)> {
+    let t0 = std::time::Instant::now();
+    let server =
+        Server::start_with_weights("artifacts".into(), cfg.clone(), opts, Arc::clone(weights))?;
+    for r in trace.requests.clone() {
+        server.submit(r);
+    }
+    let completions = server.drain()?;
+    Ok((completions, t0.elapsed().as_secs_f64()))
+}
+
+fn summarize(completions: &[Completion]) -> ServeSummary {
+    let samples: Vec<ServeSample> = completions.iter().map(|c| c.sample()).collect();
+    ServeSummary::from_samples(&samples)
+}
 
 fn main() -> Result<()> {
     let args: Vec<usize> = std::env::args()
@@ -27,8 +55,12 @@ fn main() -> Result<()> {
     let n_requests = args.first().copied().unwrap_or(6);
     let tokens = args.get(1).copied().unwrap_or(2048);
     let workers = args.get(2).copied().unwrap_or(2);
+    let model = std::env::var("FASTP_SERVE_MODEL")
+        .ok()
+        .and_then(|n| by_name(&n).cloned())
+        .unwrap_or_else(|| SMALL100M.clone());
 
-    let mut cfg = EngineConfig::new(SMALL100M.clone());
+    let mut cfg = EngineConfig::new(model.clone());
     cfg.native_sau = true; // PJRT SAU is exercised by quickstart/tests;
                            // native keeps the 100M E2E run in minutes
     // cheap availability probe: manifest present AND executable (the
@@ -40,60 +72,89 @@ fn main() -> Result<()> {
         cfg.native_sigu = true;
         cfg.native_linear = true;
     }
+    // mixed-length contention trace: {~tokens/2, tokens, 2*tokens}, each
+    // rounded to the BLOCK granularity the engine requires
+    let block = fast_prefill::config::BLOCK;
+    let rb = |t: usize| (t.max(block) / block) * block;
+    let choices = [rb(tokens / 2), rb(tokens), rb(tokens) * 2];
     println!(
-        "== E2E: {} ({}M params, {} layers) | {} req x {} tokens | {} workers ==",
-        SMALL100M.name,
-        SMALL100M.params() / 1_000_000,
-        SMALL100M.n_layers,
+        "== E2E: {} ({}M params, {} layers) | {} req x {{{}, {}, {}}} tokens | {} workers ==",
+        model.name,
+        model.params() / 1_000_000,
+        model.n_layers,
         n_requests,
-        tokens,
+        choices[0],
+        choices[1],
+        choices[2],
         workers
     );
+    let trace = RequestTrace::generate_mixed(n_requests, &choices, 2000, 2026);
+    // one generated model shared by both servers (and all their workers)
+    let weights = Arc::new(ModelWeights::generate(&cfg.model, cfg.weight_seed));
 
-    let trace = RequestTrace::generate(n_requests, tokens, 2000, 2026);
-    let t0 = std::time::Instant::now();
-    let server = Server::start("artifacts".into(), cfg, workers, Policy::Sjf)?;
-    for r in trace.requests.clone() {
-        server.submit(r);
+    // serial baseline first (PR-1 behaviour at equal total threads), then
+    // the phase-pipelined scheduler on the same trace
+    let (serial, serial_wall) =
+        serve(&cfg, &weights, &trace, ServerOptions::serial(workers, Policy::Sjf))?;
+    let (pipelined, pipe_wall) =
+        serve(&cfg, &weights, &trace, ServerOptions::new(workers, Policy::Sjf))?;
+
+    // bit-identity across schedulers is an invariant, not a hope
+    for (a, b) in serial.iter().zip(&pipelined) {
+        assert_eq!(a.request_id, b.request_id);
+        assert_eq!(a.run.first_token, b.run.first_token, "req {}", a.request_id);
+        assert_eq!(a.run.logits_last, b.run.logits_last, "req {}", a.request_id);
     }
-    let completions = server.drain()?;
-    let wall_s = t0.elapsed().as_secs_f64();
 
     let mut t = Table::new(&[
-        "req", "TTFT (ms)", "queue (ms)", "e2e (ms)", "density %", "QA heads %", "hit %", "jobs",
+        "req", "tokens", "TTFT (ms)", "queue (ms)", "phase-wait (ms)", "e2e (ms)", "density %",
+        "hit %", "jobs",
     ]);
-    let mut e2e = Vec::new();
-    let mut ttft = Vec::new();
-    for c in &completions {
-        e2e.push(c.e2e_us / 1e3);
-        ttft.push(c.run.metrics.ttft_us / 1e3);
+    for c in &pipelined {
         t.row(&[
             c.request_id.to_string(),
+            c.run.metrics.context_tokens.to_string(),
             fnum(c.run.metrics.ttft_us / 1e3),
             fnum(c.queue_us / 1e3),
+            fnum(c.pipeline_wait_us / 1e3),
             fnum(c.e2e_us / 1e3),
             fnum(c.run.metrics.density * 100.0),
-            fnum(c.run.metrics.query_aware_frac * 100.0),
             fnum(c.run.metrics.cache_hit_rate * 100.0),
             c.run.metrics.jobs.to_string(),
         ]);
     }
+    println!("-- pipelined server, per request --");
     t.print();
+
+    let ser = summarize(&serial);
+    let pip = summarize(&pipelined);
+    println!("{}", ser.render("serial   "));
+    println!("{}", pip.render("pipelined"));
+    let total_tokens: usize = trace.requests.iter().map(|r| r.spec.tokens).sum();
     println!(
-        "wall {:.1}s | prefill throughput {:.0} tok/s | TTFT mean {:.0} ms p95 {:.0} ms | e2e mean {:.0} ms",
-        wall_s,
-        (n_requests * tokens) as f64 / wall_s,
-        mean(&ttft),
-        percentile(&ttft, 95.0),
-        mean(&e2e),
+        "wall serial {:.1}s -> pipelined {:.1}s | pipelined throughput {:.0} tok/s | \
+         mean TTFT saving {:.1}% | queue saving {:.1}%",
+        serial_wall,
+        pipe_wall,
+        total_tokens as f64 / pipe_wall,
+        pip.ttft_saving_pct(&ser),
+        if ser.queue_mean_ms > 0.0 {
+            (1.0 - pip.queue_mean_ms / ser.queue_mean_ms) * 100.0
+        } else {
+            0.0
+        },
     );
 
     // hardware estimates for the same real index sets (first completion)
-    if let Some(c) = completions.first() {
-        let f = simulate_prefill(&u280_fast_prefill(), &SMALL100M, tokens, &c.run.index_sets);
-        let g = simulate_gpu_prefill(&a5000(), &SMALL100M, tokens, &c.run.index_sets);
+    if let Some(c) = pipelined.first() {
+        let ctx_tokens = c.run.metrics.context_tokens;
+        let f = simulate_prefill(&u280_fast_prefill(), &model, ctx_tokens, &c.run.index_sets);
+        let g = simulate_gpu_prefill(&a5000(), &model, ctx_tokens, &c.run.index_sets);
         println!(
-            "\nhardware estimates for this trace (same index sets):\n  U280-sim  {:.1} ms, {:.3} J (hit {:.0}%)\n  A5000-mdl {:.1} ms, {:.3} J\n  speedup {:.2}x, energy-eff {:.2}x",
+            "\nhardware estimates for this trace (same index sets):\n  \
+             U280-sim  {:.1} ms, {:.3} J (hit {:.0}%)\n  \
+             A5000-mdl {:.1} ms, {:.3} J\n  \
+             speedup {:.2}x, energy-eff {:.2}x",
             f.ttft_ms,
             f.energy_j,
             f.cache_hit_rate * 100.0,

@@ -19,13 +19,26 @@
 //! policy always run natively (the paper's FSM/SFU/comparator logic); the
 //! cache-traffic walk stays sequential in schedule order so cache
 //! statistics are deterministic and backend-independent.
+//!
+//! Prefill is **resumable**: [`Engine::prefill_start`] yields a
+//! [`PrefillState`] that steps through the per-layer phases
+//! ([`Phase::Qkv`] -> [`Phase::IndexGen`] -> [`Phase::Sau`] ->
+//! [`Phase::FfnLogits`]) one call at a time, which is what the serving
+//! scheduler pipelines across co-resident requests; the monolithic
+//! [`Engine::prefill`] is a thin wrapper that steps to completion. Fused
+//! group steps ([`Engine::phase_step_group`]) batch same-phase requests:
+//! QKV on a shared layer and SAU at any layer, bit-identical to solo
+//! stepping.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
 use crate::config::{FlexParams, ModelConfig, BLOCK};
-use crate::coordinator::joblist::{build_schedule, cache_key, Schedule, DEFAULT_WAVE_QBLOCKS};
+use crate::coordinator::joblist::{
+    build_schedule, build_schedule_batch, cache_key, Schedule, DEFAULT_WAVE_QBLOCKS,
+};
 use crate::flexprefill::{generate_head_index, scores, HeadIndex, HeadPattern, HeadStats};
 use crate::kvcache::{Access, LivenessCache};
 use crate::metrics::PrefillMetrics;
@@ -103,6 +116,67 @@ impl EngineConfig {
     }
 }
 
+/// Phase cursor of a resumable prefill: the per-layer stages of paper
+/// Fig. 2, walked layer by layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Chunked KV generation for the current layer.
+    Qkv,
+    /// SIGU sparse index generation.
+    IndexGen,
+    /// Block-major SAU over the wave schedule (with the liveness cache).
+    Sau,
+    /// o_proj + FFN tail; after the last layer, final norm + logits.
+    FfnLogits,
+    /// The run is finished and has been handed out.
+    Done,
+}
+
+/// Resumable per-request prefill progress. Created by
+/// [`Engine::prefill_start`] and advanced one phase at a time by the
+/// `phase_*` methods, so a serving scheduler can interleave the phases of
+/// co-resident requests on one engine (or hand the state to any other
+/// engine over the same weights — the state holds no engine resources).
+/// Stepping the phases in order is *exactly* the monolithic
+/// [`Engine::prefill`] computation, so per-request outputs are bit-identical
+/// however the phases are interleaved across requests.
+pub struct PrefillState {
+    pub request_id: u64,
+    phase: Phase,
+    layer: usize,
+    /// Context length in tokens / in BLOCK chunks.
+    s: usize,
+    n: usize,
+    t_start: Instant,
+    hidden: MatF32,
+    metrics: PrefillMetrics,
+    patterns: Vec<Vec<HeadPattern>>,
+    index_sets: Vec<Vec<HeadIndex>>,
+    density_sum: f64,
+    density_cnt: usize,
+    qa_heads: usize,
+    cache_hits: u64,
+    cache_lookups: u64,
+    // intra-layer hand-offs between phases
+    chunks: Option<Vec<ChunkQkv>>,
+    indices: Option<Vec<HeadIndex>>,
+    attn: Option<Vec<Vec<f32>>>,
+}
+
+impl PrefillState {
+    pub fn phase(&self) -> Phase {
+        self.phase
+    }
+
+    pub fn layer(&self) -> usize {
+        self.layer
+    }
+
+    pub fn context_tokens(&self) -> usize {
+        self.s
+    }
+}
+
 /// Result of one prefill run.
 #[derive(Clone, Debug)]
 pub struct PrefillRun {
@@ -116,13 +190,15 @@ pub struct PrefillRun {
     pub hidden_last_chunk: Vec<f32>,
 }
 
-/// The prefill engine (one optional PJRT runtime + one model instance +
-/// one kernel context).
+/// The prefill engine (one optional PJRT runtime + one shared model
+/// instance + one kernel context). Weights are behind an `Arc` so a
+/// multi-worker server holds **one** generated model in memory, not one
+/// per worker.
 pub struct Engine {
     rt: Option<Runtime>,
     pub ctx: KernelCtx,
     pub cfg: EngineConfig,
-    pub weights: ModelWeights,
+    pub weights: Arc<ModelWeights>,
 }
 
 impl Engine {
@@ -130,6 +206,24 @@ impl Engine {
     /// anything else loads + compiles the artifact entry points (which
     /// fails without the `pjrt` feature or without `make artifacts`).
     pub fn new(artifact_dir: impl AsRef<std::path::Path>, cfg: EngineConfig) -> Result<Engine> {
+        let weights = Arc::new(ModelWeights::generate(&cfg.model, cfg.weight_seed));
+        Engine::with_weights(artifact_dir, cfg, weights)
+    }
+
+    /// Build an engine over pre-generated shared weights (the caller is
+    /// responsible for `weights` matching `cfg.model`/`cfg.weight_seed`).
+    /// This is how the server shares one model across its workers.
+    pub fn with_weights(
+        artifact_dir: impl AsRef<std::path::Path>,
+        cfg: EngineConfig,
+        weights: Arc<ModelWeights>,
+    ) -> Result<Engine> {
+        anyhow::ensure!(
+            weights.cfg.name == cfg.model.name,
+            "weights generated for {} but engine configured for {}",
+            weights.cfg.name,
+            cfg.model.name
+        );
         let rt = if cfg.fully_native() {
             None
         } else {
@@ -138,7 +232,6 @@ impl Engine {
             rt.warmup(cfg.model.name)?;
             Some(rt)
         };
-        let weights = ModelWeights::generate(&cfg.model, cfg.weight_seed);
         let ctx = cfg.kernel_ctx();
         Ok(Engine { rt, ctx, cfg, weights })
     }
@@ -149,7 +242,7 @@ impl Engine {
         cfg.native_sigu = true;
         cfg.native_sau = true;
         cfg.native_linear = true;
-        let weights = ModelWeights::generate(&cfg.model, cfg.weight_seed);
+        let weights = Arc::new(ModelWeights::generate(&cfg.model, cfg.weight_seed));
         let ctx = cfg.kernel_ctx();
         Ok(Engine { rt: None, ctx, cfg, weights })
     }
@@ -181,93 +274,287 @@ impl Engine {
     }
 
     /// Run the full prefill for a byte-token context. Context length must be
-    /// a multiple of BLOCK.
+    /// a multiple of BLOCK. Thin wrapper over the resumable phase methods:
+    /// the phases step in order with no interleaving, which is the same
+    /// computation a phase-pipelined scheduler performs per request.
     pub fn prefill(&mut self, request_id: u64, tokens: &[u8]) -> Result<PrefillRun> {
-        let cfg = self.cfg.model.clone();
+        let mut st = self.prefill_start(request_id, tokens)?;
+        loop {
+            if let Some(run) = self.phase_step(&mut st)? {
+                return Ok(run);
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // resumable phase API (the serving scheduler's unit of work)
+    // ------------------------------------------------------------------
+
+    /// Admit a request: validate, embed, and return a state at the first
+    /// phase of layer 0. TTFT is measured from this call.
+    pub fn prefill_start(&self, request_id: u64, tokens: &[u8]) -> Result<PrefillState> {
         let s = tokens.len();
         anyhow::ensure!(s > 0 && s % BLOCK == 0, "context must be a positive multiple of {BLOCK}");
-        let n = s / BLOCK;
-        let d = cfg.d_model;
-        let t_start = Instant::now();
-        let mut metrics = PrefillMetrics {
+        Ok(PrefillState {
             request_id,
-            context_tokens: s,
-            ..Default::default()
-        };
+            phase: Phase::Qkv,
+            layer: 0,
+            s,
+            n: s / BLOCK,
+            t_start: Instant::now(),
+            hidden: self.weights.embed_tokens(tokens),
+            metrics: PrefillMetrics { request_id, context_tokens: s, ..Default::default() },
+            patterns: Vec::new(),
+            index_sets: Vec::new(),
+            density_sum: 0.0,
+            density_cnt: 0,
+            qa_heads: 0,
+            cache_hits: 0,
+            cache_lookups: 0,
+            chunks: None,
+            indices: None,
+            attn: None,
+        })
+    }
 
-        let mut hidden = self.weights.embed_tokens(tokens);
-        let mut patterns = Vec::new();
-        let mut index_sets: Vec<Vec<HeadIndex>> = Vec::new();
-        let mut density_sum = 0.0;
-        let mut density_cnt = 0usize;
-        let mut qa_heads = 0usize;
-        let mut cache_hits = 0u64;
-        let mut cache_lookups = 0u64;
-
-        for li in 0..cfg.n_layers {
-            // ---------------- phase 1: chunked KV generation ----------------
-            let t0 = Instant::now();
-            let chunks = self.run_qkv_layer(li, &hidden, n)?;
-            metrics.t_qkv_us += t0.elapsed().as_micros() as f64;
-
-            // ---------------- phase 2: SIGU ----------------
-            let t0 = Instant::now();
-            let indices = self.run_sigu_layer(&chunks, n)?;
-            metrics.t_sigu_us += t0.elapsed().as_micros() as f64;
-            for idx in &indices {
-                density_sum += idx.density();
-                density_cnt += 1;
-                if idx.pattern == HeadPattern::QueryAware {
-                    qa_heads += 1;
-                }
-            }
-            patterns.push(indices.iter().map(|i| i.pattern).collect());
-
-            // ---------------- phase 3: SAU (block-major, cached) ------------
-            let t0 = Instant::now();
-            let schedule = build_schedule(&indices, cfg.group_size(), self.cfg.wave_qblocks);
-            metrics.jobs += schedule.total_jobs;
-            let t_hot = (self.cfg.t_hot_frac * (n * cfg.group_size()) as f64) as u32;
-            let mut cache = if self.cfg.cache_blocks > 0 {
-                LivenessCache::new(self.cfg.cache_blocks, self.cfg.hot_fraction, t_hot)
-            } else {
-                LivenessCache::disabled()
-            };
-            cache.init_uses(schedule.uses.iter().copied());
-            let attn = self.run_sau_layer(&chunks, &schedule, &mut cache, n)?;
-            let cs = cache.stats();
-            cache_hits += cs.hits();
-            cache_lookups += cs.lookups;
-            metrics.t_sau_us += t0.elapsed().as_micros() as f64;
-            index_sets.push(indices);
-
-            // ---------------- phase 4: o_proj + FFN ----------------
-            let t0 = Instant::now();
-            self.run_tail_layer(li, &mut hidden, &attn, n)?;
-            metrics.t_ffn_us += t0.elapsed().as_micros() as f64;
+    /// Advance whatever phase the state is at; returns the finished run
+    /// after the final phase of the last layer.
+    pub fn phase_step(&mut self, st: &mut PrefillState) -> Result<Option<PrefillRun>> {
+        match st.phase {
+            Phase::Qkv => self.phase_qkv(st).map(|_| None),
+            Phase::IndexGen => self.phase_index_gen(st).map(|_| None),
+            Phase::Sau => self.phase_sau(st).map(|_| None),
+            Phase::FfnLogits => self.phase_ffn_logits(st),
+            Phase::Done => Err(anyhow!("phase_step on a finished prefill")),
         }
+    }
 
-        // ---------------- first token ----------------
-        let last: Vec<f32> = hidden.data[(s - BLOCK) * d..].to_vec();
+    /// Step a same-phase group of co-resident requests. `Qkv` groups on
+    /// one layer and `Sau` groups run *fused* (one pool fan-out over every
+    /// lane's jobs); anything else steps state by state. Returns per-state
+    /// finished runs.
+    pub fn phase_step_group(
+        &mut self,
+        states: &mut [PrefillState],
+    ) -> Result<Vec<Option<PrefillRun>>> {
+        if states.len() > 1
+            && states.iter().all(|s| s.phase == Phase::Qkv && s.layer == states[0].layer)
+        {
+            self.phase_qkv_batch(states)?;
+            return Ok(states.iter().map(|_| None).collect());
+        }
+        if states.len() > 1 && states.iter().all(|s| s.phase == Phase::Sau) {
+            self.phase_sau_batch(states)?;
+            return Ok(states.iter().map(|_| None).collect());
+        }
+        states.iter_mut().map(|st| self.phase_step(st)).collect()
+    }
+
+    /// Phase 1: chunked KV generation for the current layer.
+    pub fn phase_qkv(&mut self, st: &mut PrefillState) -> Result<()> {
+        anyhow::ensure!(st.phase == Phase::Qkv, "phase_qkv in {:?}", st.phase);
+        let t0 = Instant::now();
+        let chunks = self.run_qkv_layer(st.layer, &st.hidden, st.n)?;
+        st.metrics.t_qkv_us += t0.elapsed().as_micros() as f64;
+        st.chunks = Some(chunks);
+        st.phase = Phase::IndexGen;
+        Ok(())
+    }
+
+    /// Fused phase 1 for several requests at the same layer: one pool
+    /// fan-out over all (request, chunk) jobs, so the layer's weights
+    /// stream through the cache once for the whole batch (the ROADMAP
+    /// batch>1 item). Falls back to per-state stepping when the group is
+    /// not fusable. Per-lane results are bit-identical to solo phases; the
+    /// fused elapsed time is charged to every lane.
+    pub fn phase_qkv_batch(&mut self, states: &mut [PrefillState]) -> Result<()> {
+        let fusable = states.len() > 1
+            && self.cfg.native_linear
+            && states.iter().all(|s| s.phase == Phase::Qkv && s.layer == states[0].layer);
+        if !fusable {
+            for st in states.iter_mut() {
+                self.phase_qkv(st)?;
+            }
+            return Ok(());
+        }
+        let li = states[0].layer;
+        let t0 = Instant::now();
+        let mut jobs: Vec<(usize, usize)> = Vec::new(); // (lane, chunk)
+        for (lane, st) in states.iter().enumerate() {
+            jobs.extend((0..st.n).map(|ci| (lane, ci)));
+        }
+        let outs = {
+            let hiddens: Vec<&MatF32> = states.iter().map(|s| &s.hidden).collect();
+            let weights: &ModelWeights = &self.weights;
+            let ctx = &self.ctx;
+            ctx.pool.map(jobs.len(), |j| {
+                let (lane, ci) = jobs[j];
+                let x = hiddens[lane].slice_rows(ci * BLOCK, (ci + 1) * BLOCK);
+                fwd::qkv_chunk(ctx, weights, li, &x, (ci * BLOCK) as i32)
+            })
+        };
+        let dt = t0.elapsed().as_micros() as f64;
+        let mut outs = outs.into_iter();
+        for st in states.iter_mut() {
+            st.chunks = Some(outs.by_ref().take(st.n).collect());
+            st.phase = Phase::IndexGen;
+            st.metrics.t_qkv_us += dt;
+        }
+        Ok(())
+    }
+
+    /// Phase 2: SIGU sparse index generation.
+    pub fn phase_index_gen(&mut self, st: &mut PrefillState) -> Result<()> {
+        anyhow::ensure!(st.phase == Phase::IndexGen, "phase_index_gen in {:?}", st.phase);
+        let t0 = Instant::now();
+        let indices = {
+            let chunks =
+                st.chunks.as_ref().ok_or_else(|| anyhow!("index_gen without qkv chunks"))?;
+            self.run_sigu_layer(chunks, st.n)?
+        };
+        st.metrics.t_sigu_us += t0.elapsed().as_micros() as f64;
+        for idx in &indices {
+            st.density_sum += idx.density();
+            st.density_cnt += 1;
+            if idx.pattern == HeadPattern::QueryAware {
+                st.qa_heads += 1;
+            }
+        }
+        st.patterns.push(indices.iter().map(|i| i.pattern).collect());
+        st.indices = Some(indices);
+        st.phase = Phase::Sau;
+        Ok(())
+    }
+
+    /// Phase 3: block-major SAU over the wave schedule, with the
+    /// deterministic cache-traffic walk.
+    pub fn phase_sau(&mut self, st: &mut PrefillState) -> Result<()> {
+        anyhow::ensure!(st.phase == Phase::Sau, "phase_sau in {:?}", st.phase);
+        let t0 = Instant::now();
+        let cfg = self.cfg.model.clone();
+        let chunks = st.chunks.take().ok_or_else(|| anyhow!("sau without qkv chunks"))?;
+        let indices = st.indices.take().ok_or_else(|| anyhow!("sau without indices"))?;
+        let schedule = build_schedule(&indices, cfg.group_size(), self.cfg.wave_qblocks);
+        st.metrics.jobs += schedule.total_jobs;
+        let mut cache = self.new_layer_cache(st.n, &schedule);
+        let attn = self.run_sau_layer(&chunks, &schedule, &mut cache, st.n)?;
+        let cs = cache.stats();
+        st.cache_hits += cs.hits();
+        st.cache_lookups += cs.lookups;
+        st.metrics.t_sau_us += t0.elapsed().as_micros() as f64;
+        st.index_sets.push(indices);
+        st.attn = Some(attn);
+        st.phase = Phase::FfnLogits;
+        Ok(())
+    }
+
+    /// Fused phase 3 for co-resident requests (native SAU path): per-lane
+    /// schedules, use-counters and cache walks are exactly the solo phase
+    /// (stats stay per-request deterministic); the lanes' wave accumulator
+    /// states then fan out together over one merged
+    /// [`build_schedule_batch`] sweep. Lanes may sit at different layers —
+    /// SAU only touches the lane's own chunk data.
+    pub fn phase_sau_batch(&mut self, states: &mut [PrefillState]) -> Result<()> {
+        let fusable = states.len() > 1
+            && self.cfg.native_sau
+            && states.iter().all(|s| s.phase == Phase::Sau);
+        if !fusable {
+            for st in states.iter_mut() {
+                self.phase_sau(st)?;
+            }
+            return Ok(());
+        }
+        let t0 = Instant::now();
+        let cfg = self.cfg.model.clone();
+        let mut schedules = Vec::with_capacity(states.len());
+        for st in states.iter_mut() {
+            let indices = st.indices.take().ok_or_else(|| anyhow!("sau without indices"))?;
+            let schedule = build_schedule(&indices, cfg.group_size(), self.cfg.wave_qblocks);
+            st.metrics.jobs += schedule.total_jobs;
+            let mut cache = self.new_layer_cache(st.n, &schedule);
+            walk_cache_traffic(&schedule, &mut cache);
+            let cs = cache.stats();
+            st.cache_hits += cs.hits();
+            st.cache_lookups += cs.lookups;
+            st.index_sets.push(indices);
+            schedules.push(schedule);
+        }
+        let lane_refs: Vec<&Schedule> = schedules.iter().collect();
+        let batch = build_schedule_batch(&lane_refs);
+        let attns = {
+            let chunk_lanes: Vec<&[ChunkQkv]> = states
+                .iter()
+                .map(|s| s.chunks.as_deref().expect("sau without qkv chunks"))
+                .collect();
+            fwd::sau_layer_batch(&self.ctx, &cfg, &chunk_lanes, &batch)
+        };
+        let dt = t0.elapsed().as_micros() as f64;
+        for (st, attn) in states.iter_mut().zip(attns) {
+            st.chunks = None;
+            st.attn = Some(attn.into_iter().map(|m| m.data).collect());
+            st.phase = Phase::FfnLogits;
+            st.metrics.t_sau_us += dt;
+        }
+        Ok(())
+    }
+
+    /// Phase 4: o_proj + FFN tail; advances to the next layer, or — after
+    /// the last layer — runs final norm + logits and finishes the request.
+    pub fn phase_ffn_logits(&mut self, st: &mut PrefillState) -> Result<Option<PrefillRun>> {
+        anyhow::ensure!(st.phase == Phase::FfnLogits, "phase_ffn_logits in {:?}", st.phase);
+        let t0 = Instant::now();
+        let attn = st.attn.take().ok_or_else(|| anyhow!("ffn without sau output"))?;
+        let li = st.layer;
+        let n = st.n;
+        self.run_tail_layer(li, &mut st.hidden, &attn, n)?;
+        st.metrics.t_ffn_us += t0.elapsed().as_micros() as f64;
+        st.layer += 1;
+        if st.layer < self.cfg.model.n_layers {
+            st.phase = Phase::Qkv;
+            return Ok(None);
+        }
+        self.finish(st).map(Some)
+    }
+
+    /// Final norm + LM head; seals the state and produces the run.
+    fn finish(&mut self, st: &mut PrefillState) -> Result<PrefillRun> {
+        let cfg = self.cfg.model.clone();
+        let d = cfg.d_model;
+        let last: Vec<f32> = st.hidden.data[(st.s - BLOCK) * d..].to_vec();
         let logits = self.run_logits(&last)?;
         let last_row = &logits[(BLOCK - 1) * cfg.vocab..];
         let first_token = fwd::argmax_token(last_row);
 
-        metrics.ttft_us = t_start.elapsed().as_micros() as f64;
-        metrics.density = if density_cnt > 0 { density_sum / density_cnt as f64 } else { 1.0 };
+        st.phase = Phase::Done;
+        let mut metrics = std::mem::take(&mut st.metrics);
+        metrics.ttft_us = st.t_start.elapsed().as_micros() as f64;
+        metrics.density =
+            if st.density_cnt > 0 { st.density_sum / st.density_cnt as f64 } else { 1.0 };
         metrics.query_aware_frac =
-            if density_cnt > 0 { qa_heads as f64 / density_cnt as f64 } else { 0.0 };
+            if st.density_cnt > 0 { st.qa_heads as f64 / st.density_cnt as f64 } else { 0.0 };
         metrics.cache_hit_rate =
-            if cache_lookups > 0 { cache_hits as f64 / cache_lookups as f64 } else { 0.0 };
+            if st.cache_lookups > 0 { st.cache_hits as f64 / st.cache_lookups as f64 } else { 0.0 };
 
         Ok(PrefillRun {
             first_token,
             logits_last: last_row.to_vec(),
             metrics,
-            patterns,
-            index_sets,
+            patterns: std::mem::take(&mut st.patterns),
+            index_sets: std::mem::take(&mut st.index_sets),
             hidden_last_chunk: last,
         })
+    }
+
+    /// Per-layer liveness cache seeded with the schedule's use counters.
+    fn new_layer_cache(&self, n: usize, schedule: &Schedule) -> LivenessCache {
+        let t_hot = (self.cfg.t_hot_frac * (n * self.cfg.model.group_size()) as f64) as u32;
+        let mut cache = if self.cfg.cache_blocks > 0 {
+            LivenessCache::new(self.cfg.cache_blocks, self.cfg.hot_fraction, t_hot)
+        } else {
+            LivenessCache::disabled()
+        };
+        cache.init_uses(schedule.uses.iter().copied());
+        cache
     }
 
     // ------------------------------------------------------------------
@@ -276,7 +563,7 @@ impl Engine {
 
     fn run_qkv_layer(&mut self, li: usize, hidden: &MatF32, n: usize) -> Result<Vec<ChunkQkv>> {
         if self.cfg.native_linear {
-            let weights = &self.weights;
+            let weights: &ModelWeights = &self.weights;
             let ctx = &self.ctx;
             return Ok(ctx.pool.map(n, |ci| {
                 let x = hidden.slice_rows(ci * BLOCK, (ci + 1) * BLOCK);
@@ -411,19 +698,7 @@ impl Engine {
         cache: &mut LivenessCache,
         n: usize,
     ) -> Result<Vec<Vec<f32>>> {
-        // fetch-or-hit; the functional path always has the data in host
-        // memory — the cache records the *traffic* outcome.
-        for wave in &schedule.waves {
-            for bj in &wave.blocks {
-                let key = cache_key(bj.kv_head, bj.block);
-                if matches!(cache.lookup(key), Access::Miss) {
-                    cache.admit(key);
-                }
-                for _ in &bj.jobs {
-                    cache.consume(key);
-                }
-            }
-        }
+        walk_cache_traffic(schedule, cache);
         if self.cfg.native_sau {
             // the reference's parallel wave execution over this engine's
             // schedule (waves sized by cfg.wave_qblocks)
@@ -567,7 +842,7 @@ impl Engine {
         let cfg = self.cfg.model.clone();
         let (d, dh, hq) = (cfg.d_model, cfg.d_head, cfg.n_heads);
         if self.cfg.native_linear {
-            let weights = &self.weights;
+            let weights: &ModelWeights = &self.weights;
             let ctx = &self.ctx;
             let hidden_ref = &*hidden;
             let new_chunks: Vec<MatF32> = ctx.pool.map(n, |ci| {
@@ -626,7 +901,7 @@ impl Engine {
         let d = cfg.d_model;
         if self.cfg.native_linear {
             let last_m = MatF32 { rows: BLOCK, cols: d, data: last.to_vec() };
-            return Ok(fwd::logits_last_chunk(&self.ctx, &self.weights, &last_m).data);
+            return Ok(fwd::logits_last_chunk(&self.ctx, self.weights.as_ref(), &last_m).data);
         }
         let weights = &self.weights;
         let exe = self
@@ -641,5 +916,25 @@ impl Engine {
             Arg::ScalarF32(weights.lm_head.scale),
         ])?;
         literal_f32(&out[0])
+    }
+}
+
+/// The deterministic cache-traffic walk over a schedule: fetch-or-hit per
+/// (kv_head, block) visit, one consume per job. The functional path always
+/// has the data in host memory — the cache records the *traffic* outcome —
+/// and the walk always runs sequentially in schedule order so cache
+/// statistics are identical for every backend, thread count, and batching
+/// decision.
+fn walk_cache_traffic(schedule: &Schedule, cache: &mut LivenessCache) {
+    for wave in &schedule.waves {
+        for bj in &wave.blocks {
+            let key = cache_key(bj.kv_head, bj.block);
+            if matches!(cache.lookup(key), Access::Miss) {
+                cache.admit(key);
+            }
+            for _ in &bj.jobs {
+                cache.consume(key);
+            }
+        }
     }
 }

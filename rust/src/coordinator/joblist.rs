@@ -112,6 +112,132 @@ pub fn build_schedule(indices: &[HeadIndex], group_size: usize, wave_qblocks: us
     Schedule { waves, uses, total_jobs, n_blocks, n_kv_heads }
 }
 
+// ---------------------------------------------------------------------------
+// batch axis: co-resident requests sharing one wave sweep
+// ---------------------------------------------------------------------------
+
+/// One SAU job of a *batched* wave: request lane + (head, q_block).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BatchJob {
+    /// Request lane (index into the co-resident request set).
+    pub lane: u16,
+    pub head: u16,
+    pub qblock: u32,
+}
+
+/// All consumers of one (kv_head, block) coordinate across every lane of
+/// one batched wave. Lanes read their own KV data, but the block-major
+/// sweep visits the coordinate once — co-resident requests amortize the
+/// per-block weight/schedule traffic of the wave.
+#[derive(Clone, Debug)]
+pub struct BatchBlockJobs {
+    pub kv_head: u16,
+    pub block: u32,
+    pub jobs: Vec<BatchJob>,
+}
+
+/// A batched wave: each lane's live query-block range (None once a lane
+/// has run out of waves) plus the merged block-major job lists.
+#[derive(Clone, Debug)]
+pub struct BatchWave {
+    /// Per lane: [start, end) of live query blocks, or None if idle.
+    pub q_ranges: Vec<Option<(u32, u32)>>,
+    /// Merged (kv_head, block) coordinates in ascending order.
+    pub blocks: Vec<BatchBlockJobs>,
+}
+
+/// A batched SAU schedule over several co-resident requests ("lanes").
+#[derive(Clone, Debug)]
+pub struct BatchSchedule {
+    pub waves: Vec<BatchWave>,
+    pub lanes: usize,
+    pub total_jobs: usize,
+    /// Per lane: number of query/KV blocks (the lane's context length).
+    pub n_blocks: Vec<usize>,
+}
+
+/// Merge per-lane wave schedules into one batched sweep: wave w of the
+/// batch contains wave w of every lane that still has one, with block
+/// lists merged coordinate-wise. Per-lane job order is preserved (each
+/// lane's jobs still see their KV blocks in ascending order), so batched
+/// execution is bit-identical to running the lanes solo.
+pub fn build_schedule_batch(lanes: &[&Schedule]) -> BatchSchedule {
+    assert!(!lanes.is_empty());
+    let max_waves = lanes.iter().map(|s| s.waves.len()).max().unwrap_or(0);
+    let mut waves = Vec::with_capacity(max_waves);
+    let mut total_jobs = 0usize;
+    for w in 0..max_waves {
+        let mut q_ranges = vec![None; lanes.len()];
+        let mut merged: std::collections::BTreeMap<(u16, u32), Vec<BatchJob>> =
+            std::collections::BTreeMap::new();
+        for (lane, s) in lanes.iter().enumerate() {
+            let Some(wave) = s.waves.get(w) else { continue };
+            q_ranges[lane] = Some((wave.q_start, wave.q_end));
+            for bj in &wave.blocks {
+                let bucket = merged.entry((bj.kv_head, bj.block)).or_default();
+                bucket.extend(bj.jobs.iter().map(|j| BatchJob {
+                    lane: lane as u16,
+                    head: j.head,
+                    qblock: j.qblock,
+                }));
+                total_jobs += bj.jobs.len();
+            }
+        }
+        let blocks = merged
+            .into_iter()
+            .map(|((kv_head, block), jobs)| BatchBlockJobs { kv_head, block, jobs })
+            .collect();
+        waves.push(BatchWave { q_ranges, blocks });
+    }
+    BatchSchedule {
+        waves,
+        lanes: lanes.len(),
+        total_jobs,
+        n_blocks: lanes.iter().map(|s| s.n_blocks).collect(),
+    }
+}
+
+impl BatchSchedule {
+    /// Invariants: ascending merged block order, every job inside its
+    /// lane's live range, job conservation against the lane schedules.
+    pub fn check_invariants(&self, lanes: &[&Schedule]) -> Result<(), String> {
+        if lanes.len() != self.lanes {
+            return Err(format!("lane count {} != {}", lanes.len(), self.lanes));
+        }
+        let mut seen = 0usize;
+        for w in &self.waves {
+            let mut prev: Option<(u16, u32)> = None;
+            for bj in &w.blocks {
+                let cur = (bj.kv_head, bj.block);
+                if let Some(p) = prev {
+                    if cur <= p {
+                        return Err(format!("batch blocks not ascending: {p:?} -> {cur:?}"));
+                    }
+                }
+                prev = Some(cur);
+                for j in &bj.jobs {
+                    let Some((qs, qe)) = w.q_ranges.get(j.lane as usize).copied().flatten()
+                    else {
+                        return Err(format!("job {j:?} on an idle lane"));
+                    };
+                    if !(qs..qe).contains(&j.qblock) {
+                        return Err(format!("job {j:?} outside lane range [{qs}, {qe})"));
+                    }
+                }
+                seen += bj.jobs.len();
+            }
+        }
+        let expected: usize = lanes.iter().map(|s| s.total_jobs).sum();
+        if seen != expected || self.total_jobs != expected {
+            return Err(format!(
+                "batch job conservation: scheduled {seen} (recorded {}) != lanes {expected}",
+                self.total_jobs
+            ));
+        }
+        Ok(())
+    }
+}
+
 impl Schedule {
     /// Invariants used by property tests: ascending block order per wave,
     /// job conservation, use counters match job references.
@@ -215,5 +341,52 @@ mod tests {
         let s = build_schedule(&indices, 1, 0);
         assert_eq!(s.total_jobs, 0);
         assert!(s.waves[0].blocks.is_empty());
+    }
+
+    #[test]
+    fn batch_schedule_merges_shared_coordinates() {
+        // two lanes touching overlapping (kv_head, block) coordinates
+        let a_idx = vec![idx(vec![vec![0], vec![0, 1]])];
+        let b_idx = vec![idx(vec![vec![0], vec![1]])];
+        let a = build_schedule(&a_idx, 1, 0);
+        let b = build_schedule(&b_idx, 1, 0);
+        let batch = build_schedule_batch(&[&a, &b]);
+        batch.check_invariants(&[&a, &b]).unwrap();
+        assert_eq!(batch.lanes, 2);
+        assert_eq!(batch.total_jobs, a.total_jobs + b.total_jobs);
+        assert_eq!(batch.waves.len(), 1);
+        // block (0, 0) serves jobs from both lanes in one visit
+        let b0 = &batch.waves[0].blocks[0];
+        assert_eq!((b0.kv_head, b0.block), (0, 0));
+        let lanes: Vec<u16> = b0.jobs.iter().map(|j| j.lane).collect();
+        assert!(lanes.contains(&0) && lanes.contains(&1));
+    }
+
+    #[test]
+    fn batch_schedule_handles_uneven_wave_counts() {
+        // lane 0: 4 q-blocks in waves of 2 => 2 waves; lane 1: 1 wave
+        let a_idx = vec![idx(vec![vec![0], vec![1], vec![2], vec![3]])];
+        let b_idx = vec![idx(vec![vec![0], vec![0, 1]])];
+        let a = build_schedule(&a_idx, 1, 2);
+        let b = build_schedule(&b_idx, 1, 2);
+        let batch = build_schedule_batch(&[&a, &b]);
+        batch.check_invariants(&[&a, &b]).unwrap();
+        assert_eq!(batch.waves.len(), 2);
+        assert!(batch.waves[1].q_ranges[1].is_none(), "lane 1 idle in wave 2");
+        assert!(batch.waves[1].blocks.iter().all(|bj| bj.jobs.iter().all(|j| j.lane == 0)));
+    }
+
+    #[test]
+    fn batch_of_one_matches_solo_schedule() {
+        let indices = vec![idx(vec![vec![0], vec![0, 1], vec![2]])];
+        let s = build_schedule(&indices, 1, 2);
+        let batch = build_schedule_batch(&[&s]);
+        batch.check_invariants(&[&s]).unwrap();
+        assert_eq!(batch.waves.len(), s.waves.len());
+        assert_eq!(batch.total_jobs, s.total_jobs);
+        for (bw, sw) in batch.waves.iter().zip(&s.waves) {
+            assert_eq!(bw.q_ranges[0], Some((sw.q_start, sw.q_end)));
+            assert_eq!(bw.blocks.len(), sw.blocks.len());
+        }
     }
 }

@@ -1,15 +1,21 @@
 //! L3 coordinator: the paper's system pipeline in Rust.
 //!
 //!  * [`joblist`] — block-major SAU scheduling (bucketization, waves,
-//!    remaining-use counters) — paper §IV-C.
-//!  * [`engine`]  — chunked prefill over the AOT artifacts: KV generation,
-//!    SIGU, cached SAU, FFN, first token — paper Fig. 2.
-//!  * [`server`]  — request router + multi-worker serving loop.
+//!    remaining-use counters) — paper §IV-C — plus the batch axis that
+//!    merges co-resident requests' waves into one sweep.
+//!  * [`engine`]  — chunked prefill (artifacts or native kernels): KV
+//!    generation, SIGU, cached SAU, FFN, first token — paper Fig. 2 —
+//!    exposed both monolithically and as resumable per-layer phases.
+//!  * [`server`]  — request router + phase-pipelined multi-worker serving
+//!    loop over one shared thread budget (serial baseline included).
 
 pub mod engine;
 pub mod joblist;
 pub mod server;
 
-pub use engine::{Engine, EngineConfig, PrefillRun};
-pub use joblist::{build_schedule, cache_key, BlockJobs, Job, Schedule, Wave, DEFAULT_WAVE_QBLOCKS};
-pub use server::{Completion, Policy, Server};
+pub use engine::{Engine, EngineConfig, Phase, PrefillRun, PrefillState};
+pub use joblist::{
+    build_schedule, build_schedule_batch, cache_key, BatchBlockJobs, BatchJob, BatchSchedule,
+    BatchWave, BlockJobs, Job, Schedule, Wave, DEFAULT_WAVE_QBLOCKS,
+};
+pub use server::{Completion, Policy, Server, ServerOptions};

@@ -1,20 +1,42 @@
-//! Request router + serving loop (std threads; tokio is unavailable
-//! offline).
+//! Request router + phase-pipelined serving loop (std threads; tokio is
+//! unavailable offline).
 //!
 //! The paper serves batch-size-1 prefill; the router's job is admission,
 //! ordering and dispatch across worker engines. Policies: FCFS and
 //! shortest-job-first (by context length — prefill cost is superlinear in
 //! context, so SJF cuts mean TTFT under contention; the serving example
 //! reports both).
+//!
+//! Two scheduling modes share the same admission queue:
+//!
+//!  * **pipelined** (default): requests flow through the engine's
+//!    resumable phases ([`crate::coordinator::engine::PrefillState`]).
+//!    Workers pull one *phase* at a time from a Condvar-driven ready set,
+//!    so the memory-bound index-generation phase of request *i+1* overlaps
+//!    the compute-bound SAU/FFN phases of request *i*. All engines lease
+//!    kernel threads from one shared [`PoolBudget`], sizing concurrent
+//!    phase jobs to the machine budget instead of `n_workers x pool_size`;
+//!    co-resident requests parked at the same phase fuse into one batched
+//!    fan-out (QKV on a shared layer, SAU at any layer).
+//!  * **serial**: each worker runs a request end-to-end on a private
+//!    static share of the thread budget — the PR-1 baseline the serving
+//!    example compares against at equal total threads.
+//!
+//! Per-request outputs are bit-identical across modes, worker counts and
+//! thread budgets: phases step in order per request and every kernel
+//! fan-out is thread-count-invariant.
 
 use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::coordinator::engine::{Engine, EngineConfig, PrefillRun};
+use crate::coordinator::engine::{Engine, EngineConfig, Phase, PrefillRun, PrefillState};
+use crate::model::ModelWeights;
+use crate::tensor::tile::KernelCtx;
+use crate::util::pool::{PoolBudget, WorkerPool};
 use crate::workload::prompts::TraceRequest;
 
 /// Queueing policy.
@@ -25,88 +47,264 @@ pub enum Policy {
     Sjf,
 }
 
+/// Most states a single fused phase step may take (QKV/SAU batching).
+const MAX_PHASE_BATCH: usize = 4;
+
+/// Server scheduling options.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerOptions {
+    /// Phase-worker (pipelined) or engine-worker (serial) thread count.
+    pub n_workers: usize,
+    pub policy: Policy,
+    /// Phase-pipelined scheduling (default) vs the serial end-to-end
+    /// baseline.
+    pub pipelined: bool,
+    /// Total kernel-thread budget shared by all workers. 0 => the engine
+    /// config's `threads`, falling back to `FASTP_THREADS` / available
+    /// parallelism.
+    pub total_threads: usize,
+    /// Max co-resident requests in the pipeline (0 => `n_workers + 1`,
+    /// one extra so the next request's phase 1 can overlap the tail
+    /// phases of the ones in flight). Serial mode ignores this: each
+    /// worker carries exactly one request.
+    pub max_inflight: usize,
+    /// Fuse same-phase jobs of co-resident requests into one fan-out.
+    pub batch_phases: bool,
+}
+
+impl ServerOptions {
+    /// Pipelined defaults.
+    pub fn new(n_workers: usize, policy: Policy) -> ServerOptions {
+        ServerOptions {
+            n_workers,
+            policy,
+            pipelined: true,
+            total_threads: 0,
+            max_inflight: 0,
+            batch_phases: true,
+        }
+    }
+
+    /// The serial end-to-end baseline (static per-worker thread split).
+    pub fn serial(n_workers: usize, policy: Policy) -> ServerOptions {
+        ServerOptions { pipelined: false, ..ServerOptions::new(n_workers, policy) }
+    }
+}
+
 /// A completed request with serving-side timing.
 #[derive(Clone, Debug)]
 pub struct Completion {
     pub request_id: u64,
     pub run: PrefillRun,
-    /// Queue wait (us) before an engine picked the request up.
+    /// Queue wait (us) before the request was admitted into an engine.
     pub queue_us: f64,
+    /// Time parked between phases waiting for a worker (us) — the
+    /// pipeline-stall component of TTFT (0 in serial mode).
+    pub pipeline_wait_us: f64,
     /// End-to-end latency including queueing (us).
     pub e2e_us: f64,
 }
 
-/// The admission queue shared between router and workers.
+impl Completion {
+    /// This completion's latency decomposition for
+    /// [`crate::metrics::ServeSummary`] aggregation.
+    pub fn sample(&self) -> crate::metrics::ServeSample {
+        crate::metrics::ServeSample {
+            ttft_us: self.run.metrics.ttft_us,
+            queue_us: self.queue_us,
+            pipeline_wait_us: self.pipeline_wait_us,
+            e2e_us: self.e2e_us,
+        }
+    }
+}
+
+/// Serving-side request bookkeeping that rides along the phase states.
+#[derive(Clone, Copy, Debug)]
+struct ReqMeta {
+    /// Admission sequence number (tie-break: earlier admission first).
+    seq: u64,
+    submitted_at: Instant,
+    queue_us: f64,
+    /// When the state was last parked in the ready set.
+    parked_at: Instant,
+    pipeline_wait_us: f64,
+}
+
+/// An in-flight request parked between phases.
+struct Pending {
+    state: PrefillState,
+    meta: ReqMeta,
+}
+
+/// The admission queue + pipeline ready set shared between router and
+/// workers. All waits are Condvar wakeups — no sleep-polling.
 struct Shared {
     queue: VecDeque<(TraceRequest, Instant)>,
+    ready: Vec<Pending>,
     closed: bool,
+    /// A worker hit an engine error; everyone drains out.
+    aborted: bool,
+    /// Admitted but not yet completed requests (parked + being stepped).
+    inflight: usize,
+    next_seq: u64,
     policy: Policy,
 }
 
+struct Sched {
+    shared: Mutex<Shared>,
+    cond: Condvar,
+}
+
+/// Worker drop guard: a panic unwinding out of a phase step (outside the
+/// scheduler lock) would otherwise leave `inflight` counted forever and
+/// wedge the peers' Condvar exit condition — flag the abort so everyone
+/// drains out and `drain()` surfaces the panic via `join`.
+struct AbortOnPanic<'a>(&'a Sched);
+
+impl Drop for AbortOnPanic<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            let mut s =
+                self.0.shared.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            s.aborted = true;
+            drop(s);
+            self.0.cond.notify_all();
+        }
+    }
+}
+
+/// One unit of worker work.
+enum Work {
+    /// Admit a queued request (build its `PrefillState`).
+    Admit(TraceRequest, Instant),
+    /// Step the next phase of these co-resident requests (len > 1 only
+    /// when the group fuses: same phase, and same layer for QKV).
+    Phases(Vec<Pending>),
+}
+
 /// Multi-worker prefill server. Each worker owns an [`Engine`] (PJRT
-/// clients are not shared across threads).
+/// clients are not shared across threads), but all engines share one
+/// generated [`ModelWeights`] and — in pipelined mode — one kernel-thread
+/// budget.
 pub struct Server {
-    shared: Arc<Mutex<Shared>>,
+    sync: Arc<Sched>,
     workers: Vec<std::thread::JoinHandle<Result<()>>>,
     results_rx: Receiver<Completion>,
 }
 
 impl Server {
-    /// Spawn `n_workers` engines over the same artifacts/config.
+    /// Spawn `n_workers` engines over the same artifacts/config with the
+    /// default (pipelined) scheduling options.
     pub fn start(
         artifact_dir: std::path::PathBuf,
         cfg: EngineConfig,
         n_workers: usize,
         policy: Policy,
     ) -> Result<Server> {
-        let shared = Arc::new(Mutex::new(Shared { queue: VecDeque::new(), closed: false, policy }));
+        Server::start_with(artifact_dir, cfg, ServerOptions::new(n_workers, policy))
+    }
+
+    /// Spawn the server with explicit scheduling options. The model is
+    /// generated once and shared by every worker.
+    pub fn start_with(
+        artifact_dir: std::path::PathBuf,
+        cfg: EngineConfig,
+        opts: ServerOptions,
+    ) -> Result<Server> {
+        let weights = Arc::new(ModelWeights::generate(&cfg.model, cfg.weight_seed));
+        Server::start_with_weights(artifact_dir, cfg, opts, weights)
+    }
+
+    /// Spawn the server over pre-generated shared weights — lets several
+    /// servers (e.g. the example's serial-vs-pipelined comparison) reuse
+    /// one model instance instead of regenerating it per server.
+    pub fn start_with_weights(
+        artifact_dir: std::path::PathBuf,
+        cfg: EngineConfig,
+        opts: ServerOptions,
+        weights: Arc<ModelWeights>,
+    ) -> Result<Server> {
+        let n_workers = opts.n_workers.max(1);
+        let total_threads = if opts.total_threads > 0 {
+            opts.total_threads
+        } else if cfg.threads > 0 {
+            cfg.threads
+        } else {
+            WorkerPool::from_env().threads()
+        };
+        let max_inflight = if opts.max_inflight > 0 { opts.max_inflight } else { n_workers + 1 };
+        let budget = PoolBudget::new(total_threads);
+        let sync = Arc::new(Sched {
+            shared: Mutex::new(Shared {
+                queue: VecDeque::new(),
+                ready: Vec::new(),
+                closed: false,
+                aborted: false,
+                inflight: 0,
+                next_seq: 0,
+                policy: opts.policy,
+            }),
+            cond: Condvar::new(),
+        });
         let (tx, rx): (Sender<Completion>, Receiver<Completion>) = channel();
         let mut workers = Vec::new();
-        for _ in 0..n_workers.max(1) {
-            let shared = Arc::clone(&shared);
+        for _ in 0..n_workers {
+            let sync = Arc::clone(&sync);
             let tx = tx.clone();
             let dir = artifact_dir.clone();
             let cfg = cfg.clone();
+            let weights = Arc::clone(&weights);
+            let budget = Arc::clone(&budget);
             workers.push(std::thread::spawn(move || -> Result<()> {
-                let mut engine = Engine::new(&dir, cfg)?;
-                loop {
-                    let item = {
-                        let mut s = shared.lock().unwrap();
-                        match next_item(&mut s) {
-                            Some(it) => it,
-                            None if s.closed => return Ok(()),
-                            None => {
-                                drop(s);
-                                std::thread::sleep(std::time::Duration::from_micros(200));
-                                continue;
-                            }
-                        }
+                let _abort_guard = AbortOnPanic(&sync);
+                let out = (|| {
+                    let mut engine = Engine::with_weights(&dir, cfg, weights)?;
+                    engine.ctx = if opts.pipelined {
+                        // lease from the shared machine budget per phase job
+                        KernelCtx::with_pool(WorkerPool::shared(total_threads, budget))
+                    } else {
+                        // the serial baseline: a static equal split of the
+                        // same total budget
+                        KernelCtx::with_pool(WorkerPool::with_threads(
+                            (total_threads / n_workers).max(1),
+                        ))
                     };
-                    let (req, enqueued_at) = item;
-                    let queue_us = enqueued_at.elapsed().as_micros() as f64;
-                    let tokens = req.spec.generate();
-                    let run = engine.prefill(req.id, &tokens)?;
-                    let e2e_us = queue_us + run.metrics.ttft_us;
-                    let _ = tx.send(Completion { request_id: req.id, run, queue_us, e2e_us });
+                    if opts.pipelined {
+                        worker_pipelined(&sync, &mut engine, &tx, max_inflight, opts.batch_phases)
+                    } else {
+                        worker_serial(&sync, &mut engine, &tx)
+                    }
+                })();
+                if out.is_err() {
+                    // wake everyone so in-flight bookkeeping can't wedge
+                    // the other workers on the condvar
+                    let mut s = sync.shared.lock().unwrap();
+                    s.aborted = true;
+                    drop(s);
+                    sync.cond.notify_all();
                 }
+                out
             }));
         }
         drop(tx);
-        Ok(Server { shared, workers, results_rx: rx })
+        Ok(Server { sync, workers, results_rx: rx })
     }
 
     /// Enqueue a request (non-blocking).
     pub fn submit(&self, req: TraceRequest) {
-        let mut s = self.shared.lock().unwrap();
+        let mut s = self.sync.shared.lock().unwrap();
         s.queue.push_back((req, Instant::now()));
+        drop(s);
+        self.sync.cond.notify_all();
     }
 
     /// Close the queue and collect all completions.
     pub fn drain(self) -> Result<Vec<Completion>> {
         {
-            let mut s = self.shared.lock().unwrap();
+            let mut s = self.sync.shared.lock().unwrap();
             s.closed = true;
         }
+        self.sync.cond.notify_all();
         let mut out = Vec::new();
         for c in self.results_rx.iter() {
             out.push(c);
@@ -116,6 +314,183 @@ impl Server {
         }
         out.sort_by_key(|c| c.request_id);
         Ok(out)
+    }
+}
+
+/// Serial worker: admit one request, run the monolithic prefill, repeat.
+fn worker_serial(sync: &Sched, engine: &mut Engine, tx: &Sender<Completion>) -> Result<()> {
+    loop {
+        let item = {
+            let mut s = sync.shared.lock().unwrap();
+            loop {
+                if s.aborted {
+                    return Ok(());
+                }
+                if let Some(it) = next_item(&mut s) {
+                    s.inflight += 1;
+                    break Some(it);
+                }
+                if s.closed {
+                    break None;
+                }
+                s = sync.cond.wait(s).unwrap();
+            }
+        };
+        let Some((req, submitted_at)) = item else { return Ok(()) };
+        let queue_us = submitted_at.elapsed().as_micros() as f64;
+        let tokens = req.spec.generate();
+        let run = engine.prefill(req.id, &tokens)?;
+        let e2e_us = submitted_at.elapsed().as_micros() as f64;
+        let _ = tx.send(Completion {
+            request_id: req.id,
+            run,
+            queue_us,
+            pipeline_wait_us: 0.0,
+            e2e_us,
+        });
+        let mut s = sync.shared.lock().unwrap();
+        s.inflight -= 1;
+        drop(s);
+        sync.cond.notify_all();
+    }
+}
+
+/// Pipelined worker: pull one phase step (or an admission) at a time.
+fn worker_pipelined(
+    sync: &Sched,
+    engine: &mut Engine,
+    tx: &Sender<Completion>,
+    max_inflight: usize,
+    batch_phases: bool,
+) -> Result<()> {
+    loop {
+        let work = {
+            let mut s = sync.shared.lock().unwrap();
+            loop {
+                if s.aborted {
+                    return Ok(());
+                }
+                if let Some(w) = pick_work(&mut s, max_inflight, batch_phases) {
+                    break w;
+                }
+                if s.closed && s.queue.is_empty() && s.inflight == 0 {
+                    return Ok(());
+                }
+                s = sync.cond.wait(s).unwrap();
+            }
+        };
+        match work {
+            Work::Admit(req, submitted_at) => {
+                let queue_us = submitted_at.elapsed().as_micros() as f64;
+                let tokens = req.spec.generate();
+                let state = engine.prefill_start(req.id, &tokens)?;
+                let mut s = sync.shared.lock().unwrap();
+                let seq = s.next_seq;
+                s.next_seq += 1;
+                s.ready.push(Pending {
+                    state,
+                    meta: ReqMeta {
+                        seq,
+                        submitted_at,
+                        queue_us,
+                        parked_at: Instant::now(),
+                        pipeline_wait_us: 0.0,
+                    },
+                });
+                drop(s);
+                sync.cond.notify_all();
+            }
+            Work::Phases(group) => {
+                let now = Instant::now();
+                let mut states = Vec::with_capacity(group.len());
+                let mut metas = Vec::with_capacity(group.len());
+                for p in group {
+                    let mut meta = p.meta;
+                    meta.pipeline_wait_us +=
+                        now.duration_since(meta.parked_at).as_micros() as f64;
+                    states.push(p.state);
+                    metas.push(meta);
+                }
+                let results = engine.phase_step_group(&mut states)?;
+                let mut s = sync.shared.lock().unwrap();
+                for ((state, meta), result) in states.into_iter().zip(metas).zip(results) {
+                    match result {
+                        Some(run) => {
+                            s.inflight -= 1;
+                            let _ = tx.send(Completion {
+                                request_id: run.metrics.request_id,
+                                run,
+                                queue_us: meta.queue_us,
+                                pipeline_wait_us: meta.pipeline_wait_us,
+                                e2e_us: meta.submitted_at.elapsed().as_micros() as f64,
+                            });
+                        }
+                        None => s.ready.push(Pending {
+                            state,
+                            meta: ReqMeta { parked_at: Instant::now(), ..meta },
+                        }),
+                    }
+                }
+                drop(s);
+                sync.cond.notify_all();
+            }
+        }
+    }
+}
+
+/// Pipeline scheduling: step parked states first (most-advanced first, so
+/// older requests drain and their TTFT stays low), admitting a new request
+/// only when no state is ready and the pipeline has room. Admission order
+/// follows the queueing policy; everything after admission is
+/// phase-availability driven.
+fn pick_work(s: &mut Shared, max_inflight: usize, batch_phases: bool) -> Option<Work> {
+    if !s.ready.is_empty() {
+        let best = s
+            .ready
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, p)| {
+                (p.state.layer(), phase_rank(p.state.phase()), std::cmp::Reverse(p.meta.seq))
+            })
+            .map(|(i, _)| i)
+            .unwrap();
+        let lead = s.ready.swap_remove(best);
+        let mut group = vec![lead];
+        if batch_phases {
+            let phase = group[0].state.phase();
+            let layer = group[0].state.layer();
+            if matches!(phase, Phase::Qkv | Phase::Sau) {
+                let mut i = 0;
+                while i < s.ready.len() && group.len() < MAX_PHASE_BATCH {
+                    let p = &s.ready[i];
+                    let fusable = p.state.phase() == phase
+                        && (phase != Phase::Qkv || p.state.layer() == layer);
+                    if fusable {
+                        group.push(s.ready.swap_remove(i));
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+        }
+        return Some(Work::Phases(group));
+    }
+    if s.inflight < max_inflight {
+        if let Some((req, at)) = next_item(s) {
+            s.inflight += 1;
+            return Some(Work::Admit(req, at));
+        }
+    }
+    None
+}
+
+fn phase_rank(p: Phase) -> u8 {
+    match p {
+        Phase::Qkv => 0,
+        Phase::IndexGen => 1,
+        Phase::Sau => 2,
+        Phase::FfnLogits => 3,
+        Phase::Done => 4,
     }
 }
 
@@ -149,13 +524,21 @@ mod tests {
         }
     }
 
+    fn shared(policy: Policy) -> Shared {
+        Shared {
+            queue: VecDeque::new(),
+            ready: Vec::new(),
+            closed: false,
+            aborted: false,
+            inflight: 0,
+            next_seq: 0,
+            policy,
+        }
+    }
+
     #[test]
     fn sjf_picks_shortest() {
-        let mut s = Shared {
-            queue: VecDeque::new(),
-            closed: false,
-            policy: Policy::Sjf,
-        };
+        let mut s = shared(Policy::Sjf);
         s.queue.push_back((req(1, 4096), Instant::now()));
         s.queue.push_back((req(2, 1024), Instant::now()));
         s.queue.push_back((req(3, 2048), Instant::now()));
@@ -165,11 +548,7 @@ mod tests {
 
     #[test]
     fn fcfs_preserves_order() {
-        let mut s = Shared {
-            queue: VecDeque::new(),
-            closed: false,
-            policy: Policy::Fcfs,
-        };
+        let mut s = shared(Policy::Fcfs);
         s.queue.push_back((req(1, 4096), Instant::now()));
         s.queue.push_back((req(2, 1024), Instant::now()));
         let (r, _) = next_item(&mut s).unwrap();
@@ -178,11 +557,53 @@ mod tests {
 
     #[test]
     fn empty_queue_returns_none() {
-        let mut s = Shared {
-            queue: VecDeque::new(),
-            closed: false,
-            policy: Policy::Fcfs,
-        };
+        let mut s = shared(Policy::Fcfs);
         assert!(next_item(&mut s).is_none());
+    }
+
+    #[test]
+    fn admission_respects_inflight_cap() {
+        let mut s = shared(Policy::Fcfs);
+        s.queue.push_back((req(1, 256), Instant::now()));
+        s.inflight = 2;
+        assert!(pick_work(&mut s, 2, true).is_none(), "pipeline full");
+        assert!(matches!(pick_work(&mut s, 3, true), Some(Work::Admit(..))));
+        assert_eq!(s.inflight, 3);
+    }
+
+    #[test]
+    fn ready_states_win_over_admission() {
+        // a parked state must be stepped before a new request is admitted
+        let mut s = shared(Policy::Fcfs);
+        s.queue.push_back((req(7, 256), Instant::now()));
+        let engine =
+            Engine::new_native(EngineConfig::new_native(crate::config::TINY.clone())).unwrap();
+        let state = engine
+            .prefill_start(3, &PromptSpec { kind: PromptKind::Random, tokens: 128, seed: 1 }
+                .generate())
+            .unwrap();
+        s.ready.push(Pending {
+            state,
+            meta: ReqMeta {
+                seq: 0,
+                submitted_at: Instant::now(),
+                queue_us: 0.0,
+                parked_at: Instant::now(),
+                pipeline_wait_us: 0.0,
+            },
+        });
+        s.inflight = 1;
+        match pick_work(&mut s, 4, true) {
+            Some(Work::Phases(group)) => {
+                assert_eq!(group.len(), 1);
+                assert_eq!(group[0].state.request_id, 3);
+            }
+            other => panic!("expected a phase step, got {}", match other {
+                Some(Work::Admit(..)) => "admission",
+                _ => "nothing",
+            }),
+        }
+        // queue untouched
+        assert_eq!(s.queue.len(), 1);
     }
 }

@@ -9,7 +9,10 @@
 //!
 //! Public API tour:
 //!  * [`coordinator::Engine`] — end-to-end chunked prefill, over the AOT
-//!    artifacts (`pjrt` feature) or artifact-free on the native kernels.
+//!    artifacts (`pjrt` feature) or artifact-free on the native kernels;
+//!    also exposed as resumable per-layer phases ([`coordinator::Phase`]).
+//!  * [`coordinator::Server`] — phase-pipelined multi-request serving on
+//!    one shared thread budget ([`util::pool::PoolBudget`]).
 //!  * [`tensor::tile`] + [`util::pool`] — the block-major kernel layer:
 //!    cache-blocked W8A8/f32 kernels and the shared worker pool
 //!    (`FASTP_THREADS`); results are bit-identical for any thread count.

@@ -12,9 +12,9 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
 use fast_prefill::config::{self, by_name, FlexParams};
-use fast_prefill::coordinator::{Engine, EngineConfig, Policy, Server};
+use fast_prefill::coordinator::{Engine, EngineConfig, Policy, Server, ServerOptions};
 use fast_prefill::gpu_model::simulate_gpu_prefill;
-use fast_prefill::metrics::fmt_ctx;
+use fast_prefill::metrics::{fmt_ctx, ServeSample, ServeSummary};
 use fast_prefill::sim::{resource_report, simulate_prefill, synth_model_indices, HeadMix};
 use fast_prefill::util::table::{fnum, Table};
 use fast_prefill::workload::prompts::{PromptKind, PromptSpec, RequestTrace};
@@ -91,7 +91,9 @@ COMMANDS
            tiled parallel kernels (no artifacts needed; threads default
            to FASTP_THREADS or available parallelism)
   serve    --model tiny --requests 8 --tokens 1024 [--workers 2]
-           [--policy fcfs|sjf]   serve a synthetic trace, report latencies
+           [--policy fcfs|sjf] [--serial true] [--total-threads N]
+           serve a synthetic trace (phase-pipelined by default; --serial
+           is the end-to-end baseline), report latencies + phase waits
   sim      --model llama3.2-3b --tokens 131072 [--seed N]
            FPGA simulator + GPU cost model for one point
   table2   FPGA resource utilization (paper Table II)
@@ -169,24 +171,35 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         "sjf" => Policy::Sjf,
         p => bail!("unknown policy {p}"),
     };
+    let mut opts = ServerOptions::new(workers, policy);
+    if flag(&flags, "serial", false)? {
+        opts.pipelined = false;
+    }
+    opts.total_threads = flag(&flags, "total-threads", 0usize)?;
     let cfg = engine_config(&flags)?;
     let trace = RequestTrace::generate(n_req, tokens, 1000, flag(&flags, "seed", 7u64)?);
-    println!("serving {n_req} requests x {tokens} tokens on {workers} workers ({policy:?})...");
+    println!(
+        "serving {n_req} requests x {tokens} tokens on {workers} workers ({policy:?}, {})...",
+        if opts.pipelined { "phase-pipelined" } else { "serial" }
+    );
     let t0 = std::time::Instant::now();
-    let server = Server::start(dir.into(), cfg, workers, policy)?;
+    let server = Server::start_with(dir.into(), cfg, opts)?;
     for r in trace.requests {
         server.submit(r);
     }
     let completions = server.drain()?;
     let wall = t0.elapsed().as_secs_f64();
-    let mut t = Table::new(&["req", "TTFT (ms)", "queue (ms)", "e2e (ms)", "density %", "hit %"]);
-    let mut e2e: Vec<f64> = Vec::new();
+    let mut t = Table::new(&[
+        "req", "TTFT (ms)", "queue (ms)", "phase-wait (ms)", "e2e (ms)", "density %", "hit %",
+    ]);
+    let mut samples: Vec<ServeSample> = Vec::new();
     for c in &completions {
-        e2e.push(c.e2e_us / 1e3);
+        samples.push(c.sample());
         t.row(&[
             c.request_id.to_string(),
             fnum(c.run.metrics.ttft_us / 1e3),
             fnum(c.queue_us / 1e3),
+            fnum(c.pipeline_wait_us / 1e3),
             fnum(c.e2e_us / 1e3),
             fnum(c.run.metrics.density * 100.0),
             fnum(c.run.metrics.cache_hit_rate * 100.0),
@@ -194,11 +207,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     }
     t.print();
     let total_tokens = (n_req * tokens) as f64;
-    println!("wall {:.2}s  throughput {:.0} tok/s  mean e2e {:.0} ms  p95 {:.0} ms",
-        wall,
-        total_tokens / wall,
-        fast_prefill::util::stats::mean(&e2e),
-        fast_prefill::util::stats::percentile(&e2e, 95.0));
+    let summary = ServeSummary::from_samples(&samples);
+    println!("wall {:.2}s  throughput {:.0} tok/s", wall, total_tokens / wall);
+    println!("{}", summary.render("summary"));
     Ok(())
 }
 

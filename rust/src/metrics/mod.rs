@@ -34,6 +34,72 @@ impl PrefillMetrics {
     }
 }
 
+/// One served request's latency decomposition (all in us). The serving
+/// layer converts its completions into these samples.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeSample {
+    pub ttft_us: f64,
+    pub queue_us: f64,
+    /// Time parked between phases waiting for a worker (pipeline stall).
+    pub pipeline_wait_us: f64,
+    pub e2e_us: f64,
+}
+
+/// Aggregate serving statistics for one scheduling mode.
+#[derive(Clone, Debug, Default)]
+pub struct ServeSummary {
+    pub n: usize,
+    pub ttft_mean_ms: f64,
+    pub ttft_p95_ms: f64,
+    pub queue_mean_ms: f64,
+    pub pipeline_wait_mean_ms: f64,
+    pub e2e_mean_ms: f64,
+    pub e2e_p95_ms: f64,
+}
+
+impl ServeSummary {
+    pub fn from_samples(samples: &[ServeSample]) -> ServeSummary {
+        use crate::util::stats::{mean, percentile};
+        let ttft: Vec<f64> = samples.iter().map(|s| s.ttft_us / 1e3).collect();
+        let queue: Vec<f64> = samples.iter().map(|s| s.queue_us / 1e3).collect();
+        let wait: Vec<f64> = samples.iter().map(|s| s.pipeline_wait_us / 1e3).collect();
+        let e2e: Vec<f64> = samples.iter().map(|s| s.e2e_us / 1e3).collect();
+        ServeSummary {
+            n: samples.len(),
+            ttft_mean_ms: mean(&ttft),
+            ttft_p95_ms: percentile(&ttft, 95.0),
+            queue_mean_ms: mean(&queue),
+            pipeline_wait_mean_ms: mean(&wait),
+            e2e_mean_ms: mean(&e2e),
+            e2e_p95_ms: percentile(&e2e, 95.0),
+        }
+    }
+
+    /// One-line report for banners/examples.
+    pub fn render(&self, label: &str) -> String {
+        format!(
+            "{label}: {} req | TTFT mean {:.0} ms p95 {:.0} ms | queue mean {:.0} ms | \
+             phase-wait mean {:.0} ms | e2e mean {:.0} ms p95 {:.0} ms",
+            self.n,
+            self.ttft_mean_ms,
+            self.ttft_p95_ms,
+            self.queue_mean_ms,
+            self.pipeline_wait_mean_ms,
+            self.e2e_mean_ms,
+            self.e2e_p95_ms
+        )
+    }
+
+    /// Mean-TTFT saving of `self` relative to a baseline summary, in
+    /// percent (positive = self is faster).
+    pub fn ttft_saving_pct(&self, baseline: &ServeSummary) -> f64 {
+        if baseline.ttft_mean_ms <= 0.0 {
+            return 0.0;
+        }
+        (1.0 - self.ttft_mean_ms / baseline.ttft_mean_ms) * 100.0
+    }
+}
+
 /// A simulated/estimated platform result for one (model, context) point.
 #[derive(Clone, Debug)]
 pub struct PlatformPoint {
@@ -116,6 +182,26 @@ mod tests {
         assert!(s.contains("4K"));
         assert!(s.contains("FPGA (ms)"));
         assert!(s.lines().count() == 5);
+    }
+
+    #[test]
+    fn serve_summary_aggregates() {
+        let samples: Vec<ServeSample> = (1..=4)
+            .map(|i| ServeSample {
+                ttft_us: i as f64 * 1000.0,
+                queue_us: 500.0,
+                pipeline_wait_us: 100.0,
+                e2e_us: i as f64 * 1000.0 + 500.0,
+            })
+            .collect();
+        let s = ServeSummary::from_samples(&samples);
+        assert_eq!(s.n, 4);
+        assert!((s.ttft_mean_ms - 2.5).abs() < 1e-9);
+        assert!((s.queue_mean_ms - 0.5).abs() < 1e-9);
+        assert!((s.pipeline_wait_mean_ms - 0.1).abs() < 1e-9);
+        let faster = ServeSummary { ttft_mean_ms: 2.0, ..s.clone() };
+        assert!((faster.ttft_saving_pct(&s) - 20.0).abs() < 1e-9);
+        assert!(s.render("x").contains("4 req"));
     }
 
     #[test]

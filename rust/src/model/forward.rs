@@ -369,6 +369,96 @@ pub fn sau_layer(
     attn_chunks
 }
 
+/// Batched SAU over a merged [`BatchSchedule`]: every lane's live wave
+/// accumulator states fan out in **one** pool map per batch wave, so
+/// co-resident requests share the sweep (and the worker slots) instead of
+/// running back-to-back. Each (lane, head, q-block) state still folds its
+/// KV blocks in ascending order with that lane's own chunk data — exactly
+/// the solo [`sau_layer`] arithmetic — so per-lane outputs are
+/// bit-identical to running the lanes one at a time.
+pub fn sau_layer_batch(
+    ctx: &KernelCtx,
+    cfg: &crate::config::ModelConfig,
+    chunk_lanes: &[&[ChunkQkv]],
+    batch: &crate::coordinator::joblist::BatchSchedule,
+) -> Vec<Vec<MatF32>> {
+    assert_eq!(chunk_lanes.len(), batch.lanes, "chunk lanes vs schedule lanes");
+    let mut attn_lanes: Vec<Vec<MatF32>> = batch
+        .n_blocks
+        .iter()
+        .map(|&n| (0..n).map(|_| MatF32::zeros(BLOCK, cfg.q_dim())).collect())
+        .collect();
+    for wave in &batch.waves {
+        // per-lane state bases: lane's states are (head, q_local) banks
+        let mut base = vec![0usize; batch.lanes];
+        let mut nstates = 0usize;
+        for (lane, r) in wave.q_ranges.iter().enumerate() {
+            base[lane] = nstates;
+            if let Some((qs, qe)) = r {
+                nstates += cfg.n_heads * (qe - qs) as usize;
+            }
+        }
+        let state_of = |j: &crate::coordinator::joblist::BatchJob| -> usize {
+            let (qs, qe) = wave.q_ranges[j.lane as usize].expect("job on live lane");
+            debug_assert!((qs..qe).contains(&j.qblock));
+            base[j.lane as usize]
+                + j.head as usize * (qe - qs) as usize
+                + (j.qblock - qs) as usize
+        };
+        // invert merged block-major lists into per-state ascending KV lists
+        let mut state_kvs: Vec<Vec<u32>> = vec![Vec::new(); nstates];
+        for bj in &wave.blocks {
+            for job in &bj.jobs {
+                state_kvs[state_of(job)].push(bj.block);
+            }
+        }
+        let mut states: Vec<(usize, usize, usize, usize)> = Vec::new(); // (lane, h, qb, st)
+        for (lane, r) in wave.q_ranges.iter().enumerate() {
+            let Some((qs, qe)) = r else { continue };
+            let wq = (qe - qs) as usize;
+            for h in 0..cfg.n_heads {
+                for ql in 0..wq {
+                    let st = base[lane] + h * wq + ql;
+                    if !state_kvs[st].is_empty() {
+                        states.push((lane, h, *qs as usize + ql, st));
+                    }
+                }
+            }
+        }
+        let outs: Vec<MatF32> = ctx.pool.map(states.len(), |si| {
+            let (lane, h, qb, st) = states[si];
+            let chunks = chunk_lanes[lane];
+            let g = h / cfg.group_size();
+            let mut m = vec![-1e30f32; BLOCK];
+            let mut l = vec![0.0f32; BLOCK];
+            let mut acc = MatF32::zeros(BLOCK, cfg.d_head);
+            for &kb in &state_kvs[st] {
+                let kb = kb as usize;
+                attn_step_w8a8(
+                    &chunks[qb].q[h],
+                    chunks[qb].qs,
+                    &chunks[kb].k[g],
+                    chunks[kb].ks,
+                    &chunks[kb].v[g],
+                    chunks[kb].vs,
+                    &mut m,
+                    &mut l,
+                    &mut acc,
+                    kb == qb,
+                );
+            }
+            attn_finalize(&l, &acc)
+        });
+        for ((lane, h, qb, _), out) in states.into_iter().zip(outs) {
+            for r in 0..BLOCK {
+                attn_lanes[lane][qb].row_mut(r)[h * cfg.d_head..(h + 1) * cfg.d_head]
+                    .copy_from_slice(out.row(r));
+            }
+        }
+    }
+    attn_lanes
+}
+
 /// Reference chunked prefill with the default kernel context
 /// (`FASTP_THREADS` workers). `flex: None` => dense causal attention.
 pub fn prefill_reference(
@@ -518,6 +608,50 @@ mod tests {
                     assert_eq!(ia.pattern, ib.pattern);
                     assert_eq!(ia.blocks, ib.blocks);
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_sau_bit_identical_to_solo_lanes() {
+        use crate::coordinator::joblist::build_schedule_batch;
+        let w = ModelWeights::generate(&TINY, 31);
+        let ctx = KernelCtx::with_threads(3);
+        let flex = FlexParams::default();
+        // two co-resident "requests" with different context lengths
+        let lanes: Vec<(Vec<ChunkQkv>, Vec<HeadIndex>, usize)> = [(384usize, 41u64), (256, 42)]
+            .iter()
+            .map(|&(toks, seed)| {
+                let t = tokens(toks, seed);
+                let hidden = w.embed_tokens(&t);
+                let n = toks / BLOCK;
+                let chunks: Vec<ChunkQkv> = (0..n)
+                    .map(|ci| {
+                        let x = hidden.slice_rows(ci * BLOCK, (ci + 1) * BLOCK);
+                        qkv_chunk(&ctx, &w, 0, &x, (ci * BLOCK) as i32)
+                    })
+                    .collect();
+                let indices = sigu_indices(&ctx, &TINY, &chunks, n, &flex);
+                (chunks, indices, n)
+            })
+            .collect();
+        let schedules: Vec<_> = lanes
+            .iter()
+            .map(|(_, idx, _)| build_schedule(idx, TINY.group_size(), 2))
+            .collect();
+        let solo: Vec<Vec<MatF32>> = lanes
+            .iter()
+            .zip(&schedules)
+            .map(|((chunks, _, n), s)| sau_layer(&ctx, &TINY, chunks, s, *n))
+            .collect();
+        let batch = build_schedule_batch(&schedules.iter().collect::<Vec<_>>());
+        batch.check_invariants(&schedules.iter().collect::<Vec<_>>()).unwrap();
+        let chunk_lanes: Vec<&[ChunkQkv]> = lanes.iter().map(|(c, _, _)| c.as_slice()).collect();
+        let batched = sau_layer_batch(&ctx, &TINY, &chunk_lanes, &batch);
+        for (lane, (b, s)) in batched.iter().zip(&solo).enumerate() {
+            assert_eq!(b.len(), s.len(), "lane {lane}");
+            for (bm, sm) in b.iter().zip(s) {
+                assert_eq!(bm.data, sm.data, "lane {lane}");
             }
         }
     }

@@ -49,6 +49,12 @@ impl KernelCtx {
         KernelCtx { pool: WorkerPool::single_threaded(), tile: TILE }
     }
 
+    /// Context over an explicit pool (e.g. a budget-shared serving pool),
+    /// default tile size.
+    pub fn with_pool(pool: WorkerPool) -> KernelCtx {
+        KernelCtx { pool, tile: TILE }
+    }
+
     pub fn threads(&self) -> usize {
         self.pool.threads()
     }

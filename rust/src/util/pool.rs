@@ -9,11 +9,95 @@
 //! property tests and by the engine's FASTP_THREADS=1 vs N test).
 //!
 //! Sizing: `FASTP_THREADS` env var; default = available parallelism.
+//!
+//! Multi-engine serving shares one machine-wide budget through
+//! [`PoolBudget`]: each `map` call *leases* up to `min(threads, n_jobs)`
+//! slots for its duration, so concurrent engines split the cores
+//! dynamically instead of oversubscribing `n_engines x pool_size` threads.
+//! The lease size only changes how many workers claim jobs, never the
+//! results (see the bit-identity contract above).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Environment variable that bounds the worker count.
 pub const THREADS_ENV: &str = "FASTP_THREADS";
+
+/// A machine-wide compute-slot budget shared by several [`WorkerPool`]s.
+///
+/// Admission is blocking but minimal: a lease waits only until *one* slot
+/// is free, then takes as many as are available (capped by the request).
+/// Leases are released when the `map` call finishes, so waits are bounded
+/// by in-flight kernel phases. Jobs must not issue nested `map` calls on a
+/// budget-backed pool (the outer lease would starve the inner one); no
+/// kernel-layer job does.
+#[derive(Debug)]
+pub struct PoolBudget {
+    total: usize,
+    free: Mutex<usize>,
+    cond: Condvar,
+}
+
+impl PoolBudget {
+    /// A budget of `total` slots (clamped to >= 1).
+    pub fn new(total: usize) -> Arc<PoolBudget> {
+        let total = total.max(1);
+        Arc::new(PoolBudget { total, free: Mutex::new(total), cond: Condvar::new() })
+    }
+
+    /// Budget sized by `FASTP_THREADS` (default: available parallelism).
+    pub fn from_env() -> Arc<PoolBudget> {
+        PoolBudget::new(env_threads())
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Slots currently unleased (snapshot; for tests/diagnostics).
+    pub fn available(&self) -> usize {
+        *self.free.lock().unwrap()
+    }
+
+    /// Block until at least one slot is free, then take `min(want, free)`.
+    fn acquire(&self, want: usize) -> usize {
+        let want = want.max(1);
+        let mut free = self.free.lock().unwrap();
+        while *free == 0 {
+            free = self.cond.wait(free).unwrap();
+        }
+        let granted = want.min(*free);
+        *free -= granted;
+        granted
+    }
+
+    fn release(&self, n: usize) {
+        let mut free = self.free.lock().unwrap();
+        *free += n;
+        drop(free);
+        self.cond.notify_all();
+    }
+}
+
+/// RAII slot lease: releases on drop (also on unwind out of `map`).
+struct Lease<'a> {
+    budget: &'a PoolBudget,
+    n: usize,
+}
+
+impl Drop for Lease<'_> {
+    fn drop(&mut self) {
+        self.budget.release(self.n);
+    }
+}
+
+fn env_threads() -> usize {
+    std::env::var(THREADS_ENV)
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
 
 /// A fixed-width pool of scoped worker threads.
 ///
@@ -24,33 +108,42 @@ pub const THREADS_ENV: &str = "FASTP_THREADS";
 #[derive(Clone, Debug)]
 pub struct WorkerPool {
     threads: usize,
+    /// When set, every `map` call leases its workers from this budget.
+    budget: Option<Arc<PoolBudget>>,
 }
 
 impl WorkerPool {
     /// Pool sized by `FASTP_THREADS`, defaulting to available parallelism.
     pub fn from_env() -> WorkerPool {
-        let threads = std::env::var(THREADS_ENV)
-            .ok()
-            .and_then(|v| v.trim().parse::<usize>().ok())
-            .filter(|&n| n > 0)
-            .unwrap_or_else(|| {
-                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-            });
-        WorkerPool { threads }
+        WorkerPool { threads: env_threads(), budget: None }
     }
 
     /// Pool with an explicit worker count (clamped to >= 1).
     pub fn with_threads(n: usize) -> WorkerPool {
-        WorkerPool { threads: n.max(1) }
+        WorkerPool { threads: n.max(1), budget: None }
     }
 
     /// Single-threaded pool (jobs run inline on the caller).
     pub fn single_threaded() -> WorkerPool {
-        WorkerPool { threads: 1 }
+        WorkerPool { threads: 1, budget: None }
+    }
+
+    /// Pool that leases its workers from a shared [`PoolBudget`]: each
+    /// `map` admits `min(threads, n_jobs)` wanted slots and runs with
+    /// however many the budget grants (>= 1). Used by the serving path so
+    /// co-resident engines split `FASTP_THREADS` cores instead of each
+    /// spawning a full-size pool.
+    pub fn shared(threads: usize, budget: Arc<PoolBudget>) -> WorkerPool {
+        WorkerPool { threads: threads.max(1), budget: Some(budget) }
     }
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// The shared budget this pool leases from, if any.
+    pub fn budget(&self) -> Option<&Arc<PoolBudget>> {
+        self.budget.as_ref()
     }
 
     /// Run `f(0..n_jobs)` across the pool and return the results in job
@@ -63,7 +156,20 @@ impl WorkerPool {
         T: Send,
         F: Fn(usize) -> T + Sync,
     {
-        let workers = self.threads.min(n_jobs);
+        if n_jobs == 0 {
+            return Vec::new();
+        }
+        // Lease compute slots for the duration of this call. The caller
+        // thread does the work itself (inline or blocked on the scope), so
+        // the lease covers it too: `workers` threads compute in total.
+        let _lease = self.budget.as_deref().map(|b| {
+            let n = b.acquire(self.threads.min(n_jobs));
+            Lease { budget: b, n }
+        });
+        let workers = match &_lease {
+            Some(l) => l.n,
+            None => self.threads.min(n_jobs),
+        };
         if workers <= 1 {
             return (0..n_jobs).map(f).collect();
         }
@@ -168,5 +274,70 @@ mod tests {
             hits.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(hits.load(Ordering::Relaxed), 25);
+    }
+
+    #[test]
+    fn budget_grants_at_most_free_slots() {
+        let b = PoolBudget::new(3);
+        assert_eq!(b.total(), 3);
+        let g1 = b.acquire(2);
+        assert_eq!(g1, 2);
+        let g2 = b.acquire(5); // only 1 left
+        assert_eq!(g2, 1);
+        b.release(g1);
+        b.release(g2);
+        assert_eq!(b.available(), 3);
+    }
+
+    #[test]
+    fn shared_pool_results_match_private_pool() {
+        let work = |i: usize| -> u64 {
+            let mut acc = 7u64;
+            for k in 0..(i % 5) * 400 + 5 {
+                acc = acc.wrapping_mul(33).wrapping_add(k as u64 ^ i as u64);
+            }
+            acc
+        };
+        let seq = WorkerPool::single_threaded().map(48, work);
+        let budget = PoolBudget::new(4);
+        let shared = WorkerPool::shared(4, Arc::clone(&budget));
+        assert_eq!(shared.map(48, work), seq);
+        assert_eq!(budget.available(), 4, "lease released after map");
+    }
+
+    #[test]
+    fn concurrent_shared_pools_never_exceed_budget() {
+        let budget = PoolBudget::new(4);
+        let peak = Arc::new(AtomicUsize::new(0));
+        let live = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                let pool = WorkerPool::shared(4, Arc::clone(&budget));
+                let peak = Arc::clone(&peak);
+                let live = Arc::clone(&live);
+                s.spawn(move || {
+                    for _ in 0..8 {
+                        pool.for_each(16, |_| {
+                            let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                            peak.fetch_max(now, Ordering::SeqCst);
+                            std::thread::sleep(std::time::Duration::from_micros(50));
+                            live.fetch_sub(1, Ordering::SeqCst);
+                        });
+                    }
+                });
+            }
+        });
+        // each map's lease covers all its computing threads, so no more
+        // than `total` jobs can execute at any instant
+        assert!(peak.load(Ordering::SeqCst) <= 4, "peak {}", peak.load(Ordering::SeqCst));
+        assert_eq!(budget.available(), 4);
+    }
+
+    #[test]
+    fn budget_pool_empty_map_does_not_lease() {
+        let budget = PoolBudget::new(1);
+        let pool = WorkerPool::shared(1, Arc::clone(&budget));
+        assert_eq!(pool.map(0, |i| i), Vec::<usize>::new());
+        assert_eq!(budget.available(), 1);
     }
 }

@@ -121,6 +121,39 @@ impl RequestTrace {
             .collect();
         RequestTrace { requests }
     }
+
+    /// Like [`RequestTrace::generate`], but each request's context length
+    /// is drawn from `token_choices` — the mixed-length contention trace
+    /// the pipelined server is measured on (short requests expose SJF and
+    /// phase-overlap behaviour that uniform lengths hide).
+    pub fn generate_mixed(
+        n_requests: usize,
+        token_choices: &[usize],
+        mean_gap_us: u64,
+        seed: u64,
+    ) -> RequestTrace {
+        assert!(!token_choices.is_empty());
+        let mut rng = Prng::new(seed);
+        let kinds =
+            [PromptKind::Random, PromptKind::Anchored, PromptKind::Local, PromptKind::Mixed];
+        let mut t = 0u64;
+        let requests = (0..n_requests)
+            .map(|i| {
+                let u = rng.f32().max(1e-6) as f64;
+                t += (-(u.ln()) * mean_gap_us as f64) as u64;
+                TraceRequest {
+                    id: i as u64,
+                    spec: PromptSpec {
+                        kind: kinds[rng.below(kinds.len())],
+                        tokens: token_choices[rng.below(token_choices.len())],
+                        seed: seed.wrapping_mul(31).wrapping_add(i as u64),
+                    },
+                    arrival_us: t,
+                }
+            })
+            .collect();
+        RequestTrace { requests }
+    }
 }
 
 #[cfg(test)]
@@ -156,6 +189,26 @@ mod tests {
             }
         }
         assert!(max_run >= 16, "max run {max_run}");
+    }
+
+    #[test]
+    fn mixed_trace_draws_from_choices() {
+        let choices = [256usize, 512, 1024];
+        let t = RequestTrace::generate_mixed(24, &choices, 1000, 11);
+        assert_eq!(t.requests.len(), 24);
+        for r in &t.requests {
+            assert!(choices.contains(&r.spec.tokens), "{}", r.spec.tokens);
+        }
+        // determinism per seed
+        let u = RequestTrace::generate_mixed(24, &choices, 1000, 11);
+        for (a, b) in t.requests.iter().zip(&u.requests) {
+            assert_eq!(a.spec.tokens, b.spec.tokens);
+            assert_eq!(a.spec.seed, b.spec.seed);
+        }
+        // with 24 draws over 3 choices, at least two distinct lengths
+        let distinct: std::collections::HashSet<usize> =
+            t.requests.iter().map(|r| r.spec.tokens).collect();
+        assert!(distinct.len() >= 2);
     }
 
     #[test]

@@ -123,6 +123,61 @@ fn cacheless_native_engine_same_numerics_different_stats() {
 }
 
 #[test]
+fn phase_stepping_matches_monolithic_prefill() {
+    // the resumable phase API is the monolithic prefill, one phase at a
+    // time — bit-identical outputs
+    let toks = tokens(384, 11);
+    let mut eng = Engine::new_native(native_cfg()).unwrap();
+    let mono = eng.prefill(0, &toks).unwrap();
+
+    let mut st = eng.prefill_start(0, &toks).unwrap();
+    // first layer through the named phase methods...
+    eng.phase_qkv(&mut st).unwrap();
+    eng.phase_index_gen(&mut st).unwrap();
+    eng.phase_sau(&mut st).unwrap();
+    // ...then generic stepping to completion
+    let run = loop {
+        if let Some(run) = eng.phase_step(&mut st).unwrap() {
+            break run;
+        }
+    };
+    assert_eq!(run.first_token, mono.first_token);
+    assert_eq!(run.logits_last, mono.logits_last);
+    assert_eq!(run.hidden_last_chunk, mono.hidden_last_chunk);
+    assert_eq!(run.metrics.jobs, mono.metrics.jobs);
+}
+
+#[test]
+fn fused_phase_groups_match_solo_prefill() {
+    // two co-resident requests stepped as one group: QKV fuses per layer,
+    // SAU fuses across the pair — outputs must equal solo prefills
+    let ta = tokens(384, 12);
+    let tb = tokens(256, 13);
+    let mut eng = Engine::new_native(native_cfg()).unwrap();
+    let solo_a = eng.prefill(0, &ta).unwrap();
+    let solo_b = eng.prefill(1, &tb).unwrap();
+
+    let mut states =
+        vec![eng.prefill_start(0, &ta).unwrap(), eng.prefill_start(1, &tb).unwrap()];
+    let runs = loop {
+        let out = eng.phase_step_group(&mut states).unwrap();
+        if out.iter().all(|r| r.is_some()) {
+            break out;
+        }
+        // same layer count => the pair walks phases in lock-step
+        assert!(out.iter().all(|r| r.is_none()));
+    };
+    let run_a = runs[0].as_ref().unwrap();
+    let run_b = runs[1].as_ref().unwrap();
+    assert_eq!(run_a.first_token, solo_a.first_token);
+    assert_eq!(run_a.logits_last, solo_a.logits_last);
+    assert_eq!(run_a.hidden_last_chunk, solo_a.hidden_last_chunk);
+    assert_eq!(run_b.first_token, solo_b.first_token);
+    assert_eq!(run_b.logits_last, solo_b.logits_last);
+    assert_eq!(run_b.hidden_last_chunk, solo_b.hidden_last_chunk);
+}
+
+#[test]
 fn native_server_serves_requests_without_artifacts() {
     // multi-worker serving over the fully-native engine: no artifacts,
     // no pjrt feature, just the tiled parallel kernel core

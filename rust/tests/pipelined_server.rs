@@ -1,0 +1,152 @@
+//! Phase-pipelined serving: under contention (2-4 in-flight requests,
+//! mixed context lengths, FCFS and SJF, fused phase batches) every
+//! request's output must be **bit-identical** to a solo
+//! `Engine::prefill`, and the whole server must be deterministic across
+//! `FASTP_THREADS`-style thread budgets. Runs fully native — no
+//! artifacts, every tier-1 environment.
+
+use fast_prefill::config::TINY;
+use fast_prefill::coordinator::{
+    Completion, Engine, EngineConfig, Policy, PrefillRun, Server, ServerOptions,
+};
+use fast_prefill::workload::prompts::{PromptKind, PromptSpec, TraceRequest};
+
+fn native_cfg() -> EngineConfig {
+    let mut cfg = EngineConfig::new_native(TINY.clone());
+    cfg.weight_seed = 4242;
+    cfg
+}
+
+fn spec(tokens: usize, seed: u64) -> PromptSpec {
+    PromptSpec { kind: PromptKind::Mixed, tokens, seed }
+}
+
+/// The contention trace: mixed context lengths, distinct seeds.
+fn mixed_requests() -> Vec<TraceRequest> {
+    [(0u64, 256usize), (1, 512), (2, 384), (3, 128)]
+        .into_iter()
+        .map(|(id, tokens)| TraceRequest { id, spec: spec(tokens, 900 + id), arrival_us: 0 })
+        .collect()
+}
+
+/// Solo (monolithic) runs of the same requests on a fresh engine.
+fn solo_runs(reqs: &[TraceRequest]) -> Vec<PrefillRun> {
+    let mut eng = Engine::new_native(native_cfg()).unwrap();
+    reqs.iter().map(|r| eng.prefill(r.id, &r.spec.generate()).unwrap()).collect()
+}
+
+fn serve_with(opts: ServerOptions) -> Vec<Completion> {
+    let server = Server::start_with("artifacts".into(), native_cfg(), opts).unwrap();
+    for r in mixed_requests() {
+        server.submit(r);
+    }
+    server.drain().unwrap()
+}
+
+fn assert_runs_identical(a: &PrefillRun, b: &PrefillRun, tag: &str) {
+    assert_eq!(a.first_token, b.first_token, "{tag}: first token");
+    assert_eq!(a.logits_last, b.logits_last, "{tag}: logits");
+    assert_eq!(a.hidden_last_chunk, b.hidden_last_chunk, "{tag}: hidden");
+    assert_eq!(a.metrics.jobs, b.metrics.jobs, "{tag}: SAU jobs");
+    assert_eq!(a.index_sets.len(), b.index_sets.len(), "{tag}: layers");
+    for (la, lb) in a.index_sets.iter().zip(&b.index_sets) {
+        for (ia, ib) in la.iter().zip(lb) {
+            assert_eq!(ia.pattern, ib.pattern, "{tag}: pattern");
+            assert_eq!(ia.blocks, ib.blocks, "{tag}: index blocks");
+        }
+    }
+}
+
+#[test]
+fn pipelined_outputs_bit_identical_to_solo_prefill() {
+    let reqs = mixed_requests();
+    let solo = solo_runs(&reqs);
+    for policy in [Policy::Fcfs, Policy::Sjf] {
+        let done = serve_with(ServerOptions::new(2, policy));
+        assert_eq!(done.len(), reqs.len());
+        for (c, s) in done.iter().zip(&solo) {
+            assert_eq!(c.request_id, s.metrics.request_id);
+            assert_runs_identical(&c.run, s, &format!("{policy:?} req {}", c.request_id));
+            assert_eq!(c.run.metrics.context_tokens, s.metrics.context_tokens);
+            assert!(c.e2e_us >= c.run.metrics.ttft_us - 1.0, "e2e covers ttft");
+        }
+    }
+}
+
+#[test]
+fn pipelined_deterministic_across_thread_budgets() {
+    // per-request outputs must not depend on the shared kernel budget
+    // (the FASTP_THREADS determinism assertion, via total_threads)
+    let mut base = ServerOptions::new(2, Policy::Fcfs);
+    base.total_threads = 1;
+    let one = serve_with(base);
+    for threads in [2usize, 4, 8] {
+        let mut opts = ServerOptions::new(2, Policy::Fcfs);
+        opts.total_threads = threads;
+        let n = serve_with(opts);
+        assert_eq!(one.len(), n.len());
+        for (a, b) in one.iter().zip(&n) {
+            assert_eq!(a.request_id, b.request_id);
+            assert_runs_identical(&a.run, &b.run, &format!("budget {threads}"));
+        }
+    }
+}
+
+#[test]
+fn pipelined_matches_serial_scheduler() {
+    let serial = serve_with(ServerOptions::serial(2, Policy::Sjf));
+    let pipelined = serve_with(ServerOptions::new(2, Policy::Sjf));
+    assert_eq!(serial.len(), pipelined.len());
+    for (a, b) in serial.iter().zip(&pipelined) {
+        assert_eq!(a.request_id, b.request_id);
+        assert_runs_identical(&a.run, &b.run, "serial vs pipelined");
+        assert_eq!(a.pipeline_wait_us, 0.0, "serial mode has no phase waits");
+    }
+}
+
+#[test]
+fn deeper_pipeline_and_unbatched_phases_do_not_change_outputs() {
+    let solo = solo_runs(&mixed_requests());
+    // 4 in-flight on 4 workers (maximal contention for this trace)
+    let mut deep = ServerOptions::new(4, Policy::Fcfs);
+    deep.max_inflight = 4;
+    // batching off: phase fusion must be an optimization, not a semantic
+    let mut unbatched = ServerOptions::new(2, Policy::Fcfs);
+    unbatched.batch_phases = false;
+    for (tag, opts) in [("deep", deep), ("unbatched", unbatched)] {
+        let done = serve_with(opts);
+        assert_eq!(done.len(), solo.len());
+        for (c, s) in done.iter().zip(&solo) {
+            assert_runs_identical(&c.run, s, tag);
+        }
+    }
+}
+
+#[test]
+fn single_worker_pipeline_preserves_sjf_backlog_order() {
+    // single worker, pre-filled queue: SJF must admit the short requests
+    // first (admission order is policy-driven even when phases pipeline)
+    let server = Server::start_with(
+        "artifacts".into(),
+        native_cfg(),
+        ServerOptions::new(1, Policy::Sjf),
+    )
+    .unwrap();
+    for (id, tokens) in [(0u64, 512usize), (1, 128), (2, 384), (3, 128)] {
+        server.submit(TraceRequest { id, spec: spec(tokens, id), arrival_us: 0 });
+    }
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    let done = server.drain().unwrap();
+    assert_eq!(done.len(), 4);
+    // r1 (128 tokens, submitted before r2) is admitted no later than
+    // r2 (384): whenever both are queued, SJF picks r1 — regardless of
+    // how many requests the worker admitted before the backlog formed
+    let mid = done.iter().find(|c| c.request_id == 2).unwrap();
+    let short = done.iter().find(|c| c.request_id == 1).unwrap();
+    assert!(
+        mid.queue_us >= short.queue_us,
+        "SJF: mid queued {} < short {}",
+        mid.queue_us,
+        short.queue_us
+    );
+}
