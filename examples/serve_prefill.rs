@@ -8,8 +8,10 @@
 //!
 //!     cargo run --release --example serve_prefill
 //!
-//! Flags (positional): [n_requests] [tokens] [workers]
-//! Defaults: 6 requests on 2 workers with mixed context lengths
+//! Flags (positional): [n_requests] [tokens] [workers]; `--closed-loop`
+//! submits the whole trace up front instead of the default **open-loop
+//! replay** (requests arrive at their recorded `arrival_us`, modeling
+//! bursts). Defaults: 6 requests on 2 workers with mixed context lengths
 //! {tokens/2, tokens, 2*tokens} around tokens=2048 (minutes on CPU).
 //! Env: FASTP_SERVE_MODEL picks the model config (default `small100m`;
 //! CI smoke uses `tiny`), FASTP_THREADS bounds the shared budget.
@@ -22,7 +24,7 @@ use fast_prefill::coordinator::{Completion, EngineConfig, Policy, Server, Server
 use fast_prefill::gpu_model::simulate_gpu_prefill;
 use fast_prefill::metrics::{ServeSample, ServeSummary};
 use fast_prefill::model::ModelWeights;
-use fast_prefill::sim::simulate_prefill;
+use fast_prefill::sim::{simulate_prefill, simulate_prefill_batch};
 use fast_prefill::util::table::{fnum, Table};
 use fast_prefill::workload::prompts::RequestTrace;
 
@@ -31,12 +33,18 @@ fn serve(
     weights: &Arc<ModelWeights>,
     trace: &RequestTrace,
     opts: ServerOptions,
+    open_loop: bool,
 ) -> Result<(Vec<Completion>, f64)> {
     let t0 = std::time::Instant::now();
     let server =
         Server::start_with_weights("artifacts".into(), cfg.clone(), opts, Arc::clone(weights))?;
-    for r in trace.requests.clone() {
-        server.submit(r);
+    if open_loop {
+        // honor the trace's arrival times (bursts queue as recorded)
+        server.replay(trace);
+    } else {
+        for r in trace.requests.clone() {
+            server.submit(r);
+        }
     }
     let completions = server.drain()?;
     Ok((completions, t0.elapsed().as_secs_f64()))
@@ -55,6 +63,7 @@ fn main() -> Result<()> {
     let n_requests = args.first().copied().unwrap_or(6);
     let tokens = args.get(1).copied().unwrap_or(2048);
     let workers = args.get(2).copied().unwrap_or(2);
+    let open_loop = !std::env::args().any(|a| a == "--closed-loop");
     let model = std::env::var("FASTP_SERVE_MODEL")
         .ok()
         .and_then(|n| by_name(&n).cloned())
@@ -92,12 +101,13 @@ fn main() -> Result<()> {
     // one generated model shared by both servers (and all their workers)
     let weights = Arc::new(ModelWeights::generate(&cfg.model, cfg.weight_seed));
 
+    println!("arrival mode: {}", if open_loop { "open-loop replay" } else { "closed-loop" });
     // serial baseline first (PR-1 behaviour at equal total threads), then
     // the phase-pipelined scheduler on the same trace
     let (serial, serial_wall) =
-        serve(&cfg, &weights, &trace, ServerOptions::serial(workers, Policy::Sjf))?;
+        serve(&cfg, &weights, &trace, ServerOptions::serial(workers, Policy::Sjf), open_loop)?;
     let (pipelined, pipe_wall) =
-        serve(&cfg, &weights, &trace, ServerOptions::new(workers, Policy::Sjf))?;
+        serve(&cfg, &weights, &trace, ServerOptions::new(workers, Policy::Sjf), open_loop)?;
 
     // bit-identity across schedulers is an invariant, not a hope
     for (a, b) in serial.iter().zip(&pipelined) {
@@ -108,7 +118,7 @@ fn main() -> Result<()> {
 
     let mut t = Table::new(&[
         "req", "tokens", "TTFT (ms)", "queue (ms)", "phase-wait (ms)", "e2e (ms)", "density %",
-        "hit %", "jobs",
+        "hit %", "KV MB", "jobs",
     ]);
     for c in &pipelined {
         t.row(&[
@@ -120,6 +130,7 @@ fn main() -> Result<()> {
             fnum(c.e2e_us / 1e3),
             fnum(c.run.metrics.density * 100.0),
             fnum(c.run.metrics.cache_hit_rate * 100.0),
+            fnum(c.run.metrics.hbm_read_bytes as f64 / 1e6),
             c.run.metrics.jobs.to_string(),
         ]);
     }
@@ -162,6 +173,40 @@ fn main() -> Result<()> {
             g.energy_j,
             g.ttft_ms / f.ttft_ms,
             f.tokens_per_joule() / g.tokens_per_joule()
+        );
+    }
+
+    // batch-merged estimate: co-resident lanes share weight streams and
+    // merge SAU waves through the schedule spine — vs N independent solos
+    let k = pipelined.len().min(3);
+    if k > 1 {
+        let lane_s: Vec<usize> =
+            pipelined[..k].iter().map(|c| c.run.metrics.context_tokens).collect();
+        let lane_sets: Vec<_> =
+            pipelined[..k].iter().map(|c| c.run.index_sets.as_slice()).collect();
+        let u280 = u280_fast_prefill();
+        let batch = simulate_prefill_batch(&u280, &model, &lane_s, &lane_sets);
+        let solo_sum: f64 = pipelined[..k]
+            .iter()
+            .map(|c| {
+                simulate_prefill(&u280, &model, c.run.metrics.context_tokens, &c.run.index_sets)
+                    .ttft_ms
+            })
+            .sum();
+        println!(
+            "U280 batch={k} sim: TTFT {:.1} ms vs {:.1} ms as {} solos ({:.1}% saved) | \
+             HBM read {:.3} GB | per-lane KV MB: {}",
+            batch.combined.ttft_ms,
+            solo_sum,
+            k,
+            (1.0 - batch.combined.ttft_ms / solo_sum.max(1e-9)) * 100.0,
+            batch.combined.traffic.hbm_read_bytes / 1e9,
+            batch
+                .lanes
+                .iter()
+                .map(|l| format!("{:.1}", l.hbm_read_bytes / 1e6))
+                .collect::<Vec<_>>()
+                .join("/")
         );
     }
     Ok(())

@@ -5,7 +5,7 @@
 use fast_prefill::config::{FlexParams, BLOCK, TINY};
 use fast_prefill::coordinator::joblist::build_schedule;
 use fast_prefill::flexprefill::{coverage, scores};
-use fast_prefill::kvcache::{Access, LivenessCache};
+use fast_prefill::kvcache::LivenessCache;
 use fast_prefill::model::forward::{attn_step_w8a8, prefill_reference_ctx};
 use fast_prefill::model::ModelWeights;
 use fast_prefill::quant::{int8_matmul_bt, quant_scale, quantize_with};
@@ -85,17 +85,8 @@ fn main() {
     let r = bench_for("liveness cache full schedule walk", 500, 5, || {
         let mut cache = LivenessCache::new(512, 0.5, 256);
         cache.init_uses(sched.uses.iter().copied());
-        for wave in &sched.waves {
-            for bj in &wave.blocks {
-                let key = fast_prefill::coordinator::cache_key(bj.kv_head, bj.block);
-                if matches!(cache.lookup(key), Access::Miss) {
-                    cache.admit(key);
-                }
-                for _ in 0..bj.jobs.len() {
-                    cache.consume(key);
-                }
-            }
-        }
+        fast_prefill::coordinator::ScheduleWalk::solo(&sched)
+            .drive(std::slice::from_mut(&mut cache));
         black_box(cache.stats());
     });
     println!("{r}");

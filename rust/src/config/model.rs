@@ -48,6 +48,12 @@ impl ModelConfig {
     pub fn kv_bytes(&self, s: usize) -> usize {
         2 * self.n_layers * self.kv_dim() * s
     }
+    /// Bytes of one KV block for one kv head (int8 K + V) — the unit the
+    /// liveness cache, the simulator's HBM pricing and the engine's
+    /// per-request traffic attribution all account in.
+    pub const fn kv_block_bytes(&self) -> usize {
+        2 * BLOCK * self.d_head
+    }
 }
 
 /// Functional config with AOT artifacts: 2-layer toy for tests.

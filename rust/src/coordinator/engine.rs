@@ -16,9 +16,11 @@
 //!    are bit-identical for every `FASTP_THREADS` value.
 //!
 //! Decision logic, coverage selection, job-list bucketization and cache
-//! policy always run natively (the paper's FSM/SFU/comparator logic); the
-//! cache-traffic walk stays sequential in schedule order so cache
-//! statistics are deterministic and backend-independent.
+//! policy always run natively (the paper's FSM/SFU/comparator logic);
+//! cache traffic is driven through the canonical
+//! [`crate::coordinator::walk::ScheduleWalk`] spine — the same walk the
+//! cycle simulator prices — so cache statistics are deterministic,
+//! backend-independent, and engine/simulator-identical by construction.
 //!
 //! Prefill is **resumable**: [`Engine::prefill_start`] yields a
 //! [`PrefillState`] that steps through the per-layer phases
@@ -37,10 +39,11 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::config::{FlexParams, ModelConfig, BLOCK};
 use crate::coordinator::joblist::{
-    build_schedule, build_schedule_batch, cache_key, Schedule, DEFAULT_WAVE_QBLOCKS,
+    build_schedule, build_schedule_batch, Schedule, DEFAULT_WAVE_QBLOCKS,
 };
+use crate::coordinator::walk::ScheduleWalk;
 use crate::flexprefill::{generate_head_index, scores, HeadIndex, HeadPattern, HeadStats};
-use crate::kvcache::{Access, LivenessCache};
+use crate::kvcache::{CacheStats, LivenessCache};
 use crate::metrics::PrefillMetrics;
 use crate::model::forward::{self as fwd, attn_finalize, ChunkQkv};
 use crate::model::ModelWeights;
@@ -329,10 +332,10 @@ impl Engine {
         }
     }
 
-    /// Step a same-phase group of co-resident requests. `Qkv` groups on
-    /// one layer and `Sau` groups run *fused* (one pool fan-out over every
-    /// lane's jobs); anything else steps state by state. Returns per-state
-    /// finished runs.
+    /// Step a same-phase group of co-resident requests. `Qkv` and
+    /// `FfnLogits` groups on one layer and `Sau` groups at any layer run
+    /// *fused* (one pool fan-out over every lane's jobs); anything else
+    /// steps state by state. Returns per-state finished runs.
     pub fn phase_step_group(
         &mut self,
         states: &mut [PrefillState],
@@ -346,6 +349,11 @@ impl Engine {
         if states.len() > 1 && states.iter().all(|s| s.phase == Phase::Sau) {
             self.phase_sau_batch(states)?;
             return Ok(states.iter().map(|_| None).collect());
+        }
+        if states.len() > 1
+            && states.iter().all(|s| s.phase == Phase::FfnLogits && s.layer == states[0].layer)
+        {
+            return self.phase_ffn_logits_batch(states);
         }
         states.iter_mut().map(|st| self.phase_step(st)).collect()
     }
@@ -438,9 +446,7 @@ impl Engine {
         st.metrics.jobs += schedule.total_jobs;
         let mut cache = self.new_layer_cache(st.n, &schedule);
         let attn = self.run_sau_layer(&chunks, &schedule, &mut cache, st.n)?;
-        let cs = cache.stats();
-        st.cache_hits += cs.hits();
-        st.cache_lookups += cs.lookups;
+        self.absorb_cache_stats(st, cache.stats(), schedule.total_jobs);
         st.metrics.t_sau_us += t0.elapsed().as_micros() as f64;
         st.index_sets.push(indices);
         st.attn = Some(attn);
@@ -448,12 +454,15 @@ impl Engine {
         Ok(())
     }
 
-    /// Fused phase 3 for co-resident requests (native SAU path): per-lane
-    /// schedules, use-counters and cache walks are exactly the solo phase
-    /// (stats stay per-request deterministic); the lanes' wave accumulator
-    /// states then fan out together over one merged
-    /// [`build_schedule_batch`] sweep. Lanes may sit at different layers —
-    /// SAU only touches the lane's own chunk data.
+    /// Fused phase 3 for co-resident requests (native SAU path): the
+    /// lanes' wave accumulator states fan out together over one merged
+    /// [`build_schedule_batch`] sweep, and cache traffic for the whole
+    /// group runs as **one batched [`ScheduleWalk`]** over per-lane caches
+    /// — each lane's hit/miss/bypass outcomes are identical to its solo
+    /// walk (the spine's stats-identity contract, pinned by
+    /// `rust/tests/memory_spine.rs`), so per-request stats stay
+    /// deterministic. Lanes may sit at different layers — SAU only touches
+    /// the lane's own chunk data.
     pub fn phase_sau_batch(&mut self, states: &mut [PrefillState]) -> Result<()> {
         let fusable = states.len() > 1
             && self.cfg.native_sau
@@ -467,20 +476,21 @@ impl Engine {
         let t0 = Instant::now();
         let cfg = self.cfg.model.clone();
         let mut schedules = Vec::with_capacity(states.len());
+        let mut caches = Vec::with_capacity(states.len());
         for st in states.iter_mut() {
             let indices = st.indices.take().ok_or_else(|| anyhow!("sau without indices"))?;
             let schedule = build_schedule(&indices, cfg.group_size(), self.cfg.wave_qblocks);
             st.metrics.jobs += schedule.total_jobs;
-            let mut cache = self.new_layer_cache(st.n, &schedule);
-            walk_cache_traffic(&schedule, &mut cache);
-            let cs = cache.stats();
-            st.cache_hits += cs.hits();
-            st.cache_lookups += cs.lookups;
+            caches.push(self.new_layer_cache(st.n, &schedule));
             st.index_sets.push(indices);
             schedules.push(schedule);
         }
         let lane_refs: Vec<&Schedule> = schedules.iter().collect();
         let batch = build_schedule_batch(&lane_refs);
+        ScheduleWalk::batched(&batch).drive(&mut caches);
+        for ((st, cache), sch) in states.iter_mut().zip(&caches).zip(&schedules) {
+            self.absorb_cache_stats(st, cache.stats(), sch.total_jobs);
+        }
         let attns = {
             let chunk_lanes: Vec<&[ChunkQkv]> = states
                 .iter()
@@ -496,6 +506,61 @@ impl Engine {
             st.metrics.t_sau_us += dt;
         }
         Ok(())
+    }
+
+    /// Fused phase 4 for several requests at the same layer (native linear
+    /// path): one pool fan-out over all (request, chunk) o_proj+FFN jobs,
+    /// so the layer's tail weights stream through the cache once for the
+    /// whole batch — completing the batch axis across the full layer body
+    /// (QKV, SAU and now the FFN tail). Per-lane results are bit-identical
+    /// to solo phases; lanes finishing their last layer run final norm +
+    /// logits individually (per-request by definition). Falls back to
+    /// per-state stepping when the group is not fusable. As with the QKV
+    /// and SAU batches (PR 2 convention), the fused **wall-clock** time is
+    /// charged to every lane's `t_ffn_us` — phase timings measure elapsed
+    /// time a request spent in the phase, not an exclusive core share, so
+    /// summing them across co-resident requests over-counts by design.
+    pub fn phase_ffn_logits_batch(
+        &mut self,
+        states: &mut [PrefillState],
+    ) -> Result<Vec<Option<PrefillRun>>> {
+        let fusable = states.len() > 1
+            && self.cfg.native_linear
+            && states.iter().all(|s| s.phase == Phase::FfnLogits && s.layer == states[0].layer);
+        if !fusable {
+            return states.iter_mut().map(|st| self.phase_ffn_logits(st)).collect();
+        }
+        let li = states[0].layer;
+        let t0 = Instant::now();
+        let attns: Vec<Vec<Vec<f32>>> = states
+            .iter_mut()
+            .map(|st| st.attn.take().ok_or_else(|| anyhow!("ffn without sau output")))
+            .collect::<Result<_>>()?;
+        let new_hiddens = {
+            let attn_refs: Vec<&[Vec<f32>]> = attns.iter().map(|a| a.as_slice()).collect();
+            let hidden_refs: Vec<&MatF32> = states.iter().map(|s| &s.hidden).collect();
+            fwd::ffn_tail_batch(&self.ctx, &self.weights, li, &attn_refs, &hidden_refs)
+        };
+        let dt = t0.elapsed().as_micros() as f64;
+        let d = self.cfg.model.d_model;
+        let n_layers = self.cfg.model.n_layers;
+        let mut out = Vec::with_capacity(states.len());
+        for (st, chunks) in states.iter_mut().zip(new_hiddens) {
+            for (ci, x) in chunks.into_iter().enumerate() {
+                st.hidden.data[ci * BLOCK * d..(ci + 1) * BLOCK * d].copy_from_slice(&x.data);
+            }
+            st.metrics.t_ffn_us += dt;
+            st.layer += 1;
+        }
+        for st in states.iter_mut() {
+            if st.layer < n_layers {
+                st.phase = Phase::Qkv;
+                out.push(None);
+            } else {
+                out.push(Some(self.finish(st)?));
+            }
+        }
+        Ok(out)
     }
 
     /// Phase 4: o_proj + FFN tail; advances to the next layer, or — after
@@ -545,16 +610,32 @@ impl Engine {
         })
     }
 
-    /// Per-layer liveness cache seeded with the schedule's use counters.
+    /// Fold one layer's cache outcomes into the request's running hit-rate
+    /// numerators and memory attribution — the same accounting the cycle
+    /// simulator prices over the shared schedule walk: one KV-block fetch
+    /// per miss with a cache, one on-demand gather per *job* on the
+    /// cacheless ablation (`schedule_jobs`), plus bypass counts.
+    fn absorb_cache_stats(&self, st: &mut PrefillState, cs: CacheStats, schedule_jobs: usize) {
+        st.cache_hits += cs.hits();
+        st.cache_lookups += cs.lookups;
+        st.metrics.cache_bypasses += cs.bypasses;
+        let fetches =
+            if self.cfg.cache_blocks == 0 { schedule_jobs as u64 } else { cs.misses };
+        st.metrics.hbm_read_bytes += fetches * self.cfg.model.kv_block_bytes() as u64;
+    }
+
+    /// Per-layer liveness cache seeded with the schedule's use counters —
+    /// through the shared [`crate::kvcache::layer_cache`] derivation, so
+    /// the engine and the simulator cannot drift apart on cache sizing.
     fn new_layer_cache(&self, n: usize, schedule: &Schedule) -> LivenessCache {
-        let t_hot = (self.cfg.t_hot_frac * (n * self.cfg.model.group_size()) as f64) as u32;
-        let mut cache = if self.cfg.cache_blocks > 0 {
-            LivenessCache::new(self.cfg.cache_blocks, self.cfg.hot_fraction, t_hot)
-        } else {
-            LivenessCache::disabled()
-        };
-        cache.init_uses(schedule.uses.iter().copied());
-        cache
+        crate::kvcache::layer_cache(
+            self.cfg.cache_blocks,
+            self.cfg.hot_fraction,
+            self.cfg.t_hot_frac,
+            n,
+            self.cfg.model.group_size(),
+            schedule.uses.iter().copied(),
+        )
     }
 
     // ------------------------------------------------------------------
@@ -618,8 +699,10 @@ impl Engine {
             None => return Ok(fwd::dense_indices(cfg.n_heads, n)),
         };
         if self.cfg.native_sigu {
-            // the reference's parallel per-head jobs, over the same chunks
-            return Ok(fwd::sigu_indices(&self.ctx, &cfg, chunks, n, &params));
+            // the reference's parallel per-head jobs, over the same chunks;
+            // IndexGen leases only a small slot share (see index_gen_want)
+            let ctx = self.ctx.with_want_cap(index_gen_want(self.ctx.threads()));
+            return Ok(fwd::sigu_indices(&ctx, &cfg, chunks, n, &params));
         }
         let mut out = Vec::with_capacity(cfg.n_heads);
         for h in 0..cfg.n_heads {
@@ -688,9 +771,11 @@ impl Engine {
     /// Block-major SAU over the wave schedule; returns per-chunk attention
     /// outputs [n][B * H*dh].
     ///
-    /// The cache-traffic walk always runs sequentially in schedule order
-    /// (deterministic stats, identical for both backends); the arithmetic
-    /// then runs natively in parallel or through batched artifact calls.
+    /// Cache traffic is driven through the canonical
+    /// [`ScheduleWalk`] spine — the same walk the cycle simulator prices —
+    /// so cache statistics are identical for every backend, thread count,
+    /// and batching decision; the arithmetic then runs natively in
+    /// parallel or through batched artifact calls.
     fn run_sau_layer(
         &mut self,
         chunks: &[ChunkQkv],
@@ -698,7 +783,7 @@ impl Engine {
         cache: &mut LivenessCache,
         n: usize,
     ) -> Result<Vec<Vec<f32>>> {
-        walk_cache_traffic(schedule, cache);
+        ScheduleWalk::solo(schedule).drive(std::slice::from_mut(cache));
         if self.cfg.native_sau {
             // the reference's parallel wave execution over this engine's
             // schedule (waves sized by cfg.wave_qblocks)
@@ -919,22 +1004,11 @@ impl Engine {
     }
 }
 
-/// The deterministic cache-traffic walk over a schedule: fetch-or-hit per
-/// (kv_head, block) visit, one consume per job. The functional path always
-/// has the data in host memory — the cache records the *traffic* outcome —
-/// and the walk always runs sequentially in schedule order so cache
-/// statistics are identical for every backend, thread count, and batching
-/// decision.
-fn walk_cache_traffic(schedule: &Schedule, cache: &mut LivenessCache) {
-    for wave in &schedule.waves {
-        for bj in &wave.blocks {
-            let key = cache_key(bj.kv_head, bj.block);
-            if matches!(cache.lookup(key), Access::Miss) {
-                cache.admit(key);
-            }
-            for _ in &bj.jobs {
-                cache.consume(key);
-            }
-        }
-    }
+/// IndexGen runs a handful of cheap per-head jobs; under a shared serving
+/// budget it should not hoard slots that co-resident SAU/QKV fan-outs can
+/// use. Lease-want hint: a quarter of the context's threads, at least 2
+/// (ROADMAP serving follow-on (d)). The wide phases keep the uniform
+/// `min(threads, n_jobs)` want.
+fn index_gen_want(threads: usize) -> usize {
+    (threads / 4).max(2).min(threads.max(1))
 }

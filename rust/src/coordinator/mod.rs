@@ -6,12 +6,16 @@
 //!  * [`engine`]  — chunked prefill (artifacts or native kernels): KV
 //!    generation, SIGU, cached SAU, FFN, first token — paper Fig. 2 —
 //!    exposed both monolithically and as resumable per-layer phases.
+//!  * [`walk`]    — the schedule-execution **memory spine**: the one
+//!    canonical walk of a (solo or batch-merged) schedule through the
+//!    liveness cache, consumed by both the engine and the cycle simulator.
 //!  * [`server`]  — request router + phase-pipelined multi-worker serving
 //!    loop over one shared thread budget (serial baseline included).
 
 pub mod engine;
 pub mod joblist;
 pub mod server;
+pub mod walk;
 
 pub use engine::{Engine, EngineConfig, Phase, PrefillRun, PrefillState};
 pub use joblist::{
@@ -19,3 +23,4 @@ pub use joblist::{
     BatchWave, BlockJobs, Job, Schedule, Wave, DEFAULT_WAVE_QBLOCKS,
 };
 pub use server::{Completion, Policy, Server, ServerOptions};
+pub use walk::{BlockOutcome, BlockVisit, LaneVisit, ScheduleWalk};

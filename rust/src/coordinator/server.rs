@@ -114,6 +114,8 @@ impl Completion {
             queue_us: self.queue_us,
             pipeline_wait_us: self.pipeline_wait_us,
             e2e_us: self.e2e_us,
+            hbm_read_bytes: self.run.metrics.hbm_read_bytes as f64,
+            cache_hit_rate: self.run.metrics.cache_hit_rate,
         }
     }
 }
@@ -298,6 +300,27 @@ impl Server {
         self.sync.cond.notify_all();
     }
 
+    /// Open-loop trace replay: submit each request at its
+    /// `TraceRequest::arrival_us` offset from the call (sleeping on the
+    /// caller thread between arrivals), regardless of completions — so
+    /// bursts queue up exactly as the trace recorded them. Returns once
+    /// the last request has been submitted; queue-wait measurement starts
+    /// at each submission as usual. Closed-loop callers (submit
+    /// everything up front) just call [`Server::submit`] in a loop.
+    pub fn replay(&self, trace: &crate::workload::prompts::RequestTrace) {
+        let t0 = Instant::now();
+        let mut reqs = trace.requests.clone();
+        reqs.sort_by_key(|r| r.arrival_us);
+        for r in reqs {
+            let target = std::time::Duration::from_micros(r.arrival_us);
+            let elapsed = t0.elapsed();
+            if target > elapsed {
+                std::thread::sleep(target - elapsed);
+            }
+            self.submit(r);
+        }
+    }
+
     /// Close the queue and collect all completions.
     pub fn drain(self) -> Result<Vec<Completion>> {
         {
@@ -459,12 +482,14 @@ fn pick_work(s: &mut Shared, max_inflight: usize, batch_phases: bool) -> Option<
         if batch_phases {
             let phase = group[0].state.phase();
             let layer = group[0].state.layer();
-            if matches!(phase, Phase::Qkv | Phase::Sau) {
+            if matches!(phase, Phase::Qkv | Phase::Sau | Phase::FfnLogits) {
                 let mut i = 0;
                 while i < s.ready.len() && group.len() < MAX_PHASE_BATCH {
                     let p = &s.ready[i];
+                    // SAU fuses at any layer; the weight-streaming phases
+                    // (QKV, FFN tail) fuse only on a shared layer
                     let fusable = p.state.phase() == phase
-                        && (phase != Phase::Qkv || p.state.layer() == layer);
+                        && (phase == Phase::Sau || p.state.layer() == layer);
                     if fusable {
                         group.push(s.ready.swap_remove(i));
                     } else {

@@ -1,0 +1,286 @@
+//! The canonical schedule-execution spine (the "memory spine").
+//!
+//! There is exactly **one** definition of how a block-major SAU schedule
+//! moves through the liveness cache: [`ScheduleWalk`] iterates the
+//! schedule's execution order — wave by wave, (kv_head, block) coordinate
+//! by coordinate — and per coordinate visit performs the canonical cache
+//! transaction for every participating lane (lookup, admit on miss, one
+//! consume per job). Both consumers drive this walk:
+//!
+//!  * the **functional engine** (`coordinator::engine`) drives it for the
+//!    hit/miss/bypass statistics and the per-request HBM attribution it
+//!    reports in `PrefillMetrics`;
+//!  * the **cycle simulator** (`sim::prefill`) drives it to *price* each
+//!    emitted event (fetch bursts, prefetch overlap, per-job compute).
+//!
+//! Because the walk is the single source of truth, the two sides can no
+//! longer diverge: for the same schedule and cache parameters they produce
+//! identical [`CacheStats`] (pinned by `rust/tests/memory_spine.rs`).
+//!
+//! Batch-merged schedules ([`BatchSchedule`]) walk the same way, with one
+//! cache per lane: a lane's blocks appear inside the merged sweep in the
+//! lane's own ascending block-major order (waves are index-aligned by
+//! `build_schedule_batch`), so each lane's cache outcomes are **identical
+//! to its solo walk** — batching changes timing, never per-request stats.
+
+use crate::coordinator::joblist::{cache_key, BatchSchedule, Schedule};
+use crate::kvcache::{Access, CacheStats, LivenessCache, Tier};
+
+/// Cache outcome of one lane's visit to a KV-block coordinate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BlockOutcome {
+    /// Resident at lookup time (no HBM fetch).
+    Hit(Tier),
+    /// Missed, fetched from HBM, and retained in the given tier.
+    Fetched(Tier),
+    /// Missed and fetched, but not retained (cache full of live blocks,
+    /// dead-on-arrival, or disabled cache).
+    Bypassed,
+}
+
+impl BlockOutcome {
+    /// True when this visit moves the block over HBM.
+    pub fn is_fetch(&self) -> bool {
+        !matches!(self, BlockOutcome::Hit(_))
+    }
+}
+
+/// One lane's participation in a coordinate visit.
+#[derive(Clone, Copy, Debug)]
+pub struct LaneVisit {
+    /// Request lane (0 for solo schedules).
+    pub lane: u16,
+    /// Jobs this lane consumes from the block at this visit.
+    pub jobs: u32,
+    pub outcome: BlockOutcome,
+}
+
+/// One spine event: a (wave, kv-block) coordinate visit with every
+/// participating lane's job count and cache outcome, in execution order.
+#[derive(Debug)]
+pub struct BlockVisit<'a> {
+    /// Wave index within the schedule (merged wave index for batches).
+    pub wave: usize,
+    pub kv_head: u16,
+    pub block: u32,
+    /// Participating lanes in ascending lane order (>= 1 entry).
+    pub lanes: &'a [LaneVisit],
+}
+
+impl BlockVisit<'_> {
+    pub fn total_jobs(&self) -> u64 {
+        self.lanes.iter().map(|l| l.jobs as u64).sum()
+    }
+
+    /// Lanes whose visit fetches the block from HBM (miss or bypass).
+    pub fn fetching_lanes(&self) -> usize {
+        self.lanes.iter().filter(|l| l.outcome.is_fetch()).count()
+    }
+}
+
+enum Source<'a> {
+    Solo(&'a Schedule),
+    Batch(&'a BatchSchedule),
+}
+
+/// The canonical walk over one schedule's execution order. Construct with
+/// [`ScheduleWalk::solo`] or [`ScheduleWalk::batched`], then [`run`]
+/// (event sink) or [`drive`] (stats only) it through per-lane caches.
+///
+/// [`run`]: ScheduleWalk::run
+/// [`drive`]: ScheduleWalk::drive
+pub struct ScheduleWalk<'a> {
+    src: Source<'a>,
+}
+
+impl<'a> ScheduleWalk<'a> {
+    pub fn solo(schedule: &'a Schedule) -> ScheduleWalk<'a> {
+        ScheduleWalk { src: Source::Solo(schedule) }
+    }
+
+    pub fn batched(batch: &'a BatchSchedule) -> ScheduleWalk<'a> {
+        ScheduleWalk { src: Source::Batch(batch) }
+    }
+
+    /// Number of request lanes this walk spans (1 for solo).
+    pub fn lanes(&self) -> usize {
+        match &self.src {
+            Source::Solo(_) => 1,
+            Source::Batch(b) => b.lanes,
+        }
+    }
+
+    /// Drive the walk through per-lane caches (lane `l`'s traffic goes
+    /// through `caches[l]`), emitting one [`BlockVisit`] per coordinate
+    /// visit in execution order. Caches must have been seeded with each
+    /// lane's schedule use counters (`LivenessCache::init_uses`).
+    pub fn run<F: FnMut(&BlockVisit)>(&self, caches: &mut [LivenessCache], mut visit: F) {
+        assert_eq!(caches.len(), self.lanes(), "one cache per lane");
+        match &self.src {
+            Source::Solo(s) => {
+                for (wi, wave) in s.waves.iter().enumerate() {
+                    for bj in &wave.blocks {
+                        let key = cache_key(bj.kv_head, bj.block);
+                        let lanes = [LaneVisit {
+                            lane: 0,
+                            jobs: bj.jobs.len() as u32,
+                            outcome: touch(&mut caches[0], key, bj.jobs.len()),
+                        }];
+                        visit(&BlockVisit {
+                            wave: wi,
+                            kv_head: bj.kv_head,
+                            block: bj.block,
+                            lanes: &lanes,
+                        });
+                    }
+                }
+            }
+            Source::Batch(b) => {
+                let mut lanes: Vec<LaneVisit> = Vec::with_capacity(b.lanes);
+                let mut jobs_of = vec![0u32; b.lanes];
+                for (wi, wave) in b.waves.iter().enumerate() {
+                    for bj in &wave.blocks {
+                        let key = cache_key(bj.kv_head, bj.block);
+                        // count each lane's jobs on this coordinate (jobs
+                        // are stored lane-grouped but we don't rely on it)
+                        for j in &bj.jobs {
+                            jobs_of[j.lane as usize] += 1;
+                        }
+                        lanes.clear();
+                        for (lane, jobs) in jobs_of.iter_mut().enumerate() {
+                            if *jobs == 0 {
+                                continue;
+                            }
+                            lanes.push(LaneVisit {
+                                lane: lane as u16,
+                                jobs: *jobs,
+                                outcome: touch(&mut caches[lane], key, *jobs as usize),
+                            });
+                            *jobs = 0;
+                        }
+                        visit(&BlockVisit {
+                            wave: wi,
+                            kv_head: bj.kv_head,
+                            block: bj.block,
+                            lanes: &lanes,
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    /// Stats-only walk: drive the caches without an event sink (the
+    /// functional engine's use — it only needs the resulting
+    /// [`CacheStats`] per lane).
+    pub fn drive(&self, caches: &mut [LivenessCache]) {
+        self.run(caches, |_| {});
+    }
+}
+
+/// One lane's canonical block transaction: lookup, admit on miss, one
+/// consume per job. This — and nothing else — defines what "cache
+/// traffic" means for a schedule.
+fn touch(cache: &mut LivenessCache, key: u64, jobs: usize) -> BlockOutcome {
+    let outcome = match cache.lookup(key) {
+        Access::Hit(t) => BlockOutcome::Hit(t),
+        Access::Miss => match cache.admit(key) {
+            Some(t) => BlockOutcome::Fetched(t),
+            None => BlockOutcome::Bypassed,
+        },
+    };
+    for _ in 0..jobs {
+        cache.consume(key);
+    }
+    outcome
+}
+
+/// Convenience for tests and reporting: walk a solo schedule through a
+/// fresh cache seeded with its use counters and return the stats.
+pub fn solo_walk_stats(schedule: &Schedule, mut cache: LivenessCache) -> CacheStats {
+    cache.init_uses(schedule.uses.iter().copied());
+    ScheduleWalk::solo(schedule).drive(std::slice::from_mut(&mut cache));
+    cache.stats()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::joblist::{build_schedule, build_schedule_batch};
+    use crate::flexprefill::{HeadIndex, HeadPattern};
+
+    fn idx(blocks: Vec<Vec<u32>>) -> HeadIndex {
+        HeadIndex { pattern: HeadPattern::VerticalSlash, d_js: 0.0, blocks }
+    }
+
+    fn seeded_cache(s: &Schedule, blocks: usize) -> LivenessCache {
+        let mut c = if blocks > 0 {
+            LivenessCache::new(blocks, 0.5, 1)
+        } else {
+            LivenessCache::disabled()
+        };
+        c.init_uses(s.uses.iter().copied());
+        c
+    }
+
+    #[test]
+    fn solo_walk_emits_every_coordinate_once_per_wave() {
+        let indices = vec![idx(vec![vec![0], vec![0, 1], vec![0, 2], vec![3]])];
+        let s = build_schedule(&indices, 1, 2);
+        let mut cache = seeded_cache(&s, 4);
+        let mut events = 0usize;
+        let mut jobs = 0u64;
+        ScheduleWalk::solo(&s).run(std::slice::from_mut(&mut cache), |v| {
+            events += 1;
+            assert_eq!(v.lanes.len(), 1);
+            jobs += v.total_jobs();
+        });
+        let expected_events: usize = s.waves.iter().map(|w| w.blocks.len()).sum();
+        assert_eq!(events, expected_events);
+        assert_eq!(jobs as usize, s.total_jobs);
+        assert_eq!(cache.stats().lookups, expected_events as u64);
+    }
+
+    #[test]
+    fn batch_walk_per_lane_stats_match_solo_walks() {
+        let a_idx = vec![idx(vec![vec![0], vec![0, 1], vec![0, 2], vec![1, 3]])];
+        let b_idx = vec![idx(vec![vec![0], vec![1], vec![0, 2]])];
+        let a = build_schedule(&a_idx, 1, 2);
+        let b = build_schedule(&b_idx, 1, 2);
+        let solo_a = solo_walk_stats(&a, LivenessCache::new(2, 0.5, 1));
+        let solo_b = solo_walk_stats(&b, LivenessCache::new(2, 0.5, 1));
+
+        let batch = build_schedule_batch(&[&a, &b]);
+        let mut caches = vec![seeded_cache(&a, 2), seeded_cache(&b, 2)];
+        ScheduleWalk::batched(&batch).drive(&mut caches);
+        assert_eq!(caches[0].stats(), solo_a, "lane 0 stats drift under batching");
+        assert_eq!(caches[1].stats(), solo_b, "lane 1 stats drift under batching");
+    }
+
+    #[test]
+    fn batch_walk_groups_lanes_per_coordinate() {
+        let a_idx = vec![idx(vec![vec![0], vec![0]])];
+        let b_idx = vec![idx(vec![vec![0], vec![0]])];
+        let a = build_schedule(&a_idx, 1, 0);
+        let b = build_schedule(&b_idx, 1, 0);
+        let batch = build_schedule_batch(&[&a, &b]);
+        let mut caches = vec![seeded_cache(&a, 2), seeded_cache(&b, 2)];
+        let mut visits = Vec::new();
+        ScheduleWalk::batched(&batch).run(&mut caches, |v| {
+            visits.push((v.block, v.lanes.len(), v.fetching_lanes()));
+        });
+        // one merged visit to block 0, both lanes participating, both
+        // fetching (each lane's KV data is distinct)
+        assert_eq!(visits, vec![(0, 2, 2)]);
+    }
+
+    #[test]
+    fn disabled_cache_walk_counts_bypasses() {
+        let indices = vec![idx(vec![vec![0], vec![0]])];
+        let s = build_schedule(&indices, 1, 0);
+        let stats = solo_walk_stats(&s, LivenessCache::disabled());
+        assert_eq!(stats.hits(), 0);
+        assert_eq!(stats.misses, 1); // single wave: one visit
+        assert_eq!(stats.bypasses, 1);
+    }
+}

@@ -61,6 +61,32 @@ pub enum Access {
     Miss,
 }
 
+/// Build one layer's liveness cache the way **both** spine consumers
+/// (the functional engine and the cycle simulator) must: `capacity`
+/// block slots (0 = the cacheless ablation), `hot_fraction` tier split,
+/// the hot-admission threshold expressed as `t_hot_frac` of the per-key
+/// maximum consumer count (`n_blocks` query blocks x GQA `group_size`),
+/// seeded with the schedule's exact use counters. Keeping this
+/// derivation in one place is part of the memory-spine contract — a
+/// consumer deriving its own t_hot would silently diverge.
+pub fn layer_cache(
+    capacity_blocks: usize,
+    hot_fraction: f64,
+    t_hot_frac: f64,
+    n_blocks: usize,
+    group_size: usize,
+    uses: impl IntoIterator<Item = (u64, u32)>,
+) -> LivenessCache {
+    let t_hot = (t_hot_frac * (n_blocks * group_size) as f64) as u32;
+    let mut cache = if capacity_blocks > 0 {
+        LivenessCache::new(capacity_blocks, hot_fraction, t_hot)
+    } else {
+        LivenessCache::disabled()
+    };
+    cache.init_uses(uses);
+    cache
+}
+
 /// Liveness-driven dual-tier cache over fixed-size KV blocks.
 #[derive(Clone, Debug)]
 pub struct LivenessCache {
@@ -111,6 +137,12 @@ impl LivenessCache {
 
     pub fn remaining_uses(&self, key: u64) -> u32 {
         self.remaining.get(&key).copied().unwrap_or(0)
+    }
+
+    /// Number of keys with live remaining-use counters (diagnostics — the
+    /// regression guard for the unbounded-growth `consume` bug).
+    pub fn tracked_keys(&self) -> usize {
+        self.remaining.len()
     }
 
     pub fn is_resident(&self, key: u64) -> bool {
@@ -201,13 +233,19 @@ impl LivenessCache {
     }
 
     /// Record one consumption of the block (one SAU job). When the counter
-    /// reaches zero the block is provably dead and its slot is freed
-    /// (evict-on-nil).
+    /// reaches zero the block is provably dead, its slot is freed
+    /// (evict-on-nil) and its counter entry is dropped. Consuming a key
+    /// that was never registered (or is already dead) is a **no-op** — it
+    /// must not insert a permanent zero entry, or a long-lived cache
+    /// walked over many schedules grows without bound.
     pub fn consume(&mut self, key: u64) {
-        let rem = self.remaining.entry(key).or_insert(0);
+        let Some(rem) = self.remaining.get_mut(&key) else {
+            return;
+        };
         debug_assert!(*rem > 0, "consuming block {key} with zero remaining uses");
         *rem = rem.saturating_sub(1);
         if *rem == 0 {
+            self.remaining.remove(&key);
             if let Some(tier) = self.resident.remove(&key) {
                 match tier {
                     Tier::Hot => self.hot_used -= 1,
@@ -366,5 +404,31 @@ mod tests {
         assert_eq!(c.remaining_uses(3), 1);
         c.consume(3);
         assert!(!c.is_resident(3));
+    }
+
+    #[test]
+    fn consume_unregistered_key_is_a_noop() {
+        // regression: consuming a key with no registered uses used to
+        // insert a permanent zero entry into `remaining`, growing a
+        // long-lived cache unboundedly
+        let mut c = cache3();
+        let before = c.tracked_keys();
+        for k in 1000..1064u64 {
+            c.consume(k);
+        }
+        assert_eq!(c.tracked_keys(), before, "phantom entries inserted");
+        assert_eq!(c.stats(), CacheStats::default(), "no-op must not touch stats");
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn dead_counters_are_dropped_not_parked_at_zero() {
+        let mut c = cache3();
+        let before = c.tracked_keys();
+        c.consume(2); // key 2 registered with 1 use -> dead, entry dropped
+        assert_eq!(c.tracked_keys(), before - 1);
+        assert_eq!(c.remaining_uses(2), 0);
+        c.consume(2); // now unregistered: still a no-op
+        assert_eq!(c.tracked_keys(), before - 1);
     }
 }

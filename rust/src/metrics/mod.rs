@@ -16,6 +16,15 @@ pub struct PrefillMetrics {
     pub query_aware_frac: f64,
     /// KV cache statistics of the SAU schedule.
     pub cache_hit_rate: f64,
+    /// Modeled KV-block HBM fetch traffic across the request's SAU
+    /// schedules (bytes): one kv-block fetch per cache miss along the
+    /// canonical schedule walk (one on-demand gather per job on the
+    /// cacheless ablation) — the same accounting the cycle simulator
+    /// prices, attributed per request.
+    pub hbm_read_bytes: u64,
+    /// KV-block fetches the cache could not retain (bypasses) across the
+    /// request's SAU schedules.
+    pub cache_bypasses: u64,
     /// Total SAU jobs executed.
     pub jobs: usize,
     /// Time breakdown (us).
@@ -43,6 +52,10 @@ pub struct ServeSample {
     /// Time parked between phases waiting for a worker (pipeline stall).
     pub pipeline_wait_us: f64,
     pub e2e_us: f64,
+    /// Modeled KV HBM fetch traffic attributed to this request (bytes).
+    pub hbm_read_bytes: f64,
+    /// KV cache hit rate over the request's SAU schedules.
+    pub cache_hit_rate: f64,
 }
 
 /// Aggregate serving statistics for one scheduling mode.
@@ -55,6 +68,10 @@ pub struct ServeSummary {
     pub pipeline_wait_mean_ms: f64,
     pub e2e_mean_ms: f64,
     pub e2e_p95_ms: f64,
+    /// Total modeled KV HBM fetch traffic across the trace (GB).
+    pub hbm_read_gb: f64,
+    /// Mean per-request KV cache hit rate.
+    pub cache_hit_rate_mean: f64,
 }
 
 impl ServeSummary {
@@ -64,6 +81,7 @@ impl ServeSummary {
         let queue: Vec<f64> = samples.iter().map(|s| s.queue_us / 1e3).collect();
         let wait: Vec<f64> = samples.iter().map(|s| s.pipeline_wait_us / 1e3).collect();
         let e2e: Vec<f64> = samples.iter().map(|s| s.e2e_us / 1e3).collect();
+        let hits: Vec<f64> = samples.iter().map(|s| s.cache_hit_rate).collect();
         ServeSummary {
             n: samples.len(),
             ttft_mean_ms: mean(&ttft),
@@ -72,6 +90,8 @@ impl ServeSummary {
             pipeline_wait_mean_ms: mean(&wait),
             e2e_mean_ms: mean(&e2e),
             e2e_p95_ms: percentile(&e2e, 95.0),
+            hbm_read_gb: samples.iter().map(|s| s.hbm_read_bytes).sum::<f64>() / 1e9,
+            cache_hit_rate_mean: mean(&hits),
         }
     }
 
@@ -79,14 +99,17 @@ impl ServeSummary {
     pub fn render(&self, label: &str) -> String {
         format!(
             "{label}: {} req | TTFT mean {:.0} ms p95 {:.0} ms | queue mean {:.0} ms | \
-             phase-wait mean {:.0} ms | e2e mean {:.0} ms p95 {:.0} ms",
+             phase-wait mean {:.0} ms | e2e mean {:.0} ms p95 {:.0} ms | \
+             KV fetch {:.3} GB | hit {:.0}%",
             self.n,
             self.ttft_mean_ms,
             self.ttft_p95_ms,
             self.queue_mean_ms,
             self.pipeline_wait_mean_ms,
             self.e2e_mean_ms,
-            self.e2e_p95_ms
+            self.e2e_p95_ms,
+            self.hbm_read_gb,
+            self.cache_hit_rate_mean * 100.0
         )
     }
 
@@ -192,6 +215,8 @@ mod tests {
                 queue_us: 500.0,
                 pipeline_wait_us: 100.0,
                 e2e_us: i as f64 * 1000.0 + 500.0,
+                hbm_read_bytes: 2.5e8,
+                cache_hit_rate: 0.5,
             })
             .collect();
         let s = ServeSummary::from_samples(&samples);
@@ -199,6 +224,8 @@ mod tests {
         assert!((s.ttft_mean_ms - 2.5).abs() < 1e-9);
         assert!((s.queue_mean_ms - 0.5).abs() < 1e-9);
         assert!((s.pipeline_wait_mean_ms - 0.1).abs() < 1e-9);
+        assert!((s.hbm_read_gb - 1.0).abs() < 1e-9);
+        assert!((s.cache_hit_rate_mean - 0.5).abs() < 1e-9);
         let faster = ServeSummary { ttft_mean_ms: 2.0, ..s.clone() };
         assert!((faster.ttft_saving_pct(&s) - 20.0).abs() < 1e-9);
         assert!(s.render("x").contains("4 req"));

@@ -459,6 +459,41 @@ pub fn sau_layer_batch(
     attn_lanes
 }
 
+/// Batched FFN tail over co-resident lanes at the **same layer**: one
+/// pool fan-out over every (lane, chunk) job, so the layer's o_proj/FFN
+/// weights stream through the cache once for the whole batch — the same
+/// amortization the QKV batch gets. Each job runs the unchanged
+/// [`oproj_ffn_chunk`] on its own lane's data, so per-lane outputs are
+/// **bit-identical** to running the lanes solo. `attn_lanes[l][ci]` is
+/// lane `l`'s chunk-`ci` attention rows (`[BLOCK, H*dh]` flattened);
+/// returns each lane's new hidden chunks in chunk order.
+pub fn ffn_tail_batch(
+    ctx: &KernelCtx,
+    w: &ModelWeights,
+    li: usize,
+    attn_lanes: &[&[Vec<f32>]],
+    hidden_lanes: &[&MatF32],
+) -> Vec<Vec<MatF32>> {
+    assert_eq!(attn_lanes.len(), hidden_lanes.len(), "attn lanes vs hidden lanes");
+    let hq_dh = w.cfg.q_dim();
+    let mut jobs: Vec<(usize, usize)> = Vec::new(); // (lane, chunk)
+    for (lane, attn) in attn_lanes.iter().enumerate() {
+        jobs.extend((0..attn.len()).map(|ci| (lane, ci)));
+    }
+    let outs = ctx.pool.map(jobs.len(), |j| {
+        let (lane, ci) = jobs[j];
+        let a = MatF32 { rows: BLOCK, cols: hq_dh, data: attn_lanes[lane][ci].clone() };
+        let x = hidden_lanes[lane].slice_rows(ci * BLOCK, (ci + 1) * BLOCK);
+        oproj_ffn_chunk(ctx, w, li, &a, &x)
+    });
+    let mut lanes: Vec<Vec<MatF32>> =
+        attn_lanes.iter().map(|a| Vec::with_capacity(a.len())).collect();
+    for ((lane, _), out) in jobs.into_iter().zip(outs) {
+        lanes[lane].push(out);
+    }
+    lanes
+}
+
 /// Reference chunked prefill with the default kernel context
 /// (`FASTP_THREADS` workers). `flex: None` => dense causal attention.
 pub fn prefill_reference(
@@ -648,6 +683,47 @@ mod tests {
         batch.check_invariants(&schedules.iter().collect::<Vec<_>>()).unwrap();
         let chunk_lanes: Vec<&[ChunkQkv]> = lanes.iter().map(|(c, _, _)| c.as_slice()).collect();
         let batched = sau_layer_batch(&ctx, &TINY, &chunk_lanes, &batch);
+        for (lane, (b, s)) in batched.iter().zip(&solo).enumerate() {
+            assert_eq!(b.len(), s.len(), "lane {lane}");
+            for (bm, sm) in b.iter().zip(s) {
+                assert_eq!(bm.data, sm.data, "lane {lane}");
+            }
+        }
+    }
+
+    #[test]
+    fn ffn_tail_batch_bit_identical_to_solo_chunks() {
+        let w = ModelWeights::generate(&TINY, 33);
+        let ctx = KernelCtx::with_threads(3);
+        // two lanes with different context lengths at the same layer
+        let lanes: Vec<(MatF32, Vec<Vec<f32>>)> = [(384usize, 51u64), (256, 52)]
+            .iter()
+            .map(|&(toks, seed)| {
+                let hidden = w.embed_tokens(&tokens(toks, seed));
+                let n = toks / BLOCK;
+                let mut rng = Prng::new(seed ^ 0xFF);
+                let attn: Vec<Vec<f32>> = (0..n)
+                    .map(|_| (0..BLOCK * TINY.q_dim()).map(|_| rng.f32() - 0.5).collect())
+                    .collect();
+                (hidden, attn)
+            })
+            .collect();
+        let solo: Vec<Vec<MatF32>> = lanes
+            .iter()
+            .map(|(hidden, attn)| {
+                attn.iter()
+                    .enumerate()
+                    .map(|(ci, a)| {
+                        let am = MatF32 { rows: BLOCK, cols: TINY.q_dim(), data: a.clone() };
+                        let x = hidden.slice_rows(ci * BLOCK, (ci + 1) * BLOCK);
+                        oproj_ffn_chunk(&ctx, &w, 0, &am, &x)
+                    })
+                    .collect()
+            })
+            .collect();
+        let attn_refs: Vec<&[Vec<f32>]> = lanes.iter().map(|(_, a)| a.as_slice()).collect();
+        let hidden_refs: Vec<&MatF32> = lanes.iter().map(|(h, _)| h).collect();
+        let batched = ffn_tail_batch(&ctx, &w, 0, &attn_refs, &hidden_refs);
         for (lane, (b, s)) in batched.iter().zip(&solo).enumerate() {
             assert_eq!(b.len(), s.len(), "lane {lane}");
             for (bm, sm) in b.iter().zip(s) {

@@ -17,6 +17,9 @@ pub mod resources;
 pub mod sfu;
 pub mod synth;
 
-pub use prefill::{sau_wave_qblocks, simulate_prefill, SimReport};
+pub use prefill::{
+    price_sau_walk, sau_wave_qblocks, simulate_prefill, simulate_prefill_batch, BatchSimReport,
+    LaneSim, SimReport,
+};
 pub use resources::{resource_report, ResourceReport, Resources};
 pub use synth::{synth_model_indices, synth_model_indices_pool, HeadKind, HeadMix};

@@ -59,6 +59,13 @@ impl KernelCtx {
         self.pool.threads()
     }
 
+    /// A context whose fan-outs want at most `cap` pool slots — the
+    /// engine's per-phase lease hint (e.g. IndexGen asks for a small
+    /// share so co-resident SAU/QKV fan-outs keep the cores).
+    pub fn with_want_cap(&self, cap: usize) -> KernelCtx {
+        KernelCtx { pool: self.pool.with_want_cap(cap), tile: self.tile }
+    }
+
     /// Tiled f32 matmul (C = A @ B).
     pub fn matmul(&self, a: &MatF32, b: &MatF32) -> MatF32 {
         matmul_with(a, b, self.tile)

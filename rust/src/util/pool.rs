@@ -110,22 +110,27 @@ pub struct WorkerPool {
     threads: usize,
     /// When set, every `map` call leases its workers from this budget.
     budget: Option<Arc<PoolBudget>>,
+    /// Per-phase lease *hint*: caps how many slots a `map` call wants
+    /// (and therefore uses). Phases with few cheap jobs (IndexGen) set a
+    /// small cap so wide fan-outs of co-resident requests keep the cores;
+    /// `None` keeps the uniform `min(threads, n_jobs)` want.
+    want_cap: Option<usize>,
 }
 
 impl WorkerPool {
     /// Pool sized by `FASTP_THREADS`, defaulting to available parallelism.
     pub fn from_env() -> WorkerPool {
-        WorkerPool { threads: env_threads(), budget: None }
+        WorkerPool { threads: env_threads(), budget: None, want_cap: None }
     }
 
     /// Pool with an explicit worker count (clamped to >= 1).
     pub fn with_threads(n: usize) -> WorkerPool {
-        WorkerPool { threads: n.max(1), budget: None }
+        WorkerPool { threads: n.max(1), budget: None, want_cap: None }
     }
 
     /// Single-threaded pool (jobs run inline on the caller).
     pub fn single_threaded() -> WorkerPool {
-        WorkerPool { threads: 1, budget: None }
+        WorkerPool { threads: 1, budget: None, want_cap: None }
     }
 
     /// Pool that leases its workers from a shared [`PoolBudget`]: each
@@ -134,7 +139,7 @@ impl WorkerPool {
     /// co-resident engines split `FASTP_THREADS` cores instead of each
     /// spawning a full-size pool.
     pub fn shared(threads: usize, budget: Arc<PoolBudget>) -> WorkerPool {
-        WorkerPool { threads: threads.max(1), budget: Some(budget) }
+        WorkerPool { threads: threads.max(1), budget: Some(budget), want_cap: None }
     }
 
     pub fn threads(&self) -> usize {
@@ -144,6 +149,21 @@ impl WorkerPool {
     /// The shared budget this pool leases from, if any.
     pub fn budget(&self) -> Option<&Arc<PoolBudget>> {
         self.budget.as_ref()
+    }
+
+    /// A clone of this pool whose budget-lease requests want at most
+    /// `cap` slots — the per-phase lease hint (ROADMAP serving follow-on
+    /// (d)). On a budget-backed pool the smaller request leaves the
+    /// remaining slots to co-resident phases; a private pool has no lease
+    /// to shrink, so the cap is inert there (solo engines keep full
+    /// parallelism). Never affects results (bit-identity contract).
+    pub fn with_want_cap(&self, cap: usize) -> WorkerPool {
+        WorkerPool { want_cap: Some(cap.max(1)), ..self.clone() }
+    }
+
+    /// The slot want a budget lease requests for an `n_jobs` fan-out.
+    fn want(&self, n_jobs: usize) -> usize {
+        self.threads.min(n_jobs).min(self.want_cap.unwrap_or(usize::MAX)).max(1)
     }
 
     /// Run `f(0..n_jobs)` across the pool and return the results in job
@@ -163,7 +183,7 @@ impl WorkerPool {
         // thread does the work itself (inline or blocked on the scope), so
         // the lease covers it too: `workers` threads compute in total.
         let _lease = self.budget.as_deref().map(|b| {
-            let n = b.acquire(self.threads.min(n_jobs));
+            let n = b.acquire(self.want(n_jobs));
             Lease { budget: b, n }
         });
         let workers = match &_lease {
@@ -331,6 +351,30 @@ mod tests {
         // than `total` jobs can execute at any instant
         assert!(peak.load(Ordering::SeqCst) <= 4, "peak {}", peak.load(Ordering::SeqCst));
         assert_eq!(budget.available(), 4);
+    }
+
+    #[test]
+    fn want_cap_bounds_lease_and_preserves_results() {
+        let work = |i: usize| i * 3 + 1;
+        let seq = WorkerPool::single_threaded().map(30, work);
+        // budget-backed: a capped pool leaves slots unleased for peers
+        let budget = PoolBudget::new(8);
+        let capped = WorkerPool::shared(8, Arc::clone(&budget)).with_want_cap(2);
+        let seen_free = Arc::new(AtomicUsize::new(usize::MAX));
+        {
+            let seen = Arc::clone(&seen_free);
+            let b = Arc::clone(&budget);
+            let out = capped.map(30, move |i| {
+                seen.fetch_min(b.available(), Ordering::SeqCst);
+                work(i)
+            });
+            assert_eq!(out, seq);
+        }
+        // with at most 2 slots leased, at least 6 stayed available
+        assert!(seen_free.load(Ordering::SeqCst) >= 6, "{}", seen_free.load(Ordering::SeqCst));
+        assert_eq!(budget.available(), 8);
+        // private pool: no lease to shrink — the cap is inert, results identical
+        assert_eq!(WorkerPool::with_threads(8).with_want_cap(3).map(30, work), seq);
     }
 
     #[test]

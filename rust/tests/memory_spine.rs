@@ -1,0 +1,239 @@
+//! Memory-spine contracts: the engine-side and sim-side consumers of the
+//! canonical `ScheduleWalk` must see **identical** cache statistics for
+//! the same schedule — solo and batch-merged — and batch-merged walks
+//! must leave every lane's stats exactly as its solo walk would (the
+//! stats-identity contract). Plus: FFN-tail batch fusion is bit-identical
+//! to per-request execution. Runs fully native, every tier-1 environment.
+
+use fast_prefill::config::{u280_cacheless, u280_fast_prefill, FpgaConfig, TINY};
+use fast_prefill::coordinator::{
+    build_schedule, build_schedule_batch, Engine, EngineConfig, Phase, Schedule, ScheduleWalk,
+};
+use fast_prefill::flexprefill::{HeadIndex, HeadPattern};
+use fast_prefill::kvcache::{CacheStats, LivenessCache};
+use fast_prefill::sim::price_sau_walk;
+use fast_prefill::sim::hbm::Traffic;
+use fast_prefill::util::prng::Prng;
+use fast_prefill::util::prop::forall_ck;
+
+fn random_indices(rng: &mut Prng, heads: usize, n: usize) -> Vec<HeadIndex> {
+    (0..heads)
+        .map(|_| {
+            let blocks = (0..n)
+                .map(|q| (0..=q as u32).filter(|_| rng.f32() < 0.45).collect::<Vec<u32>>())
+                .collect();
+            HeadIndex { pattern: HeadPattern::VerticalSlash, d_js: 0.5, blocks }
+        })
+        .collect()
+}
+
+fn fresh_cache(schedule: &Schedule, capacity: usize, t_hot: u32) -> LivenessCache {
+    let mut c = if capacity > 0 {
+        LivenessCache::new(capacity, 0.5, t_hot)
+    } else {
+        LivenessCache::disabled()
+    };
+    c.init_uses(schedule.uses.iter().copied());
+    c
+}
+
+/// Engine-side walk: stats-only drive (what `Engine::phase_sau` does).
+fn engine_walk_stats(schedule: &Schedule, capacity: usize, t_hot: u32) -> CacheStats {
+    let mut cache = fresh_cache(schedule, capacity, t_hot);
+    ScheduleWalk::solo(schedule).drive(std::slice::from_mut(&mut cache));
+    cache.stats()
+}
+
+/// Sim-side walk: the pricing consumer (what `sim::prefill` does).
+fn sim_walk_stats(
+    f: &FpgaConfig,
+    schedule: &Schedule,
+    capacity: usize,
+    t_hot: u32,
+) -> CacheStats {
+    let mut cache = fresh_cache(schedule, capacity, t_hot);
+    let mut traffic = Traffic::default();
+    let walk = ScheduleWalk::solo(schedule);
+    let (t_us, compute_us) =
+        price_sau_walk(f, &TINY, &walk, std::slice::from_mut(&mut cache), &mut traffic);
+    assert!(t_us >= compute_us && compute_us >= 0.0);
+    cache.stats()
+}
+
+#[test]
+fn engine_and_sim_walks_of_the_same_schedule_agree_exactly() {
+    let f = u280_fast_prefill();
+    let cacheless = u280_cacheless();
+    forall_ck(
+        0x5EED_5011,
+        40,
+        |rng, size| {
+            let heads = 1 + rng.below(4);
+            let n = 2 + rng.below(2 + size / 10);
+            let indices = random_indices(rng, heads, n);
+            let wave_q = rng.below(4); // 0 = single wave
+            let capacity = rng.below(8); // 0 = disabled cache
+            let t_hot = rng.below(4) as u32;
+            (indices, wave_q, capacity, t_hot)
+        },
+        |(indices, wave_q, capacity, t_hot)| {
+            let schedule = build_schedule(indices, 1, *wave_q);
+            let eng = engine_walk_stats(&schedule, *capacity, *t_hot);
+            let sim = sim_walk_stats(&f, &schedule, *capacity, *t_hot);
+            if eng != sim {
+                return Err(format!("engine {eng:?} != sim {sim:?}"));
+            }
+            // the cacheless platform prices differently but must still
+            // report the very same stats stream
+            let sim_nc = sim_walk_stats(&cacheless, &schedule, *capacity, *t_hot);
+            if eng != sim_nc {
+                return Err(format!("engine {eng:?} != cacheless-sim {sim_nc:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn batch_merged_walks_preserve_every_lanes_solo_stats() {
+    let f = u280_fast_prefill();
+    forall_ck(
+        0x5EED_5012,
+        30,
+        |rng, size| {
+            let lanes = 2 + rng.below(3);
+            let wave_q = 1 + rng.below(3);
+            let capacity = rng.below(8);
+            let t_hot = rng.below(4) as u32;
+            let lane_indices: Vec<Vec<HeadIndex>> = (0..lanes)
+                .map(|_| {
+                    let heads = 1 + rng.below(3);
+                    let n = 2 + rng.below(2 + size / 12);
+                    random_indices(rng, heads, n)
+                })
+                .collect();
+            (lane_indices, wave_q, capacity, t_hot)
+        },
+        |(lane_indices, wave_q, capacity, t_hot)| {
+            let schedules: Vec<Schedule> =
+                lane_indices.iter().map(|idx| build_schedule(idx, 1, *wave_q)).collect();
+            let solo: Vec<CacheStats> = schedules
+                .iter()
+                .map(|s| engine_walk_stats(s, *capacity, *t_hot))
+                .collect();
+            let refs: Vec<&Schedule> = schedules.iter().collect();
+            let batch = build_schedule_batch(&refs);
+
+            // engine-side batched drive
+            let mut caches: Vec<LivenessCache> =
+                schedules.iter().map(|s| fresh_cache(s, *capacity, *t_hot)).collect();
+            ScheduleWalk::batched(&batch).drive(&mut caches);
+            for (lane, (c, s)) in caches.iter().zip(&solo).enumerate() {
+                if c.stats() != *s {
+                    return Err(format!(
+                        "lane {lane}: batched {:?} != solo {s:?}",
+                        c.stats()
+                    ));
+                }
+            }
+
+            // sim-side batched pricing sees the same stats
+            let mut caches: Vec<LivenessCache> =
+                schedules.iter().map(|s| fresh_cache(s, *capacity, *t_hot)).collect();
+            let mut traffic = Traffic::default();
+            let walk = ScheduleWalk::batched(&batch);
+            price_sau_walk(&f, &TINY, &walk, &mut caches, &mut traffic);
+            for (lane, (c, s)) in caches.iter().zip(&solo).enumerate() {
+                if c.stats() != *s {
+                    return Err(format!(
+                        "lane {lane}: sim-batched {:?} != solo {s:?}",
+                        c.stats()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// FFN-tail batch fusion
+// ---------------------------------------------------------------------------
+
+fn tokens(n: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Prng::new(seed);
+    (0..n).map(|_| rng.below(256) as u8).collect()
+}
+
+fn native_cfg() -> EngineConfig {
+    let mut cfg = EngineConfig::new_native(TINY.clone());
+    cfg.weight_seed = 777;
+    cfg
+}
+
+#[test]
+fn ffn_tail_batch_fusion_bit_identical_to_per_request_execution() {
+    let ta = tokens(384, 61);
+    let tb = tokens(256, 62);
+    let mut eng = Engine::new_native(native_cfg()).unwrap();
+    let solo_a = eng.prefill(0, &ta).unwrap();
+    let solo_b = eng.prefill(1, &tb).unwrap();
+
+    // step both requests to the first FfnLogits boundary individually,
+    // fuse exactly the FFN tail, then finish each solo — isolating the
+    // fused phase as the only difference from per-request execution
+    let mut sa = eng.prefill_start(0, &ta).unwrap();
+    let mut sb = eng.prefill_start(1, &tb).unwrap();
+    for st in [&mut sa, &mut sb] {
+        eng.phase_qkv(st).unwrap();
+        eng.phase_index_gen(st).unwrap();
+        eng.phase_sau(st).unwrap();
+        assert_eq!(st.phase(), Phase::FfnLogits);
+    }
+    let mut pair = [sa, sb];
+    let out = eng.phase_ffn_logits_batch(&mut pair).unwrap();
+    assert!(out.iter().all(|r| r.is_none()), "TINY has 2 layers; layer 0 tail fused");
+    let [mut sa, mut sb] = pair;
+    let finish = |eng: &mut Engine, st: &mut fast_prefill::coordinator::PrefillState| loop {
+        if let Some(run) = eng.phase_step(st).unwrap() {
+            break run;
+        }
+    };
+    let run_a = finish(&mut eng, &mut sa);
+    let run_b = finish(&mut eng, &mut sb);
+
+    assert_eq!(run_a.first_token, solo_a.first_token);
+    assert_eq!(run_a.logits_last, solo_a.logits_last);
+    assert_eq!(run_a.hidden_last_chunk, solo_a.hidden_last_chunk);
+    assert_eq!(run_b.first_token, solo_b.first_token);
+    assert_eq!(run_b.logits_last, solo_b.logits_last);
+    assert_eq!(run_b.hidden_last_chunk, solo_b.hidden_last_chunk);
+}
+
+#[test]
+fn engine_reports_per_request_memory_attribution() {
+    let toks = tokens(512, 63);
+    let mut eng = Engine::new_native(native_cfg()).unwrap();
+    let run = eng.prefill(0, &toks).unwrap();
+    // sparse schedules over 4 blocks with a finite cache must both fetch
+    // and (given reuse) hit; attribution rides the same spine walk
+    assert!(run.metrics.hbm_read_bytes > 0, "no KV fetch traffic attributed");
+    let fetches = run.metrics.hbm_read_bytes / TINY.kv_block_bytes() as u64;
+    assert!(fetches as usize <= run.metrics.jobs, "more fetches than jobs");
+
+    // a cacheless engine pays an on-demand gather per *job* — exactly the
+    // simulator's cacheless accounting — so attribution is pinned to the
+    // job count, strictly above the cached run, with identical numerics
+    let mut cfg = native_cfg();
+    cfg.cache_blocks = 0;
+    let mut eng_nc = Engine::new_native(cfg).unwrap();
+    let run_nc = eng_nc.prefill(0, &toks).unwrap();
+    assert_eq!(run.first_token, run_nc.first_token);
+    assert_eq!(
+        run_nc.metrics.hbm_read_bytes,
+        run_nc.metrics.jobs as u64 * TINY.kv_block_bytes() as u64,
+        "cacheless attribution must be one gather per job (sim parity)"
+    );
+    assert!(run_nc.metrics.hbm_read_bytes >= run.metrics.hbm_read_bytes);
+    assert!(run_nc.metrics.cache_bypasses > 0, "cacheless walk must bypass");
+}

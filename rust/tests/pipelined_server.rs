@@ -48,6 +48,10 @@ fn assert_runs_identical(a: &PrefillRun, b: &PrefillRun, tag: &str) {
     assert_eq!(a.logits_last, b.logits_last, "{tag}: logits");
     assert_eq!(a.hidden_last_chunk, b.hidden_last_chunk, "{tag}: hidden");
     assert_eq!(a.metrics.jobs, b.metrics.jobs, "{tag}: SAU jobs");
+    // memory attribution rides the spine walk: identical however the
+    // schedule was batched or interleaved
+    assert_eq!(a.metrics.hbm_read_bytes, b.metrics.hbm_read_bytes, "{tag}: HBM attribution");
+    assert_eq!(a.metrics.cache_bypasses, b.metrics.cache_bypasses, "{tag}: bypasses");
     assert_eq!(a.index_sets.len(), b.index_sets.len(), "{tag}: layers");
     for (la, lb) in a.index_sets.iter().zip(&b.index_sets) {
         for (ia, ib) in la.iter().zip(lb) {
@@ -119,6 +123,34 @@ fn deeper_pipeline_and_unbatched_phases_do_not_change_outputs() {
         for (c, s) in done.iter().zip(&solo) {
             assert_runs_identical(&c.run, s, tag);
         }
+    }
+}
+
+#[test]
+fn open_loop_replay_honors_arrival_times() {
+    use fast_prefill::workload::prompts::RequestTrace;
+    // three requests 30 ms apart: replay must not submit them early, and
+    // outputs must still be bit-identical to solo runs
+    let gap_us = 30_000u64;
+    let reqs: Vec<TraceRequest> = (0..3u64)
+        .map(|id| TraceRequest { id, spec: spec(256, 700 + id), arrival_us: id * gap_us })
+        .collect();
+    let solo = solo_runs(&reqs);
+    let server =
+        Server::start_with("artifacts".into(), native_cfg(), ServerOptions::new(2, Policy::Fcfs))
+            .unwrap();
+    let t0 = std::time::Instant::now();
+    server.replay(&RequestTrace { requests: reqs });
+    let replay_wall = t0.elapsed();
+    assert!(
+        replay_wall >= std::time::Duration::from_micros(2 * gap_us),
+        "replay returned before the last arrival ({replay_wall:?})"
+    );
+    let done = server.drain().unwrap();
+    assert_eq!(done.len(), 3);
+    for (c, s) in done.iter().zip(&solo) {
+        assert_eq!(c.request_id, s.metrics.request_id);
+        assert_runs_identical(&c.run, s, "open-loop replay");
     }
 }
 
