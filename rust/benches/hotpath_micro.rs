@@ -1,6 +1,12 @@
 //! Hot-path microbenchmarks (EXPERIMENTS.md §Perf): the L3 kernels the
 //! coordinator spends its time in, timed with the local harness. Run via
 //! `cargo bench --bench hotpath_micro`.
+//!
+//! Besides the human-readable report, a machine-readable JSON summary of
+//! the kernel-backend comparison is written to `FASTP_BENCH_JSON`
+//! (default `target/hotpath_micro.json`, relative to the bench cwd —
+//! cargo runs benches from the package root, `rust/`). CI pins it to the
+//! workspace root and uploads it as the per-PR perf artifact.
 
 use fast_prefill::config::{FlexParams, BLOCK, TINY};
 use fast_prefill::coordinator::joblist::build_schedule;
@@ -10,6 +16,7 @@ use fast_prefill::model::forward::{attn_step_w8a8, prefill_reference_ctx};
 use fast_prefill::model::ModelWeights;
 use fast_prefill::quant::{int8_matmul_bt, quant_scale, quantize_with};
 use fast_prefill::sim::{simulate_prefill, synth_model_indices, HeadMix};
+use fast_prefill::tensor::simd::{self, Backend};
 use fast_prefill::tensor::tile::{self, KernelCtx};
 use fast_prefill::tensor::{MatF32, MatI8};
 use fast_prefill::util::bench::{bench_for, black_box};
@@ -25,7 +32,15 @@ fn main() {
     let mut rng = Prng::new(0xBE7C);
     println!("== hot-path microbenchmarks ==\n");
 
-    // --- int8 score tile (the SAU/SIGU inner matmul) ---
+    let detected = simd::detect();
+    println!(
+        "kernel dispatch: detected {} / active {} on {}\n",
+        detected.name(),
+        simd::active().name(),
+        std::env::consts::ARCH
+    );
+
+    // --- int8 score tile (the SAU/SIGU inner matmul), per backend ---
     let q = rand_mat(&mut rng, BLOCK, 64);
     let k = rand_mat(&mut rng, BLOCK, 64);
     let r = bench_for("int8_matmul_bt 128x64x128 (score tile)", 300, 20, || {
@@ -34,6 +49,19 @@ fn main() {
     println!("{r}");
     let macs = (BLOCK * BLOCK * 64) as f64;
     println!("    -> {:.2} GMAC/s", macs / r.mean_ns);
+    let r_tile_scalar = bench_for("int8_matmul_bt score tile (scalar backend)", 300, 20, || {
+        black_box(tile::int8_matmul_bt_with_bk(&q, &k, 64, Backend::Scalar));
+    });
+    println!("{r_tile_scalar}");
+    let name = format!("int8_matmul_bt score tile ({} backend)", detected.name());
+    let r_tile_simd = bench_for(&name, 300, 20, || {
+        black_box(tile::int8_matmul_bt_with_bk(&q, &k, 64, detected));
+    });
+    println!("{r_tile_simd}");
+    println!(
+        "    -> SIMD score-tile speedup {:.2}x",
+        r_tile_scalar.mean_ns / r_tile_simd.mean_ns
+    );
 
     // --- tiled vs scalar kernels on a linear-layer-shaped matmul ---
     let xa = rand_mat(&mut rng, BLOCK, 768);
@@ -109,7 +137,11 @@ fn main() {
     let flex = FlexParams::default();
     // tile = usize::MAX degenerates the blocked loops to the scalar
     // oracle's order — the pre-refactor hot path
-    let scalar_ctx = KernelCtx { pool: WorkerPool::single_threaded(), tile: usize::MAX };
+    let scalar_ctx = KernelCtx {
+        pool: WorkerPool::single_threaded(),
+        tile: usize::MAX,
+        backend: Backend::Scalar,
+    };
     let par_ctx = KernelCtx::with_threads(4);
     let r_scalar = bench_for("prefill 4K native-SAU (scalar, 1 thread)", 2000, 2, || {
         black_box(prefill_reference_ctx(&w, &toks, Some(&flex), &scalar_ctx));
@@ -128,6 +160,69 @@ fn main() {
     assert_eq!(a.logits_last, b.logits_last, "thread count changed logits");
     assert_eq!(a.first_token, b.first_token);
     println!("    -> FASTP_THREADS=1 vs 4: first-token logits bit-identical");
+
+    // --- 4K-context native-SAU prefill: scalar vs SIMD micro-kernels ---
+    // (the acceptance benchmark of the SIMD dispatch layer: same tile
+    // size, same single thread — only the inner-loop backend differs.
+    // Target >= 1.5x on a vector-capable host, outputs bit-identical.)
+    let bk_scalar_ctx = KernelCtx::single_threaded().with_backend(Backend::Scalar);
+    let bk_simd_ctx = KernelCtx::single_threaded().with_backend(detected);
+    let r_bk_scalar = bench_for("prefill 4K native-SAU (scalar backend)", 2000, 2, || {
+        black_box(prefill_reference_ctx(&w, &toks, Some(&flex), &bk_scalar_ctx));
+    });
+    println!("{r_bk_scalar}");
+    let name = format!("prefill 4K native-SAU ({} backend)", detected.name());
+    let r_bk_simd = bench_for(&name, 2000, 2, || {
+        black_box(prefill_reference_ctx(&w, &toks, Some(&flex), &bk_simd_ctx));
+    });
+    println!("{r_bk_simd}");
+    let simd_speedup = r_bk_scalar.mean_ns / r_bk_simd.mean_ns;
+    println!(
+        "    -> SIMD backend speedup {:.2}x (target >= 1.5x on a vector host; \
+         detected {})",
+        simd_speedup,
+        detected.name()
+    );
+    let sc = prefill_reference_ctx(&w, &toks, Some(&flex), &bk_scalar_ctx);
+    let sv = prefill_reference_ctx(&w, &toks, Some(&flex), &bk_simd_ctx);
+    assert_eq!(sc.logits_last, sv.logits_last, "kernel backend changed logits");
+    assert_eq!(sc.first_token, sv.first_token);
+    assert_eq!(sc.hidden.data, sv.hidden.data, "kernel backend changed hidden state");
+    println!("    -> scalar vs {} backends: outputs bit-identical", detected.name());
+
+    // machine-readable summary for the bench trajectory (CI artifact)
+    let json_path = std::env::var("FASTP_BENCH_JSON")
+        .unwrap_or_else(|_| "target/hotpath_micro.json".into());
+    let json = format!(
+        "{{\n  \"bench\": \"hotpath_micro\",\n  \"arch\": \"{}\",\n  \
+         \"detected_backend\": \"{}\",\n  \"active_backend\": \"{}\",\n  \
+         \"score_tile\": {{\"scalar_ns\": {:.1}, \"simd_ns\": {:.1}, \"speedup\": {:.3}}},\n  \
+         \"prefill_4k_native_sau\": {{\"threads\": 1, \"scalar_backend_ns\": {:.1}, \
+         \"simd_backend_ns\": {:.1}, \"simd_speedup\": {:.3}, \"bit_identical\": true}},\n  \
+         \"parallel_core\": {{\"scalar_1t_ns\": {:.1}, \"tiled_4t_ns\": {:.1}, \
+         \"speedup\": {:.3}}}\n}}\n",
+        std::env::consts::ARCH,
+        detected.name(),
+        simd::active().name(),
+        r_tile_scalar.mean_ns,
+        r_tile_simd.mean_ns,
+        r_tile_scalar.mean_ns / r_tile_simd.mean_ns,
+        r_bk_scalar.mean_ns,
+        r_bk_simd.mean_ns,
+        simd_speedup,
+        r_scalar.mean_ns,
+        r_par.mean_ns,
+        r_scalar.mean_ns / r_par.mean_ns,
+    );
+    if let Some(dir) = std::path::Path::new(&json_path).parent() {
+        if !dir.as_os_str().is_empty() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+    }
+    match std::fs::write(&json_path, &json) {
+        Ok(()) => println!("    -> wrote JSON summary to {json_path}"),
+        Err(e) => eprintln!("    -> could not write {json_path}: {e}"),
+    }
 
     // --- quantization of one chunk ---
     let x: Vec<f32> = (0..BLOCK * 768).map(|_| rng.normal()).collect();

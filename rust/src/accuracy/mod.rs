@@ -8,6 +8,12 @@
 //! `workload::needle` and DESIGN.md's substitution table): the sparse index
 //! generation AND the attention arithmetic both run in the mode under test,
 //! so both error sources of the real system are present.
+//!
+//! All matmuls and the fused softmax-accumulate here go through the tiled
+//! kernel layer, which dispatches to the process-wide selected SIMD
+//! backend (`tensor::simd`, `FASTP_KERNEL` override) — bit-identical to
+//! the scalar oracles by the kernel-layer contract, so Table III numbers
+//! do not depend on the backend (the CI kernel matrix pins this).
 
 use crate::config::{FlexParams, BLOCK};
 use crate::flexprefill::{coverage, scores};

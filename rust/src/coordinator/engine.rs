@@ -254,7 +254,11 @@ impl Engine {
     pub fn platform(&self) -> String {
         match &self.rt {
             Some(rt) => rt.platform(),
-            None => format!("native tiled kernels ({} threads)", self.ctx.threads()),
+            None => format!(
+                "native tiled kernels ({} threads, {} micro-kernels)",
+                self.ctx.threads(),
+                self.ctx.backend.name()
+            ),
         }
     }
 
@@ -306,7 +310,12 @@ impl Engine {
             n: s / BLOCK,
             t_start: Instant::now(),
             hidden: self.weights.embed_tokens(tokens),
-            metrics: PrefillMetrics { request_id, context_tokens: s, ..Default::default() },
+            metrics: PrefillMetrics {
+                request_id,
+                context_tokens: s,
+                kernel_backend: self.ctx.backend.name(),
+                ..Default::default()
+            },
             patterns: Vec::new(),
             index_sets: Vec::new(),
             density_sum: 0.0,

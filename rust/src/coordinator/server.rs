@@ -110,6 +110,7 @@ impl Completion {
     /// [`crate::metrics::ServeSummary`] aggregation.
     pub fn sample(&self) -> crate::metrics::ServeSample {
         crate::metrics::ServeSample {
+            kernel_backend: self.run.metrics.kernel_backend,
             ttft_us: self.run.metrics.ttft_us,
             queue_us: self.queue_us,
             pipeline_wait_us: self.pipeline_wait_us,

@@ -8,6 +8,7 @@
 //! identical — see DESIGN.md.
 
 
+use crate::tensor::simd::{self, Backend};
 use crate::tensor::{tile, MatF32, MatI8};
 use crate::util::pool::WorkerPool;
 
@@ -27,9 +28,16 @@ impl StreamState {
 /// Compute the dequantized score tile s = (Qhat @ Kblk^T) * qs * ks / sqrt(d).
 /// Qhat: [B, d] i8; kblk: [B, d] i8 (rows are key tokens). The exact W8A8
 /// product runs through the tiled kernel layer (identical integers to the
-/// scalar `quant::int8_matmul_bt` oracle).
+/// scalar `quant::int8_matmul_bt` oracle) on the active SIMD backend.
 fn score_tile(qhat: &MatI8, qs: f32, kblk: &MatI8, ks: f32) -> MatF32 {
-    let acc = tile::int8_matmul_bt(qhat, kblk);
+    score_tile_bk(qhat, qs, kblk, ks, simd::active())
+}
+
+/// [`score_tile`] on an explicit backend (the engine threads its
+/// `KernelCtx` backend through [`HeadJob::stream_with`]); exact
+/// integers, so every backend produces the same tile.
+fn score_tile_bk(qhat: &MatI8, qs: f32, kblk: &MatI8, ks: f32, bk: Backend) -> MatF32 {
+    let acc = tile::int8_matmul_bt_with_bk(qhat, kblk, tile::env_tile(), bk);
     let scale = qs * ks / (qhat.cols as f32).sqrt();
     MatF32 {
         rows: qhat.rows,
@@ -152,11 +160,19 @@ pub struct HeadJob<'a> {
 
 impl HeadJob<'_> {
     /// Run the sequential two-pass streaming math for this head
-    /// ([`stream_scores_generic`] over the borrowed K blocks).
+    /// ([`stream_scores_generic`] over the borrowed K blocks) on the
+    /// active SIMD backend.
     pub fn stream(&self) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        self.stream_with(simd::active())
+    }
+
+    /// [`HeadJob::stream`] on an explicit backend — how the engine's
+    /// SIGU phase threads its `KernelCtx` backend down to the score
+    /// tiles (bit-identical for every backend; the tiles are exact).
+    pub fn stream_with(&self, bk: Backend) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
         stream_scores_generic(self.kblocks.len(), self.qhat.rows, |b| {
             let (kb, ks) = self.kblocks[b];
-            score_tile(self.qhat, self.qs, kb, ks)
+            score_tile_bk(self.qhat, self.qs, kb, ks, bk)
         })
     }
 }

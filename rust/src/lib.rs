@@ -13,9 +13,11 @@
 //!    also exposed as resumable per-layer phases ([`coordinator::Phase`]).
 //!  * [`coordinator::Server`] — phase-pipelined multi-request serving on
 //!    one shared thread budget ([`util::pool::PoolBudget`]).
-//!  * [`tensor::tile`] + [`util::pool`] — the block-major kernel layer:
-//!    cache-blocked W8A8/f32 kernels and the shared worker pool
-//!    (`FASTP_THREADS`); results are bit-identical for any thread count.
+//!  * [`tensor::tile`] + [`tensor::simd`] + [`util::pool`] — the
+//!    block-major kernel layer: cache-blocked W8A8/f32 kernels with
+//!    runtime-dispatched SIMD inner loops (AVX2/NEON, `FASTP_KERNEL`
+//!    override) and the shared worker pool (`FASTP_THREADS`); results
+//!    are bit-identical for any thread count and kernel backend.
 //!  * [`flexprefill`] — Algorithm 1 (dynamic sparse index generation).
 //!  * [`sim`] — FPGA performance/energy model (Figures 5-8, Tables I/II).
 //!  * [`gpu_model`] — the A5000 baseline cost model.

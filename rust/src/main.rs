@@ -6,6 +6,7 @@
 //!   sim       FPGA + GPU model for a (model, context) point
 //!   table2    FPGA resource utilization report
 //!   ttft      Fig.5-style sweep for one model
+//!   kernels   report the SIMD micro-kernel dispatch decision
 //!   help
 
 use std::collections::HashMap;
@@ -16,6 +17,7 @@ use fast_prefill::coordinator::{Engine, EngineConfig, Policy, Server, ServerOpti
 use fast_prefill::gpu_model::simulate_gpu_prefill;
 use fast_prefill::metrics::{fmt_ctx, ServeSample, ServeSummary};
 use fast_prefill::sim::{resource_report, simulate_prefill, synth_model_indices, HeadMix};
+use fast_prefill::tensor::{simd, tile};
 use fast_prefill::util::table::{fnum, Table};
 use fast_prefill::workload::prompts::{PromptKind, PromptSpec, RequestTrace};
 
@@ -69,6 +71,7 @@ fn run(args: &[String]) -> Result<()> {
         "sim" => cmd_sim(rest),
         "table2" => cmd_table2(rest),
         "ttft" => cmd_ttft(rest),
+        "kernels" => cmd_kernels(rest),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -98,6 +101,11 @@ COMMANDS
            FPGA simulator + GPU cost model for one point
   table2   FPGA resource utilization (paper Table II)
   ttft     --model llama3.2-3b    TTFT sweep across paper context lengths
+  kernels  [--require-simd true]
+           print the micro-kernel dispatch decision (detected ISA,
+           FASTP_KERNEL override, tile edge); with --require-simd,
+           exit non-zero unless a vector backend is active — the CI
+           kernel-matrix assertion
   help     this text"
     );
 }
@@ -256,6 +264,38 @@ fn cmd_ttft(args: &[String]) -> Result<()> {
     let model: String = flag(&flags, "model", "llama3.2-3b".to_string())?;
     for ctx in config::paper_context_lengths() {
         sim_point(&model, ctx, flag(&flags, "seed", 1u64)?)?;
+    }
+    Ok(())
+}
+
+fn cmd_kernels(args: &[String]) -> Result<()> {
+    let (_, flags) = parse_flags(args);
+    let detected = simd::detect();
+    let active = simd::active();
+    let ctx = tile::KernelCtx::from_env();
+    println!("arch             : {}", std::env::consts::ARCH);
+    println!("detected backend : {}", detected.name());
+    println!(
+        "active backend   : {}  ({}={})",
+        active.name(),
+        simd::KERNEL_ENV,
+        std::env::var(simd::KERNEL_ENV).unwrap_or_else(|_| "<unset>".into())
+    );
+    println!("worker threads   : {}", ctx.threads());
+    println!(
+        "tile edge        : {}  ({}={})",
+        ctx.tile,
+        tile::TILE_ENV,
+        std::env::var(tile::TILE_ENV).unwrap_or_else(|_| "<unset>".into())
+    );
+    if flag(&flags, "require-simd", false)? && !active.is_vector() {
+        bail!(
+            "a vector backend was required but dispatch resolved '{}' \
+             (detected '{}' on {}) — the SIMD leg would silently run scalar",
+            active.name(),
+            detected.name(),
+            std::env::consts::ARCH
+        );
     }
     Ok(())
 }

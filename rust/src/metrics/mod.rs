@@ -8,6 +8,10 @@ use crate::util::table::{fnum, Table};
 pub struct PrefillMetrics {
     pub request_id: u64,
     pub context_tokens: usize,
+    /// Micro-kernel backend the engine's `KernelCtx` dispatched to
+    /// (`"scalar"` / `"avx2"` / `"neon"`; see `tensor::simd`). Empty for
+    /// defaulted metrics that never ran a kernel.
+    pub kernel_backend: &'static str,
     /// Wall-clock time-to-first-token of the functional pipeline (us).
     pub ttft_us: f64,
     /// Mean computed fraction of the causal attention matrix.
@@ -47,6 +51,9 @@ impl PrefillMetrics {
 /// layer converts its completions into these samples.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ServeSample {
+    /// Micro-kernel backend that served the request (from
+    /// [`PrefillMetrics::kernel_backend`]).
+    pub kernel_backend: &'static str,
     pub ttft_us: f64,
     pub queue_us: f64,
     /// Time parked between phases waiting for a worker (pipeline stall).
@@ -62,6 +69,9 @@ pub struct ServeSample {
 #[derive(Clone, Debug, Default)]
 pub struct ServeSummary {
     pub n: usize,
+    /// Micro-kernel backend the trace ran on (`"mixed"` if samples
+    /// disagree — they never should within one server).
+    pub kernel_backend: &'static str,
     pub ttft_mean_ms: f64,
     pub ttft_p95_ms: f64,
     pub queue_mean_ms: f64,
@@ -82,8 +92,14 @@ impl ServeSummary {
         let wait: Vec<f64> = samples.iter().map(|s| s.pipeline_wait_us / 1e3).collect();
         let e2e: Vec<f64> = samples.iter().map(|s| s.e2e_us / 1e3).collect();
         let hits: Vec<f64> = samples.iter().map(|s| s.cache_hit_rate).collect();
+        let backend = match samples.first().map(|s| s.kernel_backend) {
+            None => "",
+            Some(b) if samples.iter().all(|s| s.kernel_backend == b) => b,
+            Some(_) => "mixed",
+        };
         ServeSummary {
             n: samples.len(),
+            kernel_backend: backend,
             ttft_mean_ms: mean(&ttft),
             ttft_p95_ms: percentile(&ttft, 95.0),
             queue_mean_ms: mean(&queue),
@@ -97,8 +113,10 @@ impl ServeSummary {
 
     /// One-line report for banners/examples.
     pub fn render(&self, label: &str) -> String {
+        let backend = if self.kernel_backend.is_empty() { "?" } else { self.kernel_backend };
         format!(
-            "{label}: {} req | TTFT mean {:.0} ms p95 {:.0} ms | queue mean {:.0} ms | \
+            "{label}: {} req [{backend} kernels] | TTFT mean {:.0} ms p95 {:.0} ms | \
+             queue mean {:.0} ms | \
              phase-wait mean {:.0} ms | e2e mean {:.0} ms p95 {:.0} ms | \
              KV fetch {:.3} GB | hit {:.0}%",
             self.n,
@@ -211,6 +229,7 @@ mod tests {
     fn serve_summary_aggregates() {
         let samples: Vec<ServeSample> = (1..=4)
             .map(|i| ServeSample {
+                kernel_backend: "avx2",
                 ttft_us: i as f64 * 1000.0,
                 queue_us: 500.0,
                 pipeline_wait_us: 100.0,
@@ -221,6 +240,8 @@ mod tests {
             .collect();
         let s = ServeSummary::from_samples(&samples);
         assert_eq!(s.n, 4);
+        assert_eq!(s.kernel_backend, "avx2");
+        assert!(s.render("x").contains("[avx2 kernels]"));
         assert!((s.ttft_mean_ms - 2.5).abs() < 1e-9);
         assert!((s.queue_mean_ms - 0.5).abs() < 1e-9);
         assert!((s.pipeline_wait_mean_ms - 0.1).abs() < 1e-9);

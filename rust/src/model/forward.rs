@@ -18,6 +18,7 @@ use crate::coordinator::joblist::{build_schedule, DEFAULT_WAVE_QBLOCKS};
 use crate::flexprefill::{generate_head_index, scores, HeadIndex, HeadPattern, HeadStats};
 use crate::quant::{quant_scale, quantize_with};
 use crate::tensor::ops::{block_pool, rmsnorm, rope, silu};
+use crate::tensor::simd;
 use crate::tensor::tile::{self, KernelCtx};
 use crate::tensor::{MatF32, MatI8};
 
@@ -55,7 +56,8 @@ pub struct ChunkQkv {
 /// One W8A8 online-softmax attention step (the Rust mirror of
 /// `ref.attn_block_step_ref` / the `attn_block_step` artifact).
 /// `diag` applies the intra-block causal mask. The score matmul runs
-/// through the tiled kernel layer (exact integers, same as the oracle).
+/// through the tiled kernel layer (exact integers, same as the oracle),
+/// on the process-wide active SIMD backend.
 #[allow(clippy::too_many_arguments)]
 pub fn attn_step_w8a8(
     q: &MatI8,
@@ -69,9 +71,31 @@ pub fn attn_step_w8a8(
     acc: &mut MatF32,
     diag: bool,
 ) {
+    attn_step_w8a8_bk(q, qs, k, ks, v, vs, m, l, acc, diag, simd::active());
+}
+
+/// [`attn_step_w8a8`] on an explicit micro-kernel backend (the engine
+/// passes its `KernelCtx` backend; tests pin scalar vs vector). The
+/// score matmul is exact-integer (backend-order-free); the d-wide
+/// rescale and P@V accumulate vectorize across output columns only, so
+/// every backend is bit-identical to the scalar reference.
+#[allow(clippy::too_many_arguments)]
+pub fn attn_step_w8a8_bk(
+    q: &MatI8,
+    qs: f32,
+    k: &MatI8,
+    ks: f32,
+    v: &MatI8,
+    vs: f32,
+    m: &mut [f32],
+    l: &mut [f32],
+    acc: &mut MatF32,
+    diag: bool,
+    bk: simd::Backend,
+) {
     let b = q.rows;
     let dh = q.cols;
-    let acc_i32 = tile::int8_matmul_bt(q, k);
+    let acc_i32 = tile::int8_matmul_bt_with_bk(q, k, tile::env_tile(), bk);
     let scale = qs * ks / (dh as f32).sqrt();
     let mut p_i8 = vec![0i8; k.rows];
     for r in 0..b {
@@ -98,18 +122,12 @@ pub fn attn_step_w8a8(
         // acc = acc*corr + (P_i8 @ V_i8) * vs/127
         let arow = acc.row_mut(r);
         let pv_scale = vs / 127.0;
-        for av in arow.iter_mut() {
-            *av *= corr;
-        }
+        bk.f32_scale(arow, corr);
         for (c, &pq) in p_i8.iter().enumerate().take(k.rows) {
             if pq == 0 {
                 continue;
             }
-            let vrow = v.row(c);
-            let pf = pq as i32;
-            for (av, &vv) in arow.iter_mut().zip(vrow) {
-                *av += (pf * vv as i32) as f32 * pv_scale;
-            }
+            bk.f32_axpy_i8(arow, v.row(c), pq as i32, pv_scale);
         }
     }
 }
@@ -285,7 +303,7 @@ pub fn sigu_indices(
             qs: chunks[n - 1].qs,
             kblocks: chunks.iter().map(|c| (&c.k[g], c.ks)).collect(),
         };
-        let (vertical, slash, a_hat) = job.stream();
+        let (vertical, slash, a_hat) = job.stream_with(ctx.backend);
         let kpool = MatF32::from_fn(n, cfg.d_head, |b, c| chunks[b].kpool.at(g, c));
         let qpool_all = MatF32::from_fn(n, cfg.d_head, |b, c| chunks[b].qpool.at(h, c));
         let qpool_hat: Vec<f32> = qpool_all.row(n - 1).to_vec();
@@ -344,7 +362,7 @@ pub fn sau_layer(
             let mut acc = MatF32::zeros(BLOCK, cfg.d_head);
             for &kb in &state_kvs[h * wq + (qb - wave.q_start as usize)] {
                 let kb = kb as usize;
-                attn_step_w8a8(
+                attn_step_w8a8_bk(
                     &chunks[qb].q[h],
                     chunks[qb].qs,
                     &chunks[kb].k[g],
@@ -355,6 +373,7 @@ pub fn sau_layer(
                     &mut l,
                     &mut acc,
                     kb == qb,
+                    ctx.backend,
                 );
             }
             attn_finalize(&l, &acc)
@@ -434,7 +453,7 @@ pub fn sau_layer_batch(
             let mut acc = MatF32::zeros(BLOCK, cfg.d_head);
             for &kb in &state_kvs[st] {
                 let kb = kb as usize;
-                attn_step_w8a8(
+                attn_step_w8a8_bk(
                     &chunks[qb].q[h],
                     chunks[qb].qs,
                     &chunks[kb].k[g],
@@ -445,6 +464,7 @@ pub fn sau_layer_batch(
                     &mut l,
                     &mut acc,
                     kb == qb,
+                    ctx.backend,
                 );
             }
             attn_finalize(&l, &acc)

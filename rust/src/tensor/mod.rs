@@ -5,9 +5,11 @@
 //! FlexPrefill reference implementation. It is deliberately simple and
 //! allocation-transparent. The scalar kernels in [`ops`] are the bit-level
 //! oracle; the performance path is the cache-blocked kernel layer in
-//! [`tile`], driven by the shared worker pool (`util::pool`).
+//! [`tile`], driven by the shared worker pool (`util::pool`) with inner
+//! loops dispatched through the runtime-selected SIMD backend ([`simd`]).
 
 pub mod ops;
+pub mod simd;
 pub mod tile;
 
 /// Row-major f32 matrix.

@@ -1,0 +1,592 @@
+//! Runtime-dispatched SIMD micro-kernels — the per-core width the paper's
+//! MPU gets from its wide DSP/LUT integer lanes, recovered on the CPU
+//! mirror with `core::arch` intrinsics.
+//!
+//! A [`Backend`] is selected once per process ([`active`]): the best
+//! vector ISA the host supports (`is_x86_feature_detected!("avx2")` on
+//! x86_64, NEON — architecturally mandatory — on aarch64), overridable
+//! with the `FASTP_KERNEL` env var (`scalar` forces the scalar reference,
+//! `simd` asks for the detected vector backend). The blocked kernels in
+//! [`crate::tensor::tile`] and the SAU step in `model::forward` dispatch
+//! their inner loops through the selected backend; `KernelCtx` carries
+//! the backend so the engine can record it in `PrefillMetrics` and tests
+//! can pin both backends against each other in one process.
+//!
+//! Numerics contract (the reason every primitive looks the way it does):
+//!
+//!  * **integer primitives are exact** — i8xi8 products accumulate in
+//!    i32 with no saturation in range, so any lane order is bit-identical
+//!    to the scalar oracle (|dot| <= k * 127^2 stays far below i32::MAX
+//!    for every shape this repo uses).
+//!  * **f32 primitives vectorize across independent output columns,
+//!    never within k** — each output element sees the *same* sequence of
+//!    (multiply, add) roundings as the scalar code, just in a different
+//!    lane. No FMA is ever emitted (a fused multiply-add rounds once
+//!    where mul-then-add rounds twice, which would break bit-identity
+//!    with the `tensor::ops` / `quant` oracles).
+//!  * tails shorter than the vector width run the scalar formula, so
+//!    ragged shapes (k, n not multiples of 8/16) are covered.
+//!
+//! [`Backend`] variants are plain public values, so dispatch re-checks
+//! ISA support at the call boundary (one cached-flag load): a vector
+//! variant the host cannot run degrades to the scalar formula instead
+//! of executing unsupported instructions. [`detect`] / [`resolve`] /
+//! [`active`] never hand out an unsupported variant in the first place.
+
+use std::sync::OnceLock;
+
+/// Environment variable selecting the kernel backend:
+/// `scalar` | `simd` (the detected vector ISA; falls back to scalar —
+/// loudly — when the host has none). Unset = auto-detect.
+pub const KERNEL_ENV: &str = "FASTP_KERNEL";
+
+/// A micro-kernel backend. `Scalar` is the bit-level reference; the
+/// vector variants are bit-identical by the contract above.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Plain Rust loops — the reference the vector paths are pinned to.
+    Scalar,
+    /// x86_64 AVX2 (256-bit lanes).
+    Avx2,
+    /// aarch64 NEON/ASIMD (128-bit lanes).
+    Neon,
+}
+
+static ACTIVE: OnceLock<Backend> = OnceLock::new();
+
+/// Cached AVX2 capability check — the soundness gate in front of every
+/// `unsafe` AVX2 call (a `Backend::Avx2` constructed on a non-AVX2 host
+/// must fall back to scalar, not execute unsupported instructions).
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    static AVX2: OnceLock<bool> = OnceLock::new();
+    *AVX2.get_or_init(|| std::arch::is_x86_feature_detected!("avx2"))
+}
+
+impl Backend {
+    /// Stable lowercase name for metrics / banners / JSON.
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Avx2 => "avx2",
+            Backend::Neon => "neon",
+        }
+    }
+
+    /// True for the vector backends (what the CI kernel-matrix asserts
+    /// on its `FASTP_KERNEL=simd` leg).
+    pub fn is_vector(self) -> bool {
+        !matches!(self, Backend::Scalar)
+    }
+
+    // ------------------------------------------------------------------
+    // primitives (each dispatches to the scalar reference or an
+    // arch-gated vector implementation below)
+    // ------------------------------------------------------------------
+
+    /// Exact dot product `sum_i a[i] * b[i]` in i32 (order-free).
+    #[inline]
+    pub fn i8_dot(self, a: &[i8], b: &[i8]) -> i32 {
+        debug_assert_eq!(a.len(), b.len());
+        match self {
+            Backend::Scalar => i8_dot_scalar(a, b),
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 if avx2_available() => unsafe { i8_dot_avx2(a, b) },
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => unsafe { i8_dot_neon(a, b) },
+            _ => i8_dot_scalar(a, b),
+        }
+    }
+
+    /// Exact `dst[j] += a * b[j]` in i32 across output columns.
+    #[inline]
+    pub fn i32_axpy_i8(self, dst: &mut [i32], b: &[i8], a: i32) {
+        debug_assert_eq!(dst.len(), b.len());
+        match self {
+            Backend::Scalar => i32_axpy_i8_scalar(dst, b, a),
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 if avx2_available() => unsafe { i32_axpy_i8_avx2(dst, b, a) },
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => unsafe { i32_axpy_i8_neon(dst, b, a) },
+            _ => i32_axpy_i8_scalar(dst, b, a),
+        }
+    }
+
+    /// `dst[j] *= c` — one rounding per element, lane order irrelevant.
+    #[inline]
+    pub fn f32_scale(self, dst: &mut [f32], c: f32) {
+        match self {
+            Backend::Scalar => f32_scale_scalar(dst, c),
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 if avx2_available() => unsafe { f32_scale_avx2(dst, c) },
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => unsafe { f32_scale_neon(dst, c) },
+            _ => f32_scale_scalar(dst, c),
+        }
+    }
+
+    /// `dst[j] += p * x[j]` — multiply then add (two roundings, exactly
+    /// the scalar sequence; deliberately *not* an FMA).
+    #[inline]
+    pub fn f32_axpy(self, dst: &mut [f32], x: &[f32], p: f32) {
+        debug_assert_eq!(dst.len(), x.len());
+        match self {
+            Backend::Scalar => f32_axpy_scalar(dst, x, p),
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 if avx2_available() => unsafe { f32_axpy_avx2(dst, x, p) },
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => unsafe { f32_axpy_neon(dst, x, p) },
+            _ => f32_axpy_scalar(dst, x, p),
+        }
+    }
+
+    /// `dst[j] += ((pf * v[j]) as f32) * scale` — the W8A8 P@V
+    /// accumulate: exact integer product, exact i32→f32 conversion
+    /// (|pf * v| <= 127^2 < 2^24), then mul + add (two roundings).
+    #[inline]
+    pub fn f32_axpy_i8(self, dst: &mut [f32], v: &[i8], pf: i32, scale: f32) {
+        debug_assert_eq!(dst.len(), v.len());
+        match self {
+            Backend::Scalar => f32_axpy_i8_scalar(dst, v, pf, scale),
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 if avx2_available() => unsafe { f32_axpy_i8_avx2(dst, v, pf, scale) },
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => unsafe { f32_axpy_i8_neon(dst, v, pf, scale) },
+            _ => f32_axpy_i8_scalar(dst, v, pf, scale),
+        }
+    }
+}
+
+/// Best vector backend the host supports; `Scalar` when there is none.
+pub fn detect() -> Backend {
+    #[cfg(target_arch = "x86_64")]
+    let bk = if avx2_available() { Backend::Avx2 } else { Backend::Scalar };
+    // NEON/ASIMD is architecturally mandatory on AArch64.
+    #[cfg(target_arch = "aarch64")]
+    let bk = Backend::Neon;
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    let bk = Backend::Scalar;
+    bk
+}
+
+/// Resolve a `FASTP_KERNEL` value (pure — unit-testable without touching
+/// the process environment). `None`/empty = auto-detect; `scalar` forces
+/// the reference; `simd` asks for the detected vector backend and warns
+/// when the host has none (the CI kernel-matrix turns that warning into
+/// a hard failure via `fastp kernels --require-simd`).
+pub fn resolve(raw: Option<&str>) -> Backend {
+    let norm = raw.map(|s| s.trim().to_ascii_lowercase());
+    match norm.as_deref() {
+        None | Some("") => detect(),
+        Some("scalar") => Backend::Scalar,
+        Some("simd") => {
+            let bk = detect();
+            if !bk.is_vector() {
+                eprintln!(
+                    "warning: {KERNEL_ENV}=simd but no vector ISA was detected; \
+                     dispatch fell back to scalar"
+                );
+            }
+            bk
+        }
+        Some(other) => {
+            eprintln!(
+                "warning: unknown {KERNEL_ENV}={other:?} (expected scalar|simd); \
+                 auto-detecting"
+            );
+            detect()
+        }
+    }
+}
+
+/// The process-wide selected backend (env override + detection, resolved
+/// once). `KernelCtx` constructors default to this; tests that need both
+/// backends in one process pass an explicit [`Backend`] instead.
+pub fn active() -> Backend {
+    *ACTIVE.get_or_init(|| resolve(std::env::var(KERNEL_ENV).ok().as_deref()))
+}
+
+// ---------------------------------------------------------------------------
+// scalar references (the bit-level definitions)
+// ---------------------------------------------------------------------------
+
+fn i8_dot_scalar(a: &[i8], b: &[i8]) -> i32 {
+    let mut s = 0i32;
+    for (&x, &y) in a.iter().zip(b) {
+        s += x as i32 * y as i32;
+    }
+    s
+}
+
+fn i32_axpy_i8_scalar(dst: &mut [i32], b: &[i8], a: i32) {
+    for (o, &bv) in dst.iter_mut().zip(b) {
+        *o += a * bv as i32;
+    }
+}
+
+fn f32_scale_scalar(dst: &mut [f32], c: f32) {
+    for v in dst.iter_mut() {
+        *v *= c;
+    }
+}
+
+fn f32_axpy_scalar(dst: &mut [f32], x: &[f32], p: f32) {
+    for (o, &xv) in dst.iter_mut().zip(x) {
+        *o += p * xv;
+    }
+}
+
+fn f32_axpy_i8_scalar(dst: &mut [f32], v: &[i8], pf: i32, scale: f32) {
+    for (o, &vv) in dst.iter_mut().zip(v) {
+        *o += (pf * vv as i32) as f32 * scale;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// x86_64 AVX2
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn i8_dot_avx2(a: &[i8], b: &[i8]) -> i32 {
+    use core::arch::x86_64::*;
+    let n = a.len();
+    let mut acc = _mm256_setzero_si256();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        // 16 i8 lanes -> 16 i16 lanes; madd pairs them into 8 exact i32
+        // partial sums (|pair| <= 2 * 127^2, overflow-free for any k
+        // below ~2^16 blocks of accumulation).
+        let va = _mm_loadu_si128(a.as_ptr().add(i) as *const __m128i);
+        let vb = _mm_loadu_si128(b.as_ptr().add(i) as *const __m128i);
+        let wa = _mm256_cvtepi8_epi16(va);
+        let wb = _mm256_cvtepi8_epi16(vb);
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(wa, wb));
+        i += 16;
+    }
+    let lo = _mm256_castsi256_si128(acc);
+    let hi = _mm256_extracti128_si256::<1>(acc);
+    let s = _mm_add_epi32(lo, hi);
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b01_00_11_10>(s));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b00_00_00_01>(s));
+    let mut sum = _mm_cvtsi128_si32(s);
+    while i < n {
+        sum += *a.get_unchecked(i) as i32 * *b.get_unchecked(i) as i32;
+        i += 1;
+    }
+    sum
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn i32_axpy_i8_avx2(dst: &mut [i32], b: &[i8], a: i32) {
+    use core::arch::x86_64::*;
+    let n = dst.len();
+    let d = dst.as_mut_ptr();
+    let va = _mm256_set1_epi32(a);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let bv = _mm_loadl_epi64(b.as_ptr().add(i) as *const __m128i);
+        let w = _mm256_cvtepi8_epi32(bv);
+        let prod = _mm256_mullo_epi32(w, va);
+        let dv = _mm256_loadu_si256(d.add(i) as *const __m256i);
+        _mm256_storeu_si256(d.add(i) as *mut __m256i, _mm256_add_epi32(dv, prod));
+        i += 8;
+    }
+    while i < n {
+        *d.add(i) += a * *b.get_unchecked(i) as i32;
+        i += 1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn f32_scale_avx2(dst: &mut [f32], c: f32) {
+    use core::arch::x86_64::*;
+    let n = dst.len();
+    let d = dst.as_mut_ptr();
+    let vc = _mm256_set1_ps(c);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let v = _mm256_loadu_ps(d.add(i));
+        _mm256_storeu_ps(d.add(i), _mm256_mul_ps(v, vc));
+        i += 8;
+    }
+    while i < n {
+        *d.add(i) *= c;
+        i += 1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn f32_axpy_avx2(dst: &mut [f32], x: &[f32], p: f32) {
+    use core::arch::x86_64::*;
+    let n = dst.len();
+    let d = dst.as_mut_ptr();
+    let vp = _mm256_set1_ps(p);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+        let dv = _mm256_loadu_ps(d.add(i));
+        // mul then add — NOT _mm256_fmadd_ps (see module contract)
+        _mm256_storeu_ps(d.add(i), _mm256_add_ps(dv, _mm256_mul_ps(vp, xv)));
+        i += 8;
+    }
+    while i < n {
+        *d.add(i) += p * *x.get_unchecked(i);
+        i += 1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn f32_axpy_i8_avx2(dst: &mut [f32], v: &[i8], pf: i32, scale: f32) {
+    use core::arch::x86_64::*;
+    let n = dst.len();
+    let d = dst.as_mut_ptr();
+    let vpf = _mm256_set1_epi32(pf);
+    let vs = _mm256_set1_ps(scale);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let bv = _mm_loadl_epi64(v.as_ptr().add(i) as *const __m128i);
+        let w = _mm256_cvtepi8_epi32(bv);
+        let prod = _mm256_cvtepi32_ps(_mm256_mullo_epi32(w, vpf)); // exact
+        let dv = _mm256_loadu_ps(d.add(i));
+        _mm256_storeu_ps(d.add(i), _mm256_add_ps(dv, _mm256_mul_ps(prod, vs)));
+        i += 8;
+    }
+    while i < n {
+        *d.add(i) += (pf * *v.get_unchecked(i) as i32) as f32 * scale;
+        i += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// aarch64 NEON
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn i8_dot_neon(a: &[i8], b: &[i8]) -> i32 {
+    use core::arch::aarch64::*;
+    let n = a.len();
+    let mut acc = vdupq_n_s32(0);
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let va = vld1q_s8(a.as_ptr().add(i));
+        let vb = vld1q_s8(b.as_ptr().add(i));
+        let lo = vmull_s8(vget_low_s8(va), vget_low_s8(vb)); // exact i16x8
+        let hi = vmull_s8(vget_high_s8(va), vget_high_s8(vb));
+        acc = vpadalq_s16(acc, lo); // pairwise-widen into i32 lanes
+        acc = vpadalq_s16(acc, hi);
+        i += 16;
+    }
+    let mut sum = vaddvq_s32(acc);
+    while i < n {
+        sum += *a.get_unchecked(i) as i32 * *b.get_unchecked(i) as i32;
+        i += 1;
+    }
+    sum
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn i32_axpy_i8_neon(dst: &mut [i32], b: &[i8], a: i32) {
+    use core::arch::aarch64::*;
+    let n = dst.len();
+    let d = dst.as_mut_ptr();
+    let va = vdupq_n_s32(a);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let w = vmovl_s8(vld1_s8(b.as_ptr().add(i))); // i16x8
+        let lo = vmulq_s32(vmovl_s16(vget_low_s16(w)), va);
+        let hi = vmulq_s32(vmovl_s16(vget_high_s16(w)), va);
+        vst1q_s32(d.add(i), vaddq_s32(vld1q_s32(d.add(i)), lo));
+        vst1q_s32(d.add(i + 4), vaddq_s32(vld1q_s32(d.add(i + 4)), hi));
+        i += 8;
+    }
+    while i < n {
+        *d.add(i) += a * *b.get_unchecked(i) as i32;
+        i += 1;
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn f32_scale_neon(dst: &mut [f32], c: f32) {
+    use core::arch::aarch64::*;
+    let n = dst.len();
+    let d = dst.as_mut_ptr();
+    let vc = vdupq_n_f32(c);
+    let mut i = 0usize;
+    while i + 4 <= n {
+        vst1q_f32(d.add(i), vmulq_f32(vld1q_f32(d.add(i)), vc));
+        i += 4;
+    }
+    while i < n {
+        *d.add(i) *= c;
+        i += 1;
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn f32_axpy_neon(dst: &mut [f32], x: &[f32], p: f32) {
+    use core::arch::aarch64::*;
+    let n = dst.len();
+    let d = dst.as_mut_ptr();
+    let vp = vdupq_n_f32(p);
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let xv = vld1q_f32(x.as_ptr().add(i));
+        let dv = vld1q_f32(d.add(i));
+        // vmul + vadd, NOT vfmaq/vmlaq (which may fuse; see contract)
+        vst1q_f32(d.add(i), vaddq_f32(dv, vmulq_f32(vp, xv)));
+        i += 4;
+    }
+    while i < n {
+        *d.add(i) += p * *x.get_unchecked(i);
+        i += 1;
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn f32_axpy_i8_neon(dst: &mut [f32], v: &[i8], pf: i32, scale: f32) {
+    use core::arch::aarch64::*;
+    let n = dst.len();
+    let d = dst.as_mut_ptr();
+    let vpf = vdupq_n_s32(pf);
+    let vs = vdupq_n_f32(scale);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let w = vmovl_s8(vld1_s8(v.as_ptr().add(i))); // i16x8
+        let lo = vmulq_s32(vmovl_s16(vget_low_s16(w)), vpf); // exact
+        let hi = vmulq_s32(vmovl_s16(vget_high_s16(w)), vpf);
+        let flo = vmulq_f32(vcvtq_f32_s32(lo), vs);
+        let fhi = vmulq_f32(vcvtq_f32_s32(hi), vs);
+        vst1q_f32(d.add(i), vaddq_f32(vld1q_f32(d.add(i)), flo));
+        vst1q_f32(d.add(i + 4), vaddq_f32(vld1q_f32(d.add(i + 4)), fhi));
+        i += 8;
+    }
+    while i < n {
+        *d.add(i) += (pf * *v.get_unchecked(i) as i32) as f32 * scale;
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    fn rand_i8(rng: &mut Prng, n: usize) -> Vec<i8> {
+        (0..n).map(|_| rng.i8_sym()).collect()
+    }
+
+    fn rand_f32(rng: &mut Prng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    /// Every length in 0..=67 covers empty, sub-width, exact-width and
+    /// ragged-tail cases for both 128- and 256-bit lanes.
+    const LENS: std::ops::RangeInclusive<usize> = 0..=67;
+
+    #[test]
+    fn vector_i8_dot_matches_scalar_exactly() {
+        let bk = detect();
+        let mut rng = Prng::new(0x51D1);
+        for n in LENS {
+            let a = rand_i8(&mut rng, n);
+            let b = rand_i8(&mut rng, n);
+            assert_eq!(bk.i8_dot(&a, &b), Backend::Scalar.i8_dot(&a, &b), "n={n}");
+        }
+    }
+
+    #[test]
+    fn vector_i32_axpy_i8_matches_scalar_exactly() {
+        let bk = detect();
+        let mut rng = Prng::new(0x51D2);
+        for n in LENS {
+            let b = rand_i8(&mut rng, n);
+            let init: Vec<i32> = (0..n).map(|_| rng.below(1000) as i32 - 500).collect();
+            for a in [-128i32, -3, 0, 7, 127] {
+                let mut want = init.clone();
+                Backend::Scalar.i32_axpy_i8(&mut want, &b, a);
+                let mut got = init.clone();
+                bk.i32_axpy_i8(&mut got, &b, a);
+                assert_eq!(got, want, "n={n} a={a}");
+            }
+        }
+    }
+
+    #[test]
+    fn vector_f32_primitives_bit_identical_to_scalar() {
+        let bk = detect();
+        let mut rng = Prng::new(0x51D3);
+        for n in LENS {
+            let x = rand_f32(&mut rng, n);
+            let init = rand_f32(&mut rng, n);
+            for p in [0.0f32, -0.75, 1.5e-3, 3.0] {
+                let mut want = init.clone();
+                f32_scale_scalar(&mut want, p);
+                f32_axpy_scalar(&mut want, &x, p);
+                let mut got = init.clone();
+                bk.f32_scale(&mut got, p);
+                bk.f32_axpy(&mut got, &x, p);
+                // bitwise, not approximate: compare the raw bits
+                let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(gb, wb, "n={n} p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn vector_f32_axpy_i8_bit_identical_to_scalar() {
+        let bk = detect();
+        let mut rng = Prng::new(0x51D4);
+        for n in LENS {
+            let v = rand_i8(&mut rng, n);
+            let init = rand_f32(&mut rng, n);
+            for pf in [-127i32, -1, 1, 64, 127] {
+                let mut want = init.clone();
+                f32_axpy_i8_scalar(&mut want, &v, pf, 0.02);
+                let mut got = init.clone();
+                bk.f32_axpy_i8(&mut got, &v, pf, 0.02);
+                let wb: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
+                let gb: Vec<u32> = got.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(gb, wb, "n={n} pf={pf}");
+            }
+        }
+    }
+
+    #[test]
+    fn resolve_honors_both_override_values() {
+        assert_eq!(resolve(Some("scalar")), Backend::Scalar);
+        assert_eq!(resolve(Some(" SCALAR ")), Backend::Scalar);
+        assert_eq!(resolve(Some("simd")), detect());
+        assert_eq!(resolve(None), detect());
+        assert_eq!(resolve(Some("")), detect());
+        // unknown values are loud but never fatal
+        assert_eq!(resolve(Some("banana")), detect());
+    }
+
+    #[test]
+    fn names_are_stable() {
+        assert_eq!(Backend::Scalar.name(), "scalar");
+        assert_eq!(Backend::Avx2.name(), "avx2");
+        assert_eq!(Backend::Neon.name(), "neon");
+        assert!(!Backend::Scalar.is_vector());
+        assert!(Backend::Avx2.is_vector() && Backend::Neon.is_vector());
+    }
+
+    #[test]
+    fn active_is_detect_or_env_forced() {
+        // whatever the env says, active() must be a backend this host can
+        // actually run: scalar or the detected vector ISA
+        let a = active();
+        assert!(a == Backend::Scalar || a == detect());
+    }
+}

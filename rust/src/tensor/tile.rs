@@ -6,16 +6,35 @@
 //! [`crate::quant`] remain the bit-level oracles; every kernel here is
 //! asserted against them by unit and property tests.
 //!
+//! Inner loops dispatch through the runtime-selected SIMD backend
+//! ([`crate::tensor::simd`]): AVX2 on x86_64, NEON on aarch64, scalar
+//! otherwise, overridable with `FASTP_KERNEL={scalar,simd}`. Every
+//! public kernel has a `*_bk` variant taking an explicit
+//! [`Backend`] so tests can pin both backends in one process; the
+//! plain entry points use the process-wide [`simd::active`] selection.
+//!
 //! Numerics contract:
 //!  * integer kernels are exact (identical accumulator values in any
-//!    loop order);
+//!    loop order — which is why the i8 dot may vectorize *within* k);
 //!  * f32 kernels accumulate each output element left-to-right in
 //!    ascending-k order — the *same* addition sequence as the scalar
-//!    oracle — so tiling does not perturb results;
+//!    oracle — so tiling does not perturb results. The SIMD f32 paths
+//!    therefore vectorize **across independent output columns, never
+//!    within k** (and never emit FMA); `matmul_bt`'s k-major layout
+//!    admits no such columns, so its f32 inner dot stays scalar on
+//!    every backend;
 //!  * nothing here depends on the worker-thread count: parallel callers
 //!    split work at job granularity (see [`crate::util::pool`]) and each
 //!    job runs these kernels sequentially.
+//!
+//! Tile sizing: [`TILE`] by default, overridable process-wide with
+//! `FASTP_TILE` (validated once: rejects 0 and non-multiples of 8 with
+//! a warning, falling back to the default). Tile size never changes
+//! results (property-tested) — only cache behavior.
 
+use std::sync::OnceLock;
+
+use crate::tensor::simd::{self, Backend};
 use crate::tensor::{MatF32, MatI8};
 use crate::util::pool::WorkerPool;
 
@@ -23,36 +42,88 @@ use crate::util::pool::WorkerPool;
 /// operand stay L1-resident); BLOCK-sized (128) operands split into four.
 pub const TILE: usize = 64;
 
+/// Environment variable overriding the cache tile edge for every context
+/// and default-tile kernel entry point (validated; see [`parse_tile_override`]).
+pub const TILE_ENV: &str = "FASTP_TILE";
+
+static TILE_FROM_ENV: OnceLock<usize> = OnceLock::new();
+
+/// Validate a `FASTP_TILE` value: a positive multiple of 8 (vector lanes
+/// never straddle a ragged tile edge for no reason; 8 divides both the
+/// 128-bit and 256-bit lane widths for every element type used here).
+pub fn parse_tile_override(raw: &str) -> Result<usize, String> {
+    let v: usize = raw
+        .trim()
+        .parse()
+        .map_err(|_| format!("{TILE_ENV}={raw:?} is not an unsigned integer"))?;
+    if v == 0 {
+        return Err(format!("{TILE_ENV} must be > 0"));
+    }
+    if v % 8 != 0 {
+        return Err(format!("{TILE_ENV}={v} must be a multiple of 8"));
+    }
+    Ok(v)
+}
+
+/// The single `FASTP_TILE` parse point (resolved once per process).
+/// Invalid values warn and fall back to [`TILE`] rather than aborting.
+pub fn env_tile() -> usize {
+    *TILE_FROM_ENV.get_or_init(|| match std::env::var(TILE_ENV) {
+        Err(_) => TILE,
+        Ok(raw) => match parse_tile_override(&raw) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("warning: ignoring tile override: {e} (using default {TILE})");
+                TILE
+            }
+        },
+    })
+}
+
 /// Kernel-layer context threaded through the engine phases: the shared
-/// worker pool plus the tile configuration.
+/// worker pool, the tile configuration and the selected SIMD backend.
 #[derive(Clone, Debug)]
 pub struct KernelCtx {
     pub pool: WorkerPool,
     /// Cache tile edge used by the blocked kernels.
     pub tile: usize,
+    /// Micro-kernel backend the inner loops dispatch to. Defaults to the
+    /// process-wide selection (`FASTP_KERNEL` / ISA detection).
+    pub backend: Backend,
 }
 
 impl KernelCtx {
-    /// Pool sized by `FASTP_THREADS` (default: available parallelism),
-    /// default tile size.
-    pub fn from_env() -> KernelCtx {
-        KernelCtx { pool: WorkerPool::from_env(), tile: TILE }
+    /// The shared constructor core: env-resolved tile edge + backend
+    /// around the given pool (the one place both env overrides land).
+    fn over_pool(pool: WorkerPool) -> KernelCtx {
+        KernelCtx { pool, tile: env_tile(), backend: simd::active() }
     }
 
-    /// Explicit worker count, default tile size.
+    /// Pool sized by `FASTP_THREADS` (default: available parallelism).
+    pub fn from_env() -> KernelCtx {
+        KernelCtx::over_pool(WorkerPool::from_env())
+    }
+
+    /// Explicit worker count.
     pub fn with_threads(n: usize) -> KernelCtx {
-        KernelCtx { pool: WorkerPool::with_threads(n), tile: TILE }
+        KernelCtx::over_pool(WorkerPool::with_threads(n))
     }
 
     /// Everything inline on the caller thread.
     pub fn single_threaded() -> KernelCtx {
-        KernelCtx { pool: WorkerPool::single_threaded(), tile: TILE }
+        KernelCtx::over_pool(WorkerPool::single_threaded())
     }
 
-    /// Context over an explicit pool (e.g. a budget-shared serving pool),
-    /// default tile size.
+    /// Context over an explicit pool (e.g. a budget-shared serving pool).
     pub fn with_pool(pool: WorkerPool) -> KernelCtx {
-        KernelCtx { pool, tile: TILE }
+        KernelCtx::over_pool(pool)
+    }
+
+    /// This context with a forced micro-kernel backend (tests, benches;
+    /// results are bit-identical for every backend by contract).
+    pub fn with_backend(mut self, backend: Backend) -> KernelCtx {
+        self.backend = backend;
+        self
     }
 
     pub fn threads(&self) -> usize {
@@ -63,22 +134,22 @@ impl KernelCtx {
     /// engine's per-phase lease hint (e.g. IndexGen asks for a small
     /// share so co-resident SAU/QKV fan-outs keep the cores).
     pub fn with_want_cap(&self, cap: usize) -> KernelCtx {
-        KernelCtx { pool: self.pool.with_want_cap(cap), tile: self.tile }
+        KernelCtx { pool: self.pool.with_want_cap(cap), ..self.clone() }
     }
 
     /// Tiled f32 matmul (C = A @ B).
     pub fn matmul(&self, a: &MatF32, b: &MatF32) -> MatF32 {
-        matmul_with(a, b, self.tile)
+        matmul_with_bk(a, b, self.tile, self.backend)
     }
 
     /// Tiled f32 matmul against a transposed B (C = A @ B^T).
     pub fn matmul_bt(&self, a: &MatF32, b: &MatF32) -> MatF32 {
-        matmul_bt_with(a, b, self.tile)
+        matmul_bt_with_bk(a, b, self.tile, self.backend)
     }
 
     /// Tiled W8A8 matmul, dequantized (C_f32 = (A_i8 @ B_i8) * sa * sb).
     pub fn int8_matmul_deq(&self, a: &MatI8, sa: f32, b: &MatI8, sb: f32) -> MatF32 {
-        let acc = int8_matmul_with(a, b, self.tile);
+        let acc = int8_matmul_with_bk(a, b, self.tile, self.backend);
         let s = sa * sb;
         MatF32 {
             rows: a.rows,
@@ -89,7 +160,7 @@ impl KernelCtx {
 
     /// Tiled exact W8A8 score matmul (C_i32 = A_i8 @ B_i8^T).
     pub fn int8_matmul_bt(&self, a: &MatI8, bt: &MatI8) -> Vec<i32> {
-        int8_matmul_bt_with(a, bt, self.tile)
+        int8_matmul_bt_with_bk(a, bt, self.tile, self.backend)
     }
 }
 
@@ -103,14 +174,22 @@ impl Default for KernelCtx {
 // f32 kernels
 // ---------------------------------------------------------------------------
 
-/// Tiled C[M,N] = A[M,K] @ B[K,N] with the default tile size.
+/// Tiled C[M,N] = A[M,K] @ B[K,N] with the env-default tile size and the
+/// active backend.
 pub fn matmul(a: &MatF32, b: &MatF32) -> MatF32 {
-    matmul_with(a, b, TILE)
+    matmul_with_bk(a, b, env_tile(), simd::active())
 }
 
-/// Tiled f32 matmul with an explicit tile edge. Accumulation per output
-/// element is ascending-k left-to-right — the scalar oracle's order.
+/// Tiled f32 matmul with an explicit tile edge (active backend).
 pub fn matmul_with(a: &MatF32, b: &MatF32, tile: usize) -> MatF32 {
+    matmul_with_bk(a, b, tile, simd::active())
+}
+
+/// Tiled f32 matmul with explicit tile edge and backend. Accumulation
+/// per output element is ascending-k left-to-right — the scalar oracle's
+/// order; the backend vectorizes only across the independent output
+/// columns of each `j`-tile row.
+pub fn matmul_with_bk(a: &MatF32, b: &MatF32, tile: usize, bk: Backend) -> MatF32 {
     assert_eq!(a.cols, b.rows, "tile::matmul dims");
     let tile = tile.max(1);
     let (m, k, n) = (a.rows, a.cols, b.cols);
@@ -129,10 +208,7 @@ pub fn matmul_with(a: &MatF32, b: &MatF32, tile: usize) -> MatF32 {
                         if av == 0.0 {
                             continue; // same skip as the scalar oracle
                         }
-                        let brow = &b.row(kk)[j0..j1];
-                        for (o, &bv) in orow.iter_mut().zip(brow) {
-                            *o += av * bv;
-                        }
+                        bk.f32_axpy(orow, &b.row(kk)[j0..j1], av);
                     }
                 }
             }
@@ -141,14 +217,23 @@ pub fn matmul_with(a: &MatF32, b: &MatF32, tile: usize) -> MatF32 {
     out
 }
 
-/// Tiled C[M,N] = A[M,K] @ B^T with B given as [N,K] (score-tile shape).
+/// Tiled C[M,N] = A[M,K] @ B^T with B given as [N,K] (score-tile shape),
+/// env-default tile size, active backend.
 pub fn matmul_bt(a: &MatF32, b: &MatF32) -> MatF32 {
-    matmul_bt_with(a, b, TILE)
+    matmul_bt_with_bk(a, b, env_tile(), simd::active())
 }
 
-/// Tiled f32 `matmul_bt` with an explicit tile edge; the running sum per
-/// output element crosses k-tiles left-to-right (oracle order).
+/// Tiled f32 `matmul_bt` with an explicit tile edge (active backend).
 pub fn matmul_bt_with(a: &MatF32, b: &MatF32, tile: usize) -> MatF32 {
+    matmul_bt_with_bk(a, b, tile, simd::active())
+}
+
+/// Tiled f32 `matmul_bt` with explicit tile edge and backend; the
+/// running sum per output element crosses k-tiles left-to-right (oracle
+/// order). The k-major B layout leaves no contiguous independent output
+/// columns, so the inner dot stays scalar on every backend — a vector
+/// dot would reorder f32 additions and break bit-identity.
+pub fn matmul_bt_with_bk(a: &MatF32, b: &MatF32, tile: usize, _bk: Backend) -> MatF32 {
     assert_eq!(a.cols, b.cols, "tile::matmul_bt dims");
     let tile = tile.max(1);
     let (m, n, k) = (a.rows, b.rows, a.cols);
@@ -180,13 +265,19 @@ pub fn matmul_bt_with(a: &MatF32, b: &MatF32, tile: usize) -> MatF32 {
 // W8A8 kernels (exact integer arithmetic — loop order free)
 // ---------------------------------------------------------------------------
 
-/// Tiled exact C_i32[M,N] = A_i8[M,K] @ B_i8[K,N].
+/// Tiled exact C_i32[M,N] = A_i8[M,K] @ B_i8[K,N] (env-default tile,
+/// active backend).
 pub fn int8_matmul(a: &MatI8, b: &MatI8) -> Vec<i32> {
-    int8_matmul_with(a, b, TILE)
+    int8_matmul_with_bk(a, b, env_tile(), simd::active())
 }
 
-/// Tiled exact W8A8 matmul with an explicit tile edge.
+/// Tiled exact W8A8 matmul with an explicit tile edge (active backend).
 pub fn int8_matmul_with(a: &MatI8, b: &MatI8, tile: usize) -> Vec<i32> {
+    int8_matmul_with_bk(a, b, tile, simd::active())
+}
+
+/// Tiled exact W8A8 matmul with explicit tile edge and backend.
+pub fn int8_matmul_with_bk(a: &MatI8, b: &MatI8, tile: usize, bk: Backend) -> Vec<i32> {
     assert_eq!(a.cols, b.rows, "tile::int8_matmul dims");
     let tile = tile.max(1);
     let (m, k, n) = (a.rows, a.cols, b.cols);
@@ -205,10 +296,7 @@ pub fn int8_matmul_with(a: &MatI8, b: &MatI8, tile: usize) -> Vec<i32> {
                         if av == 0 {
                             continue;
                         }
-                        let brow = &b.row(kk)[j0..j1];
-                        for (o, &bv) in orow.iter_mut().zip(brow) {
-                            *o += av * bv as i32;
-                        }
+                        bk.i32_axpy_i8(orow, &b.row(kk)[j0..j1], av);
                     }
                 }
             }
@@ -218,23 +306,45 @@ pub fn int8_matmul_with(a: &MatI8, b: &MatI8, tile: usize) -> Vec<i32> {
 }
 
 /// Tiled exact C_i32[M,N] = A_i8[M,K] @ B_i8^T with B given as [N,K] —
-/// the SIGU/SAU score-tile kernel.
+/// the SIGU/SAU score-tile kernel (env-default tile, active backend).
 pub fn int8_matmul_bt(a: &MatI8, bt: &MatI8) -> Vec<i32> {
-    int8_matmul_bt_with(a, bt, TILE)
+    int8_matmul_bt_with_bk(a, bt, env_tile(), simd::active())
 }
 
-/// Tiled `int8_matmul_bt` with an explicit tile edge.
+/// Tiled `int8_matmul_bt` with an explicit tile edge (active backend).
 pub fn int8_matmul_bt_with(a: &MatI8, bt: &MatI8, tile: usize) -> Vec<i32> {
+    int8_matmul_bt_with_bk(a, bt, tile, simd::active())
+}
+
+/// Tiled `int8_matmul_bt` with explicit tile edge and backend.
+pub fn int8_matmul_bt_with_bk(a: &MatI8, bt: &MatI8, tile: usize, bk: Backend) -> Vec<i32> {
     assert_eq!(a.cols, bt.cols, "tile::int8_matmul_bt dims");
     let mut out = vec![0i32; a.rows * bt.rows];
-    int8_dot_bt(&a.data, &bt.data, a.rows, bt.rows, a.cols, tile, &mut out);
+    int8_dot_bt_bk(&a.data, &bt.data, a.rows, bt.rows, a.cols, tile, bk, &mut out);
     out
 }
 
 /// Slice-level core of the score-tile kernel: C[m,n] += A[m,k] @ B[n,k]^T,
-/// both operands row-major over k. Lets the engine score raw chunk slices
-/// without materializing `MatI8` views.
+/// both operands row-major over k (active backend). Lets the engine score
+/// raw chunk slices without materializing `MatI8` views.
 pub fn int8_dot_bt(a: &[i8], bt: &[i8], m: usize, n: usize, k: usize, tile: usize, out: &mut [i32]) {
+    int8_dot_bt_bk(a, bt, m, n, k, tile, simd::active(), out);
+}
+
+/// [`int8_dot_bt`] with an explicit backend. The inner i8 dot *is*
+/// vectorized within k here — integer accumulation is exact, so lane
+/// order cannot change the result.
+#[allow(clippy::too_many_arguments)]
+pub fn int8_dot_bt_bk(
+    a: &[i8],
+    bt: &[i8],
+    m: usize,
+    n: usize,
+    k: usize,
+    tile: usize,
+    bk: Backend,
+    out: &mut [i32],
+) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(bt.len(), n * k);
     debug_assert_eq!(out.len(), m * n);
@@ -249,11 +359,7 @@ pub fn int8_dot_bt(a: &[i8], bt: &[i8], m: usize, n: usize, k: usize, tile: usiz
                     let arow = &a[i * k + k0..i * k + k1];
                     for j in j0..j1 {
                         let brow = &bt[j * k + k0..j * k + k1];
-                        let mut s = 0i32;
-                        for (&x, &y) in arow.iter().zip(brow) {
-                            s += x as i32 * y as i32;
-                        }
-                        out[i * n + j] += s;
+                        out[i * n + j] += bk.i8_dot(arow, brow);
                     }
                 }
             }
@@ -267,12 +373,27 @@ pub fn int8_dot_bt(a: &[i8], bt: &[i8], m: usize, n: usize, k: usize, tile: usiz
 
 /// Fold one f32 score tile into online-softmax state with fused P@V
 /// accumulation: the f32 sibling of `model::forward::attn_step_w8a8`
-/// (no P requantization).
+/// (no P requantization). Uses the active backend.
 ///
 /// `s` is [B, Bk] (already scaled), `v` is [Bk, d]; `m`/`l` are per-row
 /// online state and `acc` is [B, d]. After folding every tile, divide by
 /// `l` (see [`crate::model::forward::attn_finalize`]).
 pub fn fused_softmax_acc(s: &MatF32, v: &MatF32, m: &mut [f32], l: &mut [f32], acc: &mut MatF32) {
+    fused_softmax_acc_bk(s, v, m, l, acc, simd::active());
+}
+
+/// [`fused_softmax_acc`] with an explicit backend. The row max and the
+/// per-score `exp` stay scalar (sequential semantics); only the d-wide
+/// rescale and P@V accumulate vectorize — across the independent output
+/// columns of `acc`, preserving each element's addition order exactly.
+pub fn fused_softmax_acc_bk(
+    s: &MatF32,
+    v: &MatF32,
+    m: &mut [f32],
+    l: &mut [f32],
+    acc: &mut MatF32,
+    bk: Backend,
+) {
     assert_eq!(s.cols, v.rows, "fused_softmax_acc dims");
     assert_eq!(acc.cols, v.cols, "fused_softmax_acc acc dims");
     assert_eq!(s.rows, acc.rows, "fused_softmax_acc rows");
@@ -282,17 +403,12 @@ pub fn fused_softmax_acc(s: &MatF32, v: &MatF32, m: &mut [f32], l: &mut [f32], a
         let m_new = m[r].max(rmax);
         let corr = (m[r] - m_new).exp();
         let arow = acc.row_mut(r);
-        for av in arow.iter_mut() {
-            *av *= corr;
-        }
+        bk.f32_scale(arow, corr);
         let mut lsum = 0.0f32;
         for (j, &sv) in row.iter().enumerate() {
             let p = (sv - m_new).exp();
             lsum += p;
-            let vrow = v.row(j);
-            for (av, &vv) in arow.iter_mut().zip(vrow) {
-                *av += p * vv;
-            }
+            bk.f32_axpy(arow, v.row(j), p);
         }
         l[r] = l[r] * corr + lsum;
         m[r] = m_new;
@@ -318,7 +434,11 @@ mod tests {
         let mut rng = Prng::new(0x71);
         let a = randf(&mut rng, 70, 130);
         let b = randf(&mut rng, 130, 67);
-        assert_eq!(matmul_with(&a, &b, 32), ops::matmul(&a, &b));
+        let want = ops::matmul(&a, &b);
+        assert_eq!(matmul_with(&a, &b, 32), want);
+        for bk in [Backend::Scalar, simd::detect()] {
+            assert_eq!(matmul_with_bk(&a, &b, 32, bk), want, "{}", bk.name());
+        }
     }
 
     #[test]
@@ -326,7 +446,11 @@ mod tests {
         let mut rng = Prng::new(2);
         let a = randf(&mut rng, 33, 100);
         let b = randf(&mut rng, 65, 100);
-        assert_eq!(matmul_bt_with(&a, &b, 16), ops::matmul_bt(&a, &b));
+        let want = ops::matmul_bt(&a, &b);
+        assert_eq!(matmul_bt_with(&a, &b, 16), want);
+        for bk in [Backend::Scalar, simd::detect()] {
+            assert_eq!(matmul_bt_with_bk(&a, &b, 16, bk), want, "{}", bk.name());
+        }
     }
 
     #[test]
@@ -334,9 +458,21 @@ mod tests {
         let mut rng = Prng::new(3);
         let a = randi(&mut rng, 37, 129);
         let b = randi(&mut rng, 129, 41);
-        assert_eq!(int8_matmul_with(&a, &b, 32), crate::quant::int8_matmul(&a, &b));
         let bt = b.transpose();
-        assert_eq!(int8_matmul_bt_with(&a, &bt, 32), crate::quant::int8_matmul_bt(&a, &bt));
+        for bk in [Backend::Scalar, simd::detect()] {
+            assert_eq!(
+                int8_matmul_with_bk(&a, &b, 32, bk),
+                crate::quant::int8_matmul(&a, &b),
+                "{}",
+                bk.name()
+            );
+            assert_eq!(
+                int8_matmul_bt_with_bk(&a, &bt, 32, bk),
+                crate::quant::int8_matmul_bt(&a, &bt),
+                "{}",
+                bk.name()
+            );
+        }
     }
 
     #[test]
@@ -382,6 +518,25 @@ mod tests {
     }
 
     #[test]
+    fn fused_softmax_acc_backends_bit_identical() {
+        let mut rng = Prng::new(0x5ACC);
+        let s = randf(&mut rng, 7, 13); // ragged: neither dim lane-aligned
+        let v = randf(&mut rng, 13, 19);
+        let run = |bk: Backend| {
+            let mut m = vec![-1e30f32; 7];
+            let mut l = vec![0.0f32; 7];
+            let mut acc = randf(&mut Prng::new(9), 7, 19);
+            fused_softmax_acc_bk(&s, &v, &mut m, &mut l, &mut acc, bk);
+            (m, l, acc)
+        };
+        let (ms, ls, accs) = run(Backend::Scalar);
+        let (mv, lv, accv) = run(simd::detect());
+        assert_eq!(ms, mv);
+        assert_eq!(ls, lv);
+        assert_eq!(accs.data, accv.data);
+    }
+
+    #[test]
     fn int8_dot_bt_slices_match_mat_form() {
         let mut rng = Prng::new(6);
         let a = randi(&mut rng, 12, 40);
@@ -403,5 +558,31 @@ mod tests {
         let deq = ctx.int8_matmul_deq(&qa, 0.5, &qb, 0.25);
         let oracle = crate::quant::int8_matmul_deq(&qa, 0.5, &qb, 0.25);
         assert_eq!(deq, oracle);
+    }
+
+    #[test]
+    fn ctx_carries_env_backend_and_forced_backend() {
+        let ctx = KernelCtx::single_threaded();
+        assert_eq!(ctx.backend, simd::active());
+        let forced = ctx.clone().with_backend(Backend::Scalar);
+        assert_eq!(forced.backend, Backend::Scalar);
+        // want-cap preserves the forced backend and tile
+        let capped = forced.with_want_cap(2);
+        assert_eq!(capped.backend, Backend::Scalar);
+        assert_eq!(capped.tile, forced.tile);
+    }
+
+    #[test]
+    fn tile_override_validation() {
+        assert_eq!(parse_tile_override("64"), Ok(64));
+        assert_eq!(parse_tile_override(" 8 "), Ok(8));
+        assert_eq!(parse_tile_override("1024"), Ok(1024));
+        assert!(parse_tile_override("0").is_err(), "zero tile must be rejected");
+        assert!(parse_tile_override("12").is_err(), "non-multiple-of-8 must be rejected");
+        assert!(parse_tile_override("-8").is_err());
+        assert!(parse_tile_override("sixty four").is_err());
+        // the env-resolved tile is always a valid edge
+        let t = env_tile();
+        assert!(t > 0 && t % 8 == 0);
     }
 }

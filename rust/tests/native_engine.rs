@@ -8,6 +8,7 @@
 use fast_prefill::config::{FlexParams, BLOCK, TINY};
 use fast_prefill::coordinator::{Engine, EngineConfig, Policy, Server};
 use fast_prefill::model::{prefill_reference, ModelWeights};
+use fast_prefill::tensor::simd::{self, Backend};
 use fast_prefill::workload::prompts::{PromptKind, PromptSpec, TraceRequest};
 
 fn tokens(n: usize, seed: u64) -> Vec<u8> {
@@ -80,6 +81,35 @@ fn engine_output_bit_identical_across_thread_counts() {
                 assert_eq!(ia.pattern, ib.pattern);
                 assert_eq!(ia.blocks, ib.blocks);
             }
+        }
+    }
+}
+
+#[test]
+fn engine_output_bit_identical_across_kernel_backends() {
+    // forcing the scalar reference vs the detected vector backend on the
+    // engine's KernelCtx must not change a single output bit, and the
+    // selected backend must be recorded in the run's metrics
+    let toks = tokens(384, 14);
+    let mut eng_scalar = Engine::new_native(native_cfg()).unwrap();
+    eng_scalar.ctx.backend = Backend::Scalar;
+    let scalar = eng_scalar.prefill(0, &toks).unwrap();
+    assert_eq!(scalar.metrics.kernel_backend, "scalar");
+
+    let vector = simd::detect();
+    let mut eng_vec = Engine::new_native(native_cfg()).unwrap();
+    eng_vec.ctx.backend = vector;
+    let vec_run = eng_vec.prefill(0, &toks).unwrap();
+    assert_eq!(vec_run.metrics.kernel_backend, vector.name());
+
+    assert_eq!(scalar.first_token, vec_run.first_token);
+    assert_eq!(scalar.logits_last, vec_run.logits_last);
+    assert_eq!(scalar.hidden_last_chunk, vec_run.hidden_last_chunk);
+    assert_eq!(scalar.metrics.jobs, vec_run.metrics.jobs);
+    for (la, lb) in scalar.index_sets.iter().zip(&vec_run.index_sets) {
+        for (ia, ib) in la.iter().zip(lb) {
+            assert_eq!(ia.pattern, ib.pattern);
+            assert_eq!(ia.blocks, ib.blocks);
         }
     }
 }

@@ -1,0 +1,207 @@
+//! SIMD-vs-scalar bit-identity property suite (ISSUE 4 acceptance): the
+//! runtime-dispatched vector backends of `tensor::simd` must produce the
+//! **same bytes** as the scalar reference for every kernel the hot paths
+//! use — across ragged shapes (k, n not multiples of the vector width),
+//! fully-masked softmax rows, and both `FASTP_KERNEL` override values.
+//!
+//! On a host without a vector ISA `simd::detect()` is `Scalar` and the
+//! pins hold trivially; the CI kernel-matrix guarantees at least one
+//! vector-capable leg actually exercises the AVX2/NEON paths
+//! (`fastp kernels --require-simd`).
+
+use fast_prefill::model::forward::attn_step_w8a8_bk;
+use fast_prefill::quant;
+use fast_prefill::tensor::simd::{self, Backend};
+use fast_prefill::tensor::{tile, MatF32, MatI8};
+use fast_prefill::util::prng::Prng;
+use fast_prefill::util::prop::forall_ck;
+
+fn rand_f32_mat(rng: &mut Prng, r: usize, c: usize) -> MatF32 {
+    MatF32::from_fn(r, c, |_, _| rng.normal())
+}
+
+fn rand_i8_mat(rng: &mut Prng, r: usize, c: usize) -> MatI8 {
+    MatI8 { rows: r, cols: c, data: (0..r * c).map(|_| rng.i8_sym()).collect() }
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn prop_simd_f32_matmuls_bit_identical_to_scalar() {
+    // ragged m/k/n (deliberately including widths below one vector lane)
+    // and ragged tiles: the vector backend must reproduce the scalar
+    // oracle bit-for-bit, because f32 lanes only ever span independent
+    // output columns
+    let vec_bk = simd::detect();
+    forall_ck(
+        0x51AD1,
+        40,
+        |rng, size| {
+            let m = 1 + rng.below(size + 4);
+            let k = 1 + rng.below(2 * size + 11);
+            let n = 1 + rng.below(size + 9);
+            let tile = [1, 3, 8, 16, 64, 100][rng.below(6)];
+            (rand_f32_mat(rng, m, k), rand_f32_mat(rng, k, n), tile)
+        },
+        |(a, b, t)| {
+            let want = tile::matmul_with_bk(a, b, *t, Backend::Scalar);
+            let got = tile::matmul_with_bk(a, b, *t, vec_bk);
+            if bits(&got.data) != bits(&want.data) {
+                return Err(format!("matmul diverged on {} (tile {t})", vec_bk.name()));
+            }
+            if bits(&fast_prefill::tensor::ops::matmul(a, b).data) != bits(&want.data) {
+                return Err("scalar backend != ops oracle".into());
+            }
+            let bt = b.transpose();
+            let want_bt = tile::matmul_bt_with_bk(a, &bt, *t, Backend::Scalar);
+            let got_bt = tile::matmul_bt_with_bk(a, &bt, *t, vec_bk);
+            if bits(&got_bt.data) != bits(&want_bt.data) {
+                return Err(format!("matmul_bt diverged on {}", vec_bk.name()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_simd_int8_matmuls_exactly_equal_scalar() {
+    let vec_bk = simd::detect();
+    forall_ck(
+        0x51AD2,
+        40,
+        |rng, size| {
+            let m = 1 + rng.below(size + 4);
+            let k = 1 + rng.below(2 * size + 13);
+            let n = 1 + rng.below(size + 7);
+            let tile = [1, 8, 24, 64, 200][rng.below(5)];
+            (rand_i8_mat(rng, m, k), rand_i8_mat(rng, k, n), tile)
+        },
+        |(a, b, t)| {
+            if tile::int8_matmul_with_bk(a, b, *t, vec_bk) != quant::int8_matmul(a, b) {
+                return Err(format!("int8_matmul diverged on {}", vec_bk.name()));
+            }
+            let bt = b.transpose();
+            if tile::int8_matmul_bt_with_bk(a, &bt, *t, vec_bk) != quant::int8_matmul_bt(a, &bt) {
+                return Err(format!("int8_matmul_bt diverged on {}", vec_bk.name()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_simd_fused_softmax_acc_bit_identical() {
+    // ragged (rows, kv, d), non-trivial carried online state, and rows
+    // that are fully masked (every score at -inf) — the vector backend
+    // must match the scalar state bit-for-bit after the fold
+    let vec_bk = simd::detect();
+    forall_ck(
+        0x51AD3,
+        40,
+        |rng, size| {
+            let rows = 1 + rng.below(size % 10 + 4);
+            let kv = 1 + rng.below(size % 20 + 9);
+            let d = 1 + rng.below(2 * size + 19);
+            let mut s = rand_f32_mat(rng, rows, kv);
+            // mask ~a quarter of rows entirely
+            for r in 0..rows {
+                if rng.f32() < 0.25 {
+                    for c in 0..kv {
+                        *s.at_mut(r, c) = f32::NEG_INFINITY;
+                    }
+                }
+            }
+            let v = rand_f32_mat(rng, kv, d);
+            let m0: Vec<f32> = (0..rows)
+                .map(|_| if rng.f32() < 0.5 { -1e30 } else { rng.normal() })
+                .collect();
+            let l0: Vec<f32> = (0..rows).map(|_| rng.f32() * 3.0).collect();
+            let acc0 = rand_f32_mat(rng, rows, d);
+            (s, v, m0, l0, acc0)
+        },
+        |(s, v, m0, l0, acc0)| {
+            let run = |bk: Backend| {
+                let mut m = m0.clone();
+                let mut l = l0.clone();
+                let mut acc = acc0.clone();
+                tile::fused_softmax_acc_bk(s, v, &mut m, &mut l, &mut acc, bk);
+                (m, l, acc)
+            };
+            let (ms, ls, accs) = run(Backend::Scalar);
+            let (mv, lv, accv) = run(vec_bk);
+            if bits(&mv) != bits(&ms) || bits(&lv) != bits(&ls) {
+                return Err(format!("online (m, l) diverged on {}", vec_bk.name()));
+            }
+            if bits(&accv.data) != bits(&accs.data) {
+                return Err(format!("accumulator diverged on {}", vec_bk.name()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_simd_attn_step_w8a8_bit_identical() {
+    // the SAU inner step (exact score matmul + requantized P@V): both
+    // the diagonal-masked and unmasked variants, on ragged head dims,
+    // continuing from a carried accumulator state
+    let vec_bk = simd::detect();
+    forall_ck(
+        0x51AD4,
+        30,
+        |rng, size| {
+            let b = 1 + rng.below(size % 12 + 4);
+            let dh = 1 + rng.below(2 * size + 21);
+            let q = rand_i8_mat(rng, b, dh);
+            let k = rand_i8_mat(rng, b, dh);
+            let v = rand_i8_mat(rng, b, dh);
+            let diag = rng.f32() < 0.5;
+            let m0: Vec<f32> = (0..b).map(|_| -1e30 + rng.f32()).collect();
+            let l0: Vec<f32> = (0..b).map(|_| rng.f32()).collect();
+            let acc0 = rand_f32_mat(rng, b, dh);
+            (q, k, v, diag, m0, l0, acc0)
+        },
+        |(q, k, v, diag, m0, l0, acc0)| {
+            let run = |bk: Backend| {
+                let mut m = m0.clone();
+                let mut l = l0.clone();
+                let mut acc = acc0.clone();
+                attn_step_w8a8_bk(q, 0.02, k, 0.03, v, 0.04, &mut m, &mut l, &mut acc, *diag, bk);
+                (m, l, acc)
+            };
+            let (ms, ls, accs) = run(Backend::Scalar);
+            let (mv, lv, accv) = run(vec_bk);
+            if bits(&mv) != bits(&ms) || bits(&lv) != bits(&ls) {
+                return Err(format!("attn (m, l) diverged on {}", vec_bk.name()));
+            }
+            if bits(&accv.data) != bits(&accs.data) {
+                return Err(format!("attn accumulator diverged on {}", vec_bk.name()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn both_dispatch_override_values_resolve_and_pin() {
+    // `FASTP_KERNEL=scalar` must force the scalar reference and
+    // `FASTP_KERNEL=simd` must select the detected vector backend (or
+    // scalar, loudly, on a host without one) — and whichever backend the
+    // override picks, kernel results stay bit-identical
+    assert_eq!(simd::resolve(Some("scalar")), Backend::Scalar);
+    assert_eq!(simd::resolve(Some("simd")), simd::detect());
+
+    let mut rng = Prng::new(0x51AD5);
+    let a = rand_i8_mat(&mut rng, 9, 37);
+    let b = rand_i8_mat(&mut rng, 37, 5);
+    let want = quant::int8_matmul(&a, &b);
+    for raw in [Some("scalar"), Some("simd"), None] {
+        let bk = simd::resolve(raw);
+        assert_eq!(tile::int8_matmul_with_bk(&a, &b, 16, bk), want, "override {raw:?}");
+    }
+
+    // the ctx constructed from the environment carries the active choice
+    assert_eq!(tile::KernelCtx::from_env().backend, simd::active());
+}
