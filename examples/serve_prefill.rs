@@ -11,10 +11,18 @@
 //! Flags (positional): [n_requests] [tokens] [workers]; `--closed-loop`
 //! submits the whole trace up front instead of the default **open-loop
 //! replay** (requests arrive at their recorded `arrival_us`, modeling
-//! bursts). Defaults: 6 requests on 2 workers with mixed context lengths
-//! {tokens/2, tokens, 2*tokens} around tokens=2048 (minutes on CPU).
+//! bursts; closed-loop gives the head-of-line Batch anchor a short head
+//! start so contention forms the same way). Defaults: 6 requests on 2
+//! workers with mixed context lengths {tokens/2, tokens, 2*tokens}
+//! around tokens=2048 (minutes on CPU).
 //! Env: FASTP_SERVE_MODEL picks the model config (default `small100m`;
-//! CI smoke uses `tiny`), FASTP_THREADS bounds the shared budget.
+//! CI smoke uses `tiny`), FASTP_THREADS bounds the shared budget,
+//! FASTP_SERVE_POLICY picks fcfs|sjf|preemptive (default sjf; the
+//! preemptive run also measures a pipelined-FCFS baseline, asserts
+//! preemption counters > 0, and on closed-loop runs additionally
+//! asserts the Interactive-class mean-TTFT win — open-loop prints the
+//! comparison without gating, since arrival timing shapes contention),
+//! FASTP_SERVE_JSON writes the machine-readable summary (CI artifact).
 
 use std::sync::Arc;
 
@@ -26,7 +34,7 @@ use fast_prefill::metrics::{ServeSample, ServeSummary};
 use fast_prefill::model::ModelWeights;
 use fast_prefill::sim::{simulate_prefill, simulate_prefill_batch};
 use fast_prefill::util::table::{fnum, Table};
-use fast_prefill::workload::prompts::RequestTrace;
+use fast_prefill::workload::prompts::{Priority, RequestTrace};
 
 fn serve(
     cfg: &EngineConfig,
@@ -42,8 +50,14 @@ fn serve(
         // honor the trace's arrival times (bursts queue as recorded)
         server.replay(trace);
     } else {
-        for r in trace.requests.clone() {
+        for (i, r) in trace.requests.clone().into_iter().enumerate() {
             server.submit(r);
+            if i == 0 {
+                // closed-loop head-of-line anchor: let the first (Batch)
+                // request get mid-flight before the backlog lands, so
+                // every policy faces the same contention shape
+                std::thread::sleep(std::time::Duration::from_millis(25));
+            }
         }
     }
     let completions = server.drain()?;
@@ -64,6 +78,12 @@ fn main() -> Result<()> {
     let tokens = args.get(1).copied().unwrap_or(2048);
     let workers = args.get(2).copied().unwrap_or(2);
     let open_loop = !std::env::args().any(|a| a == "--closed-loop");
+    let policy = match std::env::var("FASTP_SERVE_POLICY").as_deref() {
+        Ok("fcfs") => Policy::Fcfs,
+        Ok("preemptive") => Policy::Preemptive,
+        Ok("sjf") | Err(_) => Policy::Sjf,
+        Ok(p) => anyhow::bail!("FASTP_SERVE_POLICY={p} (want fcfs|sjf|preemptive)"),
+    };
     let model = std::env::var("FASTP_SERVE_MODEL")
         .ok()
         .and_then(|n| by_name(&n).cloned())
@@ -87,7 +107,8 @@ fn main() -> Result<()> {
     let rb = |t: usize| (t.max(block) / block) * block;
     let choices = [rb(tokens / 2), rb(tokens), rb(tokens) * 2];
     println!(
-        "== E2E: {} ({}M params, {} layers) | {} req x {{{}, {}, {}}} tokens | {} workers ==",
+        "== E2E: {} ({}M params, {} layers) | {} req x {{{}, {}, {}}} tokens | {} workers | \
+         {policy:?} ==",
         model.name,
         model.params() / 1_000_000,
         model.n_layers,
@@ -97,7 +118,20 @@ fn main() -> Result<()> {
         choices[2],
         workers
     );
-    let trace = RequestTrace::generate_mixed(n_requests, &choices, 2000, 2026);
+    let mut trace = RequestTrace::generate_mixed(n_requests, &choices, 2000, 2026);
+    // head-of-line anchors: the first arrival is a longest-class Batch
+    // prefill and the last a shortest Interactive, guaranteeing both
+    // priority classes and the head-of-line shape the preemptive policy
+    // is measured (and CI-asserted) on
+    if let Some(r0) = trace.requests.first_mut() {
+        r0.spec.tokens = choices[2];
+        r0.priority = Priority::Batch;
+    }
+    if n_requests > 1 {
+        let last = trace.requests.last_mut().unwrap();
+        last.spec.tokens = choices[0];
+        last.priority = Priority::Interactive;
+    }
     // one generated model shared by both servers (and all their workers)
     let weights = Arc::new(ModelWeights::generate(&cfg.model, cfg.weight_seed));
 
@@ -105,9 +139,16 @@ fn main() -> Result<()> {
     // serial baseline first (PR-1 behaviour at equal total threads), then
     // the phase-pipelined scheduler on the same trace
     let (serial, serial_wall) =
-        serve(&cfg, &weights, &trace, ServerOptions::serial(workers, Policy::Sjf), open_loop)?;
+        serve(&cfg, &weights, &trace, ServerOptions::serial(workers, policy), open_loop)?;
     let (pipelined, pipe_wall) =
-        serve(&cfg, &weights, &trace, ServerOptions::new(workers, Policy::Sjf), open_loop)?;
+        serve(&cfg, &weights, &trace, ServerOptions::new(workers, policy), open_loop)?;
+    // the preemptive run also measures a pipelined-FCFS baseline: the
+    // head-of-line-blocked schedule its TTFT win is asserted against
+    let fcfs_baseline = if policy == Policy::Preemptive {
+        Some(serve(&cfg, &weights, &trace, ServerOptions::new(workers, Policy::Fcfs), open_loop)?)
+    } else {
+        None
+    };
 
     // bit-identity across schedulers is an invariant, not a hope
     for (a, b) in serial.iter().zip(&pipelined) {
@@ -115,19 +156,28 @@ fn main() -> Result<()> {
         assert_eq!(a.run.first_token, b.run.first_token, "req {}", a.request_id);
         assert_eq!(a.run.logits_last, b.run.logits_last, "req {}", a.request_id);
     }
+    if let Some((fcfs, _)) = &fcfs_baseline {
+        for (a, b) in fcfs.iter().zip(&pipelined) {
+            assert_eq!(a.request_id, b.request_id);
+            assert_eq!(a.run.first_token, b.run.first_token, "req {}", a.request_id);
+            assert_eq!(a.run.logits_last, b.run.logits_last, "req {}", a.request_id);
+        }
+    }
 
     let mut t = Table::new(&[
-        "req", "tokens", "TTFT (ms)", "queue (ms)", "phase-wait (ms)", "e2e (ms)", "density %",
-        "hit %", "KV MB", "jobs",
+        "req", "class", "tokens", "TTFT (ms)", "queue (ms)", "phase-wait (ms)", "e2e (ms)",
+        "yields", "density %", "hit %", "KV MB", "jobs",
     ]);
     for c in &pipelined {
         t.row(&[
             c.request_id.to_string(),
+            c.priority.name().to_string(),
             c.run.metrics.context_tokens.to_string(),
             fnum(c.run.metrics.ttft_us / 1e3),
             fnum(c.queue_us / 1e3),
             fnum(c.pipeline_wait_us / 1e3),
             fnum(c.e2e_us / 1e3),
+            c.preemptions.to_string(),
             fnum(c.run.metrics.density * 100.0),
             fnum(c.run.metrics.cache_hit_rate * 100.0),
             fnum(c.run.metrics.hbm_read_bytes as f64 / 1e6),
@@ -141,6 +191,52 @@ fn main() -> Result<()> {
     let pip = summarize(&pipelined);
     println!("{}", ser.render("serial   "));
     println!("{}", pip.render("pipelined"));
+    let fcfs_sum = fcfs_baseline.as_ref().map(|(c, _)| summarize(c));
+    if let Some(f) = &fcfs_sum {
+        println!("{}", f.render("fcfs base"));
+    }
+
+    // machine-readable summary for the CI serving artifact
+    if let Ok(path) = std::env::var("FASTP_SERVE_JSON") {
+        let mut legs = vec![ser.to_json("serial"), pip.to_json("pipelined")];
+        if let Some(f) = &fcfs_sum {
+            legs.push(f.to_json("pipelined_fcfs_baseline"));
+        }
+        let json = format!(
+            "{{\"policy\": \"{policy:?}\", \"arrival\": \"{}\", \"legs\": [{}]}}\n",
+            if open_loop { "open" } else { "closed" },
+            legs.join(", ")
+        );
+        std::fs::write(&path, &json)?;
+        println!("wrote serving summary to {path}");
+    }
+
+    // the preemptive acceptance gates (CI serving-matrix): the long
+    // Batch anchor must actually have yielded phase slots, and on the
+    // deterministic closed-loop backlog the Interactive-class mean TTFT
+    // must beat head-of-line-blocking FCFS at equal total threads
+    if policy == Policy::Preemptive && n_requests > 1 {
+        assert!(
+            pip.preemptions > 0,
+            "preemptive leg recorded no phase-boundary yields (batch anchor never preempted)"
+        );
+        let f = fcfs_sum.as_ref().unwrap();
+        println!(
+            "interactive mean TTFT: preemptive {:.0} ms vs FCFS {:.0} ms ({:.1}% saved)",
+            pip.interactive.ttft_mean_ms,
+            f.interactive.ttft_mean_ms,
+            (1.0 - pip.interactive.ttft_mean_ms / f.interactive.ttft_mean_ms.max(1e-9)) * 100.0
+        );
+        if !open_loop {
+            assert!(
+                pip.interactive.ttft_mean_ms < f.interactive.ttft_mean_ms,
+                "preemptive SJF+priority did not cut Interactive mean TTFT vs FCFS \
+                 ({:.1} ms vs {:.1} ms)",
+                pip.interactive.ttft_mean_ms,
+                f.interactive.ttft_mean_ms
+            );
+        }
+    }
     let total_tokens: usize = trace.requests.iter().map(|r| r.spec.tokens).sum();
     println!(
         "wall serial {:.1}s -> pipelined {:.1}s | pipelined throughput {:.0} tok/s | \

@@ -50,6 +50,18 @@ use crate::model::ModelWeights;
 use crate::runtime::{literal_f32, literal_i8, Arg, Runtime};
 use crate::tensor::tile::KernelCtx;
 use crate::tensor::{MatF32, MatI8};
+use crate::util::pool::AdaptiveHints;
+
+/// [`AdaptiveHints`] slot of each phase (the serving loop observes into
+/// and the engine sizes leases from the same slots).
+pub fn phase_hint_slot(p: Phase) -> usize {
+    match p {
+        Phase::Qkv => 0,
+        Phase::IndexGen => 1,
+        Phase::Sau => 2,
+        Phase::FfnLogits | Phase::Done => 3,
+    }
+}
 
 /// Engine configuration.
 #[derive(Clone, Debug)]
@@ -147,9 +159,16 @@ pub struct PrefillState {
     pub request_id: u64,
     phase: Phase,
     layer: usize,
+    /// Total layer count (from the engine config; for remaining-cost
+    /// estimates at scheduling time).
+    n_layers: usize,
     /// Context length in tokens / in BLOCK chunks.
     s: usize,
     n: usize,
+    // per-phase fan-out job counters (for measured per-job cost)
+    qkv_jobs: usize,
+    sigu_jobs: usize,
+    ffn_jobs: usize,
     t_start: Instant,
     hidden: MatF32,
     metrics: PrefillMetrics,
@@ -178,6 +197,32 @@ impl PrefillState {
     pub fn context_tokens(&self) -> usize {
         self.s
     }
+
+    /// Phase steps left before this request finishes, counting the phase
+    /// it is currently parked at (0 once [`Phase::Done`]).
+    pub fn remaining_phase_steps(&self) -> usize {
+        if self.phase == Phase::Done {
+            return 0;
+        }
+        let in_layer = match self.phase {
+            Phase::Qkv => 4,
+            Phase::IndexGen => 3,
+            Phase::Sau => 2,
+            Phase::FfnLogits => 1,
+            Phase::Done => 0,
+        };
+        (self.n_layers.saturating_sub(self.layer + 1)) * 4 + in_layer
+    }
+
+    /// Scheduler remaining-cost estimate: remaining phase steps weighted
+    /// by context length. Deterministic (no clocks), monotone in both
+    /// progress and context size — what a preemptive policy ranks
+    /// runnable requests by. The same units as
+    /// [`crate::coordinator::server`]'s queued-request estimate
+    /// (`4 * n_layers * tokens`), so parked and queued work compare.
+    pub fn remaining_cost(&self) -> u64 {
+        self.remaining_phase_steps() as u64 * self.s as u64
+    }
 }
 
 /// Result of one prefill run.
@@ -202,6 +247,12 @@ pub struct Engine {
     pub ctx: KernelCtx,
     pub cfg: EngineConfig,
     pub weights: Arc<ModelWeights>,
+    /// Adaptive per-phase lease-want hints (ROADMAP serving (e)). When
+    /// the server installs a shared [`AdaptiveHints`], each phase sizes
+    /// its `with_want_cap` lease request from the EWMA of measured job
+    /// costs; `None` (solo engines, the serial baseline) keeps the
+    /// static split. Never changes results — only lease sizing.
+    pub hints: Option<Arc<AdaptiveHints>>,
 }
 
 impl Engine {
@@ -236,7 +287,7 @@ impl Engine {
             Some(rt)
         };
         let ctx = cfg.kernel_ctx();
-        Ok(Engine { rt, ctx, cfg, weights })
+        Ok(Engine { rt, ctx, cfg, weights, hints: None })
     }
 
     /// Build an artifact-free engine on the tiled native kernels.
@@ -247,7 +298,7 @@ impl Engine {
         cfg.native_linear = true;
         let weights = Arc::new(ModelWeights::generate(&cfg.model, cfg.weight_seed));
         let ctx = cfg.kernel_ctx();
-        Ok(Engine { rt: None, ctx, cfg, weights })
+        Ok(Engine { rt: None, ctx, cfg, weights, hints: None })
     }
 
     /// Backend description (for banners / examples).
@@ -280,6 +331,28 @@ impl Engine {
             .unwrap_or(1)
     }
 
+    /// Kernel context for one phase's fan-out: sized by the adaptive
+    /// lease-want hint when the server installed [`AdaptiveHints`], else
+    /// by the static split (IndexGen asks for `max(threads/4, 2)`, the
+    /// wide phases keep the uniform `min(threads, n_jobs)` want). A want
+    /// of the full thread count needs no cap at all.
+    fn phase_ctx(&self, phase: Phase) -> KernelCtx {
+        let threads = self.ctx.threads();
+        let fallback = match phase {
+            Phase::IndexGen => index_gen_want(threads),
+            _ => threads,
+        };
+        let want = match &self.hints {
+            Some(h) => h.want(phase_hint_slot(phase), threads, fallback),
+            None => fallback,
+        };
+        if want >= threads {
+            self.ctx.clone()
+        } else {
+            self.ctx.with_want_cap(want)
+        }
+    }
+
     /// Run the full prefill for a byte-token context. Context length must be
     /// a multiple of BLOCK. Thin wrapper over the resumable phase methods:
     /// the phases step in order with no interleaving, which is the same
@@ -306,8 +379,12 @@ impl Engine {
             request_id,
             phase: Phase::Qkv,
             layer: 0,
+            n_layers: self.cfg.model.n_layers,
             s,
             n: s / BLOCK,
+            qkv_jobs: 0,
+            sigu_jobs: 0,
+            ffn_jobs: 0,
             t_start: Instant::now(),
             hidden: self.weights.embed_tokens(tokens),
             metrics: PrefillMetrics {
@@ -373,6 +450,7 @@ impl Engine {
         let t0 = Instant::now();
         let chunks = self.run_qkv_layer(st.layer, &st.hidden, st.n)?;
         st.metrics.t_qkv_us += t0.elapsed().as_micros() as f64;
+        st.qkv_jobs += st.n;
         st.chunks = Some(chunks);
         st.phase = Phase::IndexGen;
         Ok(())
@@ -403,7 +481,8 @@ impl Engine {
         let outs = {
             let hiddens: Vec<&MatF32> = states.iter().map(|s| &s.hidden).collect();
             let weights: &ModelWeights = &self.weights;
-            let ctx = &self.ctx;
+            let ctx = self.phase_ctx(Phase::Qkv);
+            let ctx = &ctx;
             ctx.pool.map(jobs.len(), |j| {
                 let (lane, ci) = jobs[j];
                 let x = hiddens[lane].slice_rows(ci * BLOCK, (ci + 1) * BLOCK);
@@ -416,6 +495,7 @@ impl Engine {
             st.chunks = Some(outs.by_ref().take(st.n).collect());
             st.phase = Phase::IndexGen;
             st.metrics.t_qkv_us += dt;
+            st.qkv_jobs += st.n;
         }
         Ok(())
     }
@@ -430,6 +510,7 @@ impl Engine {
             self.run_sigu_layer(chunks, st.n)?
         };
         st.metrics.t_sigu_us += t0.elapsed().as_micros() as f64;
+        st.sigu_jobs += self.cfg.model.n_heads;
         for idx in &indices {
             st.density_sum += idx.density();
             st.density_cnt += 1;
@@ -505,7 +586,8 @@ impl Engine {
                 .iter()
                 .map(|s| s.chunks.as_deref().expect("sau without qkv chunks"))
                 .collect();
-            fwd::sau_layer_batch(&self.ctx, &cfg, &chunk_lanes, &batch)
+            let ctx = self.phase_ctx(Phase::Sau);
+            fwd::sau_layer_batch(&ctx, &cfg, &chunk_lanes, &batch)
         };
         let dt = t0.elapsed().as_micros() as f64;
         for (st, attn) in states.iter_mut().zip(attns) {
@@ -548,7 +630,8 @@ impl Engine {
         let new_hiddens = {
             let attn_refs: Vec<&[Vec<f32>]> = attns.iter().map(|a| a.as_slice()).collect();
             let hidden_refs: Vec<&MatF32> = states.iter().map(|s| &s.hidden).collect();
-            fwd::ffn_tail_batch(&self.ctx, &self.weights, li, &attn_refs, &hidden_refs)
+            let ctx = self.phase_ctx(Phase::FfnLogits);
+            fwd::ffn_tail_batch(&ctx, &self.weights, li, &attn_refs, &hidden_refs)
         };
         let dt = t0.elapsed().as_micros() as f64;
         let d = self.cfg.model.d_model;
@@ -559,6 +642,7 @@ impl Engine {
                 st.hidden.data[ci * BLOCK * d..(ci + 1) * BLOCK * d].copy_from_slice(&x.data);
             }
             st.metrics.t_ffn_us += dt;
+            st.ffn_jobs += st.n;
             st.layer += 1;
         }
         for st in states.iter_mut() {
@@ -582,6 +666,7 @@ impl Engine {
         let n = st.n;
         self.run_tail_layer(li, &mut st.hidden, &attn, n)?;
         st.metrics.t_ffn_us += t0.elapsed().as_micros() as f64;
+        st.ffn_jobs += n;
         st.layer += 1;
         if st.layer < self.cfg.model.n_layers {
             st.phase = Phase::Qkv;
@@ -602,6 +687,15 @@ impl Engine {
         st.phase = Phase::Done;
         let mut metrics = std::mem::take(&mut st.metrics);
         metrics.ttft_us = st.t_start.elapsed().as_micros() as f64;
+        // measured per-phase job cost (us/job) — what the server's EWMA
+        // feeds back into adaptive lease-want sizing. Fused group phases
+        // charge wall-clock time to every lane (PR 2 convention), so
+        // under batching these are upper bounds — fine for a hint.
+        let per_job = |us: f64, jobs: usize| if jobs > 0 { us / jobs as f64 } else { 0.0 };
+        metrics.qkv_job_us = per_job(metrics.t_qkv_us, st.qkv_jobs);
+        metrics.sigu_job_us = per_job(metrics.t_sigu_us, st.sigu_jobs);
+        metrics.sau_job_us = per_job(metrics.t_sau_us, metrics.jobs);
+        metrics.ffn_job_us = per_job(metrics.t_ffn_us, st.ffn_jobs);
         metrics.density =
             if st.density_cnt > 0 { st.density_sum / st.density_cnt as f64 } else { 1.0 };
         metrics.query_aware_frac =
@@ -654,7 +748,8 @@ impl Engine {
     fn run_qkv_layer(&mut self, li: usize, hidden: &MatF32, n: usize) -> Result<Vec<ChunkQkv>> {
         if self.cfg.native_linear {
             let weights: &ModelWeights = &self.weights;
-            let ctx = &self.ctx;
+            let ctx = self.phase_ctx(Phase::Qkv);
+            let ctx = &ctx;
             return Ok(ctx.pool.map(n, |ci| {
                 let x = hidden.slice_rows(ci * BLOCK, (ci + 1) * BLOCK);
                 fwd::qkv_chunk(ctx, weights, li, &x, (ci * BLOCK) as i32)
@@ -708,9 +803,11 @@ impl Engine {
             None => return Ok(fwd::dense_indices(cfg.n_heads, n)),
         };
         if self.cfg.native_sigu {
-            // the reference's parallel per-head jobs, over the same chunks;
-            // IndexGen leases only a small slot share (see index_gen_want)
-            let ctx = self.ctx.with_want_cap(index_gen_want(self.ctx.threads()));
+            // the reference's parallel per-head jobs, over the same
+            // chunks; IndexGen leases only a small slot share — adaptive
+            // (EWMA of measured job cost) when hints are installed, else
+            // the static index_gen_want split
+            let ctx = self.phase_ctx(Phase::IndexGen);
             return Ok(fwd::sigu_indices(&ctx, &cfg, chunks, n, &params));
         }
         let mut out = Vec::with_capacity(cfg.n_heads);
@@ -796,7 +893,8 @@ impl Engine {
         if self.cfg.native_sau {
             // the reference's parallel wave execution over this engine's
             // schedule (waves sized by cfg.wave_qblocks)
-            let attn = fwd::sau_layer(&self.ctx, &self.cfg.model, chunks, schedule, n);
+            let ctx = self.phase_ctx(Phase::Sau);
+            let attn = fwd::sau_layer(&ctx, &self.cfg.model, chunks, schedule, n);
             Ok(attn.into_iter().map(|m| m.data).collect())
         } else {
             self.sau_pjrt(chunks, schedule, n)
@@ -937,7 +1035,8 @@ impl Engine {
         let (d, dh, hq) = (cfg.d_model, cfg.d_head, cfg.n_heads);
         if self.cfg.native_linear {
             let weights: &ModelWeights = &self.weights;
-            let ctx = &self.ctx;
+            let ctx = self.phase_ctx(Phase::FfnLogits);
+            let ctx = &ctx;
             let hidden_ref = &*hidden;
             let new_chunks: Vec<MatF32> = ctx.pool.map(n, |ci| {
                 let a = MatF32 {

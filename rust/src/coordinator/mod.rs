@@ -17,10 +17,10 @@ pub mod joblist;
 pub mod server;
 pub mod walk;
 
-pub use engine::{Engine, EngineConfig, Phase, PrefillRun, PrefillState};
+pub use engine::{phase_hint_slot, Engine, EngineConfig, Phase, PrefillRun, PrefillState};
 pub use joblist::{
     build_schedule, build_schedule_batch, cache_key, BatchBlockJobs, BatchJob, BatchSchedule,
     BatchWave, BlockJobs, Job, Schedule, Wave, DEFAULT_WAVE_QBLOCKS,
 };
-pub use server::{Completion, Policy, Server, ServerOptions};
+pub use server::{Completion, Policy, Server, ServerOptions, DEFAULT_MAX_YIELDS};
 pub use walk::{BlockOutcome, BlockVisit, LaneVisit, ScheduleWalk};

@@ -33,11 +33,13 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::coordinator::engine::{Engine, EngineConfig, Phase, PrefillRun, PrefillState};
+use crate::coordinator::engine::{
+    phase_hint_slot, Engine, EngineConfig, Phase, PrefillRun, PrefillState,
+};
 use crate::model::ModelWeights;
 use crate::tensor::tile::KernelCtx;
-use crate::util::pool::{PoolBudget, WorkerPool};
-use crate::workload::prompts::TraceRequest;
+use crate::util::pool::{AdaptiveHints, PoolBudget, WorkerPool, HINT_EWMA_ALPHA};
+use crate::workload::prompts::{Priority, TraceRequest};
 
 /// Queueing policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -45,10 +47,23 @@ pub enum Policy {
     Fcfs,
     /// Shortest (context) job first.
     Sjf,
+    /// Priority-class preemptive SJF: at every phase boundary the stage
+    /// loop re-ranks runnable requests by (class, remaining-cost
+    /// estimate) — a queued or parked `Interactive` request takes the
+    /// next phase slot ahead of a parked `Batch` prefill (the parked
+    /// state *yields*; its phase is never split, so outputs stay
+    /// bit-identical). Starvation-protected: a `Batch` request that has
+    /// yielded [`ServerOptions::max_yields`] times ages to the front of
+    /// the rank order and drains.
+    Preemptive,
 }
 
 /// Most states a single fused phase step may take (QKV/SAU batching).
 const MAX_PHASE_BATCH: usize = 4;
+
+/// Default aging bound: a parked `Batch` request yields at most this many
+/// phase-boundary slots before it outranks everything and drains.
+pub const DEFAULT_MAX_YIELDS: usize = 256;
 
 /// Server scheduling options.
 #[derive(Clone, Copy, Debug)]
@@ -70,6 +85,16 @@ pub struct ServerOptions {
     pub max_inflight: usize,
     /// Fuse same-phase jobs of co-resident requests into one fan-out.
     pub batch_phases: bool,
+    /// Aging bound for [`Policy::Preemptive`]: after yielding this many
+    /// phase-boundary slots, a parked `Batch` request outranks everything
+    /// and runs to completion (0 => [`DEFAULT_MAX_YIELDS`]).
+    pub max_yields: usize,
+    /// Feed completed requests' measured per-phase job costs back into
+    /// per-phase lease-want sizing (EWMA, [`AdaptiveHints`]) instead of
+    /// the static IndexGen split. Pipelined mode only; cold-start (first
+    /// observation pending) behavior is the static split either way, and
+    /// hint sizing never changes outputs.
+    pub adaptive_hints: bool,
 }
 
 impl ServerOptions {
@@ -82,12 +107,19 @@ impl ServerOptions {
             total_threads: 0,
             max_inflight: 0,
             batch_phases: true,
+            max_yields: 0,
+            adaptive_hints: true,
         }
     }
 
-    /// The serial end-to-end baseline (static per-worker thread split).
+    /// The serial end-to-end baseline (static per-worker thread split,
+    /// static lease hints — the PR-1/PR-3 behavior).
     pub fn serial(n_workers: usize, policy: Policy) -> ServerOptions {
-        ServerOptions { pipelined: false, ..ServerOptions::new(n_workers, policy) }
+        ServerOptions {
+            pipelined: false,
+            adaptive_hints: false,
+            ..ServerOptions::new(n_workers, policy)
+        }
     }
 }
 
@@ -96,6 +128,8 @@ impl ServerOptions {
 pub struct Completion {
     pub request_id: u64,
     pub run: PrefillRun,
+    /// Scheduling class the request was served under.
+    pub priority: Priority,
     /// Queue wait (us) before the request was admitted into an engine.
     pub queue_us: f64,
     /// Time parked between phases waiting for a worker (us) — the
@@ -103,6 +137,12 @@ pub struct Completion {
     pub pipeline_wait_us: f64,
     /// End-to-end latency including queueing (us).
     pub e2e_us: f64,
+    /// Phase-boundary slots this request yielded to higher-ranked
+    /// requests ([`Policy::Preemptive`] only; 0 elsewhere). For `Batch`
+    /// requests the aging limit [`ServerOptions::max_yields`] bounds
+    /// this; `Interactive` requests only yield to aged batches and are
+    /// not aging-bounded themselves.
+    pub preemptions: u64,
 }
 
 impl Completion {
@@ -111,10 +151,12 @@ impl Completion {
     pub fn sample(&self) -> crate::metrics::ServeSample {
         crate::metrics::ServeSample {
             kernel_backend: self.run.metrics.kernel_backend,
+            priority: self.priority,
             ttft_us: self.run.metrics.ttft_us,
             queue_us: self.queue_us,
             pipeline_wait_us: self.pipeline_wait_us,
             e2e_us: self.e2e_us,
+            preemptions: self.preemptions,
             hbm_read_bytes: self.run.metrics.hbm_read_bytes as f64,
             cache_hit_rate: self.run.metrics.cache_hit_rate,
         }
@@ -126,6 +168,10 @@ impl Completion {
 struct ReqMeta {
     /// Admission sequence number (tie-break: earlier admission first).
     seq: u64,
+    priority: Priority,
+    /// Phase-boundary slots this parked state has yielded to
+    /// higher-ranked requests; drives aging and the preemption counter.
+    yields: u64,
     submitted_at: Instant,
     queue_us: f64,
     /// When the state was last parked in the ready set.
@@ -151,6 +197,12 @@ struct Shared {
     inflight: usize,
     next_seq: u64,
     policy: Policy,
+    /// Model depth, for the queued-request remaining-cost estimate
+    /// (`4 * n_layers * tokens` — same units as
+    /// [`PrefillState::remaining_cost`]).
+    n_layers: usize,
+    /// Aging bound (see [`ServerOptions::max_yields`]; resolved, >= 1).
+    max_yields: usize,
 }
 
 struct Sched {
@@ -236,7 +288,13 @@ impl Server {
             WorkerPool::from_env().threads()
         };
         let max_inflight = if opts.max_inflight > 0 { opts.max_inflight } else { n_workers + 1 };
+        let max_yields = if opts.max_yields > 0 { opts.max_yields } else { DEFAULT_MAX_YIELDS };
         let budget = PoolBudget::new(total_threads);
+        // one EWMA hint store shared by every worker's engine: completed
+        // requests feed measured phase costs in, phase fan-outs size
+        // their lease wants from it (static split until first feedback)
+        let hints = (opts.pipelined && opts.adaptive_hints)
+            .then(|| AdaptiveHints::new(HINT_EWMA_ALPHA));
         let sync = Arc::new(Sched {
             shared: Mutex::new(Shared {
                 queue: VecDeque::new(),
@@ -246,6 +304,8 @@ impl Server {
                 inflight: 0,
                 next_seq: 0,
                 policy: opts.policy,
+                n_layers: cfg.model.n_layers,
+                max_yields,
             }),
             cond: Condvar::new(),
         });
@@ -258,10 +318,12 @@ impl Server {
             let cfg = cfg.clone();
             let weights = Arc::clone(&weights);
             let budget = Arc::clone(&budget);
+            let hints = hints.clone();
             workers.push(std::thread::spawn(move || -> Result<()> {
                 let _abort_guard = AbortOnPanic(&sync);
                 let out = (|| {
                     let mut engine = Engine::with_weights(&dir, cfg, weights)?;
+                    engine.hints = hints;
                     engine.ctx = if opts.pipelined {
                         // lease from the shared machine budget per phase job
                         KernelCtx::with_pool(WorkerPool::shared(total_threads, budget))
@@ -368,9 +430,11 @@ fn worker_serial(sync: &Sched, engine: &mut Engine, tx: &Sender<Completion>) -> 
         let _ = tx.send(Completion {
             request_id: req.id,
             run,
+            priority: req.priority,
             queue_us,
             pipeline_wait_us: 0.0,
             e2e_us,
+            preemptions: 0,
         });
         let mut s = sync.shared.lock().unwrap();
         s.inflight -= 1;
@@ -415,6 +479,8 @@ fn worker_pipelined(
                     state,
                     meta: ReqMeta {
                         seq,
+                        priority: req.priority,
+                        yields: 0,
                         submitted_at,
                         queue_us,
                         parked_at: Instant::now(),
@@ -441,12 +507,23 @@ fn worker_pipelined(
                     match result {
                         Some(run) => {
                             s.inflight -= 1;
+                            // feed measured per-phase job costs back into
+                            // the shared adaptive lease-want EWMA
+                            if let Some(h) = engine.hints.as_ref() {
+                                let m = &run.metrics;
+                                h.observe(phase_hint_slot(Phase::Qkv), m.qkv_job_us);
+                                h.observe(phase_hint_slot(Phase::IndexGen), m.sigu_job_us);
+                                h.observe(phase_hint_slot(Phase::Sau), m.sau_job_us);
+                                h.observe(phase_hint_slot(Phase::FfnLogits), m.ffn_job_us);
+                            }
                             let _ = tx.send(Completion {
                                 request_id: run.metrics.request_id,
                                 run,
+                                priority: meta.priority,
                                 queue_us: meta.queue_us,
                                 pipeline_wait_us: meta.pipeline_wait_us,
                                 e2e_us: meta.submitted_at.elapsed().as_micros() as f64,
+                                preemptions: meta.yields,
                             });
                         }
                         None => s.ready.push(Pending {
@@ -466,8 +543,13 @@ fn worker_pipelined(
 /// older requests drain and their TTFT stays low), admitting a new request
 /// only when no state is ready and the pipeline has room. Admission order
 /// follows the queueing policy; everything after admission is
-/// phase-availability driven.
+/// phase-availability driven. [`Policy::Preemptive`] replaces the
+/// ready-first rule with a rank order over *all* runnable requests —
+/// see [`pick_work_preemptive`].
 fn pick_work(s: &mut Shared, max_inflight: usize, batch_phases: bool) -> Option<Work> {
+    if s.policy == Policy::Preemptive {
+        return pick_work_preemptive(s, max_inflight, batch_phases);
+    }
     if !s.ready.is_empty() {
         let best = s
             .ready
@@ -479,27 +561,7 @@ fn pick_work(s: &mut Shared, max_inflight: usize, batch_phases: bool) -> Option<
             .map(|(i, _)| i)
             .unwrap();
         let lead = s.ready.swap_remove(best);
-        let mut group = vec![lead];
-        if batch_phases {
-            let phase = group[0].state.phase();
-            let layer = group[0].state.layer();
-            if matches!(phase, Phase::Qkv | Phase::Sau | Phase::FfnLogits) {
-                let mut i = 0;
-                while i < s.ready.len() && group.len() < MAX_PHASE_BATCH {
-                    let p = &s.ready[i];
-                    // SAU fuses at any layer; the weight-streaming phases
-                    // (QKV, FFN tail) fuse only on a shared layer
-                    let fusable = p.state.phase() == phase
-                        && (phase == Phase::Sau || p.state.layer() == layer);
-                    if fusable {
-                        group.push(s.ready.swap_remove(i));
-                    } else {
-                        i += 1;
-                    }
-                }
-            }
-        }
-        return Some(Work::Phases(group));
+        return Some(Work::Phases(form_group(s, lead, batch_phases)));
     }
     if s.inflight < max_inflight {
         if let Some((req, at)) = next_item(s) {
@@ -508,6 +570,128 @@ fn pick_work(s: &mut Shared, max_inflight: usize, batch_phases: bool) -> Option<
         }
     }
     None
+}
+
+/// Scheduling rank of a runnable request under [`Policy::Preemptive`]:
+/// class first (aged batch < interactive < batch), then the remaining-cost
+/// estimate (SJF over what is *left*, so advanced short requests drain
+/// first), then admission order. Lower ranks run first.
+type PreemptRank = (u8, u64, u64);
+
+/// Class component of the preemptive rank. A `Batch` request that has
+/// yielded `max_yields` phase slots ages to rank 0 — ahead of everything —
+/// so a sustained `Interactive` stream can delay it by at most
+/// `max_yields` phase boundaries (the starvation bound).
+fn class_rank(priority: Priority, yields: u64, max_yields: usize) -> u8 {
+    match priority {
+        Priority::Batch if yields >= max_yields as u64 => 0,
+        Priority::Interactive => 1,
+        Priority::Batch => 2,
+    }
+}
+
+fn pending_rank(p: &Pending, max_yields: usize) -> PreemptRank {
+    (class_rank(p.meta.priority, p.meta.yields, max_yields), p.state.remaining_cost(), p.meta.seq)
+}
+
+/// Rank of a queued (not yet admitted) request: nothing has run, so the
+/// remaining cost is the full `4 * n_layers * tokens` — the same units as
+/// [`PrefillState::remaining_cost`], making queued and parked work
+/// directly comparable.
+fn queue_rank(r: &TraceRequest, n_layers: usize, max_yields: usize) -> (u8, u64) {
+    (class_rank(r.priority, 0, max_yields), 4 * n_layers as u64 * r.spec.tokens as u64)
+}
+
+/// Preemptive stage loop: at every phase boundary, re-rank all runnable
+/// requests — parked states and queued arrivals — by (class,
+/// remaining-cost, admission order). A queued request that strictly
+/// outranks every parked state is admitted ahead of them (the parked
+/// states *yield* the slot: that is the preemption, counted per yielding
+/// request); otherwise the best-ranked parked state steps. Preemption
+/// only reorders which `PrefillState` advances next — a phase is never
+/// split and states are never evicted — so per-request outputs stay
+/// bit-identical to solo runs. Admission still respects `max_inflight`.
+fn pick_work_preemptive(s: &mut Shared, max_inflight: usize, batch_phases: bool) -> Option<Work> {
+    let ready_best = s
+        .ready
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, p)| pending_rank(p, s.max_yields))
+        .map(|(i, p)| (pending_rank(p, s.max_yields), i));
+    let queue_best = s
+        .queue
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, (r, _))| queue_rank(r, s.n_layers, s.max_yields))
+        .map(|(i, (r, _))| (queue_rank(r, s.n_layers, s.max_yields), i));
+
+    if let Some(((q_class, q_cost), qi)) = queue_best {
+        let jumps = match ready_best {
+            // ready wins (class, cost) ties: advanced work drains first
+            Some(((r_class, r_cost, _), _)) => (q_class, q_cost) < (r_class, r_cost),
+            None => true,
+        };
+        if jumps && s.inflight < max_inflight {
+            // every parked lower-class state just yielded its slot to a
+            // newly admitted request — the preemption event
+            charge_yields(s, q_class, u64::MAX);
+            let (req, at) = s.queue.remove(qi).expect("queue_best index");
+            s.inflight += 1;
+            return Some(Work::Admit(req, at));
+        }
+    }
+    if let Some((_, i)) = ready_best {
+        let lead = s.ready.swap_remove(i);
+        let lead_class = class_rank(lead.meta.priority, lead.meta.yields, s.max_yields);
+        let lead_seq = lead.meta.seq;
+        let group = form_group(s, lead, batch_phases);
+        // older lower-class states passed over at this phase boundary
+        // yielded their slot (fused group members advanced, so only the
+        // states still parked are charged)
+        charge_yields(s, lead_class, lead_seq);
+        return Some(Work::Phases(group));
+    }
+    None
+}
+
+/// Charge one yield to every parked state that is older than the winner
+/// (`seq < winner_seq`) and of a strictly worse class — the states a
+/// preemptive pick just jumped. Yields feed the per-request preemption
+/// counter and the aging bound.
+fn charge_yields(s: &mut Shared, winner_class: u8, winner_seq: u64) {
+    let max_yields = s.max_yields;
+    for p in s.ready.iter_mut() {
+        if p.meta.seq < winner_seq
+            && class_rank(p.meta.priority, p.meta.yields, max_yields) > winner_class
+        {
+            p.meta.yields += 1;
+        }
+    }
+}
+
+/// Fuse same-phase parked states into the lead's step (up to
+/// [`MAX_PHASE_BATCH`]): SAU at any layer, the weight-streaming phases
+/// (QKV, FFN tail) only on a shared layer.
+fn form_group(s: &mut Shared, lead: Pending, batch_phases: bool) -> Vec<Pending> {
+    let mut group = vec![lead];
+    if batch_phases {
+        let phase = group[0].state.phase();
+        let layer = group[0].state.layer();
+        if matches!(phase, Phase::Qkv | Phase::Sau | Phase::FfnLogits) {
+            let mut i = 0;
+            while i < s.ready.len() && group.len() < MAX_PHASE_BATCH {
+                let p = &s.ready[i];
+                let fusable = p.state.phase() == phase
+                    && (phase == Phase::Sau || p.state.layer() == layer);
+                if fusable {
+                    group.push(s.ready.swap_remove(i));
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    group
 }
 
 fn phase_rank(p: Phase) -> u8 {
@@ -533,6 +717,17 @@ fn next_item(s: &mut Shared) -> Option<(TraceRequest, Instant)> {
             .min_by_key(|(_, (r, _))| r.spec.tokens)
             .map(|(i, _)| i)
             .unwrap_or(0),
+        // class first (via the same class_rank the phase-boundary
+        // ranking uses — one source of truth), then SJF: what the serial
+        // baseline and the pipeline's no-contention admission see of the
+        // preemptive rank
+        Policy::Preemptive => s
+            .queue
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, (r, _))| (class_rank(r.priority, 0, s.max_yields), r.spec.tokens))
+            .map(|(i, _)| i)
+            .unwrap_or(0),
     };
     s.queue.remove(idx)
 }
@@ -543,10 +738,15 @@ mod tests {
     use crate::workload::prompts::{PromptKind, PromptSpec};
 
     fn req(id: u64, tokens: usize) -> TraceRequest {
+        req_class(id, tokens, Priority::Interactive)
+    }
+
+    fn req_class(id: u64, tokens: usize, priority: Priority) -> TraceRequest {
         TraceRequest {
             id,
             spec: PromptSpec { kind: PromptKind::Random, tokens, seed: id },
             arrival_us: 0,
+            priority,
         }
     }
 
@@ -559,6 +759,28 @@ mod tests {
             inflight: 0,
             next_seq: 0,
             policy,
+            n_layers: crate::config::TINY.n_layers,
+            max_yields: DEFAULT_MAX_YIELDS,
+        }
+    }
+
+    /// A parked TINY state at (Qkv, layer 0) with the given class.
+    fn parked(engine: &Engine, id: u64, tokens: usize, seq: u64, priority: Priority) -> Pending {
+        let state = engine
+            .prefill_start(id, &PromptSpec { kind: PromptKind::Random, tokens, seed: 1 }
+                .generate())
+            .unwrap();
+        Pending {
+            state,
+            meta: ReqMeta {
+                seq,
+                priority,
+                yields: 0,
+                submitted_at: Instant::now(),
+                queue_us: 0.0,
+                parked_at: Instant::now(),
+                pipeline_wait_us: 0.0,
+            },
         }
     }
 
@@ -604,20 +826,7 @@ mod tests {
         s.queue.push_back((req(7, 256), Instant::now()));
         let engine =
             Engine::new_native(EngineConfig::new_native(crate::config::TINY.clone())).unwrap();
-        let state = engine
-            .prefill_start(3, &PromptSpec { kind: PromptKind::Random, tokens: 128, seed: 1 }
-                .generate())
-            .unwrap();
-        s.ready.push(Pending {
-            state,
-            meta: ReqMeta {
-                seq: 0,
-                submitted_at: Instant::now(),
-                queue_us: 0.0,
-                parked_at: Instant::now(),
-                pipeline_wait_us: 0.0,
-            },
-        });
+        s.ready.push(parked(&engine, 3, 128, 0, Priority::Interactive));
         s.inflight = 1;
         match pick_work(&mut s, 4, true) {
             Some(Work::Phases(group)) => {
@@ -631,5 +840,129 @@ mod tests {
         }
         // queue untouched
         assert_eq!(s.queue.len(), 1);
+    }
+
+    #[test]
+    fn preemptive_queue_ranks_class_before_length() {
+        let mut s = shared(Policy::Preemptive);
+        s.queue.push_back((req_class(1, 256, Priority::Batch), Instant::now()));
+        s.queue.push_back((req_class(2, 4096, Priority::Interactive), Instant::now()));
+        s.queue.push_back((req_class(3, 1024, Priority::Interactive), Instant::now()));
+        // shortest *interactive* first, even though the batch one is shorter
+        let (r, _) = next_item(&mut s).unwrap();
+        assert_eq!(r.id, 3);
+        let (r, _) = next_item(&mut s).unwrap();
+        assert_eq!(r.id, 2);
+        let (r, _) = next_item(&mut s).unwrap();
+        assert_eq!(r.id, 1);
+    }
+
+    #[test]
+    fn preemptive_admits_interactive_over_parked_batch() {
+        // a parked long batch prefill + a queued short interactive: the
+        // interactive jumps the slot and the batch is charged one yield
+        let engine =
+            Engine::new_native(EngineConfig::new_native(crate::config::TINY.clone())).unwrap();
+        let mut s = shared(Policy::Preemptive);
+        s.ready.push(parked(&engine, 0, 512, 0, Priority::Batch));
+        s.inflight = 1;
+        s.queue.push_back((req_class(1, 128, Priority::Interactive), Instant::now()));
+        match pick_work(&mut s, 4, true) {
+            Some(Work::Admit(r, _)) => assert_eq!(r.id, 1),
+            _ => panic!("expected the interactive admission to jump the parked batch"),
+        }
+        assert_eq!(s.ready[0].meta.yields, 1, "the parked batch yielded its slot");
+        // under FCFS the same shape steps the parked state instead
+        let mut s = shared(Policy::Fcfs);
+        s.ready.push(parked(&engine, 0, 512, 0, Priority::Batch));
+        s.inflight = 1;
+        s.queue.push_back((req_class(1, 128, Priority::Interactive), Instant::now()));
+        assert!(matches!(pick_work(&mut s, 4, true), Some(Work::Phases(_))));
+    }
+
+    #[test]
+    fn preemptive_steps_interactive_before_older_batch() {
+        // both parked: the newer interactive leads, the older batch is
+        // passed over (charged) at the phase boundary
+        let engine =
+            Engine::new_native(EngineConfig::new_native(crate::config::TINY.clone())).unwrap();
+        let mut s = shared(Policy::Preemptive);
+        s.ready.push(parked(&engine, 0, 512, 0, Priority::Batch));
+        s.ready.push(parked(&engine, 1, 128, 1, Priority::Interactive));
+        s.inflight = 2;
+        match pick_work(&mut s, 4, false) {
+            Some(Work::Phases(group)) => {
+                assert_eq!(group[0].state.request_id, 1);
+            }
+            _ => panic!("expected a phase step"),
+        }
+        assert_eq!(s.ready.len(), 1);
+        assert_eq!(s.ready[0].state.request_id, 0);
+        assert_eq!(s.ready[0].meta.yields, 1);
+    }
+
+    #[test]
+    fn aged_batch_outranks_interactive_work() {
+        // a batch state at the aging bound runs ahead of a queued AND a
+        // parked interactive — the starvation bound in action
+        let engine =
+            Engine::new_native(EngineConfig::new_native(crate::config::TINY.clone())).unwrap();
+        let mut s = shared(Policy::Preemptive);
+        s.max_yields = 3;
+        let mut batch = parked(&engine, 0, 512, 0, Priority::Batch);
+        batch.meta.yields = 3;
+        s.ready.push(batch);
+        s.ready.push(parked(&engine, 1, 128, 1, Priority::Interactive));
+        s.inflight = 2;
+        s.queue.push_back((req_class(2, 128, Priority::Interactive), Instant::now()));
+        match pick_work(&mut s, 8, false) {
+            Some(Work::Phases(group)) => assert_eq!(group[0].state.request_id, 0),
+            _ => panic!("expected the aged batch to step"),
+        }
+        // the aged batch accrues no further yields and nothing was charged
+        assert_eq!(s.ready[0].meta.yields, 0, "newer interactive is not charged");
+    }
+
+    #[test]
+    fn preemptive_respects_inflight_cap() {
+        // a queued interactive outranks the parked batch but the pipeline
+        // is full: the batch steps (states are never evicted)
+        let engine =
+            Engine::new_native(EngineConfig::new_native(crate::config::TINY.clone())).unwrap();
+        let mut s = shared(Policy::Preemptive);
+        s.ready.push(parked(&engine, 0, 512, 0, Priority::Batch));
+        s.inflight = 1;
+        s.queue.push_back((req_class(1, 128, Priority::Interactive), Instant::now()));
+        match pick_work(&mut s, 1, true) {
+            Some(Work::Phases(group)) => assert_eq!(group[0].state.request_id, 0),
+            _ => panic!("expected the parked batch to step when the pipeline is full"),
+        }
+        assert_eq!(s.queue.len(), 1);
+    }
+
+    #[test]
+    fn remaining_cost_prefers_advanced_states_within_class() {
+        // same class, same context: the state further along (smaller
+        // remaining cost) leads, so started work drains
+        let engine =
+            Engine::new_native(EngineConfig::new_native(crate::config::TINY.clone())).unwrap();
+        let mut s = shared(Policy::Preemptive);
+        let fresh = parked(&engine, 0, 256, 0, Priority::Interactive);
+        let mut advanced = parked(&engine, 1, 256, 1, Priority::Interactive);
+        // walk request 1 one full phase ahead
+        let mut eng = Engine::new_native(EngineConfig::new_native(crate::config::TINY.clone()))
+            .unwrap();
+        eng.phase_step(&mut advanced.state).unwrap();
+        assert!(advanced.state.remaining_cost() < fresh.state.remaining_cost());
+        s.ready.push(fresh);
+        s.ready.push(advanced);
+        s.inflight = 2;
+        match pick_work(&mut s, 4, false) {
+            Some(Work::Phases(group)) => assert_eq!(group[0].state.request_id, 1),
+            _ => panic!("expected a phase step"),
+        }
+        // equal class and the winner is *newer*: no yield charged to the
+        // older same-class state
+        assert_eq!(s.ready[0].meta.yields, 0);
     }
 }

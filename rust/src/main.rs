@@ -7,6 +7,7 @@
 //!   table2    FPGA resource utilization report
 //!   ttft      Fig.5-style sweep for one model
 //!   kernels   report the SIMD micro-kernel dispatch decision
+//!   perf-trend  gate a fresh hotpath_micro.json against the baseline
 //!   help
 
 use std::collections::HashMap;
@@ -72,6 +73,7 @@ fn run(args: &[String]) -> Result<()> {
         "table2" => cmd_table2(rest),
         "ttft" => cmd_ttft(rest),
         "kernels" => cmd_kernels(rest),
+        "perf-trend" => cmd_perf_trend(rest),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -106,6 +108,15 @@ COMMANDS
            FASTP_KERNEL override, tile edge); with --require-simd,
            exit non-zero unless a vector backend is active — the CI
            kernel-matrix assertion
+  perf-trend --baseline ci/hotpath_baseline.json --fresh hotpath_micro.json
+           [--tolerance 0.25] [--normalize score_tile.scalar_ns]
+           diff the fresh hotpath summary against the checked-in
+           baseline, per-kernel; exit non-zero on a regression (the CI
+           perf-trend gate). --normalize divides every timing by the
+           same file's reference kernel, cancelling absolute runner
+           speed. Refresh the baseline with one command:
+           FASTP_BENCH_JSON=ci/hotpath_baseline.json \\
+               cargo bench --bench hotpath_micro
   help     this text"
     );
 }
@@ -177,6 +188,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let policy = match flag(&flags, "policy", "fcfs".to_string())?.as_str() {
         "fcfs" => Policy::Fcfs,
         "sjf" => Policy::Sjf,
+        "preemptive" => Policy::Preemptive,
         p => bail!("unknown policy {p}"),
     };
     let mut opts = ServerOptions::new(workers, policy);
@@ -297,6 +309,64 @@ fn cmd_kernels(args: &[String]) -> Result<()> {
             std::env::consts::ARCH
         );
     }
+    Ok(())
+}
+
+fn cmd_perf_trend(args: &[String]) -> Result<()> {
+    use fast_prefill::util::trend::compare_trend;
+    let (_, flags) = parse_flags(args);
+    let baseline_path: String = flag(&flags, "baseline", "ci/hotpath_baseline.json".to_string())?;
+    let fresh_path: String = flag(&flags, "fresh", "hotpath_micro.json".to_string())?;
+    let tolerance: f64 = flag(&flags, "tolerance", 0.25)?;
+    let normalize: String = flag(&flags, "normalize", String::new())?;
+    let baseline = std::fs::read_to_string(&baseline_path)
+        .with_context(|| format!("reading baseline {baseline_path}"))?;
+    let fresh = std::fs::read_to_string(&fresh_path)
+        .with_context(|| format!("reading fresh summary {fresh_path}"))?;
+    let norm_key = (!normalize.is_empty()).then_some(normalize.as_str());
+    let report = compare_trend(&baseline, &fresh, tolerance, norm_key)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    println!(
+        "perf-trend: {} vs {} (tolerance {:.0}%{}{})",
+        fresh_path,
+        baseline_path,
+        tolerance * 100.0,
+        if norm_key.is_some() { ", normalized by " } else { "" },
+        normalize
+    );
+    let mut t = Table::new(&["kernel", "baseline", "fresh", "ratio", "status"]);
+    for p in &report.points {
+        t.row(&[
+            p.key.clone(),
+            fnum(p.baseline),
+            fnum(p.fresh),
+            format!("{:.3}", p.ratio),
+            if p.regressed { "REGRESSED".into() } else { "ok".into() },
+        ]);
+    }
+    t.print();
+    for m in &report.missing {
+        println!("MISSING: baseline kernel '{m}' absent from the fresh summary");
+    }
+    if report.provisional {
+        println!(
+            "baseline is PROVISIONAL (hand-written seed): reporting only. Arm the gate by \
+             refreshing it on a representative runner:\n  \
+             FASTP_BENCH_JSON=ci/hotpath_baseline.json cargo bench --bench hotpath_micro"
+        );
+        return Ok(());
+    }
+    if report.failed() {
+        bail!(
+            "{} kernel(s) regressed beyond {:.0}% (and {} missing); refresh the baseline if \
+             intentional: FASTP_BENCH_JSON={} cargo bench --bench hotpath_micro",
+            report.regressions().len(),
+            tolerance * 100.0,
+            report.missing.len(),
+            baseline_path
+        );
+    }
+    println!("perf-trend: PASS ({} kernels within tolerance)", report.points.len());
     Ok(())
 }
 

@@ -2,6 +2,7 @@
 //! statistics, with paper-style table/series emitters.
 
 use crate::util::table::{fnum, Table};
+use crate::workload::prompts::Priority;
 
 /// Per-request prefill metrics collected by the coordinator.
 #[derive(Clone, Debug, Default)]
@@ -36,6 +37,14 @@ pub struct PrefillMetrics {
     pub t_sigu_us: f64,
     pub t_sau_us: f64,
     pub t_ffn_us: f64,
+    /// Measured mean per-job kernel cost of each phase across the run
+    /// (us/job) — the observations the serving loop's EWMA feeds back
+    /// into adaptive lease-want sizing (ROADMAP serving (e)). 0.0 when
+    /// the phase ran no jobs.
+    pub qkv_job_us: f64,
+    pub sigu_job_us: f64,
+    pub sau_job_us: f64,
+    pub ffn_job_us: f64,
 }
 
 impl PrefillMetrics {
@@ -54,15 +63,51 @@ pub struct ServeSample {
     /// Micro-kernel backend that served the request (from
     /// [`PrefillMetrics::kernel_backend`]).
     pub kernel_backend: &'static str,
+    /// Scheduling class the request was served under.
+    pub priority: Priority,
     pub ttft_us: f64,
     pub queue_us: f64,
     /// Time parked between phases waiting for a worker (pipeline stall).
     pub pipeline_wait_us: f64,
     pub e2e_us: f64,
+    /// Phase-boundary slots this request yielded to higher-ranked
+    /// requests under a preemptive policy (0 elsewhere; `Batch` yields
+    /// are bounded by the scheduler's aging limit).
+    pub preemptions: u64,
     /// Modeled KV HBM fetch traffic attributed to this request (bytes).
     pub hbm_read_bytes: f64,
     /// KV cache hit rate over the request's SAU schedules.
     pub cache_hit_rate: f64,
+}
+
+/// TTFT statistics of one priority class within a [`ServeSummary`].
+///
+/// Per-class TTFT is **user-perceived**: submission -> first token,
+/// which for prefill-only serving is the end-to-end latency (queue wait
+/// + phase waits + compute). The engine-level `ttft_us` clock only
+/// starts at admission, so it cannot see the head-of-line blocking a
+/// preemptive policy exists to remove.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClassTtft {
+    pub n: usize,
+    pub ttft_mean_ms: f64,
+    pub ttft_p95_ms: f64,
+}
+
+impl ClassTtft {
+    fn from_samples(samples: &[ServeSample], class: Priority) -> ClassTtft {
+        use crate::util::stats::{mean, percentile};
+        let ttft: Vec<f64> = samples
+            .iter()
+            .filter(|s| s.priority == class)
+            .map(|s| s.e2e_us / 1e3)
+            .collect();
+        ClassTtft {
+            n: ttft.len(),
+            ttft_mean_ms: mean(&ttft),
+            ttft_p95_ms: percentile(&ttft, 95.0),
+        }
+    }
 }
 
 /// Aggregate serving statistics for one scheduling mode.
@@ -78,6 +123,13 @@ pub struct ServeSummary {
     pub pipeline_wait_mean_ms: f64,
     pub e2e_mean_ms: f64,
     pub e2e_p95_ms: f64,
+    /// Per-class TTFT breakdown (preemptive policies optimize
+    /// `interactive` at `batch`'s expense; both classes are reported).
+    pub interactive: ClassTtft,
+    pub batch: ClassTtft,
+    /// Total phase-boundary yields across the trace (0 under
+    /// non-preemptive policies).
+    pub preemptions: u64,
     /// Total modeled KV HBM fetch traffic across the trace (GB).
     pub hbm_read_gb: f64,
     /// Mean per-request KV cache hit rate.
@@ -106,15 +158,20 @@ impl ServeSummary {
             pipeline_wait_mean_ms: mean(&wait),
             e2e_mean_ms: mean(&e2e),
             e2e_p95_ms: percentile(&e2e, 95.0),
+            interactive: ClassTtft::from_samples(samples, Priority::Interactive),
+            batch: ClassTtft::from_samples(samples, Priority::Batch),
+            preemptions: samples.iter().map(|s| s.preemptions).sum(),
             hbm_read_gb: samples.iter().map(|s| s.hbm_read_bytes).sum::<f64>() / 1e9,
             cache_hit_rate_mean: mean(&hits),
         }
     }
 
-    /// One-line report for banners/examples.
+    /// One-line report for banners/examples. Per-class TTFT and yield
+    /// counts are appended only when the trace actually carried both
+    /// priority classes.
     pub fn render(&self, label: &str) -> String {
         let backend = if self.kernel_backend.is_empty() { "?" } else { self.kernel_backend };
-        format!(
+        let mut line = format!(
             "{label}: {} req [{backend} kernels] | TTFT mean {:.0} ms p95 {:.0} ms | \
              queue mean {:.0} ms | \
              phase-wait mean {:.0} ms | e2e mean {:.0} ms p95 {:.0} ms | \
@@ -128,6 +185,52 @@ impl ServeSummary {
             self.e2e_p95_ms,
             self.hbm_read_gb,
             self.cache_hit_rate_mean * 100.0
+        );
+        if self.batch.n > 0 && self.interactive.n > 0 {
+            line.push_str(&format!(
+                " | int TTFT {:.0}/{:.0} ms (n={}) | batch TTFT {:.0}/{:.0} ms (n={}) | \
+                 yields {}",
+                self.interactive.ttft_mean_ms,
+                self.interactive.ttft_p95_ms,
+                self.interactive.n,
+                self.batch.ttft_mean_ms,
+                self.batch.ttft_p95_ms,
+                self.batch.n,
+                self.preemptions
+            ));
+        }
+        line
+    }
+
+    /// Machine-readable summary (hand-rolled JSON; no serde offline) —
+    /// the serving smoke uploads this as a CI workflow artifact.
+    pub fn to_json(&self, label: &str) -> String {
+        format!(
+            "{{\"label\": \"{}\", \"n\": {}, \"kernel_backend\": \"{}\", \
+             \"ttft_mean_ms\": {:.3}, \"ttft_p95_ms\": {:.3}, \
+             \"queue_mean_ms\": {:.3}, \"pipeline_wait_mean_ms\": {:.3}, \
+             \"e2e_mean_ms\": {:.3}, \"e2e_p95_ms\": {:.3}, \
+             \"interactive\": {{\"n\": {}, \"ttft_mean_ms\": {:.3}, \"ttft_p95_ms\": {:.3}}}, \
+             \"batch\": {{\"n\": {}, \"ttft_mean_ms\": {:.3}, \"ttft_p95_ms\": {:.3}}}, \
+             \"preemptions\": {}, \"hbm_read_gb\": {:.6}, \"cache_hit_rate_mean\": {:.4}}}",
+            label,
+            self.n,
+            self.kernel_backend,
+            self.ttft_mean_ms,
+            self.ttft_p95_ms,
+            self.queue_mean_ms,
+            self.pipeline_wait_mean_ms,
+            self.e2e_mean_ms,
+            self.e2e_p95_ms,
+            self.interactive.n,
+            self.interactive.ttft_mean_ms,
+            self.interactive.ttft_p95_ms,
+            self.batch.n,
+            self.batch.ttft_mean_ms,
+            self.batch.ttft_p95_ms,
+            self.preemptions,
+            self.hbm_read_gb,
+            self.cache_hit_rate_mean
         )
     }
 
@@ -236,6 +339,7 @@ mod tests {
                 e2e_us: i as f64 * 1000.0 + 500.0,
                 hbm_read_bytes: 2.5e8,
                 cache_hit_rate: 0.5,
+                ..Default::default()
             })
             .collect();
         let s = ServeSummary::from_samples(&samples);
@@ -250,6 +354,39 @@ mod tests {
         let faster = ServeSummary { ttft_mean_ms: 2.0, ..s.clone() };
         assert!((faster.ttft_saving_pct(&s) - 20.0).abs() < 1e-9);
         assert!(s.render("x").contains("4 req"));
+        // all-interactive trace: no per-class tail on the banner line
+        assert_eq!(s.batch.n, 0);
+        assert!(!s.render("x").contains("batch TTFT"));
+    }
+
+    #[test]
+    fn serve_summary_splits_priority_classes() {
+        // per-class TTFT is user-perceived (submission -> first token),
+        // i.e. computed from e2e, not the admission-started engine clock
+        let mk = |ttft_ms: f64, priority, preemptions| ServeSample {
+            priority,
+            preemptions,
+            e2e_us: ttft_ms * 1e3,
+            ..Default::default()
+        };
+        let samples = vec![
+            mk(10.0, Priority::Interactive, 0),
+            mk(20.0, Priority::Interactive, 0),
+            mk(100.0, Priority::Batch, 7),
+        ];
+        let s = ServeSummary::from_samples(&samples);
+        assert_eq!(s.interactive.n, 2);
+        assert_eq!(s.batch.n, 1);
+        assert!((s.interactive.ttft_mean_ms - 15.0).abs() < 1e-9);
+        assert!((s.batch.ttft_mean_ms - 100.0).abs() < 1e-9);
+        assert_eq!(s.preemptions, 7);
+        let line = s.render("x");
+        assert!(line.contains("int TTFT"), "{line}");
+        assert!(line.contains("yields 7"), "{line}");
+        let json = s.to_json("pipelined");
+        assert!(json.contains("\"label\": \"pipelined\""), "{json}");
+        assert!(json.contains("\"preemptions\": 7"), "{json}");
+        assert!(json.contains("\"interactive\": {\"n\": 2"), "{json}");
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Shared utilities: deterministic PRNG, statistics, bench harness,
-//! property-testing, table formatting, and the kernel worker pool.
+//! property-testing, table formatting, the kernel worker pool, and the
+//! perf-trend comparator behind the CI gate.
 
 pub mod bench;
 pub mod pool;
@@ -7,3 +8,4 @@ pub mod prng;
 pub mod prop;
 pub mod stats;
 pub mod table;
+pub mod trend;

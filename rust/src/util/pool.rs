@@ -79,6 +79,84 @@ impl PoolBudget {
     }
 }
 
+/// Phase slots tracked by [`AdaptiveHints`] — the engine's four prefill
+/// phases (QKV, IndexGen, SAU, FFN/logits), by `Phase` order.
+pub const HINT_PHASES: usize = 4;
+
+/// Smoothing factor for the per-phase cost EWMA (weight of the newest
+/// observation).
+pub const HINT_EWMA_ALPHA: f64 = 0.3;
+
+/// EWMA-fed adaptive lease-want sizing (ROADMAP serving follow-on (e)).
+///
+/// The serving loop records each completed request's measured per-phase
+/// job cost ([`AdaptiveHints::observe`]); engines size each phase's
+/// [`WorkerPool::with_want_cap`] lease request from the EWMA
+/// ([`AdaptiveHints::want`]): the most expensive phase wants the full
+/// thread budget, cheaper phases want a proportional share (floored at 2
+/// so a phase never serializes itself). Until the phase's **first
+/// observation** lands, `want` returns the caller's static split
+/// unchanged — cold-start behavior is identical to the static hints.
+/// Want sizing never changes results (the pool's bit-identity contract);
+/// it only shifts which co-resident fan-out holds how many slots.
+#[derive(Debug)]
+pub struct AdaptiveHints {
+    /// Per-phase (EWMA us-per-job, observation count).
+    state: Mutex<[(f64, u64); HINT_PHASES]>,
+    alpha: f64,
+}
+
+impl AdaptiveHints {
+    pub fn new(alpha: f64) -> Arc<AdaptiveHints> {
+        let alpha = alpha.clamp(0.0, 1.0);
+        Arc::new(AdaptiveHints { state: Mutex::new([(0.0, 0); HINT_PHASES]), alpha })
+    }
+
+    /// Fold one measured per-job cost (us) into the phase's EWMA. The
+    /// first observation seeds the EWMA directly; non-finite or
+    /// non-positive observations are dropped (a phase that ran no jobs
+    /// reports 0 and must not poison the average).
+    pub fn observe(&self, phase: usize, us_per_job: f64) {
+        if phase >= HINT_PHASES || !us_per_job.is_finite() || us_per_job <= 0.0 {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        let (ewma, n) = st[phase];
+        st[phase] = if n == 0 {
+            (us_per_job, 1)
+        } else {
+            (self.alpha * us_per_job + (1.0 - self.alpha) * ewma, n + 1)
+        };
+    }
+
+    /// The current EWMA cost for a phase (0.0 before any observation).
+    pub fn ewma(&self, phase: usize) -> f64 {
+        if phase >= HINT_PHASES {
+            return 0.0;
+        }
+        self.state.lock().unwrap()[phase].0
+    }
+
+    /// Lease-want for `phase` on a `threads`-wide budget: `fallback` (the
+    /// static split) until the phase has an observation, then `threads`
+    /// scaled by this phase's share of the most expensive observed
+    /// phase's EWMA cost, clamped to `[min(2, threads), threads]`.
+    pub fn want(&self, phase: usize, threads: usize, fallback: usize) -> usize {
+        let threads = threads.max(1);
+        if phase >= HINT_PHASES {
+            return fallback;
+        }
+        let st = self.state.lock().unwrap();
+        let (ewma, n) = st[phase];
+        let max = st.iter().filter(|(_, n)| *n > 0).map(|(e, _)| *e).fold(0.0f64, f64::max);
+        if n == 0 || max <= 0.0 {
+            return fallback; // first-observation clamp: static split
+        }
+        let scaled = ((threads as f64) * ewma / max).ceil() as usize;
+        scaled.clamp(2.min(threads), threads)
+    }
+}
+
 /// RAII slot lease: releases on drop (also on unwind out of `map`).
 struct Lease<'a> {
     budget: &'a PoolBudget,
@@ -89,6 +167,16 @@ impl Drop for Lease<'_> {
     fn drop(&mut self) {
         self.budget.release(self.n);
     }
+}
+
+/// Validate a want-cap value: must be positive (a `map` call's lease
+/// always covers the caller thread, so a cap of 0 cannot be honored).
+/// The single validation point for [`WorkerPool::with_want_cap`].
+pub fn validate_want_cap(cap: usize) -> Result<usize, String> {
+    if cap == 0 {
+        return Err("want cap 0 is invalid (a lease always needs one slot)".into());
+    }
+    Ok(cap)
 }
 
 fn env_threads() -> usize {
@@ -157,8 +245,19 @@ impl WorkerPool {
     /// remaining slots to co-resident phases; a private pool has no lease
     /// to shrink, so the cap is inert there (solo engines keep full
     /// parallelism). Never affects results (bit-identity contract).
+    ///
+    /// An invalid cap (0 — a lease always covers at least the caller
+    /// thread) warns and falls back to 1, following the `FASTP_TILE`
+    /// validate-warn-default convention (see [`validate_want_cap`]).
     pub fn with_want_cap(&self, cap: usize) -> WorkerPool {
-        WorkerPool { want_cap: Some(cap.max(1)), ..self.clone() }
+        let cap = match validate_want_cap(cap) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("warning: ignoring want cap: {e} (using 1)");
+                1
+            }
+        };
+        WorkerPool { want_cap: Some(cap), ..self.clone() }
     }
 
     /// The slot want a budget lease requests for an `n_jobs` fan-out.
@@ -375,6 +474,66 @@ mod tests {
         assert_eq!(budget.available(), 8);
         // private pool: no lease to shrink — the cap is inert, results identical
         assert_eq!(WorkerPool::with_threads(8).with_want_cap(3).map(30, work), seq);
+    }
+
+    #[test]
+    fn want_cap_zero_is_rejected_then_clamped() {
+        assert!(validate_want_cap(0).is_err());
+        assert_eq!(validate_want_cap(1), Ok(1));
+        assert_eq!(validate_want_cap(7), Ok(7));
+        // the constructor path warns (stderr) and falls back to 1; the
+        // pool must stay fully functional with the clamped cap
+        let budget = PoolBudget::new(4);
+        let pool = WorkerPool::shared(4, Arc::clone(&budget)).with_want_cap(0);
+        let out = pool.map(12, |i| i * 2);
+        assert_eq!(out, (0..12).map(|i| i * 2).collect::<Vec<_>>());
+        assert_eq!(budget.available(), 4);
+    }
+
+    #[test]
+    fn adaptive_hints_fall_back_until_first_observation() {
+        let h = AdaptiveHints::new(HINT_EWMA_ALPHA);
+        // cold start: every phase returns the caller's static split
+        for phase in 0..HINT_PHASES {
+            assert_eq!(h.want(phase, 8, 3), 3, "phase {phase}");
+        }
+        // one phase observed, another not: the unobserved one still
+        // falls back
+        h.observe(0, 100.0);
+        assert_eq!(h.want(1, 8, 2), 2);
+        // the observed (and only, hence most expensive) phase wants it all
+        assert_eq!(h.want(0, 8, 3), 8);
+    }
+
+    #[test]
+    fn adaptive_hints_scale_by_cost_share_and_clamp() {
+        let h = AdaptiveHints::new(HINT_EWMA_ALPHA);
+        h.observe(0, 800.0); // expensive phase
+        h.observe(1, 100.0); // cheap phase: 1/8 share
+        h.observe(2, 1e-9); // negligible: must clamp to the floor of 2
+        assert_eq!(h.want(0, 8, 8), 8);
+        assert_eq!(h.want(1, 8, 8), 2, "ceil(8/8)=1 clamps to the floor");
+        assert_eq!(h.want(2, 8, 8), 2);
+        // the floor respects a tiny budget
+        assert_eq!(h.want(2, 1, 1), 1);
+        // never exceeds the budget
+        assert!(h.want(0, 4, 4) <= 4);
+    }
+
+    #[test]
+    fn adaptive_hints_ewma_blends_observations() {
+        let h = AdaptiveHints::new(0.5);
+        h.observe(3, 100.0);
+        assert!((h.ewma(3) - 100.0).abs() < 1e-9, "first observation seeds");
+        h.observe(3, 200.0);
+        assert!((h.ewma(3) - 150.0).abs() < 1e-9, "0.5 blend");
+        // invalid observations are dropped, not folded in
+        h.observe(3, f64::NAN);
+        h.observe(3, -5.0);
+        h.observe(3, 0.0);
+        h.observe(99, 1.0);
+        assert!((h.ewma(3) - 150.0).abs() < 1e-9);
+        assert_eq!(h.ewma(99), 0.0);
     }
 
     #[test]

@@ -1,0 +1,378 @@
+//! Perf-trend gate (ROADMAP SIMD follow-on (d)): compare a fresh
+//! `hotpath_micro.json` summary against the checked-in
+//! `ci/hotpath_baseline.json` with a per-kernel tolerance, so kernel
+//! regressions fail the PR instead of silently drifting the paper
+//! figures.
+//!
+//! No serde offline — a minimal hand-rolled JSON reader flattens the
+//! (small, known-shape) summary into dotted numeric leaves
+//! (`score_tile.scalar_ns`, ...). Only `*_ns` timing leaves are gated
+//! (lower is better); ratio fields like `speedup` ride along for the
+//! report but are not compared. Because absolute nanoseconds differ
+//! across runner generations, the CI step compares **normalized** times:
+//! every `_ns` leaf is divided by the same file's reference-kernel time
+//! (`--normalize`), which cancels uniform machine speed and gates only
+//! the *relative* shape of the hot paths.
+//!
+//! A baseline written by hand (or merged before ever running on the CI
+//! runner class) can carry `"provisional": true`: the comparison is
+//! reported but never fails. Refreshing the baseline with the bench
+//! itself (one command: `FASTP_BENCH_JSON=ci/hotpath_baseline.json
+//! cargo bench --bench hotpath_micro`) overwrites the file without the
+//! flag and arms the gate.
+
+/// One numeric leaf of a flattened JSON document.
+pub type Metric = (String, f64);
+
+/// Flatten every numeric (and boolean, as 0/1) leaf of a JSON document
+/// into `parent.child` dotted keys. Supports the subset the bench
+/// summaries use: objects, strings, numbers, booleans, null, and arrays
+/// (indexed as `key.0`). Not a general validator — malformed input
+/// errors out rather than panicking.
+pub fn parse_metrics(json: &str) -> Result<Vec<Metric>, String> {
+    let mut p = Reader { b: json.as_bytes(), i: 0 };
+    let mut out = Vec::new();
+    p.ws();
+    p.value("", &mut out)?;
+    p.ws();
+    if p.i != p.b.len() {
+        return Err(format!("trailing content at byte {}", p.i));
+    }
+    Ok(out)
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Reader<'_> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected '{}' at byte {}", c as char, self.i))
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let start = self.i;
+        while let Some(c) = self.peek() {
+            match c {
+                b'"' => {
+                    let s = std::str::from_utf8(&self.b[start..self.i])
+                        .map_err(|e| e.to_string())?
+                        .to_string();
+                    self.i += 1;
+                    return Ok(s);
+                }
+                b'\\' => self.i += 2, // skip the escaped char
+                _ => self.i += 1,
+            }
+        }
+        Err("unterminated string".into())
+    }
+
+    fn value(&mut self, path: &str, out: &mut Vec<Metric>) -> Result<(), String> {
+        self.ws();
+        match self.peek() {
+            Some(b'{') => self.object(path, out),
+            Some(b'[') => self.array(path, out),
+            Some(b'"') => {
+                self.string()?; // string leaves are not gated
+                Ok(())
+            }
+            Some(b't') => self.literal("true", path, Some(1.0), out),
+            Some(b'f') => self.literal("false", path, Some(0.0), out),
+            Some(b'n') => self.literal("null", path, None, out),
+            Some(_) => self.number(path, out),
+            None => Err("unexpected end of input".into()),
+        }
+    }
+
+    fn literal(
+        &mut self,
+        word: &str,
+        path: &str,
+        leaf: Option<f64>,
+        out: &mut Vec<Metric>,
+    ) -> Result<(), String> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            if let Some(v) = leaf {
+                out.push((path.to_string(), v));
+            }
+            Ok(())
+        } else {
+            Err(format!("bad literal at byte {}", self.i))
+        }
+    }
+
+    fn number(&mut self, path: &str, out: &mut Vec<Metric>) -> Result<(), String> {
+        let start = self.i;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i]).map_err(|e| e.to_string())?;
+        let v: f64 = s.parse().map_err(|_| format!("bad number '{s}' at byte {start}"))?;
+        out.push((path.to_string(), v));
+        Ok(())
+    }
+
+    fn object(&mut self, path: &str, out: &mut Vec<Metric>) -> Result<(), String> {
+        self.expect(b'{')?;
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(());
+        }
+        loop {
+            self.ws();
+            let key = self.string()?;
+            self.ws();
+            self.expect(b':')?;
+            let child = if path.is_empty() { key.clone() } else { format!("{path}.{key}") };
+            self.value(&child, out)?;
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(());
+                }
+                _ => return Err(format!("expected ',' or '}}' at byte {}", self.i)),
+            }
+        }
+    }
+
+    fn array(&mut self, path: &str, out: &mut Vec<Metric>) -> Result<(), String> {
+        self.expect(b'[')?;
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(());
+        }
+        let mut idx = 0usize;
+        loop {
+            self.value(&format!("{path}.{idx}"), out)?;
+            idx += 1;
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(());
+                }
+                _ => return Err(format!("expected ',' or ']' at byte {}", self.i)),
+            }
+        }
+    }
+}
+
+/// One gated kernel timing, baseline vs fresh (normalized when a
+/// reference key was given).
+#[derive(Clone, Debug)]
+pub struct TrendPoint {
+    pub key: String,
+    pub baseline: f64,
+    pub fresh: f64,
+    /// fresh / baseline (> 1 is slower).
+    pub ratio: f64,
+    /// Over the tolerance: this point is a regression.
+    pub regressed: bool,
+}
+
+/// The perf-trend comparison result.
+#[derive(Clone, Debug)]
+pub struct TrendReport {
+    pub points: Vec<TrendPoint>,
+    /// Baseline `_ns` keys missing from the fresh summary — a renamed or
+    /// dropped kernel; fails the gate until the baseline is refreshed.
+    pub missing: Vec<String>,
+    /// The baseline is marked `"provisional": true`: report, never fail.
+    pub provisional: bool,
+    pub tolerance: f64,
+}
+
+impl TrendReport {
+    /// Regressed points (empty on a passing run).
+    pub fn regressions(&self) -> Vec<&TrendPoint> {
+        self.points.iter().filter(|p| p.regressed).collect()
+    }
+
+    /// Does this comparison fail the gate?
+    pub fn failed(&self) -> bool {
+        !self.provisional && (!self.missing.is_empty() || self.points.iter().any(|p| p.regressed))
+    }
+}
+
+fn lookup(metrics: &[Metric], key: &str) -> Option<f64> {
+    metrics.iter().find(|(k, _)| k == key).map(|&(_, v)| v)
+}
+
+/// Compare two bench summaries: every `_ns` leaf of the baseline must be
+/// matched in the fresh run within `fresh <= baseline * (1 + tolerance)`.
+/// With `normalize_key`, each file's `_ns` leaves are first divided by
+/// that file's value at the key (which must be a positive `_ns` leaf in
+/// both), gating relative shape instead of absolute runner speed.
+pub fn compare_trend(
+    baseline_json: &str,
+    fresh_json: &str,
+    tolerance: f64,
+    normalize_key: Option<&str>,
+) -> Result<TrendReport, String> {
+    let base = parse_metrics(baseline_json).map_err(|e| format!("baseline: {e}"))?;
+    let fresh = parse_metrics(fresh_json).map_err(|e| format!("fresh: {e}"))?;
+    let provisional = lookup(&base, "provisional") == Some(1.0);
+    let (base_div, fresh_div) = match normalize_key {
+        None => (1.0, 1.0),
+        Some(k) => {
+            let b = lookup(&base, k)
+                .filter(|&v| v > 0.0)
+                .ok_or_else(|| format!("baseline lacks a positive normalize key '{k}'"))?;
+            let f = lookup(&fresh, k)
+                .filter(|&v| v > 0.0)
+                .ok_or_else(|| format!("fresh summary lacks a positive normalize key '{k}'"))?;
+            (b, f)
+        }
+    };
+    let mut points = Vec::new();
+    let mut missing = Vec::new();
+    for (key, bv) in base.iter().filter(|(k, _)| k.ends_with("_ns")) {
+        if *bv <= 0.0 {
+            continue; // degenerate baseline entry: nothing to gate against
+        }
+        match lookup(&fresh, key) {
+            None => missing.push(key.clone()),
+            Some(fv) => {
+                let b = bv / base_div;
+                let f = fv / fresh_div;
+                let ratio = f / b;
+                points.push(TrendPoint {
+                    key: key.clone(),
+                    baseline: b,
+                    fresh: f,
+                    ratio,
+                    regressed: ratio > 1.0 + tolerance,
+                });
+            }
+        }
+    }
+    Ok(TrendReport { points, missing, provisional, tolerance })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BASE: &str = r#"{
+        "bench": "hotpath_micro",
+        "arch": "x86_64",
+        "score_tile": {"scalar_ns": 1000.0, "simd_ns": 400.0, "speedup": 2.5},
+        "prefill_4k_native_sau": {"scalar_backend_ns": 9.0e6, "simd_backend_ns": 6.0e6,
+                                  "bit_identical": true}
+    }"#;
+
+    fn doctor(json: &str, key_fragment: &str, factor: f64) -> String {
+        // scale one numeric field of a known fixture (test helper)
+        let at = json.find(key_fragment).unwrap();
+        let colon = json[at..].find(':').unwrap() + at + 1;
+        let end = json[colon..].find(|c: char| c == ',' || c == '}').unwrap() + colon;
+        let v: f64 = json[colon..end].trim().parse().unwrap();
+        format!("{}{}{}", &json[..colon], v * factor, &json[end..])
+    }
+
+    #[test]
+    fn parses_nested_numeric_and_bool_leaves() {
+        let m = parse_metrics(BASE).unwrap();
+        assert_eq!(lookup(&m, "score_tile.scalar_ns"), Some(1000.0));
+        assert_eq!(lookup(&m, "score_tile.speedup"), Some(2.5));
+        assert_eq!(lookup(&m, "prefill_4k_native_sau.bit_identical"), Some(1.0));
+        assert_eq!(lookup(&m, "bench"), None, "string leaves are not metrics");
+        assert!(parse_metrics("{\"a\": }").is_err());
+        assert!(parse_metrics("[1, 2.5]").unwrap().len() == 2);
+    }
+
+    #[test]
+    fn identical_runs_pass() {
+        let r = compare_trend(BASE, BASE, 0.25, None).unwrap();
+        assert!(!r.failed());
+        assert_eq!(r.points.len(), 4, "all four _ns leaves compared");
+        assert!(r.regressions().is_empty());
+        assert!(r.missing.is_empty());
+    }
+
+    #[test]
+    fn injected_slowdown_fails_the_gate() {
+        // 1.5x on one kernel vs a 25% tolerance: exactly the regression
+        // the CI perf-trend step must catch
+        let slow = doctor(BASE, "\"simd_ns\"", 1.5);
+        let r = compare_trend(BASE, &slow, 0.25, None).unwrap();
+        assert!(r.failed());
+        let regs = r.regressions();
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].key, "score_tile.simd_ns");
+        assert!((regs[0].ratio - 1.5).abs() < 1e-9);
+        // within tolerance passes
+        let ok = doctor(BASE, "\"simd_ns\"", 1.2);
+        assert!(!compare_trend(BASE, &ok, 0.25, None).unwrap().failed());
+    }
+
+    #[test]
+    fn normalization_cancels_uniform_machine_speed() {
+        // a fresh run on a 3x slower machine: raw comparison fails,
+        // normalized comparison passes (relative shape unchanged)
+        let mut slow = BASE.to_string();
+        let keys = ["\"scalar_ns\"", "\"simd_ns\"", "\"scalar_backend_ns\"", "\"simd_backend_ns\""];
+        for key in keys {
+            slow = doctor(&slow, key, 3.0);
+        }
+        assert!(compare_trend(BASE, &slow, 0.25, None).unwrap().failed());
+        let r = compare_trend(BASE, &slow, 0.25, Some("score_tile.scalar_ns")).unwrap();
+        assert!(!r.failed(), "normalized: {:?}", r.regressions());
+        // ...but a *relative* slowdown still fails under normalization
+        let skew = doctor(BASE, "\"simd_ns\"", 2.0);
+        let r = compare_trend(BASE, &skew, 0.25, Some("score_tile.scalar_ns")).unwrap();
+        assert!(r.failed());
+        assert_eq!(r.regressions()[0].key, "score_tile.simd_ns");
+    }
+
+    #[test]
+    fn provisional_baseline_reports_but_never_fails() {
+        let prov = BASE.replacen('{', "{\n  \"provisional\": true,", 1);
+        let slow = doctor(BASE, "\"simd_ns\"", 4.0);
+        let r = compare_trend(&prov, &slow, 0.25, None).unwrap();
+        assert!(r.provisional);
+        assert_eq!(r.regressions().len(), 1, "regression still reported");
+        assert!(!r.failed(), "provisional gates never fail");
+    }
+
+    #[test]
+    fn missing_kernel_fails_until_baseline_refresh() {
+        let fresh = BASE.replace("\"simd_ns\": 400.0, ", "");
+        let r = compare_trend(BASE, &fresh, 0.25, None).unwrap();
+        assert_eq!(r.missing, vec!["score_tile.simd_ns".to_string()]);
+        assert!(r.failed());
+    }
+
+    #[test]
+    fn missing_normalize_key_is_an_error() {
+        assert!(compare_trend(BASE, BASE, 0.25, Some("nope_ns")).is_err());
+    }
+}

@@ -11,4 +11,4 @@ pub mod needle;
 pub mod prompts;
 
 pub use needle::{NeedleTask, RetrievalOutcome};
-pub use prompts::{PromptKind, PromptSpec, RequestTrace, TraceRequest};
+pub use prompts::{Priority, PromptKind, PromptSpec, RequestTrace, TraceRequest};

@@ -77,6 +77,29 @@ impl PromptSpec {
     }
 }
 
+/// Scheduling priority class of a serving request (ROADMAP serving
+/// follow-on (b)). Preemptive policies rank `Interactive` requests ahead
+/// of `Batch` at every phase boundary; non-preemptive policies ignore the
+/// class entirely, so it is free to carry on every trace.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Latency-sensitive: preferred at phase boundaries.
+    #[default]
+    Interactive,
+    /// Throughput class: yields phase slots to `Interactive` requests,
+    /// protected from starvation by the scheduler's aging bound.
+    Batch,
+}
+
+impl Priority {
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+}
+
 /// A single serving request in a trace.
 #[derive(Clone, Debug)]
 pub struct TraceRequest {
@@ -84,6 +107,8 @@ pub struct TraceRequest {
     pub spec: PromptSpec,
     /// Offset from trace start (us) at which the request arrives.
     pub arrival_us: u64,
+    /// Scheduling class (ignored by non-preemptive policies).
+    pub priority: Priority,
 }
 
 /// A batch-of-requests trace for the serving example / benches.
@@ -116,6 +141,7 @@ impl RequestTrace {
                         seed: seed.wrapping_mul(31).wrapping_add(i as u64),
                     },
                     arrival_us: t,
+                    priority: Priority::Interactive,
                 }
             })
             .collect();
@@ -125,7 +151,11 @@ impl RequestTrace {
     /// Like [`RequestTrace::generate`], but each request's context length
     /// is drawn from `token_choices` — the mixed-length contention trace
     /// the pipelined server is measured on (short requests expose SJF and
-    /// phase-overlap behaviour that uniform lengths hide).
+    /// phase-overlap behaviour that uniform lengths hide). Requests drawn
+    /// at the longest choice are classed [`Priority::Batch`]; everything
+    /// shorter is [`Priority::Interactive`] (uniform traces stay all
+    /// interactive), so preemptive policies see the head-of-line shape
+    /// the trace was built to expose.
     pub fn generate_mixed(
         n_requests: usize,
         token_choices: &[usize],
@@ -136,23 +166,41 @@ impl RequestTrace {
         let mut rng = Prng::new(seed);
         let kinds =
             [PromptKind::Random, PromptKind::Anchored, PromptKind::Local, PromptKind::Mixed];
+        let longest = *token_choices.iter().max().unwrap();
+        let shortest = *token_choices.iter().min().unwrap();
         let mut t = 0u64;
         let requests = (0..n_requests)
             .map(|i| {
                 let u = rng.f32().max(1e-6) as f64;
                 t += (-(u.ln()) * mean_gap_us as f64) as u64;
+                // same draw order as ever (kind, then length), so seeded
+                // traces are unchanged from before classes existed
+                let kind = kinds[rng.below(kinds.len())];
+                let tokens = token_choices[rng.below(token_choices.len())];
                 TraceRequest {
                     id: i as u64,
                     spec: PromptSpec {
-                        kind: kinds[rng.below(kinds.len())],
-                        tokens: token_choices[rng.below(token_choices.len())],
+                        kind,
+                        tokens,
                         seed: seed.wrapping_mul(31).wrapping_add(i as u64),
                     },
                     arrival_us: t,
+                    priority: Self::class_for(tokens, shortest, longest),
                 }
             })
             .collect();
         RequestTrace { requests }
+    }
+
+    /// The mixed-trace class rule: the longest length class is `Batch`,
+    /// everything shorter (when the trace has any length spread at all)
+    /// is `Interactive`.
+    pub fn class_for(tokens: usize, shortest: usize, longest: usize) -> Priority {
+        if tokens >= longest && shortest < longest {
+            Priority::Batch
+        } else {
+            Priority::Interactive
+        }
     }
 }
 
@@ -209,6 +257,22 @@ mod tests {
         let distinct: std::collections::HashSet<usize> =
             t.requests.iter().map(|r| r.spec.tokens).collect();
         assert!(distinct.len() >= 2);
+    }
+
+    #[test]
+    fn mixed_trace_classes_longest_as_batch() {
+        let choices = [256usize, 512, 1024];
+        let t = RequestTrace::generate_mixed(32, &choices, 1000, 11);
+        for r in &t.requests {
+            let expect =
+                if r.spec.tokens == 1024 { Priority::Batch } else { Priority::Interactive };
+            assert_eq!(r.priority, expect, "tokens {}", r.spec.tokens);
+        }
+        // uniform-length traces have no batch class to carve out
+        let u = RequestTrace::generate(8, 512, 1000, 3);
+        assert!(u.requests.iter().all(|r| r.priority == Priority::Interactive));
+        assert_eq!(RequestTrace::class_for(512, 512, 512), Priority::Interactive);
+        assert_eq!(RequestTrace::class_for(1024, 256, 1024), Priority::Batch);
     }
 
     #[test]

@@ -25,6 +25,7 @@ fn req(id: u64, tokens: usize) -> TraceRequest {
         id,
         spec: PromptSpec { kind: PromptKind::Mixed, tokens, seed: 100 + id },
         arrival_us: 0,
+        priority: Default::default(),
     }
 }
 
@@ -60,6 +61,7 @@ fn identical_requests_get_identical_results_across_workers() {
             id: i,
             spec: PromptSpec { kind: PromptKind::Mixed, tokens: 256, seed: 777 },
             arrival_us: 0,
+            priority: Default::default(),
         });
     }
     let done = server.drain().unwrap();

@@ -217,6 +217,7 @@ fn native_server_serves_requests_without_artifacts() {
             id,
             spec: PromptSpec { kind: PromptKind::Mixed, tokens: 256, seed: id },
             arrival_us: 0,
+            priority: Default::default(),
         });
     }
     let completions = server.drain().unwrap();

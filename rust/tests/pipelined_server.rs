@@ -9,7 +9,7 @@ use fast_prefill::config::TINY;
 use fast_prefill::coordinator::{
     Completion, Engine, EngineConfig, Policy, PrefillRun, Server, ServerOptions,
 };
-use fast_prefill::workload::prompts::{PromptKind, PromptSpec, TraceRequest};
+use fast_prefill::workload::prompts::{Priority, PromptKind, PromptSpec, TraceRequest};
 
 fn native_cfg() -> EngineConfig {
     let mut cfg = EngineConfig::new_native(TINY.clone());
@@ -21,12 +21,23 @@ fn spec(tokens: usize, seed: u64) -> PromptSpec {
     PromptSpec { kind: PromptKind::Mixed, tokens, seed }
 }
 
-/// The contention trace: mixed context lengths, distinct seeds.
+fn req(id: u64, tokens: usize, seed: u64, priority: Priority) -> TraceRequest {
+    TraceRequest { id, spec: spec(tokens, seed), arrival_us: 0, priority }
+}
+
+/// The contention trace: mixed context lengths, distinct seeds, the long
+/// request classed `Batch` (preemptive policies exercise the class; the
+/// others ignore it).
 fn mixed_requests() -> Vec<TraceRequest> {
-    [(0u64, 256usize), (1, 512), (2, 384), (3, 128)]
-        .into_iter()
-        .map(|(id, tokens)| TraceRequest { id, spec: spec(tokens, 900 + id), arrival_us: 0 })
-        .collect()
+    [
+        (0u64, 256usize, Priority::Interactive),
+        (1, 512, Priority::Batch),
+        (2, 384, Priority::Interactive),
+        (3, 128, Priority::Interactive),
+    ]
+    .into_iter()
+    .map(|(id, tokens, priority)| req(id, tokens, 900 + id, priority))
+    .collect()
 }
 
 /// Solo (monolithic) runs of the same requests on a fresh engine.
@@ -65,7 +76,7 @@ fn assert_runs_identical(a: &PrefillRun, b: &PrefillRun, tag: &str) {
 fn pipelined_outputs_bit_identical_to_solo_prefill() {
     let reqs = mixed_requests();
     let solo = solo_runs(&reqs);
-    for policy in [Policy::Fcfs, Policy::Sjf] {
+    for policy in [Policy::Fcfs, Policy::Sjf, Policy::Preemptive] {
         let done = serve_with(ServerOptions::new(2, policy));
         assert_eq!(done.len(), reqs.len());
         for (c, s) in done.iter().zip(&solo) {
@@ -133,7 +144,12 @@ fn open_loop_replay_honors_arrival_times() {
     // outputs must still be bit-identical to solo runs
     let gap_us = 30_000u64;
     let reqs: Vec<TraceRequest> = (0..3u64)
-        .map(|id| TraceRequest { id, spec: spec(256, 700 + id), arrival_us: id * gap_us })
+        .map(|id| TraceRequest {
+            id,
+            spec: spec(256, 700 + id),
+            arrival_us: id * gap_us,
+            priority: Priority::Interactive,
+        })
         .collect();
     let solo = solo_runs(&reqs);
     let server =
@@ -154,6 +170,130 @@ fn open_loop_replay_honors_arrival_times() {
     }
 }
 
+/// The head-of-line scenario (issue shape, tiny-scale): a long `Batch`
+/// prefill is mid-flight on a single worker when a short `Interactive`
+/// arrives. Under FCFS the short waits for the whole long request; under
+/// the preemptive policy it jumps in at the next phase boundary. Run
+/// both, compare the short's user-perceived TTFT, and pin bit-identity
+/// to solo runs plus a positive preemption count on the long request.
+#[test]
+fn preemptive_short_interactive_beats_fcfs_head_of_line() {
+    // the batch anchor is deliberately heavy (2048 tokens, ~16 phase
+    // steps of quadratic-ish attention) so it is still mid-flight long
+    // after the 50 ms head start on any reasonable machine
+    let reqs = vec![req(0, 2048, 31, Priority::Batch), req(1, 128, 32, Priority::Interactive)];
+    let solo = solo_runs(&reqs);
+    let mut short_e2e = Vec::new();
+    for policy in [Policy::Fcfs, Policy::Preemptive] {
+        let mut opts = ServerOptions::new(1, policy);
+        opts.max_inflight = 2;
+        let server = Server::start_with("artifacts".into(), native_cfg(), opts).unwrap();
+        server.submit(reqs[0].clone());
+        // let the batch request get admitted and run a phase or two
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        server.submit(reqs[1].clone());
+        let done = server.drain().unwrap();
+        assert_eq!(done.len(), 2);
+        for (c, s) in done.iter().zip(&solo) {
+            assert_eq!(c.request_id, s.metrics.request_id);
+            assert_runs_identical(&c.run, s, &format!("{policy:?} head-of-line"));
+        }
+        let long = &done[0];
+        let short = &done[1];
+        assert_eq!(short.priority, Priority::Interactive);
+        if policy == Policy::Preemptive {
+            assert!(
+                long.preemptions > 0,
+                "the mid-flight batch request never yielded a phase slot"
+            );
+            assert_eq!(short.preemptions, 0, "the interactive request was never jumped");
+        } else {
+            assert_eq!(long.preemptions + short.preemptions, 0, "FCFS never preempts");
+        }
+        short_e2e.push(short.e2e_us);
+    }
+    // user-perceived TTFT of the short request: preemptive < FCFS (under
+    // FCFS on one worker it waits out the entire long prefill)
+    assert!(
+        short_e2e[1] < short_e2e[0],
+        "preemptive {} us !< fcfs {} us",
+        short_e2e[1],
+        short_e2e[0]
+    );
+}
+
+/// Starvation protection: with a small aging bound, a mid-flight `Batch`
+/// request under a backlog of `Interactive` requests yields at most
+/// `max_yields` phase slots, then ages to the front and completes ahead
+/// of the tail of the stream — it is never parked indefinitely.
+#[test]
+fn aged_batch_completes_under_interactive_stream() {
+    // heavy batch anchor (see the head-of-line test): still mid-flight
+    // well past the 30 ms head start on any reasonable machine
+    let mut reqs = vec![req(0, 2048, 60, Priority::Batch)];
+    for id in 1..=6u64 {
+        reqs.push(req(id, 128, 60 + id, Priority::Interactive));
+    }
+    let solo = solo_runs(&reqs);
+    let mut opts = ServerOptions::new(1, Policy::Preemptive);
+    opts.max_inflight = 8;
+    opts.max_yields = 3;
+    let server = Server::start_with("artifacts".into(), native_cfg(), opts).unwrap();
+    server.submit(reqs[0].clone());
+    std::thread::sleep(std::time::Duration::from_millis(30));
+    for r in &reqs[1..] {
+        server.submit(r.clone());
+    }
+    let done = server.drain().unwrap();
+    assert_eq!(done.len(), reqs.len());
+    for (c, s) in done.iter().zip(&solo) {
+        assert_runs_identical(&c.run, s, "aged batch stream");
+    }
+    let batch = &done[0];
+    assert_eq!(batch.priority, Priority::Batch);
+    assert!(batch.preemptions > 0, "the batch request was never preempted at all");
+    assert!(
+        batch.preemptions <= 3,
+        "aging bound violated: {} yields > max_yields 3",
+        batch.preemptions
+    );
+    // after aging, the batch drains ahead of the interactive tail: at
+    // least one interactive (same submit instant) finishes after it
+    let last_interactive_e2e = done[1..].iter().map(|c| c.e2e_us).fold(0.0f64, f64::max);
+    assert!(
+        batch.e2e_us < last_interactive_e2e,
+        "aged batch finished last ({} vs {})",
+        batch.e2e_us,
+        last_interactive_e2e
+    );
+}
+
+/// Adaptive want hints change lease sizing only: outputs are
+/// bit-identical with the feedback loop on (default) and off, and the
+/// completed runs actually carry the per-phase job costs the EWMA feeds
+/// on.
+#[test]
+fn adaptive_hints_do_not_change_outputs() {
+    let on = serve_with(ServerOptions::new(2, Policy::Sjf));
+    let mut opts = ServerOptions::new(2, Policy::Sjf);
+    opts.adaptive_hints = false;
+    let off = serve_with(opts);
+    assert_eq!(on.len(), off.len());
+    for (a, b) in on.iter().zip(&off) {
+        assert_eq!(a.request_id, b.request_id);
+        assert_runs_identical(&a.run, &b.run, "adaptive hints on/off");
+    }
+    // the longest request's phases are all well above the microsecond
+    // timer floor: its measured per-phase job costs must be present
+    // (they are what the EWMA feeds on)
+    let longest = on.iter().max_by_key(|c| c.run.metrics.context_tokens).unwrap();
+    let m = &longest.run.metrics;
+    assert!(m.qkv_job_us > 0.0, "no measured QKV job cost");
+    assert!(m.sigu_job_us > 0.0, "no measured SIGU job cost");
+    assert!(m.sau_job_us > 0.0, "no measured SAU job cost");
+    assert!(m.ffn_job_us > 0.0, "no measured FFN job cost");
+}
+
 #[test]
 fn single_worker_pipeline_preserves_sjf_backlog_order() {
     // single worker, pre-filled queue: SJF must admit the short requests
@@ -165,7 +305,7 @@ fn single_worker_pipeline_preserves_sjf_backlog_order() {
     )
     .unwrap();
     for (id, tokens) in [(0u64, 512usize), (1, 128), (2, 384), (3, 128)] {
-        server.submit(TraceRequest { id, spec: spec(tokens, id), arrival_us: 0 });
+        server.submit(req(id, tokens, id, Priority::Interactive));
     }
     std::thread::sleep(std::time::Duration::from_millis(50));
     let done = server.drain().unwrap();
