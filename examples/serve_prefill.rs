@@ -22,7 +22,12 @@
 //! preemption counters > 0, and on closed-loop runs additionally
 //! asserts the Interactive-class mean-TTFT win — open-loop prints the
 //! comparison without gating, since arrival timing shapes contention),
-//! FASTP_SERVE_JSON writes the machine-readable summary (CI artifact).
+//! FASTP_SERVE_JSON writes the machine-readable summary (CI artifact),
+//! FASTP_SERVE_PREFIX=1 adds a prefix-reuse leg: a shared-prefix cohort
+//! trace served cold vs warm through the content-hashed prefix KV store
+//! (dense mode), asserting bit-identity, a positive store hit-rate and a
+//! warm-over-cold mean-TTFT win, with `prefix_cold`/`prefix_warm` legs
+//! in the JSON summary.
 
 use std::sync::Arc;
 
@@ -164,6 +169,55 @@ fn main() -> Result<()> {
         }
     }
 
+    // optional prefix-reuse leg (FASTP_SERVE_PREFIX=1): serve a
+    // shared-prefix cohort trace cold (no store) and warm (store
+    // attached) in dense mode and gate the reuse win. Strict sequencing
+    // (1 worker, 1 inflight slot) makes publish-then-hit deterministic
+    // and penalizes both legs identically.
+    let prefix_legs = if std::env::var("FASTP_SERVE_PREFIX").as_deref() == Ok("1") {
+        let mut dense = cfg.clone();
+        dense.flex = None; // the prefix store is dense-mode only
+        let n_cohorts = if n_requests >= 4 { 2 } else { 1 };
+        let ptrace =
+            RequestTrace::generate_shared_prefix(n_requests, &choices, 2000, 2026, 8, n_cohorts);
+        let mut popts = ServerOptions::new(1, Policy::Fcfs);
+        popts.max_inflight = 1;
+        let mut wopts = popts;
+        wopts.prefix = Some(fast_prefill::coordinator::PrefixConfig::default());
+        let (cold, _) = serve(&dense, &weights, &ptrace, popts, false)?;
+        let (warm, _) = serve(&dense, &weights, &ptrace, wopts, false)?;
+        // reused-prefix outputs are bit-identical to the cold serve
+        for (a, b) in cold.iter().zip(&warm) {
+            assert_eq!(a.request_id, b.request_id);
+            assert_eq!(a.run.first_token, b.run.first_token, "prefix req {}", a.request_id);
+            assert_eq!(a.run.logits_last, b.run.logits_last, "prefix req {}", a.request_id);
+        }
+        let cold_sum = summarize(&cold);
+        let warm_sum = summarize(&warm);
+        println!("{}", cold_sum.render("prefix-cold"));
+        println!("{}", warm_sum.render("prefix-warm"));
+        assert!(warm_sum.prefix_hit_rate > 0.0, "prefix leg recorded no store hits");
+        assert!(warm_sum.prefix_tokens_skipped > 0, "prefix leg skipped no tokens");
+        assert!(
+            warm_sum.ttft_mean_ms < cold_sum.ttft_mean_ms,
+            "prefix reuse did not cut mean TTFT ({:.1} ms warm vs {:.1} ms cold)",
+            warm_sum.ttft_mean_ms,
+            cold_sum.ttft_mean_ms
+        );
+        println!(
+            "prefix reuse: hit-rate {:.0}% | {} tokens skipped | mean TTFT {:.1} -> {:.1} ms | \
+             warm-vs-cold dTTFT {:.1} ms",
+            warm_sum.prefix_hit_rate * 100.0,
+            warm_sum.prefix_tokens_skipped,
+            cold_sum.ttft_mean_ms,
+            warm_sum.ttft_mean_ms,
+            warm_sum.prefix_ttft_delta_ms
+        );
+        Some((cold_sum, warm_sum))
+    } else {
+        None
+    };
+
     let mut t = Table::new(&[
         "req", "class", "tokens", "TTFT (ms)", "queue (ms)", "phase-wait (ms)", "e2e (ms)",
         "yields", "density %", "hit %", "KV MB", "jobs",
@@ -201,6 +255,10 @@ fn main() -> Result<()> {
         let mut legs = vec![ser.to_json("serial"), pip.to_json("pipelined")];
         if let Some(f) = &fcfs_sum {
             legs.push(f.to_json("pipelined_fcfs_baseline"));
+        }
+        if let Some((c, w)) = &prefix_legs {
+            legs.push(c.to_json("prefix_cold"));
+            legs.push(w.to_json("prefix_warm"));
         }
         let json = format!(
             "{{\"policy\": \"{policy:?}\", \"arrival\": \"{}\", \"legs\": [{}]}}\n",

@@ -8,8 +8,11 @@
 //! cargo runs benches from the package root, `rust/`). CI pins it to the
 //! workspace root and uploads it as the per-PR perf artifact.
 
+use std::sync::{Arc, Mutex};
+
 use fast_prefill::config::{FlexParams, BLOCK, TINY};
 use fast_prefill::coordinator::joblist::build_schedule;
+use fast_prefill::coordinator::{Engine, EngineConfig, PrefixConfig, PrefixStore};
 use fast_prefill::flexprefill::{coverage, scores};
 use fast_prefill::kvcache::LivenessCache;
 use fast_prefill::model::forward::{attn_step_w8a8, prefill_reference_ctx};
@@ -190,6 +193,45 @@ fn main() {
     assert_eq!(sc.hidden.data, sv.hidden.data, "kernel backend changed hidden state");
     println!("    -> scalar vs {} backends: outputs bit-identical", detected.name());
 
+    // --- 4K-context prefix KV reuse: cold vs warm (dense mode) ---
+    // (the acceptance benchmark of the cross-request prefix store: warm
+    // re-serves a prompt whose prefix chain is resident, resuming at
+    // block n-1 and skipping the covered blocks' QKV/SIGU/FFN work —
+    // with outputs bit-identical to the cold run)
+    let mut pcfg = EngineConfig::new_native(TINY.clone());
+    pcfg.flex = None; // the prefix store is dense-mode only
+    pcfg.threads = 1;
+    let mut eng_cold = Engine::new_native(pcfg.clone()).unwrap();
+    let r_cold = bench_for("prefill 4K dense (cold, no prefix store)", 2000, 2, || {
+        black_box(eng_cold.prefill(0, &toks).unwrap());
+    });
+    println!("{r_cold}");
+    let mut eng_warm = Engine::new_native(pcfg.clone()).unwrap();
+    eng_warm.prefix = Some(Arc::new(Mutex::new(PrefixStore::new(
+        pcfg.model.name,
+        pcfg.weight_seed,
+        PrefixConfig::default(),
+    ))));
+    eng_warm.prefill(1, &toks).unwrap(); // primes the store
+    let r_warm = bench_for("prefill 4K dense (warm, prefix chain resident)", 2000, 2, || {
+        black_box(eng_warm.prefill(2, &toks).unwrap());
+    });
+    println!("{r_warm}");
+    let warm_run = eng_warm.prefill(3, &toks).unwrap();
+    assert!(warm_run.metrics.prefix_tokens_skipped > 0, "warm run never resumed");
+    let cold_run = eng_cold.prefill(4, &toks).unwrap();
+    assert_eq!(warm_run.first_token, cold_run.first_token, "prefix reuse changed first token");
+    assert_eq!(warm_run.logits_last, cold_run.logits_last, "prefix reuse changed logits");
+    assert_eq!(warm_run.hidden_last_chunk, cold_run.hidden_last_chunk);
+    let prefix_speedup = r_cold.mean_ns / r_warm.mean_ns;
+    println!(
+        "    -> prefix-reuse warm-over-cold speedup {:.2}x ({} of {} blocks resumed), \
+         outputs bit-identical",
+        prefix_speedup,
+        warm_run.metrics.prefix_blocks_reused,
+        toks.len() / BLOCK
+    );
+
     // machine-readable summary for the bench trajectory (CI artifact)
     let json_path = std::env::var("FASTP_BENCH_JSON")
         .unwrap_or_else(|_| "target/hotpath_micro.json".into());
@@ -200,7 +242,9 @@ fn main() {
          \"prefill_4k_native_sau\": {{\"threads\": 1, \"scalar_backend_ns\": {:.1}, \
          \"simd_backend_ns\": {:.1}, \"simd_speedup\": {:.3}, \"bit_identical\": true}},\n  \
          \"parallel_core\": {{\"scalar_1t_ns\": {:.1}, \"tiled_4t_ns\": {:.1}, \
-         \"speedup\": {:.3}}}\n}}\n",
+         \"speedup\": {:.3}}},\n  \
+         \"prefix_reuse_4k\": {{\"cold_ns\": {:.1}, \"warm_ns\": {:.1}, \
+         \"speedup\": {:.3}, \"bit_identical\": true}}\n}}\n",
         std::env::consts::ARCH,
         detected.name(),
         simd::active().name(),
@@ -213,6 +257,9 @@ fn main() {
         r_scalar.mean_ns,
         r_par.mean_ns,
         r_scalar.mean_ns / r_par.mean_ns,
+        r_cold.mean_ns,
+        r_warm.mean_ns,
+        prefix_speedup,
     );
     if let Some(dir) = std::path::Path::new(&json_path).parent() {
         if !dir.as_os_str().is_empty() {

@@ -32,7 +32,7 @@
 //! QKV on a shared layer and SAU at any layer, bit-identical to solo
 //! stepping.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
@@ -41,6 +41,7 @@ use crate::config::{FlexParams, ModelConfig, BLOCK};
 use crate::coordinator::joblist::{
     build_schedule, build_schedule_batch, Schedule, DEFAULT_WAVE_QBLOCKS,
 };
+use crate::coordinator::prefix::{self, PrefixStore};
 use crate::coordinator::walk::ScheduleWalk;
 use crate::flexprefill::{generate_head_index, scores, HeadIndex, HeadPattern, HeadStats};
 use crate::kvcache::{CacheStats, LivenessCache};
@@ -183,6 +184,22 @@ pub struct PrefillState {
     chunks: Option<Vec<ChunkQkv>>,
     indices: Option<Vec<HeadIndex>>,
     attn: Option<Vec<Vec<f32>>>,
+    // ---- cross-request prefix KV reuse (coordinator::prefix) ----
+    /// Leading blocks covered by the prefix store (0 = cold start). The
+    /// per-layer phases skip QKV/SAU/FFN work below this block index.
+    resume_from: usize,
+    /// Store-served per-layer prefix chunks, `reused[layer][block]`
+    /// (`block < resume_from`); each layer's vec is spliced into that
+    /// layer's QKV phase and left empty.
+    reused: Vec<Vec<ChunkQkv>>,
+    /// Rolling chain hash of the full context (nonempty iff this run
+    /// publishes back to an attached store).
+    prefix_chain: Vec<u64>,
+    /// Token copy for publication (block content is verified on hit).
+    prefix_tokens: Vec<u8>,
+    /// Per-layer full chunk clones gathered by the QKV phases,
+    /// `publish_chunks[layer][block]`; transposed and published on finish.
+    publish_chunks: Vec<Vec<ChunkQkv>>,
 }
 
 impl PrefillState {
@@ -196,6 +213,11 @@ impl PrefillState {
 
     pub fn context_tokens(&self) -> usize {
         self.s
+    }
+
+    /// Leading blocks resumed from the prefix store (0 = cold start).
+    pub fn resume_from(&self) -> usize {
+        self.resume_from
     }
 
     /// Phase steps left before this request finishes, counting the phase
@@ -253,6 +275,15 @@ pub struct Engine {
     /// costs; `None` (solo engines, the serial baseline) keeps the
     /// static split. Never changes results — only lease sizing.
     pub hints: Option<Arc<AdaptiveHints>>,
+    /// Content-hashed cross-request prefix KV store
+    /// ([`crate::coordinator::prefix`]). When attached (the server shares
+    /// one across its workers; solo engines can attach one too) and the
+    /// engine runs **dense** (`cfg.flex` is `None` — sparse SIGU is not
+    /// prefix-closed), every prefill consults it at admission and
+    /// publishes its blocks on completion. Reused-prefix outputs are
+    /// bit-identical to cold runs; reuse is priced as seeded cache
+    /// residency through the memory spine.
+    pub prefix: Option<Arc<Mutex<PrefixStore>>>,
 }
 
 impl Engine {
@@ -287,7 +318,7 @@ impl Engine {
             Some(rt)
         };
         let ctx = cfg.kernel_ctx();
-        Ok(Engine { rt, ctx, cfg, weights, hints: None })
+        Ok(Engine { rt, ctx, cfg, weights, hints: None, prefix: None })
     }
 
     /// Build an artifact-free engine on the tiled native kernels.
@@ -298,7 +329,7 @@ impl Engine {
         cfg.native_linear = true;
         let weights = Arc::new(ModelWeights::generate(&cfg.model, cfg.weight_seed));
         let ctx = cfg.kernel_ctx();
-        Ok(Engine { rt: None, ctx, cfg, weights, hints: None })
+        Ok(Engine { rt: None, ctx, cfg, weights, hints: None, prefix: None })
     }
 
     /// Backend description (for banners / examples).
@@ -372,16 +403,44 @@ impl Engine {
 
     /// Admit a request: validate, embed, and return a state at the first
     /// phase of layer 0. TTFT is measured from this call.
+    ///
+    /// With a prefix store attached (dense mode only — sparse SIGU is not
+    /// prefix-closed), the request's leading blocks are resolved against
+    /// the store here: hash-matching blocks are restored verbatim and the
+    /// state resumes mid-trace at the first novel block, capped at `n - 1`
+    /// so the finish phase always has fresh last-chunk hidden rows.
     pub fn prefill_start(&self, request_id: u64, tokens: &[u8]) -> Result<PrefillState> {
         let s = tokens.len();
         anyhow::ensure!(s > 0 && s % BLOCK == 0, "context must be a positive multiple of {BLOCK}");
+        let n = s / BLOCK;
+        let n_layers = self.cfg.model.n_layers;
+        let mut resume_from = 0usize;
+        let mut reused: Vec<Vec<ChunkQkv>> = Vec::new();
+        let mut prefix_chain = Vec::new();
+        let mut prefix_tokens = Vec::new();
+        if self.cfg.flex.is_none() {
+            if let Some(store) = &self.prefix {
+                let hit = store.lock().unwrap().lookup(tokens, n - 1, n_layers);
+                resume_from = hit.covered;
+                // transpose the hit's [block][layer] clones into the
+                // per-layer splices the QKV phases consume
+                reused = (0..n_layers).map(|_| Vec::with_capacity(resume_from)).collect();
+                for block_layers in hit.blocks {
+                    for (li, c) in block_layers.into_iter().enumerate() {
+                        reused[li].push(c);
+                    }
+                }
+                prefix_chain = hit.chain;
+                prefix_tokens = tokens.to_vec();
+            }
+        }
         Ok(PrefillState {
             request_id,
             phase: Phase::Qkv,
             layer: 0,
-            n_layers: self.cfg.model.n_layers,
+            n_layers,
             s,
-            n: s / BLOCK,
+            n,
             qkv_jobs: 0,
             sigu_jobs: 0,
             ffn_jobs: 0,
@@ -391,6 +450,8 @@ impl Engine {
                 request_id,
                 context_tokens: s,
                 kernel_backend: self.ctx.backend.name(),
+                prefix_blocks_reused: resume_from,
+                prefix_tokens_skipped: (resume_from * BLOCK) as u64,
                 ..Default::default()
             },
             patterns: Vec::new(),
@@ -403,6 +464,11 @@ impl Engine {
             chunks: None,
             indices: None,
             attn: None,
+            resume_from,
+            reused,
+            prefix_chain,
+            prefix_tokens,
+            publish_chunks: Vec::new(),
         })
     }
 
@@ -444,13 +510,24 @@ impl Engine {
         states.iter_mut().map(|st| self.phase_step(st)).collect()
     }
 
-    /// Phase 1: chunked KV generation for the current layer.
+    /// Phase 1: chunked KV generation for the current layer. Resumed
+    /// states splice the store-served prefix chunks in front and compute
+    /// only the novel blocks; publishing states clone the layer's full
+    /// chunk set for publication on finish.
     pub fn phase_qkv(&mut self, st: &mut PrefillState) -> Result<()> {
         anyhow::ensure!(st.phase == Phase::Qkv, "phase_qkv in {:?}", st.phase);
         let t0 = Instant::now();
-        let chunks = self.run_qkv_layer(st.layer, &st.hidden, st.n)?;
+        let mut chunks = if st.resume_from > 0 {
+            std::mem::take(&mut st.reused[st.layer])
+        } else {
+            Vec::new()
+        };
+        chunks.extend(self.run_qkv_layer(st.layer, &st.hidden, st.resume_from, st.n)?);
         st.metrics.t_qkv_us += t0.elapsed().as_micros() as f64;
-        st.qkv_jobs += st.n;
+        st.qkv_jobs += st.n - st.resume_from;
+        if !st.prefix_chain.is_empty() {
+            st.publish_chunks.push(chunks.clone());
+        }
         st.chunks = Some(chunks);
         st.phase = Phase::IndexGen;
         Ok(())
@@ -465,7 +542,10 @@ impl Engine {
     pub fn phase_qkv_batch(&mut self, states: &mut [PrefillState]) -> Result<()> {
         let fusable = states.len() > 1
             && self.cfg.native_linear
-            && states.iter().all(|s| s.phase == Phase::Qkv && s.layer == states[0].layer);
+            && states.iter().all(|s| s.phase == Phase::Qkv && s.layer == states[0].layer)
+            // resumed lanes compute a chunk suffix, not the full range —
+            // keep them out of the fused fan-out so splicing stays local
+            && states.iter().all(|s| s.resume_from == 0);
         if !fusable {
             for st in states.iter_mut() {
                 self.phase_qkv(st)?;
@@ -492,7 +572,11 @@ impl Engine {
         let dt = t0.elapsed().as_micros() as f64;
         let mut outs = outs.into_iter();
         for st in states.iter_mut() {
-            st.chunks = Some(outs.by_ref().take(st.n).collect());
+            let chunks: Vec<ChunkQkv> = outs.by_ref().take(st.n).collect();
+            if !st.prefix_chain.is_empty() {
+                st.publish_chunks.push(chunks.clone());
+            }
+            st.chunks = Some(chunks);
             st.phase = Phase::IndexGen;
             st.metrics.t_qkv_us += dt;
             st.qkv_jobs += st.n;
@@ -507,7 +591,7 @@ impl Engine {
         let indices = {
             let chunks =
                 st.chunks.as_ref().ok_or_else(|| anyhow!("index_gen without qkv chunks"))?;
-            self.run_sigu_layer(chunks, st.n)?
+            self.run_sigu_layer(chunks, st.n, st.resume_from)?
         };
         st.metrics.t_sigu_us += t0.elapsed().as_micros() as f64;
         st.sigu_jobs += self.cfg.model.n_heads;
@@ -535,6 +619,11 @@ impl Engine {
         let schedule = build_schedule(&indices, cfg.group_size(), self.cfg.wave_qblocks);
         st.metrics.jobs += schedule.total_jobs;
         let mut cache = self.new_layer_cache(st.n, &schedule);
+        if st.resume_from > 0 {
+            // store-served prefix blocks arrive already resident, so reuse
+            // shows up as priced cache hits on the walk below
+            prefix::seed_prefix(&mut cache, schedule.n_kv_heads, st.resume_from);
+        }
         let attn = self.run_sau_layer(&chunks, &schedule, &mut cache, st.n)?;
         self.absorb_cache_stats(st, cache.stats(), schedule.total_jobs);
         st.metrics.t_sau_us += t0.elapsed().as_micros() as f64;
@@ -571,7 +660,11 @@ impl Engine {
             let indices = st.indices.take().ok_or_else(|| anyhow!("sau without indices"))?;
             let schedule = build_schedule(&indices, cfg.group_size(), self.cfg.wave_qblocks);
             st.metrics.jobs += schedule.total_jobs;
-            caches.push(self.new_layer_cache(st.n, &schedule));
+            let mut cache = self.new_layer_cache(st.n, &schedule);
+            if st.resume_from > 0 {
+                prefix::seed_prefix(&mut cache, schedule.n_kv_heads, st.resume_from);
+            }
+            caches.push(cache);
             st.index_sets.push(indices);
             schedules.push(schedule);
         }
@@ -617,7 +710,8 @@ impl Engine {
     ) -> Result<Vec<Option<PrefillRun>>> {
         let fusable = states.len() > 1
             && self.cfg.native_linear
-            && states.iter().all(|s| s.phase == Phase::FfnLogits && s.layer == states[0].layer);
+            && states.iter().all(|s| s.phase == Phase::FfnLogits && s.layer == states[0].layer)
+            && states.iter().all(|s| s.resume_from == 0);
         if !fusable {
             return states.iter_mut().map(|st| self.phase_ffn_logits(st)).collect();
         }
@@ -664,9 +758,12 @@ impl Engine {
         let attn = st.attn.take().ok_or_else(|| anyhow!("ffn without sau output"))?;
         let li = st.layer;
         let n = st.n;
-        self.run_tail_layer(li, &mut st.hidden, &attn, n)?;
+        // prefix chunks' hidden rows go stale after a skipped tail, but
+        // nothing downstream reads them: QKV splices stored chunks for
+        // covered blocks and `finish` reads only the last (novel) chunk
+        self.run_tail_layer(li, &mut st.hidden, &attn, st.resume_from, n)?;
         st.metrics.t_ffn_us += t0.elapsed().as_micros() as f64;
-        st.ffn_jobs += n;
+        st.ffn_jobs += n - st.resume_from;
         st.layer += 1;
         if st.layer < self.cfg.model.n_layers {
             st.phase = Phase::Qkv;
@@ -675,7 +772,11 @@ impl Engine {
         self.finish(st).map(Some)
     }
 
-    /// Final norm + LM head; seals the state and produces the run.
+    /// Final norm + LM head; seals the state and produces the run. A
+    /// prefix-eligible request also publishes its full per-layer chunk set
+    /// to the store here — every block, not just the blocks it reused, so
+    /// any longer request sharing the token stream can resume deeper (each
+    /// consumer caps coverage at its own `n - 1`).
     fn finish(&mut self, st: &mut PrefillState) -> Result<PrefillRun> {
         let cfg = self.cfg.model.clone();
         let d = cfg.d_model;
@@ -683,6 +784,21 @@ impl Engine {
         let logits = self.run_logits(&last)?;
         let last_row = &logits[(BLOCK - 1) * cfg.vocab..];
         let first_token = fwd::argmax_token(last_row);
+
+        if !st.prefix_chain.is_empty() {
+            if let Some(store) = &self.prefix {
+                let layers = std::mem::take(&mut st.publish_chunks);
+                let n_layers = layers.len();
+                let mut per_block: Vec<Vec<ChunkQkv>> =
+                    (0..st.n).map(|_| Vec::with_capacity(n_layers)).collect();
+                for layer in layers {
+                    for (b, chunk) in layer.into_iter().enumerate() {
+                        per_block[b].push(chunk);
+                    }
+                }
+                store.lock().unwrap().publish(&st.prefix_chain, &st.prefix_tokens, per_block);
+            }
+        }
 
         st.phase = Phase::Done;
         let mut metrics = std::mem::take(&mut st.metrics);
@@ -745,12 +861,24 @@ impl Engine {
     // phase implementations
     // ------------------------------------------------------------------
 
-    fn run_qkv_layer(&mut self, li: usize, hidden: &MatF32, n: usize) -> Result<Vec<ChunkQkv>> {
+    /// QKV for chunks `from..n` only — `from > 0` when a store-served
+    /// prefix already covers the leading blocks. RoPE positions and
+    /// per-chunk quant scales depend only on the chunk's own content and
+    /// absolute offset, so computing a suffix in isolation is bit-identical
+    /// to the same chunks of a full-range run.
+    fn run_qkv_layer(
+        &mut self,
+        li: usize,
+        hidden: &MatF32,
+        from: usize,
+        n: usize,
+    ) -> Result<Vec<ChunkQkv>> {
         if self.cfg.native_linear {
             let weights: &ModelWeights = &self.weights;
             let ctx = self.phase_ctx(Phase::Qkv);
             let ctx = &ctx;
-            return Ok(ctx.pool.map(n, |ci| {
+            return Ok(ctx.pool.map(n - from, |i| {
+                let ci = from + i;
                 let x = hidden.slice_rows(ci * BLOCK, (ci + 1) * BLOCK);
                 fwd::qkv_chunk(ctx, weights, li, &x, (ci * BLOCK) as i32)
             }));
@@ -761,8 +889,8 @@ impl Engine {
         let split = |flat: Vec<i8>| -> Vec<MatI8> {
             flat.chunks(BLOCK * dh).map(|c| MatI8::from_vec(BLOCK, dh, c.to_vec())).collect()
         };
-        let mut chunks = Vec::with_capacity(n);
-        for ci in 0..n {
+        let mut chunks = Vec::with_capacity(n - from);
+        for ci in from..n {
             let x = &hidden.data[ci * BLOCK * d..(ci + 1) * BLOCK * d];
             let lw = &self.weights.layers[li];
             let exe = self
@@ -795,12 +923,20 @@ impl Engine {
         Ok(chunks)
     }
 
-    fn run_sigu_layer(&mut self, chunks: &[ChunkQkv], n: usize) -> Result<Vec<HeadIndex>> {
+    fn run_sigu_layer(
+        &mut self,
+        chunks: &[ChunkQkv],
+        n: usize,
+        resume_from: usize,
+    ) -> Result<Vec<HeadIndex>> {
         let cfg = self.cfg.model.clone();
         let dh = cfg.d_head;
         let params = match &self.cfg.flex {
             Some(p) => *p,
-            None => return Ok(fwd::dense_indices(cfg.n_heads, n)),
+            // dense causal attention is prefix-closed, so a resumed request
+            // only re-attends from its first novel q-block; with
+            // `resume_from == 0` this is exactly `dense_indices`
+            None => return Ok(fwd::suffix_dense_indices(cfg.n_heads, n, resume_from)),
         };
         if self.cfg.native_sigu {
             // the reference's parallel per-head jobs, over the same
@@ -1023,12 +1159,15 @@ impl Engine {
         Ok(())
     }
 
-    /// Phase 4 (o_proj + residual + FFN + residual) for every chunk.
+    /// Phase 4 (o_proj + residual + FFN + residual) for chunks `from..n` —
+    /// `from > 0` when a store-served prefix made the leading chunks'
+    /// hidden state irrelevant (their KV is spliced in at QKV instead).
     fn run_tail_layer(
         &mut self,
         li: usize,
         hidden: &mut MatF32,
         attn: &[Vec<f32>],
+        from: usize,
         n: usize,
     ) -> Result<()> {
         let cfg = self.cfg.model.clone();
@@ -1038,7 +1177,8 @@ impl Engine {
             let ctx = self.phase_ctx(Phase::FfnLogits);
             let ctx = &ctx;
             let hidden_ref = &*hidden;
-            let new_chunks: Vec<MatF32> = ctx.pool.map(n, |ci| {
+            let new_chunks: Vec<MatF32> = ctx.pool.map(n - from, |i| {
+                let ci = from + i;
                 let a = MatF32 {
                     rows: BLOCK,
                     cols: hq * dh,
@@ -1047,12 +1187,13 @@ impl Engine {
                 let x = hidden_ref.slice_rows(ci * BLOCK, (ci + 1) * BLOCK);
                 fwd::oproj_ffn_chunk(ctx, weights, li, &a, &x)
             });
-            for (ci, x) in new_chunks.into_iter().enumerate() {
+            for (i, x) in new_chunks.into_iter().enumerate() {
+                let ci = from + i;
                 hidden.data[ci * BLOCK * d..(ci + 1) * BLOCK * d].copy_from_slice(&x.data);
             }
             return Ok(());
         }
-        for ci in 0..n {
+        for ci in from..n {
             let resid: Vec<f32> = hidden.data[ci * BLOCK * d..(ci + 1) * BLOCK * d].to_vec();
             let lw = &self.weights.layers[li];
             let exe = self

@@ -9,11 +9,17 @@
 //!  * [`walk`]    — the schedule-execution **memory spine**: the one
 //!    canonical walk of a (solo or batch-merged) schedule through the
 //!    liveness cache, consumed by both the engine and the cycle simulator.
+//!  * [`prefix`]  — content-hashed cross-request prefix KV store: completed
+//!    prefills publish their leading blocks' per-layer KV; later requests
+//!    with hash-matching leading tokens resume mid-trace at the first
+//!    novel block, bit-identical to a cold run, with reuse priced through
+//!    the memory spine as seeded cache residency.
 //!  * [`server`]  — request router + phase-pipelined multi-worker serving
 //!    loop over one shared thread budget (serial baseline included).
 
 pub mod engine;
 pub mod joblist;
+pub mod prefix;
 pub mod server;
 pub mod walk;
 
@@ -22,5 +28,6 @@ pub use joblist::{
     build_schedule, build_schedule_batch, cache_key, BatchBlockJobs, BatchJob, BatchSchedule,
     BatchWave, BlockJobs, Job, Schedule, Wave, DEFAULT_WAVE_QBLOCKS,
 };
+pub use prefix::{seed_prefix, EvictPolicy, PrefixConfig, PrefixHit, PrefixStats, PrefixStore};
 pub use server::{Completion, Policy, Server, ServerOptions, DEFAULT_MAX_YIELDS};
 pub use walk::{BlockOutcome, BlockVisit, LaneVisit, ScheduleWalk};

@@ -1,0 +1,398 @@
+//! Content-hashed cross-request prefix KV store (ROADMAP direction 2).
+//!
+//! At production traffic most requests share a system-prompt / few-shot
+//! prefix, yet a from-scratch prefill re-pays the full QKV + SAU work for
+//! those leading blocks on every request. Under **dense causal** attention
+//! a chunk's per-layer KV depends only on the tokens at or before it
+//! (RoPE uses absolute positions, quant scales are per-chunk), so the
+//! leading blocks' [`ChunkQkv`] state of one request is *bit-identical*
+//! to what any other request with the same leading tokens would compute.
+//! This store publishes that state per (token-content, block-position)
+//! and lets a later request resume its `PrefillState` at the first novel
+//! block — the outputs are bit-identical to the cold run by construction.
+//!
+//! Keying: a **rolling chain hash** over token blocks,
+//! `h_0 = fnv(salt ‖ block_0)`, `h_i = fnv(h_{i-1} ‖ block_i)`, where the
+//! salt binds the model name and weight seed (KV from one model never
+//! resumes another). The chain makes the key positional *and*
+//! content-transitive: `h_i` matches iff every token of blocks `0..=i`
+//! matches, so a lookup just walks consecutive chain hits. Each hit is
+//! additionally verified byte-exact against the stored block's tokens, so
+//! serving a wrong prefix needs a genuine 64-bit chain collision *and* an
+//! identical token block — i.e. it cannot happen.
+//!
+//! Sparse (FlexPrefill) mode is **not** prefix-closed: SIGU ranks blocks
+//! against the *last* chunk's pooled queries, so early blocks' index sets
+//! — and therefore their hidden state after layer 0 — depend on the whole
+//! context. The engine only consults the store when `flex` is off.
+//!
+//! Reuse is *priced*, not just claimed: the engine (and the cycle
+//! simulator, through the same [`seed_prefix`] helper) seeds the reused
+//! blocks' residency into each layer's [`LivenessCache`] before the
+//! schedule walk, so reuse shows up as ordinary priced cache hits in both
+//! stat streams — engine-vs-simulator hit-stat identity is preserved by
+//! construction.
+
+use std::collections::HashMap;
+
+use crate::config::BLOCK;
+use crate::coordinator::joblist::cache_key;
+use crate::kvcache::LivenessCache;
+use crate::model::forward::ChunkQkv;
+
+/// Eviction policy for the capacity-bounded store.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvictPolicy {
+    /// Evict the least-recently-touched block entry.
+    Lru,
+    /// Liveness-aware: evict the block with the fewest lifetime hits,
+    /// breaking ties by recency — the store-level analogue of the KV
+    /// cache's remaining-use ranking (heavily shared prefixes survive).
+    LivenessAware,
+}
+
+impl EvictPolicy {
+    pub fn from_name(name: &str) -> Option<EvictPolicy> {
+        match name {
+            "lru" => Some(EvictPolicy::Lru),
+            "liveness" => Some(EvictPolicy::LivenessAware),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EvictPolicy::Lru => "lru",
+            EvictPolicy::LivenessAware => "liveness",
+        }
+    }
+}
+
+/// Store sizing + policy knobs (carried by `ServerOptions`).
+#[derive(Clone, Copy, Debug)]
+pub struct PrefixConfig {
+    /// Capacity in block entries (each entry holds one block's per-layer
+    /// KV). Must be > 0 — "no store" is expressed by not attaching one.
+    pub capacity_blocks: usize,
+    pub policy: EvictPolicy,
+}
+
+impl Default for PrefixConfig {
+    fn default() -> Self {
+        PrefixConfig { capacity_blocks: 4096, policy: EvictPolicy::LivenessAware }
+    }
+}
+
+/// Aggregate store statistics.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrefixStats {
+    /// Requests that consulted the store.
+    pub lookups: u64,
+    /// Leading blocks served from the store across all lookups.
+    pub hit_blocks: u64,
+    /// Block entries published (inserted, not counting already-present).
+    pub published_blocks: u64,
+    /// Entries evicted to make room under the capacity bound.
+    pub evictions: u64,
+}
+
+/// One published block: its token bytes (verified on every hit) plus the
+/// per-layer KV/quant state needed to resume mid-trace.
+struct BlockEntry {
+    tokens: Vec<u8>,
+    layers: Vec<ChunkQkv>,
+    /// Lifetime hits (the liveness-aware eviction rank).
+    uses: u64,
+    /// Last-touched logical time (the LRU eviction rank).
+    tick: u64,
+}
+
+/// A resolved lookup: the request's full block chain, how many leading
+/// blocks the store covers, and the covered blocks' per-layer chunks
+/// (`blocks[b][li]`, cloned out under the lock so later eviction cannot
+/// invalidate a running resume).
+pub struct PrefixHit {
+    pub chain: Vec<u64>,
+    pub covered: usize,
+    pub blocks: Vec<Vec<ChunkQkv>>,
+}
+
+/// The content-hashed prefix KV store. One instance is shared (behind a
+/// mutex) by every engine of a server; solo engines can attach one too.
+pub struct PrefixStore {
+    cfg: PrefixConfig,
+    salt: u64,
+    map: HashMap<u64, BlockEntry>,
+    tick: u64,
+    stats: PrefixStats,
+}
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+impl PrefixStore {
+    /// The salt binds model identity: KV published under one
+    /// (model, weight seed) can never hash-match under another.
+    pub fn new(model_name: &str, weight_seed: u64, cfg: PrefixConfig) -> PrefixStore {
+        assert!(cfg.capacity_blocks > 0, "prefix store capacity must be > 0");
+        let salt = fnv1a(fnv1a(FNV_OFFSET, model_name.as_bytes()), &weight_seed.to_le_bytes());
+        PrefixStore { cfg, salt, map: HashMap::new(), tick: 0, stats: PrefixStats::default() }
+    }
+
+    pub fn config(&self) -> PrefixConfig {
+        self.cfg
+    }
+
+    pub fn stats(&self) -> PrefixStats {
+        self.stats
+    }
+
+    pub fn len_blocks(&self) -> usize {
+        self.map.len()
+    }
+
+    /// The rolling chain hash over a context's full token blocks
+    /// (`chain[i]` covers tokens `0 .. (i+1)*BLOCK`). Trailing partial
+    /// blocks are ignored — a partial block is never published or matched,
+    /// so a divergence inside the last full block simply ends the chain
+    /// walk at that block.
+    pub fn chain(&self, tokens: &[u8]) -> Vec<u64> {
+        let mut h = self.salt;
+        tokens
+            .chunks_exact(BLOCK)
+            .map(|blk| {
+                h = fnv1a(fnv1a(FNV_OFFSET, &h.to_le_bytes()), blk);
+                h
+            })
+            .collect()
+    }
+
+    /// Resolve a request against the store: walk consecutive leading
+    /// blocks while the chain hash is present *and* the stored tokens
+    /// verify byte-exact *and* the entry was published at `n_layers`
+    /// depth, cloning the covered blocks' per-layer chunks out. `covered`
+    /// is capped at `max_blocks` (the engine passes `n - 1`: the last
+    /// block must run novel so the finish phase has fresh hidden rows).
+    pub fn lookup(&mut self, tokens: &[u8], max_blocks: usize, n_layers: usize) -> PrefixHit {
+        self.stats.lookups += 1;
+        self.tick += 1;
+        let chain = self.chain(tokens);
+        let mut blocks = Vec::new();
+        for (b, key) in chain.iter().enumerate().take(max_blocks) {
+            let Some(e) = self.map.get_mut(key) else { break };
+            if e.layers.len() != n_layers || e.tokens != tokens[b * BLOCK..(b + 1) * BLOCK] {
+                break;
+            }
+            e.uses += 1;
+            e.tick = self.tick;
+            blocks.push(e.layers.clone());
+        }
+        self.stats.hit_blocks += blocks.len() as u64;
+        PrefixHit { chain, covered: blocks.len(), blocks }
+    }
+
+    /// Publish a completed prefill's leading blocks: `per_block[b]` holds
+    /// block `b`'s per-layer chunks (`per_block.len() <= chain.len()`).
+    /// Already-present keys are skipped (the content is identical by the
+    /// bit-identity contract); new entries evict per policy when the
+    /// capacity bound is reached.
+    pub fn publish(&mut self, chain: &[u64], tokens: &[u8], per_block: Vec<Vec<ChunkQkv>>) {
+        assert!(per_block.len() <= chain.len(), "more blocks than chain hashes");
+        self.tick += 1;
+        for (b, layers) in per_block.into_iter().enumerate() {
+            let key = chain[b];
+            if self.map.contains_key(&key) {
+                continue;
+            }
+            while self.map.len() >= self.cfg.capacity_blocks {
+                self.evict_one();
+            }
+            self.map.insert(
+                key,
+                BlockEntry {
+                    tokens: tokens[b * BLOCK..(b + 1) * BLOCK].to_vec(),
+                    layers,
+                    uses: 0,
+                    tick: self.tick,
+                },
+            );
+            self.stats.published_blocks += 1;
+        }
+    }
+
+    fn evict_one(&mut self) {
+        let victim = match self.cfg.policy {
+            EvictPolicy::Lru => self.map.iter().min_by_key(|(_, e)| e.tick),
+            EvictPolicy::LivenessAware => self.map.iter().min_by_key(|(_, e)| (e.uses, e.tick)),
+        }
+        .map(|(k, _)| *k);
+        if let Some(k) = victim {
+            self.map.remove(&k);
+            self.stats.evictions += 1;
+        }
+    }
+}
+
+/// Seed the reused leading blocks' residency into one layer's liveness
+/// cache, ahead of the schedule walk. Every (kv_head, block) coordinate of
+/// the prefix is seeded through [`LivenessCache::seed_resident`] —
+/// stats-free, capacity- and liveness-respecting — so the walk prices the
+/// reuse as ordinary cache hits. The engine and the cycle simulator call
+/// this **same** helper on identically derived caches, which is what keeps
+/// their hit statistics identical under reuse. Returns the number of
+/// coordinates actually seeded (skips price as misses — still correct).
+pub fn seed_prefix(cache: &mut LivenessCache, n_kv_heads: usize, prefix_blocks: usize) -> usize {
+    let mut seeded = 0;
+    for g in 0..n_kv_heads {
+        for b in 0..prefix_blocks {
+            if cache.seed_resident(cache_key(g as u16, b as u32)) {
+                seeded += 1;
+            }
+        }
+    }
+    seeded
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{MatF32, MatI8};
+    use crate::util::prng::Prng;
+
+    fn chunk(tag: i8) -> ChunkQkv {
+        ChunkQkv {
+            q: vec![MatI8::from_vec(1, 1, vec![tag])],
+            qs: tag as f32,
+            k: vec![MatI8::from_vec(1, 1, vec![tag])],
+            ks: 1.0,
+            v: vec![MatI8::from_vec(1, 1, vec![tag])],
+            vs: 1.0,
+            qpool: MatF32::zeros(1, 1),
+            kpool: MatF32::zeros(1, 1),
+        }
+    }
+
+    fn tokens(n: usize, seed: u64) -> Vec<u8> {
+        let mut rng = Prng::new(seed);
+        (0..n).map(|_| rng.below(256) as u8).collect()
+    }
+
+    fn store(cap: usize, policy: EvictPolicy) -> PrefixStore {
+        PrefixStore::new("tiny", 42, PrefixConfig { capacity_blocks: cap, policy })
+    }
+
+    /// Publish `n` blocks of `toks` with per-layer tag chunks.
+    fn publish_all(s: &mut PrefixStore, toks: &[u8], n_layers: usize) {
+        let chain = s.chain(toks);
+        let n = chain.len();
+        let per_block: Vec<Vec<ChunkQkv>> =
+            (0..n).map(|b| (0..n_layers).map(|li| chunk((b * 7 + li) as i8)).collect()).collect();
+        s.publish(&chain, toks, per_block);
+    }
+
+    #[test]
+    fn chain_is_a_prefix_hash() {
+        let s = store(64, EvictPolicy::Lru);
+        let a = tokens(4 * BLOCK, 1);
+        let mut b = a.clone();
+        // diverge inside block 2
+        b[2 * BLOCK + 17] ^= 0xFF;
+        let (ca, cb) = (s.chain(&a), s.chain(&b));
+        assert_eq!(ca.len(), 4);
+        assert_eq!(ca[..2], cb[..2], "shared leading blocks share hashes");
+        assert_ne!(ca[2], cb[2]);
+        assert_ne!(ca[3], cb[3], "divergence propagates down the chain");
+        // salt binds model identity
+        let other = PrefixStore::new("tiny", 43, PrefixConfig::default());
+        assert_ne!(ca[0], other.chain(&a)[0]);
+    }
+
+    #[test]
+    fn publish_then_lookup_roundtrip() {
+        let mut s = store(64, EvictPolicy::Lru);
+        let toks = tokens(4 * BLOCK, 2);
+        publish_all(&mut s, &toks, 2);
+        assert_eq!(s.len_blocks(), 4);
+        // same leading content, novel tail
+        let mut req = toks[..3 * BLOCK].to_vec();
+        req.extend(tokens(2 * BLOCK, 99));
+        let hit = s.lookup(&req, req.len() / BLOCK - 1, 2);
+        assert_eq!(hit.covered, 3);
+        assert_eq!(hit.blocks.len(), 3);
+        assert_eq!(hit.blocks[1][0].qs, 7.0, "block 1, layer 0 tag");
+        assert_eq!(hit.blocks[2][1].qs, 15.0, "block 2, layer 1 tag");
+        let st = s.stats();
+        assert_eq!((st.lookups, st.hit_blocks, st.published_blocks), (1, 3, 4));
+        // covered is capped by max_blocks
+        let capped = s.lookup(&toks, 2, 2);
+        assert_eq!(capped.covered, 2);
+    }
+
+    #[test]
+    fn partial_block_divergence_stops_the_walk() {
+        let mut s = store(64, EvictPolicy::Lru);
+        let toks = tokens(4 * BLOCK, 3);
+        publish_all(&mut s, &toks, 1);
+        let mut req = toks.clone();
+        req[2 * BLOCK + 5] ^= 1; // one byte into block 2
+        let hit = s.lookup(&req, 4, 1);
+        assert_eq!(hit.covered, 2, "walk ends at the first divergent block");
+        // layer-depth mismatch also refuses the entry
+        let wrong_depth = s.lookup(&toks, 4, 3);
+        assert_eq!(wrong_depth.covered, 0);
+    }
+
+    #[test]
+    fn eviction_respects_capacity_and_policy() {
+        // LRU: the least-recently-touched entry falls out first
+        let mut s = store(2, EvictPolicy::Lru);
+        let (d1, d2, d3) = (tokens(BLOCK, 41), tokens(BLOCK, 42), tokens(BLOCK, 43));
+        publish_all(&mut s, &d1, 1);
+        publish_all(&mut s, &d2, 1);
+        s.lookup(&d1, 1, 1); // refresh d1's recency
+        publish_all(&mut s, &d3, 1); // evicts d2 (stalest tick)
+        assert_eq!(s.len_blocks(), 2);
+        assert_eq!(s.stats().evictions, 1);
+        assert_eq!(s.lookup(&d1, 1, 1).covered, 1, "recently touched survives");
+        assert_eq!(s.lookup(&d2, 1, 1).covered, 0, "stalest entry evicted");
+        assert_eq!(s.lookup(&d3, 1, 1).covered, 1);
+
+        // LivenessAware: hit-hot leading blocks survive fresh unused inserts
+        let mut s = store(4, EvictPolicy::LivenessAware);
+        let a = tokens(4 * BLOCK, 4);
+        publish_all(&mut s, &a, 1);
+        s.lookup(&a, 2, 1); // leading 2 blocks gain a use; trailing 2 stay at 0
+        let c = tokens(2 * BLOCK, 6);
+        publish_all(&mut s, &c, 1); // evicts the two zero-use trailing blocks
+        assert_eq!(s.len_blocks(), 4);
+        assert_eq!(s.stats().evictions, 2);
+        assert_eq!(s.lookup(&a, 4, 1).covered, 2, "hit-hot leading blocks survive");
+        assert_eq!(s.lookup(&c, 2, 1).covered, 2);
+    }
+
+    #[test]
+    fn seed_prefix_marks_schedule_residency() {
+        use crate::coordinator::joblist::build_schedule;
+        use crate::kvcache::Access;
+        use crate::model::forward::suffix_dense_indices;
+        // 4 blocks, resume at 2, 1 kv head
+        let indices = suffix_dense_indices(1, 4, 2);
+        let schedule = build_schedule(&indices, 1, 0);
+        let mut cache =
+            crate::kvcache::layer_cache(64, 0.5, 0.5, 4, 1, schedule.uses.iter().copied());
+        let seeded = seed_prefix(&mut cache, schedule.n_kv_heads, 2);
+        assert_eq!(seeded, 2);
+        assert_eq!(cache.lookup(cache_key(0, 0)), Access::Hit(crate::kvcache::Tier::Cold));
+        assert!(matches!(cache.lookup(cache_key(0, 1)), Access::Hit(_)));
+        assert_eq!(cache.lookup(cache_key(0, 3)), Access::Miss);
+        cache.check_invariants().unwrap();
+    }
+}

@@ -36,6 +36,7 @@ use anyhow::Result;
 use crate::coordinator::engine::{
     phase_hint_slot, Engine, EngineConfig, Phase, PrefillRun, PrefillState,
 };
+use crate::coordinator::prefix::{PrefixConfig, PrefixStore};
 use crate::model::ModelWeights;
 use crate::tensor::tile::KernelCtx;
 use crate::util::pool::{AdaptiveHints, PoolBudget, WorkerPool, HINT_EWMA_ALPHA};
@@ -52,17 +53,19 @@ pub enum Policy {
     /// estimate) — a queued or parked `Interactive` request takes the
     /// next phase slot ahead of a parked `Batch` prefill (the parked
     /// state *yields*; its phase is never split, so outputs stay
-    /// bit-identical). Starvation-protected: a `Batch` request that has
-    /// yielded [`ServerOptions::max_yields`] times ages to the front of
-    /// the rank order and drains.
+    /// bit-identical). Starvation-protected: a `Batch` request — parked
+    /// *or* still queued — that has been passed over
+    /// [`ServerOptions::max_yields`] times ages to the front of the rank
+    /// order and drains.
     Preemptive,
 }
 
 /// Most states a single fused phase step may take (QKV/SAU batching).
 const MAX_PHASE_BATCH: usize = 4;
 
-/// Default aging bound: a parked `Batch` request yields at most this many
-/// phase-boundary slots before it outranks everything and drains.
+/// Default aging bound: a parked or queued `Batch` request is passed over
+/// at most this many phase-boundary slots before it outranks everything
+/// and drains.
 pub const DEFAULT_MAX_YIELDS: usize = 256;
 
 /// Server scheduling options.
@@ -85,9 +88,10 @@ pub struct ServerOptions {
     pub max_inflight: usize,
     /// Fuse same-phase jobs of co-resident requests into one fan-out.
     pub batch_phases: bool,
-    /// Aging bound for [`Policy::Preemptive`]: after yielding this many
-    /// phase-boundary slots, a parked `Batch` request outranks everything
-    /// and runs to completion (0 => [`DEFAULT_MAX_YIELDS`]).
+    /// Aging bound for [`Policy::Preemptive`]: after being passed over
+    /// this many phase-boundary slots, a parked or queued `Batch` request
+    /// outranks everything and runs to completion (0 =>
+    /// [`DEFAULT_MAX_YIELDS`]).
     pub max_yields: usize,
     /// Feed completed requests' measured per-phase job costs back into
     /// per-phase lease-want sizing (EWMA, [`AdaptiveHints`]) instead of
@@ -95,6 +99,13 @@ pub struct ServerOptions {
     /// observation pending) behavior is the static split either way, and
     /// hint sizing never changes outputs.
     pub adaptive_hints: bool,
+    /// Attach a content-hashed cross-request prefix KV store
+    /// ([`crate::coordinator::prefix`]), shared by every worker's engine:
+    /// completed prefills publish their leading blocks, later requests
+    /// with hash-matching prefixes resume at their first novel block.
+    /// `None` (default) serves every request cold. Dense mode only —
+    /// engines with sparse SIGU enabled ignore the store.
+    pub prefix: Option<PrefixConfig>,
 }
 
 impl ServerOptions {
@@ -109,6 +120,7 @@ impl ServerOptions {
             batch_phases: true,
             max_yields: 0,
             adaptive_hints: true,
+            prefix: None,
         }
     }
 
@@ -159,6 +171,7 @@ impl Completion {
             preemptions: self.preemptions,
             hbm_read_bytes: self.run.metrics.hbm_read_bytes as f64,
             cache_hit_rate: self.run.metrics.cache_hit_rate,
+            prefix_tokens_skipped: self.run.metrics.prefix_tokens_skipped,
         }
     }
 }
@@ -185,10 +198,22 @@ struct Pending {
     meta: ReqMeta,
 }
 
+/// A request waiting in the admission queue.
+struct Queued {
+    req: TraceRequest,
+    at: Instant,
+    /// Phase-boundary picks that went to other work while this request
+    /// sat queued ([`Policy::Preemptive`] only) — the queue-level twin of
+    /// [`ReqMeta::yields`]: a never-admitted `Batch` request ages to the
+    /// front of the rank order after `max_yields` passes, so the
+    /// starvation bound covers the queue, not just parked states.
+    passes: u64,
+}
+
 /// The admission queue + pipeline ready set shared between router and
 /// workers. All waits are Condvar wakeups — no sleep-polling.
 struct Shared {
-    queue: VecDeque<(TraceRequest, Instant)>,
+    queue: VecDeque<Queued>,
     ready: Vec<Pending>,
     closed: bool,
     /// A worker hit an engine error; everyone drains out.
@@ -295,6 +320,11 @@ impl Server {
         // their lease wants from it (static split until first feedback)
         let hints = (opts.pipelined && opts.adaptive_hints)
             .then(|| AdaptiveHints::new(HINT_EWMA_ALPHA));
+        // one prefix KV store shared by every worker's engine, so a
+        // prefill completed on worker A is reusable by worker B
+        let prefix_store = opts.prefix.map(|p| {
+            Arc::new(Mutex::new(PrefixStore::new(cfg.model.name, cfg.weight_seed, p)))
+        });
         let sync = Arc::new(Sched {
             shared: Mutex::new(Shared {
                 queue: VecDeque::new(),
@@ -319,11 +349,13 @@ impl Server {
             let weights = Arc::clone(&weights);
             let budget = Arc::clone(&budget);
             let hints = hints.clone();
+            let prefix_store = prefix_store.clone();
             workers.push(std::thread::spawn(move || -> Result<()> {
                 let _abort_guard = AbortOnPanic(&sync);
                 let out = (|| {
                     let mut engine = Engine::with_weights(&dir, cfg, weights)?;
                     engine.hints = hints;
+                    engine.prefix = prefix_store;
                     engine.ctx = if opts.pipelined {
                         // lease from the shared machine budget per phase job
                         KernelCtx::with_pool(WorkerPool::shared(total_threads, budget))
@@ -358,7 +390,7 @@ impl Server {
     /// Enqueue a request (non-blocking).
     pub fn submit(&self, req: TraceRequest) {
         let mut s = self.sync.shared.lock().unwrap();
-        s.queue.push_back((req, Instant::now()));
+        s.queue.push_back(Queued { req, at: Instant::now(), passes: 0 });
         drop(s);
         self.sync.cond.notify_all();
     }
@@ -597,9 +629,14 @@ fn pending_rank(p: &Pending, max_yields: usize) -> PreemptRank {
 /// Rank of a queued (not yet admitted) request: nothing has run, so the
 /// remaining cost is the full `4 * n_layers * tokens` — the same units as
 /// [`PrefillState::remaining_cost`], making queued and parked work
-/// directly comparable.
-fn queue_rank(r: &TraceRequest, n_layers: usize, max_yields: usize) -> (u8, u64) {
-    (class_rank(r.priority, 0, max_yields), 4 * n_layers as u64 * r.spec.tokens as u64)
+/// directly comparable. Queue passes feed the same aging bound parked
+/// yields do, so a never-admitted `Batch` request cannot starve under a
+/// sustained `Interactive` stream.
+fn queue_rank(q: &Queued, n_layers: usize, max_yields: usize) -> (u8, u64) {
+    (
+        class_rank(q.req.priority, q.passes, max_yields),
+        4 * n_layers as u64 * q.req.spec.tokens as u64,
+    )
 }
 
 /// Preemptive stage loop: at every phase boundary, re-rank all runnable
@@ -622,8 +659,8 @@ fn pick_work_preemptive(s: &mut Shared, max_inflight: usize, batch_phases: bool)
         .queue
         .iter()
         .enumerate()
-        .min_by_key(|(_, (r, _))| queue_rank(r, s.n_layers, s.max_yields))
-        .map(|(i, (r, _))| (queue_rank(r, s.n_layers, s.max_yields), i));
+        .min_by_key(|(_, q)| queue_rank(q, s.n_layers, s.max_yields))
+        .map(|(i, q)| (queue_rank(q, s.n_layers, s.max_yields), i));
 
     if let Some(((q_class, q_cost), qi)) = queue_best {
         let jumps = match ready_best {
@@ -635,9 +672,10 @@ fn pick_work_preemptive(s: &mut Shared, max_inflight: usize, batch_phases: bool)
             // every parked lower-class state just yielded its slot to a
             // newly admitted request — the preemption event
             charge_yields(s, q_class, u64::MAX);
-            let (req, at) = s.queue.remove(qi).expect("queue_best index");
+            let q = s.queue.remove(qi).expect("queue_best index");
             s.inflight += 1;
-            return Some(Work::Admit(req, at));
+            charge_queue_passes(s, q_class);
+            return Some(Work::Admit(q.req, q.at));
         }
     }
     if let Some((_, i)) = ready_best {
@@ -649,6 +687,7 @@ fn pick_work_preemptive(s: &mut Shared, max_inflight: usize, batch_phases: bool)
         // yielded their slot (fused group members advanced, so only the
         // states still parked are charged)
         charge_yields(s, lead_class, lead_seq);
+        charge_queue_passes(s, lead_class);
         return Some(Work::Phases(group));
     }
     None
@@ -665,6 +704,20 @@ fn charge_yields(s: &mut Shared, winner_class: u8, winner_seq: u64) {
             && class_rank(p.meta.priority, p.meta.yields, max_yields) > winner_class
         {
             p.meta.yields += 1;
+        }
+    }
+}
+
+/// Charge one pass to every *queued* request of a strictly worse class
+/// than this pick's winner — the queue-level twin of [`charge_yields`].
+/// Without it a `Batch` request that never wins admission accrues no
+/// aging credit and can starve behind a sustained `Interactive` stream
+/// even though parked batches are aging-protected.
+fn charge_queue_passes(s: &mut Shared, winner_class: u8) {
+    let max_yields = s.max_yields;
+    for q in s.queue.iter_mut() {
+        if class_rank(q.req.priority, q.passes, max_yields) > winner_class {
+            q.passes += 1;
         }
     }
 }
@@ -714,22 +767,24 @@ fn next_item(s: &mut Shared) -> Option<(TraceRequest, Instant)> {
             .queue
             .iter()
             .enumerate()
-            .min_by_key(|(_, (r, _))| r.spec.tokens)
+            .min_by_key(|(_, q)| q.req.spec.tokens)
             .map(|(i, _)| i)
             .unwrap_or(0),
         // class first (via the same class_rank the phase-boundary
-        // ranking uses — one source of truth), then SJF: what the serial
-        // baseline and the pipeline's no-contention admission see of the
-        // preemptive rank
+        // ranking uses — one source of truth, queue passes included),
+        // then SJF: what the serial baseline and the pipeline's
+        // no-contention admission see of the preemptive rank
         Policy::Preemptive => s
             .queue
             .iter()
             .enumerate()
-            .min_by_key(|(_, (r, _))| (class_rank(r.priority, 0, s.max_yields), r.spec.tokens))
+            .min_by_key(|(_, q)| {
+                (class_rank(q.req.priority, q.passes, s.max_yields), q.req.spec.tokens)
+            })
             .map(|(i, _)| i)
             .unwrap_or(0),
     };
-    s.queue.remove(idx)
+    s.queue.remove(idx).map(|q| (q.req, q.at))
 }
 
 #[cfg(test)]
@@ -748,6 +803,10 @@ mod tests {
             arrival_us: 0,
             priority,
         }
+    }
+
+    fn queued(req: TraceRequest) -> Queued {
+        Queued { req, at: Instant::now(), passes: 0 }
     }
 
     fn shared(policy: Policy) -> Shared {
@@ -787,9 +846,9 @@ mod tests {
     #[test]
     fn sjf_picks_shortest() {
         let mut s = shared(Policy::Sjf);
-        s.queue.push_back((req(1, 4096), Instant::now()));
-        s.queue.push_back((req(2, 1024), Instant::now()));
-        s.queue.push_back((req(3, 2048), Instant::now()));
+        s.queue.push_back(queued(req(1, 4096)));
+        s.queue.push_back(queued(req(2, 1024)));
+        s.queue.push_back(queued(req(3, 2048)));
         let (r, _) = next_item(&mut s).unwrap();
         assert_eq!(r.id, 2);
     }
@@ -797,8 +856,8 @@ mod tests {
     #[test]
     fn fcfs_preserves_order() {
         let mut s = shared(Policy::Fcfs);
-        s.queue.push_back((req(1, 4096), Instant::now()));
-        s.queue.push_back((req(2, 1024), Instant::now()));
+        s.queue.push_back(queued(req(1, 4096)));
+        s.queue.push_back(queued(req(2, 1024)));
         let (r, _) = next_item(&mut s).unwrap();
         assert_eq!(r.id, 1);
     }
@@ -812,7 +871,7 @@ mod tests {
     #[test]
     fn admission_respects_inflight_cap() {
         let mut s = shared(Policy::Fcfs);
-        s.queue.push_back((req(1, 256), Instant::now()));
+        s.queue.push_back(queued(req(1, 256)));
         s.inflight = 2;
         assert!(pick_work(&mut s, 2, true).is_none(), "pipeline full");
         assert!(matches!(pick_work(&mut s, 3, true), Some(Work::Admit(..))));
@@ -823,7 +882,7 @@ mod tests {
     fn ready_states_win_over_admission() {
         // a parked state must be stepped before a new request is admitted
         let mut s = shared(Policy::Fcfs);
-        s.queue.push_back((req(7, 256), Instant::now()));
+        s.queue.push_back(queued(req(7, 256)));
         let engine =
             Engine::new_native(EngineConfig::new_native(crate::config::TINY.clone())).unwrap();
         s.ready.push(parked(&engine, 3, 128, 0, Priority::Interactive));
@@ -845,9 +904,9 @@ mod tests {
     #[test]
     fn preemptive_queue_ranks_class_before_length() {
         let mut s = shared(Policy::Preemptive);
-        s.queue.push_back((req_class(1, 256, Priority::Batch), Instant::now()));
-        s.queue.push_back((req_class(2, 4096, Priority::Interactive), Instant::now()));
-        s.queue.push_back((req_class(3, 1024, Priority::Interactive), Instant::now()));
+        s.queue.push_back(queued(req_class(1, 256, Priority::Batch)));
+        s.queue.push_back(queued(req_class(2, 4096, Priority::Interactive)));
+        s.queue.push_back(queued(req_class(3, 1024, Priority::Interactive)));
         // shortest *interactive* first, even though the batch one is shorter
         let (r, _) = next_item(&mut s).unwrap();
         assert_eq!(r.id, 3);
@@ -866,7 +925,7 @@ mod tests {
         let mut s = shared(Policy::Preemptive);
         s.ready.push(parked(&engine, 0, 512, 0, Priority::Batch));
         s.inflight = 1;
-        s.queue.push_back((req_class(1, 128, Priority::Interactive), Instant::now()));
+        s.queue.push_back(queued(req_class(1, 128, Priority::Interactive)));
         match pick_work(&mut s, 4, true) {
             Some(Work::Admit(r, _)) => assert_eq!(r.id, 1),
             _ => panic!("expected the interactive admission to jump the parked batch"),
@@ -876,7 +935,7 @@ mod tests {
         let mut s = shared(Policy::Fcfs);
         s.ready.push(parked(&engine, 0, 512, 0, Priority::Batch));
         s.inflight = 1;
-        s.queue.push_back((req_class(1, 128, Priority::Interactive), Instant::now()));
+        s.queue.push_back(queued(req_class(1, 128, Priority::Interactive)));
         assert!(matches!(pick_work(&mut s, 4, true), Some(Work::Phases(_))));
     }
 
@@ -914,7 +973,7 @@ mod tests {
         s.ready.push(batch);
         s.ready.push(parked(&engine, 1, 128, 1, Priority::Interactive));
         s.inflight = 2;
-        s.queue.push_back((req_class(2, 128, Priority::Interactive), Instant::now()));
+        s.queue.push_back(queued(req_class(2, 128, Priority::Interactive)));
         match pick_work(&mut s, 8, false) {
             Some(Work::Phases(group)) => assert_eq!(group[0].state.request_id, 0),
             _ => panic!("expected the aged batch to step"),
@@ -932,12 +991,42 @@ mod tests {
         let mut s = shared(Policy::Preemptive);
         s.ready.push(parked(&engine, 0, 512, 0, Priority::Batch));
         s.inflight = 1;
-        s.queue.push_back((req_class(1, 128, Priority::Interactive), Instant::now()));
+        s.queue.push_back(queued(req_class(1, 128, Priority::Interactive)));
         match pick_work(&mut s, 1, true) {
             Some(Work::Phases(group)) => assert_eq!(group[0].state.request_id, 0),
             _ => panic!("expected the parked batch to step when the pipeline is full"),
         }
         assert_eq!(s.queue.len(), 1);
+    }
+
+    #[test]
+    fn queued_batch_ages_to_admission_under_interactive_stream() {
+        // regression: a Batch request that never wins admission must be
+        // covered by the aging bound. A parked interactive keeps winning
+        // phase slots; each pick charges the queued batch one pass, and
+        // at the bound it ages to class 0 and jumps the interactive.
+        let engine =
+            Engine::new_native(EngineConfig::new_native(crate::config::TINY.clone())).unwrap();
+        let mut s = shared(Policy::Preemptive);
+        s.max_yields = 2;
+        s.queue.push_back(queued(req_class(9, 4096, Priority::Batch)));
+        s.ready.push(parked(&engine, 0, 128, 0, Priority::Interactive));
+        s.inflight = 1;
+        for turn in 0..2u64 {
+            match pick_work(&mut s, 4, false) {
+                Some(Work::Phases(group)) => {
+                    assert_eq!(group[0].state.request_id, 0);
+                    // park the state back, as the worker loop would
+                    s.ready.extend(group);
+                }
+                _ => panic!("expected the interactive phase step on turn {turn}"),
+            }
+            assert_eq!(s.queue[0].passes, turn + 1, "each pick charges one pass");
+        }
+        match pick_work(&mut s, 4, false) {
+            Some(Work::Admit(r, _)) => assert_eq!(r.id, 9),
+            _ => panic!("expected the aged queued batch to win admission"),
+        }
     }
 
     #[test]

@@ -232,6 +232,38 @@ impl LivenessCache {
         self.resident.insert(key, tier);
     }
 
+    /// Seed residency for a block whose payload is already on hand
+    /// (cross-request prefix KV reuse): insert it **without** touching the
+    /// lookup/admission statistics, so the subsequent schedule walk prices
+    /// the reuse as ordinary cache hits — in the engine and the simulator
+    /// alike. Same liveness and capacity rules as [`LivenessCache::admit`]
+    /// (dead keys and full tiers are skipped, hot seeds spill cold); a
+    /// skipped seed simply prices as a miss later, which is still correct.
+    /// Call after [`LivenessCache::init_uses`] (which clears residency).
+    /// Returns whether the key is resident afterwards.
+    pub fn seed_resident(&mut self, key: u64) -> bool {
+        if self.is_resident(key) {
+            return true;
+        }
+        if self.remaining_uses(key) == 0 {
+            return false;
+        }
+        let tier = self.tier_for(key);
+        let tier = if self.free_slots(tier) > 0 {
+            tier
+        } else if tier == Tier::Hot && self.free_slots(Tier::Cold) > 0 {
+            Tier::Cold
+        } else {
+            return false;
+        };
+        match tier {
+            Tier::Hot => self.hot_used += 1,
+            Tier::Cold => self.cold_used += 1,
+        }
+        self.resident.insert(key, tier);
+        true
+    }
+
     /// Record one consumption of the block (one SAU job). When the counter
     /// reaches zero the block is provably dead, its slot is freed
     /// (evict-on-nil) and its counter entry is dropped. Consuming a key
@@ -404,6 +436,34 @@ mod tests {
         assert_eq!(c.remaining_uses(3), 1);
         c.consume(3);
         assert!(!c.is_resident(3));
+    }
+
+    #[test]
+    fn seed_resident_prices_as_hit_without_admission_stats() {
+        let mut c = cache3();
+        assert!(c.seed_resident(1)); // remaining 5 > t_hot 2 => hot
+        assert_eq!(c.stats(), CacheStats::default(), "seeding must not count stats");
+        assert_eq!(c.lookup(1), Access::Hit(Tier::Hot));
+        c.check_invariants().unwrap();
+        assert!(c.seed_resident(1), "re-seeding a resident key is a no-op success");
+        assert!(!c.seed_resident(99), "dead keys are never seeded");
+    }
+
+    #[test]
+    fn seed_resident_respects_capacity_and_spills() {
+        let mut c = LivenessCache::new(2, 0.5, 0); // 1 hot + 1 cold, all >0 hot
+        c.init_uses([(1u64, 9u32), (2, 9), (3, 9)]);
+        assert!(c.seed_resident(1)); // hot
+        assert!(c.seed_resident(2)); // hot full -> cold spill
+        assert!(!c.seed_resident(3), "both tiers full of live blocks");
+        assert_eq!(c.stats(), CacheStats::default());
+        c.check_invariants().unwrap();
+        // the skipped seed later prices as an ordinary miss
+        assert_eq!(c.lookup(3), Access::Miss);
+        // disabled cache never seeds (cacheless ablation stays cacheless)
+        let mut d = LivenessCache::disabled();
+        d.init_uses([(1u64, 10u32)]);
+        assert!(!d.seed_resident(1));
     }
 
     #[test]

@@ -32,6 +32,12 @@ pub struct PrefillMetrics {
     pub cache_bypasses: u64,
     /// Total SAU jobs executed.
     pub jobs: usize,
+    /// Leading token-blocks resumed from the cross-request prefix KV
+    /// store (0 on a cold run or with no store attached).
+    pub prefix_blocks_reused: usize,
+    /// Tokens whose QKV/IndexGen/FFN work was skipped via prefix reuse
+    /// (`prefix_blocks_reused * BLOCK`).
+    pub prefix_tokens_skipped: u64,
     /// Time breakdown (us).
     pub t_qkv_us: f64,
     pub t_sigu_us: f64,
@@ -78,6 +84,8 @@ pub struct ServeSample {
     pub hbm_read_bytes: f64,
     /// KV cache hit rate over the request's SAU schedules.
     pub cache_hit_rate: f64,
+    /// Tokens skipped via cross-request prefix KV reuse (0 = cold).
+    pub prefix_tokens_skipped: u64,
 }
 
 /// TTFT statistics of one priority class within a [`ServeSummary`].
@@ -134,6 +142,15 @@ pub struct ServeSummary {
     pub hbm_read_gb: f64,
     /// Mean per-request KV cache hit rate.
     pub cache_hit_rate_mean: f64,
+    /// Fraction of requests that resumed from the cross-request prefix
+    /// KV store (at least one leading block reused).
+    pub prefix_hit_rate: f64,
+    /// Total tokens skipped via prefix reuse across the trace.
+    pub prefix_tokens_skipped: u64,
+    /// Reuse-attributed TTFT delta: mean user-perceived TTFT of cold
+    /// requests minus that of prefix-hit requests, in ms (positive =
+    /// reuse was faster; 0.0 when either group is empty).
+    pub prefix_ttft_delta_ms: f64,
 }
 
 impl ServeSummary {
@@ -149,6 +166,21 @@ impl ServeSummary {
             Some(b) if samples.iter().all(|s| s.kernel_backend == b) => b,
             Some(_) => "mixed",
         };
+        let warm_e2e: Vec<f64> = samples
+            .iter()
+            .filter(|s| s.prefix_tokens_skipped > 0)
+            .map(|s| s.e2e_us / 1e3)
+            .collect();
+        let cold_e2e: Vec<f64> = samples
+            .iter()
+            .filter(|s| s.prefix_tokens_skipped == 0)
+            .map(|s| s.e2e_us / 1e3)
+            .collect();
+        let prefix_ttft_delta_ms = if warm_e2e.is_empty() || cold_e2e.is_empty() {
+            0.0
+        } else {
+            mean(&cold_e2e) - mean(&warm_e2e)
+        };
         ServeSummary {
             n: samples.len(),
             kernel_backend: backend,
@@ -163,6 +195,13 @@ impl ServeSummary {
             preemptions: samples.iter().map(|s| s.preemptions).sum(),
             hbm_read_gb: samples.iter().map(|s| s.hbm_read_bytes).sum::<f64>() / 1e9,
             cache_hit_rate_mean: mean(&hits),
+            prefix_hit_rate: if samples.is_empty() {
+                0.0
+            } else {
+                warm_e2e.len() as f64 / samples.len() as f64
+            },
+            prefix_tokens_skipped: samples.iter().map(|s| s.prefix_tokens_skipped).sum(),
+            prefix_ttft_delta_ms,
         }
     }
 
@@ -199,6 +238,14 @@ impl ServeSummary {
                 self.preemptions
             ));
         }
+        if self.prefix_tokens_skipped > 0 {
+            line.push_str(&format!(
+                " | prefix hit {:.0}% skip {} tok dTTFT {:.0} ms",
+                self.prefix_hit_rate * 100.0,
+                self.prefix_tokens_skipped,
+                self.prefix_ttft_delta_ms
+            ));
+        }
         line
     }
 
@@ -212,7 +259,9 @@ impl ServeSummary {
              \"e2e_mean_ms\": {:.3}, \"e2e_p95_ms\": {:.3}, \
              \"interactive\": {{\"n\": {}, \"ttft_mean_ms\": {:.3}, \"ttft_p95_ms\": {:.3}}}, \
              \"batch\": {{\"n\": {}, \"ttft_mean_ms\": {:.3}, \"ttft_p95_ms\": {:.3}}}, \
-             \"preemptions\": {}, \"hbm_read_gb\": {:.6}, \"cache_hit_rate_mean\": {:.4}}}",
+             \"preemptions\": {}, \"hbm_read_gb\": {:.6}, \"cache_hit_rate_mean\": {:.4}, \
+             \"prefix_hit_rate\": {:.4}, \"prefix_tokens_skipped\": {}, \
+             \"prefix_ttft_delta_ms\": {:.3}}}",
             label,
             self.n,
             self.kernel_backend,
@@ -230,7 +279,10 @@ impl ServeSummary {
             self.batch.ttft_p95_ms,
             self.preemptions,
             self.hbm_read_gb,
-            self.cache_hit_rate_mean
+            self.cache_hit_rate_mean,
+            self.prefix_hit_rate,
+            self.prefix_tokens_skipped,
+            self.prefix_ttft_delta_ms
         )
     }
 
@@ -387,6 +439,32 @@ mod tests {
         assert!(json.contains("\"label\": \"pipelined\""), "{json}");
         assert!(json.contains("\"preemptions\": 7"), "{json}");
         assert!(json.contains("\"interactive\": {\"n\": 2"), "{json}");
+    }
+
+    #[test]
+    fn serve_summary_prefix_reuse_aggregates() {
+        let mk = |e2e_ms: f64, skipped| ServeSample {
+            e2e_us: e2e_ms * 1e3,
+            prefix_tokens_skipped: skipped,
+            ..Default::default()
+        };
+        // two cold requests at 40ms, two warm (prefix-hit) at 10ms
+        let samples =
+            vec![mk(40.0, 0), mk(40.0, 0), mk(10.0, 256), mk(10.0, 128)];
+        let s = ServeSummary::from_samples(&samples);
+        assert!((s.prefix_hit_rate - 0.5).abs() < 1e-9);
+        assert_eq!(s.prefix_tokens_skipped, 384);
+        assert!((s.prefix_ttft_delta_ms - 30.0).abs() < 1e-9);
+        let line = s.render("x");
+        assert!(line.contains("prefix hit 50%"), "{line}");
+        assert!(line.contains("skip 384 tok"), "{line}");
+        let json = s.to_json("x");
+        assert!(json.contains("\"prefix_tokens_skipped\": 384"), "{json}");
+        assert!(json.contains("\"prefix_hit_rate\": 0.5000"), "{json}");
+        // an all-cold trace keeps the banner line unchanged
+        let cold = ServeSummary::from_samples(&[mk(40.0, 0)]);
+        assert!(!cold.render("x").contains("prefix hit"));
+        assert!((cold.prefix_ttft_delta_ms - 0.0).abs() < 1e-12);
     }
 
     #[test]

@@ -41,7 +41,9 @@ pub struct PrefillOutput {
 }
 
 /// Quantized per-chunk activations for one layer's attention. Shared with
-/// the coordinator's native (artifact-free) execution path.
+/// the coordinator's native (artifact-free) execution path. `Clone` so the
+/// prefix KV store can publish/restore per-block chunks across requests.
+#[derive(Clone)]
 pub struct ChunkQkv {
     pub q: Vec<MatI8>, // per head: [B, dh]
     pub qs: f32,
@@ -320,6 +322,25 @@ pub fn dense_indices(n_heads: usize, n: usize) -> Vec<HeadIndex> {
             pattern: HeadPattern::VerticalSlash,
             d_js: 0.0,
             blocks: (0..n).map(|q| (0..=q as u32).collect()).collect(),
+        })
+        .collect()
+}
+
+/// Dense causal index set for a prefill resuming at block `resume_from`
+/// (prefix-KV reuse): query blocks below the resume point have already
+/// been attended in the published run and get empty lists (no SAU states,
+/// no jobs), while every novel query block keeps its full causal list —
+/// including the reused prefix KV blocks, so the memory spine still walks
+/// (and prices) them. With `resume_from == 0` this is exactly
+/// [`dense_indices`].
+pub fn suffix_dense_indices(n_heads: usize, n: usize, resume_from: usize) -> Vec<HeadIndex> {
+    (0..n_heads)
+        .map(|_| HeadIndex {
+            pattern: HeadPattern::VerticalSlash,
+            d_js: 0.0,
+            blocks: (0..n)
+                .map(|q| if q < resume_from { Vec::new() } else { (0..=q as u32).collect() })
+                .collect(),
         })
         .collect()
 }

@@ -271,15 +271,43 @@ pub fn simulate_prefill_batch(
     lane_s: &[usize],
     lane_index_sets: &[&[Vec<HeadIndex>]],
 ) -> BatchSimReport {
+    let zeros = vec![0usize; lane_s.len()];
+    simulate_prefill_batch_prefixed(f, cfg, lane_s, lane_index_sets, &zeros)
+}
+
+/// [`simulate_prefill_batch`] with per-lane prefix KV reuse
+/// (`lane_prefix[lane]` = leading blocks served by the cross-request
+/// prefix store; 0 = cold). A prefixed lane prices its linear layers and
+/// SIGU on the **novel** tokens only (the engine skips QKV/IndexGen/FFN
+/// for covered blocks), and its per-layer cache is pre-seeded through the
+/// same [`crate::coordinator::prefix::seed_prefix`] the engine calls —
+/// so reused blocks show up as priced cache *hits* on the canonical
+/// schedule walk and the hit-stat identity with `Engine` stats holds
+/// warm as well as cold. Callers model the engine's resume semantics by
+/// passing the same suffix index sets it would build (e.g.
+/// `forward::suffix_dense_indices`).
+pub fn simulate_prefill_batch_prefixed(
+    f: &FpgaConfig,
+    cfg: &ModelConfig,
+    lane_s: &[usize],
+    lane_index_sets: &[&[Vec<HeadIndex>]],
+    lane_prefix: &[usize],
+) -> BatchSimReport {
     assert_eq!(lane_s.len(), lane_index_sets.len(), "lane contexts vs index sets");
+    assert_eq!(lane_s.len(), lane_prefix.len(), "lane contexts vs prefix lengths");
     assert!(!lane_s.is_empty());
-    for (&s, sets) in lane_s.iter().zip(lane_index_sets) {
+    for ((&s, sets), &p) in lane_s.iter().zip(lane_index_sets).zip(lane_prefix) {
         assert!(s % BLOCK == 0 && !sets.is_empty());
+        assert!(p < s / BLOCK, "a lane must keep at least one novel block");
     }
     let n_lanes = lane_s.len();
     let blk_bytes = kv_block_bytes(cfg);
     let wave_q = sau_wave_qblocks(f, cfg);
     let fsm_us = FSM_PHASE_CYCLES / f.freq_mhz;
+    // linear/SIGU phases run on novel tokens only; the SAU schedule still
+    // spans the full context (prefix K/V participate as cached operands)
+    let lane_novel: Vec<usize> =
+        lane_s.iter().zip(lane_prefix).map(|(&s, &p)| s - p * BLOCK).collect();
 
     let mut rep = SimReport::default();
     let mut traffic = Traffic::default();
@@ -294,13 +322,13 @@ pub fn simulate_prefill_batch(
     let mut compute_us_sum = 0.0;
 
     for li in 0..cfg.n_layers {
-        let (lin_us, qkv_us, ffn_us) = linear_layers_us(f, cfg, lane_s, &mut traffic);
+        let (lin_us, qkv_us, ffn_us) = linear_layers_us(f, cfg, &lane_novel, &mut traffic);
         rep.t_qkv_ms += (qkv_us / (qkv_us + ffn_us).max(1e-9)) * lin_us / 1000.0;
         rep.t_ffn_ms += (ffn_us / (qkv_us + ffn_us).max(1e-9)) * lin_us / 1000.0;
         compute_us_sum += lin_us;
 
         let mut sigu_us = 0.0;
-        for &s in lane_s {
+        for &s in &lane_novel {
             sigu_us += sigu_layer_us(f, cfg, s / BLOCK, &mut traffic);
         }
         rep.t_sigu_ms += (sigu_us + fsm_us) / 1000.0;
@@ -314,6 +342,13 @@ pub fn simulate_prefill_batch(
             .zip(lane_s)
             .map(|(sch, &s)| sim_layer_cache(f, cfg, s / BLOCK, sch))
             .collect();
+        for ((cache, sch), &p) in caches.iter_mut().zip(&schedules).zip(lane_prefix) {
+            if p > 0 {
+                // the SAME residency-seeding call the engine makes, so the
+                // two spine consumers price reuse identically
+                crate::coordinator::prefix::seed_prefix(cache, sch.n_kv_heads, p);
+            }
+        }
         for (lane, sch) in schedules.iter().enumerate() {
             rep.total_jobs += sch.total_jobs;
             lanes[lane].jobs += sch.total_jobs;
@@ -493,6 +528,50 @@ mod tests {
         // per-lane cache outcomes are solo-identical (stats identity)
         assert!((batch.lanes[0].cache_hit_rate - solo_a.cache_hit_rate).abs() < 1e-12);
         assert!((batch.lanes[1].cache_hit_rate - solo_b.cache_hit_rate).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prefixed_lane_prices_reuse_as_hits_and_cuts_ttft() {
+        // warm lane: 16 of 32 blocks served by the prefix store. Linear +
+        // SIGU price on novel tokens only and the seeded residency turns
+        // prefix coordinates into priced hits, so TTFT and KV traffic
+        // both drop vs the cold run of the same request
+        use crate::model::forward::suffix_dense_indices;
+        let cfg = &LLAMA32_3B;
+        let f = u280_fast_prefill();
+        let (n, p) = (32usize, 16usize);
+        let cold_idx = vec![suffix_dense_indices(cfg.n_heads, n, 0)];
+        let warm_idx = vec![suffix_dense_indices(cfg.n_heads, n, p)];
+        let cold = simulate_prefill_batch(&f, cfg, &[n * BLOCK], &[cold_idx.as_slice()]);
+        let warm = simulate_prefill_batch_prefixed(
+            &f,
+            cfg,
+            &[n * BLOCK],
+            &[warm_idx.as_slice()],
+            &[p],
+        );
+        assert!(
+            warm.combined.ttft_ms < cold.combined.ttft_ms,
+            "warm {} !< cold {}",
+            warm.combined.ttft_ms,
+            cold.combined.ttft_ms
+        );
+        assert!(
+            warm.combined.traffic.hbm_read_bytes < cold.combined.traffic.hbm_read_bytes,
+            "warm read {} !< cold read {}",
+            warm.combined.traffic.hbm_read_bytes,
+            cold.combined.traffic.hbm_read_bytes
+        );
+        assert!(warm.combined.cache_hit_rate > 0.0, "seeded residency prices as hits");
+        // zero-prefix delegation is exactly the unprefixed entry point
+        let zero = simulate_prefill_batch_prefixed(
+            &f,
+            cfg,
+            &[n * BLOCK],
+            &[cold_idx.as_slice()],
+            &[0],
+        );
+        assert_eq!(zero.combined.ttft_ms, cold.combined.ttft_ms);
     }
 
     #[test]

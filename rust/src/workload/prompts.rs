@@ -14,6 +14,14 @@ pub enum PromptKind {
     Local,
     /// Anchored + local mixture (document-like).
     Mixed,
+    /// A cohort-shared leading context followed by a per-request tail —
+    /// the shape cross-request prefix KV reuse exists for (a shared
+    /// system prompt / document stem). The leading
+    /// `prefix_blocks * BLOCK` tokens are generated from `prefix_seed`
+    /// **only**, so every spec carrying the same `(prefix_seed,
+    /// prefix_blocks)` pair shares those bytes exactly; the tail comes
+    /// from the spec's own seed.
+    SharedPrefix { prefix_seed: u32, prefix_blocks: u16 },
 }
 
 /// Specification for one synthetic prompt.
@@ -72,6 +80,25 @@ impl PromptSpec {
                     .enumerate()
                     .map(|(i, (&a, &l))| if (i / 64) % 2 == 0 { a } else { l })
                     .collect()
+            }
+            PromptKind::SharedPrefix { prefix_seed, prefix_blocks } => {
+                // the prefix is a function of (prefix_seed, prefix_blocks)
+                // alone — byte-exact across every cohort member, whatever
+                // their total length or per-request seed
+                let plen = (prefix_blocks as usize * crate::config::BLOCK).min(n);
+                let mut out = PromptSpec {
+                    kind: PromptKind::Mixed,
+                    tokens: plen,
+                    seed: 0x5A17_0000u64 ^ prefix_seed as u64,
+                }
+                .generate();
+                if n > plen {
+                    out.extend(
+                        PromptSpec { kind: PromptKind::Mixed, tokens: n - plen, seed: self.seed }
+                            .generate(),
+                    );
+                }
+                out
             }
         }
     }
@@ -192,6 +219,41 @@ impl RequestTrace {
         RequestTrace { requests }
     }
 
+    /// Like [`RequestTrace::generate_mixed`], but requests are dealt
+    /// round-robin into `n_cohorts` shared-prefix cohorts: every member
+    /// of a cohort carries byte-identical leading
+    /// `prefix_blocks * BLOCK` tokens (clamped so the shortest length
+    /// choice keeps at least one novel block) with its own mixed tail —
+    /// the workload shape the cross-request prefix KV store converts
+    /// into priced cache hits. Arrival times, lengths and priority
+    /// classes are exactly the `generate_mixed` draws for the same seed,
+    /// so cohort traces are comparable to their no-prefix twins.
+    pub fn generate_shared_prefix(
+        n_requests: usize,
+        token_choices: &[usize],
+        mean_gap_us: u64,
+        seed: u64,
+        prefix_blocks: u16,
+        n_cohorts: usize,
+    ) -> RequestTrace {
+        assert!(n_cohorts > 0 && prefix_blocks > 0);
+        let shortest = *token_choices.iter().min().expect("token choices");
+        let block = crate::config::BLOCK;
+        let pb = (prefix_blocks as usize)
+            .min((shortest / block).saturating_sub(1))
+            .max(1) as u16;
+        let mut trace =
+            RequestTrace::generate_mixed(n_requests, token_choices, mean_gap_us, seed);
+        for (i, r) in trace.requests.iter_mut().enumerate() {
+            let cohort = (i % n_cohorts) as u32;
+            r.spec.kind = PromptKind::SharedPrefix {
+                prefix_seed: (seed as u32) ^ cohort.wrapping_mul(0x9E37_79B9),
+                prefix_blocks: pb,
+            };
+        }
+        trace
+    }
+
     /// The mixed-trace class rule: the longest length class is `Batch`,
     /// everything shorter (when the trace has any length spread at all)
     /// is `Interactive`.
@@ -273,6 +335,56 @@ mod tests {
         assert!(u.requests.iter().all(|r| r.priority == Priority::Interactive));
         assert_eq!(RequestTrace::class_for(512, 512, 512), Priority::Interactive);
         assert_eq!(RequestTrace::class_for(1024, 256, 1024), Priority::Batch);
+    }
+
+    #[test]
+    fn shared_prefix_cohort_members_share_leading_bytes_exactly() {
+        let kind = PromptKind::SharedPrefix { prefix_seed: 7, prefix_blocks: 2 };
+        let a = PromptSpec { kind, tokens: 512, seed: 100 }.generate();
+        let b = PromptSpec { kind, tokens: 1024, seed: 200 }.generate();
+        assert_eq!(a.len(), 512);
+        assert_eq!(b.len(), 1024);
+        // byte-identical prefix across lengths and per-request seeds...
+        assert_eq!(a[..256], b[..256], "cohort prefix must be byte-exact");
+        // ...with genuinely novel tails
+        assert_ne!(a[256..512], b[256..512]);
+        // a different cohort seed diverges inside the first block
+        let c = PromptSpec {
+            kind: PromptKind::SharedPrefix { prefix_seed: 8, prefix_blocks: 2 },
+            tokens: 512,
+            seed: 100,
+        }
+        .generate();
+        assert_ne!(a[..256], c[..256]);
+        // shorter than the prefix: truncated, still deterministic
+        let d = PromptSpec { kind, tokens: 100, seed: 1 }.generate();
+        assert_eq!(d.len(), 100);
+        assert_eq!(d[..], a[..100]);
+    }
+
+    #[test]
+    fn shared_prefix_trace_rides_the_mixed_draws() {
+        let choices = [512usize, 1024];
+        let mixed = RequestTrace::generate_mixed(16, &choices, 1000, 11);
+        let t = RequestTrace::generate_shared_prefix(16, &choices, 1000, 11, 2, 2);
+        assert_eq!(t.requests.len(), 16);
+        for (r, m) in t.requests.iter().zip(&mixed.requests) {
+            // arrivals, lengths, classes and per-request seeds unchanged
+            assert_eq!(r.arrival_us, m.arrival_us);
+            assert_eq!(r.spec.tokens, m.spec.tokens);
+            assert_eq!(r.spec.seed, m.spec.seed);
+            assert_eq!(r.priority, m.priority);
+            match r.spec.kind {
+                PromptKind::SharedPrefix { prefix_blocks, .. } => {
+                    assert_eq!(prefix_blocks, 2);
+                }
+                k => panic!("expected a shared-prefix kind, got {k:?}"),
+            }
+        }
+        // round-robin: requests 0 and 2 share a cohort, 0 and 1 do not
+        let tok = |i: usize| t.requests[i].spec.generate();
+        assert_eq!(tok(0)[..256], tok(2)[..256]);
+        assert_ne!(tok(0)[..256], tok(1)[..256]);
     }
 
     #[test]

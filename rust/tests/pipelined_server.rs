@@ -5,9 +5,9 @@
 //! `FASTP_THREADS`-style thread budgets. Runs fully native — no
 //! artifacts, every tier-1 environment.
 
-use fast_prefill::config::TINY;
+use fast_prefill::config::{BLOCK, TINY};
 use fast_prefill::coordinator::{
-    Completion, Engine, EngineConfig, Policy, PrefillRun, Server, ServerOptions,
+    Completion, Engine, EngineConfig, Policy, PrefixConfig, PrefillRun, Server, ServerOptions,
 };
 use fast_prefill::workload::prompts::{Priority, PromptKind, PromptSpec, TraceRequest};
 
@@ -321,4 +321,62 @@ fn single_worker_pipeline_preserves_sjf_backlog_order() {
         mid.queue_us,
         short.queue_us
     );
+}
+
+// ---------------------------------------------------------------------------
+// Cross-request prefix KV reuse through the server
+// ---------------------------------------------------------------------------
+
+/// With a prefix store attached and strict sequencing (1 worker, 1
+/// inflight slot), the first cohort member publishes its blocks and the
+/// second resumes past the shared prefix — bit-identical to a cold solo
+/// run, with strictly less SAU work.
+#[test]
+fn prefix_enabled_server_reuses_and_stays_bit_identical() {
+    let mut cfg = native_cfg();
+    cfg.flex = None; // the store is dense-mode only
+
+    let cohort = |id: u64, seed: u64| TraceRequest {
+        id,
+        spec: PromptSpec {
+            kind: PromptKind::SharedPrefix { prefix_seed: 7, prefix_blocks: 2 },
+            tokens: 512,
+            seed,
+        },
+        arrival_us: 0,
+        priority: Priority::Interactive,
+    };
+    let reqs = vec![cohort(0, 900), cohort(1, 901)];
+
+    // cold reference: same dense config, fresh engine, no store
+    let mut eng = Engine::new_native(cfg.clone()).unwrap();
+    let solo: Vec<PrefillRun> =
+        reqs.iter().map(|r| eng.prefill(r.id, &r.spec.generate()).unwrap()).collect();
+
+    let mut opts = ServerOptions::new(1, Policy::Fcfs);
+    opts.max_inflight = 1;
+    opts.prefix = Some(PrefixConfig::default());
+    let server = Server::start_with("artifacts".into(), cfg, opts).unwrap();
+    for r in reqs.clone() {
+        server.submit(r);
+    }
+    let mut done = server.drain().unwrap();
+    done.sort_by_key(|c| c.request_id);
+    assert_eq!(done.len(), 2);
+
+    assert_eq!(done[0].run.metrics.prefix_tokens_skipped, 0, "first arrival is cold");
+    assert_eq!(
+        done[1].run.metrics.prefix_tokens_skipped,
+        (2 * BLOCK) as u64,
+        "cohort mate must resume past the shared prefix"
+    );
+    for (c, s) in done.iter().zip(&solo) {
+        let tag = format!("prefix req {}", c.request_id);
+        assert_eq!(c.run.first_token, s.first_token, "{tag}: first token");
+        assert_eq!(c.run.logits_last, s.logits_last, "{tag}: logits");
+        assert_eq!(c.run.hidden_last_chunk, s.hidden_last_chunk, "{tag}: hidden");
+    }
+    // the warm lane did strictly less work, and the sample carries it
+    assert!(done[1].run.metrics.jobs < solo[1].metrics.jobs, "reuse must cut jobs");
+    assert_eq!(done[1].sample().prefix_tokens_skipped, (2 * BLOCK) as u64);
 }

@@ -1,0 +1,244 @@
+//! Cross-request prefix KV reuse (`coordinator::prefix`): the hard
+//! contract is that a warm (store-resumed) prefill is **bit-identical**
+//! to the same request run cold, while skipping the covered blocks'
+//! QKV/IndexGen/FFN work — and that reused blocks are priced as cache
+//! *hits* identically by both memory-spine consumers (engine walk and
+//! cycle-simulator walk). Runs fully native, every tier-1 environment.
+
+use std::sync::{Arc, Mutex};
+
+use fast_prefill::config::{u280_fast_prefill, BLOCK, TINY};
+use fast_prefill::coordinator::{
+    build_schedule, seed_prefix, Engine, EngineConfig, EvictPolicy, PrefixConfig, PrefixStore,
+    ScheduleWalk,
+};
+use fast_prefill::kvcache::{layer_cache, CacheStats};
+use fast_prefill::model::forward::suffix_dense_indices;
+use fast_prefill::sim::hbm::Traffic;
+use fast_prefill::sim::price_sau_walk;
+use fast_prefill::util::prng::Prng;
+
+fn tokens(n: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Prng::new(seed);
+    (0..n).map(|_| rng.below(256) as u8).collect()
+}
+
+/// Dense-mode native config: the prefix store is only consulted when
+/// `flex` is `None` (sparse SIGU is not prefix-closed).
+fn dense_cfg(threads: usize) -> EngineConfig {
+    let mut cfg = EngineConfig::new_native(TINY.clone());
+    cfg.flex = None;
+    cfg.weight_seed = 31415;
+    cfg.threads = threads;
+    cfg
+}
+
+fn store_for(
+    cfg: &EngineConfig,
+    capacity_blocks: usize,
+    policy: EvictPolicy,
+) -> Arc<Mutex<PrefixStore>> {
+    Arc::new(Mutex::new(PrefixStore::new(
+        cfg.model.name,
+        cfg.weight_seed,
+        PrefixConfig { capacity_blocks, policy },
+    )))
+}
+
+fn assert_outputs_identical(
+    warm: &fast_prefill::coordinator::PrefillRun,
+    cold: &fast_prefill::coordinator::PrefillRun,
+    tag: &str,
+) {
+    assert_eq!(warm.first_token, cold.first_token, "{tag}: first_token");
+    assert_eq!(warm.logits_last, cold.logits_last, "{tag}: logits_last");
+    assert_eq!(
+        warm.hidden_last_chunk, cold.hidden_last_chunk,
+        "{tag}: hidden_last_chunk"
+    );
+}
+
+#[test]
+fn reused_prefix_is_bit_identical_across_thread_counts() {
+    let producer = tokens(512, 0xA11CE);
+    // consumer shares the first 2 blocks, then a guaranteed-novel tail
+    let mut consumer = producer[..2 * BLOCK].to_vec();
+    let mut tail = tokens(2 * BLOCK, 0xB0B);
+    tail[0] = producer[2 * BLOCK] ^ 1;
+    consumer.extend_from_slice(&tail);
+
+    for threads in [1usize, 3] {
+        let cfg = dense_cfg(threads);
+        let tag = format!("threads={threads}");
+
+        // cold reference: no store attached
+        let mut cold_eng = Engine::new_native(cfg.clone()).unwrap();
+        let cold = cold_eng.prefill(0, &consumer).unwrap();
+        assert_eq!(cold.metrics.prefix_blocks_reused, 0);
+        assert_eq!(cold.metrics.prefix_tokens_skipped, 0);
+
+        // warm path: producer publishes, consumer resumes at block 2
+        let mut eng = Engine::new_native(cfg.clone()).unwrap();
+        eng.prefix = Some(store_for(&cfg, 4096, EvictPolicy::LivenessAware));
+        let produced = eng.prefill(1, &producer).unwrap();
+        assert_eq!(produced.metrics.prefix_blocks_reused, 0, "{tag}: store was empty");
+        let warm = eng.prefill(2, &consumer).unwrap();
+
+        assert_eq!(warm.metrics.prefix_blocks_reused, 2, "{tag}");
+        assert_eq!(warm.metrics.prefix_tokens_skipped, (2 * BLOCK) as u64, "{tag}");
+        assert_outputs_identical(&warm, &cold, &tag);
+        // covered blocks run no SAU query rows and skip their KV fetches
+        assert!(warm.metrics.jobs < cold.metrics.jobs, "{tag}: jobs not reduced");
+        assert!(
+            warm.metrics.hbm_read_bytes < cold.metrics.hbm_read_bytes,
+            "{tag}: reuse must cut priced KV fetch traffic"
+        );
+        assert!(warm.metrics.cache_hit_rate > 0.0, "{tag}: seeded blocks must hit");
+    }
+}
+
+#[test]
+fn identical_request_resumes_at_the_last_block() {
+    let toks = tokens(512, 0xDEED);
+    let cfg = dense_cfg(1);
+    let mut cold_eng = Engine::new_native(cfg.clone()).unwrap();
+    let cold = cold_eng.prefill(0, &toks).unwrap();
+
+    let mut eng = Engine::new_native(cfg.clone()).unwrap();
+    eng.prefix = Some(store_for(&cfg, 4096, EvictPolicy::LivenessAware));
+    eng.prefill(1, &toks).unwrap();
+    let warm = eng.prefill(2, &toks).unwrap();
+    // `finish()` reads the last block's hidden rows, so coverage caps at
+    // n-1 blocks even for an exact replay
+    assert_eq!(warm.metrics.prefix_blocks_reused, 3);
+    assert_outputs_identical(&warm, &cold, "replay");
+}
+
+#[test]
+fn partial_block_divergence_resumes_at_the_boundary() {
+    let producer = tokens(512, 0xF00D);
+    // consumer matches block 0 and *half* of block 1: content hashing is
+    // block-granular, so only block 0 is reusable
+    let mut consumer = producer[..BLOCK + BLOCK / 2].to_vec();
+    consumer.push(producer[BLOCK + BLOCK / 2] ^ 1);
+    consumer.extend(tokens(512 - consumer.len(), 0xCAFE));
+    assert_eq!(consumer.len(), 512);
+
+    let cfg = dense_cfg(1);
+    let mut cold_eng = Engine::new_native(cfg.clone()).unwrap();
+    let cold = cold_eng.prefill(0, &consumer).unwrap();
+
+    let mut eng = Engine::new_native(cfg.clone()).unwrap();
+    eng.prefix = Some(store_for(&cfg, 4096, EvictPolicy::LivenessAware));
+    eng.prefill(1, &producer).unwrap();
+    let warm = eng.prefill(2, &consumer).unwrap();
+    assert_eq!(warm.metrics.prefix_blocks_reused, 1, "mid-block match must not count");
+    assert_eq!(warm.metrics.prefix_tokens_skipped, BLOCK as u64);
+    assert_outputs_identical(&warm, &cold, "partial-block");
+}
+
+#[test]
+fn capacity_bounded_store_stays_bit_identical_under_eviction_churn() {
+    for policy in [EvictPolicy::Lru, EvictPolicy::LivenessAware] {
+        let a = tokens(512, 0x5EED_A);
+        let b = tokens(512, 0x5EED_B);
+        let mut a_consumer = a[..2 * BLOCK].to_vec();
+        a_consumer.extend(tokens(2 * BLOCK, 0x7A11));
+        let mut b_consumer = b[..2 * BLOCK].to_vec();
+        b_consumer.extend(tokens(2 * BLOCK, 0x7A12));
+
+        let cfg = dense_cfg(1);
+        let mut cold_eng = Engine::new_native(cfg.clone()).unwrap();
+        let cold_a = cold_eng.prefill(0, &a_consumer).unwrap();
+        let cold_b = cold_eng.prefill(1, &b_consumer).unwrap();
+
+        // capacity 4: publishing `b` (4 blocks) after `a` (4 blocks)
+        // evicts every block of `a`
+        let mut eng = Engine::new_native(cfg.clone()).unwrap();
+        let store = store_for(&cfg, 4, policy);
+        eng.prefix = Some(store.clone());
+        eng.prefill(2, &a).unwrap();
+        eng.prefill(3, &b).unwrap();
+        assert!(
+            store.lock().unwrap().stats().evictions > 0,
+            "{policy:?}: publish churn must evict"
+        );
+
+        // `b`'s prefix survives; `a`'s is gone -> cold path, still correct
+        // (warm_b runs first: warm_a's own publish churns the store again)
+        let warm_b = eng.prefill(4, &b_consumer).unwrap();
+        assert_eq!(warm_b.metrics.prefix_blocks_reused, 2, "{policy:?}: resident prefix");
+        assert_outputs_identical(&warm_b, &cold_b, "resident-prefix");
+        let warm_a = eng.prefill(5, &a_consumer).unwrap();
+        assert_eq!(warm_a.metrics.prefix_blocks_reused, 0, "{policy:?}: evicted prefix");
+        assert_outputs_identical(&warm_a, &cold_a, "evicted-prefix");
+        assert!(store.lock().unwrap().len_blocks() <= 4, "{policy:?}: capacity bound");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hit-stat identity: both spine consumers price prefix seeding the same
+// ---------------------------------------------------------------------------
+
+fn seeded_cache(
+    schedule: &fast_prefill::coordinator::Schedule,
+    capacity: usize,
+    prefix_blocks: usize,
+    n_blocks: usize,
+) -> fast_prefill::kvcache::LivenessCache {
+    let mut cache = layer_cache(
+        capacity,
+        0.5,
+        0.5,
+        n_blocks,
+        TINY.group_size(),
+        schedule.uses.iter().copied(),
+    );
+    if prefix_blocks > 0 {
+        seed_prefix(&mut cache, schedule.n_kv_heads, prefix_blocks);
+    }
+    cache
+}
+
+#[test]
+fn engine_and_sim_price_prefix_seeding_identically() {
+    let f = u280_fast_prefill();
+    let n = 6usize;
+    for wave_q in [0usize, 2] {
+        for capacity in [0usize, 3, 64] {
+            for p in [0usize, 1, 2, 5] {
+                let indices = suffix_dense_indices(TINY.n_heads, n, p);
+                let schedule = build_schedule(&indices, TINY.group_size(), wave_q);
+
+                // engine-side: stats-only drive (what `phase_sau` does)
+                let mut eng_cache = seeded_cache(&schedule, capacity, p, n);
+                ScheduleWalk::solo(&schedule).drive(std::slice::from_mut(&mut eng_cache));
+                let eng: CacheStats = eng_cache.stats();
+
+                // sim-side: the pricing consumer, same seeding call
+                let mut sim_cache = seeded_cache(&schedule, capacity, p, n);
+                let mut traffic = Traffic::default();
+                let walk = ScheduleWalk::solo(&schedule);
+                price_sau_walk(
+                    &f,
+                    &TINY,
+                    &walk,
+                    std::slice::from_mut(&mut sim_cache),
+                    &mut traffic,
+                );
+                let sim = sim_cache.stats();
+
+                assert_eq!(
+                    eng, sim,
+                    "wave_q={wave_q} capacity={capacity} p={p}: spine consumers diverged"
+                );
+                if capacity > 0 && p > 0 {
+                    assert!(
+                        eng.hits() > 0,
+                        "wave_q={wave_q} capacity={capacity} p={p}: seeded prefix never hit"
+                    );
+                }
+            }
+        }
+    }
+}
