@@ -19,6 +19,7 @@ use fast_prefill::model::forward::{attn_step_w8a8, prefill_reference_ctx};
 use fast_prefill::model::ModelWeights;
 use fast_prefill::quant::{int8_matmul_bt, quant_scale, quantize_with};
 use fast_prefill::sim::{simulate_prefill, synth_model_indices, HeadMix};
+use fast_prefill::tensor::ops;
 use fast_prefill::tensor::simd::{self, Backend};
 use fast_prefill::tensor::tile::{self, KernelCtx};
 use fast_prefill::tensor::{MatF32, MatI8};
@@ -144,6 +145,7 @@ fn main() {
         pool: WorkerPool::single_threaded(),
         tile: usize::MAX,
         backend: Backend::Scalar,
+        tune: None,
     };
     let par_ctx = KernelCtx::with_threads(4);
     let r_scalar = bench_for("prefill 4K native-SAU (scalar, 1 thread)", 2000, 2, || {
@@ -232,6 +234,74 @@ fn main() {
         toks.len() / BLOCK
     );
 
+    // --- elementwise remainder (quantize / rmsnorm / rope), per backend ---
+    // (the acceptance benchmark of the elementwise SIMD layer: 4K-context
+    // QKV-phase shapes, scalar vs detected backend, bit-identical outputs;
+    // on a scalar-only host both legs run the same code and speedup ~1.0)
+    let ex: Vec<f32> = (0..4096 * 768).map(|_| rng.normal()).collect();
+    let ex_scale = quant_scale(&ex);
+    let mut q_sc = vec![0i8; ex.len()];
+    let mut q_vc = vec![0i8; ex.len()];
+    let r_q_scalar = bench_for("quantize 4096x768 (scalar backend)", 300, 5, || {
+        Backend::Scalar.i8_quantize(&mut q_sc, &ex, ex_scale);
+        black_box(&q_sc);
+    });
+    println!("{r_q_scalar}");
+    let name = format!("quantize 4096x768 ({} backend)", detected.name());
+    let r_q_simd = bench_for(&name, 300, 5, || {
+        detected.i8_quantize(&mut q_vc, &ex, ex_scale);
+        black_box(&q_vc);
+    });
+    println!("{r_q_simd}");
+    assert_eq!(q_sc, q_vc, "kernel backend changed quantize output");
+    let quantize_speedup = r_q_scalar.mean_ns / r_q_simd.mean_ns;
+    println!("    -> quantize backend speedup {quantize_speedup:.2}x, outputs bit-identical");
+
+    let em = MatF32 { rows: 4096, cols: 768, data: ex.clone() };
+    let gvec: Vec<f32> = (0..768).map(|_| rng.normal()).collect();
+    let r_rms_scalar = bench_for("rmsnorm 4096x768 (scalar backend)", 300, 5, || {
+        black_box(ops::rmsnorm_bk(&em, &gvec, 1e-5, Backend::Scalar));
+    });
+    println!("{r_rms_scalar}");
+    let name = format!("rmsnorm 4096x768 ({} backend)", detected.name());
+    let r_rms_simd = bench_for(&name, 300, 5, || {
+        black_box(ops::rmsnorm_bk(&em, &gvec, 1e-5, detected));
+    });
+    println!("{r_rms_simd}");
+    assert_eq!(
+        ops::rmsnorm_bk(&em, &gvec, 1e-5, Backend::Scalar).data,
+        ops::rmsnorm_bk(&em, &gvec, 1e-5, detected).data,
+        "kernel backend changed rmsnorm output"
+    );
+    let rmsnorm_speedup = r_rms_scalar.mean_ns / r_rms_simd.mean_ns;
+    println!("    -> rmsnorm backend speedup {rmsnorm_speedup:.2}x, outputs bit-identical");
+
+    let rp = MatF32 {
+        rows: 4096,
+        cols: 64,
+        data: (0..4096 * 64).map(|_| rng.normal()).collect(),
+    };
+    let rope_pos: Vec<i32> = (0..4096).collect();
+    let r_rope_scalar = bench_for("rope 4096x64 (scalar backend)", 300, 5, || {
+        let mut x = rp.clone();
+        ops::rope_bk(&mut x, &rope_pos, 10000.0, Backend::Scalar);
+        black_box(&x);
+    });
+    println!("{r_rope_scalar}");
+    let name = format!("rope 4096x64 ({} backend)", detected.name());
+    let r_rope_simd = bench_for(&name, 300, 5, || {
+        let mut x = rp.clone();
+        ops::rope_bk(&mut x, &rope_pos, 10000.0, detected);
+        black_box(&x);
+    });
+    println!("{r_rope_simd}");
+    let (mut rope_sc, mut rope_vc) = (rp.clone(), rp.clone());
+    ops::rope_bk(&mut rope_sc, &rope_pos, 10000.0, Backend::Scalar);
+    ops::rope_bk(&mut rope_vc, &rope_pos, 10000.0, detected);
+    assert_eq!(rope_sc.data, rope_vc.data, "kernel backend changed rope output");
+    let rope_speedup = r_rope_scalar.mean_ns / r_rope_simd.mean_ns;
+    println!("    -> rope backend speedup {rope_speedup:.2}x, outputs bit-identical");
+
     // machine-readable summary for the bench trajectory (CI artifact)
     let json_path = std::env::var("FASTP_BENCH_JSON")
         .unwrap_or_else(|_| "target/hotpath_micro.json".into());
@@ -244,6 +314,12 @@ fn main() {
          \"parallel_core\": {{\"scalar_1t_ns\": {:.1}, \"tiled_4t_ns\": {:.1}, \
          \"speedup\": {:.3}}},\n  \
          \"prefix_reuse_4k\": {{\"cold_ns\": {:.1}, \"warm_ns\": {:.1}, \
+         \"speedup\": {:.3}, \"bit_identical\": true}},\n  \
+         \"quantize_4k\": {{\"scalar_ns\": {:.1}, \"simd_ns\": {:.1}, \
+         \"speedup\": {:.3}, \"bit_identical\": true}},\n  \
+         \"rmsnorm_4k\": {{\"scalar_ns\": {:.1}, \"simd_ns\": {:.1}, \
+         \"speedup\": {:.3}, \"bit_identical\": true}},\n  \
+         \"rope_4k\": {{\"scalar_ns\": {:.1}, \"simd_ns\": {:.1}, \
          \"speedup\": {:.3}, \"bit_identical\": true}}\n}}\n",
         std::env::consts::ARCH,
         detected.name(),
@@ -260,6 +336,15 @@ fn main() {
         r_cold.mean_ns,
         r_warm.mean_ns,
         prefix_speedup,
+        r_q_scalar.mean_ns,
+        r_q_simd.mean_ns,
+        quantize_speedup,
+        r_rms_scalar.mean_ns,
+        r_rms_simd.mean_ns,
+        rmsnorm_speedup,
+        r_rope_scalar.mean_ns,
+        r_rope_simd.mean_ns,
+        rope_speedup,
     );
     if let Some(dir) = std::path::Path::new(&json_path).parent() {
         if !dir.as_os_str().is_empty() {

@@ -18,7 +18,7 @@
 use crate::config::{FlexParams, BLOCK};
 use crate::flexprefill::{coverage, scores};
 use crate::model::forward::{attn_finalize, attn_step_w8a8};
-use crate::quant::{quant_scale, quantize_with};
+use crate::quant::quantize_m;
 use crate::tensor::tile;
 use crate::tensor::{MatF32, MatI8};
 use crate::util::pool::WorkerPool;
@@ -46,13 +46,6 @@ impl Precision {
             Precision::W8A8 => "FAST-Prefill (W8A8)",
         }
     }
-}
-
-fn quantize_m(m: &MatF32) -> (MatI8, f32) {
-    let s = quant_scale(&m.data);
-    let mut q = MatI8::zeros(m.rows, m.cols);
-    quantize_with(&m.data, s, &mut q.data);
-    (q, s)
 }
 
 /// Select KV blocks for the last query block of a needle task using the

@@ -50,6 +50,7 @@ use crate::model::forward::{self as fwd, attn_finalize, ChunkQkv};
 use crate::model::ModelWeights;
 use crate::runtime::{literal_f32, literal_i8, Arg, Runtime};
 use crate::tensor::tile::KernelCtx;
+use crate::tensor::tune::{self, TuneOverride};
 use crate::tensor::{MatF32, MatI8};
 use crate::util::pool::AdaptiveHints;
 
@@ -89,6 +90,14 @@ pub struct EngineConfig {
     /// Worker threads for the kernel context (0 = `FASTP_THREADS` env,
     /// default available parallelism).
     pub threads: usize,
+    /// Autotune profile source for the kernel context:
+    /// [`TuneOverride::Env`] follows `FASTP_AUTOTUNE` (the default),
+    /// `Off` forces the untuned static defaults, and `Profile` injects an
+    /// explicit [`crate::tensor::tune::TuneProfile`] (what `fastp tune
+    /// --check` and the engine bit-identity test use). Never changes
+    /// results — only which (tile, backend) pair each kernel shape runs
+    /// with.
+    pub tune: TuneOverride,
 }
 
 impl EngineConfig {
@@ -105,6 +114,7 @@ impl EngineConfig {
             native_sau: false,
             native_linear: false,
             threads: 0,
+            tune: TuneOverride::default(),
         }
     }
 
@@ -124,10 +134,15 @@ impl EngineConfig {
     }
 
     fn kernel_ctx(&self) -> KernelCtx {
-        if self.threads > 0 {
+        let ctx = if self.threads > 0 {
             KernelCtx::with_threads(self.threads)
         } else {
             KernelCtx::from_env()
+        };
+        match &self.tune {
+            TuneOverride::Env => ctx,
+            TuneOverride::Off => ctx.with_tune(None),
+            TuneOverride::Profile(p) => ctx.with_tune(Some(p.clone())),
         }
     }
 }
@@ -273,7 +288,10 @@ pub struct Engine {
     /// the server installs a shared [`AdaptiveHints`], each phase sizes
     /// its `with_want_cap` lease request from the EWMA of measured job
     /// costs; `None` (solo engines, the serial baseline) keeps the
-    /// static split. Never changes results — only lease sizing.
+    /// static split. An active autotune profile pre-seeds the EWMAs from
+    /// its measured per-phase costs ([`tune::warm_hints`]), so tuned
+    /// engines start with warm hints instead of cold fallbacks. Never
+    /// changes results — only lease sizing.
     pub hints: Option<Arc<AdaptiveHints>>,
     /// Content-hashed cross-request prefix KV store
     /// ([`crate::coordinator::prefix`]). When attached (the server shares
@@ -318,7 +336,8 @@ impl Engine {
             Some(rt)
         };
         let ctx = cfg.kernel_ctx();
-        Ok(Engine { rt, ctx, cfg, weights, hints: None, prefix: None })
+        let hints = tune::warm_hints(ctx.tune.as_ref());
+        Ok(Engine { rt, ctx, cfg, weights, hints, prefix: None })
     }
 
     /// Build an artifact-free engine on the tiled native kernels.
@@ -329,7 +348,8 @@ impl Engine {
         cfg.native_linear = true;
         let weights = Arc::new(ModelWeights::generate(&cfg.model, cfg.weight_seed));
         let ctx = cfg.kernel_ctx();
-        Ok(Engine { rt: None, ctx, cfg, weights, hints: None, prefix: None })
+        let hints = tune::warm_hints(ctx.tune.as_ref());
+        Ok(Engine { rt: None, ctx, cfg, weights, hints, prefix: None })
     }
 
     /// Backend description (for banners / examples).
@@ -450,6 +470,8 @@ impl Engine {
                 request_id,
                 context_tokens: s,
                 kernel_backend: self.ctx.backend.name(),
+                tune_mode: self.ctx.tune_label(),
+                tuned_shapes: self.ctx.tune.as_ref().map_or(0, |p| p.entries.len()),
                 prefix_blocks_reused: resume_from,
                 prefix_tokens_skipped: (resume_from * BLOCK) as u64,
                 ..Default::default()

@@ -7,6 +7,7 @@
 //!   table2    FPGA resource utilization report
 //!   ttft      Fig.5-style sweep for one model
 //!   kernels   report the SIMD micro-kernel dispatch decision
+//!   tune      sweep tile x backend per kernel shape, persist a profile
 //!   perf-trend  gate a fresh hotpath_micro.json against the baseline
 //!   help
 
@@ -18,6 +19,7 @@ use fast_prefill::coordinator::{Engine, EngineConfig, Policy, Server, ServerOpti
 use fast_prefill::gpu_model::simulate_gpu_prefill;
 use fast_prefill::metrics::{fmt_ctx, ServeSample, ServeSummary};
 use fast_prefill::sim::{resource_report, simulate_prefill, synth_model_indices, HeadMix};
+use fast_prefill::tensor::tune::{self, TuneOverride};
 use fast_prefill::tensor::{simd, tile};
 use fast_prefill::util::table::{fnum, Table};
 use fast_prefill::workload::prompts::{PromptKind, PromptSpec, RequestTrace};
@@ -73,6 +75,7 @@ fn run(args: &[String]) -> Result<()> {
         "table2" => cmd_table2(rest),
         "ttft" => cmd_ttft(rest),
         "kernels" => cmd_kernels(rest),
+        "tune" => cmd_tune(rest),
         "perf-trend" => cmd_perf_trend(rest),
         "help" | "--help" | "-h" => {
             print_help();
@@ -108,6 +111,14 @@ COMMANDS
            FASTP_KERNEL override, tile edge); with --require-simd,
            exit non-zero unless a vector backend is active — the CI
            kernel-matrix assertion
+  tune     [--model tiny] [--out fastp_tune.json] [--budget-ms 10]
+           [--check true] [--tokens 512]
+           sweep every tile-edge x backend candidate per kernel shape
+           class of the model and persist the winner table as a JSON
+           autotune profile (activate with FASTP_AUTOTUNE=file +
+           FASTP_TUNE_PROFILE=<path>, or let FASTP_AUTOTUNE=startup
+           sweep a default grid at process start). --check reruns one
+           prefill tuned vs untuned and fails unless bit-identical
   perf-trend --baseline ci/hotpath_baseline.json --fresh hotpath_micro.json
            [--tolerance 0.25] [--normalize score_tile.scalar_ns]
            diff the fresh hotpath summary against the checked-in
@@ -300,6 +311,13 @@ fn cmd_kernels(args: &[String]) -> Result<()> {
         tile::TILE_ENV,
         std::env::var(tile::TILE_ENV).unwrap_or_else(|_| "<unset>".into())
     );
+    println!(
+        "autotune         : {}  ({}={}, {} tuned shapes)",
+        ctx.tune_label(),
+        tune::AUTOTUNE_ENV,
+        std::env::var(tune::AUTOTUNE_ENV).unwrap_or_else(|_| "<unset>".into()),
+        ctx.tune.as_ref().map_or(0, |p| p.entries.len())
+    );
     if flag(&flags, "require-simd", false)? && !active.is_vector() {
         bail!(
             "a vector backend was required but dispatch resolved '{}' \
@@ -307,6 +325,83 @@ fn cmd_kernels(args: &[String]) -> Result<()> {
             active.name(),
             detected.name(),
             std::env::consts::ARCH
+        );
+    }
+    Ok(())
+}
+
+/// Offline autotune sweep: time every tile-edge x backend candidate for
+/// each kernel shape class the model hits, persist the winner table, and
+/// (with `--check`) prove a tuned prefill is bit-identical to untuned.
+fn cmd_tune(args: &[String]) -> Result<()> {
+    let (_, flags) = parse_flags(args);
+    let model_name: String = flag(&flags, "model", "tiny".to_string())?;
+    let model = by_name(&model_name)
+        .with_context(|| format!("unknown model {model_name}"))?
+        .clone();
+    let default_out = std::env::var(tune::PROFILE_ENV)
+        .ok()
+        .filter(|p| !p.trim().is_empty())
+        .unwrap_or_else(|| "fastp_tune.json".into());
+    let out: String = flag(&flags, "out", default_out)?;
+    let budget_ms: f64 = flag(&flags, "budget-ms", 10.0)?;
+    let detected = simd::detect();
+    let shapes = tune::model_shapes(&model);
+    println!(
+        "sweeping {} shape classes of model {} ({} tile candidates x {} backend rungs, \
+         {budget_ms} ms/candidate)...",
+        shapes.len(),
+        model.name,
+        tune::TILE_CANDIDATES.len(),
+        if detected.is_vector() { 2 } else { 1 }
+    );
+    let prof = tune::sweep(&shapes, budget_ms);
+    let mut t = Table::new(&["shape class", "tile", "backend", "best (us)"]);
+    for (key, c) in &prof.entries {
+        t.row(&[
+            key.clone(),
+            c.tile.to_string(),
+            if c.vector { detected.name().to_string() } else { "scalar".to_string() },
+            fnum(c.ns / 1000.0),
+        ]);
+    }
+    t.print();
+    prof.save(&out).map_err(|e| anyhow::anyhow!(e))?;
+    println!(
+        "profile saved to {out} ({} entries); activate with {}=file {}={out}",
+        prof.entries.len(),
+        tune::AUTOTUNE_ENV,
+        tune::PROFILE_ENV
+    );
+    if flag(&flags, "check", false)? {
+        let tokens: usize = flag(&flags, "tokens", 512)?;
+        let toks: Vec<u8> = (0..tokens).map(|i| (i * 31 % 256) as u8).collect();
+        let mut base_cfg = EngineConfig::new_native(model.clone());
+        base_cfg.tune = TuneOverride::Off;
+        let mut tuned_cfg = EngineConfig::new_native(model);
+        tuned_cfg.tune = TuneOverride::Profile(std::sync::Arc::new(prof));
+        let a = Engine::new_native(base_cfg)?.prefill(0, &toks)?;
+        let b = Engine::new_native(tuned_cfg)?.prefill(0, &toks)?;
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        anyhow::ensure!(
+            a.first_token == b.first_token,
+            "tuned first token {} != untuned {}",
+            b.first_token,
+            a.first_token
+        );
+        anyhow::ensure!(
+            bits(&a.logits_last) == bits(&b.logits_last),
+            "tuned logits diverge bitwise from untuned"
+        );
+        anyhow::ensure!(
+            bits(&a.hidden_last_chunk) == bits(&b.hidden_last_chunk),
+            "tuned hidden state diverges bitwise from untuned"
+        );
+        println!(
+            "check: tuned prefill bit-identical to untuned ({tokens} tokens, {} tuned shapes, \
+             mode {})",
+            b.metrics.tuned_shapes,
+            b.metrics.tune_mode
         );
     }
     Ok(())

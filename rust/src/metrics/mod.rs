@@ -13,6 +13,13 @@ pub struct PrefillMetrics {
     /// (`"scalar"` / `"avx2"` / `"neon"`; see `tensor::simd`). Empty for
     /// defaulted metrics that never ran a kernel.
     pub kernel_backend: &'static str,
+    /// Autotune source the engine's `KernelCtx` resolved kernel shapes
+    /// from (`"off"` when untuned, else the `FASTP_AUTOTUNE` mode name or
+    /// `"profile"` for an injected profile; see `tensor::tune`). Empty
+    /// for defaulted metrics that never ran a kernel.
+    pub tune_mode: &'static str,
+    /// Shape classes carried by the active autotune profile (0 = untuned).
+    pub tuned_shapes: usize,
     /// Wall-clock time-to-first-token of the functional pipeline (us).
     pub ttft_us: f64,
     /// Mean computed fraction of the causal attention matrix.

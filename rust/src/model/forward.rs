@@ -16,8 +16,8 @@
 use crate::config::{FlexParams, BLOCK};
 use crate::coordinator::joblist::{build_schedule, DEFAULT_WAVE_QBLOCKS};
 use crate::flexprefill::{generate_head_index, scores, HeadIndex, HeadPattern, HeadStats};
-use crate::quant::{quant_scale, quantize_with};
-use crate::tensor::ops::{block_pool, rmsnorm, rope, silu};
+use crate::quant::{quant_scale, quantize_with_bk};
+use crate::tensor::ops::{block_pool, rmsnorm_bk, rope_bk, silu};
 use crate::tensor::simd;
 use crate::tensor::tile::{self, KernelCtx};
 use crate::tensor::{MatF32, MatI8};
@@ -154,10 +154,10 @@ pub fn qkv_chunk(ctx: &KernelCtx, w: &ModelWeights, li: usize, x: &MatF32, pos0:
     let cfg = &w.cfg;
     let lw = &w.layers[li];
     let b = x.rows;
-    let xn = rmsnorm(x, &lw.g_attn, cfg.rms_eps);
+    let xn = rmsnorm_bk(x, &lw.g_attn, cfg.rms_eps, ctx.backend);
     let xs = quant_scale(&xn.data);
     let mut x_i8 = MatI8::zeros(b, cfg.d_model);
-    quantize_with(&xn.data, xs, &mut x_i8.data);
+    quantize_with_bk(&xn.data, xs, &mut x_i8.data, ctx.backend);
     let q = ctx.int8_matmul_deq(&x_i8, xs, &lw.wq.q, lw.wq.scale); // [B, H*dh]
     let k = ctx.int8_matmul_deq(&x_i8, xs, &lw.wk.q, lw.wk.scale);
     let v = ctx.int8_matmul_deq(&x_i8, xs, &lw.wv.q, lw.wv.scale);
@@ -176,10 +176,10 @@ pub fn qkv_chunk(ctx: &KernelCtx, w: &ModelWeights, li: usize, x: &MatF32, pos0:
     let mut kh = split(&k, cfg.n_kv_heads);
     let vh = split(&v, cfg.n_kv_heads);
     for hq in qh.iter_mut() {
-        rope(hq, &pos, cfg.rope_theta);
+        rope_bk(hq, &pos, cfg.rope_theta, ctx.backend);
     }
     for hk in kh.iter_mut() {
-        rope(hk, &pos, cfg.rope_theta);
+        rope_bk(hk, &pos, cfg.rope_theta, ctx.backend);
     }
     let qpool = MatF32::from_fn(cfg.n_heads, cfg.d_head, |h, c| {
         qh[h].data.iter().skip(c).step_by(cfg.d_head).sum::<f32>() / b as f32
@@ -201,7 +201,7 @@ pub fn qkv_chunk(ctx: &KernelCtx, w: &ModelWeights, li: usize, x: &MatF32, pos0:
         hs.iter()
             .map(|m| {
                 let mut q = MatI8::zeros(m.rows, m.cols);
-                quantize_with(&m.data, s, &mut q.data);
+                quantize_with_bk(&m.data, s, &mut q.data, ctx.backend);
                 q
             })
             .collect()
@@ -223,10 +223,10 @@ pub fn qkv_chunk(ctx: &KernelCtx, w: &ModelWeights, li: usize, x: &MatF32, pos0:
 pub fn ffn_chunk(ctx: &KernelCtx, w: &ModelWeights, li: usize, x: &MatF32) -> MatF32 {
     let cfg = &w.cfg;
     let lw = &w.layers[li];
-    let xn = rmsnorm(x, &lw.g_ffn, cfg.rms_eps);
+    let xn = rmsnorm_bk(x, &lw.g_ffn, cfg.rms_eps, ctx.backend);
     let xs = quant_scale(&xn.data);
     let mut x_i8 = MatI8::zeros(x.rows, cfg.d_model);
-    quantize_with(&xn.data, xs, &mut x_i8.data);
+    quantize_with_bk(&xn.data, xs, &mut x_i8.data, ctx.backend);
     let mut gate = ctx.int8_matmul_deq(&x_i8, xs, &lw.wg.q, lw.wg.scale);
     silu(&mut gate);
     let up = ctx.int8_matmul_deq(&x_i8, xs, &lw.wu.q, lw.wu.scale);
@@ -236,7 +236,7 @@ pub fn ffn_chunk(ctx: &KernelCtx, w: &ModelWeights, li: usize, x: &MatF32) -> Ma
     }
     let hs = quant_scale(&h.data);
     let mut h_i8 = MatI8::zeros(h.rows, h.cols);
-    quantize_with(&h.data, hs, &mut h_i8.data);
+    quantize_with_bk(&h.data, hs, &mut h_i8.data, ctx.backend);
     let down = ctx.int8_matmul_deq(&h_i8, hs, &lw.wd.q, lw.wd.scale);
     let mut out = x.clone();
     for (o, d) in out.data.iter_mut().zip(&down.data) {
@@ -258,7 +258,7 @@ pub fn oproj_ffn_chunk(
     let lw = &w.layers[li];
     let s_a = quant_scale(&attn.data);
     let mut a_i8 = MatI8::zeros(attn.rows, attn.cols);
-    quantize_with(&attn.data, s_a, &mut a_i8.data);
+    quantize_with_bk(&attn.data, s_a, &mut a_i8.data, ctx.backend);
     let proj = ctx.int8_matmul_deq(&a_i8, s_a, &lw.wo.q, lw.wo.scale);
     let mut x = x.clone();
     for (xv, pv) in x.data.iter_mut().zip(&proj.data) {
@@ -271,10 +271,10 @@ pub fn oproj_ffn_chunk(
 /// native path.
 pub fn logits_last_chunk(ctx: &KernelCtx, w: &ModelWeights, last: &MatF32) -> MatF32 {
     let cfg = &w.cfg;
-    let xn = rmsnorm(last, &w.g_final, cfg.rms_eps);
+    let xn = rmsnorm_bk(last, &w.g_final, cfg.rms_eps, ctx.backend);
     let xs = quant_scale(&xn.data);
     let mut x_i8 = MatI8::zeros(last.rows, cfg.d_model);
-    quantize_with(&xn.data, xs, &mut x_i8.data);
+    quantize_with_bk(&xn.data, xs, &mut x_i8.data, ctx.backend);
     ctx.int8_matmul_deq(&x_i8, xs, &w.lm_head.q, w.lm_head.scale)
 }
 

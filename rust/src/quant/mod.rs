@@ -10,6 +10,7 @@
 pub mod bitplane;
 pub mod nibble;
 
+use crate::tensor::simd::Backend;
 use crate::tensor::{MatF32, MatI8, QTensor};
 
 /// Scale floor, matching `ref.SCALE_EPS`.
@@ -33,13 +34,27 @@ pub fn quantize_one(x: f32, scale: f32) -> i8 {
 
 /// Quantize a matrix symmetrically (per-tensor scale).
 pub fn quantize_mat(x: &MatF32) -> QTensor {
-    let scale = quant_scale(&x.data);
-    let q = MatI8 {
-        rows: x.rows,
-        cols: x.cols,
-        data: x.data.iter().map(|&v| quantize_one(v, scale)).collect(),
-    };
+    let (q, scale) = quantize_m(x);
     QTensor { q, scale }
+}
+
+/// The one shared scale-then-quantize helper: per-tensor symmetric scale
+/// plus elementwise [`quantize_one`] over a whole matrix. `quantize_mat`,
+/// the model forward pass and the accuracy harness all route through
+/// this pair, so the SIMD path ([`quantize_m_bk`]) has a single oracle
+/// to match.
+pub fn quantize_m(m: &MatF32) -> (MatI8, f32) {
+    quantize_m_bk(m, Backend::Scalar)
+}
+
+/// [`quantize_m`] with the elementwise sweep dispatched to an explicit
+/// micro-kernel backend — bit-identical on every backend (see the
+/// `tensor::simd` contract; pinned by `tests/simd_kernels.rs`).
+pub fn quantize_m_bk(m: &MatF32, bk: Backend) -> (MatI8, f32) {
+    let scale = quant_scale(&m.data);
+    let mut q = MatI8::zeros(m.rows, m.cols);
+    bk.i8_quantize(&mut q.data, &m.data, scale);
+    (q, scale)
 }
 
 /// Quantize a slice with an externally chosen scale.
@@ -47,6 +62,12 @@ pub fn quantize_with(x: &[f32], scale: f32, out: &mut [i8]) {
     for (o, &v) in out.iter_mut().zip(x) {
         *o = quantize_one(v, scale);
     }
+}
+
+/// [`quantize_with`] on an explicit micro-kernel backend (bit-identical
+/// to the scalar loop on every backend).
+pub fn quantize_with_bk(x: &[f32], scale: f32, out: &mut [i8], bk: Backend) {
+    bk.i8_quantize(out, x, scale);
 }
 
 /// Exact W8A8 matmul: C_i32[M,N] = A_i8[M,K] @ B_i8[K,N].

@@ -11,6 +11,7 @@
 pub mod ops;
 pub mod simd;
 pub mod tile;
+pub mod tune;
 
 /// Row-major f32 matrix.
 #[derive(Clone, Debug, PartialEq)]

@@ -4,6 +4,7 @@
 //! runtime_integration tests assert that running the AOT artifacts through
 //! PJRT reproduces these (so Rust, JAX and the Pallas kernels agree).
 
+use super::simd::Backend;
 use super::MatF32;
 
 /// C[M,N] = A[M,K] @ B[K,N] (f32).
@@ -93,6 +94,23 @@ pub fn rmsnorm(x: &MatF32, g: &[f32], eps: f32) -> MatF32 {
     out
 }
 
+/// [`rmsnorm`] with the per-element apply dispatched to an explicit
+/// micro-kernel backend. The Σv² row reduction and the rsqrt stay
+/// scalar (sequential rounding order); only the independent
+/// `v * inv * g` lanes vectorize, so every backend is bit-identical to
+/// [`rmsnorm`] (pinned by `tests/simd_kernels.rs`).
+pub fn rmsnorm_bk(x: &MatF32, g: &[f32], eps: f32, bk: Backend) -> MatF32 {
+    assert_eq!(x.cols, g.len());
+    let mut out = MatF32::zeros(x.rows, x.cols);
+    for r in 0..x.rows {
+        let row = x.row(r);
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / x.cols as f32;
+        let inv = 1.0 / (ms + eps).sqrt();
+        bk.f32_rms_apply(out.row_mut(r), row, g, inv);
+    }
+    out
+}
+
 /// Llama-style RoPE (half-rotation pairing), matching `ref.rope_ref`.
 /// x: [T, dh] for one head; pos[t] = absolute position of row t.
 pub fn rope(x: &mut MatF32, pos: &[i32], theta: f32) {
@@ -111,6 +129,35 @@ pub fn rope(x: &mut MatF32, pos: &[i32], theta: f32) {
             row[i] = x1 * cos - x2 * sin;
             row[half + i] = x1 * sin + x2 * cos;
         }
+    }
+}
+
+/// [`rope`] with the pair rotation dispatched to an explicit backend.
+/// The per-pair frequencies and sin/cos stay scalar per element (the
+/// transcendentals have no bit-exactness contract across vector math
+/// libraries, so they never vectorize — see DESIGN.md); only the
+/// independent `(x1, x2)` rotations go wide. The frequency table is
+/// hoisted out of the row loop — it does not depend on `t`, so the
+/// hoisted values are the exact f32s the oracle recomputes per row —
+/// making every backend bit-identical to [`rope`] (proptest-pinned).
+pub fn rope_bk(x: &mut MatF32, pos: &[i32], theta: f32, bk: Backend) {
+    let dh = x.cols;
+    let half = dh / 2;
+    assert_eq!(pos.len(), x.rows);
+    let freqs: Vec<f32> =
+        (0..half).map(|i| 1.0 / theta.powf(i as f32 / half as f32)).collect();
+    let mut sin = vec![0.0f32; half];
+    let mut cos = vec![0.0f32; half];
+    for t in 0..x.rows {
+        let p = pos[t] as f32;
+        for i in 0..half {
+            let (s, c) = (p * freqs[i]).sin_cos();
+            sin[i] = s;
+            cos[i] = c;
+        }
+        // odd dh: the oracle never touches row[dh-1]; neither does the
+        // 2*half-long slice
+        bk.f32_rope_rotate(&mut x.row_mut(t)[..2 * half], &sin, &cos);
     }
 }
 

@@ -155,6 +155,89 @@ impl Backend {
             _ => f32_axpy_i8_scalar(dst, v, pf, scale),
         }
     }
+
+    // ------------------------------------------------------------------
+    // elementwise primitives (the quantize/rmsnorm/rope/dequant remainder
+    // of the QKV phase; every lane is an independent output element)
+    // ------------------------------------------------------------------
+
+    /// Symmetric i8 quantization: per element
+    /// `(x/scale).round_ties_even().clamp(-127, 127) as i8` — exactly
+    /// [`crate::quant::quantize_one`] (the scalar rung literally calls
+    /// it). Lanes are independent, so the vector forms are bit-identical:
+    /// IEEE division is exactly rounded, `_mm256_round_ps` /
+    /// `vrndnq_f32` round to nearest-even like `f32::round_ties_even`,
+    /// and the clamped value is integral in [-127, 127] so the final
+    /// int conversion is exact.
+    #[inline]
+    pub fn i8_quantize(self, dst: &mut [i8], x: &[f32], scale: f32) {
+        debug_assert_eq!(dst.len(), x.len());
+        match self {
+            Backend::Scalar => i8_quantize_scalar(dst, x, scale),
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 if avx2_available() => unsafe { i8_quantize_avx2(dst, x, scale) },
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => unsafe { i8_quantize_neon(dst, x, scale) },
+            _ => i8_quantize_scalar(dst, x, scale),
+        }
+    }
+
+    /// RMSNorm per-element apply: `dst[j] = (x[j] * inv) * g[j]` — two
+    /// multiplies rounding left-to-right, exactly the `tensor::ops`
+    /// oracle's sequence. The sum-of-squares reduction and the rsqrt
+    /// deliberately stay with the caller (a sequential reduction; lane
+    /// reordering would change the rounding order).
+    #[inline]
+    pub fn f32_rms_apply(self, dst: &mut [f32], x: &[f32], g: &[f32], inv: f32) {
+        debug_assert_eq!(dst.len(), x.len());
+        debug_assert_eq!(dst.len(), g.len());
+        match self {
+            Backend::Scalar => f32_rms_apply_scalar(dst, x, g, inv),
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 if avx2_available() => unsafe { f32_rms_apply_avx2(dst, x, g, inv) },
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => unsafe { f32_rms_apply_neon(dst, x, g, inv) },
+            _ => f32_rms_apply_scalar(dst, x, g, inv),
+        }
+    }
+
+    /// Half-rotation RoPE apply for one row. Given per-pair `sin`/`cos`
+    /// tables (computed scalar by the caller — transcendentals carry no
+    /// cross-library bit contract, so they never vectorize), rotates the
+    /// independent pairs `(row[i], row[half+i])`:
+    /// `row[i] = x1*cos - x2*sin`, `row[half+i] = x1*sin + x2*cos`.
+    /// Both products round individually, then one add/sub — the oracle's
+    /// exact sequence (never an FMA).
+    #[inline]
+    pub fn f32_rope_rotate(self, row: &mut [f32], sin: &[f32], cos: &[f32]) {
+        debug_assert_eq!(sin.len(), cos.len());
+        debug_assert_eq!(row.len(), 2 * sin.len());
+        match self {
+            Backend::Scalar => f32_rope_rotate_scalar(row, sin, cos),
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 if avx2_available() => unsafe { f32_rope_rotate_avx2(row, sin, cos) },
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => unsafe { f32_rope_rotate_neon(row, sin, cos) },
+            _ => f32_rope_rotate_scalar(row, sin, cos),
+        }
+    }
+
+    /// W8A8 dequantization of an i32 accumulator: `dst[j] = (acc[j] as
+    /// f32) * s`. The int→f32 conversion rounds to nearest-even in both
+    /// the scalar cast and `_mm256_cvtepi32_ps`/`vcvtq_f32_s32`, then one
+    /// multiply per independent lane — bit-identical at any magnitude.
+    #[inline]
+    pub fn f32_deq_scale(self, dst: &mut [f32], acc: &[i32], s: f32) {
+        debug_assert_eq!(dst.len(), acc.len());
+        match self {
+            Backend::Scalar => f32_deq_scale_scalar(dst, acc, s),
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 if avx2_available() => unsafe { f32_deq_scale_avx2(dst, acc, s) },
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => unsafe { f32_deq_scale_neon(dst, acc, s) },
+            _ => f32_deq_scale_scalar(dst, acc, s),
+        }
+    }
 }
 
 /// Best vector backend the host supports; `Scalar` when there is none.
@@ -239,6 +322,36 @@ fn f32_axpy_scalar(dst: &mut [f32], x: &[f32], p: f32) {
 fn f32_axpy_i8_scalar(dst: &mut [f32], v: &[i8], pf: i32, scale: f32) {
     for (o, &vv) in dst.iter_mut().zip(v) {
         *o += (pf * vv as i32) as f32 * scale;
+    }
+}
+
+fn i8_quantize_scalar(dst: &mut [i8], x: &[f32], scale: f32) {
+    for (o, &v) in dst.iter_mut().zip(x) {
+        // the quant-module oracle IS the scalar rung
+        *o = crate::quant::quantize_one(v, scale);
+    }
+}
+
+fn f32_rms_apply_scalar(dst: &mut [f32], x: &[f32], g: &[f32], inv: f32) {
+    for (o, (&v, &gv)) in dst.iter_mut().zip(x.iter().zip(g)) {
+        *o = v * inv * gv;
+    }
+}
+
+fn f32_rope_rotate_scalar(row: &mut [f32], sin: &[f32], cos: &[f32]) {
+    let half = sin.len();
+    let (a, b) = row.split_at_mut(half);
+    for i in 0..half {
+        let x1 = a[i];
+        let x2 = b[i];
+        a[i] = x1 * cos[i] - x2 * sin[i];
+        b[i] = x1 * sin[i] + x2 * cos[i];
+    }
+}
+
+fn f32_deq_scale_scalar(dst: &mut [f32], acc: &[i32], s: f32) {
+    for (o, &v) in dst.iter_mut().zip(acc) {
+        *o = v as f32 * s;
     }
 }
 
@@ -362,6 +475,109 @@ unsafe fn f32_axpy_i8_avx2(dst: &mut [f32], v: &[i8], pf: i32, scale: f32) {
     }
 }
 
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn i8_quantize_avx2(dst: &mut [i8], x: &[f32], scale: f32) {
+    use core::arch::x86_64::*;
+    let n = dst.len();
+    let vs = _mm256_set1_ps(scale);
+    let lo = _mm256_set1_ps(-127.0);
+    let hi = _mm256_set1_ps(127.0);
+    let mut i = 0usize;
+    let mut tmp = [0i32; 8];
+    while i + 8 <= n {
+        let v = _mm256_loadu_ps(x.as_ptr().add(i));
+        // x/scale: IEEE division is exactly rounded — same bits as scalar
+        let q = _mm256_div_ps(v, vs);
+        // nearest-even == f32::round_ties_even
+        let r = _mm256_round_ps::<{ _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC }>(q);
+        let c = _mm256_min_ps(_mm256_max_ps(r, lo), hi);
+        // NaN lanes (max/min pass NaN through undefined here): force to
+        // 0.0 so they narrow like the scalar `NaN as i8 == 0`
+        let nan = _mm256_cmp_ps::<_CMP_UNORD_Q>(r, r);
+        let c = _mm256_andnot_ps(nan, c);
+        // the clamped value is integral in [-127, 127]: cvt is exact
+        let iv = _mm256_cvtps_epi32(c);
+        _mm256_storeu_si256(tmp.as_mut_ptr() as *mut __m256i, iv);
+        for (k, &t) in tmp.iter().enumerate() {
+            *dst.get_unchecked_mut(i + k) = t as i8;
+        }
+        i += 8;
+    }
+    while i < n {
+        *dst.get_unchecked_mut(i) = crate::quant::quantize_one(*x.get_unchecked(i), scale);
+        i += 1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn f32_rms_apply_avx2(dst: &mut [f32], x: &[f32], g: &[f32], inv: f32) {
+    use core::arch::x86_64::*;
+    let n = dst.len();
+    let d = dst.as_mut_ptr();
+    let vi = _mm256_set1_ps(inv);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+        let gv = _mm256_loadu_ps(g.as_ptr().add(i));
+        // (x * inv) * g — two roundings left-to-right, no FMA
+        _mm256_storeu_ps(d.add(i), _mm256_mul_ps(_mm256_mul_ps(xv, vi), gv));
+        i += 8;
+    }
+    while i < n {
+        *d.add(i) = *x.get_unchecked(i) * inv * *g.get_unchecked(i);
+        i += 1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn f32_rope_rotate_avx2(row: &mut [f32], sin: &[f32], cos: &[f32]) {
+    use core::arch::x86_64::*;
+    let half = sin.len();
+    let a = row.as_mut_ptr();
+    let b = a.add(half);
+    let mut i = 0usize;
+    while i + 8 <= half {
+        let x1 = _mm256_loadu_ps(a.add(i));
+        let x2 = _mm256_loadu_ps(b.add(i));
+        let c = _mm256_loadu_ps(cos.as_ptr().add(i));
+        let s = _mm256_loadu_ps(sin.as_ptr().add(i));
+        // mul, mul, then one sub/add — NOT _mm256_fmsub/fmadd_ps
+        _mm256_storeu_ps(a.add(i), _mm256_sub_ps(_mm256_mul_ps(x1, c), _mm256_mul_ps(x2, s)));
+        _mm256_storeu_ps(b.add(i), _mm256_add_ps(_mm256_mul_ps(x1, s), _mm256_mul_ps(x2, c)));
+        i += 8;
+    }
+    while i < half {
+        let x1 = *a.add(i);
+        let x2 = *b.add(i);
+        *a.add(i) = x1 * *cos.get_unchecked(i) - x2 * *sin.get_unchecked(i);
+        *b.add(i) = x1 * *sin.get_unchecked(i) + x2 * *cos.get_unchecked(i);
+        i += 1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn f32_deq_scale_avx2(dst: &mut [f32], acc: &[i32], s: f32) {
+    use core::arch::x86_64::*;
+    let n = dst.len();
+    let d = dst.as_mut_ptr();
+    let vs = _mm256_set1_ps(s);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let av = _mm256_loadu_si256(acc.as_ptr().add(i) as *const __m256i);
+        // cvtepi32_ps rounds to nearest-even, exactly like `as f32`
+        _mm256_storeu_ps(d.add(i), _mm256_mul_ps(_mm256_cvtepi32_ps(av), vs));
+        i += 8;
+    }
+    while i < n {
+        *d.add(i) = *acc.get_unchecked(i) as f32 * s;
+        i += 1;
+    }
+}
+
 // ---------------------------------------------------------------------------
 // aarch64 NEON
 // ---------------------------------------------------------------------------
@@ -476,6 +692,103 @@ unsafe fn f32_axpy_i8_neon(dst: &mut [f32], v: &[i8], pf: i32, scale: f32) {
     }
 }
 
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn i8_quantize_neon(dst: &mut [i8], x: &[f32], scale: f32) {
+    use core::arch::aarch64::*;
+    let n = dst.len();
+    let vs = vdupq_n_f32(scale);
+    let lo = vdupq_n_f32(-127.0);
+    let hi = vdupq_n_f32(127.0);
+    let mut i = 0usize;
+    let mut tmp = [0i32; 4];
+    while i + 4 <= n {
+        let v = vld1q_f32(x.as_ptr().add(i));
+        // exactly-rounded divide, then round-to-nearest-even
+        let r = vrndnq_f32(vdivq_f32(v, vs));
+        // fmax/fmin propagate NaN; fcvtzs maps NaN to 0 like `as i8`
+        let c = vminq_f32(vmaxq_f32(r, lo), hi);
+        let iv = vcvtq_s32_f32(c); // integral in range: exact
+        vst1q_s32(tmp.as_mut_ptr(), iv);
+        for (k, &t) in tmp.iter().enumerate() {
+            *dst.get_unchecked_mut(i + k) = t as i8;
+        }
+        i += 4;
+    }
+    while i < n {
+        *dst.get_unchecked_mut(i) = crate::quant::quantize_one(*x.get_unchecked(i), scale);
+        i += 1;
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn f32_rms_apply_neon(dst: &mut [f32], x: &[f32], g: &[f32], inv: f32) {
+    use core::arch::aarch64::*;
+    let n = dst.len();
+    let d = dst.as_mut_ptr();
+    let vi = vdupq_n_f32(inv);
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let xv = vld1q_f32(x.as_ptr().add(i));
+        let gv = vld1q_f32(g.as_ptr().add(i));
+        // (x * inv) * g — two roundings, no fused form
+        vst1q_f32(d.add(i), vmulq_f32(vmulq_f32(xv, vi), gv));
+        i += 4;
+    }
+    while i < n {
+        *d.add(i) = *x.get_unchecked(i) * inv * *g.get_unchecked(i);
+        i += 1;
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn f32_rope_rotate_neon(row: &mut [f32], sin: &[f32], cos: &[f32]) {
+    use core::arch::aarch64::*;
+    let half = sin.len();
+    let a = row.as_mut_ptr();
+    let b = a.add(half);
+    let mut i = 0usize;
+    while i + 4 <= half {
+        let x1 = vld1q_f32(a.add(i));
+        let x2 = vld1q_f32(b.add(i));
+        let c = vld1q_f32(cos.as_ptr().add(i));
+        let s = vld1q_f32(sin.as_ptr().add(i));
+        // vmul then vsub/vadd, NOT vfmaq/vfmsq (see contract)
+        vst1q_f32(a.add(i), vsubq_f32(vmulq_f32(x1, c), vmulq_f32(x2, s)));
+        vst1q_f32(b.add(i), vaddq_f32(vmulq_f32(x1, s), vmulq_f32(x2, c)));
+        i += 4;
+    }
+    while i < half {
+        let x1 = *a.add(i);
+        let x2 = *b.add(i);
+        *a.add(i) = x1 * *cos.get_unchecked(i) - x2 * *sin.get_unchecked(i);
+        *b.add(i) = x1 * *sin.get_unchecked(i) + x2 * *cos.get_unchecked(i);
+        i += 1;
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn f32_deq_scale_neon(dst: &mut [f32], acc: &[i32], s: f32) {
+    use core::arch::aarch64::*;
+    let n = dst.len();
+    let d = dst.as_mut_ptr();
+    let vs = vdupq_n_f32(s);
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let av = vld1q_s32(acc.as_ptr().add(i));
+        // scvtf rounds to nearest-even, exactly like `as f32`
+        vst1q_f32(d.add(i), vmulq_f32(vcvtq_f32_s32(av), vs));
+        i += 4;
+    }
+    while i < n {
+        *d.add(i) = *acc.get_unchecked(i) as f32 * s;
+        i += 1;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -558,6 +871,99 @@ mod tests {
                 let wb: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
                 let gb: Vec<u32> = got.iter().map(|x| x.to_bits()).collect();
                 assert_eq!(gb, wb, "n={n} pf={pf}");
+            }
+        }
+    }
+
+    #[test]
+    fn vector_i8_quantize_bit_identical_to_oracle() {
+        let bk = detect();
+        let mut rng = Prng::new(0x51D5);
+        for n in LENS {
+            let mut x = rand_f32(&mut rng, n);
+            // salt in saturation, tie and denormal-quotient edges
+            for (k, v) in x.iter_mut().enumerate() {
+                match k % 7 {
+                    0 => *v = 1e9,        // saturates high
+                    1 => *v = -1e9,       // saturates low
+                    2 => *v *= 1e-40,     // denormal quotient
+                    3 => *v = 0.5,        // tie -> even (0)
+                    4 => *v = -1.5,       // tie -> even (-2)
+                    _ => {}
+                }
+            }
+            for scale in [1.0f32, 0.013, crate::quant::SCALE_EPS / 127.0] {
+                let mut want = vec![0i8; n];
+                i8_quantize_scalar(&mut want, &x, scale);
+                // the scalar rung IS the quant oracle
+                for (w, &v) in want.iter().zip(&x) {
+                    assert_eq!(*w, crate::quant::quantize_one(v, scale));
+                }
+                let mut got = vec![0i8; n];
+                bk.i8_quantize(&mut got, &x, scale);
+                assert_eq!(got, want, "n={n} scale={scale}");
+            }
+        }
+    }
+
+    #[test]
+    fn vector_f32_rms_apply_bit_identical_to_scalar() {
+        let bk = detect();
+        let mut rng = Prng::new(0x51D6);
+        for n in LENS {
+            let x = rand_f32(&mut rng, n);
+            let g = rand_f32(&mut rng, n);
+            for inv in [1.0f32, 0.037, 1.0e-20, 8.5] {
+                let mut want = vec![0.0f32; n];
+                f32_rms_apply_scalar(&mut want, &x, &g, inv);
+                let mut got = vec![0.0f32; n];
+                bk.f32_rms_apply(&mut got, &x, &g, inv);
+                let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(gb, wb, "n={n} inv={inv}");
+            }
+        }
+    }
+
+    #[test]
+    fn vector_f32_rope_rotate_bit_identical_to_scalar() {
+        let bk = detect();
+        let mut rng = Prng::new(0x51D7);
+        for half in LENS {
+            let row = rand_f32(&mut rng, 2 * half);
+            let angles = rand_f32(&mut rng, half);
+            let sin: Vec<f32> = angles.iter().map(|a| a.sin()).collect();
+            let cos: Vec<f32> = angles.iter().map(|a| a.cos()).collect();
+            let mut want = row.clone();
+            f32_rope_rotate_scalar(&mut want, &sin, &cos);
+            let mut got = row.clone();
+            bk.f32_rope_rotate(&mut got, &sin, &cos);
+            let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+            let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(gb, wb, "half={half}");
+        }
+    }
+
+    #[test]
+    fn vector_f32_deq_scale_bit_identical_to_scalar() {
+        let bk = detect();
+        let mut rng = Prng::new(0x51D8);
+        for n in LENS {
+            // include magnitudes above 2^24 (inexact i32->f32 territory)
+            let acc: Vec<i32> = (0..n)
+                .map(|k| {
+                    let v = rng.below(1 << 30) as i32 - (1 << 29);
+                    if k % 3 == 0 { v } else { v % 100_000 }
+                })
+                .collect();
+            for s in [1.0f32, 6.2e-5, -0.75] {
+                let mut want = vec![0.0f32; n];
+                f32_deq_scale_scalar(&mut want, &acc, s);
+                let mut got = vec![0.0f32; n];
+                bk.f32_deq_scale(&mut got, &acc, s);
+                let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(gb, wb, "n={n} s={s}");
             }
         }
     }

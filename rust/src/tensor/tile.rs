@@ -32,9 +32,10 @@
 //! a warning, falling back to the default). Tile size never changes
 //! results (property-tested) — only cache behavior.
 
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock};
 
 use crate::tensor::simd::{self, Backend};
+use crate::tensor::tune::{self, OpClass, ShapeClass, TuneProfile};
 use crate::tensor::{MatF32, MatI8};
 use crate::util::pool::WorkerPool;
 
@@ -81,7 +82,8 @@ pub fn env_tile() -> usize {
 }
 
 /// Kernel-layer context threaded through the engine phases: the shared
-/// worker pool, the tile configuration and the selected SIMD backend.
+/// worker pool, the tile configuration, the selected SIMD backend and
+/// (when autotuning is on) the per-shape tuning profile.
 #[derive(Clone, Debug)]
 pub struct KernelCtx {
     pub pool: WorkerPool,
@@ -90,13 +92,24 @@ pub struct KernelCtx {
     /// Micro-kernel backend the inner loops dispatch to. Defaults to the
     /// process-wide selection (`FASTP_KERNEL` / ISA detection).
     pub backend: Backend,
+    /// Per-shape (tile, backend) winners from the autotuner
+    /// (`FASTP_AUTOTUNE`); `None` = untuned, one fixed tile/backend for
+    /// every shape. Neither choice can change results (bit-identity
+    /// contract), so tuned runs are bit-identical to untuned runs.
+    pub tune: Option<Arc<TuneProfile>>,
 }
 
 impl KernelCtx {
-    /// The shared constructor core: env-resolved tile edge + backend
-    /// around the given pool (the one place both env overrides land).
+    /// The shared constructor core: env-resolved tile edge, backend and
+    /// autotune profile around the given pool (the one place all three
+    /// env overrides land).
     fn over_pool(pool: WorkerPool) -> KernelCtx {
-        KernelCtx { pool, tile: env_tile(), backend: simd::active() }
+        KernelCtx {
+            pool,
+            tile: env_tile(),
+            backend: simd::active(),
+            tune: tune::active_profile(),
+        }
     }
 
     /// Pool sized by `FASTP_THREADS` (default: available parallelism).
@@ -126,6 +139,40 @@ impl KernelCtx {
         self
     }
 
+    /// This context with an explicit autotune profile (or none),
+    /// overriding the env-resolved `FASTP_AUTOTUNE` selection — used by
+    /// `fastp tune --check` and the tuned-vs-untuned bit-identity tests,
+    /// which need both legs in one process.
+    pub fn with_tune(mut self, tune: Option<Arc<TuneProfile>>) -> KernelCtx {
+        self.tune = tune;
+        self
+    }
+
+    /// Resolve the (tile edge, backend) one kernel shape runs with: the
+    /// tuned per-shape winner when a profile is loaded (misses fall back
+    /// to the ctx-wide defaults), else the defaults. A profile can only
+    /// choose between this ctx's backend and scalar, so a
+    /// `FASTP_KERNEL=scalar` override still pins every kernel scalar.
+    pub fn plan(&self, op: OpClass, m: usize, n: usize, k: usize) -> (usize, Backend) {
+        match &self.tune {
+            Some(p) => p.resolve(&ShapeClass::new(op, m, n, k), self.tile, self.backend),
+            None => (self.tile, self.backend),
+        }
+    }
+
+    /// Label of the autotune source for metrics: `"off"` when untuned,
+    /// the env mode name when the profile came from `FASTP_AUTOTUNE`, or
+    /// `"profile"` for an explicitly injected profile.
+    pub fn tune_label(&self) -> &'static str {
+        match &self.tune {
+            None => "off",
+            Some(_) => match tune::env_mode() {
+                tune::AutotuneMode::Off => "profile",
+                m => m.name(),
+            },
+        }
+    }
+
     pub fn threads(&self) -> usize {
         self.pool.threads()
     }
@@ -139,28 +186,30 @@ impl KernelCtx {
 
     /// Tiled f32 matmul (C = A @ B).
     pub fn matmul(&self, a: &MatF32, b: &MatF32) -> MatF32 {
-        matmul_with_bk(a, b, self.tile, self.backend)
+        let (t, bk) = self.plan(OpClass::MatmulF32, a.rows, b.cols, a.cols);
+        matmul_with_bk(a, b, t, bk)
     }
 
     /// Tiled f32 matmul against a transposed B (C = A @ B^T).
     pub fn matmul_bt(&self, a: &MatF32, b: &MatF32) -> MatF32 {
-        matmul_bt_with_bk(a, b, self.tile, self.backend)
+        let (t, bk) = self.plan(OpClass::MatmulBtF32, a.rows, b.rows, a.cols);
+        matmul_bt_with_bk(a, b, t, bk)
     }
 
     /// Tiled W8A8 matmul, dequantized (C_f32 = (A_i8 @ B_i8) * sa * sb).
     pub fn int8_matmul_deq(&self, a: &MatI8, sa: f32, b: &MatI8, sb: f32) -> MatF32 {
-        let acc = int8_matmul_with_bk(a, b, self.tile, self.backend);
+        let (t, bk) = self.plan(OpClass::Int8Matmul, a.rows, b.cols, a.cols);
+        let acc = int8_matmul_with_bk(a, b, t, bk);
         let s = sa * sb;
-        MatF32 {
-            rows: a.rows,
-            cols: b.cols,
-            data: acc.iter().map(|&v| v as f32 * s).collect(),
-        }
+        let mut data = vec![0.0f32; acc.len()];
+        bk.f32_deq_scale(&mut data, &acc, s);
+        MatF32 { rows: a.rows, cols: b.cols, data }
     }
 
     /// Tiled exact W8A8 score matmul (C_i32 = A_i8 @ B_i8^T).
     pub fn int8_matmul_bt(&self, a: &MatI8, bt: &MatI8) -> Vec<i32> {
-        int8_matmul_bt_with_bk(a, bt, self.tile, self.backend)
+        let (t, bk) = self.plan(OpClass::Int8MatmulBt, a.rows, bt.rows, a.cols);
+        int8_matmul_bt_with_bk(a, bt, t, bk)
     }
 }
 
@@ -570,6 +619,33 @@ mod tests {
         let capped = forced.with_want_cap(2);
         assert_eq!(capped.backend, Backend::Scalar);
         assert_eq!(capped.tile, forced.tile);
+    }
+
+    #[test]
+    fn tuned_ctx_plans_from_profile_and_stays_bit_identical() {
+        let mut prof = TuneProfile::default();
+        let shape = ShapeClass::new(OpClass::Int8Matmul, 6, 5, 20);
+        prof.entries.insert(shape.key(), tune::TuneChoice { tile: 8, vector: false, ns: 1.0 });
+        let untuned = KernelCtx::single_threaded().with_tune(None);
+        let tuned = untuned.clone().with_tune(Some(Arc::new(prof)));
+        // profile hit: tuned tile, vector=false forces scalar
+        assert_eq!(tuned.plan(OpClass::Int8Matmul, 6, 5, 20), (8, Backend::Scalar));
+        // miss: ctx defaults pass through
+        assert_eq!(tuned.plan(OpClass::MatmulF32, 6, 5, 20), (tuned.tile, tuned.backend));
+        assert_eq!(untuned.plan(OpClass::Int8Matmul, 6, 5, 20), (untuned.tile, untuned.backend));
+        // the tuned choice changes nothing but speed
+        let mut rng = Prng::new(11);
+        let qa = randi(&mut rng, 6, 20);
+        let qb = randi(&mut rng, 20, 5);
+        assert_eq!(
+            tuned.int8_matmul_deq(&qa, 0.5, &qb, 0.25),
+            untuned.int8_matmul_deq(&qa, 0.5, &qb, 0.25)
+        );
+        // labels: untuned is always "off"; the injected label depends on
+        // the process env (FASTP_AUTOTUNE may be set on CI legs), so only
+        // pin that it is not "off"
+        assert_eq!(untuned.tune_label(), "off");
+        assert_ne!(tuned.tune_label(), "off");
     }
 
     #[test]

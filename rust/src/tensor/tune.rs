@@ -1,0 +1,717 @@
+//! Shape-keyed kernel autotuner (`FASTP_AUTOTUNE`).
+//!
+//! PR 4's SIMD rungs and the `FASTP_TILE` override made the kernel layer
+//! *configurable*; this module makes it *self-configuring*. An offline
+//! or startup sweep times every tile-edge candidate × available backend
+//! for each kernel **shape class** a model actually hits (the same
+//! sweep-script shape as the chunk-size benchmark in SNIPPETS.md
+//! Snippet 1, folded into the binary), and persists the winners to a
+//! JSON profile. `KernelCtx::plan` then resolves a per-shape
+//! `(tile, backend)` choice from the loaded profile instead of one fixed
+//! constant for every shape.
+//!
+//! **Why this can never change results:** tile size is
+//! property-tested to not change any kernel output
+//! (`tile_size_does_not_change_results`), and every backend is
+//! bit-identical to scalar by the `tensor::simd` contract — so a tuned
+//! run is bit-identical to an untuned run *by construction*. The engine
+//! test `tuned_profile_prefill_bit_identical_to_untuned` and the CI
+//! `FASTP_AUTOTUNE=startup` leg pin it anyway.
+//!
+//! Modes (validated once per process, warn-and-default like
+//! `FASTP_TILE` / `FASTP_KERNEL`):
+//!
+//!  * `off` (default) — fixed `FASTP_TILE` / `FASTP_KERNEL` behavior.
+//!  * `startup` — sweep a small default shape grid at first kernel-ctx
+//!    creation (sub-second budget) and, when `FASTP_TUNE_PROFILE` is
+//!    set, persist the profile there (atomic temp-file + rename, so
+//!    concurrent processes never expose a torn file).
+//!  * `file` — load a previously persisted profile from
+//!    `FASTP_TUNE_PROFILE` (unreadable/invalid profiles warn and
+//!    disable tuning rather than aborting the process).
+//!
+//! The profile also carries measured per-phase job costs (`phase_us`)
+//! that warm-start `util::pool::AdaptiveHints`, so adaptive lease
+//! sizing begins from swept kernel timings instead of waiting for the
+//! first live EWMA observation.
+//!
+//! The profile is a numeric-only JSON document so it parses with the
+//! same flattening reader the perf-trend gate uses
+//! (`util::trend::parse_metrics`) — no new JSON machinery.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, OnceLock};
+use std::time::{Duration, Instant};
+
+use crate::config::{ModelConfig, BLOCK};
+use crate::tensor::simd::{self, Backend};
+use crate::tensor::tile;
+use crate::tensor::{MatF32, MatI8};
+use crate::util::bench::black_box;
+use crate::util::pool::{AdaptiveHints, HINT_EWMA_ALPHA, HINT_PHASES};
+use crate::util::prng::Prng;
+use crate::util::trend;
+
+/// Environment variable selecting the autotune mode:
+/// `off` | `startup` | `file`. Unset/empty = `off`.
+pub const AUTOTUNE_ENV: &str = "FASTP_AUTOTUNE";
+
+/// Environment variable naming the profile path: written by `startup`
+/// (and `fastp tune`), read by `file`.
+pub const PROFILE_ENV: &str = "FASTP_TUNE_PROFILE";
+
+/// Tile-edge candidates swept per shape class — all valid `FASTP_TILE`
+/// values (positive multiples of 8), spanning L1-resident to
+/// L2-resident operand panels.
+pub const TILE_CANDIDATES: [usize; 4] = [32, 64, 128, 256];
+
+/// Per-candidate measurement budget of the `startup` sweep. Kept small:
+/// every process entering `FASTP_AUTOTUNE=startup` pays the sweep once
+/// (lazily, at first kernel-ctx creation).
+pub const STARTUP_BUDGET_MS: f64 = 2.0;
+
+/// Rows actually timed per measurement (shape classes bucket the row
+/// count up to 8192, but tile/backend preference is driven by the k×n
+/// operand footprint — m only scales the row loop — so the sweep times
+/// a row-capped proxy to keep startup sub-second).
+const MEASURE_M_CAP: usize = 32;
+
+// ---------------------------------------------------------------------------
+// mode (validated env parse, PR 4 convention)
+// ---------------------------------------------------------------------------
+
+/// Autotune mode — see the module doc.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AutotuneMode {
+    #[default]
+    Off,
+    Startup,
+    File,
+}
+
+impl AutotuneMode {
+    /// Stable lowercase name for banners / metrics.
+    pub fn name(self) -> &'static str {
+        match self {
+            AutotuneMode::Off => "off",
+            AutotuneMode::Startup => "startup",
+            AutotuneMode::File => "file",
+        }
+    }
+}
+
+/// Parse a `FASTP_AUTOTUNE` value (pure — unit-testable without touching
+/// the process environment). Unknown modes are rejected, not guessed.
+pub fn parse_autotune_mode(raw: &str) -> Result<AutotuneMode, String> {
+    match raw.trim().to_ascii_lowercase().as_str() {
+        "" | "off" => Ok(AutotuneMode::Off),
+        "startup" => Ok(AutotuneMode::Startup),
+        "file" => Ok(AutotuneMode::File),
+        other => Err(format!("{AUTOTUNE_ENV}={other:?} (expected off|startup|file)")),
+    }
+}
+
+/// The single `FASTP_AUTOTUNE` parse point, resolved once per process.
+/// Invalid values warn and fall back to `off` — same
+/// validate-warn-default convention as `FASTP_TILE` and `FASTP_KERNEL`.
+pub fn env_mode() -> AutotuneMode {
+    static MODE: OnceLock<AutotuneMode> = OnceLock::new();
+    *MODE.get_or_init(|| match std::env::var(AUTOTUNE_ENV) {
+        Err(_) => AutotuneMode::Off,
+        Ok(raw) => match parse_autotune_mode(&raw) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("warning: ignoring invalid {e}; autotuning off");
+                AutotuneMode::Off
+            }
+        },
+    })
+}
+
+fn env_profile_path() -> Option<String> {
+    match std::env::var(PROFILE_ENV) {
+        Ok(p) if !p.trim().is_empty() => Some(p),
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shape classes
+// ---------------------------------------------------------------------------
+
+/// Kernel families the tuner keys on — one per `KernelCtx` kernel entry
+/// point (each has its own memory-access pattern, so its own winner).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum OpClass {
+    /// `matmul`: f32 A[m,k] @ B[k,n].
+    MatmulF32,
+    /// `matmul_bt`: f32 A[m,k] @ B^T with B [n,k].
+    MatmulBtF32,
+    /// `int8_matmul_deq`: W8A8 A[m,k] @ B[k,n] (+ dequant).
+    Int8Matmul,
+    /// `int8_matmul_bt`: W8A8 score-tile shape A[m,k] @ B^T[n,k].
+    Int8MatmulBt,
+}
+
+impl OpClass {
+    /// Stable key prefix (no '.' — the profile parser flattens on dots).
+    pub fn tag(self) -> &'static str {
+        match self {
+            OpClass::MatmulF32 => "mmf32",
+            OpClass::MatmulBtF32 => "mmbtf32",
+            OpClass::Int8Matmul => "i8mm",
+            OpClass::Int8MatmulBt => "i8mmbt",
+        }
+    }
+}
+
+/// Bucket a row count to its shape class: next power of two, clamped to
+/// [8, 8192]. `n` and `k` are model dimensions — a small fixed set per
+/// config — and stay exact; `m` is the token/row count and varies per
+/// request/chunk, so it buckets.
+pub fn bucket_m(m: usize) -> usize {
+    m.clamp(8, 8192).next_power_of_two()
+}
+
+/// One kernel shape class: op family + bucketed m + exact n, k.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShapeClass {
+    pub op: OpClass,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl ShapeClass {
+    pub fn new(op: OpClass, m: usize, n: usize, k: usize) -> ShapeClass {
+        ShapeClass { op, m: bucket_m(m), n, k }
+    }
+
+    /// Stable profile key, e.g. `i8mm:m128:n768:k768` (':'-separated so
+    /// the dotted-key profile parser never splits inside it).
+    pub fn key(&self) -> String {
+        format!("{}:m{}:n{}:k{}", self.op.tag(), self.m, self.n, self.k)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// profile
+// ---------------------------------------------------------------------------
+
+/// One tuned choice. `vector` maps to the *caller's* backend at resolve
+/// time (true = "use the ctx backend", false = force scalar), so a
+/// `FASTP_KERNEL=scalar` override is never silently undone by a profile
+/// swept with a vector ISA.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TuneChoice {
+    pub tile: usize,
+    pub vector: bool,
+    /// Best measured time (ns) for this class — informational.
+    pub ns: f64,
+}
+
+/// Phase labels of the `phase_us` hint seeds, in
+/// `coordinator::engine::phase_hint_slot` order.
+pub const PHASE_KEYS: [&str; HINT_PHASES] = ["qkv", "index_gen", "sau", "ffn_logits"];
+
+/// A persisted autotune profile: per-shape-class winners plus measured
+/// per-phase job-cost seeds for `AdaptiveHints` (0.0 = no seed).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TuneProfile {
+    pub entries: BTreeMap<String, TuneChoice>,
+    pub phase_us: [f64; HINT_PHASES],
+}
+
+impl TuneProfile {
+    /// Resolve the (tile, backend) to run `shape` with: profile misses
+    /// fall back to the caller's defaults; hits take the tuned tile and
+    /// map `vector` onto the caller's backend (never upgrading a scalar
+    /// caller to a vector ISA).
+    pub fn resolve(&self, shape: &ShapeClass, default_tile: usize, default_bk: Backend) -> (usize, Backend) {
+        match self.entries.get(&shape.key()) {
+            None => (default_tile, default_bk),
+            Some(c) => (c.tile, if c.vector { default_bk } else { Backend::Scalar }),
+        }
+    }
+
+    /// Serialize as numeric-only JSON (see the module doc for why).
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n  \"version\": 1,\n  \"phase_us\": {");
+        for (i, k) in PHASE_KEYS.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!("\"{}\": {:.3}", k, self.phase_us[i]));
+        }
+        s.push_str("},\n  \"entries\": {\n");
+        let mut first = true;
+        for (key, c) in &self.entries {
+            if !first {
+                s.push_str(",\n");
+            }
+            first = false;
+            s.push_str(&format!(
+                "    \"{}\": {{\"tile\": {}, \"vector\": {}, \"ns\": {:.1}}}",
+                key,
+                c.tile,
+                i32::from(c.vector),
+                c.ns
+            ));
+        }
+        s.push_str("\n  }\n}\n");
+        s
+    }
+
+    /// Parse a profile (strict: unknown fields, bad versions and invalid
+    /// tile values are errors — a corrupt profile should be loud, not
+    /// silently half-applied).
+    pub fn parse(json: &str) -> Result<TuneProfile, String> {
+        let flat = trend::parse_metrics(json)?;
+        let mut prof = TuneProfile::default();
+        let mut tiles: BTreeMap<String, usize> = BTreeMap::new();
+        let mut vecs: BTreeMap<String, bool> = BTreeMap::new();
+        let mut nss: BTreeMap<String, f64> = BTreeMap::new();
+        let mut version = None;
+        for (k, v) in &flat {
+            if k == "version" {
+                version = Some(*v);
+                continue;
+            }
+            if let Some(rest) = k.strip_prefix("phase_us.") {
+                match PHASE_KEYS.iter().position(|p| p == &rest) {
+                    Some(i) => prof.phase_us[i] = *v,
+                    None => return Err(format!("unknown phase key {rest:?}")),
+                }
+                continue;
+            }
+            if let Some(rest) = k.strip_prefix("entries.") {
+                if let Some(key) = rest.strip_suffix(".tile") {
+                    let t = *v as usize;
+                    if *v <= 0.0 || t % 8 != 0 {
+                        // same validity rule as FASTP_TILE
+                        return Err(format!("entry {key:?}: tile {v} is not a positive multiple of 8"));
+                    }
+                    tiles.insert(key.to_string(), t);
+                } else if let Some(key) = rest.strip_suffix(".vector") {
+                    vecs.insert(key.to_string(), *v != 0.0);
+                } else if let Some(key) = rest.strip_suffix(".ns") {
+                    nss.insert(key.to_string(), *v);
+                } else {
+                    return Err(format!("unknown entry field {rest:?}"));
+                }
+                continue;
+            }
+            return Err(format!("unknown profile field {k:?}"));
+        }
+        if version != Some(1.0) {
+            return Err(format!("unsupported tune-profile version {version:?} (expected 1)"));
+        }
+        for (key, tile) in tiles {
+            let vector =
+                *vecs.get(&key).ok_or_else(|| format!("entry {key:?} missing vector flag"))?;
+            let ns = nss.get(&key).copied().unwrap_or(0.0);
+            prof.entries.insert(key, TuneChoice { tile, vector, ns });
+        }
+        Ok(prof)
+    }
+
+    /// Persist atomically (temp file + rename), so concurrent startup
+    /// sweeps in sibling processes never expose a torn profile.
+    pub fn save(&self, path: &str) -> Result<(), String> {
+        let tmp = format!("{path}.tmp.{}", std::process::id());
+        std::fs::write(&tmp, self.to_json()).map_err(|e| format!("writing {tmp}: {e}"))?;
+        std::fs::rename(&tmp, path).map_err(|e| format!("renaming {tmp} -> {path}: {e}"))
+    }
+
+    pub fn load(path: &str) -> Result<TuneProfile, String> {
+        let raw = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+        TuneProfile::parse(&raw).map_err(|e| format!("{path}: {e}"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// sweep
+// ---------------------------------------------------------------------------
+
+fn splat_f32(rng: &mut Prng, rows: usize, cols: usize) -> MatF32 {
+    MatF32 { rows, cols, data: (0..rows * cols).map(|_| rng.normal()).collect() }
+}
+
+fn splat_i8(rng: &mut Prng, rows: usize, cols: usize) -> MatI8 {
+    MatI8 { rows, cols, data: (0..rows * cols).map(|_| rng.i8_sym()).collect() }
+}
+
+/// Min-of-iterations wall time (ns) of one candidate. Operands are
+/// seeded deterministically from the shape key; at least one timed run
+/// always happens, more only within `budget_ms` (so slow scalar
+/// candidates on big shapes cost one run, fast ones get stable minima).
+fn measure(shape: &ShapeClass, tile: usize, bk: Backend, budget_ms: f64) -> f64 {
+    let mm = shape.m.min(MEASURE_M_CAP);
+    let mut rng = Prng::new(0xA11C_E5EEu64 ^ shape.key().len() as u64);
+    let budget = Duration::from_micros((budget_ms * 1000.0) as u64);
+    let mut best = f64::INFINITY;
+    let mut iters = 0usize;
+    let start = Instant::now();
+    match shape.op {
+        OpClass::MatmulF32 => {
+            let a = splat_f32(&mut rng, mm, shape.k);
+            let b = splat_f32(&mut rng, shape.k, shape.n);
+            while iters < 1 || (start.elapsed() < budget && iters < 8) {
+                let t = Instant::now();
+                black_box(tile::matmul_with_bk(&a, &b, tile, bk));
+                best = best.min(t.elapsed().as_nanos() as f64);
+                iters += 1;
+            }
+        }
+        OpClass::MatmulBtF32 => {
+            let a = splat_f32(&mut rng, mm, shape.k);
+            let bt = splat_f32(&mut rng, shape.n, shape.k);
+            while iters < 1 || (start.elapsed() < budget && iters < 8) {
+                let t = Instant::now();
+                black_box(tile::matmul_bt_with_bk(&a, &bt, tile, bk));
+                best = best.min(t.elapsed().as_nanos() as f64);
+                iters += 1;
+            }
+        }
+        OpClass::Int8Matmul => {
+            let a = splat_i8(&mut rng, mm, shape.k);
+            let b = splat_i8(&mut rng, shape.k, shape.n);
+            while iters < 1 || (start.elapsed() < budget && iters < 8) {
+                let t = Instant::now();
+                black_box(tile::int8_matmul_with_bk(&a, &b, tile, bk));
+                best = best.min(t.elapsed().as_nanos() as f64);
+                iters += 1;
+            }
+        }
+        OpClass::Int8MatmulBt => {
+            let a = splat_i8(&mut rng, mm, shape.k);
+            let bt = splat_i8(&mut rng, shape.n, shape.k);
+            while iters < 1 || (start.elapsed() < budget && iters < 8) {
+                let t = Instant::now();
+                black_box(tile::int8_matmul_bt_with_bk(&a, &bt, tile, bk));
+                best = best.min(t.elapsed().as_nanos() as f64);
+                iters += 1;
+            }
+        }
+    }
+    best
+}
+
+/// Sweep tile × backend candidates for each shape class and return the
+/// winner table (duplicate keys are swept once). The phase seeds are
+/// derived from the winning kernel times afterwards.
+pub fn sweep(shapes: &[ShapeClass], budget_ms_per_candidate: f64) -> TuneProfile {
+    let mut prof = TuneProfile::default();
+    let detected = simd::detect();
+    let vector_rungs: &[bool] = if detected.is_vector() { &[false, true] } else { &[false] };
+    for shape in shapes {
+        let key = shape.key();
+        if prof.entries.contains_key(&key) {
+            continue;
+        }
+        let mut best: Option<TuneChoice> = None;
+        for &tile in &TILE_CANDIDATES {
+            for &vector in vector_rungs {
+                let bk = if vector { detected } else { Backend::Scalar };
+                let ns = measure(shape, tile, bk, budget_ms_per_candidate);
+                if best.is_none_or(|b| ns < b.ns) {
+                    best = Some(TuneChoice { tile, vector, ns });
+                }
+            }
+        }
+        if let Some(c) = best {
+            prof.entries.insert(key, c);
+        }
+    }
+    prof.phase_us = phase_seeds(&prof);
+    prof
+}
+
+/// Mean winning time (us) over entries of one op family; 0.0 when none.
+fn class_best_us(prof: &TuneProfile, op: OpClass) -> f64 {
+    let prefix = format!("{}:", op.tag());
+    let (mut sum, mut n) = (0.0f64, 0usize);
+    for (k, c) in &prof.entries {
+        if k.starts_with(&prefix) && c.ns > 0.0 && c.ns.is_finite() {
+            sum += c.ns / 1000.0;
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        sum / n as f64
+    }
+}
+
+/// Per-phase job-cost seeds from the swept winners. Each phase's
+/// dominant kernel stands in for its job cost: QKV and FFN jobs are
+/// W8A8 projections, index-gen streams score-tile products, and an SAU
+/// job is a score tile plus the P@V accumulate (≈ 2× the tile).
+/// `AdaptiveHints::want` only uses the *relative* magnitudes, so the
+/// proxy only has to rank the phases, not price them absolutely.
+fn phase_seeds(prof: &TuneProfile) -> [f64; HINT_PHASES] {
+    let proj = class_best_us(prof, OpClass::Int8Matmul);
+    let score = class_best_us(prof, OpClass::Int8MatmulBt);
+    [proj, score, 2.0 * score, proj]
+}
+
+/// The shape grid the `startup` mode sweeps: per-chunk kernel shapes of
+/// the two functional presets (tiny d=256, small100m d=768) plus the
+/// BLOCK×BLOCK score tile. Lookup misses (other models/dims) fall back
+/// to the ctx defaults, so the grid only has to cover the common case.
+pub fn default_shapes() -> Vec<ShapeClass> {
+    let mut v = Vec::new();
+    for &(d, dff) in &[(256usize, 768usize), (768, 2048)] {
+        v.push(ShapeClass::new(OpClass::Int8Matmul, BLOCK, d, d));
+        v.push(ShapeClass::new(OpClass::Int8Matmul, BLOCK, dff, d));
+        v.push(ShapeClass::new(OpClass::Int8Matmul, BLOCK, d, dff));
+    }
+    v.push(ShapeClass::new(OpClass::Int8MatmulBt, BLOCK, BLOCK, 64));
+    v
+}
+
+/// Every kernel shape class one prefill of `cfg` hits: the per-chunk
+/// QKV/output/FFN/logits projections (m = BLOCK rows per chunk) and the
+/// BLOCK×BLOCK score tile. `fastp tune` sweeps exactly these.
+pub fn model_shapes(cfg: &ModelConfig) -> Vec<ShapeClass> {
+    let d = cfg.d_model;
+    vec![
+        ShapeClass::new(OpClass::Int8Matmul, BLOCK, cfg.q_dim(), d), // wq
+        ShapeClass::new(OpClass::Int8Matmul, BLOCK, cfg.kv_dim(), d), // wk/wv
+        ShapeClass::new(OpClass::Int8Matmul, BLOCK, d, cfg.q_dim()), // wo
+        ShapeClass::new(OpClass::Int8Matmul, BLOCK, cfg.d_ffn, d),   // wg/wu
+        ShapeClass::new(OpClass::Int8Matmul, BLOCK, d, cfg.d_ffn),   // wd
+        ShapeClass::new(OpClass::Int8Matmul, BLOCK, cfg.vocab, d),   // lm head
+        ShapeClass::new(OpClass::Int8MatmulBt, BLOCK, BLOCK, cfg.d_head), // score tile
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// process-wide activation + hint seeding
+// ---------------------------------------------------------------------------
+
+static ACTIVE_PROFILE: OnceLock<Option<Arc<TuneProfile>>> = OnceLock::new();
+
+/// The process-wide autotune profile, resolved once from the env (see
+/// the module doc for the three modes). `KernelCtx` constructors call
+/// this; tests and `fastp tune --check` inject explicit profiles via
+/// `KernelCtx::with_tune` / `EngineConfig::tune` instead.
+pub fn active_profile() -> Option<Arc<TuneProfile>> {
+    ACTIVE_PROFILE
+        .get_or_init(|| match env_mode() {
+            AutotuneMode::Off => None,
+            AutotuneMode::File => {
+                let Some(path) = env_profile_path() else {
+                    eprintln!(
+                        "warning: {AUTOTUNE_ENV}=file but {PROFILE_ENV} is unset; autotuning off"
+                    );
+                    return None;
+                };
+                match TuneProfile::load(&path) {
+                    Ok(p) => Some(Arc::new(p)),
+                    Err(e) => {
+                        eprintln!("warning: ignoring tune profile: {e}; autotuning off");
+                        None
+                    }
+                }
+            }
+            AutotuneMode::Startup => {
+                let prof = sweep(&default_shapes(), STARTUP_BUDGET_MS);
+                if let Some(path) = env_profile_path() {
+                    if let Err(e) = prof.save(&path) {
+                        eprintln!("warning: could not persist tune profile: {e}");
+                    }
+                }
+                Some(Arc::new(prof))
+            }
+        })
+        .clone()
+}
+
+/// Warm-start `hints` from a profile's measured phase costs (first
+/// observation seeds the EWMA directly, so this is exactly "start warm
+/// instead of waiting for the first live job").
+pub fn seed_hints(hints: &AdaptiveHints, prof: &TuneProfile) {
+    for (slot, &us) in prof.phase_us.iter().enumerate() {
+        if us > 0.0 {
+            hints.observe(slot, us);
+        }
+    }
+}
+
+/// Fresh hints pre-seeded from `prof`'s phase costs; `None` when the
+/// profile carries no seeds (then the engine keeps its static split
+/// until a server installs shared hints).
+pub fn warm_hints(prof: Option<&Arc<TuneProfile>>) -> Option<Arc<AdaptiveHints>> {
+    let prof = prof?;
+    if prof.phase_us.iter().all(|&u| u <= 0.0) {
+        return None;
+    }
+    let hints = AdaptiveHints::new(HINT_EWMA_ALPHA);
+    seed_hints(&hints, prof);
+    Some(hints)
+}
+
+/// How an `EngineConfig` selects its autotune profile. `Env` follows
+/// the process environment; `Off` forces untuned (the baseline leg of
+/// `fastp tune --check`, which must ignore `FASTP_AUTOTUNE=startup`);
+/// `Profile` injects an explicit table (tests, `--check`'s tuned leg).
+#[derive(Clone, Debug, Default)]
+pub enum TuneOverride {
+    #[default]
+    Env,
+    Off,
+    Profile(Arc<TuneProfile>),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parse_accepts_known_rejects_unknown() {
+        assert_eq!(parse_autotune_mode(""), Ok(AutotuneMode::Off));
+        assert_eq!(parse_autotune_mode("off"), Ok(AutotuneMode::Off));
+        assert_eq!(parse_autotune_mode(" Startup "), Ok(AutotuneMode::Startup));
+        assert_eq!(parse_autotune_mode("FILE"), Ok(AutotuneMode::File));
+        assert!(parse_autotune_mode("auto").is_err());
+        assert!(parse_autotune_mode("on").is_err());
+    }
+
+    #[test]
+    fn bucket_m_rounds_up_and_clamps() {
+        assert_eq!(bucket_m(0), 8);
+        assert_eq!(bucket_m(1), 8);
+        assert_eq!(bucket_m(9), 16);
+        assert_eq!(bucket_m(128), 128);
+        assert_eq!(bucket_m(129), 256);
+        assert_eq!(bucket_m(8192), 8192);
+        assert_eq!(bucket_m(1 << 20), 8192);
+    }
+
+    #[test]
+    fn shape_keys_are_stable() {
+        let s = ShapeClass::new(OpClass::Int8Matmul, 100, 768, 768);
+        assert_eq!(s.key(), "i8mm:m128:n768:k768");
+        let t = ShapeClass::new(OpClass::Int8MatmulBt, 128, 128, 64);
+        assert_eq!(t.key(), "i8mmbt:m128:n128:k64");
+    }
+
+    fn sample_profile() -> TuneProfile {
+        let mut prof = TuneProfile::default();
+        prof.entries.insert(
+            "i8mm:m128:n768:k768".into(),
+            TuneChoice { tile: 128, vector: true, ns: 1250.5 },
+        );
+        prof.entries.insert(
+            "i8mmbt:m128:n128:k64".into(),
+            TuneChoice { tile: 32, vector: false, ns: 400.0 },
+        );
+        prof.phase_us = [12.5, 3.25, 6.5, 12.5];
+        prof
+    }
+
+    #[test]
+    fn profile_json_round_trips() {
+        let prof = sample_profile();
+        let back = TuneProfile::parse(&prof.to_json()).expect("round trip");
+        assert_eq!(back, prof);
+    }
+
+    #[test]
+    fn profile_parse_rejects_corruption() {
+        // invalid tile (not a multiple of 8)
+        let bad_tile = r#"{"version": 1, "entries": {"i8mm:m8:n8:k8": {"tile": 12, "vector": 1, "ns": 1.0}}}"#;
+        assert!(TuneProfile::parse(bad_tile).is_err());
+        // missing vector flag
+        let no_vec = r#"{"version": 1, "entries": {"i8mm:m8:n8:k8": {"tile": 32, "ns": 1.0}}}"#;
+        assert!(TuneProfile::parse(no_vec).is_err());
+        // wrong version
+        let bad_ver = r#"{"version": 2, "entries": {}}"#;
+        assert!(TuneProfile::parse(bad_ver).is_err());
+        // unknown top-level field
+        let unknown = r#"{"version": 1, "surprise": 3, "entries": {}}"#;
+        assert!(TuneProfile::parse(unknown).is_err());
+        // not JSON at all
+        assert!(TuneProfile::parse("not json").is_err());
+    }
+
+    #[test]
+    fn resolve_miss_falls_back_hit_maps_vector_onto_caller() {
+        let prof = sample_profile();
+        let vec_bk = simd::detect();
+        // miss: caller defaults pass through untouched
+        let miss = ShapeClass::new(OpClass::MatmulF32, 8, 8, 8);
+        assert_eq!(prof.resolve(&miss, 64, vec_bk), (64, vec_bk));
+        // hit with vector=true: tuned tile + the caller's backend
+        let hit = ShapeClass::new(OpClass::Int8Matmul, 128, 768, 768);
+        assert_eq!(prof.resolve(&hit, 64, vec_bk), (128, vec_bk));
+        // ... and a scalar caller is never upgraded
+        assert_eq!(prof.resolve(&hit, 64, Backend::Scalar), (128, Backend::Scalar));
+        // hit with vector=false: forces scalar even for a vector caller
+        let hit_sc = ShapeClass::new(OpClass::Int8MatmulBt, 128, 128, 64);
+        assert_eq!(prof.resolve(&hit_sc, 64, vec_bk), (32, Backend::Scalar));
+    }
+
+    #[test]
+    fn sweep_picks_a_candidate_and_seeds_phases() {
+        let shapes = vec![
+            ShapeClass::new(OpClass::Int8Matmul, 8, 16, 16),
+            ShapeClass::new(OpClass::Int8MatmulBt, 8, 8, 16),
+        ];
+        let prof = sweep(&shapes, 0.05);
+        assert_eq!(prof.entries.len(), 2);
+        for c in prof.entries.values() {
+            assert!(TILE_CANDIDATES.contains(&c.tile));
+            assert!(c.ns.is_finite() && c.ns > 0.0);
+        }
+        // both swept families are represented, so every phase has a seed
+        assert!(prof.phase_us.iter().all(|&u| u > 0.0));
+    }
+
+    #[test]
+    fn sweep_dedupes_equal_shape_classes() {
+        // tiny's q_dim == d_model: the wq and wo shapes collapse
+        let s = ShapeClass::new(OpClass::Int8Matmul, 8, 16, 16);
+        let prof = sweep(&[s.clone(), s], 0.05);
+        assert_eq!(prof.entries.len(), 1);
+    }
+
+    #[test]
+    fn save_load_round_trips_and_load_errors_are_loud() {
+        let prof = sample_profile();
+        let path = std::env::temp_dir()
+            .join(format!("fastp_tune_test_{}.json", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        prof.save(&path).expect("save");
+        let back = TuneProfile::load(&path).expect("load");
+        assert_eq!(back, prof);
+        let _ = std::fs::remove_file(&path);
+        assert!(TuneProfile::load(&path).is_err());
+    }
+
+    #[test]
+    fn warm_hints_seed_the_ewma() {
+        let prof = sample_profile();
+        let hints = warm_hints(Some(&Arc::new(prof.clone()))).expect("seeded hints");
+        for (slot, &us) in prof.phase_us.iter().enumerate() {
+            assert_eq!(hints.ewma(slot), us);
+        }
+        // a profile with no seeds yields no hints
+        let empty = TuneProfile::default();
+        assert!(warm_hints(Some(&Arc::new(empty))).is_none());
+        assert!(warm_hints(None).is_none());
+    }
+
+    #[test]
+    fn model_and_default_grids_stay_in_model_reach() {
+        let shapes = model_shapes(&crate::config::TINY);
+        assert!(shapes.iter().any(|s| s.op == OpClass::Int8MatmulBt));
+        for s in &shapes {
+            assert_eq!(s.m, BLOCK); // per-chunk row count
+        }
+        assert!(!default_shapes().is_empty());
+    }
+}

@@ -185,6 +185,155 @@ fn prop_simd_attn_step_w8a8_bit_identical() {
 }
 
 #[test]
+fn prop_simd_quantize_bit_identical_to_oracle() {
+    // the elementwise quantize remainder (ISSUE 7): ragged widths,
+    // saturation edges, round-half-to-even ties, denormals, and scales
+    // down to the SCALE_EPS floor — every backend must reproduce the
+    // per-element `quantize_one` oracle exactly
+    let vec_bk = simd::detect();
+    forall_ck(
+        0x51AD6,
+        60,
+        |rng, size| {
+            let n = 1 + rng.below(2 * size + 23);
+            let mut x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            for v in x.iter_mut() {
+                match rng.below(12) {
+                    0 => *v *= 1.0e9,   // saturates at +/-127
+                    1 => *v *= 1.0e-41, // denormal
+                    2 => *v = 0.5,      // tie: rounds to even (0)
+                    3 => *v = -1.5,     // tie: rounds to even (-2)
+                    _ => {}
+                }
+            }
+            let scale =
+                [quant::quant_scale(&x), 1.0, 0.013, quant::SCALE_EPS / 127.0][rng.below(4)];
+            (x, scale)
+        },
+        |(x, scale)| {
+            let want: Vec<i8> = x.iter().map(|&v| quant::quantize_one(v, *scale)).collect();
+            let mut got = vec![0i8; x.len()];
+            vec_bk.i8_quantize(&mut got, x, *scale);
+            if got != want {
+                return Err(format!("i8_quantize diverged on {}", vec_bk.name()));
+            }
+            let mut via_helper = vec![0i8; x.len()];
+            quant::quantize_with_bk(x, *scale, &mut via_helper, vec_bk);
+            if via_helper != want {
+                return Err("quantize_with_bk != quantize_one oracle".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_simd_rmsnorm_rope_bit_identical_to_oracle() {
+    // rmsnorm_bk / rope_bk against the plain ops oracles: the row
+    // reduction, rsqrt and sin/cos stay scalar by design, so the wide
+    // apply must land the same bytes for every shape — including odd
+    // head dims (rope leaves the last element untouched) and widths
+    // below one vector lane
+    use fast_prefill::tensor::ops;
+    let vec_bk = simd::detect();
+    forall_ck(
+        0x51AD7,
+        40,
+        |rng, size| {
+            let rows = 1 + rng.below(size % 8 + 3);
+            let cols = 1 + rng.below(2 * size + 21);
+            let x = rand_f32_mat(rng, rows, cols);
+            let g: Vec<f32> = (0..cols).map(|_| rng.normal()).collect();
+            let pos: Vec<i32> = (0..rows).map(|_| rng.below(1 << 17) as i32).collect();
+            (x, g, pos)
+        },
+        |(x, g, pos)| {
+            let want = ops::rmsnorm(x, g, 1e-5);
+            let got = ops::rmsnorm_bk(x, g, 1e-5, vec_bk);
+            if bits(&got.data) != bits(&want.data) {
+                return Err(format!("rmsnorm diverged on {}", vec_bk.name()));
+            }
+            let mut want_r = x.clone();
+            ops::rope(&mut want_r, pos, 10000.0);
+            let mut got_r = x.clone();
+            ops::rope_bk(&mut got_r, pos, 10000.0, vec_bk);
+            if bits(&got_r.data) != bits(&want_r.data) {
+                return Err(format!("rope diverged on {} (dh {})", vec_bk.name(), x.cols));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_simd_deq_scale_bit_identical_to_scalar() {
+    // int32 accumulator dequant: `acc as f32 * s` per lane, including
+    // magnitudes above 2^24 where the i32 -> f32 conversion itself rounds
+    let vec_bk = simd::detect();
+    forall_ck(
+        0x51AD8,
+        40,
+        |rng, size| {
+            let n = 1 + rng.below(2 * size + 19);
+            let acc: Vec<i32> = (0..n)
+                .map(|_| {
+                    let v = rng.below(1 << 30) as i64 - (1 << 29);
+                    v as i32
+                })
+                .collect();
+            let s = [1.0f32, 6.2e-5, -0.75][rng.below(3)];
+            (acc, s)
+        },
+        |(acc, s)| {
+            let want: Vec<f32> = acc.iter().map(|&a| a as f32 * s).collect();
+            let mut got = vec![0.0f32; acc.len()];
+            vec_bk.f32_deq_scale(&mut got, acc, *s);
+            if bits(&got) != bits(&want) {
+                return Err(format!("f32_deq_scale diverged on {}", vec_bk.name()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn tuned_profile_prefill_bit_identical_to_untuned() {
+    // end-to-end autotuner acceptance (ISSUE 7): a prefill resolving
+    // every kernel through a swept profile must produce the same bytes
+    // as the untuned static defaults. TuneOverride::Off pins the
+    // baseline even when the test process itself runs under
+    // FASTP_AUTOTUNE=startup (the CI autotune leg does exactly that).
+    use fast_prefill::config::TINY;
+    use fast_prefill::coordinator::{Engine, EngineConfig};
+    use fast_prefill::tensor::tune::{self, TuneOverride};
+
+    let prof = tune::sweep(&tune::model_shapes(&TINY), 0.05);
+    assert!(!prof.entries.is_empty());
+    let toks: Vec<u8> = (0..256).map(|i| (i * 31 % 256) as u8).collect();
+
+    let mut base_cfg = EngineConfig::new_native(TINY);
+    base_cfg.tune = TuneOverride::Off;
+    base_cfg.threads = 1;
+    let mut tuned_cfg = EngineConfig::new_native(TINY);
+    tuned_cfg.tune = TuneOverride::Profile(std::sync::Arc::new(prof));
+    tuned_cfg.threads = 1;
+
+    let a = Engine::new_native(base_cfg).unwrap().prefill(0, &toks).unwrap();
+    let b = Engine::new_native(tuned_cfg).unwrap().prefill(0, &toks).unwrap();
+
+    assert_eq!(a.metrics.tune_mode, "off");
+    assert_ne!(b.metrics.tune_mode, "off");
+    assert!(b.metrics.tuned_shapes > 0);
+    assert_eq!(a.first_token, b.first_token);
+    assert_eq!(bits(&a.logits_last), bits(&b.logits_last), "tuned logits diverged");
+    assert_eq!(
+        bits(&a.hidden_last_chunk),
+        bits(&b.hidden_last_chunk),
+        "tuned hidden state diverged"
+    );
+}
+
+#[test]
 fn both_dispatch_override_values_resolve_and_pin() {
     // `FASTP_KERNEL=scalar` must force the scalar reference and
     // `FASTP_KERNEL=simd` must select the detected vector backend (or
