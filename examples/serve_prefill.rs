@@ -28,6 +28,11 @@
 //! (dense mode), asserting bit-identity, a positive store hit-rate and a
 //! warm-over-cold mean-TTFT win, with `prefix_cold`/`prefix_warm` legs
 //! in the JSON summary.
+//! FASTP_SERVE_FUSED=1 adds a fused-IndexGen leg (sparse mode): the same
+//! trace served with phase batching off vs on (adaptive fused groups),
+//! asserting per-request bit-identity, > 0 fused IndexGen groups, and a
+//! lower total priced K-stream HBM read than the unfused baseline, with
+//! `indexgen_unfused`/`indexgen_fused` legs in the JSON summary.
 
 use std::sync::Arc;
 
@@ -218,6 +223,58 @@ fn main() -> Result<()> {
         None
     };
 
+    // optional fused-IndexGen leg (FASTP_SERVE_FUSED=1, sparse mode): the
+    // same trace served with phase batching off (per-request stepping)
+    // vs on (adaptive fused groups). Closed-loop submission lands the
+    // whole backlog up front, so co-resident same-phase states are
+    // available for fusion from the first layer; once two lanes fuse at
+    // QKV they advance in lockstep and every later IndexGen fuses too.
+    let fused_legs = if std::env::var("FASTP_SERVE_FUSED").as_deref() == Ok("1") {
+        anyhow::ensure!(
+            cfg.flex.is_some(),
+            "FASTP_SERVE_FUSED needs sparse mode (IndexGen streams no K blocks when dense)"
+        );
+        let mut uopts = ServerOptions::new(workers.max(2), policy);
+        uopts.batch_phases = false;
+        let fopts = ServerOptions::new(workers.max(2), policy);
+        let (mut unfused, _) = serve(&cfg, &weights, &trace, uopts, false)?;
+        let (mut fused, _) = serve(&cfg, &weights, &trace, fopts, false)?;
+        // completion order is scheduling-dependent; compare per request
+        unfused.sort_by_key(|c| c.request_id);
+        fused.sort_by_key(|c| c.request_id);
+        for (a, b) in unfused.iter().zip(&fused) {
+            assert_eq!(a.request_id, b.request_id);
+            assert_eq!(a.run.first_token, b.run.first_token, "fused req {}", a.request_id);
+            assert_eq!(a.run.logits_last, b.run.logits_last, "fused req {}", a.request_id);
+        }
+        let base_sum = summarize(&unfused);
+        let fused_sum = summarize(&fused);
+        println!("{}", base_sum.render("idx-unfused"));
+        println!("{}", fused_sum.render("idx-fused"));
+        assert!(
+            fused_sum.sigu_fused_phases > 0,
+            "fused leg formed no fused IndexGen groups (backlog never co-parked)"
+        );
+        let base_sigu: u64 = unfused.iter().map(|c| c.run.metrics.sigu_hbm_read_bytes).sum();
+        let fused_sigu: u64 = fused.iter().map(|c| c.run.metrics.sigu_hbm_read_bytes).sum();
+        assert!(
+            fused_sigu < base_sigu,
+            "fused IndexGen did not cut priced K-stream reads ({fused_sigu} vs {base_sigu} B)"
+        );
+        println!(
+            "fused IndexGen: {} groups, mean width {:.2} | K-stream reads \
+             {:.3} -> {:.3} GB ({:.1}% saved)",
+            fused_sum.sigu_fused_phases,
+            fused_sum.sigu_fused_width_mean,
+            base_sigu as f64 / 1e9,
+            fused_sigu as f64 / 1e9,
+            (1.0 - fused_sigu as f64 / base_sigu as f64) * 100.0
+        );
+        Some((base_sum, fused_sum))
+    } else {
+        None
+    };
+
     let mut t = Table::new(&[
         "req", "class", "tokens", "TTFT (ms)", "queue (ms)", "phase-wait (ms)", "e2e (ms)",
         "yields", "density %", "hit %", "KV MB", "jobs",
@@ -259,6 +316,10 @@ fn main() -> Result<()> {
         if let Some((c, w)) = &prefix_legs {
             legs.push(c.to_json("prefix_cold"));
             legs.push(w.to_json("prefix_warm"));
+        }
+        if let Some((u, f)) = &fused_legs {
+            legs.push(u.to_json("indexgen_unfused"));
+            legs.push(f.to_json("indexgen_fused"));
         }
         let json = format!(
             "{{\"policy\": \"{policy:?}\", \"arrival\": \"{}\", \"legs\": [{}]}}\n",

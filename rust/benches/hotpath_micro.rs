@@ -302,6 +302,42 @@ fn main() {
     let rope_speedup = r_rope_scalar.mean_ns / r_rope_simd.mean_ns;
     println!("    -> rope backend speedup {rope_speedup:.2}x, outputs bit-identical");
 
+    // --- 4K-context fused index generation: 2 lanes, one shared K stream ---
+    // (the acceptance benchmark of cross-lane IndexGen fusion: streaming a
+    // kv head's 32 K blocks once and scoring both lanes' Q-hats at the
+    // shared stream position vs two independent solo streams — per-lane
+    // outputs bit-identical; the fusion's first-order win is the halved
+    // priced K-stream HBM traffic, not CPU time, so speedup ~1x here)
+    let ig_q: Vec<MatI8> = (0..2).map(|_| rand_mat(&mut rng, BLOCK, 64)).collect();
+    let ig_k: Vec<(MatI8, f32)> =
+        (0..32).map(|_| (rand_mat(&mut rng, BLOCK, 64), 0.02)).collect();
+    let lane_job = |q: &'_ MatI8| scores::HeadJob {
+        qhat: q,
+        qs: 0.02,
+        kblocks: ig_k.iter().map(|(kb, ks)| (kb, *ks)).collect(),
+    };
+    let r_ig_solo = bench_for("index_gen 4K x2 lanes (solo K streams)", 500, 5, || {
+        for q in &ig_q {
+            black_box(lane_job(q).stream());
+        }
+    });
+    println!("{r_ig_solo}");
+    let r_ig_fused = bench_for("index_gen 4K x2 lanes (fused K stream)", 500, 5, || {
+        let fused = scores::FusedHeadJob { lanes: ig_q.iter().map(|q| lane_job(q)).collect() };
+        black_box(fused.stream());
+    });
+    println!("{r_ig_fused}");
+    let fused_out =
+        scores::FusedHeadJob { lanes: ig_q.iter().map(|q| lane_job(q)).collect() }.stream();
+    for (lane, q) in ig_q.iter().enumerate() {
+        assert_eq!(fused_out[lane], lane_job(q).stream(), "fused IndexGen changed lane {lane}");
+    }
+    let index_gen_speedup = r_ig_solo.mean_ns / r_ig_fused.mean_ns;
+    println!(
+        "    -> fused-over-solo {index_gen_speedup:.2}x, per-lane outputs bit-identical \
+         (K stream priced once instead of per lane)"
+    );
+
     // machine-readable summary for the bench trajectory (CI artifact)
     let json_path = std::env::var("FASTP_BENCH_JSON")
         .unwrap_or_else(|_| "target/hotpath_micro.json".into());
@@ -320,6 +356,8 @@ fn main() {
          \"rmsnorm_4k\": {{\"scalar_ns\": {:.1}, \"simd_ns\": {:.1}, \
          \"speedup\": {:.3}, \"bit_identical\": true}},\n  \
          \"rope_4k\": {{\"scalar_ns\": {:.1}, \"simd_ns\": {:.1}, \
+         \"speedup\": {:.3}, \"bit_identical\": true}},\n  \
+         \"index_gen_4k\": {{\"solo_ns\": {:.1}, \"fused_ns\": {:.1}, \
          \"speedup\": {:.3}, \"bit_identical\": true}}\n}}\n",
         std::env::consts::ARCH,
         detected.name(),
@@ -345,6 +383,9 @@ fn main() {
         r_rope_scalar.mean_ns,
         r_rope_simd.mean_ns,
         rope_speedup,
+        r_ig_solo.mean_ns,
+        r_ig_fused.mean_ns,
+        index_gen_speedup,
     );
     if let Some(dir) = std::path::Path::new(&json_path).parent() {
         if !dir.as_os_str().is_empty() {

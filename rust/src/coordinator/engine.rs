@@ -29,8 +29,8 @@
 //! scheduler pipelines across co-resident requests; the monolithic
 //! [`Engine::prefill`] is a thin wrapper that steps to completion. Fused
 //! group steps ([`Engine::phase_step_group`]) batch same-phase requests:
-//! QKV on a shared layer and SAU at any layer, bit-identical to solo
-//! stepping.
+//! QKV, IndexGen and the FFN tail on a shared layer and SAU at any
+//! layer, bit-identical to solo stepping.
 
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -42,7 +42,7 @@ use crate::coordinator::joblist::{
     build_schedule, build_schedule_batch, Schedule, DEFAULT_WAVE_QBLOCKS,
 };
 use crate::coordinator::prefix::{self, PrefixStore};
-use crate::coordinator::walk::ScheduleWalk;
+use crate::coordinator::walk::{k_block_bytes, IndexGenWalk, ScheduleWalk};
 use crate::flexprefill::{generate_head_index, scores, HeadIndex, HeadPattern, HeadStats};
 use crate::kvcache::{CacheStats, LivenessCache};
 use crate::metrics::PrefillMetrics;
@@ -520,6 +520,12 @@ impl Engine {
             self.phase_qkv_batch(states)?;
             return Ok(states.iter().map(|_| None).collect());
         }
+        if states.len() > 1
+            && states.iter().all(|s| s.phase == Phase::IndexGen && s.layer == states[0].layer)
+        {
+            self.phase_index_gen_batch(states)?;
+            return Ok(states.iter().map(|_| None).collect());
+        }
         if states.len() > 1 && states.iter().all(|s| s.phase == Phase::Sau) {
             self.phase_sau_batch(states)?;
             return Ok(states.iter().map(|_| None).collect());
@@ -617,6 +623,18 @@ impl Engine {
         };
         st.metrics.t_sigu_us += t0.elapsed().as_micros() as f64;
         st.sigu_jobs += self.cfg.model.n_heads;
+        if self.cfg.flex.is_some() {
+            // solo K stream: one pass per kv head over this lane's blocks
+            // (dense index generation streams nothing) — the same
+            // IndexGenWalk pricing a fused phase attributes per lane
+            let pricing = IndexGenWalk::new(
+                self.cfg.model.n_kv_heads,
+                self.cfg.model.group_size(),
+                vec![st.n],
+            )
+            .price(k_block_bytes(&self.cfg.model));
+            st.metrics.sigu_hbm_read_bytes += pricing.fused_bytes;
+        }
         for idx in &indices {
             st.density_sum += idx.density();
             st.density_cnt += 1;
@@ -627,6 +645,72 @@ impl Engine {
         st.patterns.push(indices.iter().map(|i| i.pattern).collect());
         st.indices = Some(indices);
         st.phase = Phase::Sau;
+        Ok(())
+    }
+
+    /// Fused phase 2 for several sparse requests at the same layer (native
+    /// SIGU path): the lanes share each kv head's K block stream — one
+    /// [`scores::FusedHeadJob`] per query head scores every lane's Q-hat
+    /// against a single pass over the merged (longest-lane) block extent,
+    /// writing per-lane outputs independently, so each lane's index set is
+    /// bit-identical to its solo phase (pinned by proptests in
+    /// `flexprefill::scores` and `rust/tests/memory_spine.rs`). The fused
+    /// K-stream bytes are priced through [`IndexGenWalk`] with
+    /// lowest-live-lane attribution — the same spine
+    /// [`crate::sim::sigu_group_us`] prices, so engine stats and the
+    /// simulator agree exactly. Falls back to per-state stepping when the
+    /// group is not fusable (dense lanes, resumed lanes, artifact SIGU).
+    /// As with the other fused phases, wall-clock time is charged to every
+    /// lane.
+    pub fn phase_index_gen_batch(&mut self, states: &mut [PrefillState]) -> Result<()> {
+        let fusable = states.len() > 1
+            && self.cfg.native_sigu
+            && self.cfg.flex.is_some()
+            && states.iter().all(|s| s.phase == Phase::IndexGen && s.layer == states[0].layer)
+            && states.iter().all(|s| s.resume_from == 0);
+        if !fusable {
+            for st in states.iter_mut() {
+                self.phase_index_gen(st)?;
+            }
+            return Ok(());
+        }
+        let cfg = self.cfg.model.clone();
+        let params = self.cfg.flex.expect("fusable implies sparse");
+        let t0 = Instant::now();
+        let lane_indices = {
+            let chunk_lanes: Vec<&[ChunkQkv]> = states
+                .iter()
+                .map(|s| {
+                    s.chunks.as_deref().ok_or_else(|| anyhow!("index_gen without qkv chunks"))
+                })
+                .collect::<Result<_>>()?;
+            let ns: Vec<usize> = states.iter().map(|s| s.n).collect();
+            let ctx = self.phase_ctx(Phase::IndexGen);
+            fwd::sigu_indices_batch(&ctx, &cfg, &chunk_lanes, &ns, &params)
+        };
+        let dt = t0.elapsed().as_micros() as f64;
+        let lane_blocks: Vec<usize> = states.iter().map(|s| s.n).collect();
+        let pricing = IndexGenWalk::new(cfg.n_kv_heads, cfg.group_size(), lane_blocks)
+            .price(k_block_bytes(&cfg));
+        let width = states.len() as u64;
+        for (lane, (st, indices)) in states.iter_mut().zip(lane_indices).enumerate() {
+            st.metrics.t_sigu_us += dt;
+            st.sigu_jobs += cfg.n_heads;
+            st.metrics.sigu_hbm_read_bytes += pricing.lane_bytes[lane];
+            st.metrics.sigu_hbm_saved_bytes += pricing.lane_saved[lane];
+            st.metrics.sigu_fused_phases += 1;
+            st.metrics.sigu_fused_width_sum += width;
+            for idx in &indices {
+                st.density_sum += idx.density();
+                st.density_cnt += 1;
+                if idx.pattern == HeadPattern::QueryAware {
+                    st.qa_heads += 1;
+                }
+            }
+            st.patterns.push(indices.iter().map(|i| i.pattern).collect());
+            st.indices = Some(indices);
+            st.phase = Phase::Sau;
+        }
         Ok(())
     }
 

@@ -62,6 +62,31 @@ pub fn cache_key(kv_head: u16, block: u32) -> u64 {
     ((kv_head as u64) << 32) | block as u64
 }
 
+/// The kv-head layout a schedule family is built over — the
+/// fusion-compatibility key for cross-lane IndexGen. Two lanes may ride
+/// one fused K stream only when their query heads map onto kv heads the
+/// same way: same kv-head count and same GQA group size. (Lanes served by
+/// one engine share a `ModelConfig` and are compatible by construction;
+/// the gate keeps the invariant explicit and checkable.)
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvLayout {
+    pub n_kv_heads: usize,
+    pub group_size: usize,
+}
+
+impl KvLayout {
+    /// The layout of a model config's attention geometry.
+    pub fn of(cfg: &crate::config::ModelConfig) -> KvLayout {
+        KvLayout { n_kv_heads: cfg.n_kv_heads, group_size: cfg.group_size() }
+    }
+
+    /// True when lanes with these layouts may share a fused IndexGen
+    /// K stream (per-head job spaces line up exactly).
+    pub fn compatible(&self, other: &KvLayout) -> bool {
+        self == other
+    }
+}
+
 /// Build the block-major wave schedule from per-head sparse indices.
 ///
 /// `indices[h].blocks[q]` lists KV blocks for query head h / query block q;
@@ -374,6 +399,15 @@ mod tests {
         assert_eq!(batch.waves.len(), 2);
         assert!(batch.waves[1].q_ranges[1].is_none(), "lane 1 idle in wave 2");
         assert!(batch.waves[1].blocks.iter().all(|bj| bj.jobs.iter().all(|j| j.lane == 0)));
+    }
+
+    #[test]
+    fn kv_layout_gates_on_head_geometry() {
+        let tiny = KvLayout::of(&crate::config::TINY);
+        assert_eq!(tiny, KvLayout { n_kv_heads: 2, group_size: 2 });
+        assert!(tiny.compatible(&KvLayout::of(&crate::config::TINY)));
+        assert!(!tiny.compatible(&KvLayout { n_kv_heads: 4, group_size: 2 }));
+        assert!(!tiny.compatible(&KvLayout { n_kv_heads: 2, group_size: 1 }));
     }
 
     #[test]

@@ -26,8 +26,11 @@ pub mod walk;
 pub use engine::{phase_hint_slot, Engine, EngineConfig, Phase, PrefillRun, PrefillState};
 pub use joblist::{
     build_schedule, build_schedule_batch, cache_key, BatchBlockJobs, BatchJob, BatchSchedule,
-    BatchWave, BlockJobs, Job, Schedule, Wave, DEFAULT_WAVE_QBLOCKS,
+    BatchWave, BlockJobs, Job, KvLayout, Schedule, Wave, DEFAULT_WAVE_QBLOCKS,
 };
 pub use prefix::{seed_prefix, EvictPolicy, PrefixConfig, PrefixHit, PrefixStats, PrefixStore};
 pub use server::{Completion, Policy, Server, ServerOptions, DEFAULT_MAX_YIELDS};
-pub use walk::{BlockOutcome, BlockVisit, LaneVisit, ScheduleWalk};
+pub use walk::{
+    k_block_bytes, BlockOutcome, BlockVisit, IndexGenPricing, IndexGenVisit, IndexGenWalk,
+    LaneVisit, ScheduleWalk,
+};

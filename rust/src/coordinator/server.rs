@@ -17,7 +17,9 @@
 //!    kernel threads from one shared [`PoolBudget`], sizing concurrent
 //!    phase jobs to the machine budget instead of `n_workers x pool_size`;
 //!    co-resident requests parked at the same phase fuse into one batched
-//!    fan-out (QKV on a shared layer, SAU at any layer).
+//!    fan-out (QKV, IndexGen and the FFN tail on a shared layer, SAU at
+//!    any layer), with the group width chosen adaptively from the
+//!    simulator's priced marginal saving (see [`form_group`]).
 //!  * **serial**: each worker runs a request end-to-end on a private
 //!    static share of the thread budget — the PR-1 baseline the serving
 //!    example compares against at equal total threads.
@@ -28,16 +30,19 @@
 
 use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::config::{u280_fast_prefill, FpgaConfig, ModelConfig, BLOCK};
 use crate::coordinator::engine::{
     phase_hint_slot, Engine, EngineConfig, Phase, PrefillRun, PrefillState,
 };
+use crate::coordinator::joblist::KvLayout;
 use crate::coordinator::prefix::{PrefixConfig, PrefixStore};
 use crate::model::ModelWeights;
+use crate::sim::marginal_fuse_saving_us;
 use crate::tensor::tile::KernelCtx;
 use crate::util::pool::{AdaptiveHints, PoolBudget, WorkerPool, HINT_EWMA_ALPHA};
 use crate::workload::prompts::{Priority, TraceRequest};
@@ -60,8 +65,58 @@ pub enum Policy {
     Preemptive,
 }
 
-/// Most states a single fused phase step may take (QKV/SAU batching).
-const MAX_PHASE_BATCH: usize = 4;
+/// Default cap on how many states a single fused phase step may take
+/// (QKV/IndexGen/SAU/FFN-tail batching). The *actual* width is chosen
+/// per group at admission time: candidates join while the simulator's
+/// priced marginal TTFT saving stays strictly positive (see
+/// [`form_group`]), clamped by this cap — overridable per server with
+/// [`ServerOptions::max_phase_batch`] or process-wide with
+/// [`PHASE_BATCH_ENV`].
+pub const DEFAULT_MAX_PHASE_BATCH: usize = 4;
+
+/// Environment variable overriding the fused-phase width cap (validated;
+/// see [`parse_phase_batch`]).
+pub const PHASE_BATCH_ENV: &str = "FASTP_PHASE_BATCH";
+
+static PHASE_BATCH_FROM_ENV: OnceLock<usize> = OnceLock::new();
+
+/// Validate a `FASTP_PHASE_BATCH` value: a positive integer (a fused
+/// group always contains at least its lead; 1 disables fusion).
+pub fn parse_phase_batch(raw: &str) -> Result<usize, String> {
+    let v: usize = raw
+        .trim()
+        .parse()
+        .map_err(|_| format!("{PHASE_BATCH_ENV}={raw:?} is not an unsigned integer"))?;
+    if v == 0 {
+        return Err(format!("{PHASE_BATCH_ENV} must be > 0 (a group always has its lead)"));
+    }
+    Ok(v)
+}
+
+/// The single `FASTP_PHASE_BATCH` parse point (resolved once per
+/// process). Invalid values warn and fall back to
+/// [`DEFAULT_MAX_PHASE_BATCH`] rather than aborting.
+pub fn env_phase_batch() -> usize {
+    *PHASE_BATCH_FROM_ENV.get_or_init(|| match std::env::var(PHASE_BATCH_ENV) {
+        Err(_) => DEFAULT_MAX_PHASE_BATCH,
+        Ok(raw) => match parse_phase_batch(&raw) {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!(
+                    "warning: ignoring phase-batch override: {e} \
+                     (using default {DEFAULT_MAX_PHASE_BATCH})"
+                );
+                DEFAULT_MAX_PHASE_BATCH
+            }
+        },
+    })
+}
+
+/// Admission threshold for growing a fused phase group (µs of priced
+/// marginal saving per layer): a candidate joins only while the saving
+/// strictly exceeds this. 0.0 = any strictly positive priced saving is
+/// worth taking; operators bound width with the cap, not the floor.
+const MARGINAL_SAVING_FLOOR_US: f64 = 0.0;
 
 /// Default aging bound: a parked or queued `Batch` request is passed over
 /// at most this many phase-boundary slots before it outranks everything
@@ -88,6 +143,12 @@ pub struct ServerOptions {
     pub max_inflight: usize,
     /// Fuse same-phase jobs of co-resident requests into one fan-out.
     pub batch_phases: bool,
+    /// Cap on the fused-group width (states per fused phase step). 0 =>
+    /// the `FASTP_PHASE_BATCH` env override, falling back to
+    /// [`DEFAULT_MAX_PHASE_BATCH`]. The width actually used is adaptive —
+    /// the group grows only while the simulator prices a strictly
+    /// positive marginal saving for the next lane; this is the clamp.
+    pub max_phase_batch: usize,
     /// Aging bound for [`Policy::Preemptive`]: after being passed over
     /// this many phase-boundary slots, a parked or queued `Batch` request
     /// outranks everything and runs to completion (0 =>
@@ -118,6 +179,7 @@ impl ServerOptions {
             total_threads: 0,
             max_inflight: 0,
             batch_phases: true,
+            max_phase_batch: 0,
             max_yields: 0,
             adaptive_hints: true,
             prefix: None,
@@ -172,6 +234,10 @@ impl Completion {
             hbm_read_bytes: self.run.metrics.hbm_read_bytes as f64,
             cache_hit_rate: self.run.metrics.cache_hit_rate,
             prefix_tokens_skipped: self.run.metrics.prefix_tokens_skipped,
+            sigu_hbm_read_bytes: self.run.metrics.sigu_hbm_read_bytes,
+            sigu_hbm_saved_bytes: self.run.metrics.sigu_hbm_saved_bytes,
+            sigu_fused_phases: self.run.metrics.sigu_fused_phases,
+            sigu_fused_width_sum: self.run.metrics.sigu_fused_width_sum,
         }
     }
 }
@@ -228,6 +294,14 @@ struct Shared {
     n_layers: usize,
     /// Aging bound (see [`ServerOptions::max_yields`]; resolved, >= 1).
     max_yields: usize,
+    /// Fused-group width cap (see [`ServerOptions::max_phase_batch`];
+    /// resolved, >= 1).
+    max_phase_batch: usize,
+    /// Model geometry of every lane this server admits — the fused-group
+    /// layout gate and the marginal-saving pricer read it.
+    model: ModelConfig,
+    /// Platform the admission-time marginal-saving pricer runs against.
+    fpga: FpgaConfig,
 }
 
 struct Sched {
@@ -314,6 +388,8 @@ impl Server {
         };
         let max_inflight = if opts.max_inflight > 0 { opts.max_inflight } else { n_workers + 1 };
         let max_yields = if opts.max_yields > 0 { opts.max_yields } else { DEFAULT_MAX_YIELDS };
+        let max_phase_batch =
+            if opts.max_phase_batch > 0 { opts.max_phase_batch } else { env_phase_batch() };
         let budget = PoolBudget::new(total_threads);
         // one EWMA hint store shared by every worker's engine: completed
         // requests feed measured phase costs in, phase fan-outs size
@@ -336,6 +412,9 @@ impl Server {
                 policy: opts.policy,
                 n_layers: cfg.model.n_layers,
                 max_yields,
+                max_phase_batch,
+                model: cfg.model.clone(),
+                fpga: u280_fast_prefill(),
             }),
             cond: Condvar::new(),
         });
@@ -722,21 +801,39 @@ fn charge_queue_passes(s: &mut Shared, winner_class: u8) {
     }
 }
 
-/// Fuse same-phase parked states into the lead's step (up to
-/// [`MAX_PHASE_BATCH`]): SAU at any layer, the weight-streaming phases
-/// (QKV, FFN tail) only on a shared layer.
+/// Fuse same-phase parked states into the lead's step: SAU at any layer,
+/// the K/weight-streaming phases (QKV, IndexGen, FFN tail) only on a
+/// shared layer; IndexGen additionally requires a compatible kv-head
+/// layout ([`KvLayout`] — per-head job spaces must line up for lanes to
+/// ride one K stream). Width is adaptive: a candidate joins only while
+/// the simulator's priced marginal TTFT saving of adding it
+/// ([`marginal_fuse_saving_us`]) strictly exceeds the floor, clamped by
+/// the resolved [`ServerOptions::max_phase_batch`]. Grouping is
+/// optimistic — the engine's batch phases re-check fusability and fall
+/// back to per-state stepping, so correctness never depends on this gate.
 fn form_group(s: &mut Shared, lead: Pending, batch_phases: bool) -> Vec<Pending> {
     let mut group = vec![lead];
     if batch_phases {
         let phase = group[0].state.phase();
         let layer = group[0].state.layer();
-        if matches!(phase, Phase::Qkv | Phase::Sau | Phase::FfnLogits) {
+        // every lane this server admits runs the one configured model, so
+        // layouts always match today; the gate keeps the fusion contract
+        // explicit (and checked) for a future multi-model router
+        let lead_layout = KvLayout::of(&s.model);
+        if matches!(phase, Phase::Qkv | Phase::IndexGen | Phase::Sau | Phase::FfnLogits) {
             let mut i = 0;
-            while i < s.ready.len() && group.len() < MAX_PHASE_BATCH {
+            while i < s.ready.len() && group.len() < s.max_phase_batch {
                 let p = &s.ready[i];
                 let fusable = p.state.phase() == phase
-                    && (phase == Phase::Sau || p.state.layer() == layer);
-                if fusable {
+                    && (phase == Phase::Sau || p.state.layer() == layer)
+                    && (phase != Phase::IndexGen
+                        || KvLayout::of(&s.model).compatible(&lead_layout));
+                let group_blocks: Vec<usize> =
+                    group.iter().map(|g| g.state.context_tokens() / BLOCK).collect();
+                let cand_blocks = p.state.context_tokens() / BLOCK;
+                let saving_us =
+                    marginal_fuse_saving_us(&s.fpga, &s.model, phase, &group_blocks, cand_blocks);
+                if fusable && saving_us > MARGINAL_SAVING_FLOOR_US {
                     group.push(s.ready.swap_remove(i));
                 } else {
                     i += 1;
@@ -820,6 +917,9 @@ mod tests {
             policy,
             n_layers: crate::config::TINY.n_layers,
             max_yields: DEFAULT_MAX_YIELDS,
+            max_phase_batch: DEFAULT_MAX_PHASE_BATCH,
+            model: crate::config::TINY.clone(),
+            fpga: u280_fast_prefill(),
         }
     }
 
@@ -1053,5 +1153,71 @@ mod tests {
         // equal class and the winner is *newer*: no yield charged to the
         // older same-class state
         assert_eq!(s.ready[0].meta.yields, 0);
+    }
+
+    #[test]
+    fn phase_batch_env_values_validate() {
+        assert_eq!(parse_phase_batch("4"), Ok(4));
+        assert_eq!(parse_phase_batch(" 1 "), Ok(1));
+        let zero = parse_phase_batch("0").unwrap_err();
+        assert!(zero.contains("must be > 0"), "got: {zero}");
+        assert!(parse_phase_batch("three").is_err());
+        assert!(parse_phase_batch("-2").is_err());
+        assert!(parse_phase_batch("2.5").is_err());
+    }
+
+    /// Walk a freshly parked TINY state one phase forward (QKV → IndexGen).
+    fn parked_at_index_gen(
+        engine: &mut Engine,
+        id: u64,
+        tokens: usize,
+        seq: u64,
+    ) -> Pending {
+        let mut p = parked(engine, id, tokens, seq, Priority::Interactive);
+        engine.phase_step(&mut p.state).unwrap();
+        assert_eq!(p.state.phase(), Phase::IndexGen);
+        p
+    }
+
+    #[test]
+    fn form_group_fuses_index_gen_on_shared_layer() {
+        let mut engine =
+            Engine::new_native(EngineConfig::new_native(crate::config::TINY.clone())).unwrap();
+        let mut s = shared(Policy::Fcfs);
+        let lead = parked_at_index_gen(&mut engine, 0, 256, 0);
+        s.ready.push(parked_at_index_gen(&mut engine, 1, 384, 1));
+        s.inflight = 2;
+        let group = form_group(&mut s, lead, true);
+        assert_eq!(group.len(), 2, "same-layer IndexGen states fuse");
+        assert!(group.iter().all(|p| p.state.phase() == Phase::IndexGen));
+        assert!(s.ready.is_empty());
+    }
+
+    #[test]
+    fn form_group_width_clamped_by_max_phase_batch() {
+        let mut engine =
+            Engine::new_native(EngineConfig::new_native(crate::config::TINY.clone())).unwrap();
+        let mut s = shared(Policy::Fcfs);
+        s.max_phase_batch = 1;
+        let lead = parked_at_index_gen(&mut engine, 0, 256, 0);
+        s.ready.push(parked_at_index_gen(&mut engine, 1, 384, 1));
+        s.inflight = 2;
+        let group = form_group(&mut s, lead, true);
+        assert_eq!(group.len(), 1, "cap 1 disables fusion");
+        assert_eq!(s.ready.len(), 1, "candidate stays parked");
+    }
+
+    #[test]
+    fn form_group_skips_mismatched_phase() {
+        let mut engine =
+            Engine::new_native(EngineConfig::new_native(crate::config::TINY.clone())).unwrap();
+        let mut s = shared(Policy::Fcfs);
+        let lead = parked_at_index_gen(&mut engine, 0, 256, 0);
+        // candidate still at QKV: not fusable with an IndexGen lead
+        s.ready.push(parked(&engine, 1, 256, 1, Priority::Interactive));
+        s.inflight = 2;
+        let group = form_group(&mut s, lead, true);
+        assert_eq!(group.len(), 1);
+        assert_eq!(s.ready.len(), 1);
     }
 }

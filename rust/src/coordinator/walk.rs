@@ -203,6 +203,125 @@ pub fn solo_walk_stats(schedule: &Schedule, mut cache: LivenessCache) -> CacheSt
     cache.stats()
 }
 
+// ---------------------------------------------------------------------------
+// IndexGen stream events
+// ---------------------------------------------------------------------------
+
+/// i8 K bytes of one (kv_head, block) tile — the unit the SIGU's K stream
+/// moves over HBM. This is the **one** byte constant both the engine's
+/// `PrefillMetrics` accounting and `sim::prefill`'s stream pricing use,
+/// so their IndexGen numbers agree by construction.
+pub fn k_block_bytes(cfg: &crate::config::ModelConfig) -> u64 {
+    (crate::config::BLOCK * cfg.d_head) as u64
+}
+
+/// One (kv_head, block) step of an IndexGen K stream: the coordinate is
+/// streamed from HBM **once** and every lane with that block live scores
+/// its Q-hats against it — the IndexGen analogue of [`BlockVisit`].
+#[derive(Debug)]
+pub struct IndexGenVisit<'a> {
+    pub kv_head: u16,
+    pub block: u32,
+    /// Per-lane score-job counts at this coordinate (`group_size` query
+    /// heads per live lane; 0 = the lane is past its last block).
+    pub lane_jobs: &'a [u32],
+}
+
+/// Priced traffic of one IndexGen stream, solo or fused, derived from the
+/// canonical [`IndexGenWalk`] events. Per-lane attribution is
+/// deterministic: each streamed coordinate's bytes are charged to the
+/// lowest-indexed lane with a job there (so lane shares always sum to the
+/// fused total, and every lane's share is bounded by its solo cost).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct IndexGenPricing {
+    /// Bytes the fused stream moves: each merged coordinate once.
+    pub fused_bytes: u64,
+    /// What each lane's solo stream would have moved.
+    pub solo_bytes: Vec<u64>,
+    /// Each lane's attributed share of the fused stream (sums to
+    /// `fused_bytes`).
+    pub lane_bytes: Vec<u64>,
+    /// Per-lane saving vs solo (`solo_bytes - lane_bytes`, always >= 0).
+    pub lane_saved: Vec<u64>,
+}
+
+impl IndexGenPricing {
+    /// Total bytes saved by fusing vs running every lane solo.
+    pub fn saved_bytes(&self) -> u64 {
+        self.lane_saved.iter().sum()
+    }
+}
+
+/// The canonical walk of an IndexGen K stream over one or more fused
+/// lanes: for every kv head, blocks stream in ascending order over the
+/// merged (longest-lane) extent, and each coordinate is visited **once**
+/// with per-lane job counts — like [`BlockVisit`] does for SAU. Both the
+/// engine's metrics accounting and the simulator's pricing consume this
+/// walk, so IndexGen stats agree warm and cold by construction.
+#[derive(Clone, Debug)]
+pub struct IndexGenWalk {
+    n_kv_heads: usize,
+    group_size: usize,
+    /// Per-lane streamed block counts (the lane's novel context blocks).
+    lane_blocks: Vec<usize>,
+}
+
+impl IndexGenWalk {
+    pub fn new(n_kv_heads: usize, group_size: usize, lane_blocks: Vec<usize>) -> IndexGenWalk {
+        assert!(!lane_blocks.is_empty(), "an IndexGen walk needs at least one lane");
+        IndexGenWalk { n_kv_heads, group_size, lane_blocks }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lane_blocks.len()
+    }
+
+    /// Blocks the merged stream covers per kv head (the longest lane's).
+    pub fn merged_blocks(&self) -> usize {
+        self.lane_blocks.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Emit every stream coordinate in execution order.
+    pub fn run<F: FnMut(&IndexGenVisit)>(&self, mut visit: F) {
+        let max_n = self.merged_blocks();
+        let mut lane_jobs = vec![0u32; self.lane_blocks.len()];
+        for g in 0..self.n_kv_heads {
+            for b in 0..max_n {
+                for (jobs, &n) in lane_jobs.iter_mut().zip(&self.lane_blocks) {
+                    *jobs = if b < n { self.group_size as u32 } else { 0 };
+                }
+                visit(&IndexGenVisit {
+                    kv_head: g as u16,
+                    block: b as u32,
+                    lane_jobs: &lane_jobs,
+                });
+            }
+        }
+    }
+
+    /// Price the stream's HBM reads at `k_block_bytes` per coordinate
+    /// (see [`k_block_bytes`]), with deterministic per-lane attribution.
+    pub fn price(&self, k_block_bytes: u64) -> IndexGenPricing {
+        let lanes = self.lane_blocks.len();
+        let mut lane_bytes = vec![0u64; lanes];
+        let mut fused_bytes = 0u64;
+        self.run(|v| {
+            fused_bytes += k_block_bytes;
+            if let Some(l) = v.lane_jobs.iter().position(|&j| j > 0) {
+                lane_bytes[l] += k_block_bytes;
+            }
+        });
+        let solo_bytes: Vec<u64> = self
+            .lane_blocks
+            .iter()
+            .map(|&n| n as u64 * self.n_kv_heads as u64 * k_block_bytes)
+            .collect();
+        let lane_saved: Vec<u64> =
+            solo_bytes.iter().zip(&lane_bytes).map(|(s, a)| s - a).collect();
+        IndexGenPricing { fused_bytes, solo_bytes, lane_bytes, lane_saved }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -282,5 +401,43 @@ mod tests {
         assert_eq!(stats.hits(), 0);
         assert_eq!(stats.misses, 1); // single wave: one visit
         assert_eq!(stats.bypasses, 1);
+    }
+
+    #[test]
+    fn index_gen_walk_streams_merged_extent_once_per_kv_head() {
+        let walk = IndexGenWalk::new(2, 3, vec![4, 6]);
+        assert_eq!(walk.merged_blocks(), 6);
+        let mut visits = 0usize;
+        let mut jobs = 0u64;
+        walk.run(|v| {
+            visits += 1;
+            jobs += v.lane_jobs.iter().map(|&j| j as u64).sum::<u64>();
+            // lane 1 is the longer lane: live everywhere
+            assert_eq!(v.lane_jobs[1], 3);
+            assert_eq!(v.lane_jobs[0], if v.block < 4 { 3 } else { 0 });
+        });
+        assert_eq!(visits, 2 * 6, "one visit per (kv_head, merged block)");
+        // group_size score jobs per live (lane, coordinate)
+        assert_eq!(jobs, (2 * (4 + 6) * 3) as u64);
+    }
+
+    #[test]
+    fn index_gen_pricing_fuses_to_merged_extent_with_exact_attribution() {
+        let kb = 1000u64;
+        let p = IndexGenWalk::new(2, 3, vec![4, 6]).price(kb);
+        assert_eq!(p.fused_bytes, 2 * 6 * kb, "stream once over the merged extent");
+        assert_eq!(p.solo_bytes, vec![2 * 4 * kb, 2 * 6 * kb]);
+        // lowest-live-lane attribution: lane 0 pays its own blocks, lane 1
+        // only the extra tail — shares sum to the fused total
+        assert_eq!(p.lane_bytes, vec![2 * 4 * kb, 2 * 2 * kb]);
+        assert_eq!(p.lane_saved, vec![0, 2 * 4 * kb]);
+        assert_eq!(p.lane_bytes.iter().sum::<u64>(), p.fused_bytes);
+        assert_eq!(p.saved_bytes(), 2 * 4 * kb);
+
+        // solo (width 1): fused == solo, nothing saved
+        let solo = IndexGenWalk::new(2, 3, vec![5]).price(kb);
+        assert_eq!(solo.fused_bytes, 2 * 5 * kb);
+        assert_eq!(solo.lane_bytes, vec![2 * 5 * kb]);
+        assert_eq!(solo.saved_bytes(), 0);
     }
 }

@@ -109,35 +109,13 @@ pub fn stream_scores_generic(
     let mut st = StreamState::new(rows);
     for b in 0..n {
         let s = tile(b);
-        for r in 0..s.rows {
-            let row = s.row(r);
-            let rmax = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let m_new = st.m[r].max(rmax);
-            let mut sum = 0.0f32;
-            for &v in row {
-                sum += (v - m_new).exp();
-            }
-            st.l[r] = st.l[r] * (st.m[r] - m_new).exp() + sum;
-            st.m[r] = m_new;
-        }
+        fold_tile(&mut st, &s);
     }
     let mut vertical = vec![0.0f32; n];
     let mut slash = vec![0.0f32; n];
     for b in 0..n {
         let s = tile(b);
-        let mut vsum = 0.0f32;
-        let mut slo = 0.0f32;
-        for r in 0..s.rows {
-            let inv_l = 1.0 / st.l[r].max(1e-8);
-            let m = st.m[r];
-            for (c, &v) in s.row(r).iter().enumerate() {
-                let p = (v - m).exp() * inv_l;
-                vsum += p;
-                if r >= c {
-                    slo += p;
-                }
-            }
-        }
+        let (vsum, slo) = block_mass(&st, &s);
         vertical[b] = vsum;
         slash[n - 1 - b] += slo;
         if b + 2 <= n {
@@ -146,6 +124,41 @@ pub fn stream_scores_generic(
     }
     let a_hat: Vec<f32> = vertical.iter().map(|v| v / rows as f32).collect();
     (vertical, slash, a_hat)
+}
+
+/// Pass-A step: fold one score tile into the online (m, l) state. Shared
+/// by the solo and fused streams so both run the very same float ops.
+fn fold_tile(st: &mut StreamState, s: &MatF32) {
+    for r in 0..s.rows {
+        let row = s.row(r);
+        let rmax = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let m_new = st.m[r].max(rmax);
+        let mut sum = 0.0f32;
+        for &v in row {
+            sum += (v - m_new).exp();
+        }
+        st.l[r] = st.l[r] * (st.m[r] - m_new).exp() + sum;
+        st.m[r] = m_new;
+    }
+}
+
+/// Pass-B step: (vsum, slo) block mass of one score tile under the final
+/// (m, l) state. Shared by the solo and fused streams.
+fn block_mass(st: &StreamState, s: &MatF32) -> (f32, f32) {
+    let mut vsum = 0.0f32;
+    let mut slo = 0.0f32;
+    for r in 0..s.rows {
+        let inv_l = 1.0 / st.l[r].max(1e-8);
+        let m = st.m[r];
+        for (c, &v) in s.row(r).iter().enumerate() {
+            let p = (v - m).exp() * inv_l;
+            vsum += p;
+            if r >= c {
+                slo += p;
+            }
+        }
+    }
+    (vsum, slo)
 }
 
 /// One head's SIGU scoring job for the parallel path: everything borrowed
@@ -186,6 +199,77 @@ pub fn stream_heads_parallel(
     jobs: &[HeadJob<'_>],
 ) -> Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> {
     pool.map(jobs.len(), |h| jobs[h].stream())
+}
+
+/// One query head's SIGU scoring job **fused across co-resident lanes**:
+/// the kv-head's K block sequence is streamed once, in ascending block
+/// index over the merged (longest-lane) extent, and every lane's Q-hat is
+/// scored against its own K data at the shared stream position. Lanes may
+/// have different block counts — a lane simply stops riding the stream
+/// past its last block.
+///
+/// Bit-identity: per-lane online state and outputs are fully independent,
+/// and each lane's tiles fold in the lane's own ascending block order
+/// through the exact pass-A/pass-B steps of [`stream_scores_generic`]
+/// (shared helpers), so every lane's result is bit-identical to its solo
+/// [`HeadJob::stream_with`] for any fusion width (property-tested).
+pub struct FusedHeadJob<'a> {
+    /// Per-lane queries riding the shared K stream, in lane order.
+    pub lanes: Vec<HeadJob<'a>>,
+}
+
+impl FusedHeadJob<'_> {
+    /// Per-lane (vertical, slash, a_hat), on the active SIMD backend.
+    pub fn stream(&self) -> Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        self.stream_with(simd::active())
+    }
+
+    /// [`FusedHeadJob::stream`] on an explicit backend.
+    pub fn stream_with(&self, bk: Backend) -> Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let max_n = self.lanes.iter().map(|l| l.kblocks.len()).max().unwrap_or(0);
+        let mut states: Vec<StreamState> =
+            self.lanes.iter().map(|l| StreamState::new(l.qhat.rows)).collect();
+        // pass A: one merged ascending sweep over the shared stream
+        for b in 0..max_n {
+            for (lane, st) in self.lanes.iter().zip(states.iter_mut()) {
+                if b < lane.kblocks.len() {
+                    let (kb, ks) = lane.kblocks[b];
+                    let s = score_tile_bk(lane.qhat, lane.qs, kb, ks, bk);
+                    fold_tile(st, &s);
+                }
+            }
+        }
+        // pass B: re-stream, emitting per-lane block stats independently
+        let mut out: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = self
+            .lanes
+            .iter()
+            .map(|l| {
+                let n = l.kblocks.len();
+                (vec![0.0f32; n], vec![0.0f32; n], vec![0.0f32; n])
+            })
+            .collect();
+        for b in 0..max_n {
+            for (li, lane) in self.lanes.iter().enumerate() {
+                let n = lane.kblocks.len();
+                if b >= n {
+                    continue;
+                }
+                let (kb, ks) = lane.kblocks[b];
+                let s = score_tile_bk(lane.qhat, lane.qs, kb, ks, bk);
+                let (vsum, slo) = block_mass(&states[li], &s);
+                out[li].0[b] = vsum;
+                out[li].1[n - 1 - b] += slo;
+                if b + 2 <= n {
+                    out[li].1[n - 2 - b] += vsum - slo;
+                }
+            }
+        }
+        for (o, lane) in out.iter_mut().zip(&self.lanes) {
+            let rows = lane.qhat.rows as f32;
+            o.2 = o.0.iter().map(|v| v / rows).collect();
+        }
+        out
+    }
 }
 
 /// Full streaming statistics for one head (W8A8 tiles): vertical[N],
@@ -336,6 +420,62 @@ mod tests {
             let par = stream_heads_parallel(&WorkerPool::with_threads(threads), &jobs);
             assert_eq!(par, seq, "threads={threads}");
         }
+    }
+
+    #[test]
+    fn fused_stream_matches_solo_per_lane_bitwise() {
+        // the cross-lane fusion contract: for any fusion width, block
+        // counts and backend, each lane of a FusedHeadJob is bit-identical
+        // to its solo stream
+        use crate::tensor::simd;
+        use crate::util::prop::forall_ck;
+        let backends = [simd::Backend::Scalar, simd::detect()];
+        forall_ck(
+            0x5EED_F05E,
+            24,
+            |rng, size| {
+                let lanes = 1 + rng.below(4);
+                let blocks: Vec<usize> =
+                    (0..lanes).map(|_| 1 + rng.below(2 + size / 20)).collect();
+                let seed = rng.next_u64();
+                (blocks, seed)
+            },
+            |(blocks, seed)| {
+                let lanes: Vec<(MatI8, f32, Vec<(MatI8, f32)>)> = blocks
+                    .iter()
+                    .enumerate()
+                    .map(|(li, &n)| setup(n, seed ^ (li as u64) << 17))
+                    .collect();
+                for bk in backends {
+                    let solo: Vec<_> = lanes
+                        .iter()
+                        .map(|(qhat, qs, kblocks)| {
+                            HeadJob {
+                                qhat,
+                                qs: *qs,
+                                kblocks: kblocks.iter().map(|(kb, ks)| (kb, *ks)).collect(),
+                            }
+                            .stream_with(bk)
+                        })
+                        .collect();
+                    let fused = FusedHeadJob {
+                        lanes: lanes
+                            .iter()
+                            .map(|(qhat, qs, kblocks)| HeadJob {
+                                qhat,
+                                qs: *qs,
+                                kblocks: kblocks.iter().map(|(kb, ks)| (kb, *ks)).collect(),
+                            })
+                            .collect(),
+                    }
+                    .stream_with(bk);
+                    if fused != solo {
+                        return Err(format!("fused != solo on {}", bk.name()));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

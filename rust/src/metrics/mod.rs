@@ -37,6 +37,23 @@ pub struct PrefillMetrics {
     /// KV-block fetches the cache could not retain (bypasses) across the
     /// request's SAU schedules.
     pub cache_bypasses: u64,
+    /// Modeled IndexGen K-stream HBM traffic attributed to this request
+    /// (bytes): one pass per kv head over the request's blocks when solo;
+    /// under cross-lane fusion, the request's share of the single fused
+    /// stream (lowest-live-lane attribution along the canonical
+    /// `IndexGenWalk` — the same pricing the cycle simulator charges).
+    /// Kept separate from `hbm_read_bytes`, whose SAU-schedule semantics
+    /// are attribution-invariant across fused and solo serving.
+    pub sigu_hbm_read_bytes: u64,
+    /// IndexGen K-stream bytes this request did **not** re-read because a
+    /// fused group's shared stream covered them (solo-cost minus
+    /// attributed share; 0 when never fused).
+    pub sigu_hbm_saved_bytes: u64,
+    /// IndexGen phases this request ran inside a fused (width > 1) group.
+    pub sigu_fused_phases: u32,
+    /// Sum of fused-group widths over those phases (mean width =
+    /// `sigu_fused_width_sum / sigu_fused_phases`).
+    pub sigu_fused_width_sum: u64,
     /// Total SAU jobs executed.
     pub jobs: usize,
     /// Leading token-blocks resumed from the cross-request prefix KV
@@ -93,6 +110,14 @@ pub struct ServeSample {
     pub cache_hit_rate: f64,
     /// Tokens skipped via cross-request prefix KV reuse (0 = cold).
     pub prefix_tokens_skipped: u64,
+    /// IndexGen K-stream HBM bytes attributed to this request (see
+    /// [`PrefillMetrics::sigu_hbm_read_bytes`]).
+    pub sigu_hbm_read_bytes: u64,
+    /// IndexGen K-stream bytes saved by riding fused group streams.
+    pub sigu_hbm_saved_bytes: u64,
+    /// IndexGen phases served inside a fused group / their summed widths.
+    pub sigu_fused_phases: u32,
+    pub sigu_fused_width_sum: u64,
 }
 
 /// TTFT statistics of one priority class within a [`ServeSummary`].
@@ -158,6 +183,14 @@ pub struct ServeSummary {
     /// requests minus that of prefix-hit requests, in ms (positive =
     /// reuse was faster; 0.0 when either group is empty).
     pub prefix_ttft_delta_ms: f64,
+    /// Total IndexGen phases served inside fused (width > 1) groups.
+    pub sigu_fused_phases: u64,
+    /// Mean fused-group width over those phases (0.0 when never fused).
+    pub sigu_fused_width_mean: f64,
+    /// Total IndexGen K-stream traffic attributed across the trace (GB).
+    pub sigu_hbm_read_gb: f64,
+    /// Total IndexGen K-stream traffic saved by fusion (GB).
+    pub sigu_hbm_saved_gb: f64,
 }
 
 impl ServeSummary {
@@ -209,6 +242,16 @@ impl ServeSummary {
             },
             prefix_tokens_skipped: samples.iter().map(|s| s.prefix_tokens_skipped).sum(),
             prefix_ttft_delta_ms,
+            sigu_fused_phases: samples.iter().map(|s| s.sigu_fused_phases as u64).sum(),
+            sigu_fused_width_mean: {
+                let phases: u64 = samples.iter().map(|s| s.sigu_fused_phases as u64).sum();
+                let widths: u64 = samples.iter().map(|s| s.sigu_fused_width_sum).sum();
+                if phases > 0 { widths as f64 / phases as f64 } else { 0.0 }
+            },
+            sigu_hbm_read_gb: samples.iter().map(|s| s.sigu_hbm_read_bytes as f64).sum::<f64>()
+                / 1e9,
+            sigu_hbm_saved_gb: samples.iter().map(|s| s.sigu_hbm_saved_bytes as f64).sum::<f64>()
+                / 1e9,
         }
     }
 
@@ -253,6 +296,12 @@ impl ServeSummary {
                 self.prefix_ttft_delta_ms
             ));
         }
+        if self.sigu_fused_phases > 0 {
+            line.push_str(&format!(
+                " | idxgen fused {} phases width {:.2} saved {:.3} GB",
+                self.sigu_fused_phases, self.sigu_fused_width_mean, self.sigu_hbm_saved_gb
+            ));
+        }
         line
     }
 
@@ -268,7 +317,9 @@ impl ServeSummary {
              \"batch\": {{\"n\": {}, \"ttft_mean_ms\": {:.3}, \"ttft_p95_ms\": {:.3}}}, \
              \"preemptions\": {}, \"hbm_read_gb\": {:.6}, \"cache_hit_rate_mean\": {:.4}, \
              \"prefix_hit_rate\": {:.4}, \"prefix_tokens_skipped\": {}, \
-             \"prefix_ttft_delta_ms\": {:.3}}}",
+             \"prefix_ttft_delta_ms\": {:.3}, \
+             \"sigu_fused_phases\": {}, \"sigu_fused_width_mean\": {:.3}, \
+             \"sigu_hbm_read_gb\": {:.6}, \"sigu_hbm_saved_gb\": {:.6}}}",
             label,
             self.n,
             self.kernel_backend,
@@ -289,7 +340,11 @@ impl ServeSummary {
             self.cache_hit_rate_mean,
             self.prefix_hit_rate,
             self.prefix_tokens_skipped,
-            self.prefix_ttft_delta_ms
+            self.prefix_ttft_delta_ms,
+            self.sigu_fused_phases,
+            self.sigu_fused_width_mean,
+            self.sigu_hbm_read_gb,
+            self.sigu_hbm_saved_gb
         )
     }
 
@@ -472,6 +527,38 @@ mod tests {
         let cold = ServeSummary::from_samples(&[mk(40.0, 0)]);
         assert!(!cold.render("x").contains("prefix hit"));
         assert!((cold.prefix_ttft_delta_ms - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn serve_summary_fused_indexgen_aggregates() {
+        let mk = |phases, widths, read, saved| ServeSample {
+            sigu_fused_phases: phases,
+            sigu_fused_width_sum: widths,
+            sigu_hbm_read_bytes: read,
+            sigu_hbm_saved_bytes: saved,
+            ..Default::default()
+        };
+        // two lanes fused for 2 phases each at width 2, one solo request
+        let samples = vec![
+            mk(2, 4, 2_000_000_000, 0),
+            mk(2, 4, 0, 2_000_000_000),
+            mk(0, 0, 1_000_000_000, 0),
+        ];
+        let s = ServeSummary::from_samples(&samples);
+        assert_eq!(s.sigu_fused_phases, 4);
+        assert!((s.sigu_fused_width_mean - 2.0).abs() < 1e-9);
+        assert!((s.sigu_hbm_read_gb - 3.0).abs() < 1e-9);
+        assert!((s.sigu_hbm_saved_gb - 2.0).abs() < 1e-9);
+        let line = s.render("x");
+        assert!(line.contains("idxgen fused 4 phases width 2.00"), "{line}");
+        let json = s.to_json("x");
+        assert!(json.contains("\"sigu_fused_phases\": 4"), "{json}");
+        assert!(json.contains("\"sigu_fused_width_mean\": 2.000"), "{json}");
+        assert!(json.contains("\"sigu_hbm_saved_gb\": 2.000000"), "{json}");
+        // a never-fused trace keeps the banner line unchanged
+        let solo = ServeSummary::from_samples(&[mk(0, 0, 5, 0)]);
+        assert!(!solo.render("x").contains("idxgen fused"));
+        assert_eq!(solo.sigu_fused_width_mean, 0.0);
     }
 
     #[test]

@@ -315,6 +315,63 @@ pub fn sigu_indices(
     })
 }
 
+/// SIGU statistics + Algorithm 1 fused across co-resident lanes: one job
+/// per query head, each streaming the head's kv-group K block sequence
+/// **once** for the whole group and scoring every lane's Q-hat against it
+/// ([`scores::FusedHeadJob`]). Per-lane math is the exact solo
+/// [`sigu_indices`] sequence (independent state, ascending block order),
+/// so each lane's index set is bit-identical to its solo run for any
+/// fusion width, thread count and backend (tested). Lanes must share the
+/// kv-head layout (same `cfg` — asserted via the job key space).
+pub fn sigu_indices_batch(
+    ctx: &KernelCtx,
+    cfg: &crate::config::ModelConfig,
+    chunk_lanes: &[&[ChunkQkv]],
+    ns: &[usize],
+    params: &FlexParams,
+) -> Vec<Vec<HeadIndex>> {
+    assert_eq!(chunk_lanes.len(), ns.len(), "chunk lanes vs block counts");
+    let lanes = chunk_lanes.len();
+    let per_head: Vec<Vec<HeadIndex>> = ctx.pool.map(cfg.n_heads, |h| {
+        let g = h / cfg.group_size();
+        let fused = scores::FusedHeadJob {
+            lanes: (0..lanes)
+                .map(|li| {
+                    let (chunks, n) = (chunk_lanes[li], ns[li]);
+                    scores::HeadJob {
+                        qhat: &chunks[n - 1].q[h],
+                        qs: chunks[n - 1].qs,
+                        kblocks: chunks.iter().map(|c| (&c.k[g], c.ks)).collect(),
+                    }
+                })
+                .collect(),
+        };
+        let streams = fused.stream_with(ctx.backend);
+        streams
+            .into_iter()
+            .enumerate()
+            .map(|(li, (vertical, slash, a_hat))| {
+                let (chunks, n) = (chunk_lanes[li], ns[li]);
+                let kpool = MatF32::from_fn(n, cfg.d_head, |b, c| chunks[b].kpool.at(g, c));
+                let qpool_all = MatF32::from_fn(n, cfg.d_head, |b, c| chunks[b].qpool.at(h, c));
+                let qpool_hat: Vec<f32> = qpool_all.row(n - 1).to_vec();
+                let a_bar = scores::pooled_estimate(&qpool_hat, &kpool);
+                let stats = HeadStats { vertical, slash, a_bar, a_hat, qpool_all, kpool };
+                generate_head_index(&stats, params)
+            })
+            .collect::<Vec<HeadIndex>>()
+    });
+    // transpose [head][lane] -> [lane][head]
+    let mut out: Vec<Vec<HeadIndex>> =
+        (0..lanes).map(|_| Vec::with_capacity(cfg.n_heads)).collect();
+    for head_out in per_head {
+        for (li, idx) in head_out.into_iter().enumerate() {
+            out[li].push(idx);
+        }
+    }
+    out
+}
+
 /// Dense causal index set (every query block attends to all blocks <= it).
 pub fn dense_indices(n_heads: usize, n: usize) -> Vec<HeadIndex> {
     (0..n_heads)
@@ -728,6 +785,49 @@ mod tests {
             assert_eq!(b.len(), s.len(), "lane {lane}");
             for (bm, sm) in b.iter().zip(s) {
                 assert_eq!(bm.data, sm.data, "lane {lane}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_sigu_bit_identical_to_solo_lanes() {
+        // cross-lane IndexGen fusion: per-lane index sets must match the
+        // solo sigu_indices run exactly, for every thread count
+        let w = ModelWeights::generate(&TINY, 35);
+        let flex = FlexParams::default();
+        let lanes: Vec<(Vec<ChunkQkv>, usize)> = [(384usize, 71u64), (256, 72), (512, 73)]
+            .iter()
+            .map(|&(toks, seed)| {
+                let ctx = KernelCtx::with_threads(1);
+                let hidden = w.embed_tokens(&tokens(toks, seed));
+                let n = toks / BLOCK;
+                let chunks: Vec<ChunkQkv> = (0..n)
+                    .map(|ci| {
+                        let x = hidden.slice_rows(ci * BLOCK, (ci + 1) * BLOCK);
+                        qkv_chunk(&ctx, &w, 0, &x, (ci * BLOCK) as i32)
+                    })
+                    .collect();
+                (chunks, n)
+            })
+            .collect();
+        let solo: Vec<Vec<HeadIndex>> = lanes
+            .iter()
+            .map(|(chunks, n)| {
+                sigu_indices(&KernelCtx::with_threads(1), &TINY, chunks, *n, &flex)
+            })
+            .collect();
+        let chunk_refs: Vec<&[ChunkQkv]> = lanes.iter().map(|(c, _)| c.as_slice()).collect();
+        let ns: Vec<usize> = lanes.iter().map(|(_, n)| *n).collect();
+        for threads in [1usize, 2, 8] {
+            let ctx = KernelCtx::with_threads(threads);
+            let batched = sigu_indices_batch(&ctx, &TINY, &chunk_refs, &ns, &flex);
+            assert_eq!(batched.len(), solo.len());
+            for (lane, (b, s)) in batched.iter().zip(&solo).enumerate() {
+                assert_eq!(b.len(), s.len(), "lane {lane} heads (threads={threads})");
+                for (ib, is) in b.iter().zip(s) {
+                    assert_eq!(ib.pattern, is.pattern, "lane {lane} threads={threads}");
+                    assert_eq!(ib.blocks, is.blocks, "lane {lane} threads={threads}");
+                }
             }
         }
     }

@@ -22,8 +22,9 @@
 //! independent solo simulations on both TTFT and traffic.
 
 use crate::config::{FpgaConfig, ModelConfig, BLOCK};
+use crate::coordinator::engine::Phase;
 use crate::coordinator::joblist::{build_schedule, build_schedule_batch, Schedule};
-use crate::coordinator::walk::ScheduleWalk;
+use crate::coordinator::walk::{k_block_bytes, IndexGenPricing, IndexGenWalk, ScheduleWalk};
 use crate::flexprefill::HeadIndex;
 use crate::kvcache::LivenessCache;
 
@@ -65,6 +66,11 @@ pub struct LaneSim {
     pub context_tokens: usize,
     /// KV-block HBM fetch traffic attributed to this lane (bytes).
     pub hbm_read_bytes: f64,
+    /// IndexGen K-stream HBM traffic attributed to this lane (bytes) —
+    /// the lane's share of the fused per-kv-head stream, priced by
+    /// [`IndexGenWalk::price`] (the same spine the engine charges), so
+    /// engine and simulator agree on it exactly.
+    pub sigu_hbm_read_bytes: u64,
     pub cache_hit_rate: f64,
     pub bypasses: u64,
     pub jobs: usize,
@@ -186,22 +192,77 @@ pub fn price_sau_walk(
     (total_us, compute_us_total)
 }
 
-/// SIGU timing for one layer: stream all key blocks once per kv head
-/// (single-fetch hardware realization — DESIGN.md), score against Q-hat on
-/// the MPU per *query* head, plus the streaming selection pass.
-fn sigu_layer_us(f: &FpgaConfig, cfg: &ModelConfig, n: usize, traffic: &mut Traffic) -> f64 {
+/// SIGU timing for one fused index-generation group: the group's lanes
+/// share one sequential K stream per kv head over the **merged**
+/// (longest-lane) block extent — priced through the canonical
+/// [`IndexGenWalk`] spine, the same one the engine charges, so fused
+/// engine stats and this simulator agree exactly, warm and cold — while
+/// score (MPU, per query head per block) and the streaming selection pass
+/// still run per lane. With one lane this is exactly the solo SIGU cost.
+pub fn sigu_group_us(
+    f: &FpgaConfig,
+    cfg: &ModelConfig,
+    lane_blocks: &[usize],
+    traffic: &mut Traffic,
+) -> (f64, IndexGenPricing) {
     let hbm = MemModel::hbm(f.hbm_bw_gbs);
+    let walk = IndexGenWalk::new(cfg.n_kv_heads, cfg.group_size(), lane_blocks.to_vec());
+    let pricing = walk.price(k_block_bytes(cfg));
     let kblk_bytes = (BLOCK * cfg.d_head) as f64;
-    // sequential burst stream of K, once per kv head
-    let stream_us = hbm.transfer_us(kblk_bytes * n as f64, 16384.0) * cfg.n_kv_heads as f64;
-    traffic.hbm_read_bytes += kblk_bytes * n as f64 * cfg.n_kv_heads as f64;
-    // score compute: per query head, per block: 128 x dh x 128
-    let score_us = mpu::matmul_us(f, BLOCK, cfg.d_head, BLOCK) * (n * cfg.n_heads) as f64;
-    // selection: streaming coverage scan, ~4 passes over N-length buffers
-    // per head + pooled map for query-aware heads (N x N / lanes)
-    let select_us = cfg.n_heads as f64
-        * (sfu::elementwise_us(f, 4.0 * n as f64) + sfu::elementwise_us(f, (n * n) as f64 * 0.25));
-    stream_us.max(score_us) + select_us
+    // one sequential burst stream of K per kv head, merged extent
+    let stream_us = hbm.transfer_us(kblk_bytes * walk.merged_blocks() as f64, 16384.0)
+        * cfg.n_kv_heads as f64;
+    traffic.hbm_read_bytes += pricing.fused_bytes as f64;
+    let mut score_us = 0.0;
+    let mut select_us = 0.0;
+    for &n in lane_blocks {
+        // score compute: per query head, per block: 128 x dh x 128
+        score_us += mpu::matmul_us(f, BLOCK, cfg.d_head, BLOCK) * (n * cfg.n_heads) as f64;
+        // selection: streaming coverage scan, ~4 passes over N-length
+        // buffers per head + pooled map for query-aware heads (N x N / 4)
+        select_us += cfg.n_heads as f64
+            * (sfu::elementwise_us(f, 4.0 * n as f64)
+                + sfu::elementwise_us(f, (n * n) as f64 * 0.25));
+    }
+    (stream_us.max(score_us) + select_us, pricing)
+}
+
+/// Priced marginal TTFT saving (µs, per layer) of adding a candidate lane
+/// to an existing phase-fusion group — the simulator's admission-time
+/// answer to "is growing the group worth it?". The saving is the memory
+/// stream the candidate would pay again solo but rides fused: the layer's
+/// weight stream for the linear phases, the overlapping K extent (once
+/// per kv head) for IndexGen, and the amortized FSM phase transition for
+/// SAU (whose KV traffic is already priced per lane by the merged walk).
+pub fn marginal_fuse_saving_us(
+    f: &FpgaConfig,
+    cfg: &ModelConfig,
+    phase: Phase,
+    group_blocks: &[usize],
+    cand_blocks: usize,
+) -> f64 {
+    if group_blocks.is_empty() {
+        return 0.0;
+    }
+    let hbm = MemModel::hbm(f.hbm_bw_gbs);
+    match phase {
+        Phase::Qkv => {
+            let w = (cfg.d_model * (cfg.q_dim() + 2 * cfg.kv_dim())) as f64;
+            hbm.transfer_us(w, 16384.0)
+        }
+        Phase::FfnLogits => {
+            let w = (cfg.q_dim() * cfg.d_model + 3 * cfg.d_model * cfg.d_ffn) as f64;
+            hbm.transfer_us(w, 16384.0)
+        }
+        Phase::IndexGen => {
+            let merged = group_blocks.iter().copied().max().unwrap_or(0);
+            let overlap = cand_blocks.min(merged);
+            hbm.transfer_us((BLOCK * cfg.d_head) as f64 * overlap as f64, 16384.0)
+                * cfg.n_kv_heads as f64
+        }
+        Phase::Sau => FSM_PHASE_CYCLES / f.freq_mhz,
+        Phase::Done => 0.0,
+    }
 }
 
 /// Linear layers (QKV + o_proj + FFN) for one layer over every lane's
@@ -327,11 +388,14 @@ pub fn simulate_prefill_batch_prefixed(
         rep.t_ffn_ms += (ffn_us / (qkv_us + ffn_us).max(1e-9)) * lin_us / 1000.0;
         compute_us_sum += lin_us;
 
-        let mut sigu_us = 0.0;
-        for &s in &lane_novel {
-            sigu_us += sigu_layer_us(f, cfg, s / BLOCK, &mut traffic);
-        }
+        // one fused IndexGen group per layer: co-resident lanes share the
+        // per-kv-head K stream over the merged extent
+        let sigu_blocks: Vec<usize> = lane_novel.iter().map(|&s| s / BLOCK).collect();
+        let (sigu_us, sigu_pricing) = sigu_group_us(f, cfg, &sigu_blocks, &mut traffic);
         rep.t_sigu_ms += (sigu_us + fsm_us) / 1000.0;
+        for (lane, &b) in sigu_pricing.lane_bytes.iter().enumerate() {
+            lanes[lane].sigu_hbm_read_bytes += b;
+        }
 
         let schedules: Vec<Schedule> = lane_index_sets
             .iter()
@@ -572,6 +636,67 @@ mod tests {
             &[0],
         );
         assert_eq!(zero.combined.ttft_ms, cold.combined.ttft_ms);
+    }
+
+    #[test]
+    fn fused_sigu_streams_merged_extent_once() {
+        // a 2-lane fused IndexGen group moves the K stream once over the
+        // merged extent: traffic equals one solo lane of the longer length
+        // and each lane's attributed share sums back to the fused total
+        let cfg = &LLAMA32_3B;
+        let f = u280_fast_prefill();
+        let mut fused_t = Traffic::default();
+        let (fused_us, pricing) = sigu_group_us(&f, cfg, &[32, 48], &mut fused_t);
+        let mut solo_t = Traffic::default();
+        let (solo_a, _) = sigu_group_us(&f, cfg, &[32], &mut solo_t);
+        let (solo_b, _) = sigu_group_us(&f, cfg, &[48], &mut solo_t);
+        assert!(
+            fused_t.hbm_read_bytes < solo_t.hbm_read_bytes,
+            "fused K stream {} !< solo sum {}",
+            fused_t.hbm_read_bytes,
+            solo_t.hbm_read_bytes
+        );
+        let mut long_t = Traffic::default();
+        sigu_group_us(&f, cfg, &[48], &mut long_t);
+        assert_eq!(fused_t.hbm_read_bytes, long_t.hbm_read_bytes);
+        assert_eq!(pricing.lane_bytes.iter().sum::<u64>(), pricing.fused_bytes);
+        assert!(pricing.saved_bytes() > 0);
+        assert!(fused_us < solo_a + solo_b, "fused time {fused_us} !< {}", solo_a + solo_b);
+    }
+
+    #[test]
+    fn batch_sim_attributes_sigu_stream_per_lane() {
+        let cfg = &LLAMA32_3B;
+        let f = u280_fast_prefill();
+        let idx_a = indices(32, cfg.n_heads, 1, 11);
+        let idx_b = indices(32, cfg.n_heads, 1, 12);
+        let batch =
+            simulate_prefill_batch(&f, cfg, &[4096, 4096], &[idx_a.as_slice(), idx_b.as_slice()]);
+        // equal-length lanes: lane 0 pays the whole fused stream, lane 1
+        // rides it for free; fused total beats two solo streams
+        assert!(batch.lanes[0].sigu_hbm_read_bytes > 0);
+        assert_eq!(batch.lanes[1].sigu_hbm_read_bytes, 0);
+        let fused_total: u64 = batch.lanes.iter().map(|l| l.sigu_hbm_read_bytes).sum();
+        let solo_pair = 2 * batch.lanes[0].sigu_hbm_read_bytes;
+        assert!(fused_total < solo_pair, "fused {fused_total} !< 2x solo {solo_pair}");
+    }
+
+    #[test]
+    fn marginal_fuse_saving_prices_overlap() {
+        let cfg = &LLAMA32_3B;
+        let f = u280_fast_prefill();
+        for ph in [Phase::Qkv, Phase::IndexGen, Phase::Sau, Phase::FfnLogits] {
+            assert!(
+                marginal_fuse_saving_us(&f, cfg, ph, &[32], 32) > 0.0,
+                "no saving for {ph:?}"
+            );
+        }
+        assert_eq!(marginal_fuse_saving_us(&f, cfg, Phase::Done, &[32], 32), 0.0);
+        assert_eq!(marginal_fuse_saving_us(&f, cfg, Phase::IndexGen, &[], 32), 0.0);
+        // a longer candidate only saves its overlap with the group extent
+        let short = marginal_fuse_saving_us(&f, cfg, Phase::IndexGen, &[16], 64);
+        let long = marginal_fuse_saving_us(&f, cfg, Phase::IndexGen, &[64], 64);
+        assert!(short < long, "overlap clamp: {short} !< {long}");
     }
 
     #[test]

@@ -5,13 +5,14 @@
 //! stats-identity contract). Plus: FFN-tail batch fusion is bit-identical
 //! to per-request execution. Runs fully native, every tier-1 environment.
 
-use fast_prefill::config::{u280_cacheless, u280_fast_prefill, FpgaConfig, TINY};
+use fast_prefill::config::{u280_cacheless, u280_fast_prefill, FpgaConfig, BLOCK, TINY};
 use fast_prefill::coordinator::{
-    build_schedule, build_schedule_batch, Engine, EngineConfig, Phase, Schedule, ScheduleWalk,
+    build_schedule, build_schedule_batch, k_block_bytes, Engine, EngineConfig, IndexGenWalk,
+    Phase, PrefillRun, Schedule, ScheduleWalk,
 };
 use fast_prefill::flexprefill::{HeadIndex, HeadPattern};
 use fast_prefill::kvcache::{CacheStats, LivenessCache};
-use fast_prefill::sim::price_sau_walk;
+use fast_prefill::sim::{price_sau_walk, simulate_prefill_batch};
 use fast_prefill::sim::hbm::Traffic;
 use fast_prefill::util::prng::Prng;
 use fast_prefill::util::prop::forall_ck;
@@ -236,4 +237,159 @@ fn engine_reports_per_request_memory_attribution() {
     );
     assert!(run_nc.metrics.hbm_read_bytes >= run.metrics.hbm_read_bytes);
     assert!(run_nc.metrics.cache_bypasses > 0, "cacheless walk must bypass");
+}
+
+// ---------------------------------------------------------------------------
+// Fused index generation: one K stream, per-lane attribution
+// ---------------------------------------------------------------------------
+
+#[test]
+fn index_gen_walk_pricing_invariants() {
+    forall_ck(
+        0x5EED_5013,
+        40,
+        |rng, size| {
+            let lanes = 1 + rng.below(4);
+            let n_kv_heads = 1 + rng.below(4);
+            let group_size = 1 + rng.below(3);
+            let blocks: Vec<usize> =
+                (0..lanes).map(|_| 1 + rng.below(2 + size / 4)).collect();
+            (n_kv_heads, group_size, blocks)
+        },
+        |(n_kv_heads, group_size, blocks)| {
+            let kb = k_block_bytes(&TINY);
+            let walk = IndexGenWalk::new(*n_kv_heads, *group_size, blocks.clone());
+            let p = walk.price(kb);
+            let merged = *blocks.iter().max().unwrap();
+            if p.fused_bytes != (merged * n_kv_heads) as u64 * kb {
+                return Err(format!(
+                    "fused stream must span the merged extent once per kv head: {p:?}"
+                ));
+            }
+            if p.lane_bytes.iter().sum::<u64>() != p.fused_bytes {
+                return Err(format!("lane attribution must sum to the fused stream: {p:?}"));
+            }
+            for (l, &n) in blocks.iter().enumerate() {
+                let solo = (n * n_kv_heads) as u64 * kb;
+                if p.solo_bytes[l] != solo {
+                    return Err(format!("lane {l}: solo pricing drifted: {p:?}"));
+                }
+                if p.lane_bytes[l] > solo {
+                    return Err(format!("lane {l}: attributed above its solo cost: {p:?}"));
+                }
+                if p.lane_saved[l] != solo - p.lane_bytes[l] {
+                    return Err(format!("lane {l}: saved != solo - attributed: {p:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn index_gen_batch_fusion_bit_identical_and_shares_one_k_stream() {
+    let ta = tokens(384, 71);
+    let tb = tokens(256, 72);
+    let mut eng = Engine::new_native(native_cfg()).unwrap();
+    let solo_a = eng.prefill(0, &ta).unwrap();
+    let solo_b = eng.prefill(1, &tb).unwrap();
+
+    // step both requests to the layer-0 IndexGen boundary individually,
+    // fuse exactly that phase, then finish each solo
+    let mut sa = eng.prefill_start(0, &ta).unwrap();
+    let mut sb = eng.prefill_start(1, &tb).unwrap();
+    for st in [&mut sa, &mut sb] {
+        eng.phase_qkv(st).unwrap();
+        assert_eq!(st.phase(), Phase::IndexGen);
+    }
+    let mut pair = [sa, sb];
+    eng.phase_index_gen_batch(&mut pair).unwrap();
+    let [mut sa, mut sb] = pair;
+    assert_eq!(sa.phase(), Phase::Sau);
+    assert_eq!(sb.phase(), Phase::Sau);
+    let finish = |eng: &mut Engine, st: &mut fast_prefill::coordinator::PrefillState| loop {
+        if let Some(run) = eng.phase_step(st).unwrap() {
+            break run;
+        }
+    };
+    let run_a = finish(&mut eng, &mut sa);
+    let run_b = finish(&mut eng, &mut sb);
+
+    for (fused, solo) in [(&run_a, &solo_a), (&run_b, &solo_b)] {
+        assert_eq!(fused.first_token, solo.first_token);
+        assert_eq!(fused.logits_last, solo.logits_last);
+        assert_eq!(fused.hidden_last_chunk, solo.hidden_last_chunk);
+        assert_eq!(fused.index_sets.len(), solo.index_sets.len());
+        for (lf, ls) in fused.index_sets.iter().zip(&solo.index_sets) {
+            for (i_f, i_s) in lf.iter().zip(ls) {
+                assert_eq!(i_f.pattern, i_s.pattern);
+                assert_eq!(i_f.blocks, i_s.blocks);
+            }
+        }
+    }
+
+    // the fused layer-0 stream covers the merged (longer-lane) extent once,
+    // so together the lanes save exactly the shorter lane's solo stream
+    let kb = k_block_bytes(&TINY);
+    let overlap = (256 / BLOCK * TINY.n_kv_heads) as u64 * kb;
+    let fused_sum = run_a.metrics.sigu_hbm_read_bytes + run_b.metrics.sigu_hbm_read_bytes;
+    let solo_sum = solo_a.metrics.sigu_hbm_read_bytes + solo_b.metrics.sigu_hbm_read_bytes;
+    assert!(fused_sum < solo_sum, "fusion must shrink priced K-stream reads");
+    assert_eq!(solo_sum - fused_sum, overlap, "saving = shorter lane's layer-0 stream");
+    assert_eq!(
+        run_a.metrics.sigu_hbm_saved_bytes + run_b.metrics.sigu_hbm_saved_bytes,
+        overlap
+    );
+    assert_eq!(run_a.metrics.sigu_fused_phases, 1);
+    assert_eq!(run_b.metrics.sigu_fused_phases, 1);
+    assert_eq!(run_a.metrics.sigu_fused_width_sum, 2);
+    assert_eq!(solo_a.metrics.sigu_fused_phases, 0, "solo prefills never fuse");
+    assert_eq!(solo_a.metrics.sigu_hbm_saved_bytes, 0);
+}
+
+#[test]
+fn engine_and_sim_agree_on_fused_index_gen_attribution() {
+    let ta = tokens(384, 73);
+    let tb = tokens(256, 74);
+    let mut eng = Engine::new_native(native_cfg()).unwrap();
+    let solo_a = eng.prefill(0, &ta).unwrap();
+    let solo_b = eng.prefill(1, &tb).unwrap();
+
+    // fused serving: both lanes in lockstep through the grouped stepper,
+    // so every layer's IndexGen fuses
+    let mut states =
+        vec![eng.prefill_start(0, &ta).unwrap(), eng.prefill_start(1, &tb).unwrap()];
+    let mut runs: Vec<Option<PrefillRun>> = vec![None, None];
+    while runs.iter().any(|r| r.is_none()) {
+        for (slot, r) in runs.iter_mut().zip(eng.phase_step_group(&mut states).unwrap()) {
+            if let Some(run) = r {
+                *slot = Some(run);
+            }
+        }
+    }
+    let runs: Vec<PrefillRun> = runs.into_iter().map(|r| r.unwrap()).collect();
+
+    // the sim's batch point prices the same fused stream through the same
+    // IndexGenWalk — per-lane attribution must agree exactly
+    let sim = simulate_prefill_batch(
+        &u280_fast_prefill(),
+        &TINY,
+        &[ta.len(), tb.len()],
+        &[&solo_a.index_sets, &solo_b.index_sets],
+    );
+    for (lane, (run, ls)) in runs.iter().zip(&sim.lanes).enumerate() {
+        assert_eq!(
+            run.metrics.sigu_hbm_read_bytes, ls.sigu_hbm_read_bytes,
+            "lane {lane}: engine fused sigu attribution != sim's"
+        );
+    }
+    assert_eq!(runs[0].metrics.sigu_fused_phases as usize, TINY.n_layers);
+    assert_eq!(runs[0].metrics.sigu_fused_width_sum as usize, 2 * TINY.n_layers);
+    // and the per-lane totals still sum to one fused stream per layer
+    let fused_total: u64 = runs.iter().map(|r| r.metrics.sigu_hbm_read_bytes).sum();
+    let merged = ta.len().max(tb.len()) / BLOCK;
+    assert_eq!(
+        fused_total,
+        (TINY.n_layers * merged * TINY.n_kv_heads) as u64 * k_block_bytes(&TINY)
+    );
 }
