@@ -33,6 +33,14 @@
 //! asserting per-request bit-identity, > 0 fused IndexGen groups, and a
 //! lower total priced K-stream HBM read than the unfused baseline, with
 //! `indexgen_unfused`/`indexgen_fused` legs in the JSON summary.
+//! FASTP_SERVE_DECODE=1 adds a continuous-batching leg (dense mode): a
+//! long Batch prefill anchor plus short Interactive requests continuing
+//! into decode, served monolithic vs chunked (`prefill_chunk = BLOCK`)
+//! on one worker — asserting decode bit-identity between the legs,
+//! reporting TPOT/ITL/tok/s, and gating the chunked leg's strictly lower
+//! Interactive mean TTFT (chunk boundaries release the engine, so the
+//! anchor's prefill no longer blocks interactive admissions end-to-end),
+//! with `decode_monolithic`/`decode_chunked` legs in the JSON summary.
 
 use std::sync::Arc;
 
@@ -44,7 +52,9 @@ use fast_prefill::metrics::{ServeSample, ServeSummary};
 use fast_prefill::model::ModelWeights;
 use fast_prefill::sim::{simulate_prefill, simulate_prefill_batch};
 use fast_prefill::util::table::{fnum, Table};
-use fast_prefill::workload::prompts::{Priority, RequestTrace};
+use fast_prefill::workload::prompts::{
+    Priority, PromptKind, PromptSpec, RequestTrace, TraceRequest,
+};
 
 fn serve(
     cfg: &EngineConfig,
@@ -185,10 +195,12 @@ fn main() -> Result<()> {
         let n_cohorts = if n_requests >= 4 { 2 } else { 1 };
         let ptrace =
             RequestTrace::generate_shared_prefix(n_requests, &choices, 2000, 2026, 8, n_cohorts);
-        let mut popts = ServerOptions::new(1, Policy::Fcfs);
-        popts.max_inflight = 1;
-        let mut wopts = popts;
-        wopts.prefix = Some(fast_prefill::coordinator::PrefixConfig::default());
+        let strict = ServerOptions::builder().policy(Policy::Fcfs).max_inflight(1);
+        let popts = strict.build().map_err(anyhow::Error::msg)?;
+        let wopts = strict
+            .prefix(fast_prefill::coordinator::PrefixConfig::default())
+            .build()
+            .map_err(anyhow::Error::msg)?;
         let (cold, _) = serve(&dense, &weights, &ptrace, popts, false)?;
         let (warm, _) = serve(&dense, &weights, &ptrace, wopts, false)?;
         // reused-prefix outputs are bit-identical to the cold serve
@@ -234,9 +246,9 @@ fn main() -> Result<()> {
             cfg.flex.is_some(),
             "FASTP_SERVE_FUSED needs sparse mode (IndexGen streams no K blocks when dense)"
         );
-        let mut uopts = ServerOptions::new(workers.max(2), policy);
-        uopts.batch_phases = false;
-        let fopts = ServerOptions::new(workers.max(2), policy);
+        let grouped = ServerOptions::builder().n_workers(workers.max(2)).policy(policy);
+        let uopts = grouped.batch_phases(false).build().map_err(anyhow::Error::msg)?;
+        let fopts = grouped.build().map_err(anyhow::Error::msg)?;
         let (mut unfused, _) = serve(&cfg, &weights, &trace, uopts, false)?;
         let (mut fused, _) = serve(&cfg, &weights, &trace, fopts, false)?;
         // completion order is scheduling-dependent; compare per request
@@ -271,6 +283,80 @@ fn main() -> Result<()> {
             (1.0 - fused_sigu as f64 / base_sigu as f64) * 100.0
         );
         Some((base_sum, fused_sum))
+    } else {
+        None
+    };
+
+    // optional continuous-batching leg (FASTP_SERVE_DECODE=1, dense
+    // mode): a long Batch prefill anchor plus short Interactive requests
+    // that continue into decode, served monolithic vs chunked on one
+    // worker. Chunked slices release the engine at every slice boundary,
+    // so the interactive admissions (and their decode steps) slot
+    // between the anchor's chunks instead of waiting out its longest
+    // phases — the Interactive-TTFT win gated below. Outputs and decode
+    // tokens are bit-identical between the legs by construction.
+    let decode_legs = if std::env::var("FASTP_SERVE_DECODE").as_deref() == Ok("1") {
+        let mut dense = cfg.clone();
+        dense.flex = None; // chunked prefill is dense-only
+        let mut dtrace = RequestTrace {
+            requests: vec![TraceRequest {
+                id: 0,
+                spec: PromptSpec { kind: PromptKind::Mixed, tokens: choices[2], seed: 3000 },
+                arrival_us: 0,
+                priority: Priority::Batch,
+                decode_tokens: 0,
+            }],
+        };
+        for i in 1..=3u64 {
+            dtrace.requests.push(TraceRequest {
+                id: i,
+                spec: PromptSpec { kind: PromptKind::Mixed, tokens: choices[0], seed: 3000 + i },
+                arrival_us: 0,
+                priority: Priority::Interactive,
+                decode_tokens: 8,
+            });
+        }
+        let lanes = ServerOptions::builder().policy(Policy::Preemptive).max_inflight(4);
+        let mopts = lanes.build().map_err(anyhow::Error::msg)?;
+        let copts = lanes.prefill_chunk(block).build().map_err(anyhow::Error::msg)?;
+        let (mut mono, _) = serve(&dense, &weights, &dtrace, mopts, false)?;
+        let (mut chunked, _) = serve(&dense, &weights, &dtrace, copts, false)?;
+        mono.sort_by_key(|c| c.request_id);
+        chunked.sort_by_key(|c| c.request_id);
+        for (a, b) in mono.iter().zip(&chunked) {
+            assert_eq!(a.request_id, b.request_id);
+            assert_eq!(a.run.first_token, b.run.first_token, "decode req {}", a.request_id);
+            assert_eq!(a.run.logits_last, b.run.logits_last, "decode req {}", a.request_id);
+            assert_eq!(
+                a.decode_tokens, b.decode_tokens,
+                "decode req {}: chunked serving changed generated tokens",
+                a.request_id
+            );
+        }
+        let mono_sum = summarize(&mono);
+        let chunk_sum = summarize(&chunked);
+        println!("{}", mono_sum.render("decode-mono "));
+        println!("{}", chunk_sum.render("decode-chunk"));
+        assert_eq!(chunk_sum.decode_tokens, 24, "three interactives x 8 tokens");
+        assert!(chunk_sum.tpot_mean_us > 0.0, "decode leg reported no TPOT");
+        println!(
+            "continuous batching: {} decode tok | TPOT {:.2} ms | ITL p95 {:.2} ms | \
+             {:.0} tok/s | interactive mean TTFT {:.1} -> {:.1} ms",
+            chunk_sum.decode_tokens,
+            chunk_sum.tpot_mean_us / 1e3,
+            chunk_sum.itl_p95_us / 1e3,
+            chunk_sum.decode_tokens_per_s,
+            mono_sum.interactive.ttft_mean_ms,
+            chunk_sum.interactive.ttft_mean_ms
+        );
+        assert!(
+            chunk_sum.interactive.ttft_mean_ms < mono_sum.interactive.ttft_mean_ms,
+            "chunked prefill did not cut Interactive mean TTFT vs monolithic \
+             ({:.1} ms vs {:.1} ms)",
+            chunk_sum.interactive.ttft_mean_ms,
+            mono_sum.interactive.ttft_mean_ms
+        );
+        Some((mono_sum, chunk_sum))
     } else {
         None
     };
@@ -320,6 +406,10 @@ fn main() -> Result<()> {
         if let Some((u, f)) = &fused_legs {
             legs.push(u.to_json("indexgen_unfused"));
             legs.push(f.to_json("indexgen_fused"));
+        }
+        if let Some((m, c)) = &decode_legs {
+            legs.push(m.to_json("decode_monolithic"));
+            legs.push(c.to_json("decode_chunked"));
         }
         let json = format!(
             "{{\"policy\": \"{policy:?}\", \"arrival\": \"{}\", \"legs\": [{}]}}\n",

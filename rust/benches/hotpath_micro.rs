@@ -12,7 +12,7 @@ use std::sync::{Arc, Mutex};
 
 use fast_prefill::config::{FlexParams, BLOCK, TINY};
 use fast_prefill::coordinator::joblist::build_schedule;
-use fast_prefill::coordinator::{Engine, EngineConfig, PrefixConfig, PrefixStore};
+use fast_prefill::coordinator::{Engine, EngineConfig, PrefillArgs, PrefixConfig, PrefixStore};
 use fast_prefill::flexprefill::{coverage, scores};
 use fast_prefill::kvcache::LivenessCache;
 use fast_prefill::model::forward::{attn_step_w8a8, prefill_reference_ctx};
@@ -338,6 +338,45 @@ fn main() {
          (K stream priced once instead of per lane)"
     );
 
+    // --- decode step @4K context: the continuous-batching work unit ---
+    // (the acceptance benchmark of decode co-scheduling: one token through
+    // the full layer stack, attending over the 4K-token KV cache captured
+    // at prefill. Mean step time is the server's TPOT floor at this
+    // context; the armed baseline guards the decode hot loop against
+    // regressions the prefill benches can't see.)
+    let mut dcfg = EngineConfig::new_native(TINY.clone());
+    dcfg.flex = None; // decode attention is dense by definition
+    dcfg.threads = 1;
+    let mut eng_dec = Engine::new_native(dcfg).unwrap();
+    let mut dst = eng_dec
+        .prefill_start_with(
+            10,
+            &toks,
+            PrefillArgs { chunk_blocks: 0, capture_decode: true },
+        )
+        .unwrap();
+    let drun = loop {
+        if let Some(run) = eng_dec.phase_step(&mut dst).unwrap() {
+            break run;
+        }
+    };
+    // seed far more steps than the bench will take so the state never
+    // finishes mid-closure; the KV grows one token per step, a <1% drift
+    // over a bench run at 4K context
+    let mut dstate = eng_dec.decode_start(10, &drun, usize::MAX).unwrap();
+    let r_decode = bench_for("decode_step @4K context (dense, 1 thread)", 500, 5, || {
+        black_box(eng_dec.decode_step(&mut dstate).unwrap());
+    });
+    println!("{r_decode}");
+    println!(
+        "    -> {:.1} us/token TPOT floor at 4K context ({} tokens decoded, \
+         KV now {} tokens)",
+        r_decode.mean_ns / 1000.0,
+        dstate.tokens.len(),
+        dstate.context_tokens()
+    );
+    assert!(dstate.hbm_read_bytes > 0, "decode steps never priced KV reads");
+
     // machine-readable summary for the bench trajectory (CI artifact)
     let json_path = std::env::var("FASTP_BENCH_JSON")
         .unwrap_or_else(|_| "target/hotpath_micro.json".into());
@@ -358,7 +397,9 @@ fn main() {
          \"rope_4k\": {{\"scalar_ns\": {:.1}, \"simd_ns\": {:.1}, \
          \"speedup\": {:.3}, \"bit_identical\": true}},\n  \
          \"index_gen_4k\": {{\"solo_ns\": {:.1}, \"fused_ns\": {:.1}, \
-         \"speedup\": {:.3}, \"bit_identical\": true}}\n}}\n",
+         \"speedup\": {:.3}, \"bit_identical\": true}},\n  \
+         \"decode_step_4k\": {{\"step_ns\": {:.1}, \"context_tokens\": 4096, \
+         \"bit_identical\": true}}\n}}\n",
         std::env::consts::ARCH,
         detected.name(),
         simd::active().name(),
@@ -386,6 +427,7 @@ fn main() {
         r_ig_solo.mean_ns,
         r_ig_fused.mean_ns,
         index_gen_speedup,
+        r_decode.mean_ns,
     );
     if let Some(dir) = std::path::Path::new(&json_path).parent() {
         if !dir.as_os_str().is_empty() {

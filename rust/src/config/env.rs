@@ -1,0 +1,87 @@
+//! One env-knob helper: every `FASTP_*` runtime override goes through
+//! [`knob`] — read, parse/validate, **warn-and-default** on bad input.
+//!
+//! The parse functions stay next to the subsystems that own them
+//! (`tensor::tile::parse_tile_override`, `tensor::tune::parse_autotune_mode`,
+//! `coordinator::server::{parse_phase_batch,parse_prefill_chunk}`,
+//! `util::pool::parse_threads`, `tensor::simd::resolve`) so each error
+//! message names its variable and constraint; this module owns only the
+//! read-validate-warn-default *shape*, so no knob can drift into
+//! panicking or silently ignoring bad input.
+//!
+//! Knobs are typically resolved once per process behind a `OnceLock` at
+//! the call site (env mutation mid-run must not flip kernel selection
+//! under a running engine); [`knob`] itself is stateless and pure given
+//! the environment, which is what the unit tests poke.
+
+/// Read env var `name`; unset returns `default()`, a value that parses
+/// returns it, and a value that fails `parse` warns on stderr and
+/// returns `default()`. `parse` errors should name the variable and the
+/// constraint (every `parse_*` in this crate does).
+pub fn knob<T>(
+    name: &str,
+    parse: impl FnOnce(&str) -> Result<T, String>,
+    default: impl FnOnce() -> T,
+) -> T {
+    match std::env::var(name) {
+        Err(_) => default(),
+        Ok(raw) => match parse(&raw) {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("warning: ignoring invalid {e}; using default");
+                default()
+            }
+        },
+    }
+}
+
+/// [`knob`] for the common case of a `Copy` default value.
+pub fn knob_or<T: Copy>(name: &str, parse: impl FnOnce(&str) -> Result<T, String>, default: T) -> T {
+    knob(name, parse, || default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_pos(raw: &str) -> Result<usize, String> {
+        raw.trim()
+            .parse::<usize>()
+            .ok()
+            .filter(|&n| n > 0)
+            .ok_or_else(|| format!("TEST_KNOB={raw:?} must be a positive integer"))
+    }
+
+    #[test]
+    fn unset_returns_default_without_parsing() {
+        std::env::remove_var("FASTP_TEST_KNOB_UNSET");
+        let v = knob("FASTP_TEST_KNOB_UNSET", |_| panic!("must not parse"), || 7usize);
+        assert_eq!(v, 7);
+    }
+
+    #[test]
+    fn valid_value_wins_over_default() {
+        std::env::set_var("FASTP_TEST_KNOB_VALID", "12");
+        assert_eq!(knob_or("FASTP_TEST_KNOB_VALID", parse_pos, 7), 12);
+        std::env::remove_var("FASTP_TEST_KNOB_VALID");
+    }
+
+    #[test]
+    fn invalid_value_warns_and_defaults() {
+        // the warning itself goes to stderr; observable behavior is the
+        // defaulted value (and that we did not panic)
+        std::env::set_var("FASTP_TEST_KNOB_BAD", "zero");
+        assert_eq!(knob_or("FASTP_TEST_KNOB_BAD", parse_pos, 7), 7);
+        std::env::set_var("FASTP_TEST_KNOB_BAD", "0");
+        assert_eq!(knob_or("FASTP_TEST_KNOB_BAD", parse_pos, 7), 7);
+        std::env::remove_var("FASTP_TEST_KNOB_BAD");
+    }
+
+    #[test]
+    fn lazy_default_only_runs_when_needed() {
+        std::env::set_var("FASTP_TEST_KNOB_LAZY", "3");
+        let v = knob("FASTP_TEST_KNOB_LAZY", parse_pos, || panic!("default must stay lazy"));
+        assert_eq!(v, 3);
+        std::env::remove_var("FASTP_TEST_KNOB_LAZY");
+    }
+}

@@ -2,6 +2,7 @@
 //! hyper-parameters, and run settings parsed from the CLI.
 
 pub mod accel;
+pub mod env;
 pub mod model;
 
 pub use accel::{a5000, u280_cacheless, u280_dsp_only, u280_fast_prefill, FpgaConfig, GpuConfig};

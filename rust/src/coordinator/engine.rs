@@ -42,10 +42,11 @@ use crate::coordinator::joblist::{
     build_schedule, build_schedule_batch, Schedule, DEFAULT_WAVE_QBLOCKS,
 };
 use crate::coordinator::prefix::{self, PrefixStore};
-use crate::coordinator::walk::{k_block_bytes, IndexGenWalk, ScheduleWalk};
+use crate::coordinator::walk::{k_block_bytes, DecodeStepWalk, IndexGenWalk, ScheduleWalk};
 use crate::flexprefill::{generate_head_index, scores, HeadIndex, HeadPattern, HeadStats};
 use crate::kvcache::{CacheStats, LivenessCache};
 use crate::metrics::PrefillMetrics;
+use crate::model::decode::{DecodeKv, Decoder};
 use crate::model::forward::{self as fwd, attn_finalize, ChunkQkv};
 use crate::model::ModelWeights;
 use crate::runtime::{literal_f32, literal_i8, Arg, Runtime};
@@ -199,6 +200,27 @@ pub struct PrefillState {
     chunks: Option<Vec<ChunkQkv>>,
     indices: Option<Vec<HeadIndex>>,
     attn: Option<Vec<Vec<f32>>>,
+    // ---- chunked prefill (token-slice scheduling) ----
+    /// Token-slice width in BLOCK chunks (0 = monolithic). When set, the
+    /// layer loop runs once per slice: the outer loop walks token slices
+    /// `[chunk_from, chunk_to)` and the inner loop walks layers, with each
+    /// layer's KV retained in `layer_kv` between slices. Dense causal
+    /// attention, absolute RoPE and per-chunk quant scales make each slice
+    /// closed over its predecessors, so the chunked walk is bit-identical
+    /// to the monolithic one (the same argument as prefix resume).
+    chunk_blocks: usize,
+    /// Current slice bounds in BLOCK chunks (monolithic: `[0, n)`).
+    chunk_from: usize,
+    chunk_to: usize,
+    /// Retained per-layer KV from completed slices, `layer_kv[layer]`
+    /// holding chunks `[0, chunk_from)` (empty when monolithic).
+    layer_kv: Vec<Vec<ChunkQkv>>,
+    /// Decode-seed capture: per-layer inputs (the rows entering each
+    /// layer's QKV projection), accumulated slice by slice. `Some` iff the
+    /// request continues into decode ([`PrefillArgs::capture_decode`]) —
+    /// exactly what [`crate::model::decode::Decoder::from_prefill_inputs`]
+    /// consumes.
+    capture: Option<Vec<MatF32>>,
     // ---- cross-request prefix KV reuse (coordinator::prefix) ----
     /// Leading blocks covered by the prefix store (0 = cold start). The
     /// per-layer phases skip QKV/SAU/FFN work below this block index.
@@ -235,8 +257,41 @@ impl PrefillState {
         self.resume_from
     }
 
+    /// True when this prefill runs as token slices (chunked prefill).
+    pub fn chunked(&self) -> bool {
+        self.chunk_blocks > 0
+    }
+
+    /// Zero-based index of the current token slice (always 0 monolithic).
+    pub fn chunk_index(&self) -> usize {
+        if self.chunk_blocks > 0 { self.chunk_from / self.chunk_blocks } else { 0 }
+    }
+
+    /// Current slice bounds `[from, to)` in BLOCK chunks.
+    pub fn chunk_cursor(&self) -> (usize, usize) {
+        (self.chunk_from, self.chunk_to)
+    }
+
+    /// Block range the current layer pass computes: the active token
+    /// slice when chunked, else the novel suffix above any prefix resume.
+    fn slice_bounds(&self) -> (usize, usize) {
+        if self.chunk_blocks > 0 {
+            (self.chunk_from, self.chunk_to)
+        } else {
+            (self.resume_from, self.n)
+        }
+    }
+
+    /// KV extent (blocks) the current SAU pass attends over: the slice's
+    /// end when chunked (earlier slices' KV is retained and visible),
+    /// else the full context.
+    fn kv_extent(&self) -> usize {
+        if self.chunk_blocks > 0 { self.chunk_to } else { self.n }
+    }
+
     /// Phase steps left before this request finishes, counting the phase
-    /// it is currently parked at (0 once [`Phase::Done`]).
+    /// it is currently parked at (0 once [`Phase::Done`]). Chunked states
+    /// count the full 4-phase layer walk of every remaining token slice.
     pub fn remaining_phase_steps(&self) -> usize {
         if self.phase == Phase::Done {
             return 0;
@@ -248,7 +303,13 @@ impl PrefillState {
             Phase::FfnLogits => 1,
             Phase::Done => 0,
         };
-        (self.n_layers.saturating_sub(self.layer + 1)) * 4 + in_layer
+        let this_pass = (self.n_layers.saturating_sub(self.layer + 1)) * 4 + in_layer;
+        if self.chunk_blocks == 0 {
+            return this_pass;
+        }
+        let remaining_blocks = self.n.saturating_sub(self.chunk_to);
+        let slices_after = (remaining_blocks + self.chunk_blocks - 1) / self.chunk_blocks;
+        this_pass + slices_after * self.n_layers * 4
     }
 
     /// Scheduler remaining-cost estimate: remaining phase steps weighted
@@ -257,8 +318,13 @@ impl PrefillState {
     /// runnable requests by. The same units as
     /// [`crate::coordinator::server`]'s queued-request estimate
     /// (`4 * n_layers * tokens`), so parked and queued work compare.
+    /// Chunked states weight each step by the slice's tokens, so a
+    /// chunked and a monolithic prefill of the same context start from
+    /// (approximately) the same total cost.
     pub fn remaining_cost(&self) -> u64 {
-        self.remaining_phase_steps() as u64 * self.s as u64
+        let step_tokens =
+            if self.chunk_blocks > 0 { (self.chunk_blocks * BLOCK).min(self.s) } else { self.s };
+        self.remaining_phase_steps() as u64 * step_tokens as u64
     }
 }
 
@@ -273,6 +339,100 @@ pub struct PrefillRun {
     pub index_sets: Vec<Vec<HeadIndex>>,
     /// Final-layer hidden state of the last chunk (validation hook).
     pub hidden_last_chunk: Vec<f32>,
+    /// Captured per-layer inputs for decode seeding (`Some` iff the
+    /// prefill ran with [`PrefillArgs::capture_decode`]) — feed
+    /// [`crate::model::decode::Decoder::from_prefill_inputs`] or
+    /// [`Engine::decode_start`].
+    pub decode_inputs: Option<Vec<MatF32>>,
+}
+
+/// Admission options for [`Engine::prefill_start_with`] — how the
+/// request's lifecycle continues past plain monolithic prefill.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PrefillArgs {
+    /// Token-slice width in BLOCK chunks (0 = monolithic). Chunking is a
+    /// dense-only transform (sparse SIGU is not chunk-closed, the same
+    /// restriction as prefix reuse): on a sparse engine, or when the
+    /// slice covers the whole context, the request silently runs
+    /// monolithic. Chunked requests skip prefix participation.
+    pub chunk_blocks: usize,
+    /// Capture each layer's input rows for decode seeding (the request
+    /// continues into token generation). Capturing requests skip prefix
+    /// resume: store-served blocks leave hidden rows below the resume
+    /// point stale, which decode seeding must read.
+    pub capture_decode: bool,
+}
+
+/// Append hidden rows `[from*BLOCK, to*BLOCK)` to the layer's decode-seed
+/// capture. Chunked prefills call this once per (slice, layer) with
+/// advancing slices, so each layer's capture accumulates its full input
+/// in token order.
+fn capture_layer_input(cap: &mut [MatF32], layer: usize, hidden: &MatF32, from: usize, to: usize) {
+    let d = hidden.cols;
+    let dst = &mut cap[layer];
+    debug_assert_eq!(dst.cols, d);
+    debug_assert_eq!(dst.rows, from * BLOCK, "capture slices must arrive in order");
+    dst.rows += (to - from) * BLOCK;
+    dst.data.extend_from_slice(&hidden.data[from * BLOCK * d..to * BLOCK * d]);
+}
+
+/// A request parked between decode steps: the detached KV/position of a
+/// [`crate::model::decode::Decoder`] plus serving counters. One decode
+/// step is one scheduler work unit — phase-sized, so the serving loop can
+/// slot steps between co-resident prefill chunks. Created by
+/// [`Engine::decode_start`] from a finished capture-enabled prefill and
+/// advanced by [`Engine::decode_step`] / [`Engine::decode_step_group`];
+/// the emitted tokens are bit-identical to a solo
+/// [`crate::model::decode::Decoder::generate`] over the same prefill
+/// (decode is backend/thread-count invariant, pinned by
+/// `decode_is_deterministic`).
+pub struct DecodeState {
+    pub request_id: u64,
+    kv: Vec<DecodeKv>,
+    pos: usize,
+    /// The next step's input token (prefill's first token initially).
+    last: u8,
+    /// Tokens generated so far (excludes prefill's first token).
+    pub tokens: Vec<u8>,
+    /// Steps left before the request completes.
+    remaining: usize,
+    /// Per-step wall-clock (us) — TPOT mean / inter-token-latency tails.
+    pub step_us: Vec<f64>,
+    /// Per-step KV gather/append traffic priced through the canonical
+    /// [`DecodeStepWalk`] — the same derivation `sim::simulate_decode_steps`
+    /// prices, so engine and simulator decode bytes agree exactly.
+    pub hbm_read_bytes: u64,
+    pub hbm_write_bytes: u64,
+}
+
+impl DecodeState {
+    /// True once every requested token has been generated.
+    pub fn done(&self) -> bool {
+        self.remaining == 0
+    }
+
+    /// Zero-based index of the next decode step.
+    pub fn step_index(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// Tokens resident in the KV cache (context + generated so far).
+    pub fn context_tokens(&self) -> usize {
+        self.pos
+    }
+
+    pub fn remaining_steps(&self) -> usize {
+        self.remaining
+    }
+
+    /// Scheduler remaining-cost estimate, in the same units as
+    /// [`PrefillState::remaining_cost`]. A decode step touches one token
+    /// per layer walk, so its cost is tiny next to any prefill phase —
+    /// which is exactly why a preemptive policy slots decode steps
+    /// between prefill chunks (latency-critical, near-zero cost).
+    pub fn remaining_cost(&self) -> u64 {
+        self.remaining as u64
+    }
 }
 
 /// The prefill engine (one optional PJRT runtime + one shared model
@@ -430,15 +590,33 @@ impl Engine {
     /// state resumes mid-trace at the first novel block, capped at `n - 1`
     /// so the finish phase always has fresh last-chunk hidden rows.
     pub fn prefill_start(&self, request_id: u64, tokens: &[u8]) -> Result<PrefillState> {
+        self.prefill_start_with(request_id, tokens, PrefillArgs::default())
+    }
+
+    /// [`Engine::prefill_start`] with lifecycle options: chunked token
+    /// slices and/or decode-seed capture (see [`PrefillArgs`]).
+    pub fn prefill_start_with(
+        &self,
+        request_id: u64,
+        tokens: &[u8],
+        args: PrefillArgs,
+    ) -> Result<PrefillState> {
         let s = tokens.len();
         anyhow::ensure!(s > 0 && s % BLOCK == 0, "context must be a positive multiple of {BLOCK}");
         let n = s / BLOCK;
         let n_layers = self.cfg.model.n_layers;
+        // chunking is dense-only and meaningful only when it splits the
+        // context into more than one slice
+        let chunk_blocks = if self.cfg.flex.is_some() || args.chunk_blocks >= n {
+            0
+        } else {
+            args.chunk_blocks
+        };
         let mut resume_from = 0usize;
         let mut reused: Vec<Vec<ChunkQkv>> = Vec::new();
         let mut prefix_chain = Vec::new();
         let mut prefix_tokens = Vec::new();
-        if self.cfg.flex.is_none() {
+        if self.cfg.flex.is_none() && chunk_blocks == 0 && !args.capture_decode {
             if let Some(store) = &self.prefix {
                 let hit = store.lock().unwrap().lookup(tokens, n - 1, n_layers);
                 resume_from = hit.covered;
@@ -486,6 +664,24 @@ impl Engine {
             chunks: None,
             indices: None,
             attn: None,
+            chunk_blocks,
+            chunk_from: 0,
+            chunk_to: if chunk_blocks > 0 { chunk_blocks } else { n },
+            layer_kv: if chunk_blocks > 0 {
+                (0..n_layers).map(|_| Vec::new()).collect()
+            } else {
+                Vec::new()
+            },
+            capture: if args.capture_decode {
+                let d = self.cfg.model.d_model;
+                Some(
+                    (0..n_layers)
+                        .map(|_| MatF32 { rows: 0, cols: d, data: Vec::new() })
+                        .collect(),
+                )
+            } else {
+                None
+            },
             resume_from,
             reused,
             prefix_chain,
@@ -545,14 +741,23 @@ impl Engine {
     pub fn phase_qkv(&mut self, st: &mut PrefillState) -> Result<()> {
         anyhow::ensure!(st.phase == Phase::Qkv, "phase_qkv in {:?}", st.phase);
         let t0 = Instant::now();
-        let mut chunks = if st.resume_from > 0 {
+        let (from, to) = st.slice_bounds();
+        // decode-seed capture: the rows entering this layer's QKV are
+        // exactly what `Decoder::from_prefill_inputs` re-projects
+        if let Some(cap) = st.capture.as_mut() {
+            capture_layer_input(cap, st.layer, &st.hidden, from, to);
+        }
+        let mut chunks = if st.chunked() {
+            // KV retained from completed token slices (blocks [0, from))
+            std::mem::take(&mut st.layer_kv[st.layer])
+        } else if st.resume_from > 0 {
             std::mem::take(&mut st.reused[st.layer])
         } else {
             Vec::new()
         };
-        chunks.extend(self.run_qkv_layer(st.layer, &st.hidden, st.resume_from, st.n)?);
+        chunks.extend(self.run_qkv_layer(st.layer, &st.hidden, from, to)?);
         st.metrics.t_qkv_us += t0.elapsed().as_micros() as f64;
-        st.qkv_jobs += st.n - st.resume_from;
+        st.qkv_jobs += to - from;
         if !st.prefix_chain.is_empty() {
             st.publish_chunks.push(chunks.clone());
         }
@@ -572,8 +777,9 @@ impl Engine {
             && self.cfg.native_linear
             && states.iter().all(|s| s.phase == Phase::Qkv && s.layer == states[0].layer)
             // resumed lanes compute a chunk suffix, not the full range —
-            // keep them out of the fused fan-out so splicing stays local
-            && states.iter().all(|s| s.resume_from == 0);
+            // keep them out of the fused fan-out so splicing stays local;
+            // chunked lanes likewise compute only the active token slice
+            && states.iter().all(|s| s.resume_from == 0 && !s.chunked());
         if !fusable {
             for st in states.iter_mut() {
                 self.phase_qkv(st)?;
@@ -581,6 +787,11 @@ impl Engine {
             return Ok(());
         }
         let li = states[0].layer;
+        for st in states.iter_mut() {
+            if let Some(cap) = st.capture.as_mut() {
+                capture_layer_input(cap, li, &st.hidden, 0, st.n);
+            }
+        }
         let t0 = Instant::now();
         let mut jobs: Vec<(usize, usize)> = Vec::new(); // (lane, chunk)
         for (lane, st) in states.iter().enumerate() {
@@ -616,10 +827,15 @@ impl Engine {
     pub fn phase_index_gen(&mut self, st: &mut PrefillState) -> Result<()> {
         anyhow::ensure!(st.phase == Phase::IndexGen, "phase_index_gen in {:?}", st.phase);
         let t0 = Instant::now();
+        // chunked: index only the active slice's query blocks over the
+        // KV extent so far; monolithic: the novel suffix over the full
+        // context (identical when neither chunked nor resumed)
+        let (from, _) = st.slice_bounds();
+        let extent = st.kv_extent();
         let indices = {
             let chunks =
                 st.chunks.as_ref().ok_or_else(|| anyhow!("index_gen without qkv chunks"))?;
-            self.run_sigu_layer(chunks, st.n, st.resume_from)?
+            self.run_sigu_layer(chunks, extent, from)?
         };
         st.metrics.t_sigu_us += t0.elapsed().as_micros() as f64;
         st.sigu_jobs += self.cfg.model.n_heads;
@@ -724,16 +940,25 @@ impl Engine {
         let indices = st.indices.take().ok_or_else(|| anyhow!("sau without indices"))?;
         let schedule = build_schedule(&indices, cfg.group_size(), self.cfg.wave_qblocks);
         st.metrics.jobs += schedule.total_jobs;
-        let mut cache = self.new_layer_cache(st.n, &schedule);
+        // chunked slices attend over the KV extent retained so far; each
+        // slice's walk starts cold (no seed_prefix) — earlier slices' KV
+        // re-fetches are real traffic the chunked schedule pays, and the
+        // pricing reflects it honestly
+        let extent = st.kv_extent();
+        let mut cache = self.new_layer_cache(extent, &schedule);
         if st.resume_from > 0 {
             // store-served prefix blocks arrive already resident, so reuse
             // shows up as priced cache hits on the walk below
             prefix::seed_prefix(&mut cache, schedule.n_kv_heads, st.resume_from);
         }
-        let attn = self.run_sau_layer(&chunks, &schedule, &mut cache, st.n)?;
+        let attn = self.run_sau_layer(&chunks, &schedule, &mut cache, extent)?;
         self.absorb_cache_stats(st, cache.stats(), schedule.total_jobs);
         st.metrics.t_sau_us += t0.elapsed().as_micros() as f64;
         st.index_sets.push(indices);
+        if st.chunked() {
+            // retain this layer's KV for the next token slice
+            st.layer_kv[st.layer] = chunks;
+        }
         st.attn = Some(attn);
         st.phase = Phase::FfnLogits;
         Ok(())
@@ -751,7 +976,9 @@ impl Engine {
     pub fn phase_sau_batch(&mut self, states: &mut [PrefillState]) -> Result<()> {
         let fusable = states.len() > 1
             && self.cfg.native_sau
-            && states.iter().all(|s| s.phase == Phase::Sau);
+            // chunked lanes size their cache to the slice's KV extent and
+            // retain chunks across slices — solo-step them
+            && states.iter().all(|s| s.phase == Phase::Sau && !s.chunked());
         if !fusable {
             for st in states.iter_mut() {
                 self.phase_sau(st)?;
@@ -817,7 +1044,7 @@ impl Engine {
         let fusable = states.len() > 1
             && self.cfg.native_linear
             && states.iter().all(|s| s.phase == Phase::FfnLogits && s.layer == states[0].layer)
-            && states.iter().all(|s| s.resume_from == 0);
+            && states.iter().all(|s| s.resume_from == 0 && !s.chunked());
         if !fusable {
             return states.iter_mut().map(|st| self.phase_ffn_logits(st)).collect();
         }
@@ -863,16 +1090,25 @@ impl Engine {
         let t0 = Instant::now();
         let attn = st.attn.take().ok_or_else(|| anyhow!("ffn without sau output"))?;
         let li = st.layer;
-        let n = st.n;
+        let (from, to) = st.slice_bounds();
         // prefix chunks' hidden rows go stale after a skipped tail, but
         // nothing downstream reads them: QKV splices stored chunks for
         // covered blocks and `finish` reads only the last (novel) chunk
-        self.run_tail_layer(li, &mut st.hidden, &attn, st.resume_from, n)?;
+        self.run_tail_layer(li, &mut st.hidden, &attn, from, to)?;
         st.metrics.t_ffn_us += t0.elapsed().as_micros() as f64;
-        st.ffn_jobs += n - st.resume_from;
+        st.ffn_jobs += to - from;
         st.layer += 1;
         if st.layer < self.cfg.model.n_layers {
             st.phase = Phase::Qkv;
+            return Ok(None);
+        }
+        if st.chunked() && st.chunk_to < st.n {
+            // token slice complete: rewind to layer 0 with the cursor
+            // advanced — the outer loop of the chunked walk
+            st.layer = 0;
+            st.phase = Phase::Qkv;
+            st.chunk_from = st.chunk_to;
+            st.chunk_to = (st.chunk_to + st.chunk_blocks).min(st.n);
             return Ok(None);
         }
         self.finish(st).map(Some)
@@ -925,6 +1161,16 @@ impl Engine {
         metrics.cache_hit_rate =
             if st.cache_lookups > 0 { st.cache_hits as f64 / st.cache_lookups as f64 } else { 0.0 };
 
+        let decode_inputs = st.capture.take();
+        if let Some(cap) = &decode_inputs {
+            debug_assert!(
+                cap.iter().all(|m| m.rows == st.s),
+                "decode capture must cover the full context per layer"
+            );
+        }
+        // chunked runs retain per-layer KV between slices; free it now
+        st.layer_kv = Vec::new();
+
         Ok(PrefillRun {
             first_token,
             logits_last: last_row.to_vec(),
@@ -932,7 +1178,116 @@ impl Engine {
             patterns: std::mem::take(&mut st.patterns),
             index_sets: std::mem::take(&mut st.index_sets),
             hidden_last_chunk: last,
+            decode_inputs,
         })
+    }
+
+    // ------------------------------------------------------------------
+    // decode steps (the serving scheduler's post-prefill work units)
+    // ------------------------------------------------------------------
+
+    /// Seed a decode unit from a finished prefill. Requires the prefill
+    /// to have captured its per-layer inputs
+    /// ([`PrefillArgs::capture_decode`]); the KV cache is re-derived from
+    /// them through `Decoder::from_prefill_inputs`, mirroring prefill's
+    /// per-BLOCK quantization exactly.
+    pub fn decode_start(
+        &self,
+        request_id: u64,
+        run: &PrefillRun,
+        n_tokens: usize,
+    ) -> Result<DecodeState> {
+        let inputs = run.decode_inputs.as_ref().ok_or_else(|| {
+            anyhow!("decode_start needs a capture-enabled prefill (PrefillArgs::capture_decode)")
+        })?;
+        let dec = Decoder::from_prefill_inputs_ctx(&self.weights, self.ctx.clone(), inputs);
+        let (kv, pos) = dec.into_parts();
+        Ok(DecodeState {
+            request_id,
+            kv,
+            pos,
+            last: run.first_token,
+            tokens: Vec::new(),
+            remaining: n_tokens,
+            step_us: Vec::new(),
+            hbm_read_bytes: 0,
+            hbm_write_bytes: 0,
+        })
+    }
+
+    /// One decode step: reattach the parked KV, emit one token, park
+    /// again. KV gather/append traffic is priced through the canonical
+    /// [`DecodeStepWalk`] at the pre-step position.
+    pub fn decode_step(&mut self, st: &mut DecodeState) -> Result<u8> {
+        anyhow::ensure!(st.remaining > 0, "decode_step on a finished request");
+        let t0 = Instant::now();
+        let pre_pos = st.pos;
+        let kv = std::mem::take(&mut st.kv);
+        let mut dec = Decoder::from_parts(&self.weights, self.ctx.clone(), kv, pre_pos);
+        let tok = dec.step(st.last);
+        let (kv, pos) = dec.into_parts();
+        st.kv = kv;
+        st.pos = pos;
+        st.last = tok;
+        st.tokens.push(tok);
+        st.remaining -= 1;
+        let t = DecodeStepWalk::new(&self.cfg.model).price(pre_pos);
+        st.hbm_read_bytes += t.read_bytes;
+        st.hbm_write_bytes += t.write_bytes;
+        st.step_us.push(t0.elapsed().as_micros() as f64);
+        Ok(tok)
+    }
+
+    /// Fused decode step over co-resident requests: every lane's
+    /// matvec-bound layer walk runs as one pool fan-out, sharing the
+    /// weight stream across the batch axis (the decode analogue of the
+    /// fused prefill phases). Each lane steps on its own single-threaded
+    /// child context — decode results are backend- and thread-count
+    /// invariant (`decode_is_deterministic`), so fused lanes are
+    /// bit-identical to solo stepping. As with the fused prefill phases,
+    /// the fused wall-clock time is charged to every lane.
+    pub fn decode_step_group(&mut self, states: &mut [&mut DecodeState]) -> Result<Vec<u8>> {
+        if states.len() == 1 {
+            let tok = self.decode_step(states[0])?;
+            return Ok(vec![tok]);
+        }
+        for st in states.iter() {
+            anyhow::ensure!(st.remaining > 0, "decode_step on a finished request");
+        }
+        let t0 = Instant::now();
+        let walk = DecodeStepWalk::new(&self.cfg.model);
+        let backend = self.ctx.backend;
+        let tune = self.ctx.tune.clone();
+        let weights: &ModelWeights = &self.weights;
+        let lanes: Vec<Mutex<Option<(Vec<DecodeKv>, usize, u8)>>> = states
+            .iter_mut()
+            .map(|st| Mutex::new(Some((std::mem::take(&mut st.kv), st.pos, st.last))))
+            .collect();
+        let outs = self.ctx.pool.map(lanes.len(), |i| {
+            let (kv, pos, last) = lanes[i].lock().unwrap().take().expect("one take per lane");
+            let ctx =
+                KernelCtx::single_threaded().with_backend(backend).with_tune(tune.clone());
+            let mut dec = Decoder::from_parts(weights, ctx, kv, pos);
+            let tok = dec.step(last);
+            let (kv, pos) = dec.into_parts();
+            (kv, pos, tok)
+        });
+        let dt = t0.elapsed().as_micros() as f64;
+        let mut toks = Vec::with_capacity(states.len());
+        for (st, (kv, pos, tok)) in states.iter_mut().zip(outs) {
+            let pre_pos = st.pos;
+            st.kv = kv;
+            st.pos = pos;
+            st.last = tok;
+            st.tokens.push(tok);
+            st.remaining -= 1;
+            let t = walk.price(pre_pos);
+            st.hbm_read_bytes += t.read_bytes;
+            st.hbm_write_bytes += t.write_bytes;
+            st.step_us.push(dt);
+            toks.push(tok);
+        }
+        Ok(toks)
     }
 
     /// Fold one layer's cache outcomes into the request's running hit-rate

@@ -15,7 +15,12 @@
 //!    novel block, bit-identical to a cold run, with reuse priced through
 //!    the memory spine as seeded cache residency.
 //!  * [`server`]  — request router + phase-pipelined multi-worker serving
-//!    loop over one shared thread budget (serial baseline included).
+//!    loop over one shared thread budget (serial baseline included),
+//!    driving each request through the unified lifecycle
+//!    `Queued -> Prefilling{chunk} -> Decoding{step} -> Done`: prefill
+//!    runs as schedulable token slices (chunked prefill) and decode
+//!    continues as phase-sized per-token steps co-scheduled between
+//!    prefill chunks (continuous batching).
 
 pub mod engine;
 pub mod joblist;
@@ -23,14 +28,20 @@ pub mod prefix;
 pub mod server;
 pub mod walk;
 
-pub use engine::{phase_hint_slot, Engine, EngineConfig, Phase, PrefillRun, PrefillState};
+pub use engine::{
+    phase_hint_slot, DecodeState, Engine, EngineConfig, Phase, PrefillArgs, PrefillRun,
+    PrefillState,
+};
 pub use joblist::{
     build_schedule, build_schedule_batch, cache_key, BatchBlockJobs, BatchJob, BatchSchedule,
     BatchWave, BlockJobs, Job, KvLayout, Schedule, Wave, DEFAULT_WAVE_QBLOCKS,
 };
 pub use prefix::{seed_prefix, EvictPolicy, PrefixConfig, PrefixHit, PrefixStats, PrefixStore};
-pub use server::{Completion, Policy, Server, ServerOptions, DEFAULT_MAX_YIELDS};
+pub use server::{
+    Completion, Lifecycle, Policy, Server, ServerOptions, ServerOptionsBuilder,
+    DEFAULT_MAX_YIELDS,
+};
 pub use walk::{
-    k_block_bytes, BlockOutcome, BlockVisit, IndexGenPricing, IndexGenVisit, IndexGenWalk,
-    LaneVisit, ScheduleWalk,
+    k_block_bytes, kv_token_bytes, BlockOutcome, BlockVisit, DecodeStepTraffic, DecodeStepWalk,
+    IndexGenPricing, IndexGenVisit, IndexGenWalk, LaneVisit, ScheduleWalk,
 };

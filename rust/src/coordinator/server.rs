@@ -7,6 +7,18 @@
 //! context, so SJF cuts mean TTFT under contention; the serving example
 //! reports both).
 //!
+//! Every request moves through one unified lifecycle
+//! ([`Lifecycle`]): `Queued -> Prefilling{chunk} -> Decoding{step} ->
+//! Done`. Prefill optionally runs as *chunked* token slices
+//! ([`ServerOptions::prefill_chunk`] / `FASTP_PREFILL_CHUNK`) so a long
+//! prompt releases the engine at every slice boundary instead of
+//! monopolizing it end-to-end; requests with `decode_tokens > 0`
+//! continue past prefill as per-token decode steps co-scheduled between
+//! prefill work — continuous batching. Decode steps are latency-critical
+//! (a client is waiting on every token): they lead the ready ranking
+//! under every policy, and co-resident decode lanes fuse through the
+//! batch axis ([`crate::coordinator::engine::Engine::decode_step_group`]).
+//!
 //! Two scheduling modes share the same admission queue:
 //!
 //!  * **pipelined** (default): requests flow through the engine's
@@ -24,9 +36,10 @@
 //!    static share of the thread budget — the PR-1 baseline the serving
 //!    example compares against at equal total threads.
 //!
-//! Per-request outputs are bit-identical across modes, worker counts and
-//! thread budgets: phases step in order per request and every kernel
-//! fan-out is thread-count-invariant.
+//! Per-request outputs are bit-identical across modes, worker counts,
+//! thread budgets and chunk sizes: phases step in order per request,
+//! every kernel fan-out is thread-count-invariant, chunked slices are
+//! closed under dense prefill, and decode steps are deterministic.
 
 use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -37,7 +50,8 @@ use anyhow::Result;
 
 use crate::config::{u280_fast_prefill, FpgaConfig, ModelConfig, BLOCK};
 use crate::coordinator::engine::{
-    phase_hint_slot, Engine, EngineConfig, Phase, PrefillRun, PrefillState,
+    phase_hint_slot, DecodeState, Engine, EngineConfig, Phase, PrefillArgs, PrefillRun,
+    PrefillState,
 };
 use crate::coordinator::joblist::KvLayout;
 use crate::coordinator::prefix::{PrefixConfig, PrefixStore};
@@ -58,19 +72,40 @@ pub enum Policy {
     /// estimate) — a queued or parked `Interactive` request takes the
     /// next phase slot ahead of a parked `Batch` prefill (the parked
     /// state *yields*; its phase is never split, so outputs stay
-    /// bit-identical). Starvation-protected: a `Batch` request — parked
-    /// *or* still queued — that has been passed over
-    /// [`ServerOptions::max_yields`] times ages to the front of the rank
-    /// order and drains.
+    /// bit-identical). Parked *decode* steps rank as `Interactive`-class
+    /// regardless of the request's admission class — each step is a
+    /// token a client is actively waiting on — and their tiny remaining
+    /// cost slots them between prefill chunks. Starvation-protected: a
+    /// `Batch` request — parked *or* still queued — that has been passed
+    /// over [`ServerOptions::max_yields`] times ages to the front of the
+    /// rank order and drains.
     Preemptive,
 }
 
+/// Where a request is in its life — the serving layer's single source of
+/// truth for "what happens to this request next": queued requests wait
+/// for admission, prefilling requests step phases (per token-slice when
+/// chunked), decoding requests step tokens, done requests have their
+/// [`Completion`] on the results channel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lifecycle {
+    /// Waiting in the admission queue.
+    Queued,
+    /// Prefill in flight; `chunk` is the token-slice index currently
+    /// being computed (always 0 for monolithic prefill).
+    Prefilling { chunk: usize },
+    /// Decode in flight; `step` is the number of tokens emitted so far.
+    Decoding { step: usize },
+    /// All tokens produced.
+    Done,
+}
+
 /// Default cap on how many states a single fused phase step may take
-/// (QKV/IndexGen/SAU/FFN-tail batching). The *actual* width is chosen
-/// per group at admission time: candidates join while the simulator's
-/// priced marginal TTFT saving stays strictly positive (see
-/// [`form_group`]), clamped by this cap — overridable per server with
-/// [`ServerOptions::max_phase_batch`] or process-wide with
+/// (QKV/IndexGen/SAU/FFN-tail batching, and fused decode lanes). The
+/// *actual* width is chosen per group at admission time: candidates join
+/// while the simulator's priced marginal TTFT saving stays strictly
+/// positive (see [`form_group`]), clamped by this cap — overridable per
+/// server with [`ServerOptions::max_phase_batch`] or process-wide with
 /// [`PHASE_BATCH_ENV`].
 pub const DEFAULT_MAX_PHASE_BATCH: usize = 4;
 
@@ -93,23 +128,44 @@ pub fn parse_phase_batch(raw: &str) -> Result<usize, String> {
     Ok(v)
 }
 
-/// The single `FASTP_PHASE_BATCH` parse point (resolved once per
-/// process). Invalid values warn and fall back to
-/// [`DEFAULT_MAX_PHASE_BATCH`] rather than aborting.
+/// The single `FASTP_PHASE_BATCH` read point (resolved once per process
+/// through [`crate::config::env::knob_or`] — invalid values warn and
+/// fall back to [`DEFAULT_MAX_PHASE_BATCH`] rather than aborting).
 pub fn env_phase_batch() -> usize {
-    *PHASE_BATCH_FROM_ENV.get_or_init(|| match std::env::var(PHASE_BATCH_ENV) {
-        Err(_) => DEFAULT_MAX_PHASE_BATCH,
-        Ok(raw) => match parse_phase_batch(&raw) {
-            Ok(v) => v,
-            Err(e) => {
-                eprintln!(
-                    "warning: ignoring phase-batch override: {e} \
-                     (using default {DEFAULT_MAX_PHASE_BATCH})"
-                );
-                DEFAULT_MAX_PHASE_BATCH
-            }
-        },
+    *PHASE_BATCH_FROM_ENV.get_or_init(|| {
+        crate::config::env::knob_or(PHASE_BATCH_ENV, parse_phase_batch, DEFAULT_MAX_PHASE_BATCH)
     })
+}
+
+/// Environment variable setting the default prefill chunk size in
+/// tokens (validated; see [`parse_prefill_chunk`]). 0 or unset keeps
+/// prefill monolithic; [`ServerOptions::prefill_chunk`] overrides.
+pub const PREFILL_CHUNK_ENV: &str = "FASTP_PREFILL_CHUNK";
+
+static PREFILL_CHUNK_FROM_ENV: OnceLock<usize> = OnceLock::new();
+
+/// Validate a `FASTP_PREFILL_CHUNK` value: a multiple of [`BLOCK`]
+/// tokens (slices are block-aligned so per-BLOCK quant scales and the
+/// schedule walk stay chunk-closed); 0 disables chunking.
+pub fn parse_prefill_chunk(raw: &str) -> Result<usize, String> {
+    let v: usize = raw
+        .trim()
+        .parse()
+        .map_err(|_| format!("{PREFILL_CHUNK_ENV}={raw:?} is not an unsigned integer"))?;
+    if v % BLOCK != 0 {
+        return Err(format!(
+            "{PREFILL_CHUNK_ENV} must be a multiple of {BLOCK} tokens (0 disables chunking)"
+        ));
+    }
+    Ok(v)
+}
+
+/// The single `FASTP_PREFILL_CHUNK` read point (resolved once per
+/// process through [`crate::config::env::knob_or`]; invalid values warn
+/// and keep prefill monolithic).
+pub fn env_prefill_chunk() -> usize {
+    *PREFILL_CHUNK_FROM_ENV
+        .get_or_init(|| crate::config::env::knob_or(PREFILL_CHUNK_ENV, parse_prefill_chunk, 0))
 }
 
 /// Admission threshold for growing a fused phase group (µs of priced
@@ -123,7 +179,9 @@ const MARGINAL_SAVING_FLOOR_US: f64 = 0.0;
 /// and drains.
 pub const DEFAULT_MAX_YIELDS: usize = 256;
 
-/// Server scheduling options.
+/// Server scheduling options. Construct via [`ServerOptions::new`] /
+/// [`ServerOptions::serial`] for the common presets, or
+/// [`ServerOptions::builder`] for validated field-by-field setup.
 #[derive(Clone, Copy, Debug)]
 pub struct ServerOptions {
     /// Phase-worker (pipelined) or engine-worker (serial) thread count.
@@ -138,16 +196,18 @@ pub struct ServerOptions {
     pub total_threads: usize,
     /// Max co-resident requests in the pipeline (0 => `n_workers + 1`,
     /// one extra so the next request's phase 1 can overlap the tail
-    /// phases of the ones in flight). Serial mode ignores this: each
-    /// worker carries exactly one request.
+    /// phases of the ones in flight). A request continuing into decode
+    /// stays in flight until its last token. Serial mode ignores this:
+    /// each worker carries exactly one request.
     pub max_inflight: usize,
     /// Fuse same-phase jobs of co-resident requests into one fan-out.
     pub batch_phases: bool,
-    /// Cap on the fused-group width (states per fused phase step). 0 =>
-    /// the `FASTP_PHASE_BATCH` env override, falling back to
-    /// [`DEFAULT_MAX_PHASE_BATCH`]. The width actually used is adaptive —
-    /// the group grows only while the simulator prices a strictly
-    /// positive marginal saving for the next lane; this is the clamp.
+    /// Cap on the fused-group width (states per fused phase step, decode
+    /// lanes included). 0 => the `FASTP_PHASE_BATCH` env override,
+    /// falling back to [`DEFAULT_MAX_PHASE_BATCH`]. The width actually
+    /// used is adaptive — a prefill group grows only while the simulator
+    /// prices a strictly positive marginal saving for the next lane;
+    /// this is the clamp.
     pub max_phase_batch: usize,
     /// Aging bound for [`Policy::Preemptive`]: after being passed over
     /// this many phase-boundary slots, a parked or queued `Batch` request
@@ -167,6 +227,16 @@ pub struct ServerOptions {
     /// `None` (default) serves every request cold. Dense mode only —
     /// engines with sparse SIGU enabled ignore the store.
     pub prefix: Option<PrefixConfig>,
+    /// Chunked prefill slice size in **tokens** (pipelined mode only).
+    /// 0 => the `FASTP_PREFILL_CHUNK` env override, falling back to
+    /// monolithic prefill. Must be a multiple of [`BLOCK`] (the builder
+    /// validates; a raw field write is rounded down to whole blocks).
+    /// Chunked slices release the engine at every slice boundary, so a
+    /// long prompt no longer monopolizes a worker end-to-end — the
+    /// scheduler can slot interactive admissions and decode steps
+    /// between slices. Dense-only: engines with sparse SIGU fall back to
+    /// monolithic prefill (sparse indices are not chunk-closed).
+    pub prefill_chunk: usize,
 }
 
 impl ServerOptions {
@@ -183,6 +253,7 @@ impl ServerOptions {
             max_yields: 0,
             adaptive_hints: true,
             prefix: None,
+            prefill_chunk: 0,
         }
     }
 
@@ -194,6 +265,120 @@ impl ServerOptions {
             adaptive_hints: false,
             ..ServerOptions::new(n_workers, policy)
         }
+    }
+
+    /// Validated field-by-field construction; starts from
+    /// [`ServerOptions::default`] (one pipelined FCFS worker).
+    pub fn builder() -> ServerOptionsBuilder {
+        ServerOptionsBuilder { opts: ServerOptions::default() }
+    }
+}
+
+impl Default for ServerOptions {
+    /// One pipelined FCFS worker — identical to
+    /// `ServerOptions::new(1, Policy::Fcfs)`.
+    fn default() -> ServerOptions {
+        ServerOptions::new(1, Policy::Fcfs)
+    }
+}
+
+/// Typed builder for [`ServerOptions`]: setters stay `Copy`-cheap and
+/// defer all validation to [`ServerOptionsBuilder::build`], which
+/// returns one actionable error instead of panicking mid-serve or
+/// silently clamping. Presets remain available —
+/// `ServerOptions::new`/`serial` are unchanged — the builder is for
+/// callers composing several non-default knobs (the serving example and
+/// CI legs).
+#[derive(Clone, Copy, Debug)]
+pub struct ServerOptionsBuilder {
+    opts: ServerOptions,
+}
+
+impl ServerOptionsBuilder {
+    pub fn n_workers(mut self, n: usize) -> Self {
+        self.opts.n_workers = n;
+        self
+    }
+
+    pub fn policy(mut self, p: Policy) -> Self {
+        self.opts.policy = p;
+        self
+    }
+
+    /// `false` selects the serial end-to-end baseline (which also
+    /// disables adaptive hints, as [`ServerOptions::serial`] does).
+    pub fn pipelined(mut self, on: bool) -> Self {
+        self.opts.pipelined = on;
+        if !on {
+            self.opts.adaptive_hints = false;
+        }
+        self
+    }
+
+    pub fn total_threads(mut self, n: usize) -> Self {
+        self.opts.total_threads = n;
+        self
+    }
+
+    pub fn max_inflight(mut self, n: usize) -> Self {
+        self.opts.max_inflight = n;
+        self
+    }
+
+    pub fn batch_phases(mut self, on: bool) -> Self {
+        self.opts.batch_phases = on;
+        self
+    }
+
+    pub fn max_phase_batch(mut self, n: usize) -> Self {
+        self.opts.max_phase_batch = n;
+        self
+    }
+
+    pub fn max_yields(mut self, n: usize) -> Self {
+        self.opts.max_yields = n;
+        self
+    }
+
+    pub fn adaptive_hints(mut self, on: bool) -> Self {
+        self.opts.adaptive_hints = on;
+        self
+    }
+
+    pub fn prefix(mut self, p: PrefixConfig) -> Self {
+        self.opts.prefix = Some(p);
+        self
+    }
+
+    /// Chunked prefill slice size in tokens (see
+    /// [`ServerOptions::prefill_chunk`]); must be a multiple of
+    /// [`BLOCK`], checked at [`ServerOptionsBuilder::build`].
+    pub fn prefill_chunk(mut self, tokens: usize) -> Self {
+        self.opts.prefill_chunk = tokens;
+        self
+    }
+
+    /// Validate and produce the options. Errors name the offending
+    /// field and its constraint.
+    pub fn build(self) -> Result<ServerOptions, String> {
+        let o = self.opts;
+        if o.n_workers == 0 {
+            return Err("n_workers must be >= 1".to_string());
+        }
+        if o.prefill_chunk % BLOCK != 0 {
+            return Err(format!(
+                "prefill_chunk must be a multiple of {BLOCK} tokens (0 = monolithic), got {}",
+                o.prefill_chunk
+            ));
+        }
+        if !o.pipelined && o.prefill_chunk > 0 {
+            return Err(
+                "prefill_chunk requires pipelined scheduling (the serial baseline runs \
+                 monolithic prefills)"
+                    .to_string(),
+            );
+        }
+        Ok(o)
     }
 }
 
@@ -209,7 +394,9 @@ pub struct Completion {
     /// Time parked between phases waiting for a worker (us) — the
     /// pipeline-stall component of TTFT (0 in serial mode).
     pub pipeline_wait_us: f64,
-    /// End-to-end latency including queueing (us).
+    /// End-to-end latency including queueing (us). For decoding requests
+    /// this covers generation too — `first_token_us` is the
+    /// user-perceived TTFT.
     pub e2e_us: f64,
     /// Phase-boundary slots this request yielded to higher-ranked
     /// requests ([`Policy::Preemptive`] only; 0 elsewhere). For `Batch`
@@ -217,11 +404,28 @@ pub struct Completion {
     /// this; `Interactive` requests only yield to aged batches and are
     /// not aging-bounded themselves.
     pub preemptions: u64,
+    /// Submission -> first token (us). 0 on prefill-only requests,
+    /// where the first token *is* the end of the request (`e2e_us`).
+    pub first_token_us: f64,
+    /// Tokens generated by decode steps after prefill (empty =
+    /// prefill-only request). Bit-identical to a solo
+    /// [`crate::model::decode::Decoder::generate`] continuation of the
+    /// same prefill.
+    pub decode_tokens: Vec<u8>,
+    /// Wall-clock per decode step (us); fused lanes charge the fused
+    /// step's wall time to every lane, like the fused prefill phases.
+    pub decode_step_us: Vec<f64>,
+    /// Decode-side KV gather/append HBM traffic priced through the
+    /// memory spine ([`crate::coordinator::walk::DecodeStepWalk`]).
+    pub decode_hbm_read_bytes: u64,
+    pub decode_hbm_write_bytes: u64,
 }
 
 impl Completion {
     /// This completion's latency decomposition for
-    /// [`crate::metrics::ServeSummary`] aggregation.
+    /// [`crate::metrics::ServeSummary`] aggregation. TPOT is the mean
+    /// decode-step time; ITL p95 the 95th-percentile step time (equal to
+    /// TPOT only when step times are flat).
     pub fn sample(&self) -> crate::metrics::ServeSample {
         crate::metrics::ServeSample {
             kernel_backend: self.run.metrics.kernel_backend,
@@ -238,6 +442,12 @@ impl Completion {
             sigu_hbm_saved_bytes: self.run.metrics.sigu_hbm_saved_bytes,
             sigu_fused_phases: self.run.metrics.sigu_fused_phases,
             sigu_fused_width_sum: self.run.metrics.sigu_fused_width_sum,
+            first_token_us: self.first_token_us,
+            decode_tokens: self.decode_tokens.len() as u64,
+            tpot_us: crate::util::stats::mean(&self.decode_step_us),
+            itl_p95_us: crate::util::stats::percentile(&self.decode_step_us, 95.0),
+            decode_hbm_read_bytes: self.decode_hbm_read_bytes,
+            decode_hbm_write_bytes: self.decode_hbm_write_bytes,
         }
     }
 }
@@ -256,11 +466,83 @@ struct ReqMeta {
     /// When the state was last parked in the ready set.
     parked_at: Instant,
     pipeline_wait_us: f64,
+    /// Decode steps this request continues into after prefill (from
+    /// [`TraceRequest::decode_tokens`]; 0 = prefill-only).
+    decode_tokens: usize,
+    /// Submission -> first token, recorded when prefill finishes on a
+    /// decoding request (0 until then, and forever on prefill-only
+    /// requests — their first token coincides with `e2e_us`).
+    first_token_us: f64,
 }
 
-/// An in-flight request parked between phases.
+/// One schedulable work unit of an in-flight request: its resumable
+/// prefill state, or — once prefill finished on a decoding request —
+/// its parked decode state (the finished [`PrefillRun`] rides along for
+/// the final [`Completion`]). [`form_group`] never mixes the two kinds
+/// in one fused step.
+enum Unit {
+    Prefill(PrefillState),
+    Decode { state: DecodeState, run: PrefillRun },
+}
+
+impl Unit {
+    fn request_id(&self) -> u64 {
+        match self {
+            Unit::Prefill(st) => st.request_id,
+            Unit::Decode { state, .. } => state.request_id,
+        }
+    }
+
+    /// Lifecycle stage of this parked unit.
+    fn lifecycle(&self) -> Lifecycle {
+        match self {
+            Unit::Prefill(st) => Lifecycle::Prefilling { chunk: st.chunk_index() },
+            Unit::Decode { state, .. } if state.done() => Lifecycle::Done,
+            Unit::Decode { state, .. } => Lifecycle::Decoding { step: state.step_index() },
+        }
+    }
+
+    /// Remaining-work estimate in the shared phase-step cost units
+    /// (decode steps are phase-sized and tiny next to prefill — which is
+    /// exactly why the preemptive rank slots them between prefill
+    /// chunks).
+    fn remaining_cost(&self) -> u64 {
+        match self {
+            Unit::Prefill(st) => st.remaining_cost(),
+            Unit::Decode { state, .. } => state.remaining_cost(),
+        }
+    }
+
+    /// Most-advanced-first ordering key for the non-preemptive policies:
+    /// decode steps lead (their token is due *now*), then prefill by
+    /// (chunk, layer, phase) so older requests drain and TTFT stays low.
+    fn progress_key(&self) -> (usize, usize, u8) {
+        match self {
+            Unit::Prefill(st) => (st.chunk_index(), st.layer(), phase_rank(st.phase())),
+            Unit::Decode { .. } => (usize::MAX, usize::MAX, u8::MAX),
+        }
+    }
+
+    #[cfg(test)]
+    fn prefill(&self) -> &PrefillState {
+        match self {
+            Unit::Prefill(st) => st,
+            Unit::Decode { .. } => panic!("not a prefill unit"),
+        }
+    }
+
+    #[cfg(test)]
+    fn prefill_mut(&mut self) -> &mut PrefillState {
+        match self {
+            Unit::Prefill(st) => st,
+            Unit::Decode { .. } => panic!("not a prefill unit"),
+        }
+    }
+}
+
+/// An in-flight request parked between phase steps.
 struct Pending {
-    state: PrefillState,
+    unit: Unit,
     meta: ReqMeta,
 }
 
@@ -331,8 +613,10 @@ impl Drop for AbortOnPanic<'_> {
 enum Work {
     /// Admit a queued request (build its `PrefillState`).
     Admit(TraceRequest, Instant),
-    /// Step the next phase of these co-resident requests (len > 1 only
-    /// when the group fuses: same phase, and same layer for QKV).
+    /// Step the next phase of these co-resident requests: all prefill or
+    /// all decode, never mixed (len > 1 only when the group fuses — same
+    /// phase, and same layer for QKV, for prefill; any co-parked lanes
+    /// for decode).
     Phases(Vec<Pending>),
 }
 
@@ -390,6 +674,16 @@ impl Server {
         let max_yields = if opts.max_yields > 0 { opts.max_yields } else { DEFAULT_MAX_YIELDS };
         let max_phase_batch =
             if opts.max_phase_batch > 0 { opts.max_phase_batch } else { env_phase_batch() };
+        // resolved chunk size in whole blocks (the builder validates
+        // multiples; a raw field write rounds down). Serial mode is the
+        // monolithic baseline by definition.
+        let chunk_blocks = if !opts.pipelined {
+            0
+        } else {
+            let chunk =
+                if opts.prefill_chunk > 0 { opts.prefill_chunk } else { env_prefill_chunk() };
+            chunk / BLOCK
+        };
         let budget = PoolBudget::new(total_threads);
         // one EWMA hint store shared by every worker's engine: completed
         // requests feed measured phase costs in, phase fan-outs size
@@ -446,7 +740,14 @@ impl Server {
                         ))
                     };
                     if opts.pipelined {
-                        worker_pipelined(&sync, &mut engine, &tx, max_inflight, opts.batch_phases)
+                        worker_pipelined(
+                            &sync,
+                            &mut engine,
+                            &tx,
+                            max_inflight,
+                            opts.batch_phases,
+                            chunk_blocks,
+                        )
                     } else {
                         worker_serial(&sync, &mut engine, &tx)
                     }
@@ -495,6 +796,15 @@ impl Server {
         }
     }
 
+    /// Snapshot the lifecycle stage of every queued or parked request,
+    /// sorted by request id. Requests currently being stepped by a
+    /// worker are absent until they park again; completed requests live
+    /// on the results channel, not here.
+    pub fn lifecycles(&self) -> Vec<(u64, Lifecycle)> {
+        let s = self.sync.shared.lock().unwrap();
+        lifecycle_snapshot(&s)
+    }
+
     /// Close the queue and collect all completions.
     pub fn drain(self) -> Result<Vec<Completion>> {
         {
@@ -514,7 +824,16 @@ impl Server {
     }
 }
 
-/// Serial worker: admit one request, run the monolithic prefill, repeat.
+fn lifecycle_snapshot(s: &Shared) -> Vec<(u64, Lifecycle)> {
+    let mut out: Vec<(u64, Lifecycle)> =
+        s.queue.iter().map(|q| (q.req.id, Lifecycle::Queued)).collect();
+    out.extend(s.ready.iter().map(|p| (p.unit.request_id(), p.unit.lifecycle())));
+    out.sort_by_key(|&(id, _)| id);
+    out
+}
+
+/// Serial worker: admit one request, run the monolithic prefill (and its
+/// decode continuation inline, when the request asks for tokens), repeat.
 fn worker_serial(sync: &Sched, engine: &mut Engine, tx: &Sender<Completion>) -> Result<()> {
     loop {
         let item = {
@@ -536,8 +855,32 @@ fn worker_serial(sync: &Sched, engine: &mut Engine, tx: &Sender<Completion>) -> 
         let Some((req, submitted_at)) = item else { return Ok(()) };
         let queue_us = submitted_at.elapsed().as_micros() as f64;
         let tokens = req.spec.generate();
-        let run = engine.prefill(req.id, &tokens)?;
+        let (run, first_token_us, decode) = if req.decode_tokens > 0 {
+            let mut st = engine.prefill_start_with(
+                req.id,
+                &tokens,
+                PrefillArgs { chunk_blocks: 0, capture_decode: true },
+            )?;
+            let mut run = loop {
+                if let Some(r) = engine.phase_step(&mut st)? {
+                    break r;
+                }
+            };
+            let first_token_us = submitted_at.elapsed().as_micros() as f64;
+            let mut ds = engine.decode_start(req.id, &run, req.decode_tokens)?;
+            run.decode_inputs = None; // the seed is consumed; drop the capture
+            while !ds.done() {
+                engine.decode_step(&mut ds)?;
+            }
+            (run, first_token_us, Some(ds))
+        } else {
+            (engine.prefill(req.id, &tokens)?, 0.0, None)
+        };
         let e2e_us = submitted_at.elapsed().as_micros() as f64;
+        let (decode_tokens, decode_step_us, d_read, d_write) = match decode {
+            Some(ds) => (ds.tokens, ds.step_us, ds.hbm_read_bytes, ds.hbm_write_bytes),
+            None => (Vec::new(), Vec::new(), 0, 0),
+        };
         let _ = tx.send(Completion {
             request_id: req.id,
             run,
@@ -546,6 +889,11 @@ fn worker_serial(sync: &Sched, engine: &mut Engine, tx: &Sender<Completion>) -> 
             pipeline_wait_us: 0.0,
             e2e_us,
             preemptions: 0,
+            first_token_us,
+            decode_tokens,
+            decode_step_us,
+            decode_hbm_read_bytes: d_read,
+            decode_hbm_write_bytes: d_write,
         });
         let mut s = sync.shared.lock().unwrap();
         s.inflight -= 1;
@@ -554,13 +902,15 @@ fn worker_serial(sync: &Sched, engine: &mut Engine, tx: &Sender<Completion>) -> 
     }
 }
 
-/// Pipelined worker: pull one phase step (or an admission) at a time.
+/// Pipelined worker: pull one phase step, decode step, or admission at a
+/// time.
 fn worker_pipelined(
     sync: &Sched,
     engine: &mut Engine,
     tx: &Sender<Completion>,
     max_inflight: usize,
     batch_phases: bool,
+    chunk_blocks: usize,
 ) -> Result<()> {
     loop {
         let work = {
@@ -582,12 +932,16 @@ fn worker_pipelined(
             Work::Admit(req, submitted_at) => {
                 let queue_us = submitted_at.elapsed().as_micros() as f64;
                 let tokens = req.spec.generate();
-                let state = engine.prefill_start(req.id, &tokens)?;
+                let state = engine.prefill_start_with(
+                    req.id,
+                    &tokens,
+                    PrefillArgs { chunk_blocks, capture_decode: req.decode_tokens > 0 },
+                )?;
                 let mut s = sync.shared.lock().unwrap();
                 let seq = s.next_seq;
                 s.next_seq += 1;
                 s.ready.push(Pending {
-                    state,
+                    unit: Unit::Prefill(state),
                     meta: ReqMeta {
                         seq,
                         priority: req.priority,
@@ -596,53 +950,23 @@ fn worker_pipelined(
                         queue_us,
                         parked_at: Instant::now(),
                         pipeline_wait_us: 0.0,
+                        decode_tokens: req.decode_tokens,
+                        first_token_us: 0.0,
                     },
                 });
                 drop(s);
                 sync.cond.notify_all();
             }
             Work::Phases(group) => {
-                let now = Instant::now();
-                let mut states = Vec::with_capacity(group.len());
-                let mut metas = Vec::with_capacity(group.len());
-                for p in group {
-                    let mut meta = p.meta;
-                    meta.pipeline_wait_us +=
-                        now.duration_since(meta.parked_at).as_micros() as f64;
-                    states.push(p.state);
-                    metas.push(meta);
-                }
-                let results = engine.phase_step_group(&mut states)?;
+                let decode_led = matches!(group[0].unit, Unit::Decode { .. });
+                let (parked, finished) = if decode_led {
+                    step_decode_group(engine, tx, group)?
+                } else {
+                    step_prefill_group(engine, tx, group)?
+                };
                 let mut s = sync.shared.lock().unwrap();
-                for ((state, meta), result) in states.into_iter().zip(metas).zip(results) {
-                    match result {
-                        Some(run) => {
-                            s.inflight -= 1;
-                            // feed measured per-phase job costs back into
-                            // the shared adaptive lease-want EWMA
-                            if let Some(h) = engine.hints.as_ref() {
-                                let m = &run.metrics;
-                                h.observe(phase_hint_slot(Phase::Qkv), m.qkv_job_us);
-                                h.observe(phase_hint_slot(Phase::IndexGen), m.sigu_job_us);
-                                h.observe(phase_hint_slot(Phase::Sau), m.sau_job_us);
-                                h.observe(phase_hint_slot(Phase::FfnLogits), m.ffn_job_us);
-                            }
-                            let _ = tx.send(Completion {
-                                request_id: run.metrics.request_id,
-                                run,
-                                priority: meta.priority,
-                                queue_us: meta.queue_us,
-                                pipeline_wait_us: meta.pipeline_wait_us,
-                                e2e_us: meta.submitted_at.elapsed().as_micros() as f64,
-                                preemptions: meta.yields,
-                            });
-                        }
-                        None => s.ready.push(Pending {
-                            state,
-                            meta: ReqMeta { parked_at: Instant::now(), ..meta },
-                        }),
-                    }
-                }
+                s.inflight -= finished;
+                s.ready.extend(parked);
                 drop(s);
                 sync.cond.notify_all();
             }
@@ -650,13 +974,139 @@ fn worker_pipelined(
     }
 }
 
-/// Pipeline scheduling: step parked states first (most-advanced first, so
-/// older requests drain and their TTFT stays low), admitting a new request
-/// only when no state is ready and the pipeline has room. Admission order
-/// follows the queueing policy; everything after admission is
-/// phase-availability driven. [`Policy::Preemptive`] replaces the
-/// ready-first rule with a rank order over *all* runnable requests —
-/// see [`pick_work_preemptive`].
+/// Step a (possibly fused) prefill group outside the scheduler lock.
+/// Finished prefills either complete (prefill-only) or seed a parked
+/// decode unit ([`Engine::decode_start`] — KV re-derivation is
+/// prefill-scale work, which is why it runs here and not under the
+/// lock). Returns the units to re-park and the completed-request count.
+fn step_prefill_group(
+    engine: &mut Engine,
+    tx: &Sender<Completion>,
+    group: Vec<Pending>,
+) -> Result<(Vec<Pending>, usize)> {
+    let now = Instant::now();
+    let mut states = Vec::with_capacity(group.len());
+    let mut metas = Vec::with_capacity(group.len());
+    for p in group {
+        let mut meta = p.meta;
+        meta.pipeline_wait_us += now.duration_since(meta.parked_at).as_micros() as f64;
+        match p.unit {
+            Unit::Prefill(st) => states.push(st),
+            Unit::Decode { .. } => unreachable!("form_group never mixes lifecycles"),
+        }
+        metas.push(meta);
+    }
+    let results = engine.phase_step_group(&mut states)?;
+    let mut parked = Vec::new();
+    let mut finished = 0usize;
+    for ((state, mut meta), result) in states.into_iter().zip(metas).zip(results) {
+        match result {
+            Some(mut run) => {
+                // feed measured per-phase job costs back into the shared
+                // adaptive lease-want EWMA
+                if let Some(h) = engine.hints.as_ref() {
+                    let m = &run.metrics;
+                    h.observe(phase_hint_slot(Phase::Qkv), m.qkv_job_us);
+                    h.observe(phase_hint_slot(Phase::IndexGen), m.sigu_job_us);
+                    h.observe(phase_hint_slot(Phase::Sau), m.sau_job_us);
+                    h.observe(phase_hint_slot(Phase::FfnLogits), m.ffn_job_us);
+                }
+                if meta.decode_tokens > 0 {
+                    let state =
+                        engine.decode_start(run.metrics.request_id, &run, meta.decode_tokens)?;
+                    run.decode_inputs = None; // the seed is consumed; drop the capture
+                    meta.first_token_us = meta.submitted_at.elapsed().as_micros() as f64;
+                    parked.push(Pending {
+                        unit: Unit::Decode { state, run },
+                        meta: ReqMeta { parked_at: Instant::now(), ..meta },
+                    });
+                } else {
+                    finished += 1;
+                    let _ = tx.send(Completion {
+                        request_id: run.metrics.request_id,
+                        run,
+                        priority: meta.priority,
+                        queue_us: meta.queue_us,
+                        pipeline_wait_us: meta.pipeline_wait_us,
+                        e2e_us: meta.submitted_at.elapsed().as_micros() as f64,
+                        preemptions: meta.yields,
+                        first_token_us: 0.0,
+                        decode_tokens: Vec::new(),
+                        decode_step_us: Vec::new(),
+                        decode_hbm_read_bytes: 0,
+                        decode_hbm_write_bytes: 0,
+                    });
+                }
+            }
+            None => parked.push(Pending {
+                unit: Unit::Prefill(state),
+                meta: ReqMeta { parked_at: Instant::now(), ..meta },
+            }),
+        }
+    }
+    Ok((parked, finished))
+}
+
+/// Step a (possibly fused) decode group: one token per lane, fused
+/// through [`Engine::decode_step_group`]. Lanes that reach their last
+/// token complete; the rest park again.
+fn step_decode_group(
+    engine: &mut Engine,
+    tx: &Sender<Completion>,
+    group: Vec<Pending>,
+) -> Result<(Vec<Pending>, usize)> {
+    let now = Instant::now();
+    let mut lanes: Vec<(DecodeState, PrefillRun)> = Vec::with_capacity(group.len());
+    let mut metas = Vec::with_capacity(group.len());
+    for p in group {
+        let mut meta = p.meta;
+        meta.pipeline_wait_us += now.duration_since(meta.parked_at).as_micros() as f64;
+        match p.unit {
+            Unit::Decode { state, run } => lanes.push((state, run)),
+            Unit::Prefill(_) => unreachable!("form_group never mixes lifecycles"),
+        }
+        metas.push(meta);
+    }
+    {
+        let mut refs: Vec<&mut DecodeState> = lanes.iter_mut().map(|(st, _)| st).collect();
+        engine.decode_step_group(&mut refs)?;
+    }
+    let mut parked = Vec::new();
+    let mut finished = 0usize;
+    for ((state, run), meta) in lanes.into_iter().zip(metas) {
+        if state.done() {
+            finished += 1;
+            let _ = tx.send(Completion {
+                request_id: state.request_id,
+                run,
+                priority: meta.priority,
+                queue_us: meta.queue_us,
+                pipeline_wait_us: meta.pipeline_wait_us,
+                e2e_us: meta.submitted_at.elapsed().as_micros() as f64,
+                preemptions: meta.yields,
+                first_token_us: meta.first_token_us,
+                decode_tokens: state.tokens,
+                decode_step_us: state.step_us,
+                decode_hbm_read_bytes: state.hbm_read_bytes,
+                decode_hbm_write_bytes: state.hbm_write_bytes,
+            });
+        } else {
+            parked.push(Pending {
+                unit: Unit::Decode { state, run },
+                meta: ReqMeta { parked_at: Instant::now(), ..meta },
+            });
+        }
+    }
+    Ok((parked, finished))
+}
+
+/// Pipeline scheduling: step parked states first (decode steps lead,
+/// then the most-advanced prefill, so older requests drain and their
+/// TTFT stays low), admitting a new request only when no state is ready
+/// and the pipeline has room. Admission order follows the queueing
+/// policy; everything after admission is phase-availability driven.
+/// [`Policy::Preemptive`] replaces the ready-first rule with a rank
+/// order over *all* runnable requests — see [`pick_work_preemptive`].
 fn pick_work(s: &mut Shared, max_inflight: usize, batch_phases: bool) -> Option<Work> {
     if s.policy == Policy::Preemptive {
         return pick_work_preemptive(s, max_inflight, batch_phases);
@@ -666,9 +1116,7 @@ fn pick_work(s: &mut Shared, max_inflight: usize, batch_phases: bool) -> Option<
             .ready
             .iter()
             .enumerate()
-            .max_by_key(|(_, p)| {
-                (p.state.layer(), phase_rank(p.state.phase()), std::cmp::Reverse(p.meta.seq))
-            })
+            .max_by_key(|(_, p)| (p.unit.progress_key(), std::cmp::Reverse(p.meta.seq)))
             .map(|(i, _)| i)
             .unwrap();
         let lead = s.ready.swap_remove(best);
@@ -701,8 +1149,19 @@ fn class_rank(priority: Priority, yields: u64, max_yields: usize) -> u8 {
     }
 }
 
+/// Class of a parked unit: prefill ranks by its admission class; decode
+/// steps rank `Interactive` regardless — every step is a token a client
+/// is actively waiting on, and with their near-zero remaining cost this
+/// is what slots decode between a long prompt's prefill chunks.
+fn unit_class(p: &Pending, max_yields: usize) -> u8 {
+    match &p.unit {
+        Unit::Prefill(_) => class_rank(p.meta.priority, p.meta.yields, max_yields),
+        Unit::Decode { .. } => class_rank(Priority::Interactive, p.meta.yields, max_yields),
+    }
+}
+
 fn pending_rank(p: &Pending, max_yields: usize) -> PreemptRank {
-    (class_rank(p.meta.priority, p.meta.yields, max_yields), p.state.remaining_cost(), p.meta.seq)
+    (unit_class(p, max_yields), p.unit.remaining_cost(), p.meta.seq)
 }
 
 /// Rank of a queued (not yet admitted) request: nothing has run, so the
@@ -724,9 +1183,10 @@ fn queue_rank(q: &Queued, n_layers: usize, max_yields: usize) -> (u8, u64) {
 /// outranks every parked state is admitted ahead of them (the parked
 /// states *yield* the slot: that is the preemption, counted per yielding
 /// request); otherwise the best-ranked parked state steps. Preemption
-/// only reorders which `PrefillState` advances next — a phase is never
-/// split and states are never evicted — so per-request outputs stay
-/// bit-identical to solo runs. Admission still respects `max_inflight`.
+/// only reorders which unit advances next — a phase or decode step is
+/// never split and states are never evicted — so per-request outputs
+/// stay bit-identical to solo runs. Admission still respects
+/// `max_inflight`.
 fn pick_work_preemptive(s: &mut Shared, max_inflight: usize, batch_phases: bool) -> Option<Work> {
     let ready_best = s
         .ready
@@ -759,7 +1219,7 @@ fn pick_work_preemptive(s: &mut Shared, max_inflight: usize, batch_phases: bool)
     }
     if let Some((_, i)) = ready_best {
         let lead = s.ready.swap_remove(i);
-        let lead_class = class_rank(lead.meta.priority, lead.meta.yields, s.max_yields);
+        let lead_class = unit_class(&lead, s.max_yields);
         let lead_seq = lead.meta.seq;
         let group = form_group(s, lead, batch_phases);
         // older lower-class states passed over at this phase boundary
@@ -778,11 +1238,11 @@ fn pick_work_preemptive(s: &mut Shared, max_inflight: usize, batch_phases: bool)
 /// counter and the aging bound.
 fn charge_yields(s: &mut Shared, winner_class: u8, winner_seq: u64) {
     let max_yields = s.max_yields;
-    for p in s.ready.iter_mut() {
-        if p.meta.seq < winner_seq
-            && class_rank(p.meta.priority, p.meta.yields, max_yields) > winner_class
+    for i in 0..s.ready.len() {
+        if s.ready[i].meta.seq < winner_seq
+            && unit_class(&s.ready[i], max_yields) > winner_class
         {
-            p.meta.yields += 1;
+            s.ready[i].meta.yields += 1;
         }
     }
 }
@@ -801,42 +1261,90 @@ fn charge_queue_passes(s: &mut Shared, winner_class: u8) {
     }
 }
 
-/// Fuse same-phase parked states into the lead's step: SAU at any layer,
-/// the K/weight-streaming phases (QKV, IndexGen, FFN tail) only on a
-/// shared layer; IndexGen additionally requires a compatible kv-head
-/// layout ([`KvLayout`] — per-head job spaces must line up for lanes to
-/// ride one K stream). Width is adaptive: a candidate joins only while
-/// the simulator's priced marginal TTFT saving of adding it
-/// ([`marginal_fuse_saving_us`]) strictly exceeds the floor, clamped by
-/// the resolved [`ServerOptions::max_phase_batch`]. Grouping is
+/// Grow the lead's step into a fused group. Lifecycles never mix: a
+/// decode lead collects other parked decode lanes (no pricer — a decode
+/// step is matvec/memory-bound, so sharing the weight stream across the
+/// batch axis always saves; the width cap is the clamp), gated on a
+/// compatible [`KvLayout`]. A prefill lead fuses same-phase parked
+/// states: SAU at any layer, the K/weight-streaming phases (QKV,
+/// IndexGen, FFN tail) only on a shared layer; IndexGen additionally
+/// requires the kv-head layout gate. Prefill width is adaptive — a
+/// candidate joins only while the simulator's priced marginal TTFT
+/// saving ([`marginal_fuse_saving_us`]) strictly exceeds the floor,
+/// clamped by the resolved [`ServerOptions::max_phase_batch`]. Chunked
+/// prefill slices solo-step (slices change the priced geometry, and the
+/// engine's batch phases run full-context lanes only). Grouping is
 /// optimistic — the engine's batch phases re-check fusability and fall
-/// back to per-state stepping, so correctness never depends on this gate.
+/// back to per-state stepping, so correctness never depends on this
+/// gate.
 fn form_group(s: &mut Shared, lead: Pending, batch_phases: bool) -> Vec<Pending> {
+    enum LeadKind {
+        Decode,
+        Prefill { phase: Phase, layer: usize, chunked: bool },
+    }
+    let kind = match &lead.unit {
+        Unit::Decode { .. } => LeadKind::Decode,
+        Unit::Prefill(st) => {
+            LeadKind::Prefill { phase: st.phase(), layer: st.layer(), chunked: st.chunked() }
+        }
+    };
     let mut group = vec![lead];
-    if batch_phases {
-        let phase = group[0].state.phase();
-        let layer = group[0].state.layer();
-        // every lane this server admits runs the one configured model, so
-        // layouts always match today; the gate keeps the fusion contract
-        // explicit (and checked) for a future multi-model router
-        let lead_layout = KvLayout::of(&s.model);
-        if matches!(phase, Phase::Qkv | Phase::IndexGen | Phase::Sau | Phase::FfnLogits) {
+    if !batch_phases {
+        return group;
+    }
+    // every lane this server admits runs the one configured model, so
+    // layouts always match today; the gate keeps the fusion contract
+    // explicit (and checked) for a future multi-model router
+    let lead_layout = KvLayout::of(&s.model);
+    match kind {
+        LeadKind::Decode => {
             let mut i = 0;
             while i < s.ready.len() && group.len() < s.max_phase_batch {
-                let p = &s.ready[i];
-                let fusable = p.state.phase() == phase
-                    && (phase == Phase::Sau || p.state.layer() == layer)
-                    && (phase != Phase::IndexGen
-                        || KvLayout::of(&s.model).compatible(&lead_layout));
-                let group_blocks: Vec<usize> =
-                    group.iter().map(|g| g.state.context_tokens() / BLOCK).collect();
-                let cand_blocks = p.state.context_tokens() / BLOCK;
-                let saving_us =
-                    marginal_fuse_saving_us(&s.fpga, &s.model, phase, &group_blocks, cand_blocks);
-                if fusable && saving_us > MARGINAL_SAVING_FLOOR_US {
+                let fusable = matches!(s.ready[i].unit, Unit::Decode { .. })
+                    && KvLayout::of(&s.model).compatible(&lead_layout);
+                if fusable {
                     group.push(s.ready.swap_remove(i));
                 } else {
                     i += 1;
+                }
+            }
+        }
+        LeadKind::Prefill { chunked: true, .. } => {}
+        LeadKind::Prefill { phase, layer, chunked: false } => {
+            if matches!(phase, Phase::Qkv | Phase::IndexGen | Phase::Sau | Phase::FfnLogits) {
+                let mut i = 0;
+                while i < s.ready.len() && group.len() < s.max_phase_batch {
+                    let Unit::Prefill(cand) = &s.ready[i].unit else {
+                        i += 1;
+                        continue;
+                    };
+                    let fusable = !cand.chunked()
+                        && cand.phase() == phase
+                        && (phase == Phase::Sau || cand.layer() == layer)
+                        && (phase != Phase::IndexGen
+                            || KvLayout::of(&s.model).compatible(&lead_layout));
+                    let group_blocks: Vec<usize> = group
+                        .iter()
+                        .map(|g| match &g.unit {
+                            Unit::Prefill(st) => st.context_tokens() / BLOCK,
+                            Unit::Decode { .. } => {
+                                unreachable!("prefill-led groups hold prefill lanes")
+                            }
+                        })
+                        .collect();
+                    let cand_blocks = cand.context_tokens() / BLOCK;
+                    let saving_us = marginal_fuse_saving_us(
+                        &s.fpga,
+                        &s.model,
+                        phase,
+                        &group_blocks,
+                        cand_blocks,
+                    );
+                    if fusable && saving_us > MARGINAL_SAVING_FLOOR_US {
+                        group.push(s.ready.swap_remove(i));
+                    } else {
+                        i += 1;
+                    }
                 }
             }
         }
@@ -899,6 +1407,7 @@ mod tests {
             spec: PromptSpec { kind: PromptKind::Random, tokens, seed: id },
             arrival_us: 0,
             priority,
+            decode_tokens: 0,
         }
     }
 
@@ -923,24 +1432,62 @@ mod tests {
         }
     }
 
+    fn meta(seq: u64, priority: Priority) -> ReqMeta {
+        ReqMeta {
+            seq,
+            priority,
+            yields: 0,
+            submitted_at: Instant::now(),
+            queue_us: 0.0,
+            parked_at: Instant::now(),
+            pipeline_wait_us: 0.0,
+            decode_tokens: 0,
+            first_token_us: 0.0,
+        }
+    }
+
+    /// Dense TINY engine (chunked prefill is a dense-only transform; the
+    /// scheduler tests here never need sparse indices).
+    fn tiny_engine() -> Engine {
+        let mut cfg = EngineConfig::new_native(crate::config::TINY.clone());
+        cfg.flex = None;
+        Engine::new_native(cfg).unwrap()
+    }
+
     /// A parked TINY state at (Qkv, layer 0) with the given class.
     fn parked(engine: &Engine, id: u64, tokens: usize, seq: u64, priority: Priority) -> Pending {
         let state = engine
             .prefill_start(id, &PromptSpec { kind: PromptKind::Random, tokens, seed: 1 }
                 .generate())
             .unwrap();
-        Pending {
-            state,
-            meta: ReqMeta {
-                seq,
-                priority,
-                yields: 0,
-                submitted_at: Instant::now(),
-                queue_us: 0.0,
-                parked_at: Instant::now(),
-                pipeline_wait_us: 0.0,
-            },
-        }
+        Pending { unit: Unit::Prefill(state), meta: meta(seq, priority) }
+    }
+
+    /// A parked decode unit: runs a short capture-enabled TINY prefill to
+    /// completion, then seeds `steps` decode steps from it.
+    fn decode_parked(
+        engine: &mut Engine,
+        id: u64,
+        steps: usize,
+        seq: u64,
+        priority: Priority,
+    ) -> Pending {
+        let tokens = PromptSpec { kind: PromptKind::Random, tokens: 128, seed: id }.generate();
+        let mut st = engine
+            .prefill_start_with(
+                id,
+                &tokens,
+                PrefillArgs { chunk_blocks: 0, capture_decode: true },
+            )
+            .unwrap();
+        let mut run = loop {
+            if let Some(r) = engine.phase_step(&mut st).unwrap() {
+                break r;
+            }
+        };
+        let state = engine.decode_start(id, &run, steps).unwrap();
+        run.decode_inputs = None;
+        Pending { unit: Unit::Decode { state, run }, meta: meta(seq, priority) }
     }
 
     #[test]
@@ -983,14 +1530,13 @@ mod tests {
         // a parked state must be stepped before a new request is admitted
         let mut s = shared(Policy::Fcfs);
         s.queue.push_back(queued(req(7, 256)));
-        let engine =
-            Engine::new_native(EngineConfig::new_native(crate::config::TINY.clone())).unwrap();
+        let engine = tiny_engine();
         s.ready.push(parked(&engine, 3, 128, 0, Priority::Interactive));
         s.inflight = 1;
         match pick_work(&mut s, 4, true) {
             Some(Work::Phases(group)) => {
                 assert_eq!(group.len(), 1);
-                assert_eq!(group[0].state.request_id, 3);
+                assert_eq!(group[0].unit.request_id(), 3);
             }
             other => panic!("expected a phase step, got {}", match other {
                 Some(Work::Admit(..)) => "admission",
@@ -1020,8 +1566,7 @@ mod tests {
     fn preemptive_admits_interactive_over_parked_batch() {
         // a parked long batch prefill + a queued short interactive: the
         // interactive jumps the slot and the batch is charged one yield
-        let engine =
-            Engine::new_native(EngineConfig::new_native(crate::config::TINY.clone())).unwrap();
+        let engine = tiny_engine();
         let mut s = shared(Policy::Preemptive);
         s.ready.push(parked(&engine, 0, 512, 0, Priority::Batch));
         s.inflight = 1;
@@ -1043,20 +1588,19 @@ mod tests {
     fn preemptive_steps_interactive_before_older_batch() {
         // both parked: the newer interactive leads, the older batch is
         // passed over (charged) at the phase boundary
-        let engine =
-            Engine::new_native(EngineConfig::new_native(crate::config::TINY.clone())).unwrap();
+        let engine = tiny_engine();
         let mut s = shared(Policy::Preemptive);
         s.ready.push(parked(&engine, 0, 512, 0, Priority::Batch));
         s.ready.push(parked(&engine, 1, 128, 1, Priority::Interactive));
         s.inflight = 2;
         match pick_work(&mut s, 4, false) {
             Some(Work::Phases(group)) => {
-                assert_eq!(group[0].state.request_id, 1);
+                assert_eq!(group[0].unit.request_id(), 1);
             }
             _ => panic!("expected a phase step"),
         }
         assert_eq!(s.ready.len(), 1);
-        assert_eq!(s.ready[0].state.request_id, 0);
+        assert_eq!(s.ready[0].unit.request_id(), 0);
         assert_eq!(s.ready[0].meta.yields, 1);
     }
 
@@ -1064,8 +1608,7 @@ mod tests {
     fn aged_batch_outranks_interactive_work() {
         // a batch state at the aging bound runs ahead of a queued AND a
         // parked interactive — the starvation bound in action
-        let engine =
-            Engine::new_native(EngineConfig::new_native(crate::config::TINY.clone())).unwrap();
+        let engine = tiny_engine();
         let mut s = shared(Policy::Preemptive);
         s.max_yields = 3;
         let mut batch = parked(&engine, 0, 512, 0, Priority::Batch);
@@ -1075,7 +1618,7 @@ mod tests {
         s.inflight = 2;
         s.queue.push_back(queued(req_class(2, 128, Priority::Interactive)));
         match pick_work(&mut s, 8, false) {
-            Some(Work::Phases(group)) => assert_eq!(group[0].state.request_id, 0),
+            Some(Work::Phases(group)) => assert_eq!(group[0].unit.request_id(), 0),
             _ => panic!("expected the aged batch to step"),
         }
         // the aged batch accrues no further yields and nothing was charged
@@ -1086,14 +1629,13 @@ mod tests {
     fn preemptive_respects_inflight_cap() {
         // a queued interactive outranks the parked batch but the pipeline
         // is full: the batch steps (states are never evicted)
-        let engine =
-            Engine::new_native(EngineConfig::new_native(crate::config::TINY.clone())).unwrap();
+        let engine = tiny_engine();
         let mut s = shared(Policy::Preemptive);
         s.ready.push(parked(&engine, 0, 512, 0, Priority::Batch));
         s.inflight = 1;
         s.queue.push_back(queued(req_class(1, 128, Priority::Interactive)));
         match pick_work(&mut s, 1, true) {
-            Some(Work::Phases(group)) => assert_eq!(group[0].state.request_id, 0),
+            Some(Work::Phases(group)) => assert_eq!(group[0].unit.request_id(), 0),
             _ => panic!("expected the parked batch to step when the pipeline is full"),
         }
         assert_eq!(s.queue.len(), 1);
@@ -1105,8 +1647,7 @@ mod tests {
         // covered by the aging bound. A parked interactive keeps winning
         // phase slots; each pick charges the queued batch one pass, and
         // at the bound it ages to class 0 and jumps the interactive.
-        let engine =
-            Engine::new_native(EngineConfig::new_native(crate::config::TINY.clone())).unwrap();
+        let engine = tiny_engine();
         let mut s = shared(Policy::Preemptive);
         s.max_yields = 2;
         s.queue.push_back(queued(req_class(9, 4096, Priority::Batch)));
@@ -1115,7 +1656,7 @@ mod tests {
         for turn in 0..2u64 {
             match pick_work(&mut s, 4, false) {
                 Some(Work::Phases(group)) => {
-                    assert_eq!(group[0].state.request_id, 0);
+                    assert_eq!(group[0].unit.request_id(), 0);
                     // park the state back, as the worker loop would
                     s.ready.extend(group);
                 }
@@ -1133,26 +1674,104 @@ mod tests {
     fn remaining_cost_prefers_advanced_states_within_class() {
         // same class, same context: the state further along (smaller
         // remaining cost) leads, so started work drains
-        let engine =
-            Engine::new_native(EngineConfig::new_native(crate::config::TINY.clone())).unwrap();
+        let engine = tiny_engine();
         let mut s = shared(Policy::Preemptive);
         let fresh = parked(&engine, 0, 256, 0, Priority::Interactive);
         let mut advanced = parked(&engine, 1, 256, 1, Priority::Interactive);
         // walk request 1 one full phase ahead
-        let mut eng = Engine::new_native(EngineConfig::new_native(crate::config::TINY.clone()))
-            .unwrap();
-        eng.phase_step(&mut advanced.state).unwrap();
-        assert!(advanced.state.remaining_cost() < fresh.state.remaining_cost());
+        let mut eng = tiny_engine();
+        eng.phase_step(advanced.unit.prefill_mut()).unwrap();
+        assert!(advanced.unit.remaining_cost() < fresh.unit.remaining_cost());
         s.ready.push(fresh);
         s.ready.push(advanced);
         s.inflight = 2;
         match pick_work(&mut s, 4, false) {
-            Some(Work::Phases(group)) => assert_eq!(group[0].state.request_id, 1),
+            Some(Work::Phases(group)) => assert_eq!(group[0].unit.request_id(), 1),
             _ => panic!("expected a phase step"),
         }
         // equal class and the winner is *newer*: no yield charged to the
         // older same-class state
         assert_eq!(s.ready[0].meta.yields, 0);
+    }
+
+    #[test]
+    fn decode_steps_lead_under_every_policy() {
+        // a parked decode step (one pending token) outranks parked
+        // prefill work — FCFS progress order and the preemptive rank
+        // (Interactive-class, near-zero remaining cost) agree, even when
+        // the decoding request was admitted as Batch
+        let mut engine = tiny_engine();
+        for policy in [Policy::Fcfs, Policy::Preemptive] {
+            let mut s = shared(policy);
+            s.ready.push(parked(&engine, 0, 256, 0, Priority::Interactive));
+            s.ready.push(decode_parked(&mut engine, 1, 4, 1, Priority::Batch));
+            s.inflight = 2;
+            match pick_work(&mut s, 4, false) {
+                Some(Work::Phases(group)) => {
+                    assert_eq!(group[0].unit.request_id(), 1, "{policy:?}");
+                    assert!(matches!(group[0].unit, Unit::Decode { .. }));
+                }
+                _ => panic!("expected the decode step to lead under {policy:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn form_group_fuses_decode_lanes_and_never_mixes() {
+        let mut engine = tiny_engine();
+        let mut s = shared(Policy::Fcfs);
+        let lead = decode_parked(&mut engine, 0, 4, 0, Priority::Interactive);
+        s.ready.push(decode_parked(&mut engine, 1, 4, 1, Priority::Interactive));
+        s.ready.push(parked(&engine, 2, 256, 2, Priority::Interactive));
+        s.inflight = 3;
+        let group = form_group(&mut s, lead, true);
+        assert_eq!(group.len(), 2, "co-resident decode lanes fuse");
+        assert!(group.iter().all(|p| matches!(p.unit, Unit::Decode { .. })));
+        assert_eq!(s.ready.len(), 1, "the prefill lane stays parked");
+        // and a prefill lead never picks up a parked decode lane
+        let mut s = shared(Policy::Fcfs);
+        let lead = parked(&engine, 3, 256, 0, Priority::Interactive);
+        s.ready.push(decode_parked(&mut engine, 4, 4, 1, Priority::Interactive));
+        s.inflight = 2;
+        let group = form_group(&mut s, lead, true);
+        assert_eq!(group.len(), 1, "lifecycles never mix in one fused group");
+        assert_eq!(s.ready.len(), 1);
+    }
+
+    #[test]
+    fn chunked_prefill_slices_solo_step() {
+        // a chunked lead never fuses — slices change the priced geometry
+        // and the engine's batch phases run full-context lanes only
+        let engine = tiny_engine();
+        let tokens = PromptSpec { kind: PromptKind::Random, tokens: 256, seed: 5 }.generate();
+        let state = engine
+            .prefill_start_with(5, &tokens, PrefillArgs { chunk_blocks: 1, capture_decode: false })
+            .unwrap();
+        assert!(state.chunked());
+        let mut s = shared(Policy::Fcfs);
+        let lead = Pending { unit: Unit::Prefill(state), meta: meta(0, Priority::Interactive) };
+        s.ready.push(parked(&engine, 6, 256, 1, Priority::Interactive));
+        s.inflight = 2;
+        let group = form_group(&mut s, lead, true);
+        assert_eq!(group.len(), 1, "chunked lead solo-steps");
+        assert_eq!(s.ready.len(), 1);
+    }
+
+    #[test]
+    fn lifecycle_snapshot_reports_every_stage() {
+        let mut engine = tiny_engine();
+        let mut s = shared(Policy::Fcfs);
+        s.queue.push_back(queued(req(7, 256)));
+        s.ready.push(parked(&engine, 8, 256, 0, Priority::Interactive));
+        s.ready.push(decode_parked(&mut engine, 9, 4, 1, Priority::Interactive));
+        assert_eq!(
+            lifecycle_snapshot(&s),
+            vec![
+                (7, Lifecycle::Queued),
+                (8, Lifecycle::Prefilling { chunk: 0 }),
+                (9, Lifecycle::Decoding { step: 0 }),
+            ]
+        );
     }
 
     #[test]
@@ -1166,6 +1785,58 @@ mod tests {
         assert!(parse_phase_batch("2.5").is_err());
     }
 
+    #[test]
+    fn prefill_chunk_env_values_validate() {
+        assert_eq!(parse_prefill_chunk("256"), Ok(256));
+        assert_eq!(parse_prefill_chunk("0"), Ok(0), "0 disables chunking");
+        assert_eq!(parse_prefill_chunk(" 128 "), Ok(128));
+        let odd = parse_prefill_chunk("100").unwrap_err();
+        assert!(odd.contains("multiple"), "got: {odd}");
+        assert!(parse_prefill_chunk("many").is_err());
+        assert!(parse_prefill_chunk("-128").is_err());
+    }
+
+    #[test]
+    fn builder_defaults_match_new() {
+        let b = ServerOptions::builder().build().unwrap();
+        let n = ServerOptions::new(1, Policy::Fcfs);
+        assert_eq!(b.n_workers, n.n_workers);
+        assert_eq!(b.policy, n.policy);
+        assert_eq!(b.pipelined, n.pipelined);
+        assert_eq!(b.total_threads, n.total_threads);
+        assert_eq!(b.max_inflight, n.max_inflight);
+        assert_eq!(b.batch_phases, n.batch_phases);
+        assert_eq!(b.max_phase_batch, n.max_phase_batch);
+        assert_eq!(b.max_yields, n.max_yields);
+        assert_eq!(b.adaptive_hints, n.adaptive_hints);
+        assert_eq!(b.prefill_chunk, 0);
+    }
+
+    #[test]
+    fn builder_validates_fields() {
+        assert!(ServerOptions::builder().n_workers(0).build().is_err());
+        let odd = ServerOptions::builder().prefill_chunk(100).build().unwrap_err();
+        assert!(odd.contains("multiple"), "got: {odd}");
+        assert!(
+            ServerOptions::builder().pipelined(false).prefill_chunk(256).build().is_err(),
+            "chunking is a pipelined-mode feature"
+        );
+        let o = ServerOptions::builder()
+            .n_workers(2)
+            .policy(Policy::Preemptive)
+            .prefill_chunk(256)
+            .max_phase_batch(2)
+            .build()
+            .unwrap();
+        assert_eq!(o.n_workers, 2);
+        assert_eq!(o.policy, Policy::Preemptive);
+        assert_eq!(o.prefill_chunk, 256);
+        assert_eq!(o.max_phase_batch, 2);
+        // the serial preset stays reachable through the builder
+        let serial = ServerOptions::builder().pipelined(false).build().unwrap();
+        assert!(!serial.pipelined && !serial.adaptive_hints);
+    }
+
     /// Walk a freshly parked TINY state one phase forward (QKV → IndexGen).
     fn parked_at_index_gen(
         engine: &mut Engine,
@@ -1174,29 +1845,27 @@ mod tests {
         seq: u64,
     ) -> Pending {
         let mut p = parked(engine, id, tokens, seq, Priority::Interactive);
-        engine.phase_step(&mut p.state).unwrap();
-        assert_eq!(p.state.phase(), Phase::IndexGen);
+        engine.phase_step(p.unit.prefill_mut()).unwrap();
+        assert_eq!(p.unit.prefill().phase(), Phase::IndexGen);
         p
     }
 
     #[test]
     fn form_group_fuses_index_gen_on_shared_layer() {
-        let mut engine =
-            Engine::new_native(EngineConfig::new_native(crate::config::TINY.clone())).unwrap();
+        let mut engine = tiny_engine();
         let mut s = shared(Policy::Fcfs);
         let lead = parked_at_index_gen(&mut engine, 0, 256, 0);
         s.ready.push(parked_at_index_gen(&mut engine, 1, 384, 1));
         s.inflight = 2;
         let group = form_group(&mut s, lead, true);
         assert_eq!(group.len(), 2, "same-layer IndexGen states fuse");
-        assert!(group.iter().all(|p| p.state.phase() == Phase::IndexGen));
+        assert!(group.iter().all(|p| p.unit.prefill().phase() == Phase::IndexGen));
         assert!(s.ready.is_empty());
     }
 
     #[test]
     fn form_group_width_clamped_by_max_phase_batch() {
-        let mut engine =
-            Engine::new_native(EngineConfig::new_native(crate::config::TINY.clone())).unwrap();
+        let mut engine = tiny_engine();
         let mut s = shared(Policy::Fcfs);
         s.max_phase_batch = 1;
         let lead = parked_at_index_gen(&mut engine, 0, 256, 0);
@@ -1209,8 +1878,7 @@ mod tests {
 
     #[test]
     fn form_group_skips_mismatched_phase() {
-        let mut engine =
-            Engine::new_native(EngineConfig::new_native(crate::config::TINY.clone())).unwrap();
+        let mut engine = tiny_engine();
         let mut s = shared(Policy::Fcfs);
         let lead = parked_at_index_gen(&mut engine, 0, 256, 0);
         // candidate still at QKV: not fusable with an IndexGen lead

@@ -322,6 +322,74 @@ impl IndexGenWalk {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Decode step events
+// ---------------------------------------------------------------------------
+
+/// i8 K + V bytes of one token's KV rows across every kv head, for one
+/// layer — the unit a decode step appends and gathers. Like
+/// [`k_block_bytes`], this is the **one** byte constant both the engine's
+/// decode counters and `sim::prefill`'s decode pricing use, so their
+/// decode traffic numbers agree by construction.
+pub fn kv_token_bytes(cfg: &crate::config::ModelConfig) -> u64 {
+    2 * (cfg.n_kv_heads * cfg.d_head) as u64
+}
+
+/// Priced HBM traffic of one (or a span of) decode step(s).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DecodeStepTraffic {
+    /// KV gather reads (dense decode attention touches every resident
+    /// token's K and V rows, per layer).
+    pub read_bytes: u64,
+    /// KV append writes (one token's K/V rows per layer).
+    pub write_bytes: u64,
+}
+
+impl DecodeStepTraffic {
+    pub fn add(&mut self, other: DecodeStepTraffic) {
+        self.read_bytes += other.read_bytes;
+        self.write_bytes += other.write_bytes;
+    }
+}
+
+/// The canonical decode-step traffic derivation — the decode analogue of
+/// [`ScheduleWalk`]/[`IndexGenWalk`]: one step at context position `pos`
+/// appends the new token's K/V rows (write) and gathers all `pos + 1`
+/// resident rows for dense decode attention (read), per layer. Both the
+/// engine's per-step counters (`Engine::decode_step`) and the cycle
+/// simulator's decode twin (`sim::simulate_decode_steps`) price through
+/// this one struct, so engine-vs-sim decode traffic identity holds for
+/// mixed prefill+decode traces (pinned by `rust/tests/memory_spine.rs`).
+#[derive(Clone, Copy, Debug)]
+pub struct DecodeStepWalk {
+    n_layers: usize,
+    token_bytes: u64,
+}
+
+impl DecodeStepWalk {
+    pub fn new(cfg: &crate::config::ModelConfig) -> DecodeStepWalk {
+        DecodeStepWalk { n_layers: cfg.n_layers, token_bytes: kv_token_bytes(cfg) }
+    }
+
+    /// Price one step taken with `pos` tokens resident before the append.
+    pub fn price(&self, pos: usize) -> DecodeStepTraffic {
+        DecodeStepTraffic {
+            read_bytes: self.n_layers as u64 * (pos as u64 + 1) * self.token_bytes,
+            write_bytes: self.n_layers as u64 * self.token_bytes,
+        }
+    }
+
+    /// Price `steps` consecutive steps starting at position `pos0` — the
+    /// simulator's whole-sequence entry (sum of the per-step prices).
+    pub fn price_span(&self, pos0: usize, steps: usize) -> DecodeStepTraffic {
+        let mut total = DecodeStepTraffic::default();
+        for i in 0..steps {
+            total.add(self.price(pos0 + i));
+        }
+        total
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -439,5 +507,31 @@ mod tests {
         assert_eq!(solo.fused_bytes, 2 * 5 * kb);
         assert_eq!(solo.lane_bytes, vec![2 * 5 * kb]);
         assert_eq!(solo.saved_bytes(), 0);
+    }
+
+    #[test]
+    fn decode_step_walk_prices_gather_and_append_per_layer() {
+        let cfg = crate::config::TINY.clone();
+        let tok = kv_token_bytes(&cfg);
+        assert_eq!(tok, 2 * (cfg.n_kv_heads * cfg.d_head) as u64);
+        let walk = DecodeStepWalk::new(&cfg);
+        // step at pos 256: gather 257 resident rows + append 1, per layer
+        let t = walk.price(256);
+        assert_eq!(t.read_bytes, cfg.n_layers as u64 * 257 * tok);
+        assert_eq!(t.write_bytes, cfg.n_layers as u64 * tok);
+    }
+
+    #[test]
+    fn decode_step_span_is_sum_of_steps() {
+        let cfg = crate::config::TINY.clone();
+        let walk = DecodeStepWalk::new(&cfg);
+        let span = walk.price_span(128, 5);
+        let mut sum = DecodeStepTraffic::default();
+        for i in 0..5 {
+            sum.add(walk.price(128 + i));
+        }
+        assert_eq!(span, sum);
+        // writes are position-independent: steps * per-step append
+        assert_eq!(span.write_bytes, 5 * walk.price(0).write_bytes);
     }
 }

@@ -118,6 +118,28 @@ pub struct ServeSample {
     /// IndexGen phases served inside a fused group / their summed widths.
     pub sigu_fused_phases: u32,
     pub sigu_fused_width_sum: u64,
+    /// Submission -> first token (the user-perceived TTFT once requests
+    /// continue into decode: `e2e_us` then also covers generation). 0 on
+    /// prefill-only samples, where it coincides with `e2e_us`.
+    pub first_token_us: f64,
+    /// Decode tokens generated after prefill (0 = prefill-only request).
+    pub decode_tokens: u64,
+    /// Mean time-per-output-token across the request's decode steps (us).
+    pub tpot_us: f64,
+    /// p95 inter-token latency across the request's decode steps (us).
+    pub itl_p95_us: f64,
+    /// Decode-side KV gather/append HBM traffic priced through the
+    /// memory spine (bytes).
+    pub decode_hbm_read_bytes: u64,
+    pub decode_hbm_write_bytes: u64,
+}
+
+impl ServeSample {
+    /// Submission -> first token: `first_token_us` when the serving layer
+    /// recorded it, else the end-to-end latency (prefill-only samples).
+    pub fn ttft_e2e_us(&self) -> f64 {
+        if self.first_token_us > 0.0 { self.first_token_us } else { self.e2e_us }
+    }
 }
 
 /// TTFT statistics of one priority class within a [`ServeSummary`].
@@ -140,7 +162,7 @@ impl ClassTtft {
         let ttft: Vec<f64> = samples
             .iter()
             .filter(|s| s.priority == class)
-            .map(|s| s.e2e_us / 1e3)
+            .map(|s| s.ttft_e2e_us() / 1e3)
             .collect();
         ClassTtft {
             n: ttft.len(),
@@ -191,6 +213,19 @@ pub struct ServeSummary {
     pub sigu_hbm_read_gb: f64,
     /// Total IndexGen K-stream traffic saved by fusion (GB).
     pub sigu_hbm_saved_gb: f64,
+    /// Total decode tokens generated across the trace (0 = prefill-only).
+    pub decode_tokens: u64,
+    /// Mean TPOT over decoding requests, weighted by their token counts
+    /// (us per output token).
+    pub tpot_mean_us: f64,
+    /// Mean of per-request p95 inter-token latencies (us).
+    pub itl_p95_us: f64,
+    /// Aggregate decode throughput: decode tokens per second of summed
+    /// decode time (0.0 when no request decoded).
+    pub decode_tokens_per_s: f64,
+    /// Total decode-side KV HBM traffic priced through the spine (GB).
+    pub decode_hbm_read_gb: f64,
+    pub decode_hbm_write_gb: f64,
 }
 
 impl ServeSummary {
@@ -252,6 +287,37 @@ impl ServeSummary {
                 / 1e9,
             sigu_hbm_saved_gb: samples.iter().map(|s| s.sigu_hbm_saved_bytes as f64).sum::<f64>()
                 / 1e9,
+            decode_tokens: samples.iter().map(|s| s.decode_tokens).sum(),
+            tpot_mean_us: {
+                let toks: u64 = samples.iter().map(|s| s.decode_tokens).sum();
+                let us: f64 =
+                    samples.iter().map(|s| s.tpot_us * s.decode_tokens as f64).sum();
+                if toks > 0 { us / toks as f64 } else { 0.0 }
+            },
+            itl_p95_us: {
+                let itl: Vec<f64> = samples
+                    .iter()
+                    .filter(|s| s.decode_tokens > 0)
+                    .map(|s| s.itl_p95_us)
+                    .collect();
+                mean(&itl)
+            },
+            decode_tokens_per_s: {
+                let toks: u64 = samples.iter().map(|s| s.decode_tokens).sum();
+                let us: f64 =
+                    samples.iter().map(|s| s.tpot_us * s.decode_tokens as f64).sum();
+                if us > 0.0 { toks as f64 / (us / 1e6) } else { 0.0 }
+            },
+            decode_hbm_read_gb: samples
+                .iter()
+                .map(|s| s.decode_hbm_read_bytes as f64)
+                .sum::<f64>()
+                / 1e9,
+            decode_hbm_write_gb: samples
+                .iter()
+                .map(|s| s.decode_hbm_write_bytes as f64)
+                .sum::<f64>()
+                / 1e9,
         }
     }
 
@@ -302,6 +368,15 @@ impl ServeSummary {
                 self.sigu_fused_phases, self.sigu_fused_width_mean, self.sigu_hbm_saved_gb
             ));
         }
+        if self.decode_tokens > 0 {
+            line.push_str(&format!(
+                " | decode {} tok TPOT {:.2} ms ITL p95 {:.2} ms {:.0} tok/s",
+                self.decode_tokens,
+                self.tpot_mean_us / 1e3,
+                self.itl_p95_us / 1e3,
+                self.decode_tokens_per_s
+            ));
+        }
         line
     }
 
@@ -319,7 +394,10 @@ impl ServeSummary {
              \"prefix_hit_rate\": {:.4}, \"prefix_tokens_skipped\": {}, \
              \"prefix_ttft_delta_ms\": {:.3}, \
              \"sigu_fused_phases\": {}, \"sigu_fused_width_mean\": {:.3}, \
-             \"sigu_hbm_read_gb\": {:.6}, \"sigu_hbm_saved_gb\": {:.6}}}",
+             \"sigu_hbm_read_gb\": {:.6}, \"sigu_hbm_saved_gb\": {:.6}, \
+             \"decode_tokens\": {}, \"tpot_mean_us\": {:.3}, \"itl_p95_us\": {:.3}, \
+             \"decode_tokens_per_s\": {:.3}, \
+             \"decode_hbm_read_gb\": {:.6}, \"decode_hbm_write_gb\": {:.6}}}",
             label,
             self.n,
             self.kernel_backend,
@@ -344,7 +422,13 @@ impl ServeSummary {
             self.sigu_fused_phases,
             self.sigu_fused_width_mean,
             self.sigu_hbm_read_gb,
-            self.sigu_hbm_saved_gb
+            self.sigu_hbm_saved_gb,
+            self.decode_tokens,
+            self.tpot_mean_us,
+            self.itl_p95_us,
+            self.decode_tokens_per_s,
+            self.decode_hbm_read_gb,
+            self.decode_hbm_write_gb
         )
     }
 
@@ -559,6 +643,46 @@ mod tests {
         let solo = ServeSummary::from_samples(&[mk(0, 0, 5, 0)]);
         assert!(!solo.render("x").contains("idxgen fused"));
         assert_eq!(solo.sigu_fused_width_mean, 0.0);
+    }
+
+    #[test]
+    fn serve_summary_decode_aggregates() {
+        let mk = |tokens: u64, tpot_us: f64, itl: f64, first_ms: f64, e2e_ms: f64| ServeSample {
+            decode_tokens: tokens,
+            tpot_us,
+            itl_p95_us: itl,
+            first_token_us: first_ms * 1e3,
+            e2e_us: e2e_ms * 1e3,
+            decode_hbm_read_bytes: tokens * 1_000_000,
+            decode_hbm_write_bytes: tokens * 1_000,
+            ..Default::default()
+        };
+        // 8 tokens at 500us/tok and 2 tokens at 1000us/tok, plus one
+        // prefill-only request that must not dilute TPOT/ITL
+        let samples = vec![
+            mk(8, 500.0, 700.0, 10.0, 14.0),
+            mk(2, 1000.0, 1100.0, 20.0, 22.0),
+            ServeSample { e2e_us: 30.0 * 1e3, ..Default::default() },
+        ];
+        let s = ServeSummary::from_samples(&samples);
+        assert_eq!(s.decode_tokens, 10);
+        // token-weighted TPOT: (8*500 + 2*1000) / 10
+        assert!((s.tpot_mean_us - 600.0).abs() < 1e-9, "{}", s.tpot_mean_us);
+        assert!((s.itl_p95_us - 900.0).abs() < 1e-9);
+        // 10 tokens over 6000us of decode time
+        assert!((s.decode_tokens_per_s - 10.0 / 6e-3).abs() < 1e-6);
+        assert!((s.decode_hbm_read_gb - 0.01).abs() < 1e-12);
+        let line = s.render("x");
+        assert!(line.contains("decode 10 tok TPOT 0.60 ms"), "{line}");
+        let json = s.to_json("x");
+        assert!(json.contains("\"decode_tokens\": 10"), "{json}");
+        assert!(json.contains("\"tpot_mean_us\": 600.000"), "{json}");
+        // per-class TTFT is submission -> *first token*, not full e2e
+        assert!((s.interactive.ttft_mean_ms - (10.0 + 20.0 + 30.0) / 3.0).abs() < 1e-9);
+        // a prefill-only trace keeps the banner line unchanged
+        let solo = ServeSummary::from_samples(&[ServeSample::default()]);
+        assert!(!solo.render("x").contains("decode"));
+        assert_eq!(solo.decode_tokens_per_s, 0.0);
     }
 
     #[test]

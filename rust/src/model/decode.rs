@@ -8,10 +8,19 @@
 //! dense W8A8 decode attention over the quantized KV built during prefill,
 //! one token per step. Sparsity is intentionally not applied (FlexPrefill
 //! is a prefill-time algorithm).
+//!
+//! Matmuls dispatch through a [`KernelCtx`] (tile/SIMD/tune ladder), so
+//! decode rides the same kernel layer as prefill; every backend is
+//! bit-identical to the scalar oracle by the kernel contract (pinned per
+//! backend by `decode_is_deterministic`). The KV/position state is
+//! detachable ([`Decoder::into_parts`] / [`Decoder::from_parts`]) so the
+//! serving layer can park a request between decode steps without holding
+//! a weights borrow.
 
 use crate::config::BLOCK;
 use crate::quant::{quant_scale, quantize_one, quantize_with};
 use crate::tensor::ops::{rmsnorm, rope, silu};
+use crate::tensor::tile::KernelCtx;
 use crate::tensor::{MatF32, MatI8};
 
 use super::weights::ModelWeights;
@@ -66,6 +75,8 @@ impl DecodeKv {
 /// Decoder state: hidden residual for the current token + KV per layer.
 pub struct Decoder<'w> {
     pub w: &'w ModelWeights,
+    /// Kernel-layer context the decode matmuls dispatch through.
+    pub ctx: KernelCtx,
     pub kv: Vec<DecodeKv>,
     pub pos: usize,
 }
@@ -76,8 +87,19 @@ impl<'w> Decoder<'w> {
     /// per-chunk quantization when `hidden_per_layer` comes from
     /// `prefill_reference`; for the engine path use its stored chunks).
     /// For simplicity and testability this constructor re-runs the KV
-    /// projection over the provided per-layer inputs.
+    /// projection over the provided per-layer inputs. Kernels run on a
+    /// single-threaded scalar-or-active default context; use
+    /// [`Decoder::from_prefill_inputs_ctx`] to supply the serving ctx.
     pub fn from_prefill_inputs(w: &'w ModelWeights, layer_inputs: &[MatF32]) -> Self {
+        Decoder::from_prefill_inputs_ctx(w, KernelCtx::single_threaded(), layer_inputs)
+    }
+
+    /// [`Decoder::from_prefill_inputs`] with an explicit [`KernelCtx`].
+    pub fn from_prefill_inputs_ctx(
+        w: &'w ModelWeights,
+        ctx: KernelCtx,
+        layer_inputs: &[MatF32],
+    ) -> Self {
         assert_eq!(layer_inputs.len(), w.cfg.n_layers);
         let cfg = &w.cfg;
         let s = layer_inputs[0].rows;
@@ -87,7 +109,7 @@ impl<'w> Decoder<'w> {
             // per chunk, mirror forward::qkv_chunk quantization granularity
             for c0 in (0..s).step_by(BLOCK) {
                 let chunk = x.slice_rows(c0, (c0 + BLOCK).min(s));
-                let (krows, vrows, ks, vs) = project_kv(w, li, &chunk, c0 as i32);
+                let (krows, vrows, ks, vs) = project_kv(w, &ctx, li, &chunk, c0 as i32);
                 for t in 0..chunk.rows {
                     let kr: Vec<Vec<i8>> = krows.iter().map(|m| m.row(t).to_vec()).collect();
                     let vr: Vec<Vec<i8>> = vrows.iter().map(|m| m.row(t).to_vec()).collect();
@@ -96,21 +118,35 @@ impl<'w> Decoder<'w> {
             }
             kv.push(cache);
         }
-        Decoder { w, kv, pos: s }
+        Decoder { w, ctx, kv, pos: s }
+    }
+
+    /// Reattach a decoder around detached KV/position state — the serving
+    /// layer's per-step entry: decode units park `(kv, pos)` between
+    /// steps (no weights borrow) and rebuild the view to advance.
+    pub fn from_parts(w: &'w ModelWeights, ctx: KernelCtx, kv: Vec<DecodeKv>, pos: usize) -> Self {
+        assert_eq!(kv.len(), w.cfg.n_layers);
+        Decoder { w, ctx, kv, pos }
+    }
+
+    /// Detach the KV cache + position (drops the weights borrow).
+    pub fn into_parts(self) -> (Vec<DecodeKv>, usize) {
+        (self.kv, self.pos)
     }
 
     /// One decode step: consume `token`, return the next token.
     pub fn step(&mut self, token: u8) -> u8 {
         let cfg = &self.w.cfg;
         let d = cfg.d_model;
+        let ctx = &self.ctx;
         let mut x = MatF32::from_vec(1, d, self.w.embed.row(token as usize % cfg.vocab).to_vec());
         for li in 0..cfg.n_layers {
             let lw = &self.w.layers[li];
             // --- attention (dense decode over cached KV) ---
-            let (q_heads, qs) = project_q(self.w, li, &x, self.pos as i32);
+            let (q_heads, qs) = project_q(self.w, ctx, li, &x, self.pos as i32);
             // append this token's KV first (self-attention includes itself)
             let xn = rm(&x, &lw.g_attn, cfg.rms_eps);
-            let (krows, vrows, ks, vs) = project_kv_at(self.w, li, &xn, self.pos as i32);
+            let (krows, vrows, ks, vs) = project_kv_at(self.w, ctx, li, &xn, self.pos as i32);
             let kr: Vec<Vec<i8>> = krows.iter().map(|m| m.row(0).to_vec()).collect();
             let vr: Vec<Vec<i8>> = vrows.iter().map(|m| m.row(0).to_vec()).collect();
             self.kv[li].append(&kr, &vr, ks, vs);
@@ -121,7 +157,8 @@ impl<'w> Decoder<'w> {
                 let g = h / cfg.group_size();
                 let q = &q_heads[h];
                 let kmat = &cache.k[g];
-                // scores over all cached tokens
+                // scores over all cached tokens (exact integer dot — loop
+                // order free, so the scalar loop is already the oracle)
                 let n = kmat.rows;
                 let mut scores = vec![0.0f32; n];
                 let inv = 1.0 / (cfg.d_head as f32).sqrt();
@@ -152,7 +189,7 @@ impl<'w> Decoder<'w> {
             let s_a = quant_scale(&attn_out);
             let mut a_i8 = MatI8::zeros(1, cfg.q_dim());
             quantize_with(&attn_out, s_a, &mut a_i8.data);
-            let proj = crate::quant::int8_matmul_deq(&a_i8, s_a, &lw.wo.q, lw.wo.scale);
+            let proj = ctx.int8_matmul_deq(&a_i8, s_a, &lw.wo.q, lw.wo.scale);
             for (xv, pv) in x.data.iter_mut().zip(&proj.data) {
                 *xv += pv;
             }
@@ -161,16 +198,16 @@ impl<'w> Decoder<'w> {
             let xs = quant_scale(&xn.data);
             let mut x_i8 = MatI8::zeros(1, d);
             quantize_with(&xn.data, xs, &mut x_i8.data);
-            let mut gate = crate::quant::int8_matmul_deq(&x_i8, xs, &lw.wg.q, lw.wg.scale);
+            let mut gate = ctx.int8_matmul_deq(&x_i8, xs, &lw.wg.q, lw.wg.scale);
             silu(&mut gate);
-            let up = crate::quant::int8_matmul_deq(&x_i8, xs, &lw.wu.q, lw.wu.scale);
+            let up = ctx.int8_matmul_deq(&x_i8, xs, &lw.wu.q, lw.wu.scale);
             for (gv, uv) in gate.data.iter_mut().zip(&up.data) {
                 *gv *= uv;
             }
             let hs = quant_scale(&gate.data);
             let mut h_i8 = MatI8::zeros(1, cfg.d_ffn);
             quantize_with(&gate.data, hs, &mut h_i8.data);
-            let down = crate::quant::int8_matmul_deq(&h_i8, hs, &lw.wd.q, lw.wd.scale);
+            let down = ctx.int8_matmul_deq(&h_i8, hs, &lw.wd.q, lw.wd.scale);
             for (xv, dv) in x.data.iter_mut().zip(&down.data) {
                 *xv += dv;
             }
@@ -181,7 +218,7 @@ impl<'w> Decoder<'w> {
         let xs = quant_scale(&xn.data);
         let mut x_i8 = MatI8::zeros(1, d);
         quantize_with(&xn.data, xs, &mut x_i8.data);
-        let logits = crate::quant::int8_matmul_deq(&x_i8, xs, &self.w.lm_head.q, self.w.lm_head.scale);
+        let logits = ctx.int8_matmul_deq(&x_i8, xs, &self.w.lm_head.q, self.w.lm_head.scale);
         logits
             .data
             .iter()
@@ -210,6 +247,7 @@ fn rm(x: &MatF32, g: &[f32], eps: f32) -> MatF32 {
 /// Project (already-normalized input) to quantized K/V rows per kv head.
 fn project_kv_at(
     w: &ModelWeights,
+    ctx: &KernelCtx,
     li: usize,
     xn: &MatF32,
     pos0: i32,
@@ -219,8 +257,8 @@ fn project_kv_at(
     let xs = quant_scale(&xn.data);
     let mut x_i8 = MatI8::zeros(xn.rows, cfg.d_model);
     quantize_with(&xn.data, xs, &mut x_i8.data);
-    let k = crate::quant::int8_matmul_deq(&x_i8, xs, &lw.wk.q, lw.wk.scale);
-    let v = crate::quant::int8_matmul_deq(&x_i8, xs, &lw.wv.q, lw.wv.scale);
+    let k = ctx.int8_matmul_deq(&x_i8, xs, &lw.wk.q, lw.wk.scale);
+    let v = ctx.int8_matmul_deq(&x_i8, xs, &lw.wv.q, lw.wv.scale);
     let pos: Vec<i32> = (0..xn.rows as i32).map(|i| pos0 + i).collect();
     let mut kh: Vec<MatF32> = (0..cfg.n_kv_heads)
         .map(|g| MatF32::from_fn(xn.rows, cfg.d_head, |r, c| k.at(r, g * cfg.d_head + c)))
@@ -253,19 +291,31 @@ fn project_kv_at(
     (qz(&kh, ks), qz(&vh, vs), ks, vs)
 }
 
-fn project_kv(w: &ModelWeights, li: usize, xn: &MatF32, pos0: i32) -> (Vec<MatI8>, Vec<MatI8>, f32, f32) {
-    project_kv_at(w, li, xn, pos0)
+fn project_kv(
+    w: &ModelWeights,
+    ctx: &KernelCtx,
+    li: usize,
+    xn: &MatF32,
+    pos0: i32,
+) -> (Vec<MatI8>, Vec<MatI8>, f32, f32) {
+    project_kv_at(w, ctx, li, xn, pos0)
 }
 
 /// Project to quantized per-head query rows for one token.
-fn project_q(w: &ModelWeights, li: usize, x: &MatF32, pos: i32) -> (Vec<Vec<i8>>, f32) {
+fn project_q(
+    w: &ModelWeights,
+    ctx: &KernelCtx,
+    li: usize,
+    x: &MatF32,
+    pos: i32,
+) -> (Vec<Vec<i8>>, f32) {
     let cfg = &w.cfg;
     let lw = &w.layers[li];
     let xn = rm(x, &lw.g_attn, cfg.rms_eps);
     let xs = quant_scale(&xn.data);
     let mut x_i8 = MatI8::zeros(1, cfg.d_model);
     quantize_with(&xn.data, xs, &mut x_i8.data);
-    let q = crate::quant::int8_matmul_deq(&x_i8, xs, &lw.wq.q, lw.wq.scale);
+    let q = ctx.int8_matmul_deq(&x_i8, xs, &lw.wq.q, lw.wq.scale);
     let mut heads: Vec<MatF32> = (0..cfg.n_heads)
         .map(|h| MatF32::from_fn(1, cfg.d_head, |_, c| q.at(0, h * cfg.d_head + c)))
         .collect();
@@ -294,6 +344,7 @@ fn project_q(w: &ModelWeights, li: usize, x: &MatF32, pos: i32) -> (Vec<Vec<i8>>
 mod tests {
     use super::*;
     use crate::config::TINY;
+    use crate::tensor::simd::{self, Backend};
     use crate::util::prng::Prng;
 
     fn inputs(w: &ModelWeights, s: usize, seed: u64) -> Vec<MatF32> {
@@ -318,10 +369,43 @@ mod tests {
 
     #[test]
     fn decode_is_deterministic() {
+        // determinism per ctx, and bit-identity across every backend and
+        // thread count the kernel ladder can dispatch to — the contract
+        // the serving layer's decode units lean on
         let w = ModelWeights::generate(&TINY, 22);
         let mut a = Decoder::from_prefill_inputs(&w, &inputs(&w, 128, 2));
         let mut b = Decoder::from_prefill_inputs(&w, &inputs(&w, 128, 2));
-        assert_eq!(a.generate(7, 6), b.generate(7, 6));
+        let want = a.generate(7, 6);
+        assert_eq!(want, b.generate(7, 6));
+        for bk in [Backend::Scalar, simd::detect()] {
+            for threads in [1usize, 4] {
+                let ctx = KernelCtx::with_threads(threads).with_backend(bk);
+                let mut d = Decoder::from_prefill_inputs_ctx(&w, ctx, &inputs(&w, 128, 2));
+                assert_eq!(d.generate(7, 6), want, "backend {} threads {threads}", bk.name());
+            }
+        }
+    }
+
+    #[test]
+    fn decoder_parts_roundtrip_resumes_exactly() {
+        // park/reattach between steps (the serving layer's shape) must
+        // match an uninterrupted generate bit-for-bit
+        let w = ModelWeights::generate(&TINY, 25);
+        let mut solo = Decoder::from_prefill_inputs(&w, &inputs(&w, 128, 6));
+        let want = solo.generate(3, 5);
+        let dec = Decoder::from_prefill_inputs(&w, &inputs(&w, 128, 6));
+        let (mut kv, mut pos) = dec.into_parts();
+        let mut tok = 3u8;
+        let mut got = Vec::new();
+        for _ in 0..5 {
+            let mut d = Decoder::from_parts(&w, KernelCtx::single_threaded(), kv, pos);
+            tok = d.step(tok);
+            got.push(tok);
+            let parts = d.into_parts();
+            kv = parts.0;
+            pos = parts.1;
+        }
+        assert_eq!(got, want);
     }
 
     #[test]

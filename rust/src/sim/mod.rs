@@ -18,8 +18,9 @@ pub mod sfu;
 pub mod synth;
 
 pub use prefill::{
-    marginal_fuse_saving_us, price_sau_walk, sau_wave_qblocks, sigu_group_us, simulate_prefill,
-    simulate_prefill_batch, simulate_prefill_batch_prefixed, BatchSimReport, LaneSim, SimReport,
+    marginal_fuse_saving_us, price_sau_walk, sau_wave_qblocks, sigu_group_us,
+    simulate_decode_steps, simulate_prefill, simulate_prefill_batch,
+    simulate_prefill_batch_prefixed, BatchSimReport, DecodeSimReport, LaneSim, SimReport,
 };
 pub use resources::{resource_report, ResourceReport, Resources};
 pub use synth::{synth_model_indices, synth_model_indices_pool, HeadKind, HeadMix};

@@ -466,6 +466,85 @@ pub fn simulate_prefill_batch_prefixed(
     BatchSimReport { combined: rep, lanes }
 }
 
+/// Simulated outcome for a span of decode steps — the decode-side twin
+/// of [`simulate_prefill`], so engine-vs-sim stat identity extends to
+/// mixed prefill+decode traces.
+#[derive(Clone, Debug, Default)]
+pub struct DecodeSimReport {
+    /// Total simulated time for the span (us).
+    pub total_us: f64,
+    /// Mean time-per-output-token over the span (us).
+    pub tpot_us: f64,
+    /// KV gather reads over the span (bytes) — identical to the engine's
+    /// [`crate::coordinator::engine::DecodeState`] counters by
+    /// construction (both price through [`DecodeStepWalk`]).
+    pub kv_read_bytes: u64,
+    /// KV append writes over the span (bytes).
+    pub kv_write_bytes: u64,
+}
+
+/// Price `steps` decode steps starting at context position `pos0`
+/// (tokens resident before the first step).
+///
+/// KV traffic prices through the canonical
+/// [`crate::coordinator::walk::DecodeStepWalk`] — the same derivation the
+/// engine's per-step counters use — so the byte totals here equal the
+/// engine's for any interleaving of the same steps (pinned by
+/// `rust/tests/memory_spine.rs`). Per-step time is the roofline of the
+/// matvec weight-streaming compute (every weight matrix crosses HBM once
+/// per step at batch 1 — decode's defining memory-bound regime) against
+/// the KV gather, plus the FSM phase overhead per layer walk.
+pub fn simulate_decode_steps(
+    f: &FpgaConfig,
+    cfg: &ModelConfig,
+    pos0: usize,
+    steps: usize,
+) -> DecodeSimReport {
+    use crate::coordinator::walk::DecodeStepWalk;
+    let mut rep = DecodeSimReport::default();
+    if steps == 0 {
+        return rep;
+    }
+    let walk = DecodeStepWalk::new(cfg);
+    let hbm = MemModel::hbm(f.hbm_bw_gbs);
+    let d = cfg.d_model;
+    // per-layer weight bytes streamed per step (int8): QKV + o_proj + FFN
+    let layer_weight_bytes =
+        (d * (cfg.q_dim() + 2 * cfg.kv_dim()) + cfg.q_dim() * d + 3 * d * cfg.d_ffn) as f64;
+    let head_bytes = (cfg.vocab * d) as f64;
+    // single-token matvec compute per layer on the MPU
+    let layer_compute_us = mpu::matmul_us(f, 1, d, cfg.q_dim() + 2 * cfg.kv_dim())
+        + mpu::matmul_us(f, 1, cfg.q_dim(), d)
+        + mpu::matmul_us(f, 1, d, 2 * cfg.d_ffn)
+        + mpu::matmul_us(f, 1, cfg.d_ffn, d)
+        + sfu::silu_us(f, cfg.d_ffn as f64);
+    for i in 0..steps {
+        let pos = pos0 + i;
+        let t = walk.price(pos);
+        rep.kv_read_bytes += t.read_bytes;
+        rep.kv_write_bytes += t.write_bytes;
+        // attention scores + PV per head over pos+1 resident tokens
+        let attn_us = (0..cfg.n_layers)
+            .map(|_| {
+                mpu::matmul_us(f, 1, cfg.d_head, pos + 1) * cfg.n_heads as f64
+                    + mpu::matmul_us(f, 1, pos + 1, cfg.d_head) * cfg.n_heads as f64
+                    + sfu::softmax_us(f, cfg.n_heads as f64, (pos + 1) as f64)
+            })
+            .sum::<f64>();
+        let compute_us = cfg.n_layers as f64 * layer_compute_us
+            + attn_us
+            + mpu::matmul_us(f, 1, d, cfg.vocab);
+        let mem_bytes = cfg.n_layers as f64 * layer_weight_bytes
+            + head_bytes
+            + (t.read_bytes + t.write_bytes) as f64;
+        let mem_us = hbm.transfer_us(mem_bytes, kv_block_bytes(cfg));
+        let fsm_us = cfg.n_layers as f64 * FSM_PHASE_CYCLES / f.freq_mhz;
+        rep.total_us += compute_us.max(mem_us) + fsm_us;
+    }
+    rep.tpot_us = rep.total_us / steps as f64;
+    rep
+}
+
 /// Wave size from the banked-accumulator URAM budget: states are
 /// (m, l, acc) per (head, q-block) = BLOCK*(dh+2)*4 bytes.
 pub fn sau_wave_qblocks(_f: &FpgaConfig, cfg: &ModelConfig) -> usize {
@@ -716,5 +795,23 @@ mod tests {
             batch.lanes.iter().map(|l| l.jobs).sum::<usize>(),
             batch.combined.total_jobs
         );
+    }
+
+    #[test]
+    fn decode_sim_prices_kv_through_the_spine() {
+        let cfg = &LLAMA32_3B;
+        let f = u280_fast_prefill();
+        let rep = simulate_decode_steps(&f, cfg, 4096, 8);
+        // byte identity with the canonical walk — the same invariant the
+        // engine-vs-sim decode test pins end to end
+        let span = crate::coordinator::walk::DecodeStepWalk::new(cfg).price_span(4096, 8);
+        assert_eq!(rep.kv_read_bytes, span.read_bytes);
+        assert_eq!(rep.kv_write_bytes, span.write_bytes);
+        assert!(rep.total_us > 0.0 && rep.tpot_us > 0.0);
+        // deeper contexts gather more KV per step and decode no faster
+        let far = simulate_decode_steps(&f, cfg, 32 * 1024, 8);
+        assert!(far.kv_read_bytes > rep.kv_read_bytes);
+        assert!(far.tpot_us >= rep.tpot_us);
+        assert_eq!(simulate_decode_steps(&f, cfg, 4096, 0).total_us, 0.0);
     }
 }

@@ -286,7 +286,13 @@ pub fn resolve(raw: Option<&str>) -> Backend {
 /// once). `KernelCtx` constructors default to this; tests that need both
 /// backends in one process pass an explicit [`Backend`] instead.
 pub fn active() -> Backend {
-    *ACTIVE.get_or_init(|| resolve(std::env::var(KERNEL_ENV).ok().as_deref()))
+    // `resolve` never rejects a value (unknown names warn inside it and
+    // auto-detect), so the knob's parse step is infallible here; routing
+    // through [`crate::config::env::knob`] keeps the read-once shape
+    // shared with every other FASTP_* override.
+    *ACTIVE.get_or_init(|| {
+        crate::config::env::knob(KERNEL_ENV, |raw| Ok(resolve(Some(raw))), detect)
+    })
 }
 
 // ---------------------------------------------------------------------------

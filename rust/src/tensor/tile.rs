@@ -67,18 +67,10 @@ pub fn parse_tile_override(raw: &str) -> Result<usize, String> {
 }
 
 /// The single `FASTP_TILE` parse point (resolved once per process).
-/// Invalid values warn and fall back to [`TILE`] rather than aborting.
+/// Invalid values warn and fall back to [`TILE`] rather than aborting
+/// (via [`crate::config::env::knob`]).
 pub fn env_tile() -> usize {
-    *TILE_FROM_ENV.get_or_init(|| match std::env::var(TILE_ENV) {
-        Err(_) => TILE,
-        Ok(raw) => match parse_tile_override(&raw) {
-            Ok(t) => t,
-            Err(e) => {
-                eprintln!("warning: ignoring tile override: {e} (using default {TILE})");
-                TILE
-            }
-        },
-    })
+    *TILE_FROM_ENV.get_or_init(|| crate::config::env::knob_or(TILE_ENV, parse_tile_override, TILE))
 }
 
 /// Kernel-layer context threaded through the engine phases: the shared

@@ -116,15 +116,8 @@ pub fn parse_autotune_mode(raw: &str) -> Result<AutotuneMode, String> {
 /// validate-warn-default convention as `FASTP_TILE` and `FASTP_KERNEL`.
 pub fn env_mode() -> AutotuneMode {
     static MODE: OnceLock<AutotuneMode> = OnceLock::new();
-    *MODE.get_or_init(|| match std::env::var(AUTOTUNE_ENV) {
-        Err(_) => AutotuneMode::Off,
-        Ok(raw) => match parse_autotune_mode(&raw) {
-            Ok(m) => m,
-            Err(e) => {
-                eprintln!("warning: ignoring invalid {e}; autotuning off");
-                AutotuneMode::Off
-            }
-        },
+    *MODE.get_or_init(|| {
+        crate::config::env::knob_or(AUTOTUNE_ENV, parse_autotune_mode, AutotuneMode::Off)
     })
 }
 

@@ -179,12 +179,19 @@ pub fn validate_want_cap(cap: usize) -> Result<usize, String> {
     Ok(cap)
 }
 
-fn env_threads() -> usize {
-    std::env::var(THREADS_ENV)
+/// Validate a `FASTP_THREADS` value: a positive worker count.
+pub fn parse_threads(raw: &str) -> Result<usize, String> {
+    raw.trim()
+        .parse::<usize>()
         .ok()
-        .and_then(|v| v.trim().parse::<usize>().ok())
         .filter(|&n| n > 0)
-        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+        .ok_or_else(|| format!("{THREADS_ENV}={raw:?} must be a positive integer"))
+}
+
+fn env_threads() -> usize {
+    crate::config::env::knob(THREADS_ENV, parse_threads, || {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
 }
 
 /// A fixed-width pool of scoped worker threads.

@@ -136,6 +136,10 @@ pub struct TraceRequest {
     pub arrival_us: u64,
     /// Scheduling class (ignored by non-preemptive policies).
     pub priority: Priority,
+    /// Decode tokens to generate after prefill (0 = prefill-only, the
+    /// historical trace shape). The server runs these as per-token decode
+    /// steps co-scheduled between other requests' prefill chunks.
+    pub decode_tokens: usize,
 }
 
 /// A batch-of-requests trace for the serving example / benches.
@@ -169,6 +173,7 @@ impl RequestTrace {
                     },
                     arrival_us: t,
                     priority: Priority::Interactive,
+                    decode_tokens: 0,
                 }
             })
             .collect();
@@ -213,6 +218,7 @@ impl RequestTrace {
                     },
                     arrival_us: t,
                     priority: Self::class_for(tokens, shortest, longest),
+                    decode_tokens: 0,
                 }
             })
             .collect();
@@ -252,6 +258,16 @@ impl RequestTrace {
             };
         }
         trace
+    }
+
+    /// Continue every request into decode for `n` tokens — turns any
+    /// prefill trace into a mixed prefill+decode (continuous batching)
+    /// trace without perturbing arrivals, lengths or classes.
+    pub fn with_decode_tokens(mut self, n: usize) -> RequestTrace {
+        for r in &mut self.requests {
+            r.decode_tokens = n;
+        }
+        self
     }
 
     /// The mixed-trace class rule: the longest length class is `Batch`,

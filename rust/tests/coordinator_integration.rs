@@ -26,6 +26,7 @@ fn req(id: u64, tokens: usize) -> TraceRequest {
         spec: PromptSpec { kind: PromptKind::Mixed, tokens, seed: 100 + id },
         arrival_us: 0,
         priority: Default::default(),
+        decode_tokens: 0,
     }
 }
 
@@ -62,6 +63,7 @@ fn identical_requests_get_identical_results_across_workers() {
             spec: PromptSpec { kind: PromptKind::Mixed, tokens: 256, seed: 777 },
             arrival_us: 0,
             priority: Default::default(),
+            decode_tokens: 0,
         });
     }
     let done = server.drain().unwrap();

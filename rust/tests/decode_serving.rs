@@ -1,0 +1,238 @@
+//! Continuous batching: chunked prefill slices and decode co-scheduling
+//! must be pure **scheduling** transforms. Whatever the chunk size,
+//! policy, worker count or thread budget, every request's prefill
+//! outputs are bit-identical to a monolithic solo `Engine::prefill`, and
+//! every request's decode tokens are bit-identical to a solo
+//! `Decoder::generate` continuation of the same prefill. Runs fully
+//! native — no artifacts, every tier-1 environment.
+
+use fast_prefill::config::TINY;
+use fast_prefill::coordinator::{
+    Completion, Engine, EngineConfig, Policy, PrefillArgs, PrefillRun, Server, ServerOptions,
+};
+use fast_prefill::model::decode::Decoder;
+use fast_prefill::model::ModelWeights;
+use fast_prefill::workload::prompts::{Priority, PromptKind, PromptSpec, TraceRequest};
+
+fn native_cfg() -> EngineConfig {
+    let mut cfg = EngineConfig::new_native(TINY.clone());
+    cfg.weight_seed = 4242;
+    // dense: chunked prefill is a dense-only transform (sparse SIGU is
+    // not chunk-closed), and decode attention is dense by definition
+    cfg.flex = None;
+    cfg
+}
+
+fn req(
+    id: u64,
+    tokens: usize,
+    seed: u64,
+    priority: Priority,
+    decode_tokens: usize,
+) -> TraceRequest {
+    TraceRequest {
+        id,
+        spec: PromptSpec { kind: PromptKind::Mixed, tokens, seed },
+        arrival_us: 0,
+        priority,
+        decode_tokens,
+    }
+}
+
+/// The mixed lifecycle trace: prefill-only and decoding requests side by
+/// side, mixed context lengths, one request classed `Batch`.
+fn mixed_trace() -> Vec<TraceRequest> {
+    vec![
+        req(0, 256, 900, Priority::Interactive, 4),
+        req(1, 512, 901, Priority::Batch, 0),
+        req(2, 384, 902, Priority::Interactive, 6),
+        req(3, 128, 903, Priority::Interactive, 3),
+    ]
+}
+
+/// Monolithic capture-enabled solo prefill on a fresh engine — the run
+/// keeps its `decode_inputs` so a solo decoder can continue it.
+fn solo_capture_run(r: &TraceRequest) -> PrefillRun {
+    let mut eng = Engine::new_native(native_cfg()).unwrap();
+    let mut st = eng
+        .prefill_start_with(
+            r.id,
+            &r.spec.generate(),
+            PrefillArgs { chunk_blocks: 0, capture_decode: true },
+        )
+        .unwrap();
+    loop {
+        if let Some(run) = eng.phase_step(&mut st).unwrap() {
+            return run;
+        }
+    }
+}
+
+/// The canonical decode continuation: a solo single-threaded
+/// `Decoder::generate` from the request's own prefill capture.
+fn solo_decode(r: &TraceRequest) -> Vec<u8> {
+    let run = solo_capture_run(r);
+    let weights = ModelWeights::generate(&TINY, native_cfg().weight_seed);
+    let mut dec =
+        Decoder::from_prefill_inputs(&weights, run.decode_inputs.as_ref().unwrap());
+    dec.generate(run.first_token, r.decode_tokens)
+}
+
+fn serve(opts: ServerOptions, reqs: &[TraceRequest]) -> Vec<Completion> {
+    let server = Server::start_with("artifacts".into(), native_cfg(), opts).unwrap();
+    for r in reqs {
+        server.submit(r.clone());
+    }
+    server.drain().unwrap()
+}
+
+/// Chunked prefill changes the *schedule* (each token slice pays its own
+/// cache walk), so only the numeric outputs are asserted identical —
+/// priced traffic legitimately differs from the monolithic walk.
+fn assert_outputs_identical(a: &PrefillRun, b: &PrefillRun, tag: &str) {
+    assert_eq!(a.first_token, b.first_token, "{tag}: first token");
+    assert_eq!(a.logits_last, b.logits_last, "{tag}: logits");
+    assert_eq!(a.hidden_last_chunk, b.hidden_last_chunk, "{tag}: hidden");
+}
+
+fn assert_decode_matches_solo(done: &[Completion], reqs: &[TraceRequest], tag: &str) {
+    assert_eq!(done.len(), reqs.len(), "{tag}");
+    for (c, r) in done.iter().zip(reqs) {
+        assert_eq!(c.request_id, r.id, "{tag}");
+        if r.decode_tokens > 0 {
+            assert_eq!(c.decode_tokens, solo_decode(r), "{tag}: req {} decode tokens", r.id);
+            assert_eq!(c.decode_step_us.len(), r.decode_tokens, "{tag}: step timings");
+            assert!(c.first_token_us > 0.0, "{tag}: TTFT recorded at prefill->decode");
+            assert!(c.first_token_us <= c.e2e_us, "{tag}: first token before e2e");
+            assert!(c.decode_hbm_read_bytes > 0, "{tag}: decode KV reads priced");
+            assert!(c.decode_hbm_write_bytes > 0, "{tag}: decode KV writes priced");
+        } else {
+            assert!(c.decode_tokens.is_empty(), "{tag}: prefill-only");
+            assert_eq!(c.first_token_us, 0.0, "{tag}: prefill-only TTFT is e2e");
+            assert_eq!(c.decode_hbm_read_bytes, 0, "{tag}");
+        }
+    }
+}
+
+#[test]
+fn served_decode_bit_identical_to_solo_decoder_generate() {
+    let reqs = mixed_trace();
+    for policy in [Policy::Fcfs, Policy::Preemptive] {
+        let done = serve(ServerOptions::new(2, policy), &reqs);
+        assert_decode_matches_solo(&done, &reqs, &format!("{policy:?}"));
+    }
+}
+
+#[test]
+fn serial_baseline_decodes_identically() {
+    let reqs = mixed_trace();
+    let done = serve(ServerOptions::serial(2, Policy::Fcfs), &reqs);
+    assert_decode_matches_solo(&done, &reqs, "serial");
+}
+
+#[test]
+fn decode_deterministic_across_thread_budgets_and_fusion() {
+    // decode lanes fuse through the batch axis when co-resident; tokens
+    // must not depend on the shared kernel budget or on whether fusion
+    // happened at all
+    let reqs = mixed_trace();
+    let mut unfused = ServerOptions::new(2, Policy::Fcfs);
+    unfused.batch_phases = false;
+    unfused.total_threads = 1;
+    let baseline = serve(unfused, &reqs);
+    for threads in [2usize, 8] {
+        let mut opts = ServerOptions::new(2, Policy::Fcfs);
+        opts.total_threads = threads;
+        let done = serve(opts, &reqs);
+        for (a, b) in baseline.iter().zip(&done) {
+            assert_eq!(a.request_id, b.request_id);
+            assert_eq!(a.decode_tokens, b.decode_tokens, "budget {threads}");
+            assert_eq!(a.run.first_token, b.run.first_token, "budget {threads}");
+        }
+    }
+}
+
+#[test]
+fn chunked_prefill_bit_identical_to_monolithic_for_every_chunk_size() {
+    // the chunk-size x thread-budget sweep: slices are closed under
+    // dense prefill (causal attention, absolute RoPE, per-BLOCK quant
+    // scales), so outputs never move. 384 covers the not-a-divisor case
+    // (ragged last slice); 128 on the 128-token request covers the
+    // whole-context fallback to monolithic.
+    let reqs: Vec<TraceRequest> = mixed_trace()
+        .into_iter()
+        .map(|mut r| {
+            r.decode_tokens = 0;
+            r
+        })
+        .collect();
+    let mut eng = Engine::new_native(native_cfg()).unwrap();
+    let solo: Vec<PrefillRun> =
+        reqs.iter().map(|r| eng.prefill(r.id, &r.spec.generate()).unwrap()).collect();
+    for chunk in [128usize, 256, 384] {
+        for threads in [1usize, 4] {
+            let opts = ServerOptions::builder()
+                .n_workers(2)
+                .prefill_chunk(chunk)
+                .total_threads(threads)
+                .build()
+                .unwrap();
+            let done = serve(opts, &reqs);
+            assert_eq!(done.len(), solo.len());
+            for (c, s) in done.iter().zip(&solo) {
+                assert_eq!(c.request_id, s.metrics.request_id);
+                assert_outputs_identical(
+                    &c.run,
+                    s,
+                    &format!("chunk {chunk} threads {threads} req {}", c.request_id),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn chunked_server_decodes_identically_too() {
+    // the full continuous-batching shape: chunked prefill slices AND
+    // decode steps co-scheduled in one pipeline — tokens still match the
+    // solo references exactly
+    let reqs = mixed_trace();
+    let opts = ServerOptions::builder()
+        .n_workers(2)
+        .policy(Policy::Preemptive)
+        .prefill_chunk(128)
+        .build()
+        .unwrap();
+    let done = serve(opts, &reqs);
+    assert_decode_matches_solo(&done, &reqs, "chunked+decode");
+    let mono = serve(ServerOptions::new(2, Policy::Preemptive), &reqs);
+    for (a, b) in done.iter().zip(&mono) {
+        assert_outputs_identical(&a.run, &b.run, "chunked vs monolithic serving");
+        assert_eq!(a.decode_tokens, b.decode_tokens);
+    }
+}
+
+#[test]
+fn serve_samples_report_decode_latency_decomposition() {
+    let reqs = mixed_trace();
+    let done = serve(ServerOptions::new(2, Policy::Fcfs), &reqs);
+    let samples: Vec<_> = done.iter().map(|c| c.sample()).collect();
+    let total_decode: u64 = reqs.iter().map(|r| r.decode_tokens as u64).sum();
+    for (s, r) in samples.iter().zip(&reqs) {
+        assert_eq!(s.decode_tokens, r.decode_tokens as u64);
+        if r.decode_tokens > 0 {
+            assert!(s.tpot_us > 0.0, "TPOT populated");
+            assert!(s.itl_p95_us > 0.0, "ITL populated");
+            assert!(s.ttft_e2e_us() <= s.e2e_us, "user TTFT within e2e");
+            assert_eq!(s.ttft_e2e_us(), s.first_token_us, "decode TTFT is first-token time");
+        } else {
+            assert_eq!(s.tpot_us, 0.0);
+            assert_eq!(s.ttft_e2e_us(), s.e2e_us, "prefill-only TTFT falls back to e2e");
+        }
+    }
+    let summary = fast_prefill::metrics::ServeSummary::from_samples(&samples);
+    assert_eq!(summary.decode_tokens, total_decode);
+    assert!(summary.tpot_mean_us > 0.0);
+    assert!(summary.decode_tokens_per_s > 0.0);
+    assert!(summary.decode_hbm_read_gb > 0.0);
+}

@@ -393,3 +393,48 @@ fn engine_and_sim_agree_on_fused_index_gen_attribution() {
         (TINY.n_layers * merged * TINY.n_kv_heads) as u64 * k_block_bytes(&TINY)
     );
 }
+
+#[test]
+fn decode_engine_and_sim_price_identical_kv_traffic() {
+    // the decode twin of the stats-identity contract: the engine's
+    // per-step counters and the simulator's decode point both price KV
+    // gather/append through `DecodeStepWalk`, so their byte totals must
+    // agree exactly — and match a hand-priced span
+    use fast_prefill::coordinator::{kv_token_bytes, DecodeStepWalk, PrefillArgs};
+    use fast_prefill::sim::simulate_decode_steps;
+
+    let n = 256usize;
+    let steps = 5usize;
+    let toks = tokens(n, 91);
+    let mut eng = Engine::new_native(native_cfg()).unwrap();
+    let mut st = eng
+        .prefill_start_with(0, &toks, PrefillArgs { chunk_blocks: 0, capture_decode: true })
+        .unwrap();
+    let run = loop {
+        if let Some(r) = eng.phase_step(&mut st).unwrap() {
+            break r;
+        }
+    };
+    let mut ds = eng.decode_start(0, &run, steps).unwrap();
+    while !ds.done() {
+        eng.decode_step(&mut ds).unwrap();
+    }
+
+    let walk = DecodeStepWalk::new(&TINY).price_span(n, steps);
+    assert_eq!(ds.hbm_read_bytes, walk.read_bytes, "engine reads = spine span");
+    assert_eq!(ds.hbm_write_bytes, walk.write_bytes, "engine writes = spine span");
+
+    let sim = simulate_decode_steps(&u280_fast_prefill(), &TINY, n, steps);
+    assert_eq!(sim.kv_read_bytes, ds.hbm_read_bytes, "sim reads = engine reads");
+    assert_eq!(sim.kv_write_bytes, ds.hbm_write_bytes, "sim writes = engine writes");
+    assert!(sim.total_us > 0.0 && sim.tpot_us > 0.0);
+
+    // hand-priced: per step at pre-step pos p, each layer reads (p+1)
+    // resident tokens' K/V rows and appends one
+    let tok_bytes = kv_token_bytes(&TINY);
+    let expect_read: u64 = (0..steps as u64)
+        .map(|i| TINY.n_layers as u64 * (n as u64 + i + 1) * tok_bytes)
+        .sum();
+    assert_eq!(ds.hbm_read_bytes, expect_read);
+    assert_eq!(ds.hbm_write_bytes, steps as u64 * TINY.n_layers as u64 * tok_bytes);
+}

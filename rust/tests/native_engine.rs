@@ -218,6 +218,7 @@ fn native_server_serves_requests_without_artifacts() {
             spec: PromptSpec { kind: PromptKind::Mixed, tokens: 256, seed: id },
             arrival_us: 0,
             priority: Default::default(),
+            decode_tokens: 0,
         });
     }
     let completions = server.drain().unwrap();

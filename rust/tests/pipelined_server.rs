@@ -22,7 +22,7 @@ fn spec(tokens: usize, seed: u64) -> PromptSpec {
 }
 
 fn req(id: u64, tokens: usize, seed: u64, priority: Priority) -> TraceRequest {
-    TraceRequest { id, spec: spec(tokens, seed), arrival_us: 0, priority }
+    TraceRequest { id, spec: spec(tokens, seed), arrival_us: 0, priority, decode_tokens: 0 }
 }
 
 /// The contention trace: mixed context lengths, distinct seeds, the long
@@ -149,6 +149,7 @@ fn open_loop_replay_honors_arrival_times() {
             spec: spec(256, 700 + id),
             arrival_us: id * gap_us,
             priority: Priority::Interactive,
+            decode_tokens: 0,
         })
         .collect();
     let solo = solo_runs(&reqs);
@@ -345,6 +346,7 @@ fn prefix_enabled_server_reuses_and_stays_bit_identical() {
         },
         arrival_us: 0,
         priority: Priority::Interactive,
+        decode_tokens: 0,
     };
     let reqs = vec![cohort(0, 900), cohort(1, 901)];
 
