@@ -41,12 +41,29 @@
 //! Interactive mean TTFT (chunk boundaries release the engine, so the
 //! anchor's prefill no longer blocks interactive admissions end-to-end),
 //! with `decode_monolithic`/`decode_chunked` legs in the JSON summary.
+//! FASTP_SERVE_REPLICAS=N adds a replica-sharding leg (dense mode): a
+//! closed-loop bimodal load-generator trace served through
+//! `coordinator::cluster` — once on a single replica (the reference) and
+//! once across N replicas under the FASTP_ROUTER policy
+//! (round_robin|least_loaded|cost_model, default cost_model) at the same
+//! total thread budget — asserting per-request bit-identity between the
+//! two (placement only moves work, never changes math). When the router
+//! is cost_model and N > 1 the leg also serves the same trace
+//! round-robin and gates the cost model's strictly lower mean TTFT
+//! (prefill-only, so e2e = submission -> first token): the trace plants
+//! its long requests on round-robin's replica-0 stride, so the
+//! placement-blind policy piles them onto one replica while the cost
+//! model spreads them by priced backlog. JSON legs:
+//! `replica_solo`/`replica_sharded` (+ `replica_round_robin`), each
+//! carrying per-replica request and utilization vectors.
 
 use std::sync::Arc;
 
 use anyhow::Result;
 use fast_prefill::config::{a5000, by_name, u280_fast_prefill, SMALL100M};
-use fast_prefill::coordinator::{Completion, EngineConfig, Policy, Server, ServerOptions};
+use fast_prefill::coordinator::{
+    Cluster, ClusterRun, Completion, EngineConfig, Policy, RouterPolicy, Server, ServerOptions,
+};
 use fast_prefill::gpu_model::simulate_gpu_prefill;
 use fast_prefill::metrics::{ServeSample, ServeSummary};
 use fast_prefill::model::ModelWeights;
@@ -55,6 +72,7 @@ use fast_prefill::util::table::{fnum, Table};
 use fast_prefill::workload::prompts::{
     Priority, PromptKind, PromptSpec, RequestTrace, TraceRequest,
 };
+use fast_prefill::workload::LoadGen;
 
 fn serve(
     cfg: &EngineConfig,
@@ -87,6 +105,26 @@ fn serve(
 fn summarize(completions: &[Completion]) -> ServeSummary {
     let samples: Vec<ServeSample> = completions.iter().map(|c| c.sample()).collect();
     ServeSummary::from_samples(&samples)
+}
+
+fn serve_cluster(
+    cfg: &EngineConfig,
+    weights: &Arc<ModelWeights>,
+    trace: &RequestTrace,
+    opts: ServerOptions,
+    policy: RouterPolicy,
+) -> Result<ClusterRun> {
+    let cluster = Cluster::start_with_weights(
+        "artifacts".into(),
+        cfg.clone(),
+        opts,
+        policy,
+        Arc::clone(weights),
+    )?;
+    // every load-generator arrival is at t=0, so replay degenerates to
+    // closed-loop submit-as-fast-as-possible in id order
+    cluster.replay(trace);
+    cluster.drain()
 }
 
 fn main() -> Result<()> {
@@ -361,6 +399,104 @@ fn main() -> Result<()> {
         None
     };
 
+    // optional replica-sharding leg (FASTP_SERVE_REPLICAS=N, dense
+    // mode): a closed-loop load-generator trace served once on a single
+    // replica and once across N replicas at the same total thread
+    // budget. Long requests are planted at ids ≡ 0 (mod stride) so a
+    // placement-blind round-robin router lands every one of them on
+    // replica 0 — the skew the cost model's priced backlog must undo.
+    let replica_legs = if let Some(replicas) =
+        std::env::var("FASTP_SERVE_REPLICAS").ok().and_then(|v| v.parse::<usize>().ok())
+    {
+        anyhow::ensure!(replicas > 0, "FASTP_SERVE_REPLICAS must be > 0");
+        // empty env counts as unset (the CI matrix blanks unused knobs)
+        let router = match std::env::var("FASTP_ROUTER").ok().filter(|s| !s.is_empty()) {
+            None => RouterPolicy::CostModel,
+            Some(name) => RouterPolicy::from_name(&name).ok_or_else(|| {
+                anyhow::anyhow!("FASTP_ROUTER={name} (want round_robin|least_loaded|cost_model)")
+            })?,
+        };
+        let mut dense = cfg.clone();
+        dense.flex = None; // replica prefix affinity mirrors the dense-mode store
+        let gen = LoadGen::new(n_requests.max(2) * 2, 2, &[choices[0], choices[2]], 2026);
+        let mut ltrace = gen.trace();
+        let stride = replicas.max(2);
+        for r in ltrace.requests.iter_mut() {
+            if r.id as usize % stride == 0 {
+                r.spec.tokens = choices[2];
+                r.priority = Priority::Batch;
+            } else {
+                r.spec.tokens = choices[0];
+                r.priority = Priority::Interactive;
+            }
+        }
+        let lane = ServerOptions::builder()
+            .policy(Policy::Fcfs)
+            .total_threads(workers.max(replicas));
+        let solo_opts = lane.replicas(1).build().map_err(anyhow::Error::msg)?;
+        let shard_opts = lane.replicas(replicas).build().map_err(anyhow::Error::msg)?;
+        let solo = serve_cluster(&dense, &weights, &ltrace, solo_opts, RouterPolicy::RoundRobin)?;
+        let shard = serve_cluster(&dense, &weights, &ltrace, shard_opts, router)?;
+        // placement only moves work between identical engines: outputs
+        // are bit-identical to single-replica serving, per request
+        assert_eq!(solo.completions.len(), shard.completions.len());
+        for (a, b) in solo.completions.iter().zip(&shard.completions) {
+            assert_eq!(a.request_id, b.request_id);
+            assert_eq!(a.run.first_token, b.run.first_token, "replica req {}", a.request_id);
+            assert_eq!(a.run.logits_last, b.run.logits_last, "replica req {}", a.request_id);
+        }
+        let solo_sum = solo.summary();
+        let shard_sum = shard.summary();
+        println!("{}", solo_sum.render("replica-solo"));
+        println!("{}", shard_sum.render(&format!("replica-x{replicas} {}", router.name())));
+        if replicas > 1 {
+            assert_eq!(shard_sum.replicas, replicas);
+            assert!(
+                shard_sum.replica_requests.iter().all(|&n| n > 0),
+                "router starved a replica: {:?}",
+                shard_sum.replica_requests
+            );
+        }
+        // the cost-model gate: strictly lower mean TTFT than round-robin
+        // at equal total threads (prefill-only, so e2e = user TTFT)
+        let rr_sum = if router == RouterPolicy::CostModel && replicas > 1 {
+            let rr =
+                serve_cluster(&dense, &weights, &ltrace, shard_opts, RouterPolicy::RoundRobin)?;
+            for (a, b) in rr.completions.iter().zip(&shard.completions) {
+                assert_eq!(a.request_id, b.request_id);
+                assert_eq!(a.run.first_token, b.run.first_token, "rr req {}", a.request_id);
+                assert_eq!(a.run.logits_last, b.run.logits_last, "rr req {}", a.request_id);
+            }
+            let rr_sum = rr.summary();
+            println!("{}", rr_sum.render(&format!("replica-x{replicas} round_robin")));
+            println!(
+                "replica routing: cost_model mean TTFT {:.1} ms vs round_robin {:.1} ms \
+                 ({:.1}% saved) | util {:?}",
+                shard_sum.e2e_mean_ms,
+                rr_sum.e2e_mean_ms,
+                (1.0 - shard_sum.e2e_mean_ms / rr_sum.e2e_mean_ms.max(1e-9)) * 100.0,
+                shard_sum
+                    .replica_utilization
+                    .iter()
+                    .map(|u| (u * 100.0).round() as i64)
+                    .collect::<Vec<_>>()
+            );
+            assert!(
+                shard_sum.e2e_mean_ms < rr_sum.e2e_mean_ms,
+                "cost-model routing did not cut mean TTFT vs round-robin \
+                 ({:.1} ms vs {:.1} ms)",
+                shard_sum.e2e_mean_ms,
+                rr_sum.e2e_mean_ms
+            );
+            Some(rr_sum)
+        } else {
+            None
+        };
+        Some((solo_sum, shard_sum, rr_sum))
+    } else {
+        None
+    };
+
     let mut t = Table::new(&[
         "req", "class", "tokens", "TTFT (ms)", "queue (ms)", "phase-wait (ms)", "e2e (ms)",
         "yields", "density %", "hit %", "KV MB", "jobs",
@@ -410,6 +546,13 @@ fn main() -> Result<()> {
         if let Some((m, c)) = &decode_legs {
             legs.push(m.to_json("decode_monolithic"));
             legs.push(c.to_json("decode_chunked"));
+        }
+        if let Some((solo, shard, rr)) = &replica_legs {
+            legs.push(solo.to_json("replica_solo"));
+            legs.push(shard.to_json("replica_sharded"));
+            if let Some(rr) = rr {
+                legs.push(rr.to_json("replica_round_robin"));
+            }
         }
         let json = format!(
             "{{\"policy\": \"{policy:?}\", \"arrival\": \"{}\", \"legs\": [{}]}}\n",

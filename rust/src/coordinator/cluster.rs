@@ -1,0 +1,536 @@
+//! Sharded multi-replica serving (ROADMAP direction 3): N engine
+//! replicas behind a cost-model router.
+//!
+//! A [`Cluster`] spawns `replicas` independent [`Server`]s — each with
+//! its own workers, its own share of the total kernel-thread budget, its
+//! own [`PrefixStore`] — over **one** shared [`ModelWeights`] instance.
+//! A [`Router`] places every arrival on one replica; placement only
+//! moves work between identical engines, so per-request outputs are
+//! **bit-identical** to single-replica serving for every policy and
+//! replica count (the contract the replica-matrix CI legs pin).
+//!
+//! The router is a **pure function of the submission stream**: it never
+//! reads live replica state (queue depths and store contents depend on
+//! wall-clock completion timing), but instead maintains deterministic
+//! shadow bookkeeping per replica —
+//!
+//!  * a simulated work clock: each placement appends the request's
+//!    simulator-priced cost ([`sim::simulate_prefill_batch_prefixed`])
+//!    to the replica's estimated finish queue, and each arrival's
+//!    `arrival_us` drains finished estimates, yielding a backlog
+//!    estimate and a queue depth;
+//!  * a shadow prefix-coverage set: the chain hashes
+//!    ([`PrefixStore::chain`]) of every request already placed there.
+//!    An arrival's affinity is its consecutive leading-block coverage
+//!    against that set — the same walk the real store's lookup performs,
+//!    minus the timing-dependent eviction state.
+//!
+//! Every policy shares this bookkeeping (LeastLoaded needs priced
+//! backlogs too); they differ only in the choice rule:
+//!
+//!  * [`RouterPolicy::RoundRobin`] — `seq % replicas`, the placement-
+//!    blind baseline;
+//!  * [`RouterPolicy::LeastLoaded`] — minimum estimated backlog;
+//!  * [`RouterPolicy::CostModel`] — minimum (backlog + marginal TTFT
+//!    estimate), where the marginal estimate is priced at the replica's
+//!    prefix coverage, so reuse affinity discounts exactly the replicas
+//!    that have served the prefix before. Queue depth breaks cost ties.
+//!
+//! All ties break to the lowest replica index, so placements are
+//! replayable: the same trace under the same options routes identically,
+//! forever (pinned by the determinism tests in `tests/replica_cluster`).
+
+use std::collections::{HashSet, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::config::{u280_fast_prefill, FpgaConfig, ModelConfig, BLOCK};
+use crate::coordinator::engine::EngineConfig;
+use crate::coordinator::prefix::{PrefixConfig, PrefixStore};
+use crate::coordinator::server::{env_replicas, Completion, Server, ServerOptions};
+use crate::model::forward::suffix_dense_indices;
+use crate::model::ModelWeights;
+use crate::sim::simulate_prefill_batch_prefixed;
+use crate::util::pool::WorkerPool;
+use crate::workload::prompts::{RequestTrace, TraceRequest};
+
+/// Replica-placement policy ladder: the cost-model win is only
+/// meaningful against dumb baselines measured on the same trace.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouterPolicy {
+    /// `seq % replicas` — placement-blind.
+    RoundRobin,
+    /// Minimum estimated backlog (simulator-priced outstanding work).
+    LeastLoaded,
+    /// Minimum (backlog + prefix-coverage-discounted marginal TTFT).
+    CostModel,
+}
+
+impl RouterPolicy {
+    pub fn from_name(name: &str) -> Option<RouterPolicy> {
+        match name {
+            "round_robin" => Some(RouterPolicy::RoundRobin),
+            "least_loaded" => Some(RouterPolicy::LeastLoaded),
+            "cost_model" => Some(RouterPolicy::CostModel),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RouterPolicy::RoundRobin => "round_robin",
+            RouterPolicy::LeastLoaded => "least_loaded",
+            RouterPolicy::CostModel => "cost_model",
+        }
+    }
+}
+
+/// One routing decision. `est_cost_us` is the simulator-priced marginal
+/// TTFT estimate the chosen replica was charged (coverage-discounted, so
+/// a prefix-affine placement prices below a cold one of the same
+/// length) — every policy records it, because every policy's backlog
+/// bookkeeping is built from it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Placement {
+    pub request_id: u64,
+    pub replica: usize,
+    /// Simulated-clock arrival the decision was made at (us).
+    pub arrival_us: u64,
+    /// Marginal cost estimate charged to the chosen replica (us).
+    pub est_cost_us: f64,
+    /// Leading blocks of the request covered by the chosen replica's
+    /// shadow prefix set at placement time.
+    pub prefix_coverage: usize,
+}
+
+/// Deterministic shadow bookkeeping for one replica.
+struct ReplicaState {
+    /// Estimated finish times (simulated us) of requests placed here and
+    /// not yet drained by the clock. The replica is modeled as a serial
+    /// device: a new placement starts at `max(now, last finish)`.
+    finishes: VecDeque<f64>,
+    /// Chain hashes of every full leading block of requests placed here
+    /// (minus each request's final block, which always runs novel — the
+    /// same cap the real store's lookup applies).
+    chains: HashSet<u64>,
+}
+
+impl ReplicaState {
+    fn new() -> ReplicaState {
+        ReplicaState { finishes: VecDeque::new(), chains: HashSet::new() }
+    }
+
+    /// Drop finish estimates at or before the simulated clock.
+    fn drain(&mut self, now_us: f64) {
+        while self.finishes.front().is_some_and(|&f| f <= now_us) {
+            self.finishes.pop_front();
+        }
+    }
+
+    /// Estimated outstanding work at `now_us` (0 when idle).
+    fn backlog_us(&self, now_us: f64) -> f64 {
+        self.finishes.back().map_or(0.0, |&f| (f - now_us).max(0.0))
+    }
+
+    fn queue_depth(&self) -> usize {
+        self.finishes.len()
+    }
+}
+
+/// The pure request router. Feed it arrivals in submission order; it
+/// returns replayable placements (same trace + same construction =>
+/// same placements, bit-for-bit).
+pub struct Router {
+    policy: RouterPolicy,
+    model: ModelConfig,
+    fpga: FpgaConfig,
+    /// Hash-only store instance: [`PrefixStore::chain`] takes `&self`,
+    /// so one salted hasher serves every routing decision without ever
+    /// storing a block.
+    hasher: PrefixStore,
+    replicas: Vec<ReplicaState>,
+    /// Placement sequence number (drives RoundRobin).
+    seq: u64,
+    /// Simulated clock (us): the latest arrival routed so far.
+    clock_us: f64,
+    /// Marginal-cost cache keyed by (context blocks, covered blocks) —
+    /// traces draw from a few length classes, so pricing is amortized to
+    /// a handful of simulator calls per trace.
+    cost_cache: std::collections::HashMap<(usize, usize), f64>,
+}
+
+impl Router {
+    /// A router for `n_replicas` replicas of the engine described by
+    /// `cfg`. The chain hasher is salted with the same (model name,
+    /// weight seed) the replicas' real stores use, so shadow coverage
+    /// walks the same hash space.
+    pub fn new(policy: RouterPolicy, n_replicas: usize, cfg: &EngineConfig) -> Router {
+        assert!(n_replicas > 0, "a cluster has at least one replica");
+        Router {
+            policy,
+            model: cfg.model.clone(),
+            fpga: u280_fast_prefill(),
+            hasher: PrefixStore::new(cfg.model.name, cfg.weight_seed, PrefixConfig::default()),
+            replicas: (0..n_replicas).map(|_| ReplicaState::new()).collect(),
+            seq: 0,
+            clock_us: 0.0,
+            cost_cache: std::collections::HashMap::new(),
+        }
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Simulator-priced marginal TTFT estimate (us) for a request of
+    /// `blocks` full context blocks resuming after `covered` reused
+    /// leading blocks. One layer of dense suffix indices suffices — the
+    /// simulator cycles index sets across layers. Cached per
+    /// (blocks, covered).
+    pub fn price_us(&mut self, blocks: usize, covered: usize) -> f64 {
+        let blocks = blocks.max(1);
+        let covered = covered.min(blocks - 1);
+        if let Some(&c) = self.cost_cache.get(&(blocks, covered)) {
+            return c;
+        }
+        let sets = vec![suffix_dense_indices(self.model.n_heads, blocks, covered)];
+        let rep = simulate_prefill_batch_prefixed(
+            &self.fpga,
+            &self.model,
+            &[blocks * BLOCK],
+            &[sets.as_slice()],
+            &[covered],
+        );
+        let us = rep.combined.ttft_ms * 1e3;
+        self.cost_cache.insert((blocks, covered), us);
+        us
+    }
+
+    /// Consecutive leading-block coverage of `chain` against one
+    /// replica's shadow set — the affinity probe.
+    fn coverage(replica: &ReplicaState, chain: &[u64]) -> usize {
+        chain.iter().take_while(|h| replica.chains.contains(h)).count()
+    }
+
+    /// Route one arrival: advance the simulated clock to its
+    /// `arrival_us`, score every replica under the policy, charge the
+    /// winner the marginal cost, and record its chain hashes in the
+    /// winner's shadow set. Pure: depends only on the construction
+    /// parameters and the arrivals routed so far.
+    pub fn route(&mut self, req: &TraceRequest) -> Placement {
+        let now = self.clock_us.max(req.arrival_us as f64);
+        self.clock_us = now;
+        for r in &mut self.replicas {
+            r.drain(now);
+        }
+        let tokens = req.spec.generate();
+        let chain = self.hasher.chain(&tokens);
+        let blocks = (tokens.len() / BLOCK).max(1);
+
+        // score = (cost score, queue depth); lowest index wins ties
+        let n = self.replicas.len();
+        let mut best = 0usize;
+        let mut best_score = (f64::INFINITY, usize::MAX);
+        let mut best_cost = 0.0f64;
+        let mut best_cov = 0usize;
+        for i in 0..n {
+            let cov = Self::coverage(&self.replicas[i], &chain).min(blocks - 1);
+            let marginal = self.price_us(blocks, cov);
+            let backlog = self.replicas[i].backlog_us(now);
+            let depth = self.replicas[i].queue_depth();
+            let score = match self.policy {
+                // RoundRobin ignores the scores entirely (handled below)
+                RouterPolicy::RoundRobin => (0.0, 0),
+                RouterPolicy::LeastLoaded => (backlog, depth),
+                RouterPolicy::CostModel => (backlog + marginal, depth),
+            };
+            let wins = match self.policy {
+                RouterPolicy::RoundRobin => i == (self.seq % n as u64) as usize,
+                _ => score < best_score,
+            };
+            if wins {
+                best = i;
+                best_score = score;
+                best_cost = marginal;
+                best_cov = cov;
+            }
+        }
+
+        // charge the winner: serial-device finish estimate + shadow
+        // chains (all full leading blocks except the last, which always
+        // runs novel — mirroring the engine's publish/lookup cap)
+        let winner = &mut self.replicas[best];
+        let start = winner.finishes.back().copied().unwrap_or(now).max(now);
+        winner.finishes.push_back(start + best_cost);
+        let publishable = chain.len().saturating_sub(1);
+        winner.chains.extend(chain[..publishable].iter().copied());
+        self.seq += 1;
+        Placement {
+            request_id: req.id,
+            replica: best,
+            arrival_us: req.arrival_us,
+            est_cost_us: best_cost,
+            prefix_coverage: best_cov,
+        }
+    }
+
+    /// Route a whole trace in arrival order (stable on ties, like
+    /// [`Server::replay`]) — the replayable placement log for a trace.
+    pub fn route_trace(&mut self, trace: &RequestTrace) -> Vec<Placement> {
+        let mut reqs = trace.requests.clone();
+        reqs.sort_by_key(|r| r.arrival_us);
+        reqs.iter().map(|r| self.route(r)).collect()
+    }
+}
+
+/// The completions and placement log of one drained cluster.
+pub struct ClusterRun {
+    /// All replicas' completions, merged and sorted by request id.
+    pub completions: Vec<Completion>,
+    /// Placement log in routing order.
+    pub placements: Vec<Placement>,
+    /// Replica count the cluster served with.
+    pub n_replicas: usize,
+}
+
+impl ClusterRun {
+    /// Which replica served `request_id` (None if it was never routed).
+    pub fn replica_of(&self, request_id: u64) -> Option<usize> {
+        self.placements.iter().find(|p| p.request_id == request_id).map(|p| p.replica)
+    }
+
+    /// Replica-stamped [`crate::metrics::ServeSample`]s, in request-id
+    /// order — what [`crate::metrics::ServeSummary::from_samples`] needs
+    /// to aggregate per-replica placement and utilization counters.
+    pub fn samples(&self) -> Vec<crate::metrics::ServeSample> {
+        self.completions
+            .iter()
+            .map(|c| {
+                let mut s = c.sample();
+                s.replica = self.replica_of(c.request_id).unwrap_or(0);
+                s
+            })
+            .collect()
+    }
+
+    /// Aggregate summary with per-replica counters padded to the full
+    /// cluster width (a replica that served nothing still shows up with
+    /// zero requests).
+    pub fn summary(&self) -> crate::metrics::ServeSummary {
+        crate::metrics::ServeSummary::from_samples_sharded(&self.samples(), self.n_replicas)
+    }
+}
+
+/// N replica [`Server`]s over one shared weight instance, behind a
+/// [`Router`]. Equal thread shares: each replica's workers lease from a
+/// private budget of `total_threads / replicas` (min 1), so a replicas=N
+/// cluster and a single replica at the same `total_threads` are
+/// resource-comparable.
+pub struct Cluster {
+    servers: Vec<Server>,
+    router: Mutex<Router>,
+    placements: Mutex<Vec<Placement>>,
+}
+
+impl Cluster {
+    /// Spawn a cluster, generating the shared weights once.
+    pub fn start_with(
+        artifact_dir: std::path::PathBuf,
+        cfg: EngineConfig,
+        opts: ServerOptions,
+        policy: RouterPolicy,
+    ) -> Result<Cluster> {
+        let weights = Arc::new(ModelWeights::generate(&cfg.model, cfg.weight_seed));
+        Cluster::start_with_weights(artifact_dir, cfg, opts, policy, weights)
+    }
+
+    /// Spawn a cluster over pre-generated shared weights. The replica
+    /// count resolves from [`ServerOptions::replicas`], falling back to
+    /// the `FASTP_REPLICAS` env knob (default 1); the thread budget
+    /// resolves exactly as [`Server::start_with_weights`] does, then
+    /// splits equally across replicas.
+    pub fn start_with_weights(
+        artifact_dir: std::path::PathBuf,
+        cfg: EngineConfig,
+        opts: ServerOptions,
+        policy: RouterPolicy,
+        weights: Arc<ModelWeights>,
+    ) -> Result<Cluster> {
+        let n_replicas = if opts.replicas > 0 { opts.replicas } else { env_replicas() };
+        let total_threads = if opts.total_threads > 0 {
+            opts.total_threads
+        } else if cfg.threads > 0 {
+            cfg.threads
+        } else {
+            WorkerPool::from_env().threads()
+        };
+        let share = (total_threads / n_replicas).max(1);
+        let mut servers = Vec::with_capacity(n_replicas);
+        for _ in 0..n_replicas {
+            let mut ropts = opts;
+            ropts.replicas = 1;
+            ropts.total_threads = share;
+            servers.push(Server::start_with_weights(
+                artifact_dir.clone(),
+                cfg.clone(),
+                ropts,
+                Arc::clone(&weights),
+            )?);
+        }
+        Ok(Cluster {
+            servers,
+            router: Mutex::new(Router::new(policy, n_replicas, &cfg)),
+            placements: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.servers.len()
+    }
+
+    /// Route and enqueue one request (non-blocking).
+    pub fn submit(&self, req: TraceRequest) {
+        let placement = self.router.lock().unwrap().route(&req);
+        self.placements.lock().unwrap().push(placement);
+        self.servers[placement.replica].submit(req);
+    }
+
+    /// Open-loop trace replay across the cluster: requests are routed
+    /// and submitted at their recorded `arrival_us` offsets, in the same
+    /// stable arrival order [`Router::route_trace`] prices — so replayed
+    /// placements match the pure router's log exactly.
+    pub fn replay(&self, trace: &RequestTrace) {
+        let t0 = std::time::Instant::now();
+        let mut reqs = trace.requests.clone();
+        reqs.sort_by_key(|r| r.arrival_us);
+        for r in reqs {
+            let target = std::time::Duration::from_micros(r.arrival_us);
+            let elapsed = t0.elapsed();
+            if target > elapsed {
+                std::thread::sleep(target - elapsed);
+            }
+            self.submit(r);
+        }
+    }
+
+    /// Close every replica's queue and collect all completions plus the
+    /// placement log.
+    pub fn drain(self) -> Result<ClusterRun> {
+        let n_replicas = self.servers.len();
+        let mut completions = Vec::new();
+        for server in self.servers {
+            completions.extend(server.drain()?);
+        }
+        completions.sort_by_key(|c| c.request_id);
+        let placements = self.placements.into_inner().unwrap();
+        Ok(ClusterRun { completions, placements, n_replicas })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TINY;
+    use crate::workload::prompts::{Priority, PromptKind, PromptSpec};
+
+    fn tiny_cfg() -> EngineConfig {
+        EngineConfig::new_native(TINY.clone())
+    }
+
+    fn req(id: u64, tokens: usize, arrival_us: u64) -> TraceRequest {
+        TraceRequest {
+            id,
+            spec: PromptSpec { kind: PromptKind::Random, tokens, seed: 100 + id },
+            arrival_us,
+            priority: Priority::Interactive,
+            decode_tokens: 0,
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles_replicas() {
+        let mut r = Router::new(RouterPolicy::RoundRobin, 3, &tiny_cfg());
+        let got: Vec<usize> =
+            (0..6).map(|i| r.route(&req(i, 256, i * 10)).replica).collect();
+        assert_eq!(got, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_prefers_idle_replica_and_lowest_index_ties() {
+        let mut r = Router::new(RouterPolicy::LeastLoaded, 2, &tiny_cfg());
+        // all idle: tie breaks to replica 0
+        assert_eq!(r.route(&req(0, 512, 0)).replica, 0);
+        // replica 0 now carries backlog: the idle replica 1 wins
+        assert_eq!(r.route(&req(1, 512, 0)).replica, 1);
+        // equal backlogs again: back to replica 0
+        assert_eq!(r.route(&req(2, 512, 0)).replica, 0);
+    }
+
+    #[test]
+    fn clock_drains_backlog_between_sparse_arrivals() {
+        let mut r = Router::new(RouterPolicy::LeastLoaded, 2, &tiny_cfg());
+        let p0 = r.route(&req(0, 512, 0));
+        assert_eq!(p0.replica, 0);
+        assert!(p0.est_cost_us > 0.0, "marginal cost must be priced");
+        // an arrival far beyond the first request's estimated finish
+        // sees two idle replicas again -> lowest index
+        let late = (p0.est_cost_us as u64) * 10 + 1_000_000;
+        assert_eq!(r.route(&req(1, 512, late)).replica, 0);
+    }
+
+    #[test]
+    fn cost_model_discounts_prefix_affinity() {
+        // a long shared prefix with a short novel tail: resuming at the
+        // covered replica must price well below a cold placement
+        let kind = PromptKind::SharedPrefix { prefix_seed: 7, prefix_blocks: 7 };
+        let mk = |id: u64, arrival_us: u64| TraceRequest {
+            id,
+            spec: PromptSpec { kind, tokens: 8 * BLOCK, seed: 500 + id },
+            arrival_us,
+            priority: Priority::Interactive,
+            decode_tokens: 0,
+        };
+        let mut r = Router::new(RouterPolicy::CostModel, 2, &tiny_cfg());
+        let cold = r.price_us(8, 0);
+        let warm = r.price_us(8, 7);
+        assert!(warm < cold * 0.5, "warm {warm} vs cold {cold} us");
+        let p0 = r.route(&mk(0, 0));
+        assert_eq!((p0.replica, p0.prefix_coverage), (0, 0), "first placement is cold");
+        // the cohort's chains now live on replica 0's shadow set. Once
+        // its backlog has drained, the next cohort member faces two idle
+        // replicas — and the coverage-discounted marginal (warm on 0,
+        // cold on 1) tips the otherwise-tied choice toward the cohort's
+        // replica
+        let late = p0.est_cost_us as u64 + 1;
+        let p1 = r.route(&mk(1, late));
+        assert_eq!(p1.replica, 0, "affinity tips the equal-backlog tie");
+        assert_eq!(p1.prefix_coverage, 7);
+        assert!(p1.est_cost_us < p0.est_cost_us);
+        // an unrelated same-length request arriving while replica 0
+        // still owes p1's work goes to the idle replica: no coverage
+        // anywhere, so backlog decides
+        let p2 = r.route(&req(2, 8 * BLOCK, late));
+        assert_eq!((p2.replica, p2.prefix_coverage), (1, 0));
+    }
+
+    #[test]
+    fn placements_are_replayable() {
+        let trace = RequestTrace::generate_mixed(12, &[256, 512, 1024], 1500, 77);
+        for policy in
+            [RouterPolicy::RoundRobin, RouterPolicy::LeastLoaded, RouterPolicy::CostModel]
+        {
+            let a = Router::new(policy, 3, &tiny_cfg()).route_trace(&trace);
+            let b = Router::new(policy, 3, &tiny_cfg()).route_trace(&trace);
+            assert_eq!(a, b, "{policy:?} placements must replay bit-identically");
+        }
+    }
+
+    #[test]
+    fn router_policy_names_roundtrip() {
+        for p in [RouterPolicy::RoundRobin, RouterPolicy::LeastLoaded, RouterPolicy::CostModel] {
+            assert_eq!(RouterPolicy::from_name(p.name()), Some(p));
+        }
+        assert_eq!(RouterPolicy::from_name("best_effort"), None);
+    }
+}

@@ -21,13 +21,20 @@
 //!    runs as schedulable token slices (chunked prefill) and decode
 //!    continues as phase-sized per-token steps co-scheduled between
 //!    prefill chunks (continuous batching).
+//!  * [`cluster`] — sharded multi-replica serving: N replica servers
+//!    (each its own worker pool share + prefix store) over one shared
+//!    weight instance, behind a deterministic cost-model router
+//!    (`RoundRobin`/`LeastLoaded`/`CostModel`) whose placements are a
+//!    replayable pure function of the submission stream.
 
+pub mod cluster;
 pub mod engine;
 pub mod joblist;
 pub mod prefix;
 pub mod server;
 pub mod walk;
 
+pub use cluster::{Cluster, ClusterRun, Placement, Router, RouterPolicy};
 pub use engine::{
     phase_hint_slot, DecodeState, Engine, EngineConfig, Phase, PrefillArgs, PrefillRun,
     PrefillState,

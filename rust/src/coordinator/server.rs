@@ -168,6 +168,34 @@ pub fn env_prefill_chunk() -> usize {
         .get_or_init(|| crate::config::env::knob_or(PREFILL_CHUNK_ENV, parse_prefill_chunk, 0))
 }
 
+/// Environment variable setting the default replica count for
+/// [`crate::coordinator::cluster::Cluster`] serving (validated; see
+/// [`parse_replicas`]). Unset or 1 keeps serving single-replica;
+/// [`ServerOptions::replicas`] overrides.
+pub const REPLICAS_ENV: &str = "FASTP_REPLICAS";
+
+static REPLICAS_FROM_ENV: OnceLock<usize> = OnceLock::new();
+
+/// Validate a `FASTP_REPLICAS` value: a positive integer (a cluster
+/// always has at least one replica).
+pub fn parse_replicas(raw: &str) -> Result<usize, String> {
+    let v: usize = raw
+        .trim()
+        .parse()
+        .map_err(|_| format!("{REPLICAS_ENV}={raw:?} is not an unsigned integer"))?;
+    if v == 0 {
+        return Err(format!("{REPLICAS_ENV} must be > 0 (a cluster has at least one replica)"));
+    }
+    Ok(v)
+}
+
+/// The single `FASTP_REPLICAS` read point (resolved once per process
+/// through [`crate::config::env::knob_or`]; invalid values warn and keep
+/// serving single-replica).
+pub fn env_replicas() -> usize {
+    *REPLICAS_FROM_ENV.get_or_init(|| crate::config::env::knob_or(REPLICAS_ENV, parse_replicas, 1))
+}
+
 /// Admission threshold for growing a fused phase group (µs of priced
 /// marginal saving per layer): a candidate joins only while the saving
 /// strictly exceeds this. 0.0 = any strictly positive priced saving is
@@ -237,6 +265,13 @@ pub struct ServerOptions {
     /// between slices. Dense-only: engines with sparse SIGU fall back to
     /// monolithic prefill (sparse indices are not chunk-closed).
     pub prefill_chunk: usize,
+    /// Replica count for [`crate::coordinator::cluster::Cluster`]
+    /// serving: N independent servers (each its own worker pool share
+    /// and prefix store) behind a router. 0 => the `FASTP_REPLICAS` env
+    /// override, falling back to 1. A plain [`Server`] ignores this —
+    /// the cluster is the multiplexer, and it launches each replica
+    /// server with `replicas = 1`.
+    pub replicas: usize,
 }
 
 impl ServerOptions {
@@ -254,6 +289,7 @@ impl ServerOptions {
             adaptive_hints: true,
             prefix: None,
             prefill_chunk: 0,
+            replicas: 0,
         }
     }
 
@@ -358,6 +394,13 @@ impl ServerOptionsBuilder {
         self
     }
 
+    /// Replica count for cluster serving (see
+    /// [`ServerOptions::replicas`]); 0 defers to `FASTP_REPLICAS`.
+    pub fn replicas(mut self, n: usize) -> Self {
+        self.opts.replicas = n;
+        self
+    }
+
     /// Validate and produce the options. Errors name the offending
     /// field and its constraint.
     pub fn build(self) -> Result<ServerOptions, String> {
@@ -448,6 +491,9 @@ impl Completion {
             itl_p95_us: crate::util::stats::percentile(&self.decode_step_us, 95.0),
             decode_hbm_read_bytes: self.decode_hbm_read_bytes,
             decode_hbm_write_bytes: self.decode_hbm_write_bytes,
+            // a bare server is replica 0; ClusterRun::samples re-stamps
+            // from its placement log
+            replica: 0,
         }
     }
 }
@@ -1797,6 +1843,17 @@ mod tests {
     }
 
     #[test]
+    fn replicas_env_values_validate() {
+        assert_eq!(parse_replicas("1"), Ok(1));
+        assert_eq!(parse_replicas(" 4 "), Ok(4));
+        let zero = parse_replicas("0").unwrap_err();
+        assert!(zero.contains("must be > 0"), "got: {zero}");
+        assert!(parse_replicas("four").is_err());
+        assert!(parse_replicas("-1").is_err());
+        assert!(parse_replicas("1.5").is_err());
+    }
+
+    #[test]
     fn builder_defaults_match_new() {
         let b = ServerOptions::builder().build().unwrap();
         let n = ServerOptions::new(1, Policy::Fcfs);
@@ -1810,6 +1867,8 @@ mod tests {
         assert_eq!(b.max_yields, n.max_yields);
         assert_eq!(b.adaptive_hints, n.adaptive_hints);
         assert_eq!(b.prefill_chunk, 0);
+        assert_eq!(b.replicas, 0, "0 defers to FASTP_REPLICAS (default 1)");
+        assert_eq!(ServerOptions::builder().replicas(4).build().unwrap().replicas, 4);
     }
 
     #[test]

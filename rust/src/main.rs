@@ -429,13 +429,14 @@ fn cmd_perf_trend(args: &[String]) -> Result<()> {
         if norm_key.is_some() { ", normalized by " } else { "" },
         normalize
     );
-    let mut t = Table::new(&["kernel", "baseline", "fresh", "ratio", "status"]);
+    let mut t = Table::new(&["kernel", "baseline", "fresh", "ratio", "margin", "status"]);
     for p in &report.points {
         t.row(&[
             p.key.clone(),
             fnum(p.baseline),
             fnum(p.fresh),
             format!("{:.3}", p.ratio),
+            format!("{:+.3}", p.margin),
             if p.regressed { "REGRESSED".into() } else { "ok".into() },
         ]);
     }
@@ -461,7 +462,14 @@ fn cmd_perf_trend(args: &[String]) -> Result<()> {
             baseline_path
         );
     }
-    println!("perf-trend: PASS ({} kernels within tolerance)", report.points.len());
+    // name the baseline on success too: an armed-gate pass in CI logs
+    // should say what it passed against, with the margin table above it
+    println!(
+        "perf-trend: PASS ({} kernels within {:.0}% of {})",
+        report.points.len(),
+        tolerance * 100.0,
+        baseline_path
+    );
     Ok(())
 }
 

@@ -132,6 +132,10 @@ pub struct ServeSample {
     /// memory spine (bytes).
     pub decode_hbm_read_bytes: u64,
     pub decode_hbm_write_bytes: u64,
+    /// Replica that served the request under cluster serving (0 on a
+    /// bare single server; stamped from the router's placement log by
+    /// [`crate::coordinator::cluster::ClusterRun::samples`]).
+    pub replica: usize,
 }
 
 impl ServeSample {
@@ -226,10 +230,56 @@ pub struct ServeSummary {
     /// Total decode-side KV HBM traffic priced through the spine (GB).
     pub decode_hbm_read_gb: f64,
     pub decode_hbm_write_gb: f64,
+    /// Replica count the trace was served across (1 = single server).
+    pub replicas: usize,
+    /// Requests placed on each replica (length = `replicas`).
+    pub replica_requests: Vec<u64>,
+    /// Each replica's share of the summed engine-busy time
+    /// (`ttft + tpot * decode_tokens` per request; length = `replicas`,
+    /// sums to 1.0 when any work ran). The router's balance metric: a
+    /// placement-blind policy on a skewed trace shows up here as a
+    /// lopsided share vector.
+    pub replica_utilization: Vec<f64>,
 }
 
 impl ServeSummary {
     pub fn from_samples(samples: &[ServeSample]) -> ServeSummary {
+        ServeSummary::from_samples_sharded(samples, 1)
+    }
+
+    /// Aggregate with per-replica counters padded to at least
+    /// `n_replicas` slots (a replica that served nothing still reports
+    /// zero requests and zero utilization). Samples from replica
+    /// indices beyond the hint widen the vectors.
+    pub fn from_samples_sharded(samples: &[ServeSample], n_replicas: usize) -> ServeSummary {
+        let replicas = samples
+            .iter()
+            .map(|s| s.replica + 1)
+            .max()
+            .unwrap_or(0)
+            .max(n_replicas)
+            .max(1);
+        let mut replica_requests = vec![0u64; replicas];
+        let mut busy = vec![0.0f64; replicas];
+        for s in samples {
+            replica_requests[s.replica] += 1;
+            busy[s.replica] += s.ttft_us + s.tpot_us * s.decode_tokens as f64;
+        }
+        let total_busy: f64 = busy.iter().sum();
+        let replica_utilization = if total_busy > 0.0 {
+            busy.iter().map(|b| b / total_busy).collect()
+        } else {
+            vec![0.0; replicas]
+        };
+        let mut summary = ServeSummary::from_samples_flat(samples);
+        summary.replicas = replicas;
+        summary.replica_requests = replica_requests;
+        summary.replica_utilization = replica_utilization;
+        summary
+    }
+
+    /// The replica-blind aggregation shared by both entry points.
+    fn from_samples_flat(samples: &[ServeSample]) -> ServeSummary {
         use crate::util::stats::{mean, percentile};
         let ttft: Vec<f64> = samples.iter().map(|s| s.ttft_us / 1e3).collect();
         let queue: Vec<f64> = samples.iter().map(|s| s.queue_us / 1e3).collect();
@@ -318,6 +368,10 @@ impl ServeSummary {
                 .map(|s| s.decode_hbm_write_bytes as f64)
                 .sum::<f64>()
                 / 1e9,
+            // overwritten by from_samples_sharded, the only caller
+            replicas: 1,
+            replica_requests: Vec::new(),
+            replica_utilization: Vec::new(),
         }
     }
 
@@ -377,12 +431,28 @@ impl ServeSummary {
                 self.decode_tokens_per_s
             ));
         }
+        if self.replicas > 1 {
+            let req: Vec<String> =
+                self.replica_requests.iter().map(|r| r.to_string()).collect();
+            let util: Vec<String> =
+                self.replica_utilization.iter().map(|u| format!("{:.0}%", u * 100.0)).collect();
+            line.push_str(&format!(
+                " | {} replicas req [{}] util [{}]",
+                self.replicas,
+                req.join(" "),
+                util.join(" ")
+            ));
+        }
         line
     }
 
     /// Machine-readable summary (hand-rolled JSON; no serde offline) —
     /// the serving smoke uploads this as a CI workflow artifact.
     pub fn to_json(&self, label: &str) -> String {
+        let replica_requests: Vec<String> =
+            self.replica_requests.iter().map(|r| r.to_string()).collect();
+        let replica_utilization: Vec<String> =
+            self.replica_utilization.iter().map(|u| format!("{u:.4}")).collect();
         format!(
             "{{\"label\": \"{}\", \"n\": {}, \"kernel_backend\": \"{}\", \
              \"ttft_mean_ms\": {:.3}, \"ttft_p95_ms\": {:.3}, \
@@ -397,7 +467,9 @@ impl ServeSummary {
              \"sigu_hbm_read_gb\": {:.6}, \"sigu_hbm_saved_gb\": {:.6}, \
              \"decode_tokens\": {}, \"tpot_mean_us\": {:.3}, \"itl_p95_us\": {:.3}, \
              \"decode_tokens_per_s\": {:.3}, \
-             \"decode_hbm_read_gb\": {:.6}, \"decode_hbm_write_gb\": {:.6}}}",
+             \"decode_hbm_read_gb\": {:.6}, \"decode_hbm_write_gb\": {:.6}, \
+             \"replicas\": {}, \"replica_requests\": [{}], \
+             \"replica_utilization\": [{}]}}",
             label,
             self.n,
             self.kernel_backend,
@@ -428,7 +500,10 @@ impl ServeSummary {
             self.itl_p95_us,
             self.decode_tokens_per_s,
             self.decode_hbm_read_gb,
-            self.decode_hbm_write_gb
+            self.decode_hbm_write_gb,
+            self.replicas,
+            replica_requests.join(", "),
+            replica_utilization.join(", ")
         )
     }
 
@@ -683,6 +758,44 @@ mod tests {
         let solo = ServeSummary::from_samples(&[ServeSample::default()]);
         assert!(!solo.render("x").contains("decode"));
         assert_eq!(solo.decode_tokens_per_s, 0.0);
+    }
+
+    #[test]
+    fn serve_summary_replica_aggregates() {
+        let mk = |replica: usize, ttft_ms: f64| ServeSample {
+            replica,
+            ttft_us: ttft_ms * 1e3,
+            e2e_us: ttft_ms * 1e3,
+            ..Default::default()
+        };
+        // replica 0 carries 3x the busy time of replica 1; replica 2
+        // (from the hint) served nothing
+        let samples = vec![mk(0, 10.0), mk(0, 20.0), mk(1, 10.0)];
+        let s = ServeSummary::from_samples_sharded(&samples, 3);
+        assert_eq!(s.replicas, 3);
+        assert_eq!(s.replica_requests, vec![2, 1, 0]);
+        assert!((s.replica_utilization[0] - 0.75).abs() < 1e-9);
+        assert!((s.replica_utilization[1] - 0.25).abs() < 1e-9);
+        assert_eq!(s.replica_utilization[2], 0.0);
+        let line = s.render("x");
+        assert!(line.contains("3 replicas req [2 1 0] util [75% 25% 0%]"), "{line}");
+        let json = s.to_json("x");
+        assert!(json.contains("\"replicas\": 3"), "{json}");
+        assert!(json.contains("\"replica_requests\": [2, 1, 0]"), "{json}");
+        assert!(
+            json.contains("\"replica_utilization\": [0.7500, 0.2500, 0.0000]"),
+            "{json}"
+        );
+        // a sample beyond the hint widens the vectors
+        let wide = ServeSummary::from_samples_sharded(&[mk(3, 5.0)], 2);
+        assert_eq!(wide.replicas, 4);
+        assert_eq!(wide.replica_requests, vec![0, 0, 0, 1]);
+        // single-replica serving keeps the banner line unchanged but
+        // still reports the counters in JSON
+        let solo = ServeSummary::from_samples(&[mk(0, 5.0)]);
+        assert_eq!(solo.replicas, 1);
+        assert!(!solo.render("x").contains("replicas"));
+        assert!(solo.to_json("x").contains("\"replicas\": 1"));
     }
 
     #[test]

@@ -194,6 +194,11 @@ pub struct TrendPoint {
     pub fresh: f64,
     /// fresh / baseline (> 1 is slower).
     pub ratio: f64,
+    /// Headroom to the gate: `(1 + tolerance) - ratio`. Positive =
+    /// within tolerance by that much; negative = over by that much.
+    /// Surfaced in the CLI table on success too, so a shrinking margin
+    /// is visible in CI logs before it becomes a regression.
+    pub margin: f64,
     /// Over the tolerance: this point is a regression.
     pub regressed: bool,
 }
@@ -269,6 +274,7 @@ pub fn compare_trend(
                     baseline: b,
                     fresh: f,
                     ratio,
+                    margin: (1.0 + tolerance) - ratio,
                     regressed: ratio > 1.0 + tolerance,
                 });
             }
@@ -369,6 +375,25 @@ mod tests {
         let r = compare_trend(BASE, &fresh, 0.25, None).unwrap();
         assert_eq!(r.missing, vec!["score_tile.simd_ns".to_string()]);
         assert!(r.failed());
+    }
+
+    #[test]
+    fn margins_report_headroom_on_both_sides_of_the_gate() {
+        // 1.2x vs 25% tolerance: passes with +0.05 headroom
+        let ok = doctor(BASE, "\"simd_ns\"", 1.2);
+        let r = compare_trend(BASE, &ok, 0.25, None).unwrap();
+        let p = r.points.iter().find(|p| p.key == "score_tile.simd_ns").unwrap();
+        assert!(!p.regressed);
+        assert!((p.margin - 0.05).abs() < 1e-9, "margin {}", p.margin);
+        // an untouched kernel carries the full tolerance as headroom
+        let flat = r.points.iter().find(|p| p.key == "score_tile.scalar_ns").unwrap();
+        assert!((flat.margin - 0.25).abs() < 1e-9);
+        // 1.5x: fails with the overshoot as a negative margin
+        let slow = doctor(BASE, "\"simd_ns\"", 1.5);
+        let r = compare_trend(BASE, &slow, 0.25, None).unwrap();
+        let p = r.points.iter().find(|p| p.key == "score_tile.simd_ns").unwrap();
+        assert!(p.regressed);
+        assert!((p.margin + 0.25).abs() < 1e-9, "margin {}", p.margin);
     }
 
     #[test]

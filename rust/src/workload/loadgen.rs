@@ -1,0 +1,165 @@
+//! Closed-loop load generation for cluster serving.
+//!
+//! Open-loop traces ([`RequestTrace::generate_mixed`]) model arrivals as
+//! an external clock: requests land at recorded offsets whether or not
+//! the servers keep up. A closed-loop generator models saturating
+//! clients instead — `streams` concurrent clients that each keep exactly
+//! one request outstanding and submit the next the moment the last
+//! completes. That is the heavy-traffic shape the replica router exists
+//! for: with `streams` in the hundreds, every replica's queue stays
+//! non-empty and placement quality (not arrival luck) decides TTFT.
+//!
+//! The generator is a pure function of its construction parameters:
+//! `request(stream, k)` is derived entirely from the seed and indices,
+//! so the same `LoadGen` yields the same request set on every run —
+//! the cluster's bit-identity and placement-replay contracts extend to
+//! closed-loop driving unchanged. All requests carry `arrival_us = 0`:
+//! in closed-loop serving the *submission moment* is decided by the
+//! client loop (or, in the batch-submit harness, by queue admission),
+//! not by the trace.
+
+use crate::util::prng::Prng;
+use crate::workload::prompts::{PromptKind, PromptSpec, RequestTrace, TraceRequest};
+
+/// A deterministic closed-loop workload: `streams` clients ×
+/// `requests_per_stream` requests each, lengths drawn per-request from
+/// `token_choices` (longest choice classed `Batch`, like the open-loop
+/// mixed trace).
+#[derive(Clone, Debug)]
+pub struct LoadGen {
+    pub streams: usize,
+    pub requests_per_stream: usize,
+    pub token_choices: Vec<usize>,
+    pub seed: u64,
+}
+
+impl LoadGen {
+    pub fn new(
+        streams: usize,
+        requests_per_stream: usize,
+        token_choices: &[usize],
+        seed: u64,
+    ) -> LoadGen {
+        assert!(streams > 0 && requests_per_stream > 0 && !token_choices.is_empty());
+        LoadGen {
+            streams,
+            requests_per_stream,
+            token_choices: token_choices.to_vec(),
+            seed,
+        }
+    }
+
+    /// Total requests the generator produces.
+    pub fn total(&self) -> usize {
+        self.streams * self.requests_per_stream
+    }
+
+    /// The `k`-th request of client `stream` — a pure function of
+    /// (seed, stream, k). Ids interleave streams round-robin
+    /// (`k * streams + stream`), matching the submission order of
+    /// clients that advance in lockstep, so id order is a meaningful
+    /// global submission order for the batch-submit harness.
+    pub fn request(&self, stream: usize, k: usize) -> TraceRequest {
+        assert!(stream < self.streams && k < self.requests_per_stream);
+        let id = (k * self.streams + stream) as u64;
+        // one private rng per request: no draw-order coupling between
+        // streams, so any subset of streams replays identically
+        let mut rng = Prng::new(
+            self.seed
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                .wrapping_add((stream as u64) << 32)
+                .wrapping_add(k as u64),
+        );
+        let kinds =
+            [PromptKind::Random, PromptKind::Anchored, PromptKind::Local, PromptKind::Mixed];
+        let kind = kinds[rng.below(kinds.len())];
+        let tokens = self.token_choices[rng.below(self.token_choices.len())];
+        let shortest = *self.token_choices.iter().min().unwrap();
+        let longest = *self.token_choices.iter().max().unwrap();
+        TraceRequest {
+            id,
+            spec: PromptSpec {
+                kind,
+                tokens,
+                seed: self.seed.wrapping_mul(31).wrapping_add(id),
+            },
+            arrival_us: 0,
+            priority: RequestTrace::class_for(tokens, shortest, longest),
+            decode_tokens: 0,
+        }
+    }
+
+    /// The whole workload as a trace in global submission (= id) order,
+    /// ready for the cluster's batch-submit harness: `arrival_us` is 0
+    /// throughout, so replay degenerates to submit-as-fast-as-possible —
+    /// the closed-loop saturation regime.
+    pub fn trace(&self) -> RequestTrace {
+        let mut requests = Vec::with_capacity(self.total());
+        for k in 0..self.requests_per_stream {
+            for stream in 0..self.streams {
+                requests.push(self.request(stream, k));
+            }
+        }
+        RequestTrace { requests }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loadgen_is_deterministic() {
+        let a = LoadGen::new(8, 4, &[256, 512], 99).trace();
+        let b = LoadGen::new(8, 4, &[256, 512], 99).trace();
+        assert_eq!(a.requests.len(), 32);
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.spec.tokens, y.spec.tokens);
+            assert_eq!(x.spec.generate(), y.spec.generate());
+            assert_eq!(x.priority, y.priority);
+        }
+    }
+
+    #[test]
+    fn ids_interleave_streams_round_robin() {
+        let g = LoadGen::new(3, 2, &[256], 7);
+        let trace = g.trace();
+        let ids: Vec<u64> = trace.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4, 5]);
+        // request(stream, k) addresses the same request the trace holds
+        assert_eq!(g.request(1, 1).id, 4);
+        assert_eq!(g.request(1, 1).spec.generate(), trace.requests[4].spec.generate());
+    }
+
+    #[test]
+    fn streams_are_draw_independent() {
+        // dropping a stream must not change the other streams' requests
+        let wide = LoadGen::new(4, 2, &[256, 512], 11);
+        let narrow = LoadGen::new(4, 1, &[256, 512], 11);
+        for stream in 0..4 {
+            let a = wide.request(stream, 0);
+            let b = narrow.request(stream, 0);
+            assert_eq!(a.spec.tokens, b.spec.tokens);
+            assert_eq!(a.spec.generate(), b.spec.generate());
+        }
+    }
+
+    #[test]
+    fn scales_to_hundreds_in_flight() {
+        let g = LoadGen::new(128, 3, &[256, 512, 1024], 2026);
+        let trace = g.trace();
+        assert_eq!(trace.requests.len(), 384);
+        // every arrival is immediate (closed-loop submission order only)
+        assert!(trace.requests.iter().all(|r| r.arrival_us == 0));
+        // the length mix actually spans the choices
+        for &c in &g.token_choices {
+            assert!(trace.requests.iter().any(|r| r.spec.tokens == c), "no {c}-token draw");
+        }
+        // longest choice classes Batch, shorter ones Interactive
+        assert!(trace
+            .requests
+            .iter()
+            .all(|r| (r.spec.tokens == 1024) == (r.priority == crate::workload::Priority::Batch)));
+    }
+}

@@ -7,8 +7,10 @@
 //! diffuse query-aware mass. The needle workloads drive the Table III
 //! retrieval proxy.
 
+pub mod loadgen;
 pub mod needle;
 pub mod prompts;
 
+pub use loadgen::LoadGen;
 pub use needle::{NeedleTask, RetrievalOutcome};
 pub use prompts::{Priority, PromptKind, PromptSpec, RequestTrace, TraceRequest};

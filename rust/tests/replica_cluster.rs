@@ -1,0 +1,209 @@
+//! Replica-sharded serving contracts (`coordinator::cluster`):
+//!
+//!  * placements are a **pure function** of (trace, policy, replica
+//!    count) — two routers fed the same stream agree bit-for-bit, and a
+//!    live cluster's placement log matches a fresh router's replay;
+//!  * the cost model's prefix-affinity probe beats LeastLoaded on a
+//!    shared-prefix cohort (strictly lower summed priced cost, strictly
+//!    more warm placements);
+//!  * replica-sharded serving is **bit-identical** to solo
+//!    `Engine::prefill` for random traces × replica counts × policies
+//!    (placement only moves work between identical engines).
+//!
+//! Runs fully native on TINY — no artifacts, every tier-1 environment.
+
+use fast_prefill::config::{BLOCK, TINY};
+use fast_prefill::coordinator::{
+    Cluster, Engine, EngineConfig, Policy, Router, RouterPolicy, ServerOptions,
+};
+use fast_prefill::util::prop::forall_ck;
+use fast_prefill::util::prng::Prng;
+use fast_prefill::workload::prompts::{
+    Priority, PromptKind, PromptSpec, RequestTrace, TraceRequest,
+};
+
+fn native_cfg() -> EngineConfig {
+    let mut cfg = EngineConfig::new_native(TINY.clone());
+    cfg.weight_seed = 4242;
+    cfg
+}
+
+fn req(id: u64, tokens: usize, seed: u64, arrival_us: u64) -> TraceRequest {
+    TraceRequest {
+        id,
+        spec: PromptSpec { kind: PromptKind::Mixed, tokens, seed },
+        arrival_us,
+        priority: Priority::Interactive,
+        decode_tokens: 0,
+    }
+}
+
+const POLICIES: [RouterPolicy; 3] =
+    [RouterPolicy::RoundRobin, RouterPolicy::LeastLoaded, RouterPolicy::CostModel];
+
+#[test]
+fn same_trace_and_options_route_identically() {
+    let trace = RequestTrace::generate_mixed(16, &[128, 256, 512], 1200, 42);
+    for policy in POLICIES {
+        for replicas in [1usize, 2, 4] {
+            let a = Router::new(policy, replicas, &native_cfg()).route_trace(&trace);
+            let b = Router::new(policy, replicas, &native_cfg()).route_trace(&trace);
+            assert_eq!(a, b, "{policy:?} x{replicas}: placements must be replayable");
+            assert!(a.iter().all(|p| p.replica < replicas));
+        }
+    }
+}
+
+/// The affinity scenario: a cohort founder lands cold on replica 0; a
+/// short filler then occupies replica 0 just as the second cohort member
+/// arrives. LeastLoaded flees the filler's backlog to the idle replica
+/// and pays a cold prefill; the cost model weighs the filler's tiny
+/// backlog against the 7/8-coverage discount and stays — strictly
+/// cheaper in total, strictly more warm placements.
+#[test]
+fn cost_model_affinity_beats_least_loaded_on_shared_prefix_cohort() {
+    let cohort = PromptKind::SharedPrefix { prefix_seed: 11, prefix_blocks: 7 };
+    let mk = |id: u64, arrival_us: u64| TraceRequest {
+        id,
+        spec: PromptSpec { kind: cohort, tokens: 8 * BLOCK, seed: 700 + id },
+        arrival_us,
+        priority: Priority::Interactive,
+        decode_tokens: 0,
+    };
+    // price the scenario's constants on a scratch router
+    let mut scratch = Router::new(RouterPolicy::CostModel, 2, &native_cfg());
+    let cold = scratch.price_us(8, 0);
+    let warm = scratch.price_us(8, 7);
+    let filler = scratch.price_us(1, 0);
+    assert!(filler > 0.0, "a 1-block prefill must price above zero");
+    assert!(
+        filler + warm < cold,
+        "scenario needs the affinity discount to dominate the filler backlog \
+         (filler {filler} + warm {warm} vs cold {cold} us)"
+    );
+    let drained = cold as u64 + 1; // past the founder's estimated finish
+    // filler and member share an arrival instant; submission order (the
+    // stable sort) routes the filler first, so the member sees replica 0
+    // carrying exactly the filler's backlog
+    let trace = RequestTrace {
+        requests: vec![
+            mk(0, 0),                    // founder -> replica 0, cold
+            req(1, BLOCK, 900, drained), // filler -> replica 0 (idle tie)
+            mk(2, drained),              // member: the contested choice
+        ],
+    };
+    let ll = Router::new(RouterPolicy::LeastLoaded, 2, &native_cfg()).route_trace(&trace);
+    let cm = Router::new(RouterPolicy::CostModel, 2, &native_cfg()).route_trace(&trace);
+    // both policies agree on the setup placements
+    assert_eq!((ll[0].replica, ll[1].replica), (0, 0));
+    assert_eq!((cm[0].replica, cm[1].replica), (0, 0));
+    // the contested member: LeastLoaded flees to the idle replica (cold),
+    // the cost model stays with the cohort (warm)
+    assert_eq!(ll[2].replica, 1, "LeastLoaded should flee the filler backlog");
+    assert_eq!(ll[2].prefix_coverage, 0);
+    assert_eq!(cm[2].replica, 0, "CostModel should stay for the coverage discount");
+    assert_eq!(cm[2].prefix_coverage, 7);
+    // totals: strictly cheaper, strictly more warm placements
+    let total = |ps: &[fast_prefill::coordinator::Placement]| -> f64 {
+        ps.iter().map(|p| p.est_cost_us).sum()
+    };
+    let warm_count =
+        |ps: &[fast_prefill::coordinator::Placement]| ps.iter().filter(|p| p.prefix_coverage > 0).count();
+    assert!(
+        total(&cm) < total(&ll),
+        "cost model total {} should be strictly below LeastLoaded {}",
+        total(&cm),
+        total(&ll)
+    );
+    assert!(warm_count(&cm) > warm_count(&ll));
+}
+
+#[derive(Debug)]
+struct Case {
+    n_requests: usize,
+    replicas: usize,
+    policy: RouterPolicy,
+    trace_seed: u64,
+}
+
+#[test]
+fn sharded_serving_is_bit_identical_to_solo_for_random_traces() {
+    forall_ck(
+        0xC1057E5,
+        6,
+        |rng: &mut Prng, size| Case {
+            n_requests: 2 + rng.below(3),
+            replicas: 1 + rng.below(3),
+            policy: POLICIES[rng.below(POLICIES.len())],
+            trace_seed: 1 + (size as u64) * 1000 + rng.below(1000) as u64,
+        },
+        |case| {
+            let trace = RequestTrace::generate_mixed(
+                case.n_requests,
+                &[128, 256],
+                800,
+                case.trace_seed,
+            );
+            // solo reference: monolithic prefills on one fresh engine
+            let mut eng = Engine::new_native(native_cfg()).map_err(|e| e.to_string())?;
+            let solo: Vec<_> = trace
+                .requests
+                .iter()
+                .map(|r| eng.prefill(r.id, &r.spec.generate()).unwrap())
+                .collect();
+            let opts = ServerOptions::builder()
+                .replicas(case.replicas)
+                .build()
+                .map_err(|e| e.to_string())?;
+            let cluster =
+                Cluster::start_with("artifacts".into(), native_cfg(), opts, case.policy)
+                    .map_err(|e| e.to_string())?;
+            assert_eq!(cluster.n_replicas(), case.replicas);
+            for r in trace.requests.clone() {
+                cluster.submit(r);
+            }
+            let run = cluster.drain().map_err(|e| e.to_string())?;
+            if run.completions.len() != trace.requests.len() {
+                return Err(format!(
+                    "{} completions for {} requests",
+                    run.completions.len(),
+                    trace.requests.len()
+                ));
+            }
+            // the live placement log must match a pure router replay
+            let replay =
+                Router::new(case.policy, case.replicas, &native_cfg()).route_trace(&trace);
+            if run.placements != replay {
+                return Err("cluster placements diverged from pure router replay".into());
+            }
+            for (c, s) in run.completions.iter().zip(&solo) {
+                if c.request_id != s.metrics.request_id {
+                    return Err(format!("id order: {} vs {}", c.request_id, s.metrics.request_id));
+                }
+                if c.run.first_token != s.first_token {
+                    return Err(format!("req {}: first token diverged", c.request_id));
+                }
+                if c.run.logits_last != s.logits_last {
+                    return Err(format!("req {}: last-position logits diverged", c.request_id));
+                }
+                if c.run.hidden_last_chunk != s.hidden_last_chunk {
+                    return Err(format!("req {}: hidden state diverged", c.request_id));
+                }
+            }
+            // every request was placed on a real replica and shows up in
+            // the sharded summary's per-replica counters
+            let summary = run.summary();
+            if summary.replicas != case.replicas {
+                return Err(format!(
+                    "summary saw {} replicas, cluster had {}",
+                    summary.replicas, case.replicas
+                ));
+            }
+            let placed: u64 = summary.replica_requests.iter().sum();
+            if placed != trace.requests.len() as u64 {
+                return Err(format!("{placed} placements for {} requests", trace.requests.len()));
+            }
+            Ok(())
+        },
+    );
+}
